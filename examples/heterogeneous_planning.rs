@@ -1,0 +1,49 @@
+//! Heterogeneous planning tour: run Asteroid's planner over every paper
+//! model x environment and print the chosen HPP configurations
+//! (Fig. 12) side by side with the baselines it beats (Table 4's
+//! qualitative story).
+//!
+//!     cargo run --release --example heterogeneous_planning
+
+use anyhow::Result;
+use asteroid::config::{ClusterSpec, TrainConfig};
+use asteroid::coordinator::Coordinator;
+use asteroid::model::zoo;
+use asteroid::planner::baselines::Method;
+
+fn main() -> Result<()> {
+    for model in zoo::all() {
+        println!("\n=== {} ({} layers, {} params) ===",
+                 model.name, model.num_layers(),
+                 asteroid::util::stats::human_bytes(model.total_weight_bytes() / 4 * 4));
+        for (env, mbps) in [("A", 100.0), ("B", 100.0), ("B", 1000.0), ("C", 100.0)] {
+            let cluster = ClusterSpec::env(env, mbps)?;
+            let cfg = match model.name.as_str() {
+                "resnet50" => TrainConfig::new(256, 8),
+                "bert-small" => TrainConfig::new(2048, 8),
+                _ => TrainConfig::new(2048, 32),
+            };
+            let c = Coordinator::for_zoo_model(&model.name, cluster.clone(), cfg)?;
+            let ours = c.plan()?;
+            let sim = c.simulate(&ours.plan);
+            println!("\n  Env {env} @ {mbps:.0} Mbps ({})", cluster.describe());
+            println!("    Asteroid: {}", ours.plan.describe(&cluster));
+            println!("              {:.1} samples/s (sim)", sim.throughput);
+            for method in [Method::DataParallel, Method::GpipePP] {
+                match c.plan_baseline(method) {
+                    Ok(o) => {
+                        let s = c.simulate(&o.plan);
+                        println!(
+                            "    {:<9}: {:.1} samples/s  (Asteroid {:.1}x)",
+                            method.name(),
+                            s.throughput,
+                            sim.throughput / s.throughput
+                        );
+                    }
+                    Err(e) => println!("    {:<9}: infeasible ({e})", method.name()),
+                }
+            }
+        }
+    }
+    Ok(())
+}

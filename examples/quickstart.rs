@@ -1,0 +1,52 @@
+//! Quickstart: plan, simulate, and really train a small transformer LM
+//! with Asteroid's hybrid pipeline parallelism.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use anyhow::Result;
+use asteroid::config::{ClusterSpec, TrainConfig};
+use asteroid::coordinator::Coordinator;
+use asteroid::data::LmTask;
+use asteroid::model::from_manifest::Manifest;
+use asteroid::pipeline::{OptimizerCfg, TrainOpts};
+
+fn main() -> Result<()> {
+    let artifacts = std::path::PathBuf::from("artifacts");
+
+    // 1. A heterogeneous edge cluster (paper Env D: 1x TX2 + 3x Nano).
+    let cluster = ClusterSpec::env("D", 100.0)?;
+    println!("cluster: {}", cluster.describe());
+
+    // 2. The AOT-compiled LM (see python/compile/) + training config.
+    let manifest = Manifest::load(&artifacts)?;
+    let lm = manifest.model("lm")?;
+    let micro = lm.microbatch;
+    let vocab = *lm.config.get("vocab").unwrap() as usize;
+    let seq = *lm.config.get("seq").unwrap() as usize;
+    let cfg = TrainConfig::new(micro * 4, micro);
+    let c = Coordinator::for_artifact_model(&artifacts, "lm", cluster, cfg)?;
+
+    // 3. Planning phase: Algorithm 2 picks stages / groups / allocations.
+    let out = c.plan()?;
+    println!("plan:    {}", out.plan.describe(&c.cluster));
+    println!("predicted {:.1} samples/s", out.predicted_throughput);
+
+    // 4. Simulated execution (event-accurate schedule).
+    let sim = c.simulate(&out.plan);
+    println!("simulated {:.1} samples/s on the edge cluster model", sim.throughput);
+
+    // 5. Real execution through the PJRT pipeline engine.
+    let mut data = LmTask::new(vocab, seq, micro, 42);
+    let stats = c.train(
+        &out.plan,
+        &TrainOpts { steps: 12, opt: OptimizerCfg::sgd(0.05), log_every: 3, ..Default::default() },
+        &mut data,
+    )?;
+    println!(
+        "real HPP training: loss {:.3} -> {:.3} at {:.1} samples/s (host)",
+        stats.losses.first().unwrap(),
+        stats.losses.last().unwrap(),
+        stats.samples_per_sec,
+    );
+    Ok(())
+}

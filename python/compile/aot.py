@@ -1,0 +1,256 @@
+"""AOT compile path: lower every stage computation to HLO text + manifest.
+
+Run once at build time (``make artifacts``).  Python never appears on the
+training hot path: the Rust coordinator loads ``artifacts/<model>/*.hlo.txt``
+through ``HloModuleProto::from_text_file`` and executes them on the PJRT
+CPU client.
+
+HLO **text** (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProtos with 64-bit instruction ids which xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids
+and round-trips cleanly.
+
+The manifest (``artifacts/manifest.json``) tells the Rust side everything
+it needs: per-model configuration, the logical layer sequence with
+parameter specs / FLOPs / activation + weight bytes (planner inputs), and
+per-artifact flattened input/output signatures (runtime inputs).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+FLOAT_BYTES = 4
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _dtype_str(dt) -> str:
+    return {"float32": "f32", "int32": "s32", "uint32": "u32"}[jnp.dtype(dt).name]
+
+
+def _flatten_args(args) -> list:
+    flat, _ = jax.tree_util.tree_flatten(args)
+    return flat
+
+
+def lower_artifact(art: M.Artifact, out_dir: pathlib.Path) -> dict:
+    """Lower one artifact; return its manifest entry."""
+    t0 = time.time()
+    # keep_unused=True: the Rust runtime passes every manifest input, so
+    # arguments whose *values* the computation doesn't need (e.g. a bias
+    # in its own VJP) must stay in the HLO parameter list.
+    lowered = jax.jit(art.fn, keep_unused=True).lower(*art.args)
+    text = to_hlo_text(lowered)
+    path = out_dir / f"{art.name}.hlo.txt"
+    path.write_text(text)
+
+    flat_in = _flatten_args(art.args)
+    assert len(flat_in) == len(art.arg_names), (
+        f"{art.name}: {len(flat_in)} args vs {len(art.arg_names)} names")
+    outs = jax.eval_shape(art.fn, *art.args)
+    flat_out = _flatten_args(outs)
+    assert len(flat_out) == len(art.out_names), (
+        f"{art.name}: {len(flat_out)} outs vs {len(art.out_names)} names")
+
+    entry = {
+        "file": f"{out_dir.name}/{art.name}.hlo.txt",
+        "inputs": [
+            {"name": n, "shape": list(a.shape), "dtype": _dtype_str(a.dtype)}
+            for n, a in zip(art.arg_names, flat_in)
+        ],
+        "outputs": [
+            {"name": n, "shape": list(a.shape), "dtype": _dtype_str(a.dtype)}
+            for n, a in zip(art.out_names, flat_out)
+        ],
+    }
+    print(f"  lowered {art.name:<14} {len(text):>9} chars "
+          f"({time.time() - t0:.1f}s)")
+    return entry
+
+
+# --------------------------------------------------------------------------
+# Per-layer planner metadata (FLOPs / bytes) — mirrors the Asteroid
+# profiler's `a_l`, `w_l` and feeds the Rust planner for the real models.
+# --------------------------------------------------------------------------
+
+def _weight_bytes(specs) -> int:
+    total = 0
+    for s in specs:
+        n = 1
+        for d in s.shape:
+            n *= d
+        total += n * FLOAT_BYTES
+    return total
+
+
+def _lm_layers(c: M.LMConfig) -> list:
+    B, S, D, F, V = c.microbatch, c.seq, c.d_model, c.d_ff, c.vocab
+    act_bytes = B * S * D * FLOAT_BYTES
+    block_fwd_flops = (
+        4 * 2 * B * S * D * D       # q, k, v, o projections
+        + 2 * 2 * B * S * S * D     # scores + context
+        + 2 * 2 * B * S * D * F     # FFN up + down
+    )
+    layers = [{
+        "name": "embed", "kind": "embed",
+        "params": [p.to_json() for p in M.lm_embed_specs(c)],
+        "weight_bytes": _weight_bytes(M.lm_embed_specs(c)),
+        "out_bytes": act_bytes,
+        "flops_fwd": 2 * B * S * D,           # add + lookup traffic
+        "flops_bwd": 4 * B * S * D,
+        "artifact_fwd": "embed_fwd", "artifact_bwd": "embed_bwd",
+    }]
+    for i in range(c.n_blocks):
+        layers.append({
+            "name": f"block{i}", "kind": "block",
+            "params": [p.to_json() for p in M.lm_block_specs(c)],
+            "weight_bytes": _weight_bytes(M.lm_block_specs(c)),
+            "out_bytes": act_bytes,
+            "flops_fwd": block_fwd_flops,
+            "flops_bwd": 2 * block_fwd_flops,
+            "artifact_fwd": "block_fwd", "artifact_bwd": "block_bwd",
+        })
+    layers.append({
+        "name": "head", "kind": "head",
+        "params": [p.to_json() for p in M.lm_head_specs(c)],
+        "weight_bytes": _weight_bytes(M.lm_head_specs(c)),
+        "out_bytes": 0,
+        "flops_fwd": 2 * B * S * D * V,
+        "flops_bwd": 4 * B * S * D * V,
+        "artifact_fwd": "head_fwdbwd", "artifact_bwd": "head_fwdbwd",
+    })
+    return layers
+
+
+def _cnn_layers(c: M.CNNConfig) -> list:
+    B, HW = c.microbatch, c.hw
+    ch = c.channels
+
+    def conv_flops(hw, cin, cout):
+        return 2 * B * hw * hw * 9 * cin * cout
+
+    layers = [{
+        "name": "stem", "kind": "stem",
+        "params": [p.to_json() for p in M.cnn_stem_specs(c)],
+        "weight_bytes": _weight_bytes(M.cnn_stem_specs(c)),
+        "out_bytes": B * HW * HW * ch[0] * FLOAT_BYTES,
+        "flops_fwd": conv_flops(HW, c.in_ch, ch[0]),
+        "flops_bwd": 2 * conv_flops(HW, c.in_ch, ch[0]),
+        "artifact_fwd": "stem_fwd", "artifact_bwd": "stem_bwd",
+    }]
+    hw = HW
+    for i in range(len(ch)):
+        cin = ch[0] if i == 0 else ch[i - 1]
+        specs = M.cnn_block_specs(c, i)
+        flops = conv_flops(hw, cin, ch[i]) + conv_flops(hw, ch[i], ch[i])
+        hw //= 2
+        layers.append({
+            "name": f"block{i}", "kind": f"block{i}",
+            "params": [p.to_json() for p in specs],
+            "weight_bytes": _weight_bytes(specs),
+            "out_bytes": B * hw * hw * ch[i] * FLOAT_BYTES,
+            "flops_fwd": flops,
+            "flops_bwd": 2 * flops,
+            "artifact_fwd": f"block{i}_fwd", "artifact_bwd": f"block{i}_bwd",
+        })
+    layers.append({
+        "name": "head", "kind": "head",
+        "params": [p.to_json() for p in M.cnn_head_specs(c)],
+        "weight_bytes": _weight_bytes(M.cnn_head_specs(c)),
+        "out_bytes": 0,
+        "flops_fwd": 2 * B * ch[-1] * c.classes,
+        "flops_bwd": 4 * B * ch[-1] * c.classes,
+        "artifact_fwd": "head_fwdbwd", "artifact_bwd": "head_fwdbwd",
+    })
+    return layers
+
+
+LM_PRESETS = {
+    "lm": M.LMConfig(),
+    "lm-base": M.LMConfig(vocab=512, d_model=256, n_heads=8, d_ff=1024,
+                          seq=128, n_blocks=8),
+}
+
+
+def build_model(name: str, out_root: pathlib.Path, backend: str) -> dict:
+    out_dir = out_root / name
+    out_dir.mkdir(parents=True, exist_ok=True)
+    print(f"model {name}:")
+    if name.startswith("lm"):
+        cfg = LM_PRESETS[name]
+        arts = M.lm_artifacts(cfg, backend)
+        layers = _lm_layers(cfg)
+        config = {
+            "vocab": cfg.vocab, "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads, "d_ff": cfg.d_ff, "seq": cfg.seq,
+            "n_blocks": cfg.n_blocks, "microbatch": cfg.microbatch,
+        }
+        kind = "transformer"
+    elif name == "cnn":
+        cfg = M.CNNConfig()
+        arts = M.cnn_artifacts(cfg)
+        layers = _cnn_layers(cfg)
+        config = {
+            "hw": cfg.hw, "in_ch": cfg.in_ch,
+            "channels": list(cfg.channels), "classes": cfg.classes,
+            "microbatch": cfg.microbatch,
+        }
+        kind = "cnn"
+    else:
+        raise ValueError(f"unknown model {name!r}")
+
+    artifacts = {a.name: lower_artifact(a, out_dir) for a in arts}
+    return {
+        "kind": kind,
+        "config": config,
+        "microbatch": config["microbatch"],
+        "layers": layers,
+        "artifacts": artifacts,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifact output directory")
+    ap.add_argument("--models", default="lm,cnn",
+                    help="comma list from {lm, lm-base, cnn}")
+    ap.add_argument("--backend", default="pallas", choices=["pallas", "ref"],
+                    help="kernel backend lowered into the HLO")
+    args = ap.parse_args()
+
+    out_root = pathlib.Path(args.out)
+    out_root.mkdir(parents=True, exist_ok=True)
+    t0 = time.time()
+    manifest = {
+        "version": 1,
+        "jax_version": jax.__version__,
+        "backend": args.backend,
+        "models": {},
+    }
+    for name in args.models.split(","):
+        manifest["models"][name.strip()] = build_model(
+            name.strip(), out_root, args.backend)
+
+    (out_root / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    print(f"wrote {out_root}/manifest.json ({time.time() - t0:.1f}s total)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""Asteroid Layer-1 Pallas kernels (build-time only; lowered into stage HLO)."""
+
+from .matmul import matmul, matmul_pallas, pick_block
+from .attention import attention, attention_pallas
+from .layernorm import layernorm, layernorm_pallas
+from . import ref
+
+__all__ = [
+    "matmul", "matmul_pallas", "pick_block",
+    "attention", "attention_pallas",
+    "layernorm", "layernorm_pallas",
+    "ref",
+]

@@ -1,0 +1,121 @@
+"""Layer-1 Pallas kernel: fused causal self-attention forward.
+
+The paper's transformer workload (Bert-small) spends its stage time in
+attention; on the Jetson GPUs this is a chain of cuBLAS calls with the
+score matrix round-tripping through HBM.  The TPU re-think keeps the
+whole ``scores -> softmax -> context`` chain for one query row-block in
+VMEM:
+
+  * grid is ``(batch*heads, Sq/bq)``; each step owns a ``(bq, hd)`` query
+    block plus the full ``(Skv, hd)`` K and V panels for that head
+    (sequence lengths here are small enough that K/V fit VMEM; for long
+    sequences the same kernel extends with a KV grid axis and online
+    softmax);
+  * the causal mask is materialised with ``iota`` inside the kernel — no
+    HBM mask tensor;
+  * softmax is computed in f32 regardless of the input dtype.
+
+The backward pass recomputes attention from the residuals with plain
+jnp (rematerialisation) — it lowers into the same stage HLO, and keeps
+the paper's Eq.(3) activation accounting (only stage *inputs* are
+stashed between forward and backward).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import pick_block
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float, causal: bool,
+                 bq: int):
+    """One (head, query-block) step: fused QK^T -> masked softmax -> PV."""
+    q = q_ref[0].astype(jnp.float32)  # (bq, hd)   — leading head axis is 1
+    k = k_ref[0].astype(jnp.float32)  # (skv, hd)
+    v = v_ref[0].astype(jnp.float32)  # (skv, hd)
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if causal:
+        qi = pl.program_id(1)
+        row = qi * bq + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 0)
+        col = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+        scores = jnp.where(col <= row, scores, jnp.finfo(jnp.float32).min)
+    # Numerically-stable softmax, fully in registers/VMEM.
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[0] = (jnp.dot(p, v, preferred_element_type=jnp.float32) / denom
+                ).astype(o_ref.dtype)
+
+
+def attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                     causal: bool = True, bq: int | None = None) -> jax.Array:
+    """Fused attention over ``(B, H, S, hd)`` operands."""
+    b, h, sq, hd = q.shape
+    _, _, skv, _ = k.shape
+    if k.shape != (b, h, skv, hd) or v.shape != (b, h, skv, hd):
+        raise ValueError(f"shape mismatch: q={q.shape} k={k.shape} v={v.shape}")
+    bq = bq or pick_block(sq, 128)
+    scale = 1.0 / float(hd) ** 0.5
+    qr = q.reshape(b * h, sq, hd)
+    kr = k.reshape(b * h, skv, hd)
+    vr = v.reshape(b * h, skv, hd)
+    out = pl.pallas_call(
+        functools.partial(_attn_kernel, scale=scale, causal=causal, bq=bq),
+        grid=(b * h, sq // bq),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda g, i: (g, i, 0)),
+            pl.BlockSpec((1, skv, hd), lambda g, i: (g, 0, 0)),
+            pl.BlockSpec((1, skv, hd), lambda g, i: (g, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda g, i: (g, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, hd), q.dtype),
+        interpret=True,
+    )(qr, kr, vr)
+    return out.reshape(b, h, sq, hd)
+
+
+def _attn_ref_f32(q, k, v, causal):
+    """jnp reference used for the recompute backward (f32 math)."""
+    hd = q.shape[-1]
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+    if causal:
+        sq, skv = scores.shape[-2:]
+        mask = jnp.tril(jnp.ones((sq, skv), bool), k=skv - sq)
+        scores = jnp.where(mask, scores, jnp.finfo(jnp.float32).min)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def attention(q: jax.Array, k: jax.Array, v: jax.Array,
+              causal: bool = True) -> jax.Array:
+    """Differentiable fused attention (recompute backward)."""
+    return attention_pallas(q, k, v, causal=causal)
+
+
+def _attention_fwd(q, k, v, causal):
+    return attention_pallas(q, k, v, causal=causal), (q, k, v)
+
+
+def _attention_bwd(causal, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q_, k_, v_: _attn_ref_f32(q_, k_, v_, causal), q, k, v)
+    dq, dk, dv = vjp(g.astype(jnp.float32))
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+attention.defvjp(_attention_fwd, _attention_bwd)
+
+
+def vmem_bytes(sq: int, skv: int, hd: int, bq: int | None = None,
+               bytes_per_el: int = 4) -> int:
+    """VMEM resident estimate per grid step: q block, K, V panels, score
+    block and output block.  Reported in EXPERIMENTS.md §Perf."""
+    bq = bq or pick_block(sq, 128)
+    return (bq * hd + 2 * skv * hd + bq * skv + bq * hd) * bytes_per_el

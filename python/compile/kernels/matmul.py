@@ -1,0 +1,155 @@
+"""Layer-1 Pallas kernel: MXU-tiled block matmul with a custom VJP.
+
+This is Asteroid's compute hot-spot (the dense matmuls in the FFN and
+attention projections of every pipeline stage).  The paper executes these
+on Jetson CUDA cores; we re-think the blocking for TPU (see DESIGN.md
+§Hardware-Adaptation-L1):
+
+  * the grid is ``(M/bm, N/bn, K/bk)`` with the K dimension innermost so
+    each output block stays resident while K-panels stream through VMEM —
+    the declarative analogue of a CUDA shared-memory tile loop;
+  * the inner ``jnp.dot`` on ``(bm, bk) x (bk, bn)`` blocks with
+    ``preferred_element_type=float32`` maps directly onto the 128x128 MXU
+    systolic array when ``bm = bn = bk = 128``;
+  * the backward pass needs no second kernel: ``dx = g @ W^T`` and
+    ``dW = x^T @ g`` are themselves matmuls and reuse this kernel.
+
+Kernels are lowered with ``interpret=True`` so the emitted HLO runs on the
+CPU PJRT client (real-TPU Mosaic custom-calls are not CPU-executable);
+the blocking structure is what we optimize and report in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-friendly target block edges.  The systolic array is 128x128, but
+# larger blocks amortise per-grid-step overhead (double-buffering setup,
+# and in interpret mode the dynamic-slice plumbing: raising the M target
+# from 128 to 512 cut kernel wall-clock 3.3x on the CPU substrate — see
+# EXPERIMENTS.md §Perf) while staying far under the ~16 MiB VMEM budget:
+# a (512, 256) x (256, 256) step keeps 1.3 MiB resident.
+MXU_BLOCK = 128
+BLOCK_M = 512
+BLOCK_N = 256
+BLOCK_K = 256
+
+
+def pick_block(dim: int, target: int = MXU_BLOCK) -> int:
+    """Largest divisor of ``dim`` that is <= ``target``.
+
+    Guarantees the grid tiles the operand exactly (Pallas blocks must
+    cover the array; we avoid masked edge blocks entirely).
+    """
+    if dim <= target:
+        return dim
+    for cand in range(target, 0, -1):
+        if dim % cand == 0:
+            return cand
+    return 1  # unreachable: 1 divides everything
+
+
+def _mm_kernel(x_ref, y_ref, o_ref, *, nk: int):
+    """One grid step: accumulate an (bm, bk) x (bk, bn) panel product.
+
+    The output block is revisited for every k; it doubles as the f32
+    accumulator (initialised at k == 0), which avoids a scratch buffer
+    and keeps VMEM usage to bm*bk + bk*bn + bm*bn floats per step.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def matmul_pallas(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    bm: int | None = None,
+    bn: int | None = None,
+    bk: int | None = None,
+) -> jax.Array:
+    """Tiled ``x @ y`` (2-D only).  Output dtype is float32."""
+    if x.ndim != 2 or y.ndim != 2:
+        raise ValueError(f"matmul_pallas expects 2-D operands, got {x.shape} @ {y.shape}")
+    m, k = x.shape
+    k2, n = y.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {x.shape} @ {y.shape}")
+    bm = bm or pick_block(m, BLOCK_M)
+    bn = bn or pick_block(n, BLOCK_N)
+    bk = bk or pick_block(k, BLOCK_K)
+    if m % bm or n % bn or k % bk:
+        raise ValueError(f"blocks ({bm},{bn},{bk}) must divide dims ({m},{n},{k})")
+    nk = k // bk
+    return pl.pallas_call(
+        functools.partial(_mm_kernel, nk=nk),
+        grid=(m // bm, n // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, y)
+
+
+@jax.custom_vjp
+def matmul(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Differentiable tiled matmul; fwd and both grads use the same kernel."""
+    return matmul_pallas(x, y)
+
+
+def _matmul_fwd(x, y):
+    return matmul_pallas(x, y), (x, y)
+
+
+def _matmul_bwd(res, g):
+    x, y = res
+    # dgrad and wgrad are matmuls too: reuse the tiled kernel.
+    dx = matmul_pallas(g, y.T)
+    dy = matmul_pallas(x.T, g)
+    return dx.astype(x.dtype), dy.astype(y.dtype)
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def vmem_bytes(m: int, n: int, k: int, bm: int | None = None,
+               bn: int | None = None, bk: int | None = None,
+               bytes_per_el: int = 4) -> int:
+    """Estimated VMEM resident bytes per grid step (x, y, acc blocks).
+
+    Used by the §Perf analysis: on a real TPU this must stay under the
+    ~16 MiB VMEM budget; the default 128^3 blocking uses 192 KiB.
+    """
+    bm = bm or pick_block(m)
+    bn = bn or pick_block(n)
+    bk = bk or pick_block(k)
+    return (bm * bk + bk * bn + bm * bn) * bytes_per_el
+
+
+def mxu_utilization(m: int, n: int, k: int, bm: int | None = None,
+                    bn: int | None = None, bk: int | None = None) -> float:
+    """Fraction of the MXU's 128x128x8-per-cycle capacity the inner dot
+    can keep busy, estimated from block geometry (1.0 when all block
+    edges are multiples of the 128-wide systolic array)."""
+    bm = bm or pick_block(m)
+    bn = bn or pick_block(n)
+    bk = bk or pick_block(k)
+    eff = 1.0
+    for edge in (bm, bn, bk):
+        lanes = -(-edge // 128) * 128  # systolic passes are 128-wide
+        eff *= edge / lanes
+    return eff

@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the correctness ground truth: pytest + hypothesis sweep shapes
+and dtypes and assert the Pallas outputs match these references.  They
+are also used as a drop-in kernel backend (``model.py`` with
+``backend="ref"``) so stage-level numerics can be separated from
+kernel-level numerics when debugging.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_matmul(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Plain f32 matmul, the oracle for kernels.matmul."""
+    return jnp.dot(x.astype(jnp.float32), y.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+
+
+def ref_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                  causal: bool = True) -> jax.Array:
+    """Plain causal attention over (B, H, S, hd), f32 softmax."""
+    hd = q.shape[-1]
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(jnp.float32(hd))
+    if causal:
+        sq, skv = scores.shape[-2:]
+        mask = jnp.tril(jnp.ones((sq, skv), bool), k=skv - sq)
+        scores = jnp.where(mask, scores, jnp.finfo(jnp.float32).min)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ref_layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+                  eps: float = 1e-5) -> jax.Array:
+    """Plain layernorm over the last axis of a 2-D input."""
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mean), axis=-1, keepdims=True)
+    return ((xf - mean) * jax.lax.rsqrt(var + eps) * scale + bias).astype(x.dtype)

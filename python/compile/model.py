@@ -1,0 +1,470 @@
+"""Layer-2: JAX stage models for Asteroid's pipeline-parallel training.
+
+The paper trains vision CNNs (EfficientNet-B1 / MobileNetV2 / ResNet50)
+and a language model (Bert-small) split into *pipeline stages*.  This
+module defines the two workload families we execute for real through the
+Rust coordinator:
+
+  * ``lm``  — a decoder transformer LM (the Bert-small analogue), built
+    from three stage kinds: ``embed`` -> N x ``block`` -> ``head``.  All
+    blocks share shapes, so ONE ``block_fwd``/``block_bwd`` HLO serves
+    every block; a pipeline stage of k consecutive blocks simply runs the
+    same executable k times with its own weights.
+  * ``cnn`` — a CIFAR-style CNN (the MobileNetV2 analogue) with stage
+    kinds ``stem`` -> ``block1`` -> ``block2`` -> ``block3`` -> ``head``.
+
+Every stage kind exposes:
+  ``<kind>_fwd(params, x)``                  -> y
+  ``<kind>_bwd(params, x, gy)``              -> (*gparams, gx)   (rematerialising)
+  head: ``head_fwdbwd(params, x, targets)``  -> (loss, *gparams, gx)
+        ``head_loss(params, x, targets)``    -> loss             (eval)
+
+The backward passes re-run the forward under ``jax.vjp`` inside one HLO,
+so the only tensor stashed between a micro-batch's FP and BP is the
+stage *input* — exactly the activation term the paper's Eq. (3) memory
+model counts per in-flight micro-batch.
+
+Compute hot-spots call the Layer-1 Pallas kernels (``backend="pallas"``,
+the default) or the pure-jnp oracles (``backend="ref"``) for debugging.
+Python runs only at build time: ``aot.py`` lowers each function to HLO
+text, and the Rust runtime executes the artifacts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+from .kernels import ref as kref
+
+
+# --------------------------------------------------------------------------
+# Kernel backend selection
+# --------------------------------------------------------------------------
+
+class _PallasOps:
+    matmul = staticmethod(kernels.matmul)
+    attention = staticmethod(kernels.attention)
+    layernorm = staticmethod(kernels.layernorm)
+
+
+class _RefOps:
+    matmul = staticmethod(kref.ref_matmul)
+    attention = staticmethod(kref.ref_attention)
+    layernorm = staticmethod(kref.ref_layernorm)
+
+
+def get_ops(backend: str):
+    if backend == "pallas":
+        return _PallasOps
+    if backend == "ref":
+        return _RefOps
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+# --------------------------------------------------------------------------
+# Parameter specifications (shared with the Rust side via the manifest)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """One parameter tensor of a stage kind; `init` in {normal, zeros, ones}."""
+    name: str
+    shape: tuple
+    init: str = "normal"
+    scale: float = 0.02
+
+    def to_json(self) -> dict:
+        return {"name": self.name, "shape": list(self.shape),
+                "init": self.init, "scale": self.scale}
+
+
+def init_params(specs: Sequence[ParamSpec], key: jax.Array) -> tuple:
+    """Initialise a stage-kind parameter tuple (test/reference use; the
+    Rust coordinator does its own init from the manifest)."""
+    out = []
+    for spec in specs:
+        key, sub = jax.random.split(key)
+        if spec.init == "zeros":
+            out.append(jnp.zeros(spec.shape, jnp.float32))
+        elif spec.init == "ones":
+            out.append(jnp.ones(spec.shape, jnp.float32))
+        else:
+            out.append(spec.scale * jax.random.normal(sub, spec.shape, jnp.float32))
+    return tuple(out)
+
+
+# --------------------------------------------------------------------------
+# Transformer LM
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    """Decoder transformer LM dimensions.  Defaults give a ~0.9M-param
+    model that trains in minutes on the single-core CPU substrate; the
+    ``lm-base`` preset in aot.py scales to multi-million params."""
+    vocab: int = 256
+    d_model: int = 128
+    n_heads: int = 4
+    d_ff: int = 512
+    seq: int = 64
+    n_blocks: int = 4
+    microbatch: int = 8
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+def lm_embed_specs(c: LMConfig) -> list[ParamSpec]:
+    return [
+        ParamSpec("tok_emb", (c.vocab, c.d_model)),
+        ParamSpec("pos_emb", (c.seq, c.d_model), scale=0.01),
+    ]
+
+
+def lm_block_specs(c: LMConfig) -> list[ParamSpec]:
+    d, f = c.d_model, c.d_ff
+    return [
+        ParamSpec("ln1_scale", (d,), init="ones"),
+        ParamSpec("ln1_bias", (d,), init="zeros"),
+        ParamSpec("wq", (d, d)),
+        ParamSpec("wk", (d, d)),
+        ParamSpec("wv", (d, d)),
+        ParamSpec("wo", (d, d)),
+        ParamSpec("ln2_scale", (d,), init="ones"),
+        ParamSpec("ln2_bias", (d,), init="zeros"),
+        ParamSpec("w1", (d, f)),
+        ParamSpec("b1", (f,), init="zeros"),
+        ParamSpec("w2", (f, d)),
+        ParamSpec("b2", (d,), init="zeros"),
+    ]
+
+
+def lm_head_specs(c: LMConfig) -> list[ParamSpec]:
+    return [
+        ParamSpec("lnf_scale", (c.d_model,), init="ones"),
+        ParamSpec("lnf_bias", (c.d_model,), init="zeros"),
+        ParamSpec("w_out", (c.d_model, c.vocab)),
+    ]
+
+
+def lm_embed_fwd(c: LMConfig, params: tuple, tokens: jax.Array) -> jax.Array:
+    """(B, S) int32 tokens -> (B, S, D) activations."""
+    tok_emb, pos_emb = params
+    return jnp.take(tok_emb, tokens, axis=0) + pos_emb[None, :, :]
+
+
+def lm_embed_bwd(c: LMConfig, params: tuple, tokens: jax.Array,
+                 g: jax.Array) -> tuple:
+    """Gradients of the embedding tables (no input gradient: first layer)."""
+    _, vjp = jax.vjp(lambda p: lm_embed_fwd(c, p, tokens), params)
+    (gp,) = vjp(g)
+    return tuple(gp)
+
+
+def lm_block_fwd(c: LMConfig, params: tuple, x: jax.Array,
+                 backend: str = "pallas") -> jax.Array:
+    """Pre-norm transformer block: attention + FFN with residuals."""
+    ops = get_ops(backend)
+    (ln1_s, ln1_b, wq, wk, wv, wo, ln2_s, ln2_b, w1, b1, w2, b2) = params
+    b, s, d = x.shape
+    h, hd = c.n_heads, c.head_dim
+
+    x2 = x.reshape(b * s, d)
+    hn = ops.layernorm(x2, ln1_s, ln1_b)
+    q = ops.matmul(hn, wq).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    k = ops.matmul(hn, wk).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    v = ops.matmul(hn, wv).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    att = ops.attention(q, k, v, True)
+    att = att.transpose(0, 2, 1, 3).reshape(b * s, d)
+    x2 = x2 + ops.matmul(att, wo)
+
+    hn2 = ops.layernorm(x2, ln2_s, ln2_b)
+    ff = jax.nn.gelu(ops.matmul(hn2, w1) + b1)
+    x2 = x2 + ops.matmul(ff, w2) + b2
+    return x2.reshape(b, s, d)
+
+
+def lm_block_bwd(c: LMConfig, params: tuple, x: jax.Array, g: jax.Array,
+                 backend: str = "pallas") -> tuple:
+    """Rematerialising backward: (*gparams, gx)."""
+    _, vjp = jax.vjp(lambda p, x_: lm_block_fwd(c, p, x_, backend), params, x)
+    gp, gx = vjp(g)
+    return (*gp, gx)
+
+
+def _softmax_xent(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    """Mean cross-entropy over all positions (stable logsumexp)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def lm_head_loss(c: LMConfig, params: tuple, x: jax.Array,
+                 targets: jax.Array, backend: str = "pallas") -> jax.Array:
+    """Final layernorm + output projection + mean token cross-entropy."""
+    ops = get_ops(backend)
+    lnf_s, lnf_b, w_out = params
+    b, s, d = x.shape
+    hn = ops.layernorm(x.reshape(b * s, d), lnf_s, lnf_b)
+    logits = ops.matmul(hn, w_out).reshape(b, s, c.vocab)
+    return _softmax_xent(logits, targets)
+
+
+def lm_head_fwdbwd(c: LMConfig, params: tuple, x: jax.Array,
+                   targets: jax.Array, backend: str = "pallas") -> tuple:
+    """Loss plus gradients w.r.t. head params and stage input."""
+    loss, (gp, gx) = jax.value_and_grad(
+        lambda p, x_: lm_head_loss(c, p, x_, targets, backend),
+        argnums=(0, 1))(params, x)
+    return (loss, *gp, gx)
+
+
+def lm_full_loss(c: LMConfig, all_params: tuple, tokens: jax.Array,
+                 targets: jax.Array, backend: str = "pallas") -> jax.Array:
+    """Composed full-model loss: embed -> blocks -> head.  Used by the
+    python tests to validate the stage decomposition against end-to-end
+    autodiff; never lowered for the Rust runtime."""
+    embed_p, block_ps, head_p = all_params
+    h = lm_embed_fwd(c, embed_p, tokens)
+    for bp in block_ps:
+        h = lm_block_fwd(c, bp, h, backend)
+    return lm_head_loss(c, head_p, h, targets, backend)
+
+
+# --------------------------------------------------------------------------
+# CIFAR-style CNN
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CNNConfig:
+    """Small CIFAR CNN (MobileNetV2 analogue for the real-exec path).
+
+    32x32x3 -> stem -> 3 down-sampling conv blocks -> GAP head."""
+    hw: int = 32
+    in_ch: int = 3
+    channels: tuple = (16, 32, 64)
+    classes: int = 10
+    microbatch: int = 16
+
+
+def _conv_specs(name: str, cin: int, cout: int) -> list[ParamSpec]:
+    fan_in = 9 * cin
+    return [
+        ParamSpec(f"{name}_w", (3, 3, cin, cout), scale=(2.0 / fan_in) ** 0.5),
+        ParamSpec(f"{name}_b", (cout,), init="zeros"),
+    ]
+
+
+def cnn_stem_specs(c: CNNConfig) -> list[ParamSpec]:
+    return _conv_specs("stem", c.in_ch, c.channels[0])
+
+
+def cnn_block_specs(c: CNNConfig, i: int) -> list[ParamSpec]:
+    cin = c.channels[i - 1] if i > 0 else c.channels[0]
+    cout = c.channels[i]
+    return _conv_specs(f"b{i}c1", cin, cout) + _conv_specs(f"b{i}c2", cout, cout)
+
+
+def cnn_head_specs(c: CNNConfig) -> list[ParamSpec]:
+    return [
+        ParamSpec("fc_w", (c.channels[-1], c.classes),
+                  scale=(1.0 / c.channels[-1]) ** 0.5),
+        ParamSpec("fc_b", (c.classes,), init="zeros"),
+    ]
+
+
+def _conv(x: jax.Array, w: jax.Array, b: jax.Array,
+          stride: int = 1) -> jax.Array:
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + b
+
+
+def cnn_stem_fwd(c: CNNConfig, params: tuple, x: jax.Array) -> jax.Array:
+    w, b = params
+    return jax.nn.relu(_conv(x, w, b))
+
+
+def cnn_block_fwd(c: CNNConfig, i: int, params: tuple,
+                  x: jax.Array) -> jax.Array:
+    """conv-relu, conv-relu, then 2x2 stride-2 downsample (maxpool)."""
+    w1, b1, w2, b2 = params
+    h = jax.nn.relu(_conv(x, w1, b1))
+    h = jax.nn.relu(_conv(h, w2, b2))
+    return jax.lax.reduce_window(
+        h, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def cnn_head_loss(c: CNNConfig, params: tuple, x: jax.Array,
+                  labels: jax.Array) -> jax.Array:
+    fc_w, fc_b = params
+    pooled = jnp.mean(x, axis=(1, 2))  # global average pool
+    logits = pooled @ fc_w + fc_b
+    return _softmax_xent(logits, labels)
+
+
+def _stage_bwd(fwd: Callable, params: tuple, x: jax.Array,
+               g: jax.Array) -> tuple:
+    _, vjp = jax.vjp(fwd, params, x)
+    gp, gx = vjp(g)
+    return (*gp, gx)
+
+
+def cnn_stem_bwd(c, params, x, g):
+    return _stage_bwd(lambda p, x_: cnn_stem_fwd(c, p, x_), params, x, g)
+
+
+def cnn_block_bwd(c, i, params, x, g):
+    return _stage_bwd(lambda p, x_: cnn_block_fwd(c, i, p, x_), params, x, g)
+
+
+def cnn_head_fwdbwd(c, params, x, labels):
+    loss, (gp, gx) = jax.value_and_grad(
+        lambda p, x_: cnn_head_loss(c, p, x_, labels),
+        argnums=(0, 1))(params, x)
+    return (loss, *gp, gx)
+
+
+def cnn_full_loss(c: CNNConfig, all_params: tuple, x: jax.Array,
+                  labels: jax.Array) -> jax.Array:
+    stem_p, block_ps, head_p = all_params
+    h = cnn_stem_fwd(c, stem_p, x)
+    for i, bp in enumerate(block_ps):
+        h = cnn_block_fwd(c, i, bp, h)
+    return cnn_head_loss(c, head_p, h, labels)
+
+
+# --------------------------------------------------------------------------
+# Artifact registry (consumed by aot.py)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Artifact:
+    """One AOT-lowered computation: `fn(*args)` with example arg shapes."""
+    name: str
+    fn: Callable
+    args: list          # ShapeDtypeStructs, in HLO parameter order
+    arg_names: list     # human-readable names, same order
+    out_names: list     # names of tuple outputs
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _param_sds(specs: Sequence[ParamSpec]) -> list:
+    return [_sds(s.shape) for s in specs]
+
+
+def lm_artifacts(c: LMConfig, backend: str = "pallas") -> list[Artifact]:
+    """Every HLO the Rust runtime needs to train the LM."""
+    B, S, D, V = c.microbatch, c.seq, c.d_model, c.vocab
+    e_specs, b_specs, h_specs = lm_embed_specs(c), lm_block_specs(c), lm_head_specs(c)
+    tok = _sds((B, S), jnp.int32)
+    act = _sds((B, S, D))
+
+    def names(specs, pre=""):
+        return [pre + s.name for s in specs]
+
+    return [
+        Artifact("embed_fwd",
+                 lambda p, t: (lm_embed_fwd(c, p, t),),
+                 [tuple(_param_sds(e_specs)), tok],
+                 names(e_specs) + ["tokens"], ["act"]),
+        Artifact("embed_bwd",
+                 lambda p, t, g: lm_embed_bwd(c, p, t, g),
+                 [tuple(_param_sds(e_specs)), tok, act],
+                 names(e_specs) + ["tokens", "grad_in"],
+                 names(e_specs, "g_")),
+        Artifact("block_fwd",
+                 lambda p, x: (lm_block_fwd(c, p, x, backend),),
+                 [tuple(_param_sds(b_specs)), act],
+                 names(b_specs) + ["x"], ["act"]),
+        Artifact("block_bwd",
+                 lambda p, x, g: lm_block_bwd(c, p, x, g, backend),
+                 [tuple(_param_sds(b_specs)), act, act],
+                 names(b_specs) + ["x", "grad_in"],
+                 names(b_specs, "g_") + ["g_x"]),
+        Artifact("head_fwdbwd",
+                 lambda p, x, t: lm_head_fwdbwd(c, p, x, t, backend),
+                 [tuple(_param_sds(h_specs)), act, tok],
+                 names(h_specs) + ["x", "targets"],
+                 ["loss"] + names(h_specs, "g_") + ["g_x"]),
+        Artifact("head_loss",
+                 lambda p, x, t: (lm_head_loss(c, p, x, t, backend),),
+                 [tuple(_param_sds(h_specs)), act, tok],
+                 names(h_specs) + ["x", "targets"], ["loss"]),
+    ]
+
+
+def cnn_artifacts(c: CNNConfig) -> list[Artifact]:
+    B, HW = c.microbatch, c.hw
+    ch = c.channels
+    stem_specs = cnn_stem_specs(c)
+    head_specs = cnn_head_specs(c)
+    img = _sds((B, HW, HW, c.in_ch))
+    lbl = _sds((B,), jnp.int32)
+
+    # activation shapes *entering* each block / the head.  Block i maps
+    # (hw, cin_i) -> (hw/2, ch[i]) where cin_0 = ch[0] (stem output) and
+    # cin_i = ch[i-1] otherwise.
+    act_in = []
+    hw = HW
+    for i in range(len(ch)):
+        cin = ch[0] if i == 0 else ch[i - 1]
+        act_in.append((B, hw, hw, cin))
+        hw //= 2
+    head_in = (B, hw, hw, ch[-1])
+
+    def names(specs, pre=""):
+        return [pre + s.name for s in specs]
+
+    arts = [
+        Artifact("stem_fwd",
+                 lambda p, x: (cnn_stem_fwd(c, p, x),),
+                 [tuple(_param_sds(stem_specs)), img],
+                 names(stem_specs) + ["x"], ["act"]),
+        Artifact("stem_bwd",
+                 lambda p, x, g: cnn_stem_bwd(c, p, x, g),
+                 [tuple(_param_sds(stem_specs)), img, _sds(act_in[0])],
+                 names(stem_specs) + ["x", "grad_in"],
+                 names(stem_specs, "g_") + ["g_x"]),
+    ]
+    for i in range(len(ch)):
+        specs = cnn_block_specs(c, i)
+        xin = _sds(act_in[i])
+        hwo = act_in[i][1] // 2
+        xout = _sds((B, hwo, hwo, ch[i]))
+        arts.append(Artifact(
+            f"block{i}_fwd",
+            lambda p, x, i=i: (cnn_block_fwd(c, i, p, x),),
+            [tuple(_param_sds(specs)), xin],
+            names(specs) + ["x"], ["act"]))
+        arts.append(Artifact(
+            f"block{i}_bwd",
+            lambda p, x, g, i=i: cnn_block_bwd(c, i, p, x, g),
+            [tuple(_param_sds(specs)), xin, xout],
+            names(specs) + ["x", "grad_in"],
+            names(specs, "g_") + ["g_x"]))
+    arts.append(Artifact(
+        "head_fwdbwd",
+        lambda p, x, t: cnn_head_fwdbwd(c, p, x, t),
+        [tuple(_param_sds(head_specs)), _sds(head_in), lbl],
+        names(head_specs) + ["x", "labels"],
+        ["loss"] + names(head_specs, "g_") + ["g_x"]))
+    arts.append(Artifact(
+        "head_loss",
+        lambda p, x, t: (cnn_head_loss(c, p, x, t),),
+        [tuple(_param_sds(head_specs)), _sds(head_in), lbl],
+        names(head_specs) + ["x", "labels"], ["loss"]))
+    return arts

@@ -1,0 +1,270 @@
+"""Kernel-vs-reference correctness: the core L1 signal.
+
+Hypothesis sweeps shapes/dtypes of every Pallas kernel and asserts
+allclose against the pure-jnp oracles in ``kernels/ref.py``, including
+through ``jax.grad`` (the custom VJPs).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+from compile.kernels.matmul import pick_block, vmem_bytes, mxu_utilization
+
+jax.config.update("jax_enable_x64", False)
+
+dims = functools.partial(st.integers, min_value=1)
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+    return x.astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# pick_block
+# --------------------------------------------------------------------------
+
+@given(dim=dims(max_value=2048), target=st.sampled_from([8, 32, 64, 128]))
+@settings(max_examples=200, deadline=None)
+def test_pick_block_divides_and_bounded(dim, target):
+    b = pick_block(dim, target)
+    assert dim % b == 0
+    assert b <= max(target, 1) or dim <= target
+    if dim <= target:
+        assert b == dim
+
+
+def test_pick_block_prefers_largest_divisor():
+    assert pick_block(256, 128) == 128
+    assert pick_block(136, 128) == 68
+    assert pick_block(8, 128) == 8
+    assert pick_block(97, 64) == 1  # prime > target
+
+
+# --------------------------------------------------------------------------
+# matmul
+# --------------------------------------------------------------------------
+
+MM_SHAPES = st.tuples(
+    st.sampled_from([8, 16, 24, 40, 64, 128, 136, 192]),
+    st.sampled_from([8, 16, 32, 48, 64, 128, 160]),
+    st.sampled_from([8, 16, 32, 56, 64, 128]),
+)
+
+
+@given(shape=MM_SHAPES, seed=st.integers(0, 2**16))
+@settings(max_examples=25, deadline=None)
+def test_matmul_matches_ref(shape, seed):
+    m, k, n = shape
+    x = _rand(seed, (m, k), jnp.float32)
+    y = _rand(seed + 1, (k, n), jnp.float32)
+    out = kernels.matmul_pallas(x, y)
+    np.testing.assert_allclose(out, ref.ref_matmul(x, y), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_dtypes(dtype):
+    x = _rand(0, (64, 64), dtype)
+    y = _rand(1, (64, 64), dtype)
+    out = kernels.matmul_pallas(x, y)
+    assert out.dtype == jnp.float32
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32),
+        np.asarray(ref.ref_matmul(x, y), np.float32),
+        rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5,
+        atol=2e-2 if dtype == jnp.bfloat16 else 1e-5)
+
+
+def test_matmul_custom_block_sizes():
+    x = _rand(0, (128, 96), jnp.float32)
+    y = _rand(1, (96, 64), jnp.float32)
+    for bm, bn, bk in [(32, 32, 32), (64, 64, 48), (128, 64, 96)]:
+        out = kernels.matmul_pallas(x, y, bm=bm, bn=bn, bk=bk)
+        np.testing.assert_allclose(out, ref.ref_matmul(x, y),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_rejects_bad_blocks():
+    x = _rand(0, (64, 64), jnp.float32)
+    with pytest.raises(ValueError):
+        kernels.matmul_pallas(x, x, bm=48)
+    with pytest.raises(ValueError):
+        kernels.matmul_pallas(x, _rand(1, (32, 64), jnp.float32))
+    with pytest.raises(ValueError):
+        kernels.matmul_pallas(x.reshape(4, 16, 64), x)
+
+
+@given(seed=st.integers(0, 2**16),
+       shape=st.sampled_from([(16, 32, 24), (64, 64, 64), (40, 8, 48)]))
+@settings(max_examples=10, deadline=None)
+def test_matmul_grad_matches_ref(seed, shape):
+    m, k, n = shape
+    x = _rand(seed, (m, k), jnp.float32)
+    y = _rand(seed + 7, (k, n), jnp.float32)
+
+    def f_pal(x, y):
+        return jnp.sum(jnp.sin(kernels.matmul(x, y)))
+
+    def f_ref(x, y):
+        return jnp.sum(jnp.sin(ref.ref_matmul(x, y)))
+
+    gx_p, gy_p = jax.grad(f_pal, argnums=(0, 1))(x, y)
+    gx_r, gy_r = jax.grad(f_ref, argnums=(0, 1))(x, y)
+    np.testing.assert_allclose(gx_p, gx_r, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(gy_p, gy_r, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_under_jit():
+    x = _rand(3, (64, 64), jnp.float32)
+    out = jax.jit(kernels.matmul)(x, x)
+    np.testing.assert_allclose(out, ref.ref_matmul(x, x), rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_vmem_estimate_default_blocking():
+    # 128^3 blocking: 3 blocks of 128x128 f32 = 192 KiB, well under VMEM.
+    assert vmem_bytes(1024, 1024, 1024) == 3 * 128 * 128 * 4
+    assert vmem_bytes(1024, 1024, 1024) < 16 * 1024 * 1024
+
+
+def test_mxu_utilization_bounds():
+    assert mxu_utilization(128, 128, 128) == 1.0
+    assert 0.0 < mxu_utilization(8, 8, 8) < 0.1
+    assert mxu_utilization(256, 256, 256) == 1.0
+
+
+# --------------------------------------------------------------------------
+# attention
+# --------------------------------------------------------------------------
+
+ATT_SHAPES = st.tuples(
+    st.sampled_from([1, 2, 4]),          # batch
+    st.sampled_from([1, 2, 4]),          # heads
+    st.sampled_from([8, 16, 64, 128]),   # seq
+    st.sampled_from([8, 16, 32, 64]),    # head dim
+)
+
+
+@given(shape=ATT_SHAPES, causal=st.booleans(), seed=st.integers(0, 2**16))
+@settings(max_examples=20, deadline=None)
+def test_attention_matches_ref(shape, causal, seed):
+    b, h, s, hd = shape
+    q = _rand(seed, (b, h, s, hd), jnp.float32)
+    k = _rand(seed + 1, (b, h, s, hd), jnp.float32)
+    v = _rand(seed + 2, (b, h, s, hd), jnp.float32)
+    out = kernels.attention_pallas(q, k, v, causal=causal)
+    np.testing.assert_allclose(
+        out, ref.ref_attention(q, k, v, causal), rtol=1e-5, atol=1e-5)
+
+
+def test_attention_causality():
+    """Future positions must not influence earlier outputs."""
+    b, h, s, hd = 1, 1, 16, 8
+    q = _rand(0, (b, h, s, hd), jnp.float32)
+    k = _rand(1, (b, h, s, hd), jnp.float32)
+    v = _rand(2, (b, h, s, hd), jnp.float32)
+    base = kernels.attention_pallas(q, k, v, causal=True)
+    k2 = k.at[:, :, -1].set(99.0)
+    v2 = v.at[:, :, -1].set(-99.0)
+    pert = kernels.attention_pallas(q, k2, v2, causal=True)
+    np.testing.assert_allclose(base[:, :, :-1], pert[:, :, :-1],
+                               rtol=1e-5, atol=1e-5)
+    assert not np.allclose(base[:, :, -1], pert[:, :, -1])
+
+
+def test_attention_rows_are_convex_combinations():
+    """Each output row lies in the convex hull of V rows (softmax weights)."""
+    q = _rand(0, (1, 2, 32, 16), jnp.float32)
+    k = _rand(1, (1, 2, 32, 16), jnp.float32)
+    v = jnp.abs(_rand(2, (1, 2, 32, 16), jnp.float32))
+    out = kernels.attention_pallas(q, k, v, causal=False)
+    assert float(jnp.max(out)) <= float(jnp.max(v)) + 1e-5
+    assert float(jnp.min(out)) >= float(jnp.min(v)) - 1e-5
+
+
+def test_attention_grad_matches_ref():
+    b, h, s, hd = 2, 2, 16, 8
+    q = _rand(0, (b, h, s, hd), jnp.float32)
+    k = _rand(1, (b, h, s, hd), jnp.float32)
+    v = _rand(2, (b, h, s, hd), jnp.float32)
+
+    def f_pal(q, k, v):
+        return jnp.sum(kernels.attention(q, k, v, True) ** 2)
+
+    def f_ref(q, k, v):
+        return jnp.sum(ref.ref_attention(q, k, v, True) ** 2)
+
+    gp = jax.grad(f_pal, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(gp, gr):
+        np.testing.assert_allclose(a, b_, rtol=1e-4, atol=1e-4)
+
+
+def test_attention_shape_mismatch_raises():
+    q = _rand(0, (1, 2, 16, 8), jnp.float32)
+    k = _rand(1, (1, 2, 16, 8), jnp.float32)
+    v = _rand(2, (1, 2, 8, 8), jnp.float32)  # skv disagrees with k
+    with pytest.raises(ValueError):
+        kernels.attention_pallas(q, k, v)
+    with pytest.raises(ValueError):  # head count disagrees
+        kernels.attention_pallas(q, _rand(3, (1, 1, 16, 8), jnp.float32), k)
+
+
+# --------------------------------------------------------------------------
+# layernorm
+# --------------------------------------------------------------------------
+
+LN_SHAPES = st.tuples(
+    st.sampled_from([8, 16, 64, 128, 256]),   # rows
+    st.sampled_from([8, 16, 32, 128, 192]),   # features
+)
+
+
+@given(shape=LN_SHAPES, seed=st.integers(0, 2**16))
+@settings(max_examples=20, deadline=None)
+def test_layernorm_matches_ref(shape, seed):
+    rows, d = shape
+    x = _rand(seed, (rows, d), jnp.float32) * 3.0 + 1.5
+    scale = _rand(seed + 1, (d,), jnp.float32)
+    bias = _rand(seed + 2, (d,), jnp.float32)
+    out = kernels.layernorm_pallas(x, scale, bias)
+    np.testing.assert_allclose(out, ref.ref_layernorm(x, scale, bias),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_layernorm_normalizes():
+    x = _rand(0, (32, 64), jnp.float32) * 10 + 4
+    out = kernels.layernorm_pallas(x, jnp.ones(64), jnp.zeros(64))
+    np.testing.assert_allclose(np.mean(out, -1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(np.std(out, -1), 1.0, atol=1e-3)
+
+
+def test_layernorm_grad_matches_ref():
+    x = _rand(0, (16, 32), jnp.float32)
+    s = jnp.ones(32) * 1.3
+    b = jnp.zeros(32) + 0.2
+
+    def f_pal(x, s, b):
+        return jnp.sum(kernels.layernorm(x, s, b) ** 3)
+
+    def f_ref(x, s, b):
+        return jnp.sum(ref.ref_layernorm(x, s, b) ** 3)
+
+    gp = jax.grad(f_pal, argnums=(0, 1, 2))(x, s, b)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(x, s, b)
+    for a, b_ in zip(gp, gr):
+        np.testing.assert_allclose(a, b_, rtol=1e-4, atol=1e-4)
+
+
+def test_layernorm_rejects_bad_shapes():
+    x = _rand(0, (16, 32), jnp.float32)
+    with pytest.raises(ValueError):
+        kernels.layernorm_pallas(x.reshape(2, 8, 32), jnp.ones(32), jnp.zeros(32))
+    with pytest.raises(ValueError):
+        kernels.layernorm_pallas(x, jnp.ones(16), jnp.zeros(32))

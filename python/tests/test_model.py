@@ -1,0 +1,217 @@
+"""L2 stage-model correctness.
+
+Validates that the per-stage artifacts (embed/block/head fwd + bwd)
+compose to exactly the gradients of end-to-end autodiff on the full
+model — the property the Rust pipeline engine relies on — and that the
+pallas and ref kernel backends agree at the model level.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+CFG = M.LMConfig(vocab=64, d_model=32, n_heads=2, d_ff=64, seq=16,
+                 n_blocks=2, microbatch=2)
+CNN = M.CNNConfig(hw=16, channels=(8, 16, 16), classes=10, microbatch=2)
+
+
+def _lm_params(cfg, seed=0):
+    key = jax.random.PRNGKey(seed)
+    ke, kb, kh = jax.random.split(key, 3)
+    embed = M.init_params(M.lm_embed_specs(cfg), ke)
+    blocks = tuple(
+        M.init_params(M.lm_block_specs(cfg), jax.random.fold_in(kb, i))
+        for i in range(cfg.n_blocks))
+    head = M.init_params(M.lm_head_specs(cfg), kh)
+    return embed, blocks, head
+
+
+def _lm_batch(cfg, seed=1):
+    key = jax.random.PRNGKey(seed)
+    toks = jax.random.randint(key, (cfg.microbatch, cfg.seq), 0, cfg.vocab)
+    targets = jnp.roll(toks, -1, axis=1)
+    return toks, targets
+
+
+class TestLMStageComposition:
+    def test_forward_composes(self):
+        """embed_fwd ∘ block_fwd^n ∘ head_loss == full model loss."""
+        params = _lm_params(CFG)
+        toks, tgts = _lm_batch(CFG)
+        embed_p, block_ps, head_p = params
+        h = M.lm_embed_fwd(CFG, embed_p, toks)
+        for bp in block_ps:
+            h = M.lm_block_fwd(CFG, bp, h, "ref")
+        loss_stage = M.lm_head_loss(CFG, head_p, h, tgts, "ref")
+        loss_full = M.lm_full_loss(CFG, params, toks, tgts, "ref")
+        np.testing.assert_allclose(loss_stage, loss_full, rtol=1e-6)
+
+    def test_staged_backward_matches_full_autodiff(self):
+        """Chaining head_fwdbwd -> block_bwd -> embed_bwd reproduces
+        jax.grad of the composed model — the pipeline BP contract."""
+        params = _lm_params(CFG)
+        toks, tgts = _lm_batch(CFG)
+        embed_p, block_ps, head_p = params
+
+        # Reference: end-to-end autodiff.
+        ref_grads = jax.grad(
+            lambda p: M.lm_full_loss(CFG, p, toks, tgts, "ref"))(params)
+        ref_embed_g, ref_block_gs, ref_head_g = ref_grads
+
+        # Staged: forward saving stage inputs, then backward chain.
+        acts = [M.lm_embed_fwd(CFG, embed_p, toks)]
+        for bp in block_ps:
+            acts.append(M.lm_block_fwd(CFG, bp, acts[-1], "ref"))
+
+        out = M.lm_head_fwdbwd(CFG, head_p, acts[-1], tgts, "ref")
+        loss, head_gs, gx = out[0], out[1:-1], out[-1]
+        for hg, rg in zip(head_gs, ref_head_g):
+            np.testing.assert_allclose(hg, rg, rtol=1e-4, atol=1e-5)
+
+        for i in reversed(range(CFG.n_blocks)):
+            out = M.lm_block_bwd(CFG, block_ps[i], acts[i], gx, "ref")
+            block_gs, gx = out[:-1], out[-1]
+            for bg, rg in zip(block_gs, ref_block_gs[i]):
+                np.testing.assert_allclose(bg, rg, rtol=1e-4, atol=1e-5)
+
+        embed_gs = M.lm_embed_bwd(CFG, embed_p, toks, gx)
+        for eg, rg in zip(embed_gs, ref_embed_g):
+            np.testing.assert_allclose(eg, rg, rtol=1e-4, atol=1e-5)
+
+    def test_pallas_backend_matches_ref_backend(self):
+        params = _lm_params(CFG)
+        toks, tgts = _lm_batch(CFG)
+        l_ref = M.lm_full_loss(CFG, params, toks, tgts, "ref")
+        l_pal = M.lm_full_loss(CFG, params, toks, tgts, "pallas")
+        np.testing.assert_allclose(l_pal, l_ref, rtol=1e-5, atol=1e-6)
+
+    def test_pallas_grads_match_ref(self):
+        params = _lm_params(CFG)
+        toks, tgts = _lm_batch(CFG)
+        g_ref = jax.grad(lambda p: M.lm_full_loss(CFG, p, toks, tgts, "ref"))(params)
+        g_pal = jax.grad(lambda p: M.lm_full_loss(CFG, p, toks, tgts, "pallas"))(params)
+        flat_r, _ = jax.tree_util.tree_flatten(g_ref)
+        flat_p, _ = jax.tree_util.tree_flatten(g_pal)
+        for a, b in zip(flat_p, flat_r):
+            np.testing.assert_allclose(a, b, rtol=5e-4, atol=5e-5)
+
+    def test_loss_decreases_under_sgd(self):
+        """Sanity: a few SGD steps on one batch reduce the loss — the
+        property the Rust optimizer path depends on."""
+        params = _lm_params(CFG)
+        toks, tgts = _lm_batch(CFG)
+        loss_fn = jax.jit(lambda p: M.lm_full_loss(CFG, p, toks, tgts, "ref"))
+        grad_fn = jax.jit(jax.grad(lambda p: M.lm_full_loss(CFG, p, toks, tgts, "ref")))
+        l0 = float(loss_fn(params))
+        for _ in range(5):
+            g = grad_fn(params)
+            params = jax.tree_util.tree_map(lambda p, g_: p - 0.5 * g_, params, g)
+        l1 = float(loss_fn(params))
+        assert l1 < l0, f"loss did not decrease: {l0} -> {l1}"
+
+    def test_block_bwd_output_arity(self):
+        params = _lm_params(CFG)
+        _, block_ps, _ = params
+        x = jnp.zeros((CFG.microbatch, CFG.seq, CFG.d_model))
+        out = M.lm_block_bwd(CFG, block_ps[0], x, x, "ref")
+        assert len(out) == len(M.lm_block_specs(CFG)) + 1
+        assert out[-1].shape == x.shape
+
+
+class TestCNNStageComposition:
+    def _params(self, seed=0):
+        key = jax.random.PRNGKey(seed)
+        ks, kb, kh = jax.random.split(key, 3)
+        stem = M.init_params(M.cnn_stem_specs(CNN), ks)
+        blocks = tuple(
+            M.init_params(M.cnn_block_specs(CNN, i), jax.random.fold_in(kb, i))
+            for i in range(len(CNN.channels)))
+        head = M.init_params(M.cnn_head_specs(CNN), kh)
+        return stem, blocks, head
+
+    def _batch(self, seed=1):
+        key = jax.random.PRNGKey(seed)
+        x = jax.random.normal(key, (CNN.microbatch, CNN.hw, CNN.hw, CNN.in_ch))
+        y = jax.random.randint(jax.random.fold_in(key, 1), (CNN.microbatch,),
+                               0, CNN.classes)
+        return x, y
+
+    def test_forward_composes(self):
+        params = self._params()
+        x, y = self._batch()
+        stem_p, block_ps, head_p = params
+        h = M.cnn_stem_fwd(CNN, stem_p, x)
+        for i, bp in enumerate(block_ps):
+            h = M.cnn_block_fwd(CNN, i, bp, h)
+        np.testing.assert_allclose(
+            M.cnn_head_loss(CNN, head_p, h, y),
+            M.cnn_full_loss(CNN, params, x, y), rtol=1e-6)
+
+    def test_staged_backward_matches_full_autodiff(self):
+        params = self._params()
+        x, y = self._batch()
+        stem_p, block_ps, head_p = params
+        ref_grads = jax.grad(lambda p: M.cnn_full_loss(CNN, p, x, y))(params)
+        ref_stem_g, ref_block_gs, ref_head_g = ref_grads
+
+        acts = [M.cnn_stem_fwd(CNN, stem_p, x)]
+        for i, bp in enumerate(block_ps):
+            acts.append(M.cnn_block_fwd(CNN, i, bp, acts[-1]))
+
+        out = M.cnn_head_fwdbwd(CNN, head_p, acts[-1], y)
+        _, head_gs, gx = out[0], out[1:-1], out[-1]
+        for hg, rg in zip(head_gs, ref_head_g):
+            np.testing.assert_allclose(hg, rg, rtol=1e-4, atol=1e-5)
+        for i in reversed(range(len(block_ps))):
+            out = M.cnn_block_bwd(CNN, i, block_ps[i], acts[i], gx)
+            block_gs, gx = out[:-1], out[-1]
+            for bg, rg in zip(block_gs, ref_block_gs[i]):
+                np.testing.assert_allclose(bg, rg, rtol=1e-4, atol=1e-5)
+        out = M.cnn_stem_bwd(CNN, stem_p, x, gx)
+        for sg, rg in zip(out[:-1], ref_stem_g):
+            np.testing.assert_allclose(sg, rg, rtol=1e-4, atol=1e-5)
+
+    def test_block_shapes_halve(self):
+        params = self._params()
+        x, _ = self._batch()
+        h = M.cnn_stem_fwd(CNN, params[0], x)
+        assert h.shape == (CNN.microbatch, CNN.hw, CNN.hw, CNN.channels[0])
+        hw = CNN.hw
+        for i, bp in enumerate(params[1]):
+            h = M.cnn_block_fwd(CNN, i, bp, h)
+            hw //= 2
+            assert h.shape == (CNN.microbatch, hw, hw, CNN.channels[i])
+
+
+class TestArtifactRegistry:
+    def test_lm_artifact_arg_names_match_flatten(self):
+        arts = M.lm_artifacts(CFG, "ref")
+        names = {a.name for a in arts}
+        assert names == {"embed_fwd", "embed_bwd", "block_fwd", "block_bwd",
+                         "head_fwdbwd", "head_loss"}
+        for a in arts:
+            flat, _ = jax.tree_util.tree_flatten(a.args)
+            assert len(flat) == len(a.arg_names), a.name
+
+    def test_lm_artifact_output_arity(self):
+        for a in M.lm_artifacts(CFG, "ref"):
+            outs = jax.eval_shape(a.fn, *a.args)
+            flat, _ = jax.tree_util.tree_flatten(outs)
+            assert len(flat) == len(a.out_names), a.name
+
+    def test_cnn_artifact_shapes_consistent(self):
+        for a in M.cnn_artifacts(CNN):
+            outs = jax.eval_shape(a.fn, *a.args)
+            flat, _ = jax.tree_util.tree_flatten(outs)
+            assert len(flat) == len(a.out_names), a.name
+
+    def test_artifact_fns_execute(self):
+        """Each artifact fn runs on concrete zeros without error."""
+        for a in M.lm_artifacts(CFG, "ref"):
+            flat, treedef = jax.tree_util.tree_flatten(a.args)
+            concrete = [jnp.zeros(s.shape, s.dtype) for s in flat]
+            args = jax.tree_util.tree_unflatten(treedef, concrete)
+            a.fn(*args)

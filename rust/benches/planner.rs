@@ -1,0 +1,48 @@
+//! Planner micro-benchmarks (L3 hot path 1): Algorithm 2 over the
+//! paper models / environments, Algorithm 1 allocation, and the cost
+//! model primitives — the loops §Perf optimises.
+
+use asteroid::config::{ClusterSpec, TrainConfig};
+use asteroid::model::zoo;
+use asteroid::planner::alloc::{allocate_microbatch, AllocOpts};
+use asteroid::planner::cost::{plan_steps, round_latency};
+use asteroid::planner::dp::{plan_hpp, PlannerConfig};
+use asteroid::profiler::ProfileTable;
+use asteroid::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::default();
+
+    // Algorithm 2 end-to-end per model on Env C (Table 7's workload).
+    for model in zoo::all() {
+        let cluster = ClusterSpec::env("C", 100.0).unwrap();
+        let table = ProfileTable::new(&cluster, &model);
+        let cfg = TrainConfig::new(2048, 32);
+        b.bench(&format!("alg2_plan_env_c/{}", model.name), || {
+            plan_hpp(&table, &cluster, &model, &cfg, &PlannerConfig::default()).unwrap()
+        });
+    }
+
+    // Algorithm 1 allocation on a heterogeneous group.
+    let cluster = ClusterSpec::env("C", 100.0).unwrap();
+    let model = zoo::efficientnet_b1();
+    let table = ProfileTable::new(&cluster, &model);
+    let cfg = TrainConfig::new(2048, 32);
+    let devices: Vec<usize> = vec![0, 1, 3];
+    b.bench("alg1_allocate_microbatch", || {
+        allocate_microbatch(
+            &table, &cluster, &model, &cfg, 0, 60, &devices, 32, 3,
+            AllocOpts::default(),
+        )
+        .unwrap()
+    });
+
+    // Cost-model primitives.
+    let plan = plan_hpp(&table, &cluster, &model, &cfg, &PlannerConfig::default())
+        .unwrap()
+        .plan;
+    b.bench("cost_plan_steps", || plan_steps(&table, &cluster, &model, &plan));
+    let steps = plan_steps(&table, &cluster, &model, &plan);
+    b.bench("cost_round_latency", || round_latency(&steps, 64));
+    b.bench("profile_range_query", || table.time_fwd_bwd(0, 10, 90, 17));
+}

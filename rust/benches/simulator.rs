@@ -1,0 +1,52 @@
+//! Simulator benchmarks (L3 hot path 2): events/second of the
+//! discrete-event engine across plan shapes — every repro table runs
+//! through these loops hundreds of times.
+
+use asteroid::config::{ClusterSpec, TrainConfig};
+use asteroid::model::zoo;
+use asteroid::planner::dp::{plan_hpp, PlannerConfig};
+use asteroid::planner::plan::{Plan, Stage};
+use asteroid::profiler::ProfileTable;
+use asteroid::sim::simulate_round;
+use asteroid::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::default();
+
+    // Planned heterogeneous pipelines.
+    for (model, env) in [(zoo::efficientnet_b1(), "C"), (zoo::mobilenet_v2(), "B")] {
+        let cluster = ClusterSpec::env(env, 100.0).unwrap();
+        let table = ProfileTable::new(&cluster, &model);
+        let cfg = TrainConfig::new(2048, 32);
+        let plan = plan_hpp(&table, &cluster, &model, &cfg, &PlannerConfig::default())
+            .unwrap()
+            .plan;
+        b.bench(&format!("sim_round/{}@{env}", model.name), || {
+            simulate_round(&table, &cluster, &model, &plan)
+        });
+    }
+
+    // Scaling in micro-batch count (event volume ~ M x stages).
+    let cluster = ClusterSpec::nanos(8, 100.0);
+    let model = zoo::mobilenet_v2();
+    let table = ProfileTable::new(&cluster, &model);
+    let nl = model.num_layers();
+    for m in [16usize, 64, 256] {
+        let mut plan = Plan {
+            stages: (0..8)
+                .map(|s| Stage {
+                    layers: (s * nl / 8, (s + 1) * nl / 8),
+                    devices: vec![s],
+                    alloc: vec![32],
+                    kp: 1,
+                })
+                .collect(),
+            microbatch: 32,
+            num_micro: m,
+        };
+        plan.apply_default_kp();
+        b.bench(&format!("sim_round/8stage_m{m}"), || {
+            simulate_round(&table, &cluster, &model, &plan)
+        });
+    }
+}

@@ -1,0 +1,88 @@
+//! Paper-reproduction harness: regenerate every table and figure of
+//! the Asteroid paper's evaluation.
+//!
+//! ```text
+//! repro <experiment> [--out results]
+//! repro all --out results
+//! repro list
+//! ```
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+use asteroid::metrics::Table;
+use asteroid::repro;
+use asteroid::util::cli::Args;
+
+fn one(name: &str) -> Result<Vec<(String, Table)>> {
+    Ok(match name {
+        "table1" => vec![("table1".into(), repro::table1())],
+        "fig1" => {
+            let (l, r) = repro::fig1();
+            vec![("fig1_left".into(), l), ("fig1_right".into(), r)]
+        }
+        "table2" => vec![("table2".into(), repro::table2())],
+        "fig5" => vec![("fig5".into(), repro::fig5())],
+        "fig6" => vec![("fig6".into(), repro::fig6())],
+        "table4" | "fig12" => vec![("table4".into(), repro::table4())],
+        "fig13" => vec![("fig13".into(), repro::fig13())],
+        "fig14" => vec![("fig14".into(), repro::fig14())],
+        "fig15a" => vec![("fig15a".into(), repro::fig15a())],
+        "fig15b" => vec![("fig15b".into(), repro::fig15b())],
+        "fig16" => vec![("fig16".into(), repro::fig16())],
+        "fig17" => vec![("fig17".into(), repro::fig17())],
+        "fig18" => vec![("fig18".into(), repro::fig18())],
+        "table7" => vec![("table7".into(), repro::table7())],
+        "table8" => vec![("table8".into(), repro::table8())],
+        "energy" => vec![("energy".into(), repro::energy())],
+        "recovery" => vec![("recovery_headline".into(), repro::recovery_headline())],
+        "all" => repro::all_experiments(),
+        other => bail!("unknown experiment {other:?} (try `repro list`)"),
+    })
+}
+
+const EXPERIMENTS: &[(&str, &str)] = &[
+    ("table1", "epoch time: A100 vs TX2 vs Nano"),
+    ("fig1", "DP latency breakdown + bytes/sample DP vs PP"),
+    ("table2", "communication volume: HDP vs HPP"),
+    ("fig5", "memory footprint breakdown"),
+    ("fig6", "non-linear batch->time curves"),
+    ("table4", "Asteroid vs on-device/DP/PP (+ Fig 12 configs)"),
+    ("fig13", "vs EDDL/PipeDream/Dapple/HetPipe"),
+    ("fig14", "time to target accuracy"),
+    ("fig15a", "planning ablation"),
+    ("fig15b", "1F1B K_p policy ablation"),
+    ("fig16", "fault-tolerance recovery per dropout scenario"),
+    ("fig17", "throughput timeline around a failure"),
+    ("fig18", "scalability on 1..8 Nanos"),
+    ("table7", "planning overhead"),
+    ("table8", "profiling overhead"),
+    ("energy", "energy per sample (§5.7)"),
+    ("recovery", "recovery speedup headline (§5.5)"),
+    ("all", "everything above"),
+];
+
+fn main() -> Result<()> {
+    let args = Args::from_env(&[])?;
+    let Some(name) = args.positional.first().map(String::as_str) else {
+        eprintln!("usage: repro <experiment> [--out results]; `repro list` to enumerate");
+        std::process::exit(2);
+    };
+    if name == "list" {
+        for (n, d) in EXPERIMENTS {
+            println!("{n:<10} {d}");
+        }
+        return Ok(());
+    }
+    let out: Option<PathBuf> = args.get("out").map(PathBuf::from);
+    let t0 = std::time::Instant::now();
+    for (csv_name, table) in one(name)? {
+        table.print();
+        if let Some(dir) = &out {
+            table.write_csv(dir, &csv_name)?;
+            println!("  -> {}/{}.csv\n", dir.display(), csv_name);
+        }
+    }
+    eprintln!("[{} done in {:.1}s]", name, t0.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -1,0 +1,279 @@
+//! Communication-volume analytics (paper §2.2-2.3, Eqs. 1-2, Fig. 1,
+//! Table 2).
+//!
+//! These closed forms quantify why HPP beats both plain DP and HDP on
+//! edge networks: HPP confines AllReduce to the parameter-light layers
+//! it replicates and avoids cutting through huge feature maps.
+
+use crate::model::ModelDesc;
+use crate::planner::plan::Plan;
+
+/// Eq. (2): V_HPP for a concrete plan, bytes per mini-batch.
+///
+///   G > 1: sum_i [2(|g_i|-1) P_i] + 2 beta sum_j a_j
+///   G = 1: 2(|g_1|-1) P
+pub fn hpp_volume(model: &ModelDesc, plan: &Plan) -> u64 {
+    let beta = (plan.microbatch * plan.num_micro) as u64; // global mini-batch
+    let mut allreduce: u64 = 0;
+    for s in &plan.stages {
+        let g = s.devices.len() as u64;
+        if g > 1 {
+            let p_i = model.weight_bytes_range(s.layers.0, s.layers.1);
+            allreduce += 2 * (g - 1) * p_i;
+        }
+    }
+    let mut pipelined: u64 = 0;
+    for w in plan.stages.windows(2) {
+        pipelined += 2 * beta * model.boundary_bytes(w[0].layers.1);
+    }
+    allreduce + pipelined
+}
+
+/// Plain-DP volume: every device ring-AllReduces the full model once
+/// per mini-batch; per-device volume is 2(n-1)/n * P, total 2(n-1) P.
+pub fn dp_volume(model: &ModelDesc, n_devices: usize) -> u64 {
+    if n_devices <= 1 {
+        return 0;
+    }
+    2 * (n_devices as u64 - 1) * model.total_weight_bytes()
+}
+
+/// Fig. 1(right): bytes communicated **per sample**.
+pub fn dp_bytes_per_sample(model: &ModelDesc, n_devices: usize, minibatch: usize) -> f64 {
+    dp_volume(model, n_devices) as f64 / minibatch as f64
+}
+
+/// Per-sample bytes for a straight pipeline cut at `bounds` (GPipe-style
+/// PP): each boundary tensor crosses twice (activation fwd + grad bwd).
+pub fn pp_bytes_per_sample(model: &ModelDesc, bounds: &[usize]) -> f64 {
+    // bounds: interior cut points, e.g. [10, 20] for 3 stages.
+    bounds
+        .iter()
+        .map(|&j| 2 * model.boundary_bytes(j))
+        .sum::<u64>() as f64
+}
+
+/// Table 2 support: the *communication-volume-optimal* HPP
+/// configuration of Eq. (2) — replicate the (parameter-light) head
+/// group and cut the pipeline at the smallest activation boundaries.
+///
+/// Note the distinction from the throughput planner: Algorithm 2
+/// minimises HPP-Round *latency* (pipelined transfers overlap with
+/// compute, so volume is nearly free in latency terms); the paper's
+/// §2.3 analysis instead asks what the HPP *architecture* can confine
+/// communication to, which is this configuration.  DESIGN.md
+/// documents the interpretation.
+pub fn volume_optimal_hpp(
+    model: &ModelDesc,
+    n_devices: usize,
+    minibatch: usize,
+    max_stages: usize,
+) -> (Plan, u64) {
+    use crate::planner::plan::Stage;
+    let nl = model.num_layers();
+    let beta = minibatch as u64;
+    let mut best: Option<(Plan, u64)> = None;
+
+    // Candidate cut points: the boundaries with the smallest activation
+    // tensors (a cut anywhere else is strictly worse for Eq. 2).
+    let mut cand: Vec<usize> = (1..nl).collect();
+    cand.sort_by_key(|&j| model.boundary_bytes(j));
+    cand.truncate(14);
+    cand.sort_unstable();
+
+    let max_p = max_stages.min(n_devices).max(1);
+    // Enumerate stage counts and cut subsets (small search space).
+    for p in 1..=max_p {
+        let cuts_needed = p - 1;
+        let mut choose = vec![0usize; cuts_needed];
+        enumerate_combinations(&cand, cuts_needed, &mut choose, 0, 0, &mut |cuts| {
+            // First group takes the spare devices, later stages one each.
+            let g1 = n_devices - (p - 1);
+            let mut bounds = vec![0usize];
+            bounds.extend_from_slice(cuts);
+            bounds.push(nl);
+            let mut stages = Vec::with_capacity(p);
+            let mut dev = 0usize;
+            for s in 0..p {
+                let g = if s == 0 { g1 } else { 1 };
+                let devices: Vec<usize> = (dev..dev + g).collect();
+                dev += g;
+                let alloc = split_evenly(minibatch.min(64), g);
+                stages.push(Stage {
+                    layers: (bounds[s], bounds[s + 1]),
+                    devices,
+                    alloc,
+                    kp: 1,
+                });
+            }
+            let plan = Plan {
+                stages,
+                microbatch: minibatch.min(64),
+                num_micro: (minibatch + 63) / 64,
+            };
+            let _ = beta;
+            let v = hpp_volume_minibatch(model, &plan, minibatch);
+            if best.as_ref().map_or(true, |(_, bv)| v < *bv) {
+                best = Some((plan, v));
+            }
+        });
+    }
+    best.expect("at least the single-stage plan exists")
+}
+
+fn split_evenly(total: usize, g: usize) -> Vec<usize> {
+    let base = total / g;
+    let rem = total % g;
+    (0..g).map(|i| base + usize::from(i < rem)).collect()
+}
+
+fn enumerate_combinations(
+    cand: &[usize],
+    k: usize,
+    buf: &mut [usize],
+    depth: usize,
+    start: usize,
+    f: &mut impl FnMut(&[usize]),
+) {
+    if depth == k {
+        f(&buf[..k]);
+        return;
+    }
+    for i in start..cand.len() {
+        buf[depth] = cand[i];
+        enumerate_combinations(cand, k, buf, depth + 1, i + 1, f);
+    }
+}
+
+/// Eq. (2) with an explicit global mini-batch (the plan's
+/// microbatch*num_micro may round up).
+pub fn hpp_volume_minibatch(model: &ModelDesc, plan: &Plan, minibatch: usize) -> u64 {
+    let beta = minibatch as u64;
+    let mut allreduce: u64 = 0;
+    for s in &plan.stages {
+        let g = s.devices.len() as u64;
+        if g > 1 {
+            allreduce += 2 * (g - 1) * model.weight_bytes_range(s.layers.0, s.layers.1);
+        }
+    }
+    let mut pipelined: u64 = 0;
+    for w in plan.stages.windows(2) {
+        pipelined += 2 * beta * model.boundary_bytes(w[0].layers.1);
+    }
+    allreduce + pipelined
+}
+
+/// Fig. 1(left): DP mini-batch latency split into computation vs
+/// synchronisation, for a homogeneous group.
+pub fn dp_latency_breakdown(
+    table: &crate::profiler::ProfileTable,
+    cluster: &crate::config::ClusterSpec,
+    model: &ModelDesc,
+    minibatch: usize,
+) -> (f64, f64) {
+    let n = cluster.n();
+    let per_dev = (minibatch + n - 1) / n;
+    let nl = model.num_layers();
+    let compute = (0..n)
+        .map(|d| table.time_fwd_bwd(d, 0, nl, per_dev))
+        .fold(0.0, f64::max);
+    let group: Vec<usize> = (0..n).collect();
+    let sync = 2.0 * (n as f64 - 1.0) * model.total_weight_bytes() as f64
+        / (n as f64 * cluster.min_bandwidth(&group));
+    (compute, sync)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterSpec;
+    use crate::model::zoo;
+    use crate::planner::plan::{Plan, Stage};
+    use crate::profiler::ProfileTable;
+
+    fn two_stage_plan(model: &ModelDesc) -> Plan {
+        let nl = model.num_layers();
+        Plan {
+            stages: vec![
+                Stage { layers: (0, nl / 2), devices: vec![0, 1], alloc: vec![4, 4], kp: 3 },
+                Stage { layers: (nl / 2, nl), devices: vec![2], alloc: vec![8], kp: 1 },
+            ],
+            microbatch: 8,
+            num_micro: 4,
+        }
+    }
+
+    #[test]
+    fn hpp_volume_terms() {
+        let model = zoo::mobilenet_v2();
+        let plan = two_stage_plan(&model);
+        let nl = model.num_layers();
+        let p1 = model.weight_bytes_range(0, nl / 2);
+        let a = model.boundary_bytes(nl / 2);
+        let beta = 32u64; // 8 * 4
+        let expect = 2 * p1 + 2 * beta * a;
+        assert_eq!(hpp_volume(&model, &plan), expect);
+    }
+
+    #[test]
+    fn single_group_hpp_is_pure_allreduce() {
+        let model = zoo::mobilenet_v2();
+        let nl = model.num_layers();
+        let plan = Plan {
+            stages: vec![Stage {
+                layers: (0, nl),
+                devices: vec![0, 1, 2],
+                alloc: vec![3, 3, 2],
+                kp: 1,
+            }],
+            microbatch: 8,
+            num_micro: 4,
+        };
+        assert_eq!(
+            hpp_volume(&model, &plan),
+            2 * 2 * model.total_weight_bytes()
+        );
+    }
+
+    #[test]
+    fn dp_volume_scales_with_devices() {
+        let model = zoo::mobilenet_v2();
+        assert_eq!(dp_volume(&model, 1), 0);
+        assert!(dp_volume(&model, 5) > dp_volume(&model, 3));
+    }
+
+    #[test]
+    fn cnn_pp_per_sample_exceeds_dp_at_large_minibatch() {
+        // Fig. 1(right): for CNNs, PP's per-sample bytes can exceed DP's.
+        let model = zoo::mobilenet_v2();
+        let n = 3;
+        let minibatch = 2048;
+        let dp = dp_bytes_per_sample(&model, n, minibatch);
+        // cut early, where feature maps are big
+        let early = model.num_layers() / 4;
+        let pp = pp_bytes_per_sample(&model, &[early, early * 2]);
+        assert!(pp > dp, "pp {pp} dp {dp}");
+    }
+
+    #[test]
+    fn bert_pp_cheaper_than_dp() {
+        // For transformers (huge params, small activations) PP wins —
+        // cutting at encoder-block boundaries (9 modules per block, LN
+        // output = seq*hidden activations).
+        let model = zoo::bert_small();
+        let dp = dp_bytes_per_sample(&model, 3, 64);
+        let pp = pp_bytes_per_sample(&model, &[1 + 9, 1 + 18]);
+        assert!(pp < dp, "pp {pp} dp {dp}");
+    }
+
+    #[test]
+    fn dp_breakdown_sync_dominates_on_slow_net() {
+        // Fig. 1(left): at 100 Mbps, synchronisation dominates the DP
+        // mini-batch latency for parameter-heavy models.
+        let cluster = ClusterSpec::nanos(3, 100.0);
+        let model = zoo::resnet50();
+        let table = ProfileTable::new(&cluster, &model);
+        let (compute, sync) = dp_latency_breakdown(&table, &cluster, &model, 48);
+        assert!(sync > compute, "sync {sync} compute {compute}");
+    }
+}

@@ -1,0 +1,310 @@
+//! The Asteroid coordinator: the user-facing orchestration API tying
+//! together the three phases of Fig. 3.
+//!
+//! * **Preprocessing** — build/load profiles for (cluster, model);
+//! * **Planning** — run Algorithm 2 (or a baseline planner) to get an
+//!   HPP plan;
+//! * **Execution** — either simulate the plan (throughput studies) or
+//!   run it for real through the PJRT pipeline engine, with the
+//!   fault-tolerance machinery available for device-exit events.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::config::{ClusterSpec, TrainConfig};
+use crate::data::DataSource;
+use crate::fault::{
+    heavy_reschedule, lightweight_replay, HeartbeatCfg, RecoveryReport,
+};
+use crate::model::from_manifest::Manifest;
+use crate::model::{zoo, ModelDesc};
+use crate::pipeline::{train, TrainOpts, TrainStats};
+use crate::planner::baselines::{self, Method};
+use crate::planner::dp::{plan_hpp, PlanOutcome, PlannerConfig};
+use crate::planner::AllocOpts;
+use crate::profiler::ProfileTable;
+use crate::sim::{simulate_round, SimResult};
+
+/// A fully-initialised coordination context for one (model, cluster,
+/// training-config) triple.
+pub struct Coordinator {
+    pub cluster: ClusterSpec,
+    pub model: ModelDesc,
+    pub table: ProfileTable,
+    pub cfg: TrainConfig,
+    /// Set when the model is an AOT-compiled manifest model (real
+    /// execution available).
+    pub artifacts: Option<(PathBuf, String)>,
+}
+
+impl Coordinator {
+    /// Context over a zoo model (simulation-only experiments).
+    pub fn for_zoo_model(
+        model_name: &str,
+        cluster: ClusterSpec,
+        cfg: TrainConfig,
+    ) -> Result<Coordinator> {
+        let model = zoo::by_name(model_name)
+            .with_context(|| format!("unknown zoo model {model_name:?}"))?;
+        let table = ProfileTable::new(&cluster, &model);
+        Ok(Coordinator { cluster, model, table, cfg, artifacts: None })
+    }
+
+    /// Context over an AOT-compiled manifest model (real execution).
+    pub fn for_artifact_model(
+        artifacts_dir: &Path,
+        model_name: &str,
+        cluster: ClusterSpec,
+        cfg: TrainConfig,
+    ) -> Result<Coordinator> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let mm = manifest.model(model_name)?;
+        anyhow::ensure!(
+            cfg.microbatch == mm.microbatch,
+            "training config micro-batch {} != compiled micro-batch {}",
+            cfg.microbatch,
+            mm.microbatch
+        );
+        let model = mm.to_model_desc();
+        let table = ProfileTable::new(&cluster, &model);
+        Ok(Coordinator {
+            cluster,
+            model,
+            table,
+            cfg,
+            artifacts: Some((artifacts_dir.to_path_buf(), model_name.to_string())),
+        })
+    }
+
+    /// Planning phase with Asteroid's planner.
+    pub fn plan(&self) -> Result<PlanOutcome> {
+        plan_hpp(&self.table, &self.cluster, &self.model, &self.cfg, &PlannerConfig::default())
+    }
+
+    /// Planning with an explicit planner configuration (ablations).
+    pub fn plan_with(&self, pc: &PlannerConfig) -> Result<PlanOutcome> {
+        plan_hpp(&self.table, &self.cluster, &self.model, &self.cfg, pc)
+    }
+
+    /// Planning with one of the baseline methods.  HetPipe has a
+    /// different architecture (HDP) — use `baselines::plan_hetpipe`
+    /// directly for its analytic result.
+    pub fn plan_baseline(&self, method: Method) -> Result<PlanOutcome> {
+        match method {
+            Method::Asteroid => self.plan(),
+            Method::DataParallel | Method::Eddl => baselines::plan_dp(
+                &self.table,
+                &self.cluster,
+                &self.model,
+                &self.cfg,
+                AllocOpts::default(),
+            ),
+            Method::GpipePP => {
+                baselines::plan_gpipe_pp(&self.table, &self.cluster, &self.model, &self.cfg)
+            }
+            Method::PipeDream => {
+                baselines::plan_pipedream(&self.table, &self.cluster, &self.model, &self.cfg)
+            }
+            Method::Dapple => {
+                baselines::plan_dapple(&self.table, &self.cluster, &self.model, &self.cfg)
+            }
+            Method::HetPipe => anyhow::bail!("HetPipe uses the HDP path (plan_hetpipe)"),
+            Method::OnDevice => self.plan_on_device(),
+        }
+    }
+
+    /// On-device baseline: single strongest device, single stage.
+    pub fn plan_on_device(&self) -> Result<PlanOutcome> {
+        let best = self
+            .cluster
+            .devices
+            .iter()
+            .max_by(|a, b| a.peak_flops.partial_cmp(&b.peak_flops).unwrap())
+            .unwrap()
+            .id;
+        let mut single = self.cluster.clone();
+        single.devices = vec![self.cluster.devices[best].clone()];
+        single.devices[0].id = 0;
+        single.bandwidth = vec![vec![0.0]];
+        let table = ProfileTable::new(&single, &self.model);
+        let mut out =
+            plan_hpp(&table, &single, &self.model, &self.cfg, &PlannerConfig::default())?;
+        // map back to the original device id
+        for s in &mut out.plan.stages {
+            for d in &mut s.devices {
+                *d = best;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Execution phase, simulated (event-accurate schedule).
+    pub fn simulate(&self, plan: &crate::planner::Plan) -> SimResult {
+        simulate_round(&self.table, &self.cluster, &self.model, plan)
+    }
+
+    /// Execution phase, real (PJRT pipeline engine).
+    pub fn train(
+        &self,
+        plan: &crate::planner::Plan,
+        opts: &TrainOpts,
+        data: &mut dyn DataSource,
+    ) -> Result<TrainStats> {
+        let (dir, name) = self
+            .artifacts
+            .as_ref()
+            .context("real training requires an artifact model (for_artifact_model)")?;
+        train(dir, name, plan, opts, data)
+    }
+
+    /// Real training with a live device-exit at `fail_after` rounds:
+    /// train, checkpoint (the workers stream their final weights back),
+    /// lightweight-replan without the failed device, warm-start the new
+    /// pipeline from the checkpoint, and continue — the loss curve must
+    /// continue where it left off, which is what the integration tests
+    /// assert.  Returns (stats before, recovery report, stats after).
+    pub fn train_with_failure(
+        &self,
+        plan: &crate::planner::Plan,
+        opts: &TrainOpts,
+        data: &mut dyn DataSource,
+        fail_after: usize,
+        failed_dev: usize,
+        steps_after: usize,
+    ) -> Result<(TrainStats, RecoveryReport, TrainStats)> {
+        let (dir, name) = self
+            .artifacts
+            .as_ref()
+            .context("real training requires an artifact model")?;
+
+        // Phase 1: train until the failure; final_params is the live
+        // checkpoint (replication topology of fault::replication).
+        let mut before_opts = opts.clone();
+        before_opts.steps = fail_after;
+        let before = train(dir, name, plan, &before_opts, data)?;
+
+        // Phase 2: lightweight replay — replan without the failed
+        // device (timing model for the report; the weights come from
+        // the in-memory checkpoint).
+        let report = self.recover_lightweight(plan, failed_dev)?;
+
+        // Phase 3: resume on the new plan, warm-started.
+        let mut after_opts = opts.clone();
+        after_opts.steps = steps_after;
+        after_opts.initial_params = Some(std::sync::Arc::new(before.final_params.clone()));
+        let after = train(dir, name, &report.new_plan, &after_opts, data)?;
+        Ok((before, report, after))
+    }
+
+    /// Device-exit recovery via lightweight pipeline replay.
+    pub fn recover_lightweight(
+        &self,
+        plan: &crate::planner::Plan,
+        failed_dev: usize,
+    ) -> Result<RecoveryReport> {
+        lightweight_replay(
+            &self.table,
+            &self.cluster,
+            &self.model,
+            &self.cfg,
+            plan,
+            failed_dev,
+            &HeartbeatCfg::default(),
+        )
+    }
+
+    /// Device-exit recovery via the heavy-rescheduling baseline.
+    pub fn recover_heavy(
+        &self,
+        plan: &crate::planner::Plan,
+        failed_dev: usize,
+    ) -> Result<RecoveryReport> {
+        heavy_reschedule(
+            &self.table,
+            &self.cluster,
+            &self.model,
+            &self.cfg,
+            plan,
+            failed_dev,
+            &HeartbeatCfg::default(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_coordinator_plans_and_simulates() {
+        let c = Coordinator::for_zoo_model(
+            "mobilenetv2",
+            ClusterSpec::env("B", 100.0).unwrap(),
+            TrainConfig::new(256, 16),
+        )
+        .unwrap();
+        let out = c.plan().unwrap();
+        let sim = c.simulate(&out.plan);
+        assert!(sim.throughput > 0.0);
+    }
+
+    #[test]
+    fn baseline_planners_reachable() {
+        let c = Coordinator::for_zoo_model(
+            "mobilenetv2",
+            ClusterSpec::env("A", 100.0).unwrap(),
+            TrainConfig::new(128, 16),
+        )
+        .unwrap();
+        for m in [
+            Method::DataParallel,
+            Method::GpipePP,
+            Method::PipeDream,
+            Method::Dapple,
+            Method::OnDevice,
+        ] {
+            let out = c.plan_baseline(m).unwrap();
+            assert!(out.predicted_throughput > 0.0, "{m:?}");
+        }
+        assert!(c.plan_baseline(Method::HetPipe).is_err());
+    }
+
+    #[test]
+    fn on_device_uses_strongest() {
+        let c = Coordinator::for_zoo_model(
+            "mobilenetv2",
+            ClusterSpec::env("C", 100.0).unwrap(), // NX is device 0
+            TrainConfig::new(128, 16),
+        )
+        .unwrap();
+        let out = c.plan_on_device().unwrap();
+        assert_eq!(out.plan.num_stages(), 1);
+        assert_eq!(out.plan.stages[0].devices, vec![0]);
+    }
+
+    #[test]
+    fn recovery_paths_work() {
+        let c = Coordinator::for_zoo_model(
+            "efficientnet-b1",
+            ClusterSpec::env("D", 100.0).unwrap(),
+            TrainConfig::new(256, 16),
+        )
+        .unwrap();
+        let plan = c.plan().unwrap().plan;
+        let failed = *plan.devices().last().unwrap();
+        let lite = c.recover_lightweight(&plan, failed).unwrap();
+        let heavy = c.recover_heavy(&plan, failed).unwrap();
+        assert!(lite.total_s() < heavy.total_s());
+    }
+
+    #[test]
+    fn unknown_model_rejected() {
+        assert!(Coordinator::for_zoo_model(
+            "nope",
+            ClusterSpec::env("A", 100.0).unwrap(),
+            TrainConfig::new(64, 8),
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,172 @@
+//! Heartbeat-guided failure detection (paper §3.4, module 1).
+//!
+//! Every device periodically emits a heartbeat to the coordinator;
+//! missing `miss_threshold` consecutive beats marks the device
+//! *suspected*, after which the coordinator sends a probe and waits one
+//! RTT for confirmation.  The monitor here is real (wall-clock based,
+//! usable by the live engine); `detection_time` is the closed form the
+//! Fig. 16 recovery model charges.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Detector configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct HeartbeatCfg {
+    /// Interval between heartbeats.
+    pub interval: Duration,
+    /// Consecutive missed beats before suspicion.
+    pub miss_threshold: u32,
+    /// Probe round-trip allowance for confirmation.
+    pub probe_rtt: Duration,
+}
+
+impl Default for HeartbeatCfg {
+    fn default() -> Self {
+        HeartbeatCfg {
+            interval: Duration::from_millis(500),
+            miss_threshold: 2,
+            probe_rtt: Duration::from_millis(100),
+        }
+    }
+}
+
+impl HeartbeatCfg {
+    /// Expected worst-case detection latency: the device dies right
+    /// after beating, so `miss_threshold` intervals elapse before
+    /// suspicion, plus the probe RTT.
+    pub fn detection_time(&self) -> f64 {
+        self.interval.as_secs_f64() * self.miss_threshold as f64 + self.probe_rtt.as_secs_f64()
+    }
+}
+
+/// Device liveness as seen by the monitor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Liveness {
+    Alive,
+    Suspected,
+    Confirmed, // confirmed failed
+}
+
+/// Wall-clock heartbeat monitor (coordinator side).
+#[derive(Debug)]
+pub struct HeartbeatMonitor {
+    cfg: HeartbeatCfg,
+    last_beat: BTreeMap<usize, Instant>,
+    confirmed: BTreeMap<usize, bool>,
+}
+
+impl HeartbeatMonitor {
+    pub fn new(cfg: HeartbeatCfg, devices: &[usize]) -> HeartbeatMonitor {
+        let now = Instant::now();
+        HeartbeatMonitor {
+            cfg,
+            last_beat: devices.iter().map(|&d| (d, now)).collect(),
+            confirmed: devices.iter().map(|&d| (d, false)).collect(),
+        }
+    }
+
+    /// Record a heartbeat from `device`.
+    pub fn beat(&mut self, device: usize) {
+        if let Some(t) = self.last_beat.get_mut(&device) {
+            *t = Instant::now();
+        }
+        if let Some(c) = self.confirmed.get_mut(&device) {
+            *c = false;
+        }
+    }
+
+    /// Probe response confirms death (no response within RTT).
+    pub fn confirm_failure(&mut self, device: usize) {
+        if let Some(c) = self.confirmed.get_mut(&device) {
+            *c = true;
+        }
+    }
+
+    /// Current liveness classification of `device`.
+    pub fn liveness(&self, device: usize) -> Liveness {
+        if self.confirmed.get(&device).copied().unwrap_or(false) {
+            return Liveness::Confirmed;
+        }
+        let Some(last) = self.last_beat.get(&device) else {
+            return Liveness::Confirmed;
+        };
+        let deadline = self.cfg.interval * self.cfg.miss_threshold;
+        if last.elapsed() > deadline {
+            Liveness::Suspected
+        } else {
+            Liveness::Alive
+        }
+    }
+
+    /// All devices currently suspected (need a probe).
+    pub fn suspects(&self) -> Vec<usize> {
+        self.last_beat
+            .keys()
+            .copied()
+            .filter(|&d| self.liveness(d) == Liveness::Suspected)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_cfg() -> HeartbeatCfg {
+        HeartbeatCfg {
+            interval: Duration::from_millis(20),
+            miss_threshold: 2,
+            probe_rtt: Duration::from_millis(5),
+        }
+    }
+
+    #[test]
+    fn alive_while_beating() {
+        let mut m = HeartbeatMonitor::new(fast_cfg(), &[0, 1]);
+        for _ in 0..3 {
+            std::thread::sleep(Duration::from_millis(15));
+            m.beat(0);
+            m.beat(1);
+        }
+        assert_eq!(m.liveness(0), Liveness::Alive);
+        assert!(m.suspects().is_empty());
+    }
+
+    #[test]
+    fn silent_device_becomes_suspected_then_confirmed() {
+        let mut m = HeartbeatMonitor::new(fast_cfg(), &[0, 1]);
+        std::thread::sleep(Duration::from_millis(15));
+        m.beat(1); // device 0 goes silent
+        std::thread::sleep(Duration::from_millis(35));
+        assert_eq!(m.liveness(0), Liveness::Suspected);
+        assert_eq!(m.suspects(), vec![0]);
+        m.confirm_failure(0);
+        assert_eq!(m.liveness(0), Liveness::Confirmed);
+    }
+
+    #[test]
+    fn beat_clears_suspicion() {
+        let mut m = HeartbeatMonitor::new(fast_cfg(), &[0]);
+        std::thread::sleep(Duration::from_millis(50));
+        assert_eq!(m.liveness(0), Liveness::Suspected);
+        m.beat(0);
+        assert_eq!(m.liveness(0), Liveness::Alive);
+    }
+
+    #[test]
+    fn unknown_device_is_confirmed_dead() {
+        let m = HeartbeatMonitor::new(fast_cfg(), &[0]);
+        assert_eq!(m.liveness(42), Liveness::Confirmed);
+    }
+
+    #[test]
+    fn detection_time_formula() {
+        let cfg = HeartbeatCfg {
+            interval: Duration::from_millis(500),
+            miss_threshold: 2,
+            probe_rtt: Duration::from_millis(100),
+        };
+        assert!((cfg.detection_time() - 1.1).abs() < 1e-9);
+    }
+}

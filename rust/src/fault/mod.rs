@@ -1,0 +1,14 @@
+//! Fault-tolerant pipeline replay (paper §3.4): heartbeat failure
+//! detection, topology-driven model replication, FLOPs-based
+//! layer-wise lightweight re-planning, and the heavy-rescheduling
+//! baseline it is compared against (Figs. 16-17).
+
+pub mod heartbeat;
+pub mod replan;
+pub mod replay;
+pub mod replication;
+
+pub use heartbeat::{HeartbeatCfg, HeartbeatMonitor, Liveness};
+pub use replan::{lightweight_replan, migration_time, Replan};
+pub use replay::{heavy_reschedule, lightweight_replay, throughput_timeline, RecoveryReport};
+pub use replication::{replication_plan, BackupStore, RecoverySource, ReplicationPlan};

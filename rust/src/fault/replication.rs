@@ -1,0 +1,166 @@
+//! Topology-driven model replication (paper §3.4, module 2).
+//!
+//! Single-device stages periodically back up their stage model to a
+//! *backup node* in the next stage (the last stage backs up to the
+//! first); devices in multi-device stages need no explicit backup —
+//! their replicas hold identical weights.  On failure, weights are
+//! restored from the backup node (single-device stage) or from a
+//! surviving replica (multi-device stage).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::model::ModelDesc;
+use crate::planner::plan::Plan;
+
+/// Where a stage's weights can be recovered from.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RecoverySource {
+    /// Backup node: (device holding the copy, owner stage).
+    BackupNode { holder: usize },
+    /// Any surviving replica within the same group.
+    IntraStageReplica,
+}
+
+/// The replication topology of a plan.
+#[derive(Debug, Clone)]
+pub struct ReplicationPlan {
+    /// stage index -> recovery source.
+    pub sources: Vec<RecoverySource>,
+    /// stage index -> bytes shipped per periodic checkpoint (0 for
+    /// replica-protected stages).
+    pub checkpoint_bytes: Vec<u64>,
+}
+
+/// Derive the backup topology for `plan` (Fig. 9 left).
+pub fn replication_plan(model: &ModelDesc, plan: &Plan) -> ReplicationPlan {
+    let p_total = plan.stages.len();
+    let mut sources = Vec::with_capacity(p_total);
+    let mut checkpoint_bytes = Vec::with_capacity(p_total);
+    for (p, stage) in plan.stages.iter().enumerate() {
+        if stage.devices.len() > 1 {
+            sources.push(RecoverySource::IntraStageReplica);
+            checkpoint_bytes.push(0);
+        } else {
+            // Next stage's first device; last stage wraps to the first.
+            let holder_stage = if p + 1 < p_total { p + 1 } else { 0 };
+            // A single-stage pipeline has nowhere to back up to.
+            let holder = plan.stages[holder_stage].devices[0];
+            sources.push(RecoverySource::BackupNode { holder });
+            checkpoint_bytes.push(model.weight_bytes_range(stage.layers.0, stage.layers.1));
+        }
+    }
+    ReplicationPlan { sources, checkpoint_bytes }
+}
+
+/// In-memory backup store used by the live engine and the replay
+/// demos: stage -> serialized weights (flat f32).
+#[derive(Debug, Default)]
+pub struct BackupStore {
+    snapshots: BTreeMap<usize, Vec<f32>>,
+    pub version: BTreeMap<usize, u64>,
+}
+
+impl BackupStore {
+    pub fn new() -> BackupStore {
+        BackupStore::default()
+    }
+
+    /// Checkpoint stage weights (called periodically by the owner).
+    pub fn checkpoint(&mut self, stage: usize, weights: Vec<f32>) {
+        *self.version.entry(stage).or_insert(0) += 1;
+        self.snapshots.insert(stage, weights);
+    }
+
+    /// Restore stage weights after a failure.
+    pub fn restore(&self, stage: usize) -> Result<&[f32]> {
+        match self.snapshots.get(&stage) {
+            Some(w) => Ok(w),
+            None => bail!("no backup for stage {stage}"),
+        }
+    }
+
+    pub fn has(&self, stage: usize) -> bool {
+        self.snapshots.contains_key(&stage)
+    }
+}
+
+/// Time to restore a failed device's stage weights (Fig. 16's restore
+/// component): backup-node transfer for single-device stages, free for
+/// replica-protected stages (weights already resident elsewhere).
+pub fn restore_time(
+    model: &ModelDesc,
+    plan: &Plan,
+    repl: &ReplicationPlan,
+    failed_stage: usize,
+    bandwidth: f64,
+) -> f64 {
+    match repl.sources[failed_stage] {
+        RecoverySource::IntraStageReplica => 0.0,
+        RecoverySource::BackupNode { .. } => {
+            let s = &plan.stages[failed_stage];
+            model.weight_bytes_range(s.layers.0, s.layers.1) as f64 / bandwidth
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+    use crate::planner::plan::{Plan, Stage};
+
+    fn plan3(model: &ModelDesc) -> Plan {
+        let nl = model.num_layers();
+        Plan {
+            stages: vec![
+                Stage { layers: (0, nl / 3), devices: vec![0, 1], alloc: vec![4, 4], kp: 5 },
+                Stage { layers: (nl / 3, 2 * nl / 3), devices: vec![2], alloc: vec![8], kp: 3 },
+                Stage { layers: (2 * nl / 3, nl), devices: vec![3], alloc: vec![8], kp: 1 },
+            ],
+            microbatch: 8,
+            num_micro: 8,
+        }
+    }
+
+    #[test]
+    fn topology_matches_paper_fig9() {
+        let model = zoo::mobilenet_v2();
+        let plan = plan3(&model);
+        let repl = replication_plan(&model, &plan);
+        // Multi-device stage: replica-protected, no checkpoint traffic.
+        assert_eq!(repl.sources[0], RecoverySource::IntraStageReplica);
+        assert_eq!(repl.checkpoint_bytes[0], 0);
+        // Middle single-device stage backs up to next stage's device.
+        assert_eq!(repl.sources[1], RecoverySource::BackupNode { holder: 3 });
+        assert!(repl.checkpoint_bytes[1] > 0);
+        // Last stage wraps to the first stage's device.
+        assert_eq!(repl.sources[2], RecoverySource::BackupNode { holder: 0 });
+    }
+
+    #[test]
+    fn backup_store_roundtrip() {
+        let mut store = BackupStore::new();
+        assert!(!store.has(1));
+        assert!(store.restore(1).is_err());
+        store.checkpoint(1, vec![1.0, 2.0, 3.0]);
+        assert!(store.has(1));
+        assert_eq!(store.restore(1).unwrap(), &[1.0, 2.0, 3.0]);
+        store.checkpoint(1, vec![9.0]);
+        assert_eq!(store.restore(1).unwrap(), &[9.0]);
+        assert_eq!(store.version[&1], 2);
+    }
+
+    #[test]
+    fn restore_time_free_for_replicated_stage() {
+        let model = zoo::mobilenet_v2();
+        let plan = plan3(&model);
+        let repl = replication_plan(&model, &plan);
+        let bw = 12.5e6;
+        assert_eq!(restore_time(&model, &plan, &repl, 0, bw), 0.0);
+        let t1 = restore_time(&model, &plan, &repl, 1, bw);
+        let w1 = model.weight_bytes_range(plan.stages[1].layers.0, plan.stages[1].layers.1);
+        assert!((t1 - w1 as f64 / bw).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,25 @@
+//! # Asteroid
+//!
+//! Reproduction of "Asteroid: Resource-Efficient Hybrid Pipeline
+//! Parallelism for Collaborative DNN Training on Heterogeneous Edge
+//! Devices" (MobiCom 2024).  See DESIGN.md for the architecture and
+//! EXPERIMENTS.md for the paper-vs-measured results.
+//!
+//! Three layers: Pallas kernels (python, build-time) -> JAX stage
+//! models (python, build-time, AOT-lowered to HLO text) -> this Rust
+//! coordinator (planner + simulator + real PJRT pipeline runtime).
+
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod fault;
+pub mod metrics;
+pub mod model;
+pub mod pipeline;
+pub mod planner;
+pub mod profiler;
+pub mod repro;
+pub mod runtime;
+pub mod sim;
+pub mod util;

@@ -1,0 +1,197 @@
+//! `asteroid` — the coordinator CLI (leader entrypoint).
+//!
+//! ```text
+//! asteroid plan     --model <zoo|lm|cnn> --env B --mbps 100 [--minibatch N --micro B]
+//! asteroid simulate --model <zoo|lm|cnn> --env B --mbps 100 [...]
+//! asteroid train    --model lm|cnn --env B [--steps N --lr X --emulate]
+//! asteroid replay   --model effnet --env D --fail <device-id>
+//! asteroid envs
+//! ```
+//!
+//! `plan`/`simulate` accept the paper's zoo models (efficientnet-b1,
+//! mobilenetv2, resnet50, bert-small) or the AOT-compiled `lm`/`cnn`
+//! manifest models; `train` runs the real PJRT pipeline (manifest
+//! models only).
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use asteroid::config::{ClusterSpec, TrainConfig};
+use asteroid::coordinator::Coordinator;
+use asteroid::data::{LmTask, VisionTask};
+use asteroid::model::from_manifest::Manifest;
+use asteroid::model::zoo;
+use asteroid::pipeline::{OptimizerCfg, TrainOpts};
+use asteroid::util::cli::Args;
+use asteroid::util::stats::{human_bytes, human_secs};
+
+fn cluster_from(args: &Args) -> Result<ClusterSpec> {
+    let mbps = args.f64_or("mbps", 100.0)?;
+    if let Some(path) = args.get("cluster") {
+        return ClusterSpec::load(std::path::Path::new(path));
+    }
+    ClusterSpec::env(&args.str_or("env", "B"), mbps)
+}
+
+fn coordinator_from(args: &Args) -> Result<Coordinator> {
+    let model = args.str_or("model", "mobilenetv2");
+    let cluster = cluster_from(args)?;
+    if zoo::by_name(&model).is_some() {
+        let cfg = TrainConfig::new(
+            args.usize_or("minibatch", 2048)?,
+            args.usize_or("micro", 32)?,
+        );
+        Coordinator::for_zoo_model(&model, cluster, cfg)
+    } else {
+        let dir = PathBuf::from(args.str_or("artifacts", "artifacts"));
+        let manifest = Manifest::load(&dir)?;
+        let micro = manifest.model(&model)?.microbatch;
+        let cfg = TrainConfig::new(args.usize_or("minibatch", micro * 8)?, micro);
+        Coordinator::for_artifact_model(&dir, &model, cluster, cfg)
+    }
+}
+
+fn cmd_plan(args: &Args) -> Result<()> {
+    let c = coordinator_from(args)?;
+    let out = c.plan()?;
+    println!("model     : {}", c.model.name);
+    println!("cluster   : {}", c.cluster.describe());
+    println!("mini-batch: {} (micro {}, M {})", c.cfg.minibatch, c.cfg.microbatch,
+             c.cfg.num_microbatches());
+    println!("plan      : {}", out.plan.describe(&c.cluster));
+    println!("predicted : {:.2} samples/s (round {})",
+             out.predicted_throughput, human_secs(out.predicted_latency));
+    println!("planning  : {}", human_secs(out.planning_time_s));
+    for (p, s) in out.plan.stages.iter().enumerate() {
+        let w = c.model.weight_bytes_range(s.layers.0, s.layers.1);
+        println!(
+            "  stage {p}: layers [{}, {}) on {:?} alloc {:?} K_p={} weights {}",
+            s.layers.0, s.layers.1,
+            s.devices.iter().map(|&d| c.cluster.devices[d].name.clone()).collect::<Vec<_>>(),
+            s.alloc, s.kp, human_bytes(w),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let c = coordinator_from(args)?;
+    let out = c.plan()?;
+    let sim = c.simulate(&out.plan);
+    println!("plan        : {}", out.plan.describe(&c.cluster));
+    println!("predicted   : {:.2} samples/s", out.predicted_throughput);
+    println!("simulated   : {:.2} samples/s (round {})",
+             sim.throughput, human_secs(sim.round_latency));
+    println!("network     : {} per round", human_bytes(sim.bytes_on_network));
+    for &d in &out.plan.devices() {
+        println!(
+            "  {}: busy {} bubbles {:.0}% inflight {} peak-mem {}",
+            c.cluster.devices[d].name,
+            human_secs(sim.busy[d]),
+            100.0 * sim.bubble_fraction[d],
+            sim.peak_inflight[d],
+            human_bytes(sim.peak_memory[d]),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let model = args.str_or("model", "lm");
+    let c = coordinator_from(args)?;
+    c.artifacts
+        .as_ref()
+        .context("`train` needs an AOT model (lm or cnn); run `make artifacts`")?;
+    let out = c.plan()?;
+    println!("plan: {}", out.plan.describe(&c.cluster));
+    let opts = TrainOpts {
+        steps: args.usize_or("steps", 30)?,
+        opt: OptimizerCfg::Sgd {
+            lr: args.f64_or("lr", 0.05)? as f32,
+            momentum: args.f64_or("momentum", 0.9)? as f32,
+        },
+        seed: args.u64_or("seed", 42)?,
+        emulate: if args.has_flag("emulate") { Some(c.cluster.clone()) } else { None },
+        log_every: args.usize_or("log-every", 5)?,
+        initial_params: None,
+    };
+    let manifest = Manifest::load(c.artifacts.as_ref().unwrap().0.as_path())?;
+    let mm = manifest.model(&model)?;
+    let stats = match mm.kind.as_str() {
+        "transformer" => {
+            let vocab = *mm.config.get("vocab").unwrap() as usize;
+            let seq = *mm.config.get("seq").unwrap() as usize;
+            let mut data = LmTask::new(vocab, seq, mm.microbatch, opts.seed);
+            c.train(&out.plan, &opts, &mut data)?
+        }
+        _ => {
+            let hw = *mm.config.get("hw").unwrap() as usize;
+            let ch = *mm.config.get("in_ch").unwrap() as usize;
+            let classes = *mm.config.get("classes").unwrap() as usize;
+            let mut data = VisionTask::new(hw, ch, classes, mm.microbatch, opts.seed);
+            c.train(&out.plan, &opts, &mut data)?
+        }
+    };
+    println!(
+        "trained {} rounds: loss {:.4} -> {:.4}, {:.1} samples/s",
+        stats.losses.len(),
+        stats.losses.first().unwrap(),
+        stats.losses.last().unwrap(),
+        stats.samples_per_sec,
+    );
+    Ok(())
+}
+
+fn cmd_replay(args: &Args) -> Result<()> {
+    let c = coordinator_from(args)?;
+    let plan = c.plan()?.plan;
+    let failed = args.usize_or("fail", *plan.devices().last().unwrap())?;
+    println!("plan: {}", plan.describe(&c.cluster));
+    println!("before: {:.2} samples/s", c.simulate(&plan).throughput);
+    println!("failing device {} ({})", failed, c.cluster.devices[failed].name);
+    for (name, r) in [
+        ("lightweight", c.recover_lightweight(&plan, failed)?),
+        ("heavy", c.recover_heavy(&plan, failed)?),
+    ] {
+        println!(
+            "{name:<12} detect {:.2}s restore {:.2}s replan {:.2}s migrate {:.2}s \
+             = {:.2}s -> {:.2} samples/s  [{}]",
+            r.detection_s, r.restore_s, r.replan_s, r.migration_s, r.total_s(),
+            r.new_throughput, r.new_plan.describe(&c.cluster),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_envs() -> Result<()> {
+    println!("built-in environments (paper Table 6):");
+    for env in ["A", "B", "C", "D", "A100"] {
+        let c = ClusterSpec::env(env, 100.0)?;
+        println!("  {env}: {}", c.describe());
+    }
+    println!("zoo models: efficientnet-b1, mobilenetv2, resnet50, bert-small");
+    println!("AOT models: lm, cnn (run `make artifacts`)");
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env(&["emulate"])?;
+    match args.positional.first().map(String::as_str) {
+        Some("plan") => cmd_plan(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("train") => cmd_train(&args),
+        Some("replay") => cmd_replay(&args),
+        Some("envs") => cmd_envs(),
+        other => {
+            eprintln!(
+                "asteroid: unknown command {other:?}\n\
+                 usage: asteroid <plan|simulate|train|replay|envs> [--model M --env E --mbps N ...]"
+            );
+            if other.is_none() {
+                cmd_envs()?;
+            }
+            bail!("no command")
+        }
+    }
+}

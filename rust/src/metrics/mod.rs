@@ -1,0 +1,160 @@
+//! Experiment metrics: tabular results with console + CSV output.
+//!
+//! Every repro subcommand emits a `Table`, printed in the paper's
+//! row/column layout and optionally written under `results/`.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A simple results table.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len(), "row arity");
+        self.rows.push(cells);
+    }
+
+    /// Console rendering with aligned columns.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} ==", self.title);
+        let header: Vec<String> = self
+            .columns
+            .iter()
+            .zip(&widths)
+            .map(|(c, w)| format!("{c:<w$}"))
+            .collect();
+        let _ = writeln!(out, "{}", header.join("  "));
+        let _ = writeln!(out, "{}", "-".repeat(header.join("  ").len()));
+        for row in &self.rows {
+            let line: Vec<String> = row
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{c:<w$}"))
+                .collect();
+            let _ = writeln!(out, "{}", line.join("  "));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+
+    /// CSV rendering (RFC-4180-ish quoting).
+    pub fn to_csv(&self) -> String {
+        let quote = |s: &str| {
+            if s.contains(',') || s.contains('"') || s.contains('\n') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "{}",
+            self.columns.iter().map(|c| quote(c)).collect::<Vec<_>>().join(",")
+        );
+        for row in &self.rows {
+            let _ = writeln!(
+                out,
+                "{}",
+                row.iter().map(|c| quote(c)).collect::<Vec<_>>().join(",")
+            );
+        }
+        out
+    }
+
+    pub fn write_csv(&self, dir: &Path, name: &str) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{name}.csv"));
+        std::fs::write(&path, self.to_csv())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+}
+
+/// Format helpers shared by the repro harness.
+pub fn fx(v: f64, decimals: usize) -> String {
+    format!("{v:.decimals$}")
+}
+
+pub fn speedup(ours: f64, other: f64) -> String {
+    if other <= 0.0 {
+        "inf".into()
+    } else {
+        format!("{:.1}x", ours / other)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("demo", &["model", "tput"]);
+        t.row(vec!["mobilenet".into(), "12.5".into()]);
+        t.row(vec!["bert".into(), "3.1".into()]);
+        let r = t.render();
+        assert!(r.contains("== demo =="));
+        assert!(r.contains("mobilenet"));
+        assert!(r.lines().count() >= 5);
+    }
+
+    #[test]
+    fn csv_quoting() {
+        let mut t = Table::new("q", &["a", "b"]);
+        t.row(vec!["x,y".into(), "he said \"hi\"".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"x,y\""));
+        assert!(csv.contains("\"he said \"\"hi\"\"\""));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only one".into()]);
+    }
+
+    #[test]
+    fn csv_writes_to_disk() {
+        let dir = std::env::temp_dir().join("asteroid_metrics_test");
+        let mut t = Table::new("w", &["a"]);
+        t.row(vec!["1".into()]);
+        t.write_csv(&dir, "test_table").unwrap();
+        let content = std::fs::read_to_string(dir.join("test_table.csv")).unwrap();
+        assert!(content.starts_with("a\n"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn speedup_formats() {
+        assert_eq!(speedup(10.0, 5.0), "2.0x");
+        assert_eq!(speedup(1.0, 0.0), "inf");
+        assert_eq!(fx(1.23456, 2), "1.23");
+    }
+}

@@ -1,0 +1,348 @@
+//! Artifact-manifest parsing: the contract between `python/compile/aot.py`
+//! and the Rust runtime/planner.
+//!
+//! The manifest describes every AOT-lowered HLO artifact (flattened
+//! input/output signatures) plus the logical layer sequence of each
+//! model with parameter init specs and per-layer FLOPs/bytes — enough
+//! for the planner to plan the *real* models and for the runtime to
+//! initialise and execute them without Python.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::{Layer, ModelDesc};
+use crate::util::json::Json;
+
+/// Element type of a tensor in an artifact signature.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    S32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "s32" => DType::S32,
+            other => bail!("unsupported dtype {other:?}"),
+        })
+    }
+
+    pub fn bytes(&self) -> usize {
+        4
+    }
+}
+
+/// One tensor in an artifact signature.
+#[derive(Debug, Clone)]
+pub struct TensorSig {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSig {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.elements() * self.dtype.bytes()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSig> {
+        Ok(TensorSig {
+            name: j.get("name")?.as_str()?.to_string(),
+            shape: j
+                .get("shape")?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_usize())
+                .collect::<Result<Vec<_>>>()?,
+            dtype: DType::parse(j.get("dtype")?.as_str()?)?,
+        })
+    }
+}
+
+/// One AOT artifact: HLO file + flattened input/output signatures.
+#[derive(Debug, Clone)]
+pub struct ArtifactSig {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+/// Parameter init spec for one tensor of a layer.
+#[derive(Debug, Clone)]
+pub struct ParamInit {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// "normal" | "zeros" | "ones"
+    pub init: String,
+    pub scale: f64,
+}
+
+impl ParamInit {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One logical model layer (planner + runtime view).
+#[derive(Debug, Clone)]
+pub struct ManifestLayer {
+    pub name: String,
+    pub kind: String,
+    pub params: Vec<ParamInit>,
+    pub weight_bytes: u64,
+    /// Output bytes for a full micro-batch.
+    pub out_bytes: u64,
+    /// FLOPs for a full micro-batch.
+    pub flops_fwd: f64,
+    pub flops_bwd: f64,
+    pub artifact_fwd: String,
+    pub artifact_bwd: String,
+}
+
+/// One compiled model in the manifest.
+#[derive(Debug, Clone)]
+pub struct ManifestModel {
+    pub name: String,
+    pub kind: String,
+    pub microbatch: usize,
+    pub config: BTreeMap<String, f64>,
+    pub layers: Vec<ManifestLayer>,
+    pub artifacts: BTreeMap<String, ArtifactSig>,
+}
+
+impl ManifestModel {
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSig> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("model {}: no artifact {name:?}", self.name))
+    }
+
+    /// Planner view: per-sample ModelDesc (manifest numbers are per
+    /// micro-batch; divide by B).
+    pub fn to_model_desc(&self) -> ModelDesc {
+        let b = self.microbatch as f64;
+        let layers = self
+            .layers
+            .iter()
+            .map(|l| Layer {
+                name: l.name.clone(),
+                flops_fwd: l.flops_fwd / b,
+                flops_bwd: l.flops_bwd / b,
+                weight_bytes: l.weight_bytes,
+                out_bytes: (l.out_bytes as f64 / b) as u64,
+            })
+            .collect();
+        let input_bytes = match self.kind.as_str() {
+            "transformer" => {
+                let seq = *self.config.get("seq").unwrap_or(&128.0) as u64;
+                seq * 4
+            }
+            _ => {
+                let hw = *self.config.get("hw").unwrap_or(&32.0) as u64;
+                let c = *self.config.get("in_ch").unwrap_or(&3.0) as u64;
+                hw * hw * c * 4
+            }
+        };
+        ModelDesc::new(&self.name, layers, input_bytes)
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.layers
+            .iter()
+            .flat_map(|l| l.params.iter())
+            .map(|p| p.elements())
+            .sum()
+    }
+}
+
+/// The parsed artifact manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub backend: String,
+    pub models: BTreeMap<String, ManifestModel>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let j = Json::parse_file(&dir.join("manifest.json"))?;
+        let backend = j
+            .opt("backend")?
+            .map(|v| v.as_str().map(str::to_string))
+            .transpose()?
+            .unwrap_or_else(|| "pallas".into());
+        let mut models = BTreeMap::new();
+        for (name, mj) in j.get("models")?.as_obj()? {
+            models.insert(
+                name.clone(),
+                parse_model(name, mj, dir)
+                    .with_context(|| format!("manifest model {name:?}"))?,
+            );
+        }
+        Ok(Manifest { root: dir.to_path_buf(), backend, models })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ManifestModel> {
+        self.models
+            .get(name)
+            .with_context(|| format!("manifest has no model {name:?}"))
+    }
+}
+
+fn parse_model(name: &str, j: &Json, root: &Path) -> Result<ManifestModel> {
+    let mut config = BTreeMap::new();
+    for (k, v) in j.get("config")?.as_obj()? {
+        if let Ok(f) = v.as_f64() {
+            config.insert(k.clone(), f);
+        }
+    }
+    let layers = j
+        .get("layers")?
+        .as_arr()?
+        .iter()
+        .map(parse_layer)
+        .collect::<Result<Vec<_>>>()?;
+    let mut artifacts = BTreeMap::new();
+    for (aname, aj) in j.get("artifacts")?.as_obj()? {
+        let inputs = aj
+            .get("inputs")?
+            .as_arr()?
+            .iter()
+            .map(TensorSig::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let outputs = aj
+            .get("outputs")?
+            .as_arr()?
+            .iter()
+            .map(TensorSig::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        artifacts.insert(
+            aname.clone(),
+            ArtifactSig {
+                name: aname.clone(),
+                file: root.join(aj.get("file")?.as_str()?),
+                inputs,
+                outputs,
+            },
+        );
+    }
+    let model = ManifestModel {
+        name: name.to_string(),
+        kind: j.get("kind")?.as_str()?.to_string(),
+        microbatch: j.get("microbatch")?.as_usize()?,
+        config,
+        layers,
+        artifacts,
+    };
+    // Integrity: every layer's artifacts must exist.
+    for l in &model.layers {
+        model.artifact(&l.artifact_fwd)?;
+        model.artifact(&l.artifact_bwd)?;
+    }
+    Ok(model)
+}
+
+fn parse_layer(j: &Json) -> Result<ManifestLayer> {
+    let params = j
+        .get("params")?
+        .as_arr()?
+        .iter()
+        .map(|p| {
+            Ok(ParamInit {
+                name: p.get("name")?.as_str()?.to_string(),
+                shape: p
+                    .get("shape")?
+                    .as_arr()?
+                    .iter()
+                    .map(|v| v.as_usize())
+                    .collect::<Result<Vec<_>>>()?,
+                init: p.get("init")?.as_str()?.to_string(),
+                scale: p.get("scale")?.as_f64()?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(ManifestLayer {
+        name: j.get("name")?.as_str()?.to_string(),
+        kind: j.get("kind")?.as_str()?.to_string(),
+        params,
+        weight_bytes: j.get("weight_bytes")?.as_u64()?,
+        out_bytes: j.get("out_bytes")?.as_u64()?,
+        flops_fwd: j.get("flops_fwd")?.as_f64()?,
+        flops_bwd: j.get("flops_bwd")?.as_f64()?,
+        artifact_fwd: j.get("artifact_fwd")?.as_str()?.to_string(),
+        artifact_bwd: j.get("artifact_bwd")?.as_str()?.to_string(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        // Tests run from the crate root; artifacts are built by
+        // `make artifacts` before `cargo test` (see Makefile).
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_built_manifest() {
+        let m = Manifest::load(&artifacts_dir()).expect("run `make artifacts` first");
+        let lm = m.model("lm").unwrap();
+        assert_eq!(lm.kind, "transformer");
+        assert!(lm.layers.len() >= 3);
+        assert_eq!(lm.layers[0].kind, "embed");
+        assert_eq!(lm.layers.last().unwrap().kind, "head");
+        assert!(lm.total_params() > 100_000);
+
+        let cnn = m.model("cnn").unwrap();
+        assert_eq!(cnn.kind, "cnn");
+        assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn artifact_signatures_consistent() {
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let lm = m.model("lm").unwrap();
+        let bf = lm.artifact("block_fwd").unwrap();
+        // block_fwd: 12 params + x; one output.
+        assert_eq!(bf.inputs.len(), 13);
+        assert_eq!(bf.outputs.len(), 1);
+        // block_bwd mirrors: 12 params + x + grad; 12 grads + gx out.
+        let bb = lm.artifact("block_bwd").unwrap();
+        assert_eq!(bb.inputs.len(), 14);
+        assert_eq!(bb.outputs.len(), 13);
+        // files exist on disk
+        assert!(bf.file.exists(), "{:?}", bf.file);
+    }
+
+    #[test]
+    fn model_desc_is_per_sample() {
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let lm = m.model("lm").unwrap();
+        let desc = lm.to_model_desc();
+        let b = lm.microbatch as f64;
+        assert_eq!(desc.num_layers(), lm.layers.len());
+        let manifest_flops: f64 = lm.layers.iter().map(|l| l.flops_fwd + l.flops_bwd).sum();
+        assert!((desc.total_flops() - manifest_flops / b).abs() / manifest_flops < 0.01);
+    }
+
+    #[test]
+    fn tensor_sig_sizes() {
+        let t = TensorSig {
+            name: "x".into(),
+            shape: vec![8, 64, 128],
+            dtype: DType::F32,
+        };
+        assert_eq!(t.elements(), 8 * 64 * 128);
+        assert_eq!(t.byte_len(), 8 * 64 * 128 * 4);
+    }
+}

@@ -1,0 +1,142 @@
+//! DNN models as layer sequences (the planner's view).
+//!
+//! The paper treats a DNN as a DAG topologically sorted into a layer
+//! sequence; each layer l carries its activation size a_l, weight size
+//! w_l, and per-sample FP/BP compute (profiled on real hardware; here
+//! derived from the layer's FLOPs and the device execution model).
+//!
+//! Two sources of models:
+//!   * `zoo` — layer tables for the paper's evaluation models
+//!     (EfficientNet-B1, MobileNetV2, ResNet50, Bert-small), built
+//!     programmatically from the architectures.
+//!   * `from_manifest` — the real AOT-compiled models (`lm`, `cnn`)
+//!     loaded from artifacts/manifest.json, so the planner can plan the
+//!     models the Rust pipeline actually executes.
+
+pub mod from_manifest;
+pub mod zoo;
+
+/// One profiled model layer (module granularity).
+#[derive(Debug, Clone)]
+pub struct Layer {
+    pub name: String,
+    /// FP floating-point ops for a single sample.
+    pub flops_fwd: f64,
+    /// BP floating-point ops for a single sample (~2x FP for dense nets).
+    pub flops_bwd: f64,
+    /// Weight + bias bytes w_l (f32).
+    pub weight_bytes: u64,
+    /// Output activation bytes a_l for a single sample (f32).  This is
+    /// both the inter-stage transfer unit and the per-micro-batch
+    /// activation memory term of Eq. (3).
+    pub out_bytes: u64,
+}
+
+impl Layer {
+    pub fn new(name: &str, flops_fwd: f64, weight_bytes: u64, out_bytes: u64) -> Layer {
+        Layer {
+            name: name.to_string(),
+            flops_fwd,
+            flops_bwd: 2.0 * flops_fwd,
+            weight_bytes,
+            out_bytes,
+        }
+    }
+}
+
+/// A DNN model: ordered layers plus bookkeeping prefix sums.
+#[derive(Debug, Clone)]
+pub struct ModelDesc {
+    pub name: String,
+    pub layers: Vec<Layer>,
+    /// Per-sample input bytes fed to layer 0 (e.g. image bytes).
+    pub input_bytes: u64,
+}
+
+impl ModelDesc {
+    pub fn new(name: &str, layers: Vec<Layer>, input_bytes: u64) -> ModelDesc {
+        assert!(!layers.is_empty());
+        ModelDesc { name: name.to_string(), layers, input_bytes }
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Total parameter bytes P (paper Eq. 1/2).
+    pub fn total_weight_bytes(&self) -> u64 {
+        self.layers.iter().map(|l| l.weight_bytes).sum()
+    }
+
+    /// Total per-sample FP+BP FLOPs.
+    pub fn total_flops(&self) -> f64 {
+        self.layers.iter().map(|l| l.flops_fwd + l.flops_bwd).sum()
+    }
+
+    /// Weight bytes of a contiguous layer range [i, j).
+    pub fn weight_bytes_range(&self, i: usize, j: usize) -> u64 {
+        self.layers[i..j].iter().map(|l| l.weight_bytes).sum()
+    }
+
+    /// FP+BP FLOPs (per sample) of a contiguous layer range [i, j).
+    pub fn flops_range(&self, i: usize, j: usize) -> f64 {
+        self.layers[i..j]
+            .iter()
+            .map(|l| l.flops_fwd + l.flops_bwd)
+            .sum()
+    }
+
+    /// Activation bytes crossing the boundary after layer index `j-1`,
+    /// per sample; i.e. the inter-stage tensor when cutting at j.
+    pub fn boundary_bytes(&self, j: usize) -> u64 {
+        assert!(j >= 1 && j <= self.layers.len());
+        self.layers[j - 1].out_bytes
+    }
+
+    /// Sum of activation bytes produced inside [i, j) per sample —
+    /// the ACT term of Eq. (3) for one micro-batch sample.
+    pub fn act_bytes_range(&self, i: usize, j: usize) -> u64 {
+        self.layers[i..j].iter().map(|l| l.out_bytes).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> ModelDesc {
+        ModelDesc::new(
+            "toy",
+            vec![
+                Layer::new("a", 100.0, 10, 1000),
+                Layer::new("b", 200.0, 20, 500),
+                Layer::new("c", 300.0, 30, 250),
+            ],
+            4096,
+        )
+    }
+
+    #[test]
+    fn totals() {
+        let m = toy();
+        assert_eq!(m.total_weight_bytes(), 60);
+        assert_eq!(m.total_flops(), (100.0 + 200.0 + 300.0) * 3.0);
+    }
+
+    #[test]
+    fn ranges() {
+        let m = toy();
+        assert_eq!(m.weight_bytes_range(0, 2), 30);
+        assert_eq!(m.weight_bytes_range(1, 3), 50);
+        assert_eq!(m.flops_range(1, 2), 600.0);
+        assert_eq!(m.boundary_bytes(1), 1000);
+        assert_eq!(m.boundary_bytes(3), 250);
+        assert_eq!(m.act_bytes_range(0, 3), 1750);
+    }
+
+    #[test]
+    fn bwd_defaults_to_twice_fwd() {
+        let l = Layer::new("x", 50.0, 0, 0);
+        assert_eq!(l.flops_bwd, 100.0);
+    }
+}

@@ -1,0 +1,172 @@
+//! Bandwidth-shaped channels between pipeline workers.
+//!
+//! In `real` mode messages deliver immediately (host memory).  In
+//! `emulate` mode each directed worker pair behaves like a serialised
+//! D2D link with finite bandwidth and latency — the same model as the
+//! simulator's `LinkSet`, but applied to live traffic so the real
+//! pipeline reproduces edge-network behaviour on a single host.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Network emulation parameters for one directed link.
+#[derive(Debug, Clone)]
+pub struct LinkModel {
+    pub bytes_per_sec: f64,
+    pub latency_s: f64,
+}
+
+/// Shared serialisation state of one directed link.
+pub struct Shaper {
+    model: LinkModel,
+    /// Seconds-from-epoch at which the link frees up.
+    free_at: Mutex<f64>,
+    epoch: Instant,
+}
+
+impl Shaper {
+    pub fn new(model: LinkModel, epoch: Instant) -> Arc<Shaper> {
+        Arc::new(Shaper { model, free_at: Mutex::new(0.0), epoch })
+    }
+
+    /// Register a transfer of `bytes` now; returns the delivery instant.
+    pub fn send(&self, bytes: usize) -> Instant {
+        let now = self.epoch.elapsed().as_secs_f64();
+        let mut free = self.free_at.lock().unwrap();
+        let start = free.max(now);
+        let end = start + bytes as f64 / self.model.bytes_per_sec;
+        *free = end;
+        self.epoch + Duration::from_secs_f64(end + self.model.latency_s)
+    }
+}
+
+/// Sending half: optionally shaped.
+pub struct Tx<M> {
+    inner: mpsc::Sender<(Instant, M)>,
+    shaper: Option<Arc<Shaper>>,
+}
+
+impl<M> Clone for Tx<M> {
+    fn clone(&self) -> Self {
+        Tx { inner: self.inner.clone(), shaper: self.shaper.clone() }
+    }
+}
+
+impl<M> Tx<M> {
+    /// Send a message of `bytes` logical size.
+    pub fn send(&self, bytes: usize, msg: M) -> anyhow::Result<()> {
+        let at = match &self.shaper {
+            Some(s) => s.send(bytes),
+            None => Instant::now(),
+        };
+        self.inner
+            .send((at, msg))
+            .map_err(|_| anyhow::anyhow!("channel closed"))
+    }
+
+    /// Attach a shaper (per directed link) to this sender handle.
+    pub fn shaped(&self, shaper: Arc<Shaper>) -> Tx<M> {
+        Tx { inner: self.inner.clone(), shaper: Some(shaper) }
+    }
+}
+
+/// Receiving half: honours per-message delivery instants.
+pub struct Rx<M> {
+    inner: mpsc::Receiver<(Instant, M)>,
+}
+
+impl<M> Rx<M> {
+    /// Blocking receive; sleeps until the message's delivery time.
+    pub fn recv(&self) -> anyhow::Result<M> {
+        let (at, msg) = self
+            .inner
+            .recv()
+            .map_err(|_| anyhow::anyhow!("channel closed"))?;
+        let now = Instant::now();
+        if at > now {
+            std::thread::sleep(at - now);
+        }
+        Ok(msg)
+    }
+
+    /// Non-blocking receive of already-delivered messages.
+    pub fn try_recv(&self) -> Option<M> {
+        match self.inner.try_recv() {
+            Ok((at, msg)) => {
+                let now = Instant::now();
+                if at > now {
+                    std::thread::sleep(at - now);
+                }
+                Some(msg)
+            }
+            Err(_) => None,
+        }
+    }
+}
+
+/// Create an unshaped channel pair.
+pub fn channel<M>() -> (Tx<M>, Rx<M>) {
+    let (tx, rx) = mpsc::channel();
+    (Tx { inner: tx, shaper: None }, Rx { inner: rx })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unshaped_delivers_immediately() {
+        let (tx, rx) = channel();
+        tx.send(1_000_000, 42u32).unwrap();
+        assert_eq!(rx.recv().unwrap(), 42);
+    }
+
+    #[test]
+    fn shaped_delays_by_bandwidth() {
+        let epoch = Instant::now();
+        let shaper = Shaper::new(
+            LinkModel { bytes_per_sec: 1e6, latency_s: 0.0 },
+            epoch,
+        );
+        let (tx, rx) = channel();
+        let tx = tx.shaped(shaper);
+        let t0 = Instant::now();
+        tx.send(50_000, ()).unwrap(); // 50 ms at 1 MB/s
+        rx.recv().unwrap();
+        let dt = t0.elapsed().as_secs_f64();
+        assert!(dt >= 0.045, "delivered too fast: {dt}");
+        assert!(dt < 0.5, "delivered too slow: {dt}");
+    }
+
+    #[test]
+    fn shaped_serialises_consecutive_messages() {
+        let epoch = Instant::now();
+        let shaper = Shaper::new(
+            LinkModel { bytes_per_sec: 1e6, latency_s: 0.0 },
+            epoch,
+        );
+        let (tx, rx) = channel();
+        let tx = tx.shaped(shaper);
+        let t0 = Instant::now();
+        tx.send(30_000, 1u8).unwrap();
+        tx.send(30_000, 2u8).unwrap(); // queues behind the first
+        assert_eq!(rx.recv().unwrap(), 1);
+        assert_eq!(rx.recv().unwrap(), 2);
+        let dt = t0.elapsed().as_secs_f64();
+        assert!(dt >= 0.055, "second message should queue: {dt}");
+    }
+
+    #[test]
+    fn try_recv_empty() {
+        let (_tx, rx) = channel::<u8>();
+        assert_eq!(rx.try_recv(), None);
+    }
+
+    #[test]
+    fn closed_channel_errors() {
+        let (tx, rx) = channel::<u8>();
+        drop(rx);
+        assert!(tx.send(1, 0).is_err());
+    }
+}

@@ -1,0 +1,14 @@
+//! Real pipeline execution engine (the paper's Execution Phase, §3.2 +
+//! Fig. 11): worker threads with per-thread PJRT runtimes, bandwidth-
+//! shaped channels, 1F1B micro-batch scheduling, gradient accumulation,
+//! intra-stage AllReduce and in-Rust optimizers.
+
+pub mod channel;
+pub mod collective;
+pub mod optimizer;
+pub mod train;
+pub mod worker;
+
+pub use optimizer::{Optimizer, OptimizerCfg};
+pub use train::{train, TrainOpts, TrainStats};
+pub use worker::{Msg, Report, WorkerSpec};

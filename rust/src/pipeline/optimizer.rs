@@ -1,0 +1,152 @@
+//! Optimizers over host-side f32 parameter streams.
+//!
+//! Kept in Rust (not AOT HLO) deliberately: the coordinator owns model
+//! state, so updates, replication, and restore are all plain buffer
+//! operations, and the artifact set stays O(1) in model depth.
+
+/// Optimizer selection + hyper-parameters.
+#[derive(Debug, Clone, Copy)]
+pub enum OptimizerCfg {
+    Sgd { lr: f32, momentum: f32 },
+    Adam { lr: f32, beta1: f32, beta2: f32, eps: f32 },
+}
+
+impl OptimizerCfg {
+    pub fn sgd(lr: f32) -> OptimizerCfg {
+        OptimizerCfg::Sgd { lr, momentum: 0.9 }
+    }
+
+    pub fn adam(lr: f32) -> OptimizerCfg {
+        OptimizerCfg::Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8 }
+    }
+
+    /// Optimizer state slots per parameter (Eq. 3's Mem^(OPT) factor).
+    pub fn state_slots(&self) -> usize {
+        match self {
+            OptimizerCfg::Sgd { .. } => 1,
+            OptimizerCfg::Adam { .. } => 2,
+        }
+    }
+}
+
+/// Per-tensor optimizer state + update rule.
+#[derive(Debug, Clone)]
+pub struct Optimizer {
+    cfg: OptimizerCfg,
+    /// first moment / momentum buffers, one per registered tensor
+    m: Vec<Vec<f32>>,
+    /// second moment (Adam only)
+    v: Vec<Vec<f32>>,
+    step: u64,
+}
+
+impl Optimizer {
+    /// `sizes`: element counts of the tensors this optimizer will step.
+    pub fn new(cfg: OptimizerCfg, sizes: &[usize]) -> Optimizer {
+        let m = sizes.iter().map(|&n| vec![0.0; n]).collect();
+        let v = match cfg {
+            OptimizerCfg::Adam { .. } => sizes.iter().map(|&n| vec![0.0; n]).collect(),
+            _ => Vec::new(),
+        };
+        Optimizer { cfg, m, v, step: 0 }
+    }
+
+    /// Apply one update step.  `params[i]` and `grads[i]` must match the
+    /// registered sizes.
+    pub fn step(&mut self, params: &mut [&mut [f32]], grads: &[&[f32]]) {
+        assert_eq!(params.len(), self.m.len(), "optimizer tensor arity");
+        assert_eq!(grads.len(), self.m.len());
+        self.step += 1;
+        match self.cfg {
+            OptimizerCfg::Sgd { lr, momentum } => {
+                for ((p, g), mbuf) in params.iter_mut().zip(grads).zip(&mut self.m) {
+                    assert_eq!(p.len(), mbuf.len());
+                    for i in 0..p.len() {
+                        mbuf[i] = momentum * mbuf[i] + g[i];
+                        p[i] -= lr * mbuf[i];
+                    }
+                }
+            }
+            OptimizerCfg::Adam { lr, beta1, beta2, eps } => {
+                let t = self.step as f32;
+                let bc1 = 1.0 - beta1.powf(t);
+                let bc2 = 1.0 - beta2.powf(t);
+                for (((p, g), mbuf), vbuf) in
+                    params.iter_mut().zip(grads).zip(&mut self.m).zip(&mut self.v)
+                {
+                    for i in 0..p.len() {
+                        mbuf[i] = beta1 * mbuf[i] + (1.0 - beta1) * g[i];
+                        vbuf[i] = beta2 * vbuf[i] + (1.0 - beta2) * g[i] * g[i];
+                        let mhat = mbuf[i] / bc1;
+                        let vhat = vbuf[i] / bc2;
+                        p[i] -= lr * mhat / (vhat.sqrt() + eps);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Minimise f(x) = (x - 3)^2 and check convergence.
+    fn minimise(cfg: OptimizerCfg, steps: usize) -> f32 {
+        let mut x = vec![0.0f32];
+        let mut opt = Optimizer::new(cfg, &[1]);
+        for _ in 0..steps {
+            let g = vec![2.0 * (x[0] - 3.0)];
+            opt.step(&mut [&mut x], &[&g]);
+        }
+        x[0]
+    }
+
+    #[test]
+    fn sgd_converges_on_quadratic() {
+        let x = minimise(OptimizerCfg::Sgd { lr: 0.05, momentum: 0.9 }, 200);
+        assert!((x - 3.0).abs() < 1e-3, "x = {x}");
+    }
+
+    #[test]
+    fn adam_converges_on_quadratic() {
+        let x = minimise(OptimizerCfg::adam(0.1), 500);
+        assert!((x - 3.0).abs() < 1e-2, "x = {x}");
+    }
+
+    #[test]
+    fn momentum_accelerates_early_progress() {
+        // Compare before any overshoot can occur (3 small steps).
+        let plain = minimise(OptimizerCfg::Sgd { lr: 0.05, momentum: 0.0 }, 3);
+        let mom = minimise(OptimizerCfg::Sgd { lr: 0.05, momentum: 0.9 }, 3);
+        assert!(
+            (mom - 3.0).abs() < (plain - 3.0).abs(),
+            "momentum {mom} vs plain {plain}"
+        );
+    }
+
+    #[test]
+    fn state_slots() {
+        assert_eq!(OptimizerCfg::sgd(0.1).state_slots(), 1);
+        assert_eq!(OptimizerCfg::adam(0.1).state_slots(), 2);
+    }
+
+    #[test]
+    fn multi_tensor_step() {
+        let mut a = vec![1.0f32; 3];
+        let mut b = vec![2.0f32; 2];
+        let ga = vec![1.0f32; 3];
+        let gb = vec![1.0f32; 2];
+        let mut opt = Optimizer::new(OptimizerCfg::Sgd { lr: 0.1, momentum: 0.0 }, &[3, 2]);
+        opt.step(&mut [&mut a, &mut b], &[&ga, &gb]);
+        assert!(a.iter().all(|&v| (v - 0.9).abs() < 1e-6));
+        assert!(b.iter().all(|&v| (v - 1.9).abs() < 1e-6));
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let mut opt = Optimizer::new(OptimizerCfg::sgd(0.1), &[1]);
+        opt.step(&mut [], &[]);
+    }
+}

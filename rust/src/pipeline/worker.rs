@@ -1,0 +1,430 @@
+//! Asteroid Worker (paper Fig. 11): one per (stage, replica slot).
+//!
+//! Each worker thread owns its own PJRT runtime (XLA handles are not
+//! `Send`), its stage's parameters, optimizer state, and an in-memory
+//! task pool.  It asynchronously receives activations/gradients from
+//! adjacent stages, schedules micro-batch FP/BP in 1F1B order with the
+//! stage's K_p warm-up window, accumulates gradients across the
+//! HPP-Round, AllReduces within its replica group, and applies the
+//! optimizer — then reports to the coordinator and waits for the next
+//! round.
+//!
+//! Intra-stage data parallelism assigns whole micro-batches round-robin
+//! across the group (micro m -> slot m mod g): batch-level DP with
+//! identical gradient math to sample sharding (gradients average over
+//! the same mini-batch), chosen because the AOT stage executables are
+//! shape-specialised to the planned micro-batch size.  DESIGN.md
+//! documents this substitution.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::from_manifest::ManifestModel;
+use crate::pipeline::channel::{Rx, Tx};
+use crate::pipeline::collective::GroupComm;
+use crate::pipeline::optimizer::{Optimizer, OptimizerCfg};
+use crate::runtime::{init_layer_params, LayerParams, Runtime, Tensor};
+use crate::util::rng::Rng;
+
+/// Messages between workers / coordinator.
+#[derive(Debug)]
+pub enum Msg {
+    /// Stage input for a micro-batch (activations, or raw data for
+    /// stage 0).
+    Act { micro: usize, t: Tensor },
+    /// Gradient w.r.t. this stage's output for a micro-batch.
+    Grad { micro: usize, t: Tensor },
+    /// Labels/targets for the head stage.
+    Targets { micro: usize, t: Tensor },
+    /// Begin the next HPP-Round.
+    NextRound,
+    /// Shut down cleanly.
+    Stop,
+}
+
+/// Worker -> coordinator reports.
+#[derive(Debug)]
+pub enum Report {
+    RoundDone {
+        stage: usize,
+        slot: usize,
+        /// Sum of per-micro losses (head stage only; 0 elsewhere).
+        loss_sum: f64,
+        micros: usize,
+    },
+    /// Final parameter values, sent on clean shutdown (slot 0 of each
+    /// stage only): (global layer index, tensors).  This is the live
+    /// checkpoint stream the fault-tolerance machinery consumes.
+    FinalParams { layer: usize, values: Vec<Tensor> },
+    Fatal { stage: usize, slot: usize, error: String },
+}
+
+/// Static description of one worker.
+#[derive(Debug, Clone)]
+pub struct WorkerSpec {
+    pub stage: usize,
+    /// Layer range [lo, hi) into the manifest layer list.
+    pub layers: (usize, usize),
+    pub slot: usize,
+    pub group: usize,
+    pub kp: usize,
+    pub num_micro: usize,
+    pub is_first: bool,
+    pub is_last: bool,
+    pub seed: u64,
+    pub opt: OptimizerCfg,
+    /// Warm-start parameters by global layer index (fault-tolerance
+    /// restore / checkpoint resume); layers not present use fresh init.
+    pub initial_params: Option<Arc<std::collections::BTreeMap<usize, Vec<Tensor>>>>,
+}
+
+/// Run the worker loop (call from a dedicated thread).  `next`/`prev`
+/// are per-destination (possibly bandwidth-shaped) send handles.
+pub fn run_worker(
+    spec: WorkerSpec,
+    model: ManifestModel,
+    rx: Rx<Msg>,
+    next: Vec<Tx<Msg>>,
+    prev: Vec<Tx<Msg>>,
+    report: std::sync::mpsc::Sender<Report>,
+    group: Arc<GroupComm>,
+) {
+    let outcome = worker_loop(&spec, &model, &rx, &next, &prev, &report, &group);
+    if let Err(e) = outcome {
+        let _ = report.send(Report::Fatal {
+            stage: spec.stage,
+            slot: spec.slot,
+            error: format!("{e:#}"),
+        });
+    }
+}
+
+fn worker_loop(
+    spec: &WorkerSpec,
+    model: &ManifestModel,
+    rx: &Rx<Msg>,
+    next: &[Tx<Msg>],
+    prev: &[Tx<Msg>],
+    report: &std::sync::mpsc::Sender<Report>,
+    group: &Arc<GroupComm>,
+) -> Result<()> {
+    let (lo, hi) = spec.layers;
+    let layers = &model.layers[lo..hi];
+
+    // Compile exactly the artifacts this stage needs.
+    let mut names: Vec<&str> = Vec::new();
+    for l in layers {
+        for n in [l.artifact_fwd.as_str(), l.artifact_bwd.as_str()] {
+            if !names.contains(&n) {
+                names.push(n);
+            }
+        }
+    }
+    let rt = Runtime::load(model, &names)
+        .with_context(|| format!("stage {} slot {} runtime", spec.stage, spec.slot))?;
+
+    // Layer-seeded init: replicas of the same layer get identical
+    // parameters (required for DP correctness).  Warm-start values (a
+    // restore after a device failure, or a checkpoint resume) override
+    // the fresh init per layer.
+    let mut params: Vec<LayerParams> = layers
+        .iter()
+        .enumerate()
+        .map(|(k, l)| {
+            let mut rng = Rng::new(spec.seed ^ ((lo + k) as u64).wrapping_mul(0x9E37_79B9));
+            let mut p = init_layer_params(l, &mut rng);
+            if let Some(init) = spec.initial_params.as_ref().and_then(|m| m.get(&(lo + k))) {
+                assert_eq!(init.len(), p.values.len(), "warm-start arity for {}", l.name);
+                p.values = init.clone();
+            }
+            p
+        })
+        .collect();
+    let sizes: Vec<usize> = params
+        .iter()
+        .flat_map(|p| p.values.iter().map(|t| t.elements()))
+        .collect();
+    let mut opt = Optimizer::new(spec.opt, &sizes);
+
+    // Parameter literals are cached across the round and rebuilt only
+    // after the optimizer step: converting ~MBs of weights per layer on
+    // EVERY micro-batch execution was the engine's top hot-path cost
+    // (EXPERIMENTS.md §Perf).
+    let build_lits = |params: &[LayerParams]| -> Result<Vec<Vec<xla::Literal>>> {
+        params
+            .iter()
+            .map(|p| p.values.iter().map(|t| t.to_literal()).collect())
+            .collect()
+    };
+    let mut lits = build_lits(&params)?;
+
+    loop {
+        let loss_sum = run_round(spec, layers, &rt, &mut params, &lits, rx, next, prev)?;
+
+        // ---- gradient AllReduce (sum across replicas) + scale by 1/M.
+        let flat: Vec<f32> = params
+            .iter()
+            .flat_map(|p| p.grads.iter().flat_map(|g| g.as_f32().unwrap().iter().copied()))
+            .collect();
+        let reduced = group.allreduce_sum(&flat);
+        let scale = 1.0 / spec.num_micro as f32;
+
+        // ---- optimizer step over (params, scaled grads).
+        {
+            let mut grads_scaled = reduced;
+            for v in &mut grads_scaled {
+                *v *= scale;
+            }
+            let mut p_refs: Vec<&mut [f32]> = Vec::new();
+            for p in &mut params {
+                for t in &mut p.values {
+                    p_refs.push(t.as_f32_mut()?);
+                }
+            }
+            let mut g_refs: Vec<&[f32]> = Vec::new();
+            let mut off = 0;
+            for &n in &sizes {
+                g_refs.push(&grads_scaled[off..off + n]);
+                off += n;
+            }
+            opt.step(&mut p_refs, &g_refs);
+        }
+        for p in &mut params {
+            p.zero_grads();
+        }
+        lits = build_lits(&params)?;
+
+        let assigned = (0..spec.num_micro).filter(|m| m % spec.group == spec.slot).count();
+        report
+            .send(Report::RoundDone {
+                stage: spec.stage,
+                slot: spec.slot,
+                loss_sum,
+                micros: assigned,
+            })
+            .ok();
+
+        // Wait for the coordinator's round barrier.
+        loop {
+            match rx.recv()? {
+                Msg::NextRound => break,
+                Msg::Stop => {
+                    // Clean shutdown: slot 0 streams its stage weights
+                    // back (the coordinator-side checkpoint).
+                    if spec.slot == 0 {
+                        for (k, p) in params.iter().enumerate() {
+                            report
+                                .send(Report::FinalParams {
+                                    layer: lo + k,
+                                    values: p.values.clone(),
+                                })
+                                .ok();
+                        }
+                    }
+                    return Ok(());
+                }
+                other => bail!("unexpected message between rounds: {other:?}"),
+            }
+        }
+    }
+}
+
+/// Process one HPP-Round; returns the loss sum (head stage only).
+#[allow(clippy::too_many_arguments)]
+fn run_round(
+    spec: &WorkerSpec,
+    layers: &[crate::model::from_manifest::ManifestLayer],
+    rt: &Runtime,
+    params: &mut [LayerParams],
+    lits: &[Vec<xla::Literal>],
+    rx: &Rx<Msg>,
+    next: &[Tx<Msg>],
+    prev: &[Tx<Msg>],
+) -> Result<f64> {
+    let assigned: Vec<usize> =
+        (0..spec.num_micro).filter(|m| m % spec.group == spec.slot).collect();
+    let a_count = assigned.len();
+
+    let mut acts: BTreeMap<usize, Tensor> = BTreeMap::new();
+    let mut grads_in: BTreeMap<usize, Tensor> = BTreeMap::new();
+    let mut targets: BTreeMap<usize, Tensor> = BTreeMap::new();
+    // Per-micro stash of layer inputs (for the rematerialising BP).
+    let mut stash: BTreeMap<usize, Vec<Tensor>> = BTreeMap::new();
+    let mut fp_issued = 0usize;
+    let mut bp_done = 0usize;
+    let mut loss_sum = 0.0f64;
+
+    let head_is_here = spec.is_last;
+
+    while bp_done < a_count {
+        // ---- 1F1B scheduling: BP first, then K_p-gated FP.
+        let bp_candidate = grads_in
+            .keys()
+            .next()
+            .copied()
+            .filter(|m| stash.contains_key(m));
+        if let Some(m) = bp_candidate {
+            let g = grads_in.remove(&m).unwrap();
+            let inputs = stash.remove(&m).unwrap();
+            let gx = backward_through(layers, rt, params, lits, &inputs, g)?;
+            if !spec.is_first {
+                let t = gx.context("non-first stage must produce an input gradient")?;
+                let bytes = t.byte_len();
+                prev[m % prev.len()].send(bytes, Msg::Grad { micro: m, t })?;
+            }
+            bp_done += 1;
+            continue;
+        }
+
+        let inflight = fp_issued - bp_done;
+        let fp_candidate = acts
+            .keys()
+            .next()
+            .copied()
+            .filter(|_| fp_issued < a_count && inflight < spec.kp)
+            .filter(|m| !head_is_here || targets.contains_key(m));
+        if let Some(m) = fp_candidate {
+            let x = acts.remove(&m).unwrap();
+            if head_is_here {
+                // FP + fused head BP + local BP through stashed layers.
+                let tgt = targets.remove(&m).unwrap();
+                let loss_gx =
+                    forward_backward_with_head(layers, rt, params, lits, x, &tgt)?;
+                loss_sum += loss_gx.0 as f64;
+                if !spec.is_first {
+                    let t = loss_gx.1.context("head stage with prev must emit g_x")?;
+                    let bytes = t.byte_len();
+                    prev[m % prev.len()].send(bytes, Msg::Grad { micro: m, t })?;
+                }
+                fp_issued += 1;
+                bp_done += 1;
+            } else {
+                let (out, inputs) = forward_through(layers, rt, lits, x)?;
+                stash.insert(m, inputs);
+                let bytes = out.byte_len();
+                next[m % next.len()].send(bytes, Msg::Act { micro: m, t: out })?;
+                fp_issued += 1;
+            }
+            continue;
+        }
+
+        // ---- nothing runnable: block for the next message.
+        match rx.recv()? {
+            Msg::Act { micro, t } => {
+                acts.insert(micro, t);
+            }
+            Msg::Grad { micro, t } => {
+                grads_in.insert(micro, t);
+            }
+            Msg::Targets { micro, t } => {
+                targets.insert(micro, t);
+            }
+            Msg::Stop => bail!("stopped mid-round"),
+            Msg::NextRound => bail!("unexpected NextRound mid-round"),
+        }
+    }
+    Ok(loss_sum)
+}
+
+/// FP through all non-head layers; returns (stage output, stashed
+/// per-layer inputs).
+fn forward_through(
+    layers: &[crate::model::from_manifest::ManifestLayer],
+    rt: &Runtime,
+    lits: &[Vec<xla::Literal>],
+    x: Tensor,
+) -> Result<(Tensor, Vec<Tensor>)> {
+    let mut cur = x;
+    let mut inputs = Vec::with_capacity(layers.len());
+    for (k, l) in layers.iter().enumerate() {
+        if l.kind == "head" {
+            bail!("head layer in forward_through");
+        }
+        let cur_lit = cur.to_literal()?;
+        let mut refs: Vec<&xla::Literal> = lits[k].iter().collect();
+        refs.push(&cur_lit);
+        let mut out = rt
+            .execute_literals(&l.artifact_fwd, &refs)
+            .with_context(|| format!("fwd {}", l.name))?;
+        inputs.push(cur);
+        cur = out.remove(0);
+    }
+    Ok((cur, inputs))
+}
+
+/// FP through non-head layers, fused head FP+BP, then BP back through
+/// this stage's stashed layers.  Returns (loss, gradient for the
+/// previous stage if any).
+fn forward_backward_with_head(
+    layers: &[crate::model::from_manifest::ManifestLayer],
+    rt: &Runtime,
+    params: &mut [LayerParams],
+    lits: &[Vec<xla::Literal>],
+    x: Tensor,
+    targets: &Tensor,
+) -> Result<(f32, Option<Tensor>)> {
+    let n = layers.len();
+    let head = &layers[n - 1];
+    if head.kind != "head" {
+        bail!("last layer of head stage must be kind=head, got {}", head.kind);
+    }
+    let (cur, inputs) = forward_through(&layers[..n - 1], rt, &lits[..n - 1], x)?;
+
+    // head_fwdbwd: (params..., x, targets) -> (loss, g_params..., g_x)
+    let cur_lit = cur.to_literal()?;
+    let tgt_lit = targets.to_literal()?;
+    let mut refs: Vec<&xla::Literal> = lits[n - 1].iter().collect();
+    refs.push(&cur_lit);
+    refs.push(&tgt_lit);
+    let mut out = rt
+        .execute_literals(&head.artifact_fwd, &refs)
+        .with_context(|| format!("head {}", head.name))?;
+    let n_p = params[n - 1].values.len();
+    anyhow::ensure!(out.len() == n_p + 2, "head output arity");
+    let loss = out.remove(0).scalar_f32()?;
+    let gx = out.pop().unwrap();
+    params[n - 1].accumulate(&out)?;
+
+    // BP back through the stashed non-head layers.
+    let gx = backward_through(&layers[..n - 1], rt, params, lits, &inputs, gx)?;
+    Ok((loss, gx))
+}
+
+/// BP through `layers` (reversed) given stashed inputs and the output
+/// gradient; accumulates parameter gradients.  Returns the input
+/// gradient unless the first layer consumes it (embed/stem bwd with no
+/// g_x output).
+fn backward_through(
+    layers: &[crate::model::from_manifest::ManifestLayer],
+    rt: &Runtime,
+    params: &mut [LayerParams],
+    lits: &[Vec<xla::Literal>],
+    inputs: &[Tensor],
+    g: Tensor,
+) -> Result<Option<Tensor>> {
+    let mut g = Some(g);
+    for k in (0..layers.len()).rev() {
+        let l = &layers[k];
+        let grad_in = g.take().context("gradient chain broken")?;
+        let x_lit = inputs[k].to_literal()?;
+        let g_lit = grad_in.to_literal()?;
+        let mut refs: Vec<&xla::Literal> = lits[k].iter().collect();
+        refs.push(&x_lit);
+        refs.push(&g_lit);
+        let mut out = rt
+            .execute_literals(&l.artifact_bwd, &refs)
+            .with_context(|| format!("bwd {}", l.name))?;
+        let n_p = params[k].values.len();
+        if out.len() == n_p + 1 {
+            g = Some(out.pop().unwrap());
+        } else if out.len() == n_p {
+            g = None; // first layer (embed/stem): no input gradient
+        } else {
+            bail!("bwd {}: unexpected arity {}", l.name, out.len());
+        }
+        params[k].accumulate(&out)?;
+    }
+    Ok(g)
+}

@@ -1,0 +1,289 @@
+//! Algorithm 1: allocation of a micro-batch's samples across the
+//! resource-diverse devices of one stage group (Eq. 7-9).
+//!
+//! Two phases, exactly as the paper:
+//!  1. *Memory-aware balancing* — recursively distribute samples in
+//!     proportion to each device's computing capacity v_d (Eq. 9) while
+//!     respecting the per-device memory budget;
+//!  2. *Straggler workload offloading* — because execution time is
+//!     non-linear in batch size, proportional allocation is suboptimal;
+//!     iteratively move one block of samples from the slowest device to
+//!     the fastest device with spare memory until the straggler stops
+//!     improving.
+
+use anyhow::{bail, Result};
+
+use crate::config::{ClusterSpec, TrainConfig};
+use crate::model::ModelDesc;
+use crate::planner::memory::max_batch_under_budget;
+use crate::profiler::ProfileTable;
+
+/// Planner behaviour switches (Fig. 15(a) ablations).
+#[derive(Debug, Clone, Copy)]
+pub struct AllocOpts {
+    /// Respect per-device memory budgets (off = naive planner).
+    pub memory_aware: bool,
+    /// Use per-device capacities (off = treat devices as homogeneous).
+    pub heterogeneity_aware: bool,
+    /// Run phase 2 (straggler offloading).
+    pub straggler_offload: bool,
+}
+
+impl Default for AllocOpts {
+    fn default() -> Self {
+        AllocOpts { memory_aware: true, heterogeneity_aware: true, straggler_offload: true }
+    }
+}
+
+/// Allocate `b` samples of one micro-batch across `devices` running
+/// layers [i, j) with warm-up depth `kp`.  Returns per-device sample
+/// counts (parallel to `devices`).
+#[allow(clippy::too_many_arguments)]
+pub fn allocate_microbatch(
+    table: &ProfileTable,
+    cluster: &ClusterSpec,
+    model: &ModelDesc,
+    cfg: &TrainConfig,
+    i: usize,
+    j: usize,
+    devices: &[usize],
+    b: usize,
+    kp: usize,
+    opts: AllocOpts,
+) -> Result<Vec<usize>> {
+    assert!(!devices.is_empty());
+    let n = devices.len();
+
+    // Per-device ceiling bs_d from the Eq. (3) budget.
+    let limit: Vec<usize> = devices
+        .iter()
+        .map(|&d| {
+            if opts.memory_aware {
+                max_batch_under_budget(model, cfg, i, j, kp, &cluster.devices[d])
+            } else {
+                usize::MAX
+            }
+        })
+        .collect();
+
+    // Capacity v_d of Eq. (9): inverse FP+BP latency at full micro-batch.
+    let cap: Vec<f64> = devices
+        .iter()
+        .map(|&d| {
+            if opts.heterogeneity_aware {
+                table.capacity(d, i, j, b.max(1))
+            } else {
+                1.0
+            }
+        })
+        .collect();
+
+    // ---------------------------------------------------- phase 1
+    let mut alloc = vec![0usize; n];
+    let mut remaining = b;
+    while remaining > 0 {
+        // Devices that still have memory headroom.
+        let active: Vec<usize> = (0..n).filter(|&k| alloc[k] < limit[k]).collect();
+        if active.is_empty() {
+            bail!(
+                "out of memory: stage layers [{i},{j}) cannot fit micro-batch {b} \
+                 on devices {devices:?} (limits {limit:?})"
+            );
+        }
+        let cap_sum: f64 = active.iter().map(|&k| cap[k]).sum();
+        let mut granted = 0usize;
+        for &k in &active {
+            let share = ((cap[k] / cap_sum) * remaining as f64).floor() as usize;
+            let take = share.min(limit[k] - alloc[k]);
+            alloc[k] += take;
+            granted += take;
+        }
+        if granted == 0 {
+            // Flooring starved everyone: grant 1 to the highest-capacity
+            // device with headroom (keeps the recursion terminating).
+            let k = *active
+                .iter()
+                .max_by(|&&a, &&b| cap[a].partial_cmp(&cap[b]).unwrap())
+                .unwrap();
+            alloc[k] += 1;
+            granted = 1;
+        }
+        remaining -= granted.min(remaining);
+    }
+
+    // ---------------------------------------------------- phase 2
+    if opts.straggler_offload && n > 1 {
+        let block = (b / 16).max(1);
+        let lat = |alloc: &[usize]| -> Vec<f64> {
+            (0..n)
+                .map(|k| table.time_fwd_bwd(devices[k], i, j, alloc[k]))
+                .collect()
+        };
+        let max_iters = 4 * (b / block).max(1);
+        for _ in 0..max_iters {
+            let times = lat(&alloc);
+            let straggler = argmax(&times);
+            let old = times[straggler];
+            // Fastest device with enough memory headroom.
+            let recv = (0..n)
+                .filter(|&k| k != straggler && alloc[k] + block <= limit[k])
+                .min_by(|&a, &b| times[a].partial_cmp(&times[b]).unwrap());
+            let Some(recv) = recv else { break };
+            if alloc[straggler] < block {
+                break;
+            }
+            alloc[straggler] -= block;
+            alloc[recv] += block;
+            let new_times = lat(&alloc);
+            if new_times[argmax(&new_times)] >= old {
+                // Offloading made the straggler worse: revert and stop.
+                alloc[straggler] += block;
+                alloc[recv] -= block;
+                break;
+            }
+        }
+    }
+
+    debug_assert_eq!(alloc.iter().sum::<usize>(), b);
+    Ok(alloc)
+}
+
+fn argmax(xs: &[f64]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterSpec, TrainConfig};
+    use crate::model::zoo;
+    use crate::profiler::ProfileTable;
+
+    fn setup() -> (ClusterSpec, crate::model::ModelDesc, TrainConfig) {
+        (
+            ClusterSpec::env("C", 100.0).unwrap(), // NX, 2xTX2, 3xNano
+            zoo::mobilenet_v2(),
+            TrainConfig::new(256, 16),
+        )
+    }
+
+    #[test]
+    fn allocates_full_microbatch() {
+        let (cluster, model, cfg) = setup();
+        let table = ProfileTable::new(&cluster, &model);
+        let devices = vec![0, 1, 3]; // NX, TX2, Nano
+        let alloc = allocate_microbatch(
+            &table, &cluster, &model, &cfg, 0, 20, &devices, 16, 3,
+            AllocOpts::default(),
+        )
+        .unwrap();
+        assert_eq!(alloc.iter().sum::<usize>(), 16);
+    }
+
+    #[test]
+    fn faster_devices_get_more_samples() {
+        let (cluster, model, cfg) = setup();
+        let table = ProfileTable::new(&cluster, &model);
+        let devices = vec![0, 3]; // NX vs Nano (~4.7x capacity gap)
+        let alloc = allocate_microbatch(
+            &table, &cluster, &model, &cfg, 0, 30, &devices, 32, 1,
+            AllocOpts::default(),
+        )
+        .unwrap();
+        assert!(alloc[0] > alloc[1], "NX {} vs Nano {}", alloc[0], alloc[1]);
+    }
+
+    #[test]
+    fn homogeneous_flag_splits_evenly() {
+        let (cluster, model, cfg) = setup();
+        let table = ProfileTable::new(&cluster, &model);
+        let devices = vec![0, 3];
+        let opts = AllocOpts {
+            heterogeneity_aware: false,
+            straggler_offload: false,
+            ..AllocOpts::default()
+        };
+        let alloc = allocate_microbatch(
+            &table, &cluster, &model, &cfg, 0, 30, &devices, 32, 1, opts,
+        )
+        .unwrap();
+        assert_eq!(alloc, vec![16, 16]);
+    }
+
+    #[test]
+    fn straggler_offloading_improves_balance() {
+        let (cluster, model, cfg) = setup();
+        let table = ProfileTable::new(&cluster, &model);
+        let devices = vec![0, 3];
+        let base = AllocOpts { straggler_offload: false, ..AllocOpts::default() };
+        let tuned = AllocOpts::default();
+        let nl = model.num_layers();
+        let a0 = allocate_microbatch(
+            &table, &cluster, &model, &cfg, 0, nl, &devices, 64, 1, base,
+        )
+        .unwrap();
+        let a1 = allocate_microbatch(
+            &table, &cluster, &model, &cfg, 0, nl, &devices, 64, 1, tuned,
+        )
+        .unwrap();
+        let worst = |a: &[usize]| -> f64 {
+            devices
+                .iter()
+                .zip(a)
+                .map(|(&d, &y)| table.time_fwd_bwd(d, 0, nl, y))
+                .fold(0.0, f64::max)
+        };
+        assert!(worst(&a1) <= worst(&a0) + 1e-12, "{} vs {}", worst(&a1), worst(&a0));
+    }
+
+    #[test]
+    fn memory_pressure_reported_as_oom() {
+        let (mut cluster, model, cfg) = setup();
+        // Shrink every device to a few MB: the full model can't fit.
+        for d in &mut cluster.devices {
+            d.mem_bytes = 4 * 1024 * 1024;
+        }
+        let table = ProfileTable::new(&cluster, &model);
+        let nl = model.num_layers();
+        let r = allocate_microbatch(
+            &table, &cluster, &model, &cfg, 0, nl, &[0, 1], 64, 4,
+            AllocOpts::default(),
+        );
+        assert!(r.is_err());
+        let msg = format!("{:#}", r.unwrap_err());
+        assert!(msg.contains("out of memory"), "{msg}");
+    }
+
+    #[test]
+    fn memory_unaware_never_ooms() {
+        let (mut cluster, model, cfg) = setup();
+        for d in &mut cluster.devices {
+            d.mem_bytes = 1024;
+        }
+        let table = ProfileTable::new(&cluster, &model);
+        let opts = AllocOpts { memory_aware: false, ..AllocOpts::default() };
+        let nl = model.num_layers();
+        let alloc =
+            allocate_microbatch(&table, &cluster, &model, &cfg, 0, nl, &[0, 1], 64, 4, opts)
+                .unwrap();
+        assert_eq!(alloc.iter().sum::<usize>(), 64);
+    }
+
+    #[test]
+    fn single_device_takes_all() {
+        let (cluster, model, cfg) = setup();
+        let table = ProfileTable::new(&cluster, &model);
+        let alloc = allocate_microbatch(
+            &table, &cluster, &model, &cfg, 0, 10, &[2], 16, 1,
+            AllocOpts::default(),
+        )
+        .unwrap();
+        assert_eq!(alloc, vec![16]);
+    }
+}

@@ -1,0 +1,92 @@
+//! DP / EDDL baseline: every device replicates the whole model; the
+//! micro-batch is balanced across devices (the paper grants baselines
+//! heterogeneous workload balancing); gradients AllReduce once per
+//! mini-batch.
+
+use anyhow::Result;
+
+use crate::config::{ClusterSpec, TrainConfig};
+use crate::model::ModelDesc;
+use crate::planner::alloc::{allocate_microbatch, AllocOpts};
+use crate::planner::cost::{plan_steps, round_latency};
+use crate::planner::dp::PlanOutcome;
+use crate::planner::plan::{Plan, Stage};
+use crate::profiler::ProfileTable;
+
+/// Plan conventional data parallelism over all cluster devices.
+pub fn plan_dp(
+    table: &ProfileTable,
+    cluster: &ClusterSpec,
+    model: &ModelDesc,
+    cfg: &TrainConfig,
+    opts: AllocOpts,
+) -> Result<PlanOutcome> {
+    let t0 = std::time::Instant::now();
+    let devices: Vec<usize> = (0..cluster.n()).collect();
+    let nl = model.num_layers();
+    // DP holds one micro-batch of activations at a time (K_p = 1).
+    let alloc = allocate_microbatch(
+        table, cluster, model, cfg, 0, nl, &devices, cfg.microbatch, 1, opts,
+    )?;
+    let plan = Plan {
+        stages: vec![Stage { layers: (0, nl), devices, alloc, kp: 1 }],
+        microbatch: cfg.microbatch,
+        num_micro: cfg.num_microbatches(),
+    };
+    let steps = plan_steps(table, cluster, model, &plan);
+    let latency = round_latency(&steps, plan.num_micro);
+    Ok(PlanOutcome {
+        predicted_throughput: plan.samples_per_round() as f64 / latency,
+        predicted_latency: latency,
+        planning_time_s: t0.elapsed().as_secs_f64(),
+        plan,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterSpec;
+    use crate::model::zoo;
+
+    #[test]
+    fn dp_single_stage_all_devices() {
+        let cluster = ClusterSpec::env("A", 100.0).unwrap();
+        let model = zoo::mobilenet_v2();
+        let table = ProfileTable::new(&cluster, &model);
+        let cfg = TrainConfig::new(256, 16);
+        let out = plan_dp(&table, &cluster, &model, &cfg, AllocOpts::default()).unwrap();
+        assert_eq!(out.plan.num_stages(), 1);
+        assert_eq!(out.plan.stages[0].devices.len(), 5);
+        out.plan.validate(&model, &cluster).unwrap();
+    }
+
+    #[test]
+    fn dp_pays_full_model_allreduce() {
+        // The single step's T_a must charge the whole parameter set —
+        // the communication wall of Fig. 1(left).
+        let cluster = ClusterSpec::env("A", 100.0).unwrap();
+        let model = zoo::mobilenet_v2();
+        let table = ProfileTable::new(&cluster, &model);
+        let cfg = TrainConfig::new(256, 16);
+        let out = plan_dp(&table, &cluster, &model, &cfg, AllocOpts::default()).unwrap();
+        let steps = plan_steps(&table, &cluster, &model, &out.plan);
+        let w = model.total_weight_bytes() as f64;
+        let bw = cluster.min_bandwidth(&[0, 1, 2, 3, 4]);
+        let expect = 2.0 * 4.0 * w / (5.0 * bw);
+        assert!((steps[0].ta - expect).abs() / expect < 1e-9);
+    }
+
+    #[test]
+    fn dp_faster_on_faster_network() {
+        let model = zoo::mobilenet_v2();
+        let cfg = TrainConfig::new(256, 16);
+        let c100 = ClusterSpec::env("A", 100.0).unwrap();
+        let c1000 = ClusterSpec::env("A", 1000.0).unwrap();
+        let t100 = ProfileTable::new(&c100, &model);
+        let t1000 = ProfileTable::new(&c1000, &model);
+        let s = plan_dp(&t100, &c100, &model, &cfg, AllocOpts::default()).unwrap();
+        let f = plan_dp(&t1000, &c1000, &model, &cfg, AllocOpts::default()).unwrap();
+        assert!(f.predicted_throughput > s.predicted_throughput);
+    }
+}

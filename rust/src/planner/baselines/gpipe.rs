@@ -1,0 +1,162 @@
+//! GPipe-style pipeline parallelism baseline: one stage per device,
+//! cuts chosen to balance per-stage *compute* only — GPipe's partitioner
+//! "overlooks the sizes of intermediate tensors at partition points"
+//! (paper §5.6), which is exactly the weakness Table 4 exposes.  The
+//! paper grants the baseline heterogeneous workload balancing and our
+//! 1F1B schedule, so stage times are balanced against per-device
+//! capacity and K_p follows the ours policy.
+
+use anyhow::{bail, Result};
+
+use crate::config::{ClusterSpec, TrainConfig};
+use crate::model::ModelDesc;
+use crate::planner::cost::{plan_steps, round_latency};
+use crate::planner::dp::PlanOutcome;
+use crate::planner::plan::{kp_policy_ours, Plan, Stage};
+use crate::profiler::ProfileTable;
+
+/// Chain-partition the model into `n` single-device stages minimising
+/// the max per-stage FP+BP time (compute only, no comm terms).
+pub fn plan_gpipe_pp(
+    table: &ProfileTable,
+    cluster: &ClusterSpec,
+    model: &ModelDesc,
+    cfg: &TrainConfig,
+) -> Result<PlanOutcome> {
+    let t0 = std::time::Instant::now();
+    let n = cluster.n();
+    let nl = model.num_layers();
+    if nl < n {
+        bail!("model has fewer layers ({nl}) than devices ({n})");
+    }
+    let b = cfg.microbatch;
+
+    // Devices in memory-desc order, matching the stage->device mapping
+    // convention used throughout.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &c| {
+        cluster.devices[c]
+            .mem_bytes
+            .cmp(&cluster.devices[a].mem_bytes)
+            .then(a.cmp(&c))
+    });
+
+    // DP over (stages used, layers covered): f[s][l] = min over l' of
+    // max(f[s-1][l'], t(dev_s, l'..l, B)).
+    let inf = f64::INFINITY;
+    let mut f = vec![vec![inf; nl + 1]; n + 1];
+    let mut cut = vec![vec![0usize; nl + 1]; n + 1];
+    f[0][0] = 0.0;
+    for s in 1..=n {
+        let dev = order[s - 1];
+        for l in s..=nl {
+            for lp in (s - 1)..l {
+                if f[s - 1][lp].is_infinite() {
+                    continue;
+                }
+                let t = table.time_fwd_bwd(dev, lp, l, b);
+                let v = f[s - 1][lp].max(t);
+                if v < f[s][l] {
+                    f[s][l] = v;
+                    cut[s][l] = lp;
+                }
+            }
+        }
+    }
+    if f[n][nl].is_infinite() {
+        bail!("gpipe partitioning failed");
+    }
+
+    // Reconstruct cuts.
+    let mut bounds = vec![nl];
+    let mut l = nl;
+    for s in (1..=n).rev() {
+        l = cut[s][l];
+        bounds.push(l);
+    }
+    bounds.reverse(); // 0 = bounds[0] < ... < bounds[n] = nl
+
+    let m = cfg.num_microbatches();
+    let stages: Vec<Stage> = (0..n)
+        .map(|s| Stage {
+            layers: (bounds[s], bounds[s + 1]),
+            devices: vec![order[s]],
+            alloc: vec![b],
+            kp: kp_policy_ours(n, s).min(m),
+        })
+        .collect();
+    let plan = Plan { stages, microbatch: b, num_micro: m };
+    plan.validate(model, cluster)?;
+    let steps = plan_steps(table, cluster, model, &plan);
+    let latency = round_latency(&steps, m);
+    Ok(PlanOutcome {
+        predicted_throughput: plan.samples_per_round() as f64 / latency,
+        predicted_latency: latency,
+        planning_time_s: t0.elapsed().as_secs_f64(),
+        plan,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterSpec;
+    use crate::model::zoo;
+
+    #[test]
+    fn pp_one_stage_per_device() {
+        let cluster = ClusterSpec::env("A", 100.0).unwrap();
+        let model = zoo::mobilenet_v2();
+        let table = ProfileTable::new(&cluster, &model);
+        let cfg = TrainConfig::new(256, 16);
+        let out = plan_gpipe_pp(&table, &cluster, &model, &cfg).unwrap();
+        assert_eq!(out.plan.num_stages(), 5);
+        assert!(out.plan.stages.iter().all(|s| s.replicas() == 1));
+        out.plan.validate(&model, &cluster).unwrap();
+    }
+
+    #[test]
+    fn pp_balances_compute_across_heterogeneous_devices() {
+        let cluster = ClusterSpec::env("C", 100.0).unwrap(); // NX..Nano
+        let model = zoo::efficientnet_b1();
+        let table = ProfileTable::new(&cluster, &model);
+        let cfg = TrainConfig::new(256, 16);
+        let out = plan_gpipe_pp(&table, &cluster, &model, &cfg).unwrap();
+        // Per-stage compute times within ~4x of each other (perfect
+        // balance impossible at layer granularity).
+        let times: Vec<f64> = out
+            .plan
+            .stages
+            .iter()
+            .map(|s| table.time_fwd_bwd(s.devices[0], s.layers.0, s.layers.1, 16))
+            .collect();
+        let max = times.iter().cloned().fold(0.0, f64::max);
+        let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(max / min < 4.0, "stage times {times:?}");
+    }
+
+    #[test]
+    fn pp_suffers_on_cnn_over_slow_links() {
+        // Table 4 / §5.2: PP cuts CNNs through huge feature maps, so
+        // inter-stage comm dominates and Asteroid's HPP wins big.
+        let cluster = ClusterSpec::env("A", 100.0).unwrap();
+        let model = zoo::resnet50();
+        let table = ProfileTable::new(&cluster, &model);
+        let cfg = TrainConfig::new(64, 4);
+        let pp = plan_gpipe_pp(&table, &cluster, &model, &cfg).unwrap();
+        let ours = crate::planner::dp::plan_hpp(
+            &table,
+            &cluster,
+            &model,
+            &cfg,
+            &crate::planner::dp::PlannerConfig::default(),
+        )
+        .unwrap();
+        assert!(
+            ours.predicted_throughput > 1.5 * pp.predicted_throughput,
+            "ours {} vs pp {}",
+            ours.predicted_throughput,
+            pp.predicted_throughput
+        );
+    }
+}

@@ -1,0 +1,299 @@
+//! HetPipe baseline: Hybrid *Data* Parallelism (HDP, paper §2.3 and
+//! Fig. 2(a)).  Devices are partitioned into groups ("virtual workers"),
+//! each group pipelines the FULL model internally (intra-group PP) and
+//! groups exchange full-model gradients through a parameter server
+//! (inter-group DP).  Communication volume follows Eq. (1):
+//!
+//!   V_HDP = 2*G*P + sum_i 2*beta_i*sum_j a_{i,j}        (G > 1)
+//!
+//! HetPipe is asynchronous in the original; for the throughput
+//! comparison we model its steady-state round latency, and Fig. 14
+//! applies the paper's observed staleness penalty to epochs-to-target.
+
+use anyhow::{bail, Result};
+
+use crate::config::{ClusterSpec, TrainConfig};
+use crate::model::ModelDesc;
+use crate::planner::cost::{round_latency, StepCost};
+use crate::profiler::ProfileTable;
+
+/// An HDP plan: device groups, per-group mini-batch shares, and the
+/// internal pipeline cuts of each group.
+#[derive(Debug, Clone)]
+pub struct HdpPlan {
+    /// Device groups (each a virtual worker running the full model).
+    pub groups: Vec<Vec<usize>>,
+    /// Mini-batch share (in micro-batches) per group; sums to M.
+    pub micro_share: Vec<usize>,
+    /// Layer cut bounds per group (len = group size + 1).
+    pub cuts: Vec<Vec<usize>>,
+    /// Predicted HPP... HDP-round latency in seconds.
+    pub latency: f64,
+    /// Predicted throughput, samples/s.
+    pub throughput: f64,
+    /// Eq. (1) communication volume per round, bytes.
+    pub volume_bytes: u64,
+}
+
+/// Intra-group chain partition of the full model balanced by capacity
+/// (same DP as the GPipe baseline but per group).
+fn group_cuts(
+    table: &ProfileTable,
+    model: &ModelDesc,
+    group: &[usize],
+    b: usize,
+) -> Option<Vec<usize>> {
+    let n = group.len();
+    let nl = model.num_layers();
+    if nl < n {
+        return None;
+    }
+    let inf = f64::INFINITY;
+    let mut f = vec![vec![inf; nl + 1]; n + 1];
+    let mut cut = vec![vec![0usize; nl + 1]; n + 1];
+    f[0][0] = 0.0;
+    for s in 1..=n {
+        for l in s..=nl {
+            for lp in (s - 1)..l {
+                if f[s - 1][lp].is_infinite() {
+                    continue;
+                }
+                let t = table.time_fwd_bwd(group[s - 1], lp, l, b);
+                let v = f[s - 1][lp].max(t);
+                if v < f[s][l] {
+                    f[s][l] = v;
+                    cut[s][l] = lp;
+                }
+            }
+        }
+    }
+    let mut bounds = vec![nl];
+    let mut l = nl;
+    for s in (1..=n).rev() {
+        l = cut[s][l];
+        bounds.push(l);
+    }
+    bounds.reverse();
+    Some(bounds)
+}
+
+/// Round latency of one group pipelining `m_i` micro-batches of size B
+/// through its internal stages (plus inter-stage comm within the group).
+fn group_round_latency(
+    table: &ProfileTable,
+    cluster: &ClusterSpec,
+    model: &ModelDesc,
+    group: &[usize],
+    cuts: &[usize],
+    b: usize,
+    m_i: usize,
+) -> f64 {
+    if m_i == 0 {
+        return 0.0;
+    }
+    let mut steps: Vec<StepCost> = Vec::new();
+    for s in 0..group.len() {
+        if s > 0 {
+            let bytes = model.boundary_bytes(cuts[s]) * b as u64;
+            let bw = cluster.bandwidth[group[s - 1]][group[s]];
+            let t = bytes as f64 / bw + cluster.latency_s;
+            steps.push(StepCost { ef: t, eb: t, ta: 0.0, exec: false });
+        }
+        steps.push(StepCost {
+            ef: table.time_fwd(group[s], cuts[s], cuts[s + 1], b),
+            eb: table.time_bwd(group[s], cuts[s], cuts[s + 1], b),
+            ta: 0.0,
+            exec: true,
+        });
+    }
+    round_latency(&steps, m_i)
+}
+
+/// Plan HetPipe HDP: enumerate contiguous partitions of the
+/// memory-sorted device list into groups, balance mini-batch shares by
+/// group capacity, pick the partition with the best round latency.
+pub fn plan_hetpipe(
+    table: &ProfileTable,
+    cluster: &ClusterSpec,
+    model: &ModelDesc,
+    cfg: &TrainConfig,
+) -> Result<HdpPlan> {
+    let n = cluster.n();
+    let b = cfg.microbatch;
+    let m = cfg.num_microbatches();
+    let p_bytes = model.total_weight_bytes();
+
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &c| {
+        cluster.devices[c]
+            .mem_bytes
+            .cmp(&cluster.devices[a].mem_bytes)
+            .then(a.cmp(&c))
+    });
+
+    let mut best: Option<HdpPlan> = None;
+    // Contiguous partitions of `order` = bitmask over n-1 cut positions.
+    for mask in 0u32..(1 << (n - 1)) {
+        let mut groups: Vec<Vec<usize>> = Vec::new();
+        let mut cur = vec![order[0]];
+        for i in 1..n {
+            if mask & (1 << (i - 1)) != 0 {
+                groups.push(std::mem::take(&mut cur));
+            }
+            cur.push(order[i]);
+        }
+        groups.push(cur);
+
+        // Intra-group pipeline cuts; skip partitions whose groups can't
+        // host the model.
+        let cuts: Option<Vec<Vec<usize>>> = groups
+            .iter()
+            .map(|g| group_cuts(table, model, g, b))
+            .collect();
+        let Some(cuts) = cuts else { continue };
+
+        // Mini-batch shares proportional to group capacity.
+        let caps: Vec<f64> = groups
+            .iter()
+            .map(|g| {
+                g.iter()
+                    .map(|&d| table.capacity(d, 0, model.num_layers(), b))
+                    .sum::<f64>()
+            })
+            .collect();
+        let cap_sum: f64 = caps.iter().sum();
+        let mut share: Vec<usize> = caps
+            .iter()
+            .map(|c| ((c / cap_sum) * m as f64).floor() as usize)
+            .collect();
+        let mut assigned: usize = share.iter().sum();
+        // distribute remainder to the strongest groups
+        while assigned < m {
+            let k = (0..groups.len())
+                .max_by(|&a, &c| caps[a].partial_cmp(&caps[c]).unwrap())
+                .unwrap();
+            share[k] += 1;
+            assigned += 1;
+        }
+
+        // Group pipeline latencies + PS full-gradient exchange (2GP).
+        let g_cnt = groups.len();
+        let mut latency: f64 = 0.0;
+        for (gi, g) in groups.iter().enumerate() {
+            latency = latency
+                .max(group_round_latency(table, cluster, model, g, &cuts[gi], b, share[gi]));
+        }
+        let ps_time = if g_cnt > 1 {
+            // bidirectional full-model exchange per group through the PS
+            // over the slowest involved link
+            let min_bw = cluster.min_bandwidth(&order);
+            2.0 * g_cnt as f64 * p_bytes as f64 / min_bw
+        } else {
+            0.0
+        };
+        latency += ps_time;
+
+        // Eq. (1) volume.
+        let volume = hdp_volume(model, &groups, &cuts, &share, b, p_bytes);
+
+        let cand = HdpPlan {
+            throughput: (b * m) as f64 / latency,
+            groups,
+            micro_share: share,
+            cuts,
+            latency,
+            volume_bytes: volume,
+        };
+        if best.as_ref().map_or(true, |bst| cand.latency < bst.latency) {
+            best = Some(cand);
+        }
+    }
+    match best {
+        Some(p) => Ok(p),
+        None => bail!("hetpipe: no feasible grouping"),
+    }
+}
+
+/// Eq. (1): V_HDP.
+fn hdp_volume(
+    model: &ModelDesc,
+    groups: &[Vec<usize>],
+    cuts: &[Vec<usize>],
+    share: &[usize],
+    b: usize,
+    p_bytes: u64,
+) -> u64 {
+    let g = groups.len() as u64;
+    let mut v: u64 = if g > 1 { 2 * g * p_bytes } else { 0 };
+    for (gi, group) in groups.iter().enumerate() {
+        let beta_i = (share[gi] * b) as u64;
+        let intra: u64 = (1..group.len())
+            .map(|s| model.boundary_bytes(cuts[gi][s]))
+            .sum();
+        v += 2 * beta_i * intra;
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterSpec;
+    use crate::model::zoo;
+
+    fn fixture() -> (ClusterSpec, ModelDesc, ProfileTable, TrainConfig) {
+        let cluster = ClusterSpec::env("A", 100.0).unwrap();
+        let model = zoo::mobilenet_v2();
+        let table = ProfileTable::new(&cluster, &model);
+        let cfg = TrainConfig::new(256, 16);
+        (cluster, model, table, cfg)
+    }
+
+    #[test]
+    fn covers_all_devices_and_microbatches() {
+        let (cluster, model, table, cfg) = fixture();
+        let plan = plan_hetpipe(&table, &cluster, &model, &cfg).unwrap();
+        let mut devs: Vec<usize> = plan.groups.iter().flatten().copied().collect();
+        devs.sort_unstable();
+        assert_eq!(devs, (0..cluster.n()).collect::<Vec<_>>());
+        assert_eq!(plan.micro_share.iter().sum::<usize>(), cfg.num_microbatches());
+    }
+
+    #[test]
+    fn multi_group_pays_ps_exchange() {
+        let (cluster, model, table, cfg) = fixture();
+        let plan = plan_hetpipe(&table, &cluster, &model, &cfg).unwrap();
+        if plan.groups.len() > 1 {
+            // Eq. (1): volume must include the 2GP term.
+            let floor = 2 * plan.groups.len() as u64 * model.total_weight_bytes();
+            assert!(plan.volume_bytes >= floor);
+        }
+    }
+
+    #[test]
+    fn hdp_volume_exceeds_hpp_volume() {
+        // Table 2: V_HDP is 1.9-2.7x V_HPP for the evaluation models.
+        use crate::comm::hpp_volume;
+        use crate::planner::dp::{plan_hpp, PlannerConfig};
+        let (cluster, model, table, cfg) = fixture();
+        let hdp = plan_hetpipe(&table, &cluster, &model, &cfg).unwrap();
+        let hpp = plan_hpp(&table, &cluster, &model, &cfg, &PlannerConfig::default()).unwrap();
+        let v_hpp = hpp_volume(&model, &hpp.plan);
+        assert!(
+            hdp.volume_bytes > v_hpp,
+            "HDP {} <= HPP {v_hpp}",
+            hdp.volume_bytes
+        );
+    }
+
+    #[test]
+    fn single_device_cluster_is_one_group() {
+        let cluster = ClusterSpec::env("A100", 0.0).unwrap();
+        let model = zoo::mobilenet_v2();
+        let table = ProfileTable::new(&cluster, &model);
+        let cfg = TrainConfig::new(64, 8);
+        let plan = plan_hetpipe(&table, &cluster, &model, &cfg).unwrap();
+        assert_eq!(plan.groups.len(), 1);
+        assert_eq!(plan.volume_bytes, 0);
+    }
+}

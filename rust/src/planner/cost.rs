@@ -1,0 +1,287 @@
+//! The dominant-step cost model (Eqs. 4-6, 8, 11).
+//!
+//! An HPP-Round is abstracted as alternating *execution steps* (stage
+//! FP/BP) and *communication steps* (inter-stage activation transfer).
+//! Each step s carries its per-micro-batch forward time E_f^s, backward
+//! time E_b^s, and AllReduce time T_a^s.  The round latency is governed
+//! by the *dominant step* — the step whose Execution Phase is packed
+//! with the fewest bubbles — from which every other step's Execution
+//! Phase is inferred by shifting (Eq. 6).
+
+use crate::config::{ClusterSpec, TrainConfig};
+use crate::model::ModelDesc;
+use crate::planner::plan::{Plan, Stage};
+use crate::profiler::ProfileTable;
+
+/// Per-step timing: E_f, E_b for one micro-batch plus AllReduce T_a.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StepCost {
+    pub ef: f64,
+    pub eb: f64,
+    pub ta: f64,
+    /// true for execution steps, false for communication steps.
+    pub exec: bool,
+}
+
+impl StepCost {
+    pub fn fb(&self) -> f64 {
+        self.ef + self.eb
+    }
+}
+
+/// E_f^s / E_b^s of an execution step (Eq. 8): the slowest device in
+/// the group under its allocation.
+pub fn exec_step_cost(
+    table: &ProfileTable,
+    cluster: &ClusterSpec,
+    model: &ModelDesc,
+    stage: &Stage,
+) -> StepCost {
+    let (i, j) = stage.layers;
+    let mut ef: f64 = 0.0;
+    let mut eb: f64 = 0.0;
+    for (&d, &y) in stage.devices.iter().zip(&stage.alloc) {
+        ef = ef.max(table.time_fwd(d, i, j, y));
+        eb = eb.max(table.time_bwd(d, i, j, y));
+    }
+    StepCost { ef, eb, ta: allreduce_time(cluster, model, stage), exec: true }
+}
+
+/// T_a^s (Eq. 5): ring AllReduce of the stage's weights over the
+/// group's slowest link.
+pub fn allreduce_time(cluster: &ClusterSpec, model: &ModelDesc, stage: &Stage) -> f64 {
+    let g = stage.devices.len();
+    if g <= 1 {
+        return 0.0;
+    }
+    let w: u64 = model.weight_bytes_range(stage.layers.0, stage.layers.1);
+    let bw = cluster.min_bandwidth(&stage.devices);
+    (2 * (g - 1)) as f64 * w as f64 / (g as f64 * bw)
+}
+
+/// E_f^s / E_b^s of the communication step between two adjacent stages:
+/// the boundary activation tensor for one micro-batch over the
+/// bottleneck inter-group link (gradient transfer is symmetric).
+pub fn comm_step_cost(
+    cluster: &ClusterSpec,
+    model: &ModelDesc,
+    from: &Stage,
+    to: &Stage,
+    microbatch: usize,
+) -> StepCost {
+    let bytes = model.boundary_bytes(from.layers.1) * microbatch as u64;
+    let bw = cluster.group_bandwidth(&from.devices, &to.devices);
+    let t = bytes as f64 / bw + cluster.latency_s;
+    StepCost { ef: t, eb: t, ta: 0.0, exec: false }
+}
+
+/// Build the full step list (2P-1 steps) of a plan.
+pub fn plan_steps(
+    table: &ProfileTable,
+    cluster: &ClusterSpec,
+    model: &ModelDesc,
+    plan: &Plan,
+) -> Vec<StepCost> {
+    let mut steps = Vec::with_capacity(plan.stages.len() * 2 - 1);
+    for (p, stage) in plan.stages.iter().enumerate() {
+        if p > 0 {
+            steps.push(comm_step_cost(
+                cluster,
+                model,
+                &plan.stages[p - 1],
+                stage,
+                plan.microbatch,
+            ));
+        }
+        steps.push(exec_step_cost(table, cluster, model, stage));
+    }
+    steps
+}
+
+/// Index of the dominant step: maximises the aligned total
+/// M*(E_f+E_b) + sum_{i<s}(E_f^i + E_b^i)   (the paper's
+/// fewest-bubbles criterion, cf. Eq. 11).
+pub fn dominant_step(steps: &[StepCost], m: usize) -> usize {
+    let mut best = 0;
+    let mut best_val = f64::MIN;
+    let mut prefix = 0.0;
+    for (s, st) in steps.iter().enumerate() {
+        let val = m as f64 * st.fb() + prefix;
+        if val > best_val {
+            best_val = val;
+            best = s;
+        }
+        prefix += st.fb();
+    }
+    best
+}
+
+/// HPP-Round latency (Eq. 4): max over steps of T_w + T_e + T_a, with
+/// T_w from Eq. 5 and T_e inferred from the dominant step via Eq. 6.
+pub fn round_latency(steps: &[StepCost], m: usize) -> f64 {
+    assert!(!steps.is_empty());
+    let dm = dominant_step(steps, m);
+    let te_dm = m as f64 * steps[dm].fb();
+
+    let mut latency: f64 = 0.0;
+    let mut tw = 0.0; // sum of E_f below s
+    let mut shift = 0.0; // running sum of fb() below s
+    let shift_dm: f64 = steps[..dm].iter().map(|s| s.fb()).sum();
+    for st in steps.iter() {
+        // Eq. 6: T_e^s = M*fb(dm) + (sum_{i=s}^{dm-1} fb)   for s < dm
+        //               M*fb(dm) - (sum_{i=dm}^{s-1} fb)   for s >= dm
+        let te = te_dm + (shift_dm - shift);
+        latency = latency.max(tw + te + st.ta);
+        tw += st.ef;
+        shift += st.fb();
+    }
+    latency
+}
+
+/// Predicted training throughput in samples/second.
+pub fn predicted_throughput(
+    table: &ProfileTable,
+    cluster: &ClusterSpec,
+    model: &ModelDesc,
+    plan: &Plan,
+) -> f64 {
+    let steps = plan_steps(table, cluster, model, plan);
+    let latency = round_latency(&steps, plan.num_micro);
+    plan.samples_per_round() as f64 / latency
+}
+
+/// Per-device peak memory (bytes) under the plan — used for OOM checks
+/// and the Fig. 15(b) memory reporting.
+pub fn plan_peak_memory(
+    model: &ModelDesc,
+    cfg: &TrainConfig,
+    plan: &Plan,
+) -> Vec<(usize, u64)> {
+    use crate::planner::memory::stage_memory;
+    let mut out = Vec::new();
+    for stage in &plan.stages {
+        for (&d, &y) in stage.devices.iter().zip(&stage.alloc) {
+            let mem = stage_memory(model, cfg, stage.layers.0, stage.layers.1, y, stage.kp);
+            out.push((d, mem.total()));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterSpec, TrainConfig};
+    use crate::model::zoo;
+    use crate::planner::plan::Stage;
+
+    fn fixture() -> (ClusterSpec, crate::model::ModelDesc, ProfileTable) {
+        let cluster = ClusterSpec::env("A", 100.0).unwrap();
+        let model = zoo::mobilenet_v2();
+        let table = ProfileTable::new(&cluster, &model);
+        (cluster, model, table)
+    }
+
+    fn mk_plan(model: &crate::model::ModelDesc) -> Plan {
+        let nl = model.num_layers();
+        let cut = nl / 2;
+        let mut plan = Plan {
+            stages: vec![
+                Stage { layers: (0, cut), devices: vec![0, 1], alloc: vec![4, 4], kp: 1 },
+                Stage { layers: (cut, nl), devices: vec![2], alloc: vec![8], kp: 1 },
+            ],
+            microbatch: 8,
+            num_micro: 8,
+        };
+        plan.apply_default_kp();
+        plan
+    }
+
+    #[test]
+    fn step_list_shape() {
+        let (cluster, model, table) = fixture();
+        let plan = mk_plan(&model);
+        let steps = plan_steps(&table, &cluster, &model, &plan);
+        assert_eq!(steps.len(), 3); // exec, comm, exec
+        assert!(steps[0].exec && !steps[1].exec && steps[2].exec);
+        assert!(steps[0].ta > 0.0, "2-device stage AllReduces");
+        assert_eq!(steps[2].ta, 0.0, "single-device stage has no AllReduce");
+    }
+
+    #[test]
+    fn allreduce_volume_matches_eq5() {
+        let (cluster, model, _) = fixture();
+        let stage = Stage { layers: (0, 10), devices: vec![0, 1, 2], alloc: vec![3, 3, 2], kp: 1 };
+        let w = model.weight_bytes_range(0, 10) as f64;
+        let bw = cluster.min_bandwidth(&[0, 1, 2]);
+        let expect = 2.0 * 2.0 * w / (3.0 * bw);
+        assert!((allreduce_time(&cluster, &model, &stage) - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn round_latency_single_stage() {
+        // S = 1: latency = M * (E_f + E_b) + T_a.
+        let steps = vec![StepCost { ef: 2.0, eb: 3.0, ta: 4.0, exec: true }];
+        assert!((round_latency(&steps, 10) - (10.0 * 5.0 + 4.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dominant_step_is_heaviest_when_uniform_prefix() {
+        let steps = vec![
+            StepCost { ef: 1.0, eb: 1.0, ta: 0.0, exec: true },
+            StepCost { ef: 5.0, eb: 5.0, ta: 0.0, exec: false },
+            StepCost { ef: 1.0, eb: 1.0, ta: 0.0, exec: true },
+        ];
+        assert_eq!(dominant_step(&steps, 4), 1);
+    }
+
+    #[test]
+    fn round_latency_matches_hand_computation() {
+        // Two equal exec steps + tiny comm: dominant = later exec step
+        // (prefix breaks the tie toward the later step).
+        let e = StepCost { ef: 1.0, eb: 2.0, ta: 0.0, exec: true };
+        let c = StepCost { ef: 0.1, eb: 0.1, ta: 0.0, exec: false };
+        let steps = vec![e, c, e];
+        let m = 4;
+        let dm = dominant_step(&steps, m);
+        assert_eq!(dm, 2);
+        // Step 0 spans the whole round: it starts first and its last BP
+        // drains last.  T_e^0 = M*fb(dm) + (fb(0) + fb(1)) = 12 + 3.2;
+        // T_w^0 = 0, so the round latency is 15.2.
+        let lat = round_latency(&steps, m);
+        assert!((lat - 15.2).abs() < 1e-9, "{lat}");
+        // Equivalent closed form: M*fb(dm) + sum of fb before dm.
+        let alt = m as f64 * steps[2].fb() + steps[0].fb() + steps[1].fb();
+        assert!((lat - alt).abs() < 1e-9);
+    }
+
+    #[test]
+    fn more_microbatches_increase_latency_sublinearly_per_sample() {
+        let (cluster, model, table) = fixture();
+        let plan = mk_plan(&model);
+        let steps = plan_steps(&table, &cluster, &model, &plan);
+        let l8 = round_latency(&steps, 8);
+        let l16 = round_latency(&steps, 16);
+        assert!(l16 > l8);
+        // Per-sample cost shrinks with M (pipeline fills up).
+        assert!(l16 / 16.0 < l8 / 8.0 + 1e-12);
+    }
+
+    #[test]
+    fn throughput_positive_and_finite() {
+        let (cluster, model, table) = fixture();
+        let plan = mk_plan(&model);
+        let tp = predicted_throughput(&table, &cluster, &model, &plan);
+        assert!(tp.is_finite() && tp > 0.0, "{tp}");
+    }
+
+    #[test]
+    fn peak_memory_reports_every_device() {
+        let (_, model, _) = fixture();
+        let cfg = TrainConfig::new(64, 8);
+        let plan = mk_plan(&model);
+        let peaks = plan_peak_memory(&model, &cfg, &plan);
+        assert_eq!(peaks.len(), 3);
+        assert!(peaks.iter().all(|&(_, m)| m > 0));
+    }
+}

@@ -1,0 +1,160 @@
+//! Eq. (3) memory model: per-stage peak footprint under 1F1B.
+//!
+//!   Mem_p(beta) = Mem^(MOD) + Mem^(OPT) + K_p * Mem^(ACT)(beta)
+//!
+//! * MOD — stage weights plus accumulated gradients (2x weight bytes);
+//! * OPT — optimizer state (momentum = 1x, Adam = 2x weight bytes);
+//! * ACT — intermediate activations of ONE in-flight micro-batch; K_p
+//!   micro-batches are resident before strict 1F1B kicks in.
+
+use crate::config::{DeviceSpec, TrainConfig};
+use crate::model::ModelDesc;
+
+/// Memory components of one stage for a given per-device batch `beta`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StageMemory {
+    pub model_bytes: u64,
+    pub optimizer_bytes: u64,
+    pub activation_bytes_per_mb: u64,
+    pub kp: usize,
+}
+
+impl StageMemory {
+    pub fn total(&self) -> u64 {
+        self.model_bytes + self.optimizer_bytes + self.kp as u64 * self.activation_bytes_per_mb
+    }
+}
+
+/// Compute Eq. (3) for layers [i, j) at per-device batch `beta`.
+pub fn stage_memory(
+    model: &ModelDesc,
+    cfg: &TrainConfig,
+    i: usize,
+    j: usize,
+    beta: usize,
+    kp: usize,
+) -> StageMemory {
+    let w = model.weight_bytes_range(i, j);
+    // weights + accumulated gradients
+    let model_bytes = 2 * w;
+    let optimizer_bytes = (cfg.optimizer_mem_factor * w as f64) as u64;
+    // stage input (needed for the rematerialising BP) + every layer's
+    // output activation, per in-flight micro-batch sample
+    let input = if i == 0 {
+        model.input_bytes
+    } else {
+        model.boundary_bytes(i)
+    };
+    let act_per_sample = model.act_bytes_range(i, j) + input;
+    StageMemory {
+        model_bytes,
+        optimizer_bytes,
+        activation_bytes_per_mb: act_per_sample * beta as u64,
+        kp,
+    }
+}
+
+/// Largest per-device batch that fits the device budget (the `bs_d`
+/// bound of Algorithm 1, line 7).  Returns 0 when even the fixed cost
+/// (weights + optimizer) exceeds the budget.
+pub fn max_batch_under_budget(
+    model: &ModelDesc,
+    cfg: &TrainConfig,
+    i: usize,
+    j: usize,
+    kp: usize,
+    dev: &DeviceSpec,
+) -> usize {
+    let m1 = stage_memory(model, cfg, i, j, 1, kp);
+    let fixed = m1.model_bytes + m1.optimizer_bytes;
+    if fixed >= dev.mem_bytes {
+        return 0;
+    }
+    let per_sample = (kp as u64 * m1.activation_bytes_per_mb).max(1);
+    ((dev.mem_bytes - fixed) / per_sample) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DeviceKind, DeviceSpec, TrainConfig};
+    use crate::model::zoo;
+
+    #[test]
+    fn memory_scales_with_kp() {
+        // Fig. 15(b): larger K_p means proportionally more activation
+        // memory, constant weight/optimizer memory.
+        let m = zoo::mobilenet_v2();
+        let cfg = TrainConfig::new(256, 8);
+        let a = stage_memory(&m, &cfg, 0, 20, 8, 1);
+        let b = stage_memory(&m, &cfg, 0, 20, 8, 5);
+        assert_eq!(a.model_bytes, b.model_bytes);
+        assert!(b.total() > a.total());
+        assert_eq!(
+            b.total() - a.total(),
+            4 * a.activation_bytes_per_mb // (5-1) extra in-flight micro-batches
+        );
+    }
+
+    #[test]
+    fn activations_dominate_early_cnn_stages() {
+        // Fig. 5: activation memory is the main contributor for CNNs.
+        let m = zoo::mobilenet_v2();
+        let cfg = TrainConfig::new(256, 32);
+        let cut = m.num_layers() / 3;
+        let s = stage_memory(&m, &cfg, 0, cut, 32, 3);
+        assert!(
+            s.kp as u64 * s.activation_bytes_per_mb > s.model_bytes + s.optimizer_bytes,
+            "act {} vs fixed {}",
+            s.kp as u64 * s.activation_bytes_per_mb,
+            s.model_bytes + s.optimizer_bytes
+        );
+    }
+
+    #[test]
+    fn max_batch_monotone_in_memory() {
+        let m = zoo::mobilenet_v2();
+        let cfg = TrainConfig::new(256, 8);
+        let nano = DeviceSpec::of_kind(DeviceKind::JetsonNano, 0);
+        let nx = DeviceSpec::of_kind(DeviceKind::JetsonNX, 1);
+        let nl = m.num_layers();
+        let b_nano = max_batch_under_budget(&m, &cfg, 0, nl, 3, &nano);
+        let b_nx = max_batch_under_budget(&m, &cfg, 0, nl, 3, &nx);
+        assert!(b_nx > b_nano, "nx {b_nx} vs nano {b_nano}");
+        assert!(b_nano > 0);
+    }
+
+    #[test]
+    fn max_batch_zero_when_weights_exceed_budget() {
+        let m = zoo::bert_small(); // ~115 MB weights
+        let cfg = TrainConfig::new(256, 8);
+        let mut tiny = DeviceSpec::of_kind(DeviceKind::JetsonNano, 0);
+        tiny.mem_bytes = 10 * 1024 * 1024; // 10 MiB
+        assert_eq!(
+            max_batch_under_budget(&m, &cfg, 0, m.num_layers(), 1, &tiny),
+            0
+        );
+    }
+
+    #[test]
+    fn adam_costs_more_than_sgd() {
+        let m = zoo::mobilenet_v2();
+        let mut cfg = TrainConfig::new(256, 8);
+        let sgd = stage_memory(&m, &cfg, 0, 10, 8, 1);
+        cfg.optimizer_mem_factor = 2.0;
+        let adam = stage_memory(&m, &cfg, 0, 10, 8, 1);
+        assert!(adam.optimizer_bytes > sgd.optimizer_bytes);
+        assert_eq!(adam.optimizer_bytes, 2 * sgd.optimizer_bytes);
+    }
+
+    #[test]
+    fn first_stage_counts_model_input() {
+        let m = zoo::resnet50(); // big 224x224 input
+        let cfg = TrainConfig::new(256, 4);
+        let s0 = stage_memory(&m, &cfg, 0, 5, 4, 1);
+        let s1 = stage_memory(&m, &cfg, 5, 10, 4, 1);
+        // The first stage stashes raw images; bytes must reflect that.
+        assert!(s0.activation_bytes_per_mb > 0);
+        assert!(s1.activation_bytes_per_mb > 0);
+    }
+}

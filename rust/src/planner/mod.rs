@@ -1,0 +1,20 @@
+//! Asteroid's parallelism planning (paper §3.3).
+//!
+//! * `plan`     — HPP plan representation + K_p policies (Fig. 4);
+//! * `memory`   — Eq. (3) per-stage memory model;
+//! * `alloc`    — Algorithm 1: micro-batch allocation within a group;
+//! * `cost`     — Eqs. (4)-(6), (8), (11): dominant-step latency model;
+//! * `dp`       — Algorithm 2: dynamic-programming stage/group search;
+//! * `baselines`— DP, EDDL, GPipe-PP, PipeDream, Dapple, HetPipe.
+
+pub mod alloc;
+pub mod baselines;
+pub mod cost;
+pub mod dp;
+pub mod memory;
+pub mod plan;
+
+pub use alloc::{allocate_microbatch, AllocOpts};
+pub use cost::{plan_steps, predicted_throughput, round_latency, StepCost};
+pub use dp::{plan_hpp, plan_hpp_sweep_microbatch, PlanOutcome, PlannerConfig};
+pub use plan::{KpPolicy, Plan, Stage};

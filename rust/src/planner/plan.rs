@@ -1,0 +1,267 @@
+//! HPP plan representation: stages, device groups, micro-batch
+//! allocations and the step sequence (Fig. 4 / Fig. 7 of the paper).
+
+use crate::config::ClusterSpec;
+use crate::model::ModelDesc;
+
+/// One pipeline stage: a contiguous slice of layers replicated over a
+/// device group with a per-device micro-batch sample allocation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Stage {
+    /// Layer range [start, end).
+    pub layers: (usize, usize),
+    /// Device ids of the group G_s.
+    pub devices: Vec<usize>,
+    /// Micro-batch allocation Y_s: samples per device, parallel to
+    /// `devices`, summing to the micro-batch size B.
+    pub alloc: Vec<usize>,
+    /// 1F1B warm-up depth K_p (number of FPs admitted before strict
+    /// one-forward-one-backward).
+    pub kp: usize,
+}
+
+impl Stage {
+    pub fn num_layers(&self) -> usize {
+        self.layers.1 - self.layers.0
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.devices.len()
+    }
+}
+
+/// A full hybrid-pipeline-parallelism plan.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Plan {
+    pub stages: Vec<Stage>,
+    /// Micro-batch size B.
+    pub microbatch: usize,
+    /// Micro-batches per HPP-Round, M.
+    pub num_micro: usize,
+}
+
+impl Plan {
+    pub fn num_stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// All device ids participating in the plan.
+    pub fn devices(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.stages.iter().flat_map(|s| s.devices.clone()).collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Samples processed per HPP-Round (throughput numerator).
+    pub fn samples_per_round(&self) -> usize {
+        self.microbatch * self.num_micro
+    }
+
+    /// Apply the paper's K_p policy `K_p = 2(P - p) - 1` (§3.2), clamped
+    /// to [1, M].
+    pub fn apply_default_kp(&mut self) {
+        let p_total = self.stages.len();
+        for (p, s) in self.stages.iter_mut().enumerate() {
+            s.kp = kp_policy_ours(p_total, p).min(self.num_micro).max(1);
+        }
+    }
+
+    /// Validate structural invariants against a model + cluster.
+    pub fn validate(&self, model: &ModelDesc, cluster: &ClusterSpec) -> anyhow::Result<()> {
+        use anyhow::bail;
+        if self.stages.is_empty() {
+            bail!("plan has no stages");
+        }
+        let mut cursor = 0;
+        for (i, s) in self.stages.iter().enumerate() {
+            if s.layers.0 != cursor {
+                bail!("stage {i} starts at layer {} expected {cursor}", s.layers.0);
+            }
+            if s.layers.1 <= s.layers.0 {
+                bail!("stage {i} empty layer range");
+            }
+            cursor = s.layers.1;
+            if s.devices.is_empty() {
+                bail!("stage {i} has no devices");
+            }
+            if s.devices.len() != s.alloc.len() {
+                bail!("stage {i}: {} devices but {} allocs", s.devices.len(), s.alloc.len());
+            }
+            let total: usize = s.alloc.iter().sum();
+            if total != self.microbatch {
+                bail!("stage {i}: alloc sums to {total}, micro-batch is {}", self.microbatch);
+            }
+            for &d in &s.devices {
+                if d >= cluster.n() {
+                    bail!("stage {i}: device {d} out of range");
+                }
+            }
+            if s.kp == 0 {
+                bail!("stage {i}: K_p must be >= 1");
+            }
+        }
+        if cursor != model.num_layers() {
+            bail!("stages cover {cursor} layers, model has {}", model.num_layers());
+        }
+        // No device may serve two stages.
+        let devs = self.devices();
+        for w in devs.windows(2) {
+            if w[0] == w[1] {
+                bail!("device {} assigned to multiple stages", w[0]);
+            }
+        }
+        Ok(())
+    }
+
+    /// Human-readable one-line description in the Fig. 12 style, e.g.
+    /// `[X0,X1|L0-4] -> [T3|L4-9]`.
+    pub fn describe(&self, cluster: &ClusterSpec) -> String {
+        self.stages
+            .iter()
+            .map(|s| {
+                let names: Vec<&str> = s
+                    .devices
+                    .iter()
+                    .map(|&d| cluster.devices[d].name.as_str())
+                    .collect();
+                format!("[{}|L{}-{}]", names.join(","), s.layers.0, s.layers.1)
+            })
+            .collect::<Vec<_>>()
+            .join(" -> ")
+    }
+}
+
+/// The paper's K_p selection policy (ours): `K_p = 2(P-p) - 1`.
+pub fn kp_policy_ours(p_total: usize, p: usize) -> usize {
+    (2 * (p_total - p)).saturating_sub(1).max(1)
+}
+
+/// Ablation policies of Fig. 15(b).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KpPolicy {
+    /// (a) K_p = 2(P-p)
+    TwoGapsPlusOne,
+    /// (b) K_p = P-p
+    Linear,
+    /// (c) K_p = 2(P-p)+1
+    TwoGapsPlusTwo,
+    /// (ours) K_p = 2(P-p)-1
+    Ours,
+    /// GPipe-style backward-after-forward: K_p = M.
+    AllForward,
+}
+
+impl KpPolicy {
+    pub fn kp(&self, p_total: usize, p: usize, m: usize) -> usize {
+        let v = match self {
+            KpPolicy::TwoGapsPlusOne => 2 * (p_total - p),
+            KpPolicy::Linear => p_total - p,
+            KpPolicy::TwoGapsPlusTwo => 2 * (p_total - p) + 1,
+            KpPolicy::Ours => kp_policy_ours(p_total, p),
+            KpPolicy::AllForward => m,
+        };
+        v.clamp(1, m.max(1))
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            KpPolicy::TwoGapsPlusOne => "a: 2(P-p)",
+            KpPolicy::Linear => "b: P-p",
+            KpPolicy::TwoGapsPlusTwo => "c: 2(P-p)+1",
+            KpPolicy::Ours => "ours: 2(P-p)-1",
+            KpPolicy::AllForward => "gpipe: M",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterSpec;
+    use crate::model::zoo;
+
+    fn plan2(model: &ModelDesc) -> Plan {
+        let cut = model.num_layers() / 2;
+        Plan {
+            stages: vec![
+                Stage { layers: (0, cut), devices: vec![0, 1], alloc: vec![4, 4], kp: 3 },
+                Stage {
+                    layers: (cut, model.num_layers()),
+                    devices: vec![2],
+                    alloc: vec![8],
+                    kp: 1,
+                },
+            ],
+            microbatch: 8,
+            num_micro: 4,
+        }
+    }
+
+    #[test]
+    fn validates_good_plan() {
+        let model = zoo::mobilenet_v2();
+        let cluster = ClusterSpec::env("A", 100.0).unwrap();
+        plan2(&model).validate(&model, &cluster).unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_plans() {
+        let model = zoo::mobilenet_v2();
+        let cluster = ClusterSpec::env("A", 100.0).unwrap();
+
+        let mut p = plan2(&model);
+        p.stages[1].layers.1 -= 1; // incomplete coverage
+        assert!(p.validate(&model, &cluster).is_err());
+
+        let mut p = plan2(&model);
+        p.stages[0].alloc = vec![4, 3]; // alloc sum mismatch
+        assert!(p.validate(&model, &cluster).is_err());
+
+        let mut p = plan2(&model);
+        p.stages[1].devices = vec![0]; // device reuse
+        assert!(p.validate(&model, &cluster).is_err());
+
+        let mut p = plan2(&model);
+        p.stages[1].devices = vec![99]; // unknown device
+        p.stages[1].alloc = vec![8];
+        assert!(p.validate(&model, &cluster).is_err());
+
+        let mut p = plan2(&model);
+        p.stages[0].kp = 0;
+        assert!(p.validate(&model, &cluster).is_err());
+    }
+
+    #[test]
+    fn kp_policy_values() {
+        // 3-stage pipeline, M = 8: ours gives 5, 3, 1 (paper Fig. 4: K0=5,
+        // K1=3, K2=1).
+        assert_eq!(kp_policy_ours(3, 0), 5);
+        assert_eq!(kp_policy_ours(3, 1), 3);
+        assert_eq!(kp_policy_ours(3, 2), 1);
+        assert_eq!(KpPolicy::Ours.kp(3, 0, 8), 5);
+        assert_eq!(KpPolicy::TwoGapsPlusOne.kp(3, 0, 8), 6);
+        assert_eq!(KpPolicy::Linear.kp(3, 0, 8), 3);
+        assert_eq!(KpPolicy::TwoGapsPlusTwo.kp(3, 0, 8), 7);
+        assert_eq!(KpPolicy::AllForward.kp(3, 0, 8), 8);
+        // clamped to M
+        assert_eq!(KpPolicy::TwoGapsPlusTwo.kp(5, 0, 4), 4);
+    }
+
+    #[test]
+    fn default_kp_applied() {
+        let model = zoo::mobilenet_v2();
+        let mut p = plan2(&model);
+        p.apply_default_kp();
+        assert_eq!(p.stages[0].kp, 3); // 2*(2-0)-1 = 3
+        assert_eq!(p.stages[1].kp, 1);
+    }
+
+    #[test]
+    fn describe_readable() {
+        let model = zoo::mobilenet_v2();
+        let cluster = ClusterSpec::env("A", 100.0).unwrap();
+        let d = plan2(&model).describe(&cluster);
+        assert!(d.contains("->"), "{d}");
+        assert!(d.starts_with("[N0,N1|L0-"), "{d}");
+    }
+}

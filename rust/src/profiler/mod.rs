@@ -1,0 +1,251 @@
+//! Asteroid Profiler: per-layer, per-device, per-batch execution times.
+//!
+//! The paper's profiler measures t_f^{d,l}(beta) and t_b^{d,l}(beta) on
+//! the physical boards for every batch size, because execution time is
+//! *non-linear* in batch size (Fig. 6).  Our substrate has no Jetson
+//! hardware, so the profile is produced by the calibrated device
+//! execution model (config::DeviceSpec):
+//!
+//!   t(beta) = overhead_s + (flops * beta + work_half) / peak_flops
+//!
+//! The planner only ever consumes the profile through this module's
+//! interface, exactly as Asteroid's planner consumes its measured
+//! profile — swapping in measured tables would not change any caller.
+//!
+//! `ProfileTable` precomputes per-device layer prefix sums so the
+//! planner's inner loop evaluates stage times T(i->j, beta) in O(1).
+
+use crate::config::{ClusterSpec, DeviceSpec};
+use crate::model::ModelDesc;
+
+/// FP execution time of one layer at batch `beta` on `dev`.
+pub fn layer_time_fwd(dev: &DeviceSpec, flops_fwd: f64, beta: usize) -> f64 {
+    if beta == 0 {
+        return 0.0;
+    }
+    dev.overhead_s + (flops_fwd * beta as f64 + dev.work_half) / dev.peak_flops
+}
+
+/// BP execution time of one layer at batch `beta` on `dev`.
+pub fn layer_time_bwd(dev: &DeviceSpec, flops_bwd: f64, beta: usize) -> f64 {
+    if beta == 0 {
+        return 0.0;
+    }
+    // BP launches ~2 kernels per layer (dgrad + wgrad).
+    2.0 * dev.overhead_s + (flops_bwd * beta as f64 + 2.0 * dev.work_half) / dev.peak_flops
+}
+
+/// Precomputed profile for (cluster, model): O(1) range queries of
+/// t_f/t_b over contiguous layer ranges.
+#[derive(Debug, Clone)]
+pub struct ProfileTable {
+    /// flops_fwd prefix sums: ff[l] = sum of flops_fwd for layers [0, l).
+    ff: Vec<f64>,
+    /// flops_bwd prefix sums.
+    fb: Vec<f64>,
+    /// Per-device cached constants.
+    devs: Vec<DevConst>,
+    pub num_layers: usize,
+}
+
+#[derive(Debug, Clone)]
+struct DevConst {
+    peak: f64,
+    work_half: f64,
+    overhead: f64,
+}
+
+impl ProfileTable {
+    pub fn new(cluster: &ClusterSpec, model: &ModelDesc) -> ProfileTable {
+        let n_l = model.num_layers();
+        let mut ff = vec![0.0; n_l + 1];
+        let mut fb = vec![0.0; n_l + 1];
+        for (i, l) in model.layers.iter().enumerate() {
+            ff[i + 1] = ff[i] + l.flops_fwd;
+            fb[i + 1] = fb[i] + l.flops_bwd;
+        }
+        let devs = cluster
+            .devices
+            .iter()
+            .map(|d| DevConst {
+                peak: d.peak_flops,
+                work_half: d.work_half,
+                overhead: d.overhead_s,
+            })
+            .collect();
+        ProfileTable { ff, fb, devs, num_layers: n_l }
+    }
+
+    /// FP time for layers [i, j) at batch `beta` on device `d`.
+    pub fn time_fwd(&self, d: usize, i: usize, j: usize, beta: usize) -> f64 {
+        debug_assert!(i <= j && j <= self.num_layers);
+        if beta == 0 || i == j {
+            return 0.0;
+        }
+        let dc = &self.devs[d];
+        let layers = (j - i) as f64;
+        let flops = self.ff[j] - self.ff[i];
+        layers * (dc.overhead + dc.work_half / dc.peak) + flops * beta as f64 / dc.peak
+    }
+
+    /// BP time for layers [i, j) at batch `beta` on device `d`.
+    pub fn time_bwd(&self, d: usize, i: usize, j: usize, beta: usize) -> f64 {
+        debug_assert!(i <= j && j <= self.num_layers);
+        if beta == 0 || i == j {
+            return 0.0;
+        }
+        let dc = &self.devs[d];
+        let layers = (j - i) as f64;
+        let flops = self.fb[j] - self.fb[i];
+        2.0 * layers * (dc.overhead + dc.work_half / dc.peak) + flops * beta as f64 / dc.peak
+    }
+
+    /// FP + BP time for layers [i, j) at batch `beta` on device `d`.
+    pub fn time_fwd_bwd(&self, d: usize, i: usize, j: usize, beta: usize) -> f64 {
+        self.time_fwd(d, i, j, beta) + self.time_bwd(d, i, j, beta)
+    }
+
+    /// Computing capacity v_d of Eq. (9): inverse FP+BP time over the
+    /// stage's layers with a full micro-batch.
+    pub fn capacity(&self, d: usize, i: usize, j: usize, micro: usize) -> f64 {
+        let t = self.time_fwd_bwd(d, i, j, micro);
+        if t <= 0.0 {
+            0.0
+        } else {
+            1.0 / t
+        }
+    }
+}
+
+/// Estimated wall-clock cost of running the *measurement* pass itself
+/// (paper Table 8: total profiling time per device).  The profiler
+/// measures every layer at batch sizes 1..=max_batch with `repeats`
+/// repetitions of FP and BP.
+pub fn profiling_cost(
+    dev: &DeviceSpec,
+    model: &ModelDesc,
+    max_batch: usize,
+    repeats: usize,
+) -> f64 {
+    let mut total = 0.0;
+    let mut beta = 1;
+    while beta <= max_batch {
+        for l in &model.layers {
+            total += repeats as f64
+                * (layer_time_fwd(dev, l.flops_fwd, beta)
+                    + layer_time_bwd(dev, l.flops_bwd, beta));
+        }
+        beta *= 2; // power-of-two batch sweep
+    }
+    total
+}
+
+/// Per-sample training time of the whole model on a single device at a
+/// given batch size (Table 1 epoch-time reproduction).
+pub fn on_device_sample_time(dev: &DeviceSpec, model: &ModelDesc, batch: usize) -> f64 {
+    let mut t = 0.0;
+    for l in &model.layers {
+        t += layer_time_fwd(dev, l.flops_fwd, batch) + layer_time_bwd(dev, l.flops_bwd, batch);
+    }
+    t / batch as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterSpec, DeviceKind, DeviceSpec};
+    use crate::model::zoo;
+
+    fn nano() -> DeviceSpec {
+        DeviceSpec::of_kind(DeviceKind::JetsonNano, 0)
+    }
+
+    #[test]
+    fn batch_time_is_nonlinear() {
+        // Fig. 6: doubling the batch must NOT double the time (fixed
+        // under-utilisation cost dominates at small batches).
+        let d = nano();
+        let t1 = layer_time_fwd(&d, 1e8, 1);
+        let t2 = layer_time_fwd(&d, 1e8, 2);
+        let t32 = layer_time_fwd(&d, 1e8, 32);
+        assert!(t2 < 2.0 * t1, "t2={t2} t1={t1}");
+        assert!(t32 < 32.0 * t1);
+        // ... but time is still monotone in batch.
+        assert!(t2 > t1 && t32 > t2);
+    }
+
+    #[test]
+    fn zero_batch_is_free() {
+        let d = nano();
+        assert_eq!(layer_time_fwd(&d, 1e9, 0), 0.0);
+        assert_eq!(layer_time_bwd(&d, 1e9, 0), 0.0);
+    }
+
+    #[test]
+    fn bwd_slower_than_fwd() {
+        let d = nano();
+        assert!(layer_time_bwd(&d, 2e8, 8) > layer_time_fwd(&d, 1e8, 8));
+    }
+
+    #[test]
+    fn profile_table_matches_direct_sum() {
+        let cluster = ClusterSpec::env("C", 100.0).unwrap();
+        let model = zoo::mobilenet_v2();
+        let table = ProfileTable::new(&cluster, &model);
+        for d in 0..cluster.n() {
+            let dev = &cluster.devices[d];
+            for (i, j) in [(0, 5), (3, 20), (0, model.num_layers())] {
+                let direct: f64 = model.layers[i..j]
+                    .iter()
+                    .map(|l| layer_time_fwd(dev, l.flops_fwd, 16))
+                    .sum();
+                let fast = table.time_fwd(d, i, j, 16);
+                assert!(
+                    (direct - fast).abs() < 1e-9,
+                    "d={d} range=({i},{j}): {direct} vs {fast}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn faster_device_has_higher_capacity() {
+        let cluster = ClusterSpec::env("C", 100.0).unwrap(); // NX, TX2 x2, Nano x3
+        let model = zoo::mobilenet_v2();
+        let table = ProfileTable::new(&cluster, &model);
+        let nl = model.num_layers();
+        let nx = table.capacity(0, 0, nl, 16);
+        let tx2 = table.capacity(1, 0, nl, 16);
+        let nano = table.capacity(3, 0, nl, 16);
+        assert!(nx > tx2 && tx2 > nano, "nx={nx} tx2={tx2} nano={nano}");
+    }
+
+    #[test]
+    fn table1_epoch_ratios_hold() {
+        // Reproduces the *ratios* of Table 1: A100 vastly faster than the
+        // Jetson boards on MobileNetV2.
+        let model = zoo::mobilenet_v2();
+        let a100 = on_device_sample_time(&DeviceSpec::of_kind(DeviceKind::A100, 0), &model, 32);
+        let nano = on_device_sample_time(&nano(), &model, 32);
+        let tx2 =
+            on_device_sample_time(&DeviceSpec::of_kind(DeviceKind::JetsonTX2, 0), &model, 32);
+        let r_nano = nano / a100;
+        let r_tx2 = tx2 / a100;
+        assert!(r_nano > 80.0 && r_nano < 320.0, "nano/a100 = {r_nano}");
+        assert!(r_tx2 > 30.0 && r_tx2 < 140.0, "tx2/a100 = {r_tx2}");
+        assert!(r_nano > r_tx2);
+    }
+
+    #[test]
+    fn profiling_cost_scales_with_layers_and_speed() {
+        let effnet = zoo::efficientnet_b1();
+        let bert = zoo::bert_small();
+        let d_nano = nano();
+        let d_nx = DeviceSpec::of_kind(DeviceKind::JetsonNX, 0);
+        // Table 8: Nano profiles slowest; more layers cost more.
+        assert!(profiling_cost(&d_nano, &effnet, 256, 3) > profiling_cost(&d_nx, &effnet, 256, 3));
+        assert!(
+            profiling_cost(&d_nano, &effnet, 256, 3) > profiling_cost(&d_nano, &bert, 256, 3) / 10.0
+        );
+    }
+}

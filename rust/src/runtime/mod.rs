@@ -1,0 +1,206 @@
+//! PJRT runtime: load AOT artifacts and execute them from the training
+//! hot path.  Python never runs here — the HLO text was produced once
+//! by `python/compile/aot.py` (see DESIGN.md for the HLO-text-vs-proto
+//! rationale) and is compiled by the in-process PJRT CPU client.
+//!
+//! XLA handles are not `Send`, so each pipeline worker thread builds its
+//! own `Runtime` (client + compiled executables) — mirroring the real
+//! system where every edge device runs its own Asteroid Worker process.
+
+pub mod params;
+pub mod tensor;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::model::from_manifest::{ArtifactSig, Manifest, ManifestModel};
+pub use params::{init_layer_params, LayerParams};
+pub use tensor::{Tensor, TensorData};
+
+/// A compiled model runtime: one PJRT client plus the compiled
+/// executables this worker's stage needs.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    exes: BTreeMap<String, (xla::PjRtLoadedExecutable, ArtifactSig)>,
+}
+
+impl Runtime {
+    /// Compile the named artifacts of `model` (or all of them when
+    /// `names` is empty).
+    pub fn load(model: &ManifestModel, names: &[&str]) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut exes = BTreeMap::new();
+        let wanted: Vec<String> = if names.is_empty() {
+            model.artifacts.keys().cloned().collect()
+        } else {
+            names.iter().map(|s| s.to_string()).collect()
+        };
+        for name in wanted {
+            let sig = model.artifact(&name)?.clone();
+            let proto = xla::HloModuleProto::from_text_file(
+                sig.file.to_str().context("artifact path not utf-8")?,
+            )
+            .with_context(|| format!("parsing HLO {:?}", sig.file))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))?;
+            exes.insert(name, (exe, sig));
+        }
+        Ok(Runtime { client, exes })
+    }
+
+    /// Convenience: load from an artifacts dir + model name.
+    pub fn load_model(artifacts_dir: &Path, model_name: &str, names: &[&str]) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        Runtime::load(manifest.model(model_name)?, names)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.exes.contains_key(name)
+    }
+
+    pub fn signature(&self, name: &str) -> Result<&ArtifactSig> {
+        Ok(&self
+            .exes
+            .get(name)
+            .with_context(|| format!("artifact {name:?} not loaded"))?
+            .1)
+    }
+
+    /// Execute an artifact on pre-converted literals (hot path: lets
+    /// callers cache parameter literals across micro-batches instead of
+    /// re-copying them per execution — see EXPERIMENTS.md §Perf).
+    pub fn execute_literals(
+        &self,
+        name: &str,
+        inputs: &[&xla::Literal],
+    ) -> Result<Vec<Tensor>> {
+        let (exe, sig) = self
+            .exes
+            .get(name)
+            .with_context(|| format!("artifact {name:?} not loaded"))?;
+        if inputs.len() != sig.inputs.len() {
+            anyhow::bail!(
+                "{name}: {} inputs given, signature wants {}",
+                inputs.len(),
+                sig.inputs.len()
+            );
+        }
+        let result = exe
+            .execute::<&xla::Literal>(inputs)
+            .with_context(|| format!("executing {name}"))?[0][0]
+            .to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        let mut out = Vec::with_capacity(parts.len());
+        for (p, s) in parts.iter().zip(&sig.outputs) {
+            out.push(
+                Tensor::from_literal(p).with_context(|| format!("{name} output {:?}", s.name))?,
+            );
+        }
+        Ok(out)
+    }
+
+    /// Execute an artifact on host tensors; returns the tuple outputs.
+    pub fn execute(&self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let (exe, sig) = self
+            .exes
+            .get(name)
+            .with_context(|| format!("artifact {name:?} not loaded"))?;
+        if inputs.len() != sig.inputs.len() {
+            anyhow::bail!(
+                "{name}: {} inputs given, signature wants {}",
+                inputs.len(),
+                sig.inputs.len()
+            );
+        }
+        for (t, s) in inputs.iter().zip(&sig.inputs) {
+            t.check_sig(s).with_context(|| format!("{name} input"))?;
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<Vec<_>>>()?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {name}"))?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        let parts = result.to_tuple()?;
+        let mut out = Vec::with_capacity(parts.len());
+        for (p, s) in parts.iter().zip(&sig.outputs) {
+            let t = Tensor::from_literal(p)
+                .with_context(|| format!("{name} output {:?}", s.name))?;
+            out.push(t);
+        }
+        Ok(out)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::from_manifest::Manifest;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_and_executes_lm_head_loss() {
+        let manifest = Manifest::load(&artifacts_dir()).unwrap();
+        let lm = manifest.model("lm").unwrap();
+        let rt = Runtime::load(lm, &["head_loss"]).unwrap();
+        assert!(rt.has("head_loss"));
+        assert!(!rt.has("block_fwd"));
+
+        let sig = rt.signature("head_loss").unwrap().clone();
+        // params + x as zeros except LN scale = 1 → uniform logits →
+        // loss = ln(vocab).
+        let vocab = *lm.config.get("vocab").unwrap() as usize;
+        let inputs: Vec<Tensor> = sig
+            .inputs
+            .iter()
+            .map(|s| {
+                if s.name == "lnf_scale" {
+                    Tensor::from_f32(&s.shape, vec![1.0; s.shape.iter().product()])
+                } else if s.dtype == crate::model::from_manifest::DType::S32 {
+                    Tensor::from_i32(&s.shape, vec![0; s.shape.iter().product()])
+                } else {
+                    Tensor::zeros_f32(&s.shape)
+                }
+            })
+            .collect();
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        let out = rt.execute("head_loss", &refs).unwrap();
+        assert_eq!(out.len(), 1);
+        let loss = out[0].scalar_f32().unwrap();
+        assert!(
+            (loss - (vocab as f32).ln()).abs() < 1e-4,
+            "loss {loss} vs ln({vocab})"
+        );
+    }
+
+    #[test]
+    fn rejects_wrong_arity_and_shapes() {
+        let manifest = Manifest::load(&artifacts_dir()).unwrap();
+        let lm = manifest.model("lm").unwrap();
+        let rt = Runtime::load(lm, &["head_loss"]).unwrap();
+        assert!(rt.execute("head_loss", &[]).is_err());
+        assert!(rt.execute("missing", &[]).is_err());
+        let bad = Tensor::zeros_f32(&[1]);
+        let sig = rt.signature("head_loss").unwrap().clone();
+        let mut inputs: Vec<Tensor> =
+            sig.inputs.iter().map(|s| Tensor::zeros_f32(&s.shape)).collect();
+        inputs[0] = bad;
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        assert!(rt.execute("head_loss", &refs).is_err());
+    }
+}

@@ -1,0 +1,142 @@
+//! Stage parameter state: host-side f32 buffers initialised from the
+//! manifest's init specs with the coordinator's deterministic RNG.
+//!
+//! Keeping parameters host-side (rather than as device literals) makes
+//! the optimizer a plain f32 stream, AllReduce a buffer average, and
+//! fault-tolerant replication (§3.4) a memcpy — the weights *are* the
+//! checkpoint.
+
+use crate::model::from_manifest::ManifestLayer;
+use crate::runtime::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Parameters (and gradient accumulators) of one model layer.
+#[derive(Debug, Clone)]
+pub struct LayerParams {
+    pub layer_name: String,
+    /// Parameter tensors, in artifact argument order.
+    pub values: Vec<Tensor>,
+    /// Gradient accumulators, same shapes.
+    pub grads: Vec<Tensor>,
+}
+
+impl LayerParams {
+    pub fn num_elements(&self) -> usize {
+        self.values.iter().map(|t| t.elements()).sum()
+    }
+
+    /// Zero all gradient accumulators (start of an HPP-Round).
+    pub fn zero_grads(&mut self) {
+        for g in &mut self.grads {
+            for v in g.as_f32_mut().unwrap() {
+                *v = 0.0;
+            }
+        }
+    }
+
+    /// Accumulate `delta` into the gradient buffers.
+    pub fn accumulate(&mut self, delta: &[Tensor]) -> anyhow::Result<()> {
+        anyhow::ensure!(delta.len() == self.grads.len(), "grad arity mismatch");
+        for (g, d) in self.grads.iter_mut().zip(delta) {
+            let gs = g.as_f32_mut()?;
+            let ds = d.as_f32()?;
+            anyhow::ensure!(gs.len() == ds.len(), "grad shape mismatch");
+            for (a, b) in gs.iter_mut().zip(ds) {
+                *a += *b;
+            }
+        }
+        Ok(())
+    }
+
+    /// Total bytes of the parameter values (replication cost).
+    pub fn byte_len(&self) -> usize {
+        self.values.iter().map(|t| t.byte_len()).sum()
+    }
+}
+
+/// Initialise one layer's parameters per the manifest spec.
+pub fn init_layer_params(layer: &ManifestLayer, rng: &mut Rng) -> LayerParams {
+    let mut values = Vec::with_capacity(layer.params.len());
+    let mut grads = Vec::with_capacity(layer.params.len());
+    for p in &layer.params {
+        let n = p.elements();
+        let mut data = vec![0.0f32; n];
+        match p.init.as_str() {
+            "zeros" => {}
+            "ones" => data.iter_mut().for_each(|v| *v = 1.0),
+            _ => rng.fill_normal(&mut data, p.scale as f32),
+        }
+        values.push(Tensor::from_f32(&p.shape, data));
+        grads.push(Tensor::zeros_f32(&p.shape));
+    }
+    LayerParams { layer_name: layer.name.clone(), values, grads }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::from_manifest::ParamInit;
+
+    fn mk_layer() -> ManifestLayer {
+        ManifestLayer {
+            name: "test".into(),
+            kind: "block".into(),
+            params: vec![
+                ParamInit { name: "w".into(), shape: vec![4, 4], init: "normal".into(), scale: 0.5 },
+                ParamInit { name: "b".into(), shape: vec![4], init: "zeros".into(), scale: 0.0 },
+                ParamInit { name: "s".into(), shape: vec![4], init: "ones".into(), scale: 0.0 },
+            ],
+            weight_bytes: 96,
+            out_bytes: 0,
+            flops_fwd: 0.0,
+            flops_bwd: 0.0,
+            artifact_fwd: "f".into(),
+            artifact_bwd: "b".into(),
+        }
+    }
+
+    #[test]
+    fn init_respects_spec() {
+        let mut rng = Rng::new(1);
+        let p = init_layer_params(&mk_layer(), &mut rng);
+        assert_eq!(p.values.len(), 3);
+        assert_eq!(p.num_elements(), 16 + 4 + 4);
+        let w = p.values[0].as_f32().unwrap();
+        assert!(w.iter().any(|&v| v != 0.0), "normal init all zero");
+        assert!(p.values[1].as_f32().unwrap().iter().all(|&v| v == 0.0));
+        assert!(p.values[2].as_f32().unwrap().iter().all(|&v| v == 1.0));
+        assert_eq!(p.byte_len(), (16 + 4 + 4) * 4);
+    }
+
+    #[test]
+    fn init_deterministic_per_seed() {
+        let a = init_layer_params(&mk_layer(), &mut Rng::new(7));
+        let b = init_layer_params(&mk_layer(), &mut Rng::new(7));
+        let c = init_layer_params(&mk_layer(), &mut Rng::new(8));
+        assert_eq!(a.values[0], b.values[0]);
+        assert_ne!(a.values[0], c.values[0]);
+    }
+
+    #[test]
+    fn grad_accumulation() {
+        let mut rng = Rng::new(1);
+        let mut p = init_layer_params(&mk_layer(), &mut rng);
+        let delta: Vec<Tensor> = p
+            .grads
+            .iter()
+            .map(|g| Tensor::from_f32(&g.shape, vec![2.0; g.elements()]))
+            .collect();
+        p.accumulate(&delta).unwrap();
+        p.accumulate(&delta).unwrap();
+        assert!(p.grads[0].as_f32().unwrap().iter().all(|&v| v == 4.0));
+        p.zero_grads();
+        assert!(p.grads[0].as_f32().unwrap().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn accumulate_arity_checked() {
+        let mut rng = Rng::new(1);
+        let mut p = init_layer_params(&mk_layer(), &mut rng);
+        assert!(p.accumulate(&[]).is_err());
+    }
+}

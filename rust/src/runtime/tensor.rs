@@ -1,0 +1,194 @@
+//! Host-side tensors exchanged between pipeline workers.
+//!
+//! XLA `Literal`s are not `Send`; workers exchange these plain buffers
+//! over channels and convert at the PJRT boundary.
+
+use anyhow::{bail, Result};
+
+use crate::model::from_manifest::{DType, TensorSig};
+
+/// A host tensor: shape + typed data.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Tensor {
+    pub fn zeros_f32(shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: TensorData::F32(vec![0.0; n]) }
+    }
+
+    pub fn from_f32(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape: shape.to_vec(), data: TensorData::F32(data) }
+    }
+
+    pub fn from_i32(shape: &[usize], data: Vec<i32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape: shape.to_vec(), data: TensorData::I32(data) }
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.elements() * 4
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self.data {
+            TensorData::F32(_) => DType::F32,
+            TensorData::I32(_) => DType::S32,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            TensorData::I32(_) => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match &mut self.data {
+            TensorData::F32(v) => Ok(v),
+            TensorData::I32(_) => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            TensorData::F32(_) => bail!("tensor is f32, expected i32"),
+        }
+    }
+
+    /// Scalar f32 extraction (loss values).
+    pub fn scalar_f32(&self) -> Result<f32> {
+        let v = self.as_f32()?;
+        if v.len() != 1 {
+            bail!("expected scalar, got {} elements", v.len());
+        }
+        Ok(v[0])
+    }
+
+    /// Validate against an artifact signature entry.
+    pub fn check_sig(&self, sig: &TensorSig) -> Result<()> {
+        if self.shape != sig.shape {
+            bail!(
+                "tensor {:?}: shape {:?} does not match signature {:?}",
+                sig.name,
+                self.shape,
+                sig.shape
+            );
+        }
+        if self.dtype() != sig.dtype {
+            bail!("tensor {:?}: dtype mismatch", sig.name);
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------- XLA boundary
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        // Single memcpy via the untyped constructor (vec1().reshape()
+        // copies twice — 10x slower on the 256 KB stage tensors; see
+        // EXPERIMENTS.md §Perf).
+        let lit = match &self.data {
+            TensorData::F32(v) => {
+                let bytes = unsafe {
+                    std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+                };
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::F32,
+                    &self.shape,
+                    bytes,
+                )?
+            }
+            TensorData::I32(v) => {
+                let bytes = unsafe {
+                    std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+                };
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::S32,
+                    &self.shape,
+                    bytes,
+                )?
+            }
+        };
+        Ok(lit)
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = match shape.ty() {
+            xla::ElementType::F32 => TensorData::F32(lit.to_vec::<f32>()?),
+            xla::ElementType::S32 => TensorData::I32(lit.to_vec::<i32>()?),
+            other => bail!("unsupported literal element type {other:?}"),
+        };
+        Ok(Tensor { shape: dims, data })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_accessors() {
+        let t = Tensor::from_f32(&[2, 3], vec![1.0; 6]);
+        assert_eq!(t.elements(), 6);
+        assert_eq!(t.byte_len(), 24);
+        assert!(t.as_f32().is_ok());
+        assert!(t.as_i32().is_err());
+        let i = Tensor::from_i32(&[4], vec![1, 2, 3, 4]);
+        assert!(i.as_i32().is_ok());
+        assert!(i.as_f32().is_err());
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::from_f32(&[2, 2], vec![0.0; 3]);
+    }
+
+    #[test]
+    fn scalar_extraction() {
+        assert_eq!(Tensor::from_f32(&[], vec![2.5]).scalar_f32().unwrap(), 2.5);
+        assert!(Tensor::from_f32(&[2], vec![1.0, 2.0]).scalar_f32().is_err());
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = Tensor::from_f32(&[2, 3], (0..6).map(|i| i as f32).collect());
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let t = Tensor::from_i32(&[4], vec![7, -1, 0, 3]);
+        let back = Tensor::from_literal(&t.to_literal().unwrap()).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn sig_check() {
+        use crate::model::from_manifest::{DType, TensorSig};
+        let sig = TensorSig { name: "x".into(), shape: vec![2, 2], dtype: DType::F32 };
+        assert!(Tensor::zeros_f32(&[2, 2]).check_sig(&sig).is_ok());
+        assert!(Tensor::zeros_f32(&[2, 3]).check_sig(&sig).is_err());
+        assert!(Tensor::from_i32(&[2, 2], vec![0; 4]).check_sig(&sig).is_err());
+    }
+}

@@ -1,0 +1,171 @@
+//! Discrete-event machinery: a time-ordered event queue and serialised
+//! point-to-point links.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::config::ClusterSpec;
+
+/// Min-heap event queue over f64 timestamps with stable FIFO tiebreak.
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Entry<E>>,
+    seq: u64,
+}
+
+struct Entry<E> {
+    time: f64,
+    seq: u64,
+    ev: E,
+}
+
+impl<E> PartialEq for Entry<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<E> Eq for Entry<E> {}
+impl<E> PartialOrd for Entry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Entry<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // reversed: BinaryHeap is a max-heap, we want earliest first
+        other
+            .time
+            .total_cmp(&self.time)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        EventQueue { heap: BinaryHeap::new(), seq: 0 }
+    }
+
+    pub fn push(&mut self, time: f64, ev: E) {
+        debug_assert!(time.is_finite(), "event at non-finite time");
+        self.heap.push(Entry { time, seq: self.seq, ev });
+        self.seq += 1;
+    }
+
+    pub fn pop(&mut self) -> Option<(f64, E)> {
+        self.heap.pop().map(|e| (e.time, e.ev))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Serialised directed links: one transfer at a time per (from, to)
+/// pair; messages queue FIFO behind the link's busy horizon.
+pub struct LinkSet {
+    n: usize,
+    /// bytes/s per directed pair (flattened n x n).
+    bandwidth: Vec<f64>,
+    latency: f64,
+    /// busy-until horizon per directed pair.
+    free_at: Vec<f64>,
+}
+
+impl LinkSet {
+    pub fn new(cluster: &ClusterSpec) -> LinkSet {
+        let n = cluster.n();
+        let mut bandwidth = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                bandwidth[i * n + j] = cluster.bandwidth[i][j];
+            }
+        }
+        LinkSet { n, bandwidth, latency: cluster.latency_s, free_at: vec![0.0; n * n] }
+    }
+
+    /// Enqueue a transfer at `now`; returns the arrival time.
+    pub fn send(&mut self, from: usize, to: usize, bytes: u64, now: f64) -> f64 {
+        if from == to {
+            return now; // local, free
+        }
+        let k = from * self.n + to;
+        let start = self.free_at[k].max(now);
+        let dur = bytes as f64 / self.bandwidth[k];
+        let end = start + dur;
+        self.free_at[k] = end;
+        end + self.latency
+    }
+
+    /// The link's current horizon (for tests / diagnostics).
+    pub fn free_at(&self, from: usize, to: usize) -> f64 {
+        self.free_at[from * self.n + to]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterSpec;
+
+    #[test]
+    fn queue_orders_by_time_then_fifo() {
+        let mut q = EventQueue::new();
+        q.push(2.0, "b");
+        q.push(1.0, "a");
+        q.push(2.0, "c");
+        assert_eq!(q.pop(), Some((1.0, "a")));
+        assert_eq!(q.pop(), Some((2.0, "b")));
+        assert_eq!(q.pop(), Some((2.0, "c")));
+        assert_eq!(q.pop(), None);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn queue_len() {
+        let mut q = EventQueue::new();
+        assert_eq!(q.len(), 0);
+        q.push(1.0, ());
+        q.push(2.0, ());
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn link_serialises_messages() {
+        let cluster = ClusterSpec::nanos(2, 100.0); // 12.5 MB/s
+        let mut links = LinkSet::new(&cluster);
+        let bw = 100.0 * 1e6 / 8.0;
+        let t1 = links.send(0, 1, (bw as u64) / 2, 0.0); // 0.5 s transfer
+        let t2 = links.send(0, 1, (bw as u64) / 2, 0.0); // queues behind
+        assert!((t1 - (0.5 + cluster.latency_s)).abs() < 1e-9);
+        assert!((t2 - (1.0 + cluster.latency_s)).abs() < 1e-9);
+        // Reverse direction is independent.
+        let t3 = links.send(1, 0, (bw as u64) / 2, 0.0);
+        assert!((t3 - t1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn local_send_is_free() {
+        let cluster = ClusterSpec::nanos(2, 100.0);
+        let mut links = LinkSet::new(&cluster);
+        assert_eq!(links.send(0, 0, 1_000_000, 5.0), 5.0);
+    }
+
+    #[test]
+    fn later_send_starts_later() {
+        let cluster = ClusterSpec::nanos(2, 100.0);
+        let mut links = LinkSet::new(&cluster);
+        links.send(0, 1, 12_500_000, 0.0); // busy until 1.0
+        let t = links.send(0, 1, 12_500_000, 3.0); // idle again at 3.0
+        assert!((t - (4.0 + cluster.latency_s)).abs() < 1e-9);
+        assert!((links.free_at(0, 1) - 4.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,128 @@
+//! Micro-benchmark harness (criterion is not vendored offline).
+//!
+//! Provides warmup, calibrated iteration counts, and mean/p50/p95
+//! reporting.  Bench binaries are registered in Cargo.toml with
+//! `harness = false` and run under `cargo bench`.
+
+use std::time::Instant;
+
+use super::stats::{human_secs, Summary};
+
+/// One benchmark result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub per_iter_s: Summary,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "{:<44} {:>12}/iter  (p50 {:>10}, p95 {:>10}, n={} x {})",
+            self.name,
+            human_secs(self.per_iter_s.mean),
+            human_secs(self.per_iter_s.p50),
+            human_secs(self.per_iter_s.p95),
+            self.per_iter_s.n,
+            self.iters,
+        );
+    }
+}
+
+/// Benchmark runner: calibrates an iteration count targeting
+/// ~`sample_target_s` per sample, then takes `samples` samples.
+pub struct Bencher {
+    pub warmup_s: f64,
+    pub sample_target_s: f64,
+    pub samples: usize,
+    pub results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup_s: 0.3,
+            sample_target_s: 0.1,
+            samples: 12,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher { warmup_s: 0.05, sample_target_s: 0.02, samples: 5, ..Default::default() }
+    }
+
+    /// Benchmark `f`, preventing the result from being optimised away.
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // Warmup + calibration.
+        let t0 = Instant::now();
+        let mut warm_iters = 0u64;
+        while t0.elapsed().as_secs_f64() < self.warmup_s || warm_iters == 0 {
+            std::hint::black_box(f());
+            warm_iters += 1;
+        }
+        let per_iter = t0.elapsed().as_secs_f64() / warm_iters as f64;
+        let iters = ((self.sample_target_s / per_iter).ceil() as u64).max(1);
+
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..iters {
+                std::hint::black_box(f());
+            }
+            samples.push(t.elapsed().as_secs_f64() / iters as f64);
+        }
+        let result = BenchResult {
+            name: name.to_string(),
+            iters,
+            per_iter_s: Summary::of(&samples),
+        };
+        result.report();
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// Mean seconds/iter of the most recent bench with this name.
+    pub fn mean_of(&self, name: &str) -> Option<f64> {
+        self.results
+            .iter()
+            .rev()
+            .find(|r| r.name == name)
+            .map(|r| r.per_iter_s.mean)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn benches_and_records() {
+        let mut b = Bencher { warmup_s: 0.01, sample_target_s: 0.002, samples: 3, results: vec![] };
+        let r = b.bench("noop-ish", || (0..100).sum::<u64>());
+        assert!(r.per_iter_s.mean > 0.0);
+        assert_eq!(b.results.len(), 1);
+        assert!(b.mean_of("noop-ish").is_some());
+        assert!(b.mean_of("nope").is_none());
+    }
+
+    #[test]
+    fn faster_code_benches_faster() {
+        let mut b = Bencher { warmup_s: 0.01, sample_target_s: 0.002, samples: 3, results: vec![] };
+        // black_box the bounds so the sums aren't const-folded away.
+        let fast = b
+            .bench("fast", || (0..std::hint::black_box(10u64)).sum::<u64>())
+            .per_iter_s
+            .mean;
+        let slow = b
+            .bench("slow", || {
+                (0..std::hint::black_box(100_000u64)).map(std::hint::black_box).sum::<u64>()
+            })
+            .per_iter_s
+            .mean;
+        assert!(slow > fast, "slow {slow} fast {fast}");
+    }
+}

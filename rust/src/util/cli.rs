@@ -1,0 +1,137 @@
+//! Tiny command-line parser (clap is not vendored in this environment).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and
+//! positional arguments, with typed accessors, defaults and a generated
+//! usage string.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line: positionals plus `--key value` options.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    /// `bool_flags` lists options that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, bool_flags: &[&str]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if bool_flags.contains(&name) {
+                    out.flags.push(name.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| anyhow!("option --{name} expects a value"))?;
+                    out.options.insert(name.to_string(), v);
+                }
+            } else if arg.starts_with('-') && arg.len() > 1 {
+                bail!("short options are not supported: {arg}");
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env(bool_flags: &[&str]) -> Result<Args> {
+        Args::parse(std::env::args().skip(1), bool_flags)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects a number, got {v:?}")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn require(&self, name: &str) -> Result<&str> {
+        self.get(name)
+            .ok_or_else(|| anyhow!("missing required option --{name}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string), &["verbose", "dry-run"]).unwrap()
+    }
+
+    #[test]
+    fn parses_positional_and_options() {
+        let a = args("plan --model lm --devices=5 cluster.json");
+        assert_eq!(a.positional, vec!["plan", "cluster.json"]);
+        assert_eq!(a.get("model"), Some("lm"));
+        assert_eq!(a.usize_or("devices", 0).unwrap(), 5);
+    }
+
+    #[test]
+    fn parses_bool_flags() {
+        let a = args("run --verbose --steps 10");
+        assert!(a.has_flag("verbose"));
+        assert!(!a.has_flag("dry-run"));
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 10);
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        let r = Args::parse(["--model".to_string()].into_iter(), &[]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn typed_errors() {
+        let a = args("x --n abc");
+        assert!(a.usize_or("n", 1).is_err());
+        assert!(a.require("missing").is_err());
+        assert_eq!(a.f64_or("missing", 2.5).unwrap(), 2.5);
+    }
+
+    #[test]
+    fn rejects_short_options() {
+        assert!(Args::parse(["-x".to_string()].into_iter(), &[]).is_err());
+    }
+}

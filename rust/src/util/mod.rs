@@ -1,0 +1,11 @@
+//! Offline-environment substrates: JSON, RNG, CLI parsing, statistics,
+//! a micro-bench harness and a property-testing harness.  These replace
+//! serde_json / rand / clap / criterion / proptest, none of which are
+//! vendored in this build environment.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,85 @@
+//! In-tree property-testing harness (proptest is not vendored offline).
+//!
+//! `check(cases, gen, prop)` runs `prop` against `cases` generated
+//! inputs; on failure it reports the case index and seed so the exact
+//! input can be regenerated.  Deterministic by default (fixed base
+//! seed) so CI is stable; set `ASTEROID_PROPTEST_SEED` to explore.
+
+use super::rng::Rng;
+
+/// Run `prop` on `cases` inputs drawn by `gen`.  Panics with the seed of
+/// the first failing case.
+pub fn check<T: std::fmt::Debug>(
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let base = std::env::var("ASTEROID_PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xA57E_401D_u64);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed on case {case}/{cases} (seed {seed:#x}):\n  input: {input:?}\n  {msg}"
+            );
+        }
+    }
+}
+
+/// Assert helper used inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_valid_property() {
+        check(
+            100,
+            |rng| (rng.below(100), rng.below(100)),
+            |&(a, b)| {
+                if a + b == b + a {
+                    Ok(())
+                } else {
+                    Err("addition not commutative".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn fails_invalid_property() {
+        check(
+            100,
+            |rng| rng.below(100),
+            |&a| if a < 95 { Ok(()) } else { Err(format!("{a} >= 95")) },
+        );
+    }
+
+    #[test]
+    fn generator_sees_distinct_seeds() {
+        let mut values = std::collections::HashSet::new();
+        check(
+            50,
+            |rng| rng.next_u64(),
+            |&v| {
+                values.insert(v);
+                Ok(())
+            },
+        );
+        assert!(values.len() > 40, "seeds not distinct enough");
+    }
+}

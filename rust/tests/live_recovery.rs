@@ -1,0 +1,129 @@
+//! Live fault-tolerance integration: a device exits mid-training and
+//! the pipeline replays — real PJRT execution before and after, with
+//! the checkpointed weights carried across the re-planning.
+
+use std::path::PathBuf;
+
+use asteroid::config::{ClusterSpec, TrainConfig};
+use asteroid::coordinator::Coordinator;
+use asteroid::data::LmTask;
+use asteroid::model::from_manifest::Manifest;
+use asteroid::pipeline::{OptimizerCfg, TrainOpts};
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[test]
+fn training_survives_device_exit_with_warm_weights() {
+    let artifacts = artifacts_dir();
+    let manifest = Manifest::load(&artifacts).expect("run `make artifacts` first");
+    let lm = manifest.model("lm").unwrap();
+    let micro = lm.microbatch;
+    let vocab = *lm.config.get("vocab").unwrap() as usize;
+    let seq = *lm.config.get("seq").unwrap() as usize;
+
+    // 3-device cluster so losing one still leaves a pipeline.
+    let cluster = ClusterSpec::env("D", 1000.0).unwrap();
+    let cfg = TrainConfig::new(micro * 4, micro);
+    let c = Coordinator::for_artifact_model(&artifacts, "lm", cluster, cfg).unwrap();
+    let plan = c.plan().unwrap().plan;
+    assert!(plan.devices().len() >= 2, "need a multi-device plan");
+
+    let opts = TrainOpts {
+        steps: 0, // set per phase by train_with_failure
+        opt: OptimizerCfg::Sgd { lr: 0.05, momentum: 0.9 },
+        seed: 11,
+        emulate: None,
+        log_every: 0,
+        initial_params: None,
+    };
+    let mut data = LmTask::new(vocab, seq, micro, 11);
+    let failed = *plan.devices().last().unwrap();
+    let (before, report, after) = c
+        .train_with_failure(&plan, &opts, &mut data, 8, failed, 6)
+        .unwrap();
+
+    // The replayed pipeline excludes the failed device.
+    assert!(!report.new_plan.devices().contains(&failed));
+
+    // Loss must *continue*, not restart: the first post-recovery loss
+    // stays close to the last pre-failure loss, far below a cold
+    // restart at ln(V).
+    let last_before = *before.losses.last().unwrap();
+    let first_after = after.losses[0];
+    let cold = (vocab as f64).ln();
+    assert!(
+        first_after < last_before + 0.4,
+        "warm-start lost progress: {last_before} -> {first_after}"
+    );
+    assert!(
+        first_after < cold - 0.5,
+        "looks like a cold restart: {first_after} vs ln(V) = {cold}"
+    );
+    // ... and training keeps improving afterwards.
+    let final_loss = *after.losses.last().unwrap();
+    assert!(final_loss <= first_after + 0.05, "{first_after} -> {final_loss}");
+}
+
+#[test]
+fn checkpoint_roundtrip_preserves_training_state() {
+    // Train k steps, stop, warm-start a fresh pipeline from the final
+    // weights: the loss must continue exactly as if uninterrupted.
+    let artifacts = artifacts_dir();
+    let manifest = Manifest::load(&artifacts).unwrap();
+    let lm = manifest.model("lm").unwrap();
+    let micro = lm.microbatch;
+    let vocab = *lm.config.get("vocab").unwrap() as usize;
+    let seq = *lm.config.get("seq").unwrap() as usize;
+    let nl = lm.layers.len();
+
+    let cluster = ClusterSpec::env("D", 1000.0).unwrap();
+    let cfg = TrainConfig::new(micro * 2, micro);
+    let c = Coordinator::for_artifact_model(&artifacts, "lm", cluster, cfg).unwrap();
+    let plan = asteroid::planner::Plan {
+        stages: vec![asteroid::planner::Stage {
+            layers: (0, nl),
+            devices: vec![0],
+            alloc: vec![micro],
+            kp: 1,
+        }],
+        microbatch: micro,
+        num_micro: 2,
+    };
+
+    let mut opts = TrainOpts {
+        steps: 5,
+        opt: OptimizerCfg::Sgd { lr: 0.05, momentum: 0.0 }, // no momentum: state is just weights
+        seed: 3,
+        log_every: 0,
+        ..Default::default()
+    };
+    let mut data = LmTask::new(vocab, seq, micro, 3);
+    let phase1 = c.train(&plan, &opts, &mut data).unwrap();
+    assert_eq!(phase1.final_params.len(), nl, "checkpoint covers every layer");
+
+    opts.initial_params = Some(std::sync::Arc::new(phase1.final_params.clone()));
+    opts.steps = 3;
+    let phase2 = c.train(&plan, &opts, &mut data).unwrap();
+
+    // Continuous run over the same data stream for reference.
+    let mut opts_ref = opts.clone();
+    opts_ref.initial_params = None;
+    opts_ref.steps = 8;
+    let mut data_ref = LmTask::new(vocab, seq, micro, 3);
+    let reference = c.train(&plan, &opts_ref, &mut data_ref).unwrap();
+
+    for (i, (split, cont)) in phase1
+        .losses
+        .iter()
+        .chain(&phase2.losses)
+        .zip(&reference.losses)
+        .enumerate()
+    {
+        assert!(
+            (split - cont).abs() < 1e-3,
+            "step {i}: split {split} vs continuous {cont}"
+        );
+    }
+}

@@ -1,0 +1,246 @@
+//! Property-based tests over the coordinator's planning invariants:
+//! random heterogeneous clusters, models and training configs must
+//! always yield plans that are structurally valid, memory-safe,
+//! allocation-complete and consistent between the analytic cost model
+//! and the event-accurate simulator.
+
+use asteroid::config::{ClusterSpec, DeviceKind, TrainConfig};
+use asteroid::model::zoo;
+use asteroid::planner::alloc::{allocate_microbatch, AllocOpts};
+use asteroid::planner::cost::{plan_peak_memory, plan_steps, round_latency};
+use asteroid::planner::dp::{plan_hpp, PlannerConfig};
+use asteroid::profiler::ProfileTable;
+use asteroid::sim::simulate_round;
+use asteroid::util::proptest::check;
+use asteroid::util::rng::Rng;
+
+/// Random heterogeneous cluster of 2..=7 devices.
+fn random_cluster(rng: &mut Rng) -> ClusterSpec {
+    let kinds = [DeviceKind::JetsonNano, DeviceKind::JetsonTX2, DeviceKind::JetsonNX];
+    let n = rng.range(2, 8);
+    let devs: Vec<DeviceKind> = (0..n).map(|_| *rng.choose(&kinds)).collect();
+    let mbps = *rng.choose(&[50.0, 100.0, 300.0, 1000.0]);
+    ClusterSpec::uniform(&devs, mbps)
+}
+
+fn random_model(rng: &mut Rng) -> asteroid::model::ModelDesc {
+    match rng.below(3) {
+        0 => zoo::mobilenet_v2(),
+        1 => zoo::efficientnet_b1(),
+        _ => zoo::bert_small(),
+    }
+}
+
+fn random_cfg(rng: &mut Rng) -> TrainConfig {
+    let micro = *rng.choose(&[4usize, 8, 16, 32]);
+    let m = rng.range(2, 33);
+    TrainConfig::new(micro * m, micro)
+}
+
+#[test]
+fn prop_plans_always_validate_and_fit_memory() {
+    check(
+        40,
+        |rng| {
+            let c = random_cluster(rng);
+            let m = random_model(rng);
+            let cfg = random_cfg(rng);
+            (c, m, cfg)
+        },
+        |(cluster, model, cfg)| {
+            let table = ProfileTable::new(cluster, model);
+            match plan_hpp(&table, cluster, model, cfg, &PlannerConfig::default()) {
+                Err(_) => Ok(()), // infeasible is a legal outcome
+                Ok(out) => {
+                    out.plan
+                        .validate(model, cluster)
+                        .map_err(|e| format!("invalid plan: {e:#}"))?;
+                    for (d, used) in plan_peak_memory(model, cfg, &out.plan) {
+                        if used > cluster.devices[d].mem_bytes {
+                            return Err(format!(
+                                "memory violated on {d}: {used} > {}",
+                                cluster.devices[d].mem_bytes
+                            ));
+                        }
+                    }
+                    if !(out.predicted_throughput.is_finite() && out.predicted_throughput > 0.0) {
+                        return Err("non-positive predicted throughput".into());
+                    }
+                    Ok(())
+                }
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_alloc_conserves_and_respects_limits() {
+    check(
+        60,
+        |rng| {
+            let cluster = random_cluster(rng);
+            let model = random_model(rng);
+            let cfg = random_cfg(rng);
+            let n = cluster.n();
+            let g = rng.range(1, n + 1);
+            let mut devs: Vec<usize> = (0..n).collect();
+            rng.shuffle(&mut devs);
+            devs.truncate(g);
+            let nl = model.num_layers();
+            let i = rng.below(nl - 1);
+            let j = rng.range(i + 1, nl + 1);
+            let kp = rng.range(1, 6);
+            (cluster, model, cfg, devs, i, j, kp)
+        },
+        |(cluster, model, cfg, devs, i, j, kp)| {
+            let table = ProfileTable::new(cluster, model);
+            match allocate_microbatch(
+                &table, cluster, model, cfg, *i, *j, devs, cfg.microbatch, *kp,
+                AllocOpts::default(),
+            ) {
+                Err(_) => Ok(()), // OOM is legal
+                Ok(alloc) => {
+                    if alloc.len() != devs.len() {
+                        return Err("alloc arity".into());
+                    }
+                    let total: usize = alloc.iter().sum();
+                    if total != cfg.microbatch {
+                        return Err(format!("allocated {total} != {}", cfg.microbatch));
+                    }
+                    // Memory limits hold per device.
+                    for (&d, &y) in devs.iter().zip(&alloc) {
+                        let cap = asteroid::planner::memory::max_batch_under_budget(
+                            model, cfg, *i, *j, *kp, &cluster.devices[d],
+                        );
+                        if y > cap {
+                            return Err(format!("device {d}: alloc {y} > cap {cap}"));
+                        }
+                    }
+                    Ok(())
+                }
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_sim_and_cost_model_agree() {
+    // The dominant-step approximation and the event-accurate simulator
+    // must stay within a modest constant factor on planner-chosen
+    // plans — this guards both against drifting.
+    check(
+        15,
+        |rng| {
+            let c = random_cluster(rng);
+            let m = random_model(rng);
+            let cfg = random_cfg(rng);
+            (c, m, cfg)
+        },
+        |(cluster, model, cfg)| {
+            let table = ProfileTable::new(cluster, model);
+            let Ok(out) = plan_hpp(&table, cluster, model, cfg, &PlannerConfig::default())
+            else {
+                return Ok(());
+            };
+            let steps = plan_steps(&table, cluster, model, &out.plan);
+            let predicted = round_latency(&steps, out.plan.num_micro);
+            let sim = simulate_round(&table, cluster, model, &out.plan);
+            let ratio = sim.round_latency / predicted;
+            if !(0.4..=2.5).contains(&ratio) {
+                return Err(format!(
+                    "cost model drift: sim {} vs predicted {predicted} (ratio {ratio})",
+                    sim.round_latency
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sim_conservation_and_memory_bounds() {
+    // Simulator invariants: K_p bounds in-flight micro-batches, busy
+    // time is positive on every participating device, and the network
+    // byte count matches the plan's analytic volume.
+    check(
+        20,
+        |rng| {
+            let c = random_cluster(rng);
+            let m = random_model(rng);
+            let cfg = random_cfg(rng);
+            (c, m, cfg)
+        },
+        |(cluster, model, cfg)| {
+            let table = ProfileTable::new(cluster, model);
+            let Ok(out) = plan_hpp(&table, cluster, model, cfg, &PlannerConfig::default())
+            else {
+                return Ok(());
+            };
+            let sim = simulate_round(&table, cluster, model, &out.plan);
+            for stage in &out.plan.stages {
+                for (&d, &share) in stage.devices.iter().zip(&stage.alloc) {
+                    if sim.peak_inflight[d] > stage.kp {
+                        return Err(format!(
+                            "device {d}: inflight {} > K_p {}",
+                            sim.peak_inflight[d], stage.kp
+                        ));
+                    }
+                    // Algorithm 1 may give a weak device zero samples —
+                    // it then legitimately idles; every device with a
+                    // share must compute.
+                    if share > 0 && sim.busy[d] <= 0.0 {
+                        return Err(format!("device {d} never computed"));
+                    }
+                }
+            }
+            let expected = asteroid::comm::hpp_volume(model, &out.plan);
+            if sim.bytes_on_network != expected {
+                return Err(format!(
+                    "network bytes {} != Eq.2 volume {expected}",
+                    sim.bytes_on_network
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_replan_preserves_coverage_after_any_failure() {
+    check(
+        25,
+        |rng| {
+            let c = random_cluster(rng);
+            let m = random_model(rng);
+            let cfg = random_cfg(rng);
+            let pick = rng.next_u64();
+            (c, m, cfg, pick)
+        },
+        |(cluster, model, cfg, pick)| {
+            let table = ProfileTable::new(cluster, model);
+            let Ok(out) = plan_hpp(&table, cluster, model, cfg, &PlannerConfig::default())
+            else {
+                return Ok(());
+            };
+            let devs = out.plan.devices();
+            if devs.len() < 2 {
+                return Ok(());
+            }
+            let failed = devs[(*pick as usize) % devs.len()];
+            match asteroid::fault::lightweight_replan(
+                &table, cluster, model, cfg, &out.plan, failed,
+            ) {
+                Err(_) => Ok(()), // survivors may legitimately OOM
+                Ok(r) => {
+                    r.plan
+                        .validate(model, cluster)
+                        .map_err(|e| format!("replan invalid: {e:#}"))?;
+                    if r.plan.devices().contains(&failed) {
+                        return Err("failed device still in plan".into());
+                    }
+                    Ok(())
+                }
+            }
+        },
+    );
+}
