@@ -1,0 +1,81 @@
+//! Schedule IR benchmarks: generation + simulator pricing on an
+//! 8-device / 8-stage plan (the shape the repro tables hammer).
+//!
+//! Uses the in-repo `util::bench::Bencher` harness (criterion is not
+//! vendored offline; benches run with `harness = false`).  On exit the
+//! results are recorded to `BENCH_schedule.json` at the repo root so
+//! later PRs have a trajectory:
+//!
+//!     cargo bench --bench schedule
+
+use asteroid::config::ClusterSpec;
+use asteroid::model::zoo;
+use asteroid::planner::plan::{Plan, Stage};
+use asteroid::profiler::ProfileTable;
+use asteroid::schedule::{GpipeFillDrain, OneFOneBKp, Schedule};
+use asteroid::sim::{price_schedule, simulate_round};
+use asteroid::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::default();
+
+    // 8 homogeneous devices, 8 single-device stages, M = 64.
+    let cluster = ClusterSpec::nanos(8, 100.0);
+    let model = zoo::mobilenet_v2();
+    let table = ProfileTable::new(&cluster, &model);
+    let nl = model.num_layers();
+    let mut plan = Plan {
+        stages: (0..8)
+            .map(|s| Stage {
+                layers: (s * nl / 8, (s + 1) * nl / 8),
+                devices: vec![s],
+                alloc: vec![32],
+                kp: 1,
+            })
+            .collect(),
+        microbatch: 32,
+        num_micro: 64,
+    };
+    plan.apply_default_kp();
+
+    b.bench("schedule_build/8dev_8stage_m64", || {
+        Schedule::for_sim(&plan, &model, &OneFOneBKp)
+    });
+    b.bench("schedule_build_gpipe/8dev_8stage_m64", || {
+        Schedule::for_sim(&plan, &model, &GpipeFillDrain)
+    });
+
+    let sched = Schedule::for_sim(&plan, &model, &OneFOneBKp);
+    b.bench("schedule_validate/8dev_8stage_m64", || sched.validate());
+    b.bench("price_schedule/8dev_8stage_m64", || {
+        price_schedule(&sched, &table, &cluster, &model, &plan)
+    });
+    // End-to-end wrapper (build + price), the planner sim_select path.
+    b.bench("simulate_round/8dev_8stage_m64", || {
+        simulate_round(&table, &cluster, &model, &plan)
+    });
+
+    // ---- record the trajectory ----------------------------------------
+    let rows: Vec<String> = b
+        .results
+        .iter()
+        .map(|r| {
+            format!(
+                "    {{\"name\": \"{}\", \"mean_s\": {:e}, \"p50_s\": {:e}, \
+                 \"p95_s\": {:e}, \"samples\": {}, \"iters_per_sample\": {}}}",
+                r.name, r.per_iter_s.mean, r.per_iter_s.p50, r.per_iter_s.p95,
+                r.per_iter_s.n, r.iters
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"schedule\",\n  \"shape\": \"8dev_8stage_m64\",\n  \
+         \"results\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n")
+    );
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_schedule.json");
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("recorded {path}"),
+        Err(e) => eprintln!("could not record {path}: {e}"),
+    }
+}

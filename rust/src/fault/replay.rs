@@ -9,6 +9,12 @@
 //! coordinator, re-run the full Algorithm-2 planner on the most
 //! powerful remaining device, redistribute all weights per the new
 //! configuration.
+//!
+//! Recovery *ordering* is not re-derived here: both mechanisms build
+//! the pre- and post-failure `schedule::Schedule`s and [`diff`] them —
+//! the diff names the micro-batches whose in-flight activations died
+//! with the failed device (the replay re-injection set) and which
+//! surviving devices actually need a new script.
 
 use anyhow::Result;
 
@@ -20,6 +26,7 @@ use crate::model::ModelDesc;
 use crate::planner::dp::{plan_hpp, PlannerConfig};
 use crate::planner::plan::Plan;
 use crate::profiler::ProfileTable;
+use crate::schedule::{diff, Schedule, ScheduleDiff, DEFAULT_POLICY};
 use crate::sim::simulate_round;
 
 /// How much slower the planner re-run is in the paper's heavy-
@@ -41,6 +48,19 @@ pub struct RecoveryReport {
     pub migration_s: f64,
     pub new_plan: Plan,
     pub new_throughput: f64,
+    /// Micro-batches whose in-flight activations died with the failed
+    /// device, in re-injection order — computed by diffing the pre-
+    /// and post-failure schedules (old schedule's warm-up window on
+    /// the failed device), never by re-implementing the K_p rules.
+    pub replay_micros: Vec<usize>,
+    /// Devices whose per-round script actually changed and need a new
+    /// dispatch (from the same schedule diff).
+    pub retasked_devices: Vec<usize>,
+    /// Pipeline refill latency of the post-recovery schedule (the new
+    /// schedule's warm-up).  Reported separately from `total_s` —
+    /// both mechanisms pay it identically inside the first resumed
+    /// round, so Fig. 16/17 comparisons exclude it.
+    pub refill_s: f64,
 }
 
 impl RecoveryReport {
@@ -71,6 +91,7 @@ pub fn lightweight_replay(
     let restore_s = restore_time(model, plan, &repl, failed_stage, bw);
     let r = lightweight_replan(table, cluster, model, cfg, plan, failed_dev)?;
     let migration_s = migration_time(cluster, &r, plan, bw);
+    let sdiff = recovery_diff(plan, &r.plan);
     let sim = simulate_round(table, cluster, model, &r.plan);
 
     Ok(RecoveryReport {
@@ -81,7 +102,22 @@ pub fn lightweight_replay(
         migration_s,
         new_throughput: sim.throughput,
         new_plan: r.plan,
+        replay_micros: sdiff.replay_micros,
+        retasked_devices: sdiff.retasked,
+        refill_s: sim.fill_latency,
     })
+}
+
+/// Diff the pre- and post-failure round schedules: the single source
+/// of recovery ordering for both mechanisms.  Uses the *runtime*
+/// (round-robin) sharding so `replay_micros` names the micro-batches
+/// that were actually resident on the failed device in the executing
+/// pipeline — under sample sharding every device touches every micro,
+/// which would over-approximate the replay set on replicated stages.
+fn recovery_diff(old_plan: &Plan, new_plan: &Plan) -> ScheduleDiff {
+    let old = Schedule::for_runtime(old_plan, DEFAULT_POLICY);
+    let new = Schedule::for_runtime(new_plan, DEFAULT_POLICY);
+    diff(&old, &new)
 }
 
 /// Heavy rescheduling baseline after `failed_dev` exits.
@@ -90,7 +126,7 @@ pub fn heavy_reschedule(
     cluster: &ClusterSpec,
     model: &ModelDesc,
     cfg: &TrainConfig,
-    _plan: &Plan,
+    plan: &Plan,
     failed_dev: usize,
     hb: &HeartbeatCfg,
 ) -> Result<RecoveryReport> {
@@ -126,6 +162,7 @@ pub fn heavy_reschedule(
             *d = keep[*d];
         }
     }
+    let sdiff = recovery_diff(plan, &new_plan);
     let sim = simulate_round(table, cluster, model, &new_plan);
 
     Ok(RecoveryReport {
@@ -136,6 +173,9 @@ pub fn heavy_reschedule(
         migration_s: redistribute_s,
         new_throughput: sim.throughput,
         new_plan,
+        replay_micros: sdiff.replay_micros,
+        retasked_devices: sdiff.retasked,
+        refill_s: sim.fill_latency,
     })
 }
 
@@ -241,6 +281,33 @@ mod tests {
         }
         // recovered by the end
         assert!(tl.last().unwrap().1 > 0.0);
+    }
+
+    #[test]
+    fn replay_ordering_comes_from_schedule_diff() {
+        let (cluster, model, table, cfg, plan) = setup();
+        let hb = HeartbeatCfg::default();
+        let failed = plan.devices()[0];
+        let lite =
+            lightweight_replay(&table, &cluster, &model, &cfg, &plan, failed, &hb).unwrap();
+        // The failed device's warm-up window is re-injected: micros
+        // start at 0 and never exceed the stage's effective K_p.
+        let stage = plan
+            .stages
+            .iter()
+            .find(|s| s.devices.contains(&failed))
+            .unwrap();
+        assert!(!lite.replay_micros.is_empty());
+        assert!(lite.replay_micros.len() <= stage.kp.min(plan.num_micro));
+        assert_eq!(lite.replay_micros[0], 0);
+        // Refill is a real but sub-round cost, excluded from total_s.
+        assert!(lite.refill_s > 0.0);
+        assert!(!lite.retasked_devices.contains(&failed));
+        // Heavy rescheduling reports the same diff-derived fields.
+        let heavy =
+            heavy_reschedule(&table, &cluster, &model, &cfg, &plan, failed, &hb).unwrap();
+        assert!(!heavy.replay_micros.is_empty());
+        assert!(heavy.refill_s > 0.0);
     }
 
     #[test]

@@ -21,5 +21,6 @@ pub mod planner;
 pub mod profiler;
 pub mod repro;
 pub mod runtime;
+pub mod schedule;
 pub mod sim;
 pub mod util;

@@ -31,8 +31,14 @@ impl DType {
         })
     }
 
-    pub fn bytes(&self) -> usize {
-        4
+    /// Bytes per element — the single source of truth for every size
+    /// computation (memory accounting, network byte counts, literal
+    /// conversion).  Future f16/bf16 support only changes this match.
+    pub fn size_bytes(&self) -> usize {
+        match self {
+            DType::F32 => 4,
+            DType::S32 => 4,
+        }
     }
 }
 
@@ -50,7 +56,7 @@ impl TensorSig {
     }
 
     pub fn byte_len(&self) -> usize {
-        self.elements() * self.dtype.bytes()
+        self.elements() * self.dtype.size_bytes()
     }
 
     fn from_json(j: &Json) -> Result<TensorSig> {
@@ -143,13 +149,15 @@ impl ManifestModel {
             .collect();
         let input_bytes = match self.kind.as_str() {
             "transformer" => {
+                // Token ids, s32.
                 let seq = *self.config.get("seq").unwrap_or(&128.0) as u64;
-                seq * 4
+                seq * DType::S32.size_bytes() as u64
             }
             _ => {
+                // Image tensor, f32.
                 let hw = *self.config.get("hw").unwrap_or(&32.0) as u64;
                 let c = *self.config.get("in_ch").unwrap_or(&3.0) as u64;
-                hw * hw * c * 4
+                hw * hw * c * DType::F32.size_bytes() as u64
             }
         };
         ModelDesc::new(&self.name, layers, input_bytes)

@@ -84,7 +84,9 @@ impl GroupComm {
 
     fn charge(&self, elements: usize) {
         if self.secs_per_byte > 0.0 {
-            let secs = self.secs_per_byte * (elements * 4) as f64;
+            // Gradients are f32; route the size through the dtype table.
+            let bytes = elements * crate::model::from_manifest::DType::F32.size_bytes();
+            let secs = self.secs_per_byte * bytes as f64;
             std::thread::sleep(Duration::from_secs_f64(secs));
         }
     }

@@ -1,7 +1,10 @@
 //! Real pipeline execution engine (the paper's Execution Phase, §3.2 +
 //! Fig. 11): worker threads with per-thread PJRT runtimes, bandwidth-
-//! shaped channels, 1F1B micro-batch scheduling, gradient accumulation,
-//! intra-stage AllReduce and in-Rust optimizers.
+//! shaped channels, gradient accumulation, intra-stage AllReduce and
+//! in-Rust optimizers.  Micro-batch ordering (1F1B with the K_p
+//! warm-up window) is not decided here: the orchestrator builds one
+//! `schedule::Schedule` for the round and each worker executes its
+//! device's compute script from it.
 
 pub mod channel;
 pub mod collective;

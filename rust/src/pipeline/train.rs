@@ -19,6 +19,7 @@ use crate::pipeline::collective::GroupComm;
 use crate::pipeline::optimizer::OptimizerCfg;
 use crate::pipeline::worker::{run_worker, Msg, Report, WorkerSpec};
 use crate::planner::plan::Plan;
+use crate::schedule::{Schedule, DEFAULT_POLICY};
 
 /// Training options for the real pipeline engine.
 #[derive(Debug, Clone)]
@@ -83,6 +84,15 @@ pub fn train(
     let n_stages = plan.stages.len();
     let m_total = plan.num_micro;
 
+    // ---- the round schedule: one IR, every worker executes its slice --
+    // Round-robin sharding (micro m -> slot m mod g) under the default
+    // 1F1B/K_p policy; each worker receives its device's compute script
+    // and never re-derives the order.
+    let sched = Schedule::for_runtime(plan, DEFAULT_POLICY);
+    // Hard check: an invalid schedule would deadlock the worker
+    // threads silently; validation is microseconds next to a round.
+    sched.validate().context("invalid round schedule")?;
+
     // ---- channels: one inbox per worker -------------------------------
     let mut txs: Vec<Vec<Tx<Msg>>> = Vec::new(); // [stage][slot]
     let mut rxs: Vec<Vec<Option<Rx<Msg>>>> = Vec::new();
@@ -132,8 +142,7 @@ pub fn train(
                 stage: p,
                 layers: stage.layers,
                 slot,
-                group: g,
-                kp: stage.kp,
+                script: sched.compute_script(p, slot),
                 num_micro: m_total,
                 is_first: p == 0,
                 is_last: p + 1 == n_stages,

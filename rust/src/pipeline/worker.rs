@@ -2,19 +2,22 @@
 //!
 //! Each worker thread owns its own PJRT runtime (XLA handles are not
 //! `Send`), its stage's parameters, optimizer state, and an in-memory
-//! task pool.  It asynchronously receives activations/gradients from
-//! adjacent stages, schedules micro-batch FP/BP in 1F1B order with the
-//! stage's K_p warm-up window, accumulates gradients across the
-//! HPP-Round, AllReduces within its replica group, and applies the
-//! optimizer — then reports to the coordinator and waits for the next
-//! round.
+//! task pool.  It executes its device's `schedule::ComputeOp` script —
+//! derived once from the plan's `schedule::Schedule` by the training
+//! orchestrator — blocking on the inputs each scripted op needs.  The
+//! worker itself contains **no scheduling logic**: 1F1B order and the
+//! K_p warm-up window are properties of the script, not of this loop.
+//! After the script it accumulates gradients across the HPP-Round,
+//! AllReduces within its replica group, applies the optimizer, then
+//! reports to the coordinator and waits for the next round.
 //!
 //! Intra-stage data parallelism assigns whole micro-batches round-robin
-//! across the group (micro m -> slot m mod g): batch-level DP with
-//! identical gradient math to sample sharding (gradients average over
-//! the same mini-batch), chosen because the AOT stage executables are
-//! shape-specialised to the planned micro-batch size.  DESIGN.md
-//! documents this substitution.
+//! across the group (micro m -> slot m mod g, the Schedule IR's
+//! `Sharding::RoundRobin`): batch-level DP with identical gradient math
+//! to sample sharding (gradients average over the same mini-batch),
+//! chosen because the AOT stage executables are shape-specialised to
+//! the planned micro-batch size.  DESIGN.md documents this
+//! substitution.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -26,6 +29,7 @@ use crate::pipeline::channel::{Rx, Tx};
 use crate::pipeline::collective::GroupComm;
 use crate::pipeline::optimizer::{Optimizer, OptimizerCfg};
 use crate::runtime::{init_layer_params, LayerParams, Runtime, Tensor};
+use crate::schedule::ComputeOp;
 use crate::util::rng::Rng;
 
 /// Messages between workers / coordinator.
@@ -68,8 +72,10 @@ pub struct WorkerSpec {
     /// Layer range [lo, hi) into the manifest layer list.
     pub layers: (usize, usize),
     pub slot: usize,
-    pub group: usize,
-    pub kp: usize,
+    /// This device's ordered FP/BP work for one HPP-Round, from
+    /// `Schedule::compute_script(stage, slot)` — the single source of
+    /// 1F1B/K_p ordering.
+    pub script: Vec<ComputeOp>,
     pub num_micro: usize,
     pub is_first: bool,
     pub is_last: bool,
@@ -196,7 +202,7 @@ fn worker_loop(
         }
         lits = build_lits(&params)?;
 
-        let assigned = (0..spec.num_micro).filter(|m| m % spec.group == spec.slot).count();
+        let assigned = spec.script.iter().filter(|op| op.is_fwd()).count();
         report
             .send(Report::RoundDone {
                 stage: spec.stage,
@@ -231,7 +237,31 @@ fn worker_loop(
     }
 }
 
-/// Process one HPP-Round; returns the loss sum (head stage only).
+/// Pump one message from the inbox into the per-kind buffers.
+fn pump(
+    rx: &Rx<Msg>,
+    acts: &mut BTreeMap<usize, Tensor>,
+    grads_in: &mut BTreeMap<usize, Tensor>,
+    targets: &mut BTreeMap<usize, Tensor>,
+) -> Result<()> {
+    match rx.recv()? {
+        Msg::Act { micro, t } => {
+            acts.insert(micro, t);
+        }
+        Msg::Grad { micro, t } => {
+            grads_in.insert(micro, t);
+        }
+        Msg::Targets { micro, t } => {
+            targets.insert(micro, t);
+        }
+        Msg::Stop => bail!("stopped mid-round"),
+        Msg::NextRound => bail!("unexpected NextRound mid-round"),
+    }
+    Ok(())
+}
+
+/// Process one HPP-Round by executing the worker's schedule script;
+/// returns the loss sum (head stage only).
 #[allow(clippy::too_many_arguments)]
 fn run_round(
     spec: &WorkerSpec,
@@ -243,86 +273,76 @@ fn run_round(
     next: &[Tx<Msg>],
     prev: &[Tx<Msg>],
 ) -> Result<f64> {
-    let assigned: Vec<usize> =
-        (0..spec.num_micro).filter(|m| m % spec.group == spec.slot).collect();
-    let a_count = assigned.len();
-
     let mut acts: BTreeMap<usize, Tensor> = BTreeMap::new();
     let mut grads_in: BTreeMap<usize, Tensor> = BTreeMap::new();
     let mut targets: BTreeMap<usize, Tensor> = BTreeMap::new();
     // Per-micro stash of layer inputs (for the rematerialising BP).
     let mut stash: BTreeMap<usize, Vec<Tensor>> = BTreeMap::new();
-    let mut fp_issued = 0usize;
-    let mut bp_done = 0usize;
+    // Head stage only: boundary activations awaiting their scheduled
+    // Bwd (the head artifact fuses its FP with the loss BP, so the
+    // head runs at the Bwd position to honour the script order under
+    // any policy — fill-drain included).
+    let mut head_acts: BTreeMap<usize, Tensor> = BTreeMap::new();
     let mut loss_sum = 0.0f64;
 
     let head_is_here = spec.is_last;
 
-    while bp_done < a_count {
-        // ---- 1F1B scheduling: BP first, then K_p-gated FP.
-        let bp_candidate = grads_in
-            .keys()
-            .next()
-            .copied()
-            .filter(|m| stash.contains_key(m));
-        if let Some(m) = bp_candidate {
-            let g = grads_in.remove(&m).unwrap();
-            let inputs = stash.remove(&m).unwrap();
-            let gx = backward_through(layers, rt, params, lits, &inputs, g)?;
-            if !spec.is_first {
-                let t = gx.context("non-first stage must produce an input gradient")?;
-                let bytes = t.byte_len();
-                prev[m % prev.len()].send(bytes, Msg::Grad { micro: m, t })?;
+    for op in &spec.script {
+        match *op {
+            ComputeOp::Fwd(m) => {
+                // Block until this op's inputs are in (the script order
+                // already respects 1F1B and the K_p window).
+                while !acts.contains_key(&m) {
+                    pump(rx, &mut acts, &mut grads_in, &mut targets)?;
+                }
+                let x = acts.remove(&m).unwrap();
+                if head_is_here {
+                    let n = layers.len();
+                    let (cur, inputs) =
+                        forward_through(&layers[..n - 1], rt, &lits[..n - 1], x)?;
+                    stash.insert(m, inputs);
+                    head_acts.insert(m, cur);
+                } else {
+                    let (out, inputs) = forward_through(layers, rt, lits, x)?;
+                    stash.insert(m, inputs);
+                    let bytes = out.byte_len();
+                    next[m % next.len()].send(bytes, Msg::Act { micro: m, t: out })?;
+                }
             }
-            bp_done += 1;
-            continue;
-        }
-
-        let inflight = fp_issued - bp_done;
-        let fp_candidate = acts
-            .keys()
-            .next()
-            .copied()
-            .filter(|_| fp_issued < a_count && inflight < spec.kp)
-            .filter(|m| !head_is_here || targets.contains_key(m));
-        if let Some(m) = fp_candidate {
-            let x = acts.remove(&m).unwrap();
-            if head_is_here {
-                // FP + fused head BP + local BP through stashed layers.
-                let tgt = targets.remove(&m).unwrap();
-                let loss_gx =
-                    forward_backward_with_head(layers, rt, params, lits, x, &tgt)?;
-                loss_sum += loss_gx.0 as f64;
+            ComputeOp::Bwd(m) => {
+                let gx = if head_is_here {
+                    // Fused head FP+BP on the stashed boundary
+                    // activation, then BP through the stashed layers.
+                    while !targets.contains_key(&m) {
+                        pump(rx, &mut acts, &mut grads_in, &mut targets)?;
+                    }
+                    let tgt = targets.remove(&m).unwrap();
+                    let cur = head_acts
+                        .remove(&m)
+                        .with_context(|| format!("no head activation for micro {m}"))?;
+                    let inputs = stash
+                        .remove(&m)
+                        .with_context(|| format!("no stashed inputs for micro {m}"))?;
+                    let (loss, gx) =
+                        head_backward(layers, rt, params, lits, cur, &tgt, &inputs)?;
+                    loss_sum += loss as f64;
+                    gx
+                } else {
+                    while !grads_in.contains_key(&m) {
+                        pump(rx, &mut acts, &mut grads_in, &mut targets)?;
+                    }
+                    let g = grads_in.remove(&m).unwrap();
+                    let inputs = stash
+                        .remove(&m)
+                        .with_context(|| format!("no stashed inputs for micro {m}"))?;
+                    backward_through(layers, rt, params, lits, &inputs, g)?
+                };
                 if !spec.is_first {
-                    let t = loss_gx.1.context("head stage with prev must emit g_x")?;
+                    let t = gx.context("non-first stage must produce an input gradient")?;
                     let bytes = t.byte_len();
                     prev[m % prev.len()].send(bytes, Msg::Grad { micro: m, t })?;
                 }
-                fp_issued += 1;
-                bp_done += 1;
-            } else {
-                let (out, inputs) = forward_through(layers, rt, lits, x)?;
-                stash.insert(m, inputs);
-                let bytes = out.byte_len();
-                next[m % next.len()].send(bytes, Msg::Act { micro: m, t: out })?;
-                fp_issued += 1;
             }
-            continue;
-        }
-
-        // ---- nothing runnable: block for the next message.
-        match rx.recv()? {
-            Msg::Act { micro, t } => {
-                acts.insert(micro, t);
-            }
-            Msg::Grad { micro, t } => {
-                grads_in.insert(micro, t);
-            }
-            Msg::Targets { micro, t } => {
-                targets.insert(micro, t);
-            }
-            Msg::Stop => bail!("stopped mid-round"),
-            Msg::NextRound => bail!("unexpected NextRound mid-round"),
         }
     }
     Ok(loss_sum)
@@ -354,23 +374,23 @@ fn forward_through(
     Ok((cur, inputs))
 }
 
-/// FP through non-head layers, fused head FP+BP, then BP back through
-/// this stage's stashed layers.  Returns (loss, gradient for the
-/// previous stage if any).
-fn forward_backward_with_head(
+/// Fused head FP+BP on the stashed boundary activation `cur`, then BP
+/// back through this stage's stashed non-head layers.  Returns (loss,
+/// gradient for the previous stage if any).
+fn head_backward(
     layers: &[crate::model::from_manifest::ManifestLayer],
     rt: &Runtime,
     params: &mut [LayerParams],
     lits: &[Vec<xla::Literal>],
-    x: Tensor,
+    cur: Tensor,
     targets: &Tensor,
+    inputs: &[Tensor],
 ) -> Result<(f32, Option<Tensor>)> {
     let n = layers.len();
     let head = &layers[n - 1];
     if head.kind != "head" {
         bail!("last layer of head stage must be kind=head, got {}", head.kind);
     }
-    let (cur, inputs) = forward_through(&layers[..n - 1], rt, &lits[..n - 1], x)?;
 
     // head_fwdbwd: (params..., x, targets) -> (loss, g_params..., g_x)
     let cur_lit = cur.to_literal()?;
@@ -388,7 +408,7 @@ fn forward_backward_with_head(
     params[n - 1].accumulate(&out)?;
 
     // BP back through the stashed non-head layers.
-    let gx = backward_through(&layers[..n - 1], rt, params, lits, &inputs, gx)?;
+    let gx = backward_through(&layers[..n - 1], rt, params, lits, inputs, gx)?;
     Ok((loss, gx))
 }
 

@@ -12,6 +12,7 @@ use crate::planner::cost::{plan_steps, round_latency};
 use crate::planner::dp::PlanOutcome;
 use crate::planner::plan::{Plan, Stage};
 use crate::profiler::ProfileTable;
+use crate::schedule::{Schedule, DEFAULT_POLICY};
 
 /// Plan conventional data parallelism over all cluster devices.
 pub fn plan_dp(
@@ -39,6 +40,7 @@ pub fn plan_dp(
         predicted_throughput: plan.samples_per_round() as f64 / latency,
         predicted_latency: latency,
         planning_time_s: t0.elapsed().as_secs_f64(),
+        schedule: Schedule::for_sim(&plan, model, DEFAULT_POLICY),
         plan,
     })
 }

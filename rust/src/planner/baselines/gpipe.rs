@@ -14,6 +14,7 @@ use crate::planner::cost::{plan_steps, round_latency};
 use crate::planner::dp::PlanOutcome;
 use crate::planner::plan::{kp_policy_ours, Plan, Stage};
 use crate::profiler::ProfileTable;
+use crate::schedule::{Schedule, DEFAULT_POLICY};
 
 /// Chain-partition the model into `n` single-device stages minimising
 /// the max per-stage FP+BP time (compute only, no comm terms).
@@ -93,6 +94,7 @@ pub fn plan_gpipe_pp(
         predicted_throughput: plan.samples_per_round() as f64 / latency,
         predicted_latency: latency,
         planning_time_s: t0.elapsed().as_secs_f64(),
+        schedule: Schedule::for_sim(&plan, model, DEFAULT_POLICY),
         plan,
     })
 }

@@ -19,6 +19,7 @@ use crate::planner::alloc::{allocate_microbatch, AllocOpts};
 use crate::planner::cost::{comm_step_cost, exec_step_cost, round_latency, StepCost};
 use crate::planner::plan::{KpPolicy, Plan, Stage};
 use crate::profiler::ProfileTable;
+use crate::schedule::{Schedule, DEFAULT_POLICY};
 
 /// Planner behaviour configuration (ablations of Fig. 15(a)).
 #[derive(Debug, Clone, Copy)]
@@ -53,6 +54,10 @@ impl Default for PlannerConfig {
 #[derive(Debug, Clone)]
 pub struct PlanOutcome {
     pub plan: Plan,
+    /// The chosen plan's explicit HPP-Round schedule (default policy,
+    /// sample-sharded) — downstream layers consume this instead of
+    /// re-deriving 1F1B/K_p ordering from the plan.
+    pub schedule: Schedule,
     /// Predicted HPP-Round latency (seconds) from the cost model.
     pub predicted_latency: f64,
     /// Predicted throughput (samples/s).
@@ -234,23 +239,28 @@ pub fn plan_hpp(
             cluster.describe()
         );
     }
-    let best = if pc.sim_select && finalists.len() > 1 {
-        let sim_latency = |e: &QEntry| -> f64 {
+    // Price each finalist's explicit schedule with the event-accurate
+    // executor (one Schedule build + pricing per finalist); the
+    // winner's schedule is reused in the outcome instead of rebuilt.
+    let (best, prebuilt): (&QEntry, Option<Schedule>) = if pc.sim_select && finalists.len() > 1
+    {
+        let scored = finalists.iter().map(|e| {
             let plan = Plan { stages: e.stages.clone(), microbatch: b, num_micro: m };
-            crate::sim::simulate_round(table, cluster, model, &plan).round_latency
-        };
-        let scored: Vec<(f64, &QEntry)> =
-            finalists.iter().map(|e| (sim_latency(e), *e)).collect();
-        scored
-            .into_iter()
+            let sched = Schedule::for_sim(&plan, model, DEFAULT_POLICY);
+            let lat =
+                crate::sim::price_schedule(&sched, table, cluster, model, &plan).round_latency;
+            (lat, *e, sched)
+        });
+        let (_, e, sched) = scored
             .min_by(|x, y| x.0.partial_cmp(&y.0).unwrap())
-            .unwrap()
-            .1
+            .unwrap();
+        (e, Some(sched))
     } else {
-        *finalists
+        let e = *finalists
             .iter()
             .min_by(|x, y| x.latency.partial_cmp(&y.latency).unwrap())
-            .unwrap()
+            .unwrap();
+        (e, None)
     };
 
     let plan = Plan {
@@ -259,11 +269,14 @@ pub fn plan_hpp(
         num_micro: m,
     };
     plan.validate(model, cluster)?;
+    let schedule =
+        prebuilt.unwrap_or_else(|| Schedule::for_sim(&plan, model, DEFAULT_POLICY));
     let latency = best.latency;
     Ok(PlanOutcome {
         predicted_throughput: plan.samples_per_round() as f64 / latency,
         predicted_latency: latency,
         planning_time_s: t0.elapsed().as_secs_f64(),
+        schedule,
         plan,
     })
 }
@@ -332,6 +345,16 @@ mod tests {
         out.plan.validate(&model, &cluster).unwrap();
         assert!(out.predicted_throughput > 0.0);
         assert!(out.plan.num_stages() >= 1 && out.plan.num_stages() <= 5);
+    }
+
+    #[test]
+    fn outcome_carries_valid_schedule() {
+        let model = zoo::mobilenet_v2();
+        let (out, _) = plan_model(&model, "B", 100.0, 256, 16);
+        out.schedule.validate().unwrap();
+        assert_eq!(out.schedule.num_stages, out.plan.num_stages());
+        assert_eq!(out.schedule.num_micro, out.plan.num_micro);
+        assert_eq!(out.schedule.timelines.len(), out.plan.devices().len());
     }
 
     #[test]

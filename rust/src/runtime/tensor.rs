@@ -40,8 +40,11 @@ impl Tensor {
         self.shape.iter().product()
     }
 
+    /// Size in bytes, dtype-aware: all memory and network accounting
+    /// routes through `DType::size_bytes()` so a future f16/bf16 dtype
+    /// cannot silently miscount.
     pub fn byte_len(&self) -> usize {
-        self.elements() * 4
+        self.elements() * self.dtype().size_bytes()
     }
 
     pub fn dtype(&self) -> DType {
@@ -106,7 +109,10 @@ impl Tensor {
         let lit = match &self.data {
             TensorData::F32(v) => {
                 let bytes = unsafe {
-                    std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+                    std::slice::from_raw_parts(
+                        v.as_ptr() as *const u8,
+                        std::mem::size_of_val(v.as_slice()),
+                    )
                 };
                 xla::Literal::create_from_shape_and_untyped_data(
                     xla::ElementType::F32,
@@ -116,7 +122,10 @@ impl Tensor {
             }
             TensorData::I32(v) => {
                 let bytes = unsafe {
-                    std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+                    std::slice::from_raw_parts(
+                        v.as_ptr() as *const u8,
+                        std::mem::size_of_val(v.as_slice()),
+                    )
                 };
                 xla::Literal::create_from_shape_and_untyped_data(
                     xla::ElementType::S32,
@@ -154,6 +163,15 @@ mod tests {
         let i = Tensor::from_i32(&[4], vec![1, 2, 3, 4]);
         assert!(i.as_i32().is_ok());
         assert!(i.as_f32().is_err());
+    }
+
+    #[test]
+    fn byte_len_routes_through_dtype() {
+        use crate::model::from_manifest::DType;
+        let f = Tensor::zeros_f32(&[3, 5]);
+        assert_eq!(f.byte_len(), f.elements() * DType::F32.size_bytes());
+        let i = Tensor::from_i32(&[7], vec![0; 7]);
+        assert_eq!(i.byte_len(), i.elements() * DType::S32.size_bytes());
     }
 
     #[test]

@@ -1,0 +1,830 @@
+//! The Schedule IR: one explicit HPP-Round timeline, four consumers.
+//!
+//! Asteroid's central artifact is the HPP-Round schedule — per-device
+//! 1F1B ordering with a per-stage K_p warm-up window (§3.2).  This
+//! module makes that schedule an explicit, plan-derived intermediate
+//! representation: a typed per-device timeline of [`Task`]s generated
+//! once from a [`Plan`] by a pluggable [`SchedulePolicy`].
+//!
+//! Consumers (see `docs/SCHEDULE.md` for the worked example):
+//!   * `sim::price_schedule` — prices a `Schedule` against the
+//!     `ProfileTable` and `LinkSet`; `sim::simulate_round` is now a
+//!     thin wrapper that builds the default schedule and prices it.
+//!   * `pipeline::worker` — each live worker executes its device's
+//!     [`ComputeOp`] script instead of re-deriving 1F1B order from
+//!     message-arrival heuristics.
+//!   * `planner::dp` — `sim_select` prices candidate schedules, and
+//!     `PlanOutcome` carries the chosen `Schedule` downstream.
+//!   * `fault::replay` — recovery ordering comes from [`diff`]ing the
+//!     pre- and post-failure schedules instead of re-implementing the
+//!     warm-up rules.
+//!
+//! Two sharding modes mirror the two execution substrates:
+//! [`Sharding::SampleShard`] is the paper's Fig. 10 intra-stage data
+//! parallelism (each micro-batch sample-sliced across the group — what
+//! the simulator prices), [`Sharding::RoundRobin`] assigns whole
+//! micro-batches round-robin (what the live runtime executes; see
+//! `pipeline::worker` docs for why).
+
+pub mod policy;
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+
+use anyhow::{bail, Result};
+
+use crate::model::ModelDesc;
+use crate::planner::plan::Plan;
+
+pub use policy::{ComputeOp, GpipeFillDrain, OneFOneBKp, SchedulePolicy};
+
+/// The one schedule policy every consumer (planner, simulator, live
+/// runtime, fault replay) uses unless a caller explicitly passes
+/// another: the paper's 1F1B with K_p warm-up.  Keeping this a single
+/// named constant prevents the call sites from silently disagreeing
+/// about the default; threading a *per-run* policy through
+/// `PlanOutcome` is the next step once a second runtime policy lands
+/// (see ROADMAP).
+pub const DEFAULT_POLICY: &dyn SchedulePolicy = &OneFOneBKp;
+
+/// What an inter-stage transfer carries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Payload {
+    /// Forward boundary activations (stage p -> p+1).
+    Activation,
+    /// Backward boundary gradients (stage p -> p-1).
+    Gradient,
+}
+
+/// One scheduled unit of work on a device timeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Task {
+    /// Forward pass of one micro-batch (this device's share of it).
+    Fwd { micro: usize },
+    /// Backward pass of one micro-batch.
+    Bwd { micro: usize },
+    /// Transfer to a peer device; placed right after the producing
+    /// compute task.  `bytes` may be 0 in runtime-built schedules,
+    /// where actual tensor sizes are only known at execution time.
+    Send { micro: usize, to: usize, payload: Payload, bytes: u64 },
+    /// Transfer from a peer device; placed right before the consuming
+    /// compute task (a dependency gate, not device-occupying work).
+    Recv { micro: usize, from: usize, payload: Payload, bytes: u64 },
+    /// Intra-stage ring AllReduce of the stage gradients — the group
+    /// barrier that closes the round (bytes = stage weight bytes).
+    AllReduce { bytes: u64 },
+}
+
+/// The ordered task list of one device for one HPP-Round.
+#[derive(Debug, Clone)]
+pub struct DeviceTimeline {
+    /// Global device id.
+    pub device: usize,
+    /// Pipeline stage index.
+    pub stage: usize,
+    /// Slot within the stage group (parallel to `Stage::devices`).
+    pub slot: usize,
+    /// Samples per micro-batch this device computes: the stage
+    /// allocation Y_s share under `SampleShard`, the full micro-batch
+    /// size under `RoundRobin` (0 for idle slots).
+    pub share: usize,
+    /// The in-flight bound actually encoded in `tasks` (the policy's
+    /// effective K_p, e.g. the whole micro load for GPipe).
+    pub kp: usize,
+    pub tasks: Vec<Task>,
+}
+
+impl DeviceTimeline {
+    /// The compute ops (Fwd/Bwd) of this timeline, in order.
+    pub fn compute_ops(&self) -> Vec<ComputeOp> {
+        self.tasks
+            .iter()
+            .filter_map(|t| match *t {
+                Task::Fwd { micro } => Some(ComputeOp::Fwd(micro)),
+                Task::Bwd { micro } => Some(ComputeOp::Bwd(micro)),
+                _ => None,
+            })
+            .collect()
+    }
+
+    pub fn num_fwd(&self) -> usize {
+        self.tasks
+            .iter()
+            .filter(|t| matches!(t, Task::Fwd { .. }))
+            .count()
+    }
+
+    fn same_work(&self, other: &DeviceTimeline) -> bool {
+        self.stage == other.stage && self.share == other.share && self.tasks == other.tasks
+    }
+}
+
+/// How micro-batches map onto the devices of a stage group.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Sharding {
+    /// Paper Fig. 10: every device processes its sample slice of every
+    /// micro-batch; inter-stage transfers carry exactly the activation
+    /// rows two devices share.  This is what the simulator prices.
+    SampleShard,
+    /// Whole micro-batches round-robin across the group (micro m ->
+    /// slot m mod g).  This is what the live runtime executes, because
+    /// the AOT stage executables are shape-specialised to the planned
+    /// micro-batch size (see `pipeline::worker`).
+    RoundRobin,
+}
+
+/// A full HPP-Round schedule: one timeline per participating device.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    pub timelines: Vec<DeviceTimeline>,
+    pub num_micro: usize,
+    pub num_stages: usize,
+    pub sharding: Sharding,
+    /// Name of the policy that generated the compute order.
+    pub policy: &'static str,
+}
+
+/// Sharding-specific wiring consumed by the single schedule builder:
+/// which micros a slot runs, its per-micro sample share, and the peer
+/// fan-out toward the previous/next stage.  Gradient routing is always
+/// the mirror of activation routing, so two direction queries suffice.
+trait Router {
+    /// Micro ids assigned to (stage, slot), ascending.
+    fn assign(&self, p: usize, slot: usize) -> Vec<usize>;
+    /// Samples per micro-batch this slot computes (0 = idle).
+    fn share(&self, p: usize, slot: usize) -> usize;
+    /// Previous-stage peers feeding (stage, slot) for `micro`:
+    /// (device, bytes).  Also the Gradient-Send fan-out of Bwd.
+    fn from_prev(&self, p: usize, slot: usize, micro: usize) -> Vec<(usize, u64)>;
+    /// Next-stage peers fed by (stage, slot) for `micro`.  Also the
+    /// Gradient-Recv fan-in of Bwd.
+    fn to_next(&self, p: usize, slot: usize, micro: usize) -> Vec<(usize, u64)>;
+    /// Ring-AllReduce payload of stage `p` (0 if unknown at build time).
+    fn allreduce_bytes(&self, p: usize) -> u64;
+}
+
+/// Fig. 10 sample sharding: every device runs every micro on its
+/// sample slice; transfers carry exactly the overlapping rows.
+struct SampleShardRouter<'a> {
+    plan: &'a Plan,
+    model: &'a ModelDesc,
+    /// Per adjacent stage pair: bytes[from_slot][to_slot] of shared
+    /// activation rows for one micro-batch.
+    routes: Vec<Vec<Vec<u64>>>,
+}
+
+impl<'a> SampleShardRouter<'a> {
+    fn new(plan: &'a Plan, model: &'a ModelDesc) -> Self {
+        let routes = plan
+            .stages
+            .windows(2)
+            .map(|w| {
+                let a = model.boundary_bytes(w[0].layers.1); // per sample
+                let from_ranges = ranges(&w[0].alloc);
+                let to_ranges = ranges(&w[1].alloc);
+                from_ranges
+                    .iter()
+                    .map(|fr| {
+                        to_ranges
+                            .iter()
+                            .map(|tr| a * overlap(*fr, *tr) as u64)
+                            .collect()
+                    })
+                    .collect()
+            })
+            .collect();
+        SampleShardRouter { plan, model, routes }
+    }
+}
+
+impl Router for SampleShardRouter<'_> {
+    fn assign(&self, p: usize, slot: usize) -> Vec<usize> {
+        if self.plan.stages[p].alloc[slot] > 0 {
+            (0..self.plan.num_micro).collect()
+        } else {
+            Vec::new()
+        }
+    }
+
+    fn share(&self, p: usize, slot: usize) -> usize {
+        self.plan.stages[p].alloc[slot]
+    }
+
+    fn from_prev(&self, p: usize, slot: usize, _micro: usize) -> Vec<(usize, u64)> {
+        let prev = &self.plan.stages[p - 1];
+        prev.devices
+            .iter()
+            .enumerate()
+            .map(|(fs, &fd)| (fd, self.routes[p - 1][fs][slot]))
+            .filter(|&(_, bytes)| bytes > 0)
+            .collect()
+    }
+
+    fn to_next(&self, p: usize, slot: usize, _micro: usize) -> Vec<(usize, u64)> {
+        let next = &self.plan.stages[p + 1];
+        next.devices
+            .iter()
+            .enumerate()
+            .map(|(ts, &td)| (td, self.routes[p][slot][ts]))
+            .filter(|&(_, bytes)| bytes > 0)
+            .collect()
+    }
+
+    fn allreduce_bytes(&self, p: usize) -> u64 {
+        let s = &self.plan.stages[p];
+        self.model.weight_bytes_range(s.layers.0, s.layers.1)
+    }
+}
+
+/// Runtime sharding: whole micro-batches round-robin (micro m -> slot
+/// m mod g); transfer sizes are only known at execution time (0 here).
+struct RoundRobinRouter<'a> {
+    plan: &'a Plan,
+}
+
+impl Router for RoundRobinRouter<'_> {
+    fn assign(&self, p: usize, slot: usize) -> Vec<usize> {
+        let g = self.plan.stages[p].devices.len();
+        (0..self.plan.num_micro).filter(|m| m % g == slot).collect()
+    }
+
+    fn share(&self, p: usize, slot: usize) -> usize {
+        if self.assign(p, slot).is_empty() {
+            0
+        } else {
+            self.plan.microbatch
+        }
+    }
+
+    fn from_prev(&self, p: usize, _slot: usize, micro: usize) -> Vec<(usize, u64)> {
+        let prev = &self.plan.stages[p - 1];
+        vec![(prev.devices[micro % prev.devices.len()], 0)]
+    }
+
+    fn to_next(&self, p: usize, _slot: usize, micro: usize) -> Vec<(usize, u64)> {
+        let next = &self.plan.stages[p + 1];
+        vec![(next.devices[micro % next.devices.len()], 0)]
+    }
+
+    fn allreduce_bytes(&self, _p: usize) -> u64 {
+        0
+    }
+}
+
+impl Schedule {
+    /// Build the sample-sharded schedule the simulator prices: bytes on
+    /// every transfer come from the model's boundary activation sizes
+    /// and the Fig. 10 sample-overlap routing.
+    pub fn for_sim(plan: &Plan, model: &ModelDesc, policy: &dyn SchedulePolicy) -> Schedule {
+        Schedule::build(
+            plan,
+            policy,
+            Sharding::SampleShard,
+            &SampleShardRouter::new(plan, model),
+        )
+    }
+
+    /// Build the round-robin schedule the live runtime executes: micro
+    /// m runs on slot `m % g`, and transfers carry whole micro-batch
+    /// tensors (bytes unknown until execution time, recorded as 0).
+    pub fn for_runtime(plan: &Plan, policy: &dyn SchedulePolicy) -> Schedule {
+        Schedule::build(plan, policy, Sharding::RoundRobin, &RoundRobinRouter { plan })
+    }
+
+    /// The one task-emission core both builders share: Recvs gate the
+    /// compute that consumes them, Sends trail the compute that
+    /// produces them, AllReduce closes multi-device stages.
+    fn build(
+        plan: &Plan,
+        policy: &dyn SchedulePolicy,
+        sharding: Sharding,
+        router: &dyn Router,
+    ) -> Schedule {
+        let m_total = plan.num_micro;
+        let n_stages = plan.stages.len();
+        let mut timelines = Vec::new();
+        for (p, stage) in plan.stages.iter().enumerate() {
+            for (slot, &d) in stage.devices.iter().enumerate() {
+                let micros = router.assign(p, slot);
+                let ops = policy.compute_order(&micros, stage.kp);
+                let mut tasks = Vec::with_capacity(4 * ops.len() + 1);
+                for op in ops {
+                    match op {
+                        ComputeOp::Fwd(m) => {
+                            if p > 0 {
+                                for (from, bytes) in router.from_prev(p, slot, m) {
+                                    tasks.push(Task::Recv {
+                                        micro: m,
+                                        from,
+                                        payload: Payload::Activation,
+                                        bytes,
+                                    });
+                                }
+                            }
+                            tasks.push(Task::Fwd { micro: m });
+                            if p + 1 < n_stages {
+                                for (to, bytes) in router.to_next(p, slot, m) {
+                                    tasks.push(Task::Send {
+                                        micro: m,
+                                        to,
+                                        payload: Payload::Activation,
+                                        bytes,
+                                    });
+                                }
+                            }
+                        }
+                        ComputeOp::Bwd(m) => {
+                            if p + 1 < n_stages {
+                                for (from, bytes) in router.to_next(p, slot, m) {
+                                    tasks.push(Task::Recv {
+                                        micro: m,
+                                        from,
+                                        payload: Payload::Gradient,
+                                        bytes,
+                                    });
+                                }
+                            }
+                            tasks.push(Task::Bwd { micro: m });
+                            if p > 0 {
+                                for (to, bytes) in router.from_prev(p, slot, m) {
+                                    tasks.push(Task::Send {
+                                        micro: m,
+                                        to,
+                                        payload: Payload::Gradient,
+                                        bytes,
+                                    });
+                                }
+                            }
+                        }
+                    }
+                }
+                if stage.devices.len() > 1 {
+                    tasks.push(Task::AllReduce { bytes: router.allreduce_bytes(p) });
+                }
+                timelines.push(DeviceTimeline {
+                    device: d,
+                    stage: p,
+                    slot,
+                    share: router.share(p, slot),
+                    kp: policy.effective_kp(stage.kp, micros.len()),
+                    tasks,
+                });
+            }
+        }
+        Schedule {
+            timelines,
+            num_micro: m_total,
+            num_stages: n_stages,
+            sharding,
+            policy: policy.name(),
+        }
+    }
+
+    /// Timeline of a global device id.
+    pub fn timeline(&self, device: usize) -> Option<&DeviceTimeline> {
+        self.timelines.iter().find(|t| t.device == device)
+    }
+
+    /// Timeline of a (stage, slot) position.
+    pub fn timeline_at(&self, stage: usize, slot: usize) -> Option<&DeviceTimeline> {
+        self.timelines
+            .iter()
+            .find(|t| t.stage == stage && t.slot == slot)
+    }
+
+    /// The compute script a live worker at (stage, slot) executes.
+    pub fn compute_script(&self, stage: usize, slot: usize) -> Vec<ComputeOp> {
+        self.timeline_at(stage, slot)
+            .map(|t| t.compute_ops())
+            .unwrap_or_default()
+    }
+
+    pub fn total_tasks(&self) -> usize {
+        self.timelines.iter().map(|t| t.tasks.len()).sum()
+    }
+
+    /// Validate the IR's dependency invariants:
+    ///   * every micro appears exactly once as Fwd and once as Bwd, in
+    ///     that order, on each non-idle timeline;
+    ///   * the running in-flight count never exceeds the timeline's
+    ///     effective K_p;
+    ///   * Send follows its producing compute, Recv precedes its
+    ///     consuming compute;
+    ///   * every Recv has exactly one matching Send (same endpoints,
+    ///     micro, payload, bytes) and vice versa;
+    ///   * the whole schedule is deadlock-free: an abstract execution
+    ///     (which only delivers a Recv after its matching Send has
+    ///     executed on the peer) drains every timeline.
+    pub fn validate(&self) -> Result<()> {
+        for tl in &self.timelines {
+            let d = tl.device;
+            let mut fwd_pos: HashMap<usize, usize> = HashMap::new();
+            let mut bwd_pos: HashMap<usize, usize> = HashMap::new();
+            let mut inflight: usize = 0;
+            let mut peak: usize = 0;
+            for (k, t) in tl.tasks.iter().enumerate() {
+                match *t {
+                    Task::Fwd { micro } => {
+                        if fwd_pos.insert(micro, k).is_some() {
+                            bail!("device {d}: duplicate Fwd for micro {micro}");
+                        }
+                        inflight += 1;
+                        peak = peak.max(inflight);
+                    }
+                    Task::Bwd { micro } => {
+                        if !fwd_pos.contains_key(&micro) {
+                            bail!("device {d}: Bwd before Fwd for micro {micro}");
+                        }
+                        if bwd_pos.insert(micro, k).is_some() {
+                            bail!("device {d}: duplicate Bwd for micro {micro}");
+                        }
+                        inflight -= 1;
+                    }
+                    _ => {}
+                }
+            }
+            if peak > tl.kp.max(1) {
+                bail!(
+                    "device {d}: in-flight peak {peak} exceeds K_p bound {}",
+                    tl.kp
+                );
+            }
+            if fwd_pos.len() != bwd_pos.len() {
+                bail!(
+                    "device {d}: {} forwards but {} backwards",
+                    fwd_pos.len(),
+                    bwd_pos.len()
+                );
+            }
+            for (k, t) in tl.tasks.iter().enumerate() {
+                match *t {
+                    Task::Send { micro, payload, .. } => {
+                        let pos = match payload {
+                            Payload::Activation => fwd_pos.get(&micro),
+                            Payload::Gradient => bwd_pos.get(&micro),
+                        };
+                        match pos {
+                            Some(&p) if p < k => {}
+                            _ => bail!(
+                                "device {d}: Send of micro {micro} {payload:?} \
+                                 before its producing compute"
+                            ),
+                        }
+                    }
+                    Task::Recv { micro, payload, .. } => {
+                        let pos = match payload {
+                            Payload::Activation => fwd_pos.get(&micro),
+                            Payload::Gradient => bwd_pos.get(&micro),
+                        };
+                        match pos {
+                            Some(&p) if p > k => {}
+                            _ => bail!(
+                                "device {d}: Recv of micro {micro} {payload:?} \
+                                 after its consuming compute"
+                            ),
+                        }
+                    }
+                    _ => {}
+                }
+            }
+        }
+
+        // Cross-timeline matching: the send multiset equals the recv
+        // multiset, keyed (from, to, micro, payload) -> bytes.
+        let mut sends: HashMap<(usize, usize, usize, Payload), u64> = HashMap::new();
+        let mut recvs: HashMap<(usize, usize, usize, Payload), u64> = HashMap::new();
+        for tl in &self.timelines {
+            for t in &tl.tasks {
+                match *t {
+                    Task::Send { micro, to, payload, bytes } => {
+                        if sends.insert((tl.device, to, micro, payload), bytes).is_some() {
+                            bail!(
+                                "duplicate Send {}->{to} micro {micro} {payload:?}",
+                                tl.device
+                            );
+                        }
+                    }
+                    Task::Recv { micro, from, payload, bytes } => {
+                        if recvs.insert((from, tl.device, micro, payload), bytes).is_some() {
+                            bail!(
+                                "duplicate Recv {from}->{} micro {micro} {payload:?}",
+                                tl.device
+                            );
+                        }
+                    }
+                    _ => {}
+                }
+            }
+        }
+        if sends != recvs {
+            for k in sends.keys() {
+                if !recvs.contains_key(k) {
+                    bail!("Send without matching Recv: {k:?}");
+                }
+            }
+            for k in recvs.keys() {
+                if !sends.contains_key(k) {
+                    bail!("Recv without matching Send: {k:?}");
+                }
+            }
+            bail!("Send/Recv byte mismatch");
+        }
+
+        self.check_executable()
+    }
+
+    /// Abstract (untimed) execution: repeatedly advance every timeline,
+    /// delivering a Recv only once its matching Send has executed on
+    /// the peer.  Fails on deadlock (a dependency cycle between the
+    /// per-device total orders).
+    fn check_executable(&self) -> Result<()> {
+        let mut pos: Vec<usize> = vec![0; self.timelines.len()];
+        let mut delivered: HashSet<(usize, usize, usize, Payload)> = HashSet::new();
+        loop {
+            let mut progressed = false;
+            for (idx, tl) in self.timelines.iter().enumerate() {
+                while pos[idx] < tl.tasks.len() {
+                    match tl.tasks[pos[idx]] {
+                        Task::Recv { micro, from, payload, .. } => {
+                            if delivered.remove(&(from, tl.device, micro, payload)) {
+                                pos[idx] += 1;
+                                progressed = true;
+                            } else {
+                                break;
+                            }
+                        }
+                        Task::Send { micro, to, payload, .. } => {
+                            delivered.insert((tl.device, to, micro, payload));
+                            pos[idx] += 1;
+                            progressed = true;
+                        }
+                        _ => {
+                            pos[idx] += 1;
+                            progressed = true;
+                        }
+                    }
+                }
+            }
+            if pos
+                .iter()
+                .zip(&self.timelines)
+                .all(|(&p, tl)| p == tl.tasks.len())
+            {
+                return Ok(());
+            }
+            if !progressed {
+                let (idx, _) = pos
+                    .iter()
+                    .zip(&self.timelines)
+                    .enumerate()
+                    .map(|(i, (p, tl))| (i, tl.tasks.len() - p))
+                    .find(|&(_, rem)| rem > 0)
+                    .unwrap();
+                let tl = &self.timelines[idx];
+                bail!(
+                    "schedule deadlocks: device {} blocked at task {:?} \
+                     (position {}/{})",
+                    tl.device,
+                    tl.tasks[pos[idx]],
+                    pos[idx],
+                    tl.tasks.len()
+                );
+            }
+        }
+    }
+}
+
+/// What changed between two schedules — the basis for fault-recovery
+/// ordering: replay re-injects exactly the micro-batches whose
+/// in-flight activations died with the removed devices, and only
+/// retasked devices need new scripts.
+#[derive(Debug, Clone, Default)]
+pub struct ScheduleDiff {
+    /// Devices present before but not after (the failed set).
+    pub removed: Vec<usize>,
+    /// Devices present after but not before.
+    pub added: Vec<usize>,
+    /// Devices whose timeline changed (stage, share or task order).
+    pub retasked: Vec<usize>,
+    /// Devices whose timeline is byte-identical (no re-dispatch).
+    pub unchanged: Vec<usize>,
+    /// Micro-batches in-flight on the removed devices (their warm-up
+    /// prefix in the old schedule), in re-injection order.
+    pub replay_micros: Vec<usize>,
+}
+
+/// Diff two schedules of the same workload (old: pre-failure, new:
+/// post-failure).
+pub fn diff(old: &Schedule, new: &Schedule) -> ScheduleDiff {
+    let o: BTreeMap<usize, &DeviceTimeline> =
+        old.timelines.iter().map(|t| (t.device, t)).collect();
+    let n: BTreeMap<usize, &DeviceTimeline> =
+        new.timelines.iter().map(|t| (t.device, t)).collect();
+    let mut out = ScheduleDiff::default();
+    let mut replay: Vec<usize> = Vec::new();
+    for (&d, tl) in &o {
+        match n.get(&d) {
+            None => {
+                out.removed.push(d);
+                replay.extend(warmup_prefix(tl));
+            }
+            Some(ntl) => {
+                if tl.same_work(ntl) {
+                    out.unchanged.push(d);
+                } else {
+                    out.retasked.push(d);
+                }
+            }
+        }
+    }
+    for &d in n.keys() {
+        if !o.contains_key(&d) {
+            out.added.push(d);
+        }
+    }
+    replay.sort_unstable();
+    replay.dedup();
+    out.replay_micros = replay;
+    out
+}
+
+/// The forwards a timeline admits before its first backward — the
+/// micro-batches whose activations are resident during warm-up.
+fn warmup_prefix(tl: &DeviceTimeline) -> Vec<usize> {
+    let mut v = Vec::new();
+    for t in &tl.tasks {
+        match *t {
+            Task::Bwd { .. } => break,
+            Task::Fwd { micro } => v.push(micro),
+            _ => {}
+        }
+    }
+    v
+}
+
+/// Contiguous sample ranges implied by an allocation, e.g. [3,5] ->
+/// [(0,3), (3,8)] (Fig. 10 routing).
+pub(crate) fn ranges(alloc: &[usize]) -> Vec<(usize, usize)> {
+    let mut out = Vec::with_capacity(alloc.len());
+    let mut start = 0;
+    for &y in alloc {
+        out.push((start, start + y));
+        start += y;
+    }
+    out
+}
+
+pub(crate) fn overlap(a: (usize, usize), b: (usize, usize)) -> usize {
+    a.1.min(b.1).saturating_sub(a.0.max(b.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+    use crate::planner::plan::{Plan, Stage};
+
+    fn two_stage_plan(model: &ModelDesc) -> Plan {
+        let nl = model.num_layers();
+        let mut p = Plan {
+            stages: vec![
+                Stage { layers: (0, nl / 2), devices: vec![0, 1], alloc: vec![5, 3], kp: 1 },
+                Stage { layers: (nl / 2, nl), devices: vec![2], alloc: vec![8], kp: 1 },
+            ],
+            microbatch: 8,
+            num_micro: 4,
+        };
+        p.apply_default_kp();
+        p
+    }
+
+    #[test]
+    fn ranges_and_overlap() {
+        assert_eq!(ranges(&[3, 5]), vec![(0, 3), (3, 8)]);
+        assert_eq!(overlap((0, 3), (2, 8)), 1);
+        assert_eq!(overlap((0, 3), (3, 8)), 0);
+        assert_eq!(overlap((0, 8), (2, 5)), 3);
+    }
+
+    #[test]
+    fn sim_schedule_validates_and_routes_overlaps() {
+        let model = zoo::mobilenet_v2();
+        let plan = two_stage_plan(&model);
+        let sched = Schedule::for_sim(&plan, &model, &OneFOneBKp);
+        sched.validate().unwrap();
+        assert_eq!(sched.timelines.len(), 3);
+        // Stage-1's device receives one activation chunk from each
+        // stage-0 device per micro (both share samples with it).
+        let tl2 = sched.timeline(2).unwrap();
+        let recvs = tl2
+            .tasks
+            .iter()
+            .filter(|t| {
+                matches!(t, Task::Recv { payload: Payload::Activation, .. })
+            })
+            .count();
+        assert_eq!(recvs, 2 * plan.num_micro);
+        // Boundary bytes split 5:3 between the stage-0 devices.
+        let a = model.boundary_bytes(plan.stages[0].layers.1);
+        let mut seen = Vec::new();
+        for t in &tl2.tasks {
+            if let Task::Recv { bytes, payload: Payload::Activation, micro: 0, .. } = *t {
+                seen.push(bytes);
+            }
+        }
+        assert_eq!(seen, vec![5 * a, 3 * a]);
+    }
+
+    #[test]
+    fn runtime_schedule_round_robins_micros() {
+        let model = zoo::mobilenet_v2();
+        let plan = two_stage_plan(&model);
+        let sched = Schedule::for_runtime(&plan, &OneFOneBKp);
+        sched.validate().unwrap();
+        // Slot 0 of stage 0 gets micros 0 and 2; slot 1 gets 1 and 3.
+        let s00: Vec<ComputeOp> = sched.compute_script(0, 0);
+        let s01: Vec<ComputeOp> = sched.compute_script(0, 1);
+        let fwd_micros = |s: &[ComputeOp]| -> Vec<usize> {
+            s.iter().filter(|o| o.is_fwd()).map(|o| o.micro()).collect()
+        };
+        assert_eq!(fwd_micros(&s00), vec![0, 2]);
+        assert_eq!(fwd_micros(&s01), vec![1, 3]);
+        // The single stage-1 device runs every micro.
+        assert_eq!(fwd_micros(&sched.compute_script(1, 0)), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn gpipe_policy_produces_valid_fill_drain() {
+        let model = zoo::mobilenet_v2();
+        let plan = two_stage_plan(&model);
+        let sched = Schedule::for_sim(&plan, &model, &GpipeFillDrain);
+        sched.validate().unwrap();
+        // Every timeline's effective kp is its whole micro load.
+        for tl in &sched.timelines {
+            assert_eq!(tl.kp, plan.num_micro);
+        }
+    }
+
+    #[test]
+    fn validate_rejects_bwd_before_fwd() {
+        let model = zoo::mobilenet_v2();
+        let plan = two_stage_plan(&model);
+        let mut sched = Schedule::for_sim(&plan, &model, &OneFOneBKp);
+        // Corrupt one timeline: swap the first Fwd with the first Bwd.
+        let tl = &mut sched.timelines[2];
+        let f = tl.tasks.iter().position(|t| matches!(t, Task::Fwd { .. })).unwrap();
+        let b = tl.tasks.iter().position(|t| matches!(t, Task::Bwd { .. })).unwrap();
+        tl.tasks.swap(f, b);
+        assert!(sched.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_dangling_recv() {
+        let model = zoo::mobilenet_v2();
+        let plan = two_stage_plan(&model);
+        let mut sched = Schedule::for_sim(&plan, &model, &OneFOneBKp);
+        // Drop the peer's first Send: the matching Recv now dangles.
+        let tl = &mut sched.timelines[0];
+        let s = tl.tasks.iter().position(|t| matches!(t, Task::Send { .. })).unwrap();
+        tl.tasks.remove(s);
+        assert!(sched.validate().is_err());
+    }
+
+    #[test]
+    fn diff_reports_replay_window() {
+        let model = zoo::mobilenet_v2();
+        let plan = two_stage_plan(&model);
+        let old = Schedule::for_sim(&plan, &model, &OneFOneBKp);
+        // Post-failure plan: device 1 gone, stage 0 re-absorbed on 0.
+        let nl = model.num_layers();
+        let mut new_plan = Plan {
+            stages: vec![
+                Stage { layers: (0, nl / 2), devices: vec![0], alloc: vec![8], kp: 1 },
+                Stage { layers: (nl / 2, nl), devices: vec![2], alloc: vec![8], kp: 1 },
+            ],
+            microbatch: 8,
+            num_micro: 4,
+        };
+        new_plan.apply_default_kp();
+        let new = Schedule::for_sim(&new_plan, &model, &OneFOneBKp);
+        let d = diff(&old, &new);
+        assert_eq!(d.removed, vec![1]);
+        assert!(d.added.is_empty());
+        // Device 1 sat in stage 0 with K_p = 3: its warm-up window (3
+        // forwards before the first backward) is the replay set.
+        assert_eq!(d.replay_micros, vec![0, 1, 2]);
+        // Device 0's share changed (5 -> 8 samples): retasked.
+        assert!(d.retasked.contains(&0));
+    }
+
+    #[test]
+    fn diff_identical_schedules_is_empty() {
+        let model = zoo::mobilenet_v2();
+        let plan = two_stage_plan(&model);
+        let a = Schedule::for_sim(&plan, &model, &OneFOneBKp);
+        let b = Schedule::for_sim(&plan, &model, &OneFOneBKp);
+        let d = diff(&a, &b);
+        assert!(d.removed.is_empty() && d.added.is_empty() && d.retasked.is_empty());
+        assert_eq!(d.unchanged.len(), 3);
+        assert!(d.replay_micros.is_empty());
+    }
+}

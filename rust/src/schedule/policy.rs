@@ -1,0 +1,191 @@
+//! Schedule policies: how a device orders its FP/BP work.
+//!
+//! A policy turns "this device must forward and backward these
+//! micro-batches, with warm-up depth K_p" into an explicit op order.
+//! Everything downstream (simulator pricing, live workers, fault
+//! replay) consumes the emitted order; no consumer re-derives it.
+//!
+//! Two built-in policies prove the abstraction:
+//!   * [`OneFOneBKp`] — the paper's 1F1B with a K_p warm-up window
+//!     (§3.2): K_p forwards fill the pipeline, then strict
+//!     one-backward-one-forward, then the backward drain.
+//!   * [`GpipeFillDrain`] — GPipe-style fill-drain: every forward of
+//!     the round, then every backward.  Its activation residency is
+//!     O(M) instead of O(K_p) (Fig. 15(b)).
+//!
+//! Adding a new schedule (zero-bubble, interleaved, ...) means adding a
+//! policy here — not touching the simulator, the workers, or the fault
+//! machinery.
+
+/// One unit of compute work on a device: forward or backward of one
+/// micro-batch (identified by its round-global micro id).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ComputeOp {
+    Fwd(usize),
+    Bwd(usize),
+}
+
+impl ComputeOp {
+    pub fn micro(&self) -> usize {
+        match *self {
+            ComputeOp::Fwd(m) | ComputeOp::Bwd(m) => m,
+        }
+    }
+
+    pub fn is_fwd(&self) -> bool {
+        matches!(self, ComputeOp::Fwd(_))
+    }
+}
+
+/// A schedule policy orders one device's FP/BP ops for an HPP-Round.
+pub trait SchedulePolicy {
+    fn name(&self) -> &'static str;
+
+    /// Ordered FP/BP ops over this device's assigned micro ids
+    /// (ascending), under the stage's warm-up depth `kp`.  Every micro
+    /// must appear exactly once as `Fwd` and once as `Bwd`, with the
+    /// `Fwd` first.
+    fn compute_order(&self, micros: &[usize], kp: usize) -> Vec<ComputeOp>;
+
+    /// The in-flight activation bound the emitted order actually
+    /// respects (what Eq. 3 memory accounting should use).
+    fn effective_kp(&self, kp: usize, n_micros: usize) -> usize;
+}
+
+/// The paper's 1F1B with K_p warm-up (default policy, §3.2).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct OneFOneBKp;
+
+impl SchedulePolicy for OneFOneBKp {
+    fn name(&self) -> &'static str {
+        "1f1b-kp"
+    }
+
+    fn compute_order(&self, micros: &[usize], kp: usize) -> Vec<ComputeOp> {
+        let n = micros.len();
+        let k = self.effective_kp(kp, n);
+        let mut ops = Vec::with_capacity(2 * n);
+        // Warm-up: K_p forwards admitted before the first backward.
+        for &m in micros.iter().take(k) {
+            ops.push(ComputeOp::Fwd(m));
+        }
+        // Steady state: strict one-backward-one-forward.
+        for i in k..n {
+            ops.push(ComputeOp::Bwd(micros[i - k]));
+            ops.push(ComputeOp::Fwd(micros[i]));
+        }
+        // Drain: the last K_p backwards.
+        for &m in micros.iter().skip(n.saturating_sub(k)) {
+            ops.push(ComputeOp::Bwd(m));
+        }
+        ops
+    }
+
+    fn effective_kp(&self, kp: usize, n_micros: usize) -> usize {
+        kp.clamp(1, n_micros.max(1))
+    }
+}
+
+/// GPipe-style fill-drain: all forwards, then all backwards.  Ignores
+/// K_p; the effective in-flight bound is the device's whole micro load.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct GpipeFillDrain;
+
+impl SchedulePolicy for GpipeFillDrain {
+    fn name(&self) -> &'static str {
+        "gpipe-fill-drain"
+    }
+
+    fn compute_order(&self, micros: &[usize], _kp: usize) -> Vec<ComputeOp> {
+        let mut ops = Vec::with_capacity(2 * micros.len());
+        for &m in micros {
+            ops.push(ComputeOp::Fwd(m));
+        }
+        for &m in micros {
+            ops.push(ComputeOp::Bwd(m));
+        }
+        ops
+    }
+
+    fn effective_kp(&self, _kp: usize, n_micros: usize) -> usize {
+        n_micros.max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn inflight_peak(ops: &[ComputeOp]) -> usize {
+        let mut cur = 0usize;
+        let mut peak = 0usize;
+        for op in ops {
+            match op {
+                ComputeOp::Fwd(_) => {
+                    cur += 1;
+                    peak = peak.max(cur);
+                }
+                ComputeOp::Bwd(_) => cur -= 1,
+            }
+        }
+        peak
+    }
+
+    #[test]
+    fn one_f_one_b_canonical_order() {
+        let ops = OneFOneBKp.compute_order(&[0, 1, 2, 3], 2);
+        use ComputeOp::*;
+        assert_eq!(
+            ops,
+            vec![Fwd(0), Fwd(1), Bwd(0), Fwd(2), Bwd(1), Fwd(3), Bwd(2), Bwd(3)]
+        );
+        assert_eq!(inflight_peak(&ops), 2);
+    }
+
+    #[test]
+    fn one_f_one_b_kp_one_serialises() {
+        let ops = OneFOneBKp.compute_order(&[0, 1, 2], 1);
+        use ComputeOp::*;
+        assert_eq!(ops, vec![Fwd(0), Bwd(0), Fwd(1), Bwd(1), Fwd(2), Bwd(2)]);
+    }
+
+    #[test]
+    fn one_f_one_b_kp_clamped_to_load() {
+        // kp larger than the micro count degenerates to fill-drain.
+        let ops = OneFOneBKp.compute_order(&[0, 1], 8);
+        use ComputeOp::*;
+        assert_eq!(ops, vec![Fwd(0), Fwd(1), Bwd(0), Bwd(1)]);
+        assert_eq!(OneFOneBKp.effective_kp(8, 2), 2);
+    }
+
+    #[test]
+    fn gpipe_fill_drain_shape() {
+        let ops = GpipeFillDrain.compute_order(&[0, 2, 4], 1);
+        use ComputeOp::*;
+        assert_eq!(ops, vec![Fwd(0), Fwd(2), Fwd(4), Bwd(0), Bwd(2), Bwd(4)]);
+        assert_eq!(inflight_peak(&ops), 3);
+        assert_eq!(GpipeFillDrain.effective_kp(1, 3), 3);
+    }
+
+    #[test]
+    fn empty_load_is_empty() {
+        assert!(OneFOneBKp.compute_order(&[], 3).is_empty());
+        assert!(GpipeFillDrain.compute_order(&[], 3).is_empty());
+    }
+
+    #[test]
+    fn every_micro_once_fwd_then_bwd() {
+        for policy in [&OneFOneBKp as &dyn SchedulePolicy, &GpipeFillDrain] {
+            for kp in 1..=5 {
+                let micros: Vec<usize> = (0..7).map(|i| i * 3).collect();
+                let ops = policy.compute_order(&micros, kp);
+                assert_eq!(ops.len(), 2 * micros.len(), "{}", policy.name());
+                for &m in &micros {
+                    let f = ops.iter().position(|o| *o == ComputeOp::Fwd(m)).unwrap();
+                    let b = ops.iter().position(|o| *o == ComputeOp::Bwd(m)).unwrap();
+                    assert!(f < b, "{}: micro {m} bwd before fwd", policy.name());
+                }
+            }
+        }
+    }
+}

@@ -1,30 +1,34 @@
-//! Discrete-event simulator for HPP training rounds.
+//! Discrete-event pricing of HPP-Round schedules.
 //!
 //! The planner's cost model (Eqs. 4-6) is an *approximation* built on
-//! the dominant-step idea; this simulator executes the full
-//! event-accurate schedule — per-device 1F1B with K_p warm-up, sample-
-//! sharded inter-stage messages over serialised links, intra-stage
-//! AllReduce — and reports observed round latency, per-device busy
-//! time, bubble fractions and in-flight activation peaks.  Every paper
-//! table/figure that reports throughput is measured here, with the
-//! analytic prediction used as a cross-check.
+//! the dominant-step idea; this module prices the *explicit* schedule:
+//! [`price_schedule`] walks each device's `schedule::Schedule` timeline
+//! task by task against the `ProfileTable` (compute durations) and the
+//! `LinkSet` (serialised inter-device transfers), and reports observed
+//! round latency, per-device busy time, bubble fractions and in-flight
+//! activation peaks.  Every paper table/figure that reports throughput
+//! is measured here, with the analytic prediction as a cross-check.
 //!
-//! Intra-stage data parallelism follows the paper's Fig. 10: each
-//! micro-batch is sample-sharded across the group, and each device of
-//! stage p sends each device of stage p+1 exactly the activation rows
-//! of the samples they share.
+//! The simulator owns **no scheduling logic**: which task runs next on
+//! a device — 1F1B order, the K_p warm-up window, GPipe fill-drain —
+//! is entirely encoded in the `Schedule` IR by its `SchedulePolicy`.
+//! [`simulate_round`] is a thin wrapper that builds the default
+//! (1F1B-K_p, sample-sharded) schedule for a plan and prices it.
 
-pub mod engine;
 pub mod convergence;
+pub mod engine;
+
+use std::collections::{BTreeMap, HashSet};
 
 use crate::config::ClusterSpec;
 use crate::model::ModelDesc;
 use crate::planner::plan::Plan;
 use crate::profiler::ProfileTable;
+use crate::schedule::{Payload, Schedule, Sharding, Task, DEFAULT_POLICY};
 
 use engine::{EventQueue, LinkSet};
 
-/// Result of simulating one HPP-Round.
+/// Result of pricing one HPP-Round.
 #[derive(Debug, Clone)]
 pub struct SimResult {
     /// Wall-clock of the round (first FP start to last AllReduce end).
@@ -41,269 +45,220 @@ pub struct SimResult {
     pub peak_memory: Vec<u64>,
     /// Total bytes moved across links during the round.
     pub bytes_on_network: u64,
-}
-
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum TaskKind {
-    Fwd,
-    Bwd,
+    /// Pipeline fill latency: the instant every device has completed
+    /// its first compute task.  This is the warm-up cost the fault
+    /// machinery charges a freshly replayed pipeline.
+    pub fill_latency: f64,
 }
 
 #[derive(Debug, Clone, Copy)]
 enum Ev {
-    /// Compute finished on device (global id) for (stage, micro, kind).
-    Done { dev: usize, stage: usize, micro: usize, kind: TaskKind },
-    /// A message (activation or gradient chunk) arrived.
-    Msg { to: usize, micro: usize, kind: TaskKind },
+    /// The compute task at the device's cursor finished.
+    Done { dev: usize },
+    /// A transfer arrived at its destination.
+    Msg { to: usize, from: usize, micro: usize, payload: Payload },
 }
 
-/// Per-device scheduler state.
-struct DevState {
-    stage: usize,
-    /// index within the stage group
-    slot: usize,
-    /// samples this device processes per micro-batch
-    share: usize,
-    busy_until: f64,
-    /// received input chunk counts per micro-batch (FP deps).
-    fp_deps: Vec<usize>,
-    /// received grad chunk counts per micro-batch (BP deps).
-    bp_deps: Vec<usize>,
-    fp_needed: usize,
-    bp_needed: usize,
-    fp_issued: usize,
-    fp_done: usize,
-    bp_issued: usize,
-    bp_done: usize,
+/// Per-device execution cursor over its timeline.
+struct ExecDev<'a> {
+    tl: &'a crate::schedule::DeviceTimeline,
+    /// Index of the next task to start (the task a `Done` refers to
+    /// while `running`).
+    pos: usize,
+    running: bool,
     busy_total: f64,
     first_start: f64,
+    first_end: f64,
     last_end: f64,
+    inflight: usize,
     peak_inflight: usize,
+    fwd_done: usize,
+    bwd_done: usize,
 }
 
-impl DevState {
-    fn inflight(&self) -> usize {
-        self.fp_issued - self.bp_done
-    }
-}
-
-/// Simulate one HPP-Round of `plan` and return observed metrics.
+/// Simulate one HPP-Round of `plan` under the default schedule policy.
 pub fn simulate_round(
     table: &ProfileTable,
     cluster: &ClusterSpec,
     model: &ModelDesc,
     plan: &Plan,
 ) -> SimResult {
-    let m_total = plan.num_micro;
-    let n_stages = plan.stages.len();
+    let sched = Schedule::for_sim(plan, model, DEFAULT_POLICY);
+    price_schedule(&sched, table, cluster, model, plan)
+}
 
-    // --- static routing tables -----------------------------------------
-    // For each adjacent stage pair: bytes[d][d'] of activation rows the
-    // devices share (contiguous sample ranges per Fig. 10).
-    let mut fwd_bytes: Vec<Vec<Vec<u64>>> = Vec::new(); // [cut][from][to]
-    for w in plan.stages.windows(2) {
-        let a = model.boundary_bytes(w[0].layers.1); // per sample
-        let from_ranges = ranges(&w[0].alloc);
-        let to_ranges = ranges(&w[1].alloc);
-        let mut mat = vec![vec![0u64; w[1].devices.len()]; w[0].devices.len()];
-        for (i, fr) in from_ranges.iter().enumerate() {
-            for (j, tr) in to_ranges.iter().enumerate() {
-                let overlap = overlap(*fr, *tr);
-                mat[i][j] = a * overlap as u64;
-            }
-        }
-        fwd_bytes.push(mat);
-    }
+/// Price an explicit sample-sharded `Schedule` against the profile and
+/// link models.  Panics if the schedule deadlocks (i.e. it would fail
+/// `Schedule::validate`) — callers price planner/policy output, which
+/// is valid by construction.
+pub fn price_schedule(
+    sched: &Schedule,
+    table: &ProfileTable,
+    cluster: &ClusterSpec,
+    model: &ModelDesc,
+    plan: &Plan,
+) -> SimResult {
+    assert_eq!(
+        sched.sharding,
+        Sharding::SampleShard,
+        "price_schedule prices sample-sharded schedules (got {:?})",
+        sched.sharding
+    );
+    assert_eq!(sched.num_micro, plan.num_micro, "schedule/plan micro mismatch");
+    assert_eq!(sched.num_stages, plan.stages.len(), "schedule/plan stage mismatch");
 
-    // Device states, indexed by global device id.
-    let mut dev_of_stage: Vec<Vec<usize>> = Vec::new();
-    let mut states: std::collections::BTreeMap<usize, DevState> = Default::default();
-    for (p, stage) in plan.stages.iter().enumerate() {
-        dev_of_stage.push(stage.devices.clone());
-        for (slot, (&d, &y)) in stage.devices.iter().zip(&stage.alloc).enumerate() {
-            // FP needs one chunk from every previous-stage device sharing
-            // samples; stage 0 FP deps are free (local data).
-            let fp_needed = if p == 0 {
-                0
-            } else {
-                fwd_bytes[p - 1]
-                    .iter()
-                    .filter(|row| row[slot] > 0)
-                    .count()
-            };
-            let bp_needed = if p + 1 == n_stages {
-                0 // BP enabled by own FP completion
-            } else {
-                fwd_bytes[p][slot].iter().filter(|&&b| b > 0).count()
-            };
-            states.insert(
-                d,
-                DevState {
-                    stage: p,
-                    slot,
-                    share: y,
-                    busy_until: 0.0,
-                    fp_deps: vec![0; m_total],
-                    bp_deps: vec![0; m_total],
-                    fp_needed,
-                    bp_needed,
-                    fp_issued: 0,
-                    fp_done: 0,
-                    bp_issued: 0,
-                    bp_done: 0,
+    let mut states: BTreeMap<usize, ExecDev> = sched
+        .timelines
+        .iter()
+        .map(|tl| {
+            (
+                tl.device,
+                ExecDev {
+                    tl,
+                    pos: 0,
+                    running: false,
                     busy_total: 0.0,
                     first_start: f64::INFINITY,
+                    first_end: f64::INFINITY,
                     last_end: 0.0,
+                    inflight: 0,
                     peak_inflight: 0,
+                    fwd_done: 0,
+                    bwd_done: 0,
                 },
-            );
-        }
-    }
+            )
+        })
+        .collect();
 
     let mut q = EventQueue::new();
     let mut links = LinkSet::new(cluster);
+    let mut mailbox: HashSet<(usize, usize, usize, Payload)> = HashSet::new();
     let mut bytes_on_network: u64 = 0;
+    let mut ar_ready = vec![0.0f64; plan.stages.len()];
 
-    // Kick off: all stage-0 devices may begin FP immediately.
-    let mut now = 0.0f64;
-
-    // Dispatch loop helper: choose and start a task per 1F1B.
-    // Returns scheduled (end_time, task) if dispatched.
-    fn try_dispatch(
+    // Advance a device's cursor as far as the timeline allows at `now`:
+    // issue Sends, consume delivered Recvs, start at most one compute.
+    #[allow(clippy::too_many_arguments)]
+    fn advance(
         d: usize,
-        st: &mut DevState,
+        st: &mut ExecDev<'_>,
         plan: &Plan,
         table: &ProfileTable,
         now: f64,
         q: &mut EventQueue<Ev>,
+        links: &mut LinkSet,
+        mailbox: &mut HashSet<(usize, usize, usize, Payload)>,
+        bytes_on_network: &mut u64,
+        ar_ready: &mut [f64],
     ) {
-        if st.busy_until > now || st.share == 0 {
-            return;
-        }
-        let stage = &plan.stages[st.stage];
-        let (i, j) = stage.layers;
-        let m_total = plan.num_micro;
-        let last = st.stage + 1 == plan.stages.len();
-
-        // K_p >= M degenerates to GPipe's backward-after-forward: no BP
-        // until every FP of the round has been issued (this is what makes
-        // GPipe's activation residency O(M), Fig. 15(b)).
-        let gpipe_mode = stage.kp >= m_total;
-        // BP first (1F1B): next BP micro is bp_issued.
-        let bp_ready = st.bp_issued < st.fp_done // BP m requires own FP m done
-            && (!gpipe_mode || st.fp_issued == m_total)
-            && (if last {
-                true
-            } else {
-                st.bp_deps[st.bp_issued] >= st.bp_needed
-            });
-        if bp_ready {
-            let t = table.time_bwd(d, i, j, st.share);
-            let end = now + t;
-            st.busy_until = end;
-            st.busy_total += t;
-            st.first_start = st.first_start.min(now);
-            st.bp_issued += 1;
-            q.push(end, Ev::Done { dev: d, stage: st.stage, micro: st.bp_issued - 1, kind: TaskKind::Bwd });
-            return;
-        }
-        // FP next, subject to the K_p window.
-        let fp_ready = st.fp_issued < m_total
-            && st.inflight() < stage.kp
-            && (st.fp_needed == 0 || st.fp_deps[st.fp_issued] >= st.fp_needed);
-        if fp_ready {
-            let t = table.time_fwd(d, i, j, st.share);
-            let end = now + t;
-            st.busy_until = end;
-            st.busy_total += t;
-            st.first_start = st.first_start.min(now);
-            st.fp_issued += 1;
-            st.peak_inflight = st.peak_inflight.max(st.inflight());
-            q.push(end, Ev::Done { dev: d, stage: st.stage, micro: st.fp_issued - 1, kind: TaskKind::Fwd });
+        while !st.running && st.pos < st.tl.tasks.len() {
+            match st.tl.tasks[st.pos] {
+                Task::Send { micro, to, payload, bytes } => {
+                    *bytes_on_network += bytes;
+                    let arrive = links.send(d, to, bytes, now);
+                    q.push(arrive, Ev::Msg { to, from: d, micro, payload });
+                    st.pos += 1;
+                }
+                Task::Recv { micro, from, payload, .. } => {
+                    if mailbox.remove(&(d, from, micro, payload)) {
+                        st.pos += 1;
+                    } else {
+                        return; // blocked until the matching Send arrives
+                    }
+                }
+                Task::Fwd { .. } | Task::Bwd { .. } => {
+                    let (i, j) = plan.stages[st.tl.stage].layers;
+                    let is_fwd = matches!(st.tl.tasks[st.pos], Task::Fwd { .. });
+                    let t = if is_fwd {
+                        table.time_fwd(d, i, j, st.tl.share)
+                    } else {
+                        table.time_bwd(d, i, j, st.tl.share)
+                    };
+                    if is_fwd {
+                        st.inflight += 1;
+                        st.peak_inflight = st.peak_inflight.max(st.inflight);
+                    }
+                    st.running = true;
+                    st.first_start = st.first_start.min(now);
+                    st.busy_total += t;
+                    q.push(now + t, Ev::Done { dev: d });
+                }
+                Task::AllReduce { .. } => {
+                    let s = st.tl.stage;
+                    ar_ready[s] = ar_ready[s].max(now);
+                    st.pos += 1;
+                }
+            }
         }
     }
 
-    // Prime stage-0 (and any zero-share idle devices are skipped).
+    // Kick off every device at t = 0 (stage-0 forwards have no Recv
+    // gates; everyone else blocks on their first Recv).
     let dev_ids: Vec<usize> = states.keys().copied().collect();
     for &d in &dev_ids {
         let st = states.get_mut(&d).unwrap();
-        try_dispatch(d, st, plan, table, now, &mut q);
+        advance(
+            d, st, plan, table, 0.0, &mut q, &mut links, &mut mailbox,
+            &mut bytes_on_network, &mut ar_ready,
+        );
     }
 
-    // --- main event loop -------------------------------------------------
+    let mut now = 0.0f64;
     while let Some((t, ev)) = q.pop() {
         now = t;
         match ev {
-            Ev::Done { dev, stage, micro, kind } => {
-                {
-                    let st = states.get_mut(&dev).unwrap();
-                    st.last_end = now;
-                    match kind {
-                        TaskKind::Fwd => st.fp_done += 1,
-                        TaskKind::Bwd => st.bp_done += 1,
-                    }
-                }
-                let slot = states[&dev].slot;
-                match kind {
-                    TaskKind::Fwd if stage + 1 < n_stages => {
-                        // Send activation chunks to next stage.
-                        for (to_slot, &to_dev) in dev_of_stage[stage + 1].iter().enumerate() {
-                            let bytes = fwd_bytes[stage][slot][to_slot];
-                            if bytes == 0 {
-                                continue;
-                            }
-                            bytes_on_network += bytes;
-                            let arrive = links.send(dev, to_dev, bytes, now);
-                            q.push(
-                                arrive,
-                                Ev::Msg { to: to_dev, micro, kind: TaskKind::Fwd },
-                            );
-                        }
-                    }
-                    TaskKind::Bwd if stage > 0 => {
-                        // Send gradient chunks to previous stage.
-                        for (to_slot, &to_dev) in dev_of_stage[stage - 1].iter().enumerate() {
-                            let bytes = fwd_bytes[stage - 1][to_slot][slot];
-                            if bytes == 0 {
-                                continue;
-                            }
-                            bytes_on_network += bytes;
-                            let arrive = links.send(dev, to_dev, bytes, now);
-                            q.push(
-                                arrive,
-                                Ev::Msg { to: to_dev, micro, kind: TaskKind::Bwd },
-                            );
-                        }
-                    }
-                    _ => {}
-                }
+            Ev::Done { dev } => {
                 let st = states.get_mut(&dev).unwrap();
-                try_dispatch(dev, st, plan, table, now, &mut q);
-            }
-            Ev::Msg { to, micro, kind } => {
-                let st = states.get_mut(&to).unwrap();
-                match kind {
-                    TaskKind::Fwd => st.fp_deps[micro] += 1,
-                    TaskKind::Bwd => st.bp_deps[micro] += 1,
+                st.running = false;
+                st.last_end = now;
+                st.first_end = st.first_end.min(now);
+                match st.tl.tasks[st.pos] {
+                    Task::Fwd { .. } => st.fwd_done += 1,
+                    Task::Bwd { .. } => {
+                        st.bwd_done += 1;
+                        st.inflight -= 1;
+                    }
+                    _ => unreachable!("Done for a non-compute task"),
                 }
-                try_dispatch(to, st, plan, table, now, &mut q);
+                st.pos += 1;
+                advance(
+                    dev, st, plan, table, now, &mut q, &mut links, &mut mailbox,
+                    &mut bytes_on_network, &mut ar_ready,
+                );
+            }
+            Ev::Msg { to, from, micro, payload } => {
+                mailbox.insert((to, from, micro, payload));
+                let st = states.get_mut(&to).unwrap();
+                advance(
+                    to, st, plan, table, now, &mut q, &mut links, &mut mailbox,
+                    &mut bytes_on_network, &mut ar_ready,
+                );
             }
         }
+    }
+
+    // Every timeline must have drained; anything else is an invalid
+    // schedule (would also fail Schedule::validate).
+    for st in states.values() {
+        assert_eq!(
+            st.pos,
+            st.tl.tasks.len(),
+            "schedule deadlock: device {} stopped at {:?}",
+            st.tl.device,
+            st.tl.tasks.get(st.pos)
+        );
+        debug_assert_eq!(st.fwd_done, st.tl.num_fwd(), "fp incomplete");
+        debug_assert_eq!(st.fwd_done, st.bwd_done, "bp incomplete");
     }
 
     // --- AllReduce + result assembly --------------------------------------
     let mut round_end = now;
-    for stage in &plan.stages {
+    for (p, stage) in plan.stages.iter().enumerate() {
         if stage.devices.len() > 1 {
-            let last_bp = stage
-                .devices
-                .iter()
-                .map(|d| states[d].last_end)
-                .fold(0.0, f64::max);
             let ta = crate::planner::cost::allreduce_time(cluster, model, stage);
             let w = model.weight_bytes_range(stage.layers.0, stage.layers.1);
             bytes_on_network += 2 * (stage.devices.len() as u64 - 1) * w;
-            round_end = round_end.max(last_bp + ta);
+            round_end = round_end.max(ar_ready[p] + ta);
         }
     }
 
@@ -312,12 +267,16 @@ pub fn simulate_round(
     let mut bubble = vec![0.0; n_dev];
     let mut peak_inflight = vec![0usize; n_dev];
     let mut peak_memory = vec![0u64; n_dev];
+    let mut fill_latency = 0.0f64;
     for (&d, st) in &states {
         busy[d] = st.busy_total;
         let span = (st.last_end - st.first_start).max(1e-12);
         bubble[d] = (1.0 - st.busy_total / span).max(0.0);
         peak_inflight[d] = st.peak_inflight;
-        let stage = &plan.stages[st.stage];
+        if st.first_end.is_finite() {
+            fill_latency = fill_latency.max(st.first_end);
+        }
+        let stage = &plan.stages[st.tl.stage];
         let mem = crate::planner::memory::stage_memory(
             model,
             &crate::config::TrainConfig::new(
@@ -326,16 +285,10 @@ pub fn simulate_round(
             ),
             stage.layers.0,
             stage.layers.1,
-            st.share,
+            st.tl.share,
             st.peak_inflight.max(1),
         );
         peak_memory[d] = mem.total();
-    }
-
-    // Sanity: every micro-batch fully processed.
-    for st in states.values() {
-        debug_assert_eq!(st.fp_done, m_total, "stage {} fp incomplete", st.stage);
-        debug_assert_eq!(st.bp_done, m_total, "stage {} bp incomplete", st.stage);
     }
 
     SimResult {
@@ -346,23 +299,8 @@ pub fn simulate_round(
         peak_inflight,
         peak_memory,
         bytes_on_network,
+        fill_latency,
     }
-}
-
-/// Contiguous sample ranges implied by an allocation, e.g. [3,5] ->
-/// [(0,3), (3,8)].
-fn ranges(alloc: &[usize]) -> Vec<(usize, usize)> {
-    let mut out = Vec::with_capacity(alloc.len());
-    let mut start = 0;
-    for &y in alloc {
-        out.push((start, start + y));
-        start += y;
-    }
-    out
-}
-
-fn overlap(a: (usize, usize), b: (usize, usize)) -> usize {
-    a.1.min(b.1).saturating_sub(a.0.max(b.0))
 }
 
 #[cfg(test)]
@@ -374,20 +312,13 @@ mod tests {
     use crate::planner::dp::{plan_hpp, PlannerConfig};
     use crate::planner::plan::{Plan, Stage};
     use crate::profiler::ProfileTable;
+    use crate::schedule::GpipeFillDrain;
 
     fn fixture(env: &str) -> (ClusterSpec, crate::model::ModelDesc, ProfileTable) {
         let cluster = ClusterSpec::env(env, 100.0).unwrap();
         let model = zoo::mobilenet_v2();
         let table = ProfileTable::new(&cluster, &model);
         (cluster, model, table)
-    }
-
-    #[test]
-    fn ranges_and_overlap() {
-        assert_eq!(ranges(&[3, 5]), vec![(0, 3), (3, 8)]);
-        assert_eq!(overlap((0, 3), (2, 8)), 1);
-        assert_eq!(overlap((0, 3), (3, 8)), 0);
-        assert_eq!(overlap((0, 8), (2, 5)), 3);
     }
 
     #[test]
@@ -398,10 +329,25 @@ mod tests {
         let sim = simulate_round(&table, &cluster, &model, &out.plan);
         assert!(sim.round_latency > 0.0);
         assert!(sim.throughput > 0.0);
+        assert!(sim.fill_latency > 0.0 && sim.fill_latency <= sim.round_latency);
         // Every participating device did work.
         for &d in &out.plan.devices() {
             assert!(sim.busy[d] > 0.0, "device {d} idle");
         }
+    }
+
+    #[test]
+    fn wrapper_equals_explicit_default_schedule_pricing() {
+        // simulate_round is definitionally for_sim + price_schedule.
+        let (cluster, model, table) = fixture("B");
+        let cfg = TrainConfig::new(256, 16);
+        let out = plan_hpp(&table, &cluster, &model, &cfg, &PlannerConfig::default()).unwrap();
+        let sched = Schedule::for_sim(&out.plan, &model, DEFAULT_POLICY);
+        sched.validate().unwrap();
+        let a = simulate_round(&table, &cluster, &model, &out.plan);
+        let b = price_schedule(&sched, &table, &cluster, &model, &out.plan);
+        assert_eq!(a.round_latency, b.round_latency);
+        assert_eq!(a.bytes_on_network, b.bytes_on_network);
     }
 
     #[test]
@@ -462,6 +408,29 @@ mod tests {
         let sim_gpipe = simulate_round(&table, &cluster, &model, &mk(8));
         assert!(sim_gpipe.peak_inflight[0] > 3, "gpipe should buffer more");
         assert!(sim_gpipe.peak_memory[0] > sim_ours.peak_memory[0]);
+    }
+
+    #[test]
+    fn gpipe_policy_equals_kp_saturated_default() {
+        // Two routes to fill-drain: the GPipe policy, or 1F1B with
+        // K_p >= M.  Same IR semantics, same price.
+        let (cluster, model, table) = fixture("A");
+        let nl = model.num_layers();
+        let mk = |kp0: usize, kp1: usize| Plan {
+            stages: vec![
+                Stage { layers: (0, nl / 2), devices: vec![0], alloc: vec![8], kp: kp0 },
+                Stage { layers: (nl / 2, nl), devices: vec![1], alloc: vec![8], kp: kp1 },
+            ],
+            microbatch: 8,
+            num_micro: 8,
+        };
+        let saturated = mk(8, 8);
+        let via_kp = simulate_round(&table, &cluster, &model, &saturated);
+        let gp_sched = Schedule::for_sim(&mk(1, 1), &model, &GpipeFillDrain);
+        gp_sched.validate().unwrap();
+        let via_policy = price_schedule(&gp_sched, &table, &cluster, &model, &mk(1, 1));
+        assert_eq!(via_kp.round_latency, via_policy.round_latency);
+        assert_eq!(via_kp.peak_inflight, via_policy.peak_inflight);
     }
 
     #[test]

@@ -1,0 +1,208 @@
+//! Schedule IR invariants across a plan grid, plus the exact
+//! simulator/cost-model cross-check for homogeneous chains.
+//!
+//! The grid covers (stages x micros x K_p) for both built-in policies
+//! and both sharding modes; every generated timeline must be
+//! dependency-valid (no Bwd before its Fwd, no Recv before the
+//! matching Send, the K_p in-flight bound respected) and the whole
+//! schedule deadlock-free.
+
+use asteroid::config::ClusterSpec;
+use asteroid::model::{Layer, ModelDesc};
+use asteroid::planner::cost::{plan_steps, round_latency};
+use asteroid::planner::plan::{Plan, Stage};
+use asteroid::profiler::ProfileTable;
+use asteroid::schedule::{GpipeFillDrain, OneFOneBKp, Schedule, SchedulePolicy, Task};
+use asteroid::sim::simulate_round;
+
+/// A model of `n` identical layers: equal splits give *exactly* equal
+/// stage costs on a homogeneous cluster, which is what makes the
+/// dominant-step model exact (see `sim_matches_analytic_*`).
+fn uniform_model(n: usize) -> ModelDesc {
+    let layers = (0..n)
+        .map(|i| Layer::new(&format!("u{i}"), 1.0e9, 64 * 1024, 16 * 1024))
+        .collect();
+    ModelDesc::new("uniform", layers, 16 * 1024)
+}
+
+/// A chain plan: `stages` single-device stages over an equal layer
+/// split, one device per stage, full micro-batch per device.
+fn chain_plan(model: &ModelDesc, stages: usize, microbatch: usize, num_micro: usize) -> Plan {
+    let nl = model.num_layers();
+    assert_eq!(nl % stages, 0, "uniform split required");
+    let per = nl / stages;
+    let mut plan = Plan {
+        stages: (0..stages)
+            .map(|s| Stage {
+                layers: (s * per, (s + 1) * per),
+                devices: vec![s],
+                alloc: vec![microbatch],
+                kp: 1,
+            })
+            .collect(),
+        microbatch,
+        num_micro,
+    };
+    plan.apply_default_kp();
+    plan
+}
+
+#[test]
+fn task_lists_dependency_valid_across_grid() {
+    let model = uniform_model(24);
+    let policies: [&dyn SchedulePolicy; 2] = [&OneFOneBKp, &GpipeFillDrain];
+    for &stages in &[1usize, 2, 3, 4] {
+        for &m in &[1usize, 2, 4, 8] {
+            for &kp_override in &[0usize, 1, 2, m] {
+                let mut plan = chain_plan(&model, stages, 4, m);
+                if kp_override > 0 {
+                    for s in &mut plan.stages {
+                        s.kp = kp_override.clamp(1, m);
+                    }
+                }
+                for policy in policies {
+                    let sim_sched = Schedule::for_sim(&plan, &model, policy);
+                    sim_sched
+                        .validate()
+                        .unwrap_or_else(|e| panic!(
+                            "sim schedule invalid (stages={stages}, m={m}, \
+                             kp={kp_override}, policy={}): {e}",
+                            policy.name()
+                        ));
+                    let rt_sched = Schedule::for_runtime(&plan, policy);
+                    rt_sched
+                        .validate()
+                        .unwrap_or_else(|e| panic!(
+                            "runtime schedule invalid (stages={stages}, m={m}, \
+                             kp={kp_override}, policy={}): {e}",
+                            policy.name()
+                        ));
+                    // Every device forwards and backwards each micro
+                    // exactly once across the stage (sim sharding).
+                    for tl in &sim_sched.timelines {
+                        assert_eq!(tl.num_fwd(), m);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn grid_includes_replicated_stages() {
+    // Sample-shard routing with a 2-device group: overlap-derived
+    // Send/Recv fan-out must still validate for both policies.
+    let model = uniform_model(24);
+    let cluster = ClusterSpec::nanos(3, 100.0);
+    assert_eq!(cluster.n(), 3);
+    for &m in &[2usize, 4, 8] {
+        let mut plan = Plan {
+            stages: vec![
+                Stage { layers: (0, 12), devices: vec![0, 1], alloc: vec![3, 1], kp: 1 },
+                Stage { layers: (12, 24), devices: vec![2], alloc: vec![4], kp: 1 },
+            ],
+            microbatch: 4,
+            num_micro: m,
+        };
+        plan.apply_default_kp();
+        for policy in [&OneFOneBKp as &dyn SchedulePolicy, &GpipeFillDrain] {
+            Schedule::for_sim(&plan, &model, policy).validate().unwrap();
+            Schedule::for_runtime(&plan, policy).validate().unwrap();
+        }
+    }
+}
+
+#[test]
+fn kp_bound_is_respected_not_just_recorded() {
+    // Re-derive the in-flight peak straight from the task stream and
+    // compare against the plan's K_p (1F1B) or M (GPipe).
+    let model = uniform_model(24);
+    let m = 8;
+    let plan = chain_plan(&model, 2, 4, m); // kp = [3, 1]
+    let sched = Schedule::for_sim(&plan, &model, &OneFOneBKp);
+    for tl in &sched.timelines {
+        let mut cur = 0usize;
+        let mut peak = 0usize;
+        for t in &tl.tasks {
+            match t {
+                Task::Fwd { .. } => {
+                    cur += 1;
+                    peak = peak.max(cur);
+                }
+                Task::Bwd { .. } => cur -= 1,
+                _ => {}
+            }
+        }
+        assert_eq!(peak, plan.stages[tl.stage].kp.min(m), "stage {}", tl.stage);
+    }
+    let gpipe = Schedule::for_sim(&plan, &model, &GpipeFillDrain);
+    for tl in &gpipe.timelines {
+        assert_eq!(tl.kp, m);
+    }
+}
+
+/// Satellite cross-check: for single-stage and two-stage homogeneous
+/// plans the event-accurate simulator must reproduce the analytic
+/// `round_latency` (Eqs. 4-6) *exactly* (to f64 round-off) — this is
+/// the regime where the dominant-step model is not an approximation,
+/// so any drift between the two implementations is a bug in one of
+/// them.
+fn assert_sim_matches_analytic(cluster: &ClusterSpec, model: &ModelDesc, plan: &Plan) {
+    let table = ProfileTable::new(cluster, model);
+    let steps = plan_steps(&table, cluster, model, plan);
+    let predicted = round_latency(&steps, plan.num_micro);
+    let sim = simulate_round(&table, cluster, model, plan);
+    let rel = (sim.round_latency - predicted).abs() / predicted.max(1e-30);
+    assert!(
+        rel < 1e-9,
+        "sim {} vs analytic {predicted} (rel err {rel:.3e}) for {} stages",
+        sim.round_latency,
+        plan.num_stages()
+    );
+}
+
+#[test]
+fn sim_matches_analytic_single_stage_single_device() {
+    let model = uniform_model(8);
+    let cluster = ClusterSpec::nanos(1, 1000.0);
+    let plan = Plan {
+        stages: vec![Stage { layers: (0, 8), devices: vec![0], alloc: vec![8], kp: 1 }],
+        microbatch: 8,
+        num_micro: 8,
+    };
+    assert_sim_matches_analytic(&cluster, &model, &plan);
+}
+
+#[test]
+fn sim_matches_analytic_single_stage_dp_group() {
+    // Two-device DP group: adds the ring-AllReduce term of Eq. 5.
+    let model = uniform_model(8);
+    let cluster = ClusterSpec::nanos(2, 1000.0);
+    let plan = Plan {
+        stages: vec![Stage { layers: (0, 8), devices: vec![0, 1], alloc: vec![4, 4], kp: 1 }],
+        microbatch: 8,
+        num_micro: 8,
+    };
+    assert_sim_matches_analytic(&cluster, &model, &plan);
+}
+
+#[test]
+fn sim_matches_analytic_two_stage_homogeneous() {
+    // Equal-cost stages on identical devices with compute >> comm:
+    // the dominant step is the tail stage and Eq. 6's shifting is
+    // exact.  10 Gbps keeps 2 x comm far below one micro's FP+BP.
+    let model = uniform_model(8);
+    let cluster = ClusterSpec::nanos(2, 10000.0);
+    let plan = chain_plan(&model, 2, 8, 8); // kp = [3, 1]
+    assert_sim_matches_analytic(&cluster, &model, &plan);
+}
+
+#[test]
+fn sim_matches_analytic_two_stage_across_micro_counts() {
+    let model = uniform_model(8);
+    let cluster = ClusterSpec::nanos(2, 10000.0);
+    for m in [4usize, 8, 16, 32] {
+        let plan = chain_plan(&model, 2, 8, m);
+        assert_sim_matches_analytic(&cluster, &model, &plan);
+    }
+}
