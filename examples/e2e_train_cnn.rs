@@ -1,61 +1,54 @@
 //! End-to-end CNN training: the vision counterpart of e2e_train_lm —
-//! the CIFAR-style CNN through a planner-chosen hybrid pipeline.
+//! the CIFAR-style CNN through a planner-chosen hybrid pipeline, one
+//! `Session` + `PjrtBackend`.
 //!
-//!     cargo run --release --example e2e_train_cnn [steps]
+//!     cargo run --release --features pjrt --example e2e_train_cnn [steps]
 
 use anyhow::Result;
 use asteroid::config::{ClusterSpec, TrainConfig};
-use asteroid::coordinator::Coordinator;
-use asteroid::data::VisionTask;
 use asteroid::metrics::Table;
 use asteroid::model::from_manifest::Manifest;
-use asteroid::pipeline::{OptimizerCfg, TrainOpts};
+use asteroid::pipeline::OptimizerCfg;
+use asteroid::session::{PjrtBackend, Session};
 
 fn main() -> Result<()> {
     let steps: usize = std::env::args().nth(1).and_then(|a| a.parse().ok()).unwrap_or(60);
     let artifacts = std::path::PathBuf::from("artifacts");
-    let cluster = ClusterSpec::env("D", 1000.0)?;
     let manifest = Manifest::load(&artifacts)?;
     let cnn = manifest.model("cnn")?;
     let micro = cnn.microbatch;
-    let hw = *cnn.config.get("hw").unwrap() as usize;
-    let ch = *cnn.config.get("in_ch").unwrap() as usize;
-    let classes = *cnn.config.get("classes").unwrap() as usize;
+    let classes = cnn.cfg_usize("classes")?;
 
-    let cfg = TrainConfig::new(micro * 4, micro);
-    let c = Coordinator::for_artifact_model(&artifacts, "cnn", cluster, cfg)?;
-    let out = c.plan()?;
+    let session = Session::builder()
+        .artifact_model(&artifacts, "cnn")
+        .cluster(ClusterSpec::env("D", 1000.0)?)
+        .train(TrainConfig::new(micro * 4, micro))
+        .steps(steps)
+        .optimizer(OptimizerCfg::Sgd { lr: 0.05, momentum: 0.9 })
+        .seed(7)
+        .log_every(10)
+        .build()?;
     println!("== Asteroid end-to-end CNN training ==");
-    println!("cluster : {}", c.cluster.describe());
-    println!("plan    : {}", out.plan.describe(&c.cluster));
+    println!("cluster : {}", session.cluster().describe());
+    println!("plan    : {}", session.plan().describe(session.cluster()));
 
-    let mut data = VisionTask::new(hw, ch, classes, micro, 7);
-    let stats = c.train(
-        &out.plan,
-        &TrainOpts {
-            steps,
-            opt: OptimizerCfg::Sgd { lr: 0.05, momentum: 0.9 },
-            seed: 7,
-            emulate: None,
-            log_every: 10,
-            initial_params: None,
-        },
-        &mut data,
-    )?;
+    // The backend synthesises the vision task stream (hw/in_ch/classes)
+    // from the manifest config.
+    let report = session.run(&mut PjrtBackend::new())?;
 
     let mut table = Table::new("e2e CNN loss curve", &["step", "loss"]);
-    for (i, l) in stats.losses.iter().enumerate() {
+    for (i, l) in report.losses.iter().enumerate() {
         table.row(vec![i.to_string(), format!("{l:.4}")]);
     }
     table.write_csv(std::path::Path::new("results"), "e2e_cnn_loss")?;
 
-    let first = stats.losses.first().unwrap();
-    let last = stats.losses.last().unwrap();
+    let first = report.first_loss().unwrap();
+    let last = report.last_loss().unwrap();
     println!(
         "loss {first:.4} (ln {classes} = {:.3}) -> {last:.4}; {:.1} samples/s",
         (classes as f64).ln(),
-        stats.samples_per_sec
+        report.throughput
     );
-    anyhow::ensure!(*last < *first, "loss should decrease");
+    anyhow::ensure!(last < first, "loss should decrease");
     Ok(())
 }

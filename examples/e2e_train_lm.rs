@@ -2,17 +2,17 @@
 //! for a few hundred HPP-Rounds through the full stack — Pallas-kernel
 //! HLO artifacts, planner-chosen hybrid pipeline, multi-worker 1F1B
 //! with gradient accumulation, AllReduce and SGD — and log the loss
-//! curve to results/e2e_lm_loss.csv.
+//! curve to results/e2e_lm_loss.csv.  One `Session`, the `PjrtBackend`
+//! does the rest.
 //!
-//!     cargo run --release --example e2e_train_lm [steps] [--emulate]
+//!     cargo run --release --features pjrt --example e2e_train_lm [steps] [--emulate]
 
 use anyhow::Result;
 use asteroid::config::{ClusterSpec, TrainConfig};
-use asteroid::coordinator::Coordinator;
-use asteroid::data::LmTask;
 use asteroid::metrics::Table;
 use asteroid::model::from_manifest::Manifest;
-use asteroid::pipeline::{OptimizerCfg, TrainOpts};
+use asteroid::pipeline::OptimizerCfg;
+use asteroid::session::{PjrtBackend, Session};
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -24,49 +24,52 @@ fn main() -> Result<()> {
     let emulate = args.iter().any(|a| a == "--emulate");
 
     let artifacts = std::path::PathBuf::from("artifacts");
-    let cluster = ClusterSpec::env("B", 1000.0)?;
     let manifest = Manifest::load(&artifacts)?;
     let lm = manifest.model("lm")?;
     let micro = lm.microbatch;
-    let vocab = *lm.config.get("vocab").unwrap() as usize;
-    let seq = *lm.config.get("seq").unwrap() as usize;
+    let vocab = lm.cfg_usize("vocab")?;
+    let seq = lm.cfg_usize("seq")?;
     let params = lm.total_params();
 
-    let cfg = TrainConfig::new(micro * 8, micro); // M = 8 micro-batches
-    let c = Coordinator::for_artifact_model(&artifacts, "lm", cluster, cfg)?;
-    let out = c.plan()?;
+    let session = Session::builder()
+        .artifact_model(&artifacts, "lm")
+        .cluster(ClusterSpec::env("B", 1000.0)?)
+        .train(TrainConfig::new(micro * 8, micro)) // M = 8 micro-batches
+        .steps(steps)
+        .optimizer(OptimizerCfg::Sgd { lr: 0.05, momentum: 0.9 })
+        .seed(42)
+        .emulate(emulate)
+        .log_every(10)
+        .build()?;
     println!("== Asteroid end-to-end LM training ==");
-    println!("model   : {} params, vocab {vocab}, seq {seq}, micro-batch {micro}", params);
-    println!("cluster : {}", c.cluster.describe());
-    println!("plan    : {}", out.plan.describe(&c.cluster));
-    println!("steps   : {steps} HPP-Rounds x {} samples", out.plan.samples_per_round());
+    println!("model   : {params} params, vocab {vocab}, seq {seq}, micro-batch {micro}");
+    println!("cluster : {}", session.cluster().describe());
+    println!("plan    : {}", session.plan().describe(session.cluster()));
+    println!(
+        "steps   : {steps} HPP-Rounds x {} samples",
+        session.plan().samples_per_round()
+    );
 
-    let opts = TrainOpts {
-        steps,
-        opt: OptimizerCfg::Sgd { lr: 0.05, momentum: 0.9 },
-        seed: 42,
-        emulate: if emulate { Some(c.cluster.clone()) } else { None },
-        log_every: 10,
-        initial_params: None,
-    };
-    let mut data = LmTask::new(vocab, seq, micro, 42);
     let t0 = std::time::Instant::now();
-    let stats = c.train(&out.plan, &opts, &mut data)?;
+    let report = session.run(&mut PjrtBackend::new())?;
     let wall = t0.elapsed().as_secs_f64();
 
     let mut table = Table::new("e2e LM loss curve", &["step", "loss", "round_s"]);
-    for (i, (l, s)) in stats.losses.iter().zip(&stats.round_secs).enumerate() {
+    for (i, (l, s)) in report.losses.iter().zip(&report.round_secs).enumerate() {
         table.row(vec![i.to_string(), format!("{l:.4}"), format!("{s:.3}")]);
     }
     table.write_csv(std::path::Path::new("results"), "e2e_lm_loss")?;
 
-    let first = stats.losses.first().unwrap();
-    let last = stats.losses.last().unwrap();
-    let best = stats.losses.iter().cloned().fold(f64::INFINITY, f64::min);
-    println!("\nloss    : {first:.4} (ln V = {:.4}) -> {last:.4} (best {best:.4})", (vocab as f64).ln());
-    println!("tput    : {:.1} samples/s over {wall:.0}s wall", stats.samples_per_sec);
+    let first = report.first_loss().unwrap();
+    let last = report.last_loss().unwrap();
+    let best = report.losses.iter().cloned().fold(f64::INFINITY, f64::min);
+    println!(
+        "\nloss    : {first:.4} (ln V = {:.4}) -> {last:.4} (best {best:.4})",
+        (vocab as f64).ln()
+    );
+    println!("tput    : {:.1} samples/s over {wall:.0}s wall", report.throughput);
     println!("curve   : results/e2e_lm_loss.csv");
-    anyhow::ensure!(*last < first - 1.0, "loss should fall well below initial");
+    anyhow::ensure!(last < first - 1.0, "loss should fall well below initial");
     println!("OK: all three layers compose (pallas kernels -> stage HLOs -> rust HPP runtime)");
     Ok(())
 }

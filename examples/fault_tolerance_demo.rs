@@ -1,7 +1,7 @@
 //! Fault-tolerance walkthrough (paper §3.4 / Figs. 9, 16, 17): build a
-//! plan on Env D, show the replication topology, run a live heartbeat
-//! monitor while a device "dies", then compare lightweight pipeline
-//! replay against heavy rescheduling.
+//! `Session` on Env D, show the replication topology, run a live
+//! heartbeat monitor while a device "dies", then compare the two
+//! recovery mechanisms by attaching the matching `FaultSpec`s.
 //!
 //!     cargo run --release --example fault_tolerance_demo
 
@@ -9,21 +9,27 @@ use std::time::Duration;
 
 use anyhow::Result;
 use asteroid::config::{ClusterSpec, TrainConfig};
-use asteroid::coordinator::Coordinator;
 use asteroid::fault::{
     replication_plan, BackupStore, HeartbeatCfg, HeartbeatMonitor, Liveness, RecoverySource,
 };
+use asteroid::session::{FaultSpec, RecoveryKind, Session, SimBackend};
 
 fn main() -> Result<()> {
     let cluster = ClusterSpec::env("D", 100.0)?;
-    let cfg = TrainConfig::new(2048, 32);
-    let c = Coordinator::for_zoo_model("efficientnet-b1", cluster.clone(), cfg)?;
-    let plan = c.plan()?.plan;
+    let session = Session::builder()
+        .model("efficientnet-b1")
+        .cluster(cluster.clone())
+        .train(TrainConfig::new(2048, 32))
+        .build()?;
+    let plan = session.plan();
     println!("plan: {}", plan.describe(&cluster));
-    println!("throughput before failure: {:.1} samples/s\n", c.simulate(&plan).throughput);
+    println!(
+        "throughput before failure: {:.1} samples/s\n",
+        session.run(&mut SimBackend::default())?.throughput
+    );
 
     // --- replication topology (Fig. 9 left) ------------------------------
-    let repl = replication_plan(&c.model, &plan);
+    let repl = replication_plan(session.model(), plan);
     let mut store = BackupStore::new();
     for (p, src) in repl.sources.iter().enumerate() {
         match src {
@@ -69,16 +75,24 @@ fn main() -> Result<()> {
              cluster.devices[dying].name, hb.detection_time());
 
     // --- recovery comparison (Figs. 16/17) --------------------------------
-    let lite = c.recover_lightweight(&plan, dying)?;
-    let heavy = c.recover_heavy(&plan, dying)?;
-    for r in [&lite, &heavy] {
+    // Device-exit + recovery is a declarative property of the session:
+    // same session, two FaultSpecs, one backend.
+    let mut reports = Vec::new();
+    for kind in [RecoveryKind::Lightweight, RecoveryKind::Heavy] {
+        let run = session
+            .clone()
+            .with_fault(FaultSpec::device(dying).with_recovery(kind))
+            .run(&mut SimBackend::default())?;
+        let r = run.recoveries.into_iter().next().unwrap().report;
         println!(
             "{:<12} detect {:.2}s + restore {:.2}s + replan {:.2}s + migrate {:.2}s = {:.2}s",
             r.mechanism, r.detection_s, r.restore_s, r.replan_s, r.migration_s, r.total_s()
         );
         println!("             resumes at {:.1} samples/s with {}",
                  r.new_throughput, r.new_plan.describe(&cluster));
+        reports.push(r);
     }
+    let (lite, heavy) = (&reports[0], &reports[1]);
     println!(
         "\nlightweight replay recovers {:.1}x faster with {:.0}% of heavy's throughput",
         heavy.total_s() / lite.total_s(),

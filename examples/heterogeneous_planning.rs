@@ -1,15 +1,18 @@
 //! Heterogeneous planning tour: run Asteroid's planner over every paper
 //! model x environment and print the chosen HPP configurations
 //! (Fig. 12) side by side with the baselines it beats (Table 4's
-//! qualitative story).
+//! qualitative story).  Every method — ours and baselines — goes
+//! through the same `Session` builder; only the `Planner` choice
+//! changes.
 //!
 //!     cargo run --release --example heterogeneous_planning
 
 use anyhow::Result;
 use asteroid::config::{ClusterSpec, TrainConfig};
-use asteroid::coordinator::Coordinator;
 use asteroid::model::zoo;
 use asteroid::planner::baselines::Method;
+use asteroid::planner::Planner;
+use asteroid::session::{Session, SimBackend};
 
 fn main() -> Result<()> {
     for model in zoo::all() {
@@ -23,21 +26,28 @@ fn main() -> Result<()> {
                 "bert-small" => TrainConfig::new(2048, 8),
                 _ => TrainConfig::new(2048, 32),
             };
-            let c = Coordinator::for_zoo_model(&model.name, cluster.clone(), cfg)?;
-            let ours = c.plan()?;
-            let sim = c.simulate(&ours.plan);
+            let build = |planner: Planner| {
+                Session::builder()
+                    .model(&model.name)
+                    .cluster(cluster.clone())
+                    .train(cfg.clone())
+                    .planner(planner)
+                    .build()
+            };
+            let ours = build(Planner::Asteroid)?;
+            let sim = ours.run(&mut SimBackend::default())?;
             println!("\n  Env {env} @ {mbps:.0} Mbps ({})", cluster.describe());
-            println!("    Asteroid: {}", ours.plan.describe(&cluster));
+            println!("    Asteroid: {}", ours.plan().describe(&cluster));
             println!("              {:.1} samples/s (sim)", sim.throughput);
             for method in [Method::DataParallel, Method::GpipePP] {
-                match c.plan_baseline(method) {
-                    Ok(o) => {
-                        let s = c.simulate(&o.plan);
+                match build(Planner::Baseline(method)) {
+                    Ok(s) => {
+                        let r = s.run(&mut SimBackend::default())?;
                         println!(
                             "    {:<9}: {:.1} samples/s  (Asteroid {:.1}x)",
                             method.name(),
-                            s.throughput,
-                            sim.throughput / s.throughput
+                            r.throughput,
+                            sim.throughput / r.throughput
                         );
                     }
                     Err(e) => println!("    {:<9}: infeasible ({e})", method.name()),

@@ -1,14 +1,14 @@
-//! Quickstart: plan, simulate, and really train a small transformer LM
-//! with Asteroid's hybrid pipeline parallelism.
+//! Quickstart: one `Session` from model + cluster to a plan, a priced
+//! schedule, and (with `--features pjrt`) real HPP training of a small
+//! transformer LM.
 //!
-//!     make artifacts && cargo run --release --example quickstart
+//!     make artifacts && cargo run --release --features pjrt --example quickstart
 
 use anyhow::Result;
 use asteroid::config::{ClusterSpec, TrainConfig};
-use asteroid::coordinator::Coordinator;
-use asteroid::data::LmTask;
 use asteroid::model::from_manifest::Manifest;
-use asteroid::pipeline::{OptimizerCfg, TrainOpts};
+use asteroid::planner::Planner;
+use asteroid::session::{PjrtBackend, Session, SimBackend};
 
 fn main() -> Result<()> {
     let artifacts = std::path::PathBuf::from("artifacts");
@@ -17,36 +17,51 @@ fn main() -> Result<()> {
     let cluster = ClusterSpec::env("D", 100.0)?;
     println!("cluster: {}", cluster.describe());
 
-    // 2. The AOT-compiled LM (see python/compile/) + training config.
+    // 2. The AOT-compiled LM (see python/compile/): the manifest knows
+    //    its compiled micro-batch and config.  Config lookups are
+    //    fallible — a stale manifest errors instead of panicking.
     let manifest = Manifest::load(&artifacts)?;
     let lm = manifest.model("lm")?;
     let micro = lm.microbatch;
-    let vocab = *lm.config.get("vocab").unwrap() as usize;
-    let seq = *lm.config.get("seq").unwrap() as usize;
-    let cfg = TrainConfig::new(micro * 4, micro);
-    let c = Coordinator::for_artifact_model(&artifacts, "lm", cluster, cfg)?;
+    println!(
+        "model:   lm (vocab {}, seq {}, micro-batch {micro})",
+        lm.cfg_usize("vocab")?,
+        lm.cfg_usize("seq")?
+    );
 
-    // 3. Planning phase: Algorithm 2 picks stages / groups / allocations.
-    let out = c.plan()?;
-    println!("plan:    {}", out.plan.describe(&c.cluster));
-    println!("predicted {:.1} samples/s", out.predicted_throughput);
+    // 3. Build the session: preprocessing + planning in one step.
+    //    Algorithm 2 picks stages / groups / allocations.
+    let session = Session::builder()
+        .artifact_model(&artifacts, "lm")
+        .cluster(cluster)
+        .train(TrainConfig::new(micro * 4, micro))
+        .planner(Planner::Asteroid)
+        .steps(12)
+        .log_every(3)
+        .build()?;
+    println!("plan:    {}", session.plan().describe(session.cluster()));
+    println!(
+        "predicted {:.1} samples/s",
+        session.outcome().predicted_throughput
+    );
 
-    // 4. Simulated execution (event-accurate schedule).
-    let sim = c.simulate(&out.plan);
-    println!("simulated {:.1} samples/s on the edge cluster model", sim.throughput);
+    // 4. Simulated execution (event-accurate schedule pricing).
+    let sim = session.run(&mut SimBackend::default())?;
+    println!(
+        "simulated {:.1} samples/s on the edge cluster model",
+        sim.throughput
+    );
 
-    // 5. Real execution through the PJRT pipeline engine.
-    let mut data = LmTask::new(vocab, seq, micro, 42);
-    let stats = c.train(
-        &out.plan,
-        &TrainOpts { steps: 12, opt: OptimizerCfg::sgd(0.05), log_every: 3, ..Default::default() },
-        &mut data,
-    )?;
+    // 5. Real execution through the PJRT pipeline engine — same
+    //    session, different backend.  (Needs `--features pjrt` and a
+    //    real xla binding; the backend synthesises the LM task stream
+    //    from the manifest.)
+    let report = session.run(&mut PjrtBackend::new())?;
     println!(
         "real HPP training: loss {:.3} -> {:.3} at {:.1} samples/s (host)",
-        stats.losses.first().unwrap(),
-        stats.losses.last().unwrap(),
-        stats.samples_per_sec,
+        report.first_loss().unwrap(),
+        report.last_loss().unwrap(),
+        report.throughput,
     );
     Ok(())
 }

@@ -2,94 +2,105 @@
 //! tensor<->literal conversion, optimizer step, AllReduce, and one
 //! full end-to-end HPP round of the compiled LM.
 //!
-//! Requires `make artifacts` (skips gracefully otherwise).
-
-use std::path::PathBuf;
-
-use asteroid::data::{DataSource, LmTask};
-use asteroid::model::from_manifest::Manifest;
-use asteroid::pipeline::collective::GroupComm;
-use asteroid::pipeline::{train, Optimizer, OptimizerCfg, TrainOpts};
-use asteroid::planner::plan::{Plan, Stage};
-use asteroid::runtime::{Runtime, Tensor};
-use asteroid::util::bench::Bencher;
+//! Requires a `--features pjrt` build with a real xla binding plus
+//! `make artifacts` (skips gracefully otherwise).
 
 fn main() {
-    let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    let Ok(manifest) = Manifest::load(&artifacts) else {
-        eprintln!("artifacts/ missing — run `make artifacts` first; skipping pipeline bench");
-        return;
-    };
-    let lm = manifest.model("lm").unwrap().clone();
-    let mut b = Bencher::default();
+    #[cfg(not(feature = "pjrt"))]
+    eprintln!("pipeline bench needs the live engine: cargo bench --features pjrt");
+    #[cfg(feature = "pjrt")]
+    live::run();
+}
 
-    // Host-side primitives.
-    let t = Tensor::zeros_f32(&[8, 64, 128]);
-    b.bench("tensor_to_literal_256KB", || t.to_literal().unwrap());
-    let lit = t.to_literal().unwrap();
-    b.bench("tensor_from_literal_256KB", || Tensor::from_literal(&lit).unwrap());
+#[cfg(feature = "pjrt")]
+mod live {
+    use std::path::PathBuf;
 
-    let mut params = vec![0.01f32; 1_000_000];
-    let grads = vec![0.001f32; 1_000_000];
-    let mut opt = Optimizer::new(OptimizerCfg::sgd(0.05), &[1_000_000]);
-    b.bench("optimizer_sgd_1M_params", || {
-        opt.step(&mut [&mut params], &[&grads]);
-    });
+    use asteroid::data::{DataSource, LmTask};
+    use asteroid::model::from_manifest::Manifest;
+    use asteroid::pipeline::collective::GroupComm;
+    use asteroid::pipeline::{train, Optimizer, OptimizerCfg, TrainOpts};
+    use asteroid::planner::plan::{Plan, Stage};
+    use asteroid::runtime::{Runtime, Tensor};
+    use asteroid::util::bench::Bencher;
 
-    let comm = GroupComm::new(1, 0.0);
-    let local = vec![1.0f32; 1_000_000];
-    b.bench("allreduce_identity_1M", || comm.allreduce_sum(&local));
+    pub fn run() {
+        let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let Ok(manifest) = Manifest::load(&artifacts) else {
+            eprintln!("artifacts/ missing — run `make artifacts` first; skipping pipeline bench");
+            return;
+        };
+        let lm = manifest.model("lm").unwrap().clone();
+        let mut b = Bencher::default();
 
-    // PJRT stage executions (the per-micro-batch hot path).
-    let rt = Runtime::load(&lm, &["block_fwd", "block_bwd"]).unwrap();
-    let sig = rt.signature("block_fwd").unwrap().clone();
-    let inputs: Vec<Tensor> = sig
-        .inputs
-        .iter()
-        .map(|s| Tensor::zeros_f32(&s.shape))
-        .collect();
-    let refs: Vec<&Tensor> = inputs.iter().collect();
-    b.bench("pjrt_block_fwd", || rt.execute("block_fwd", &refs).unwrap());
+        // Host-side primitives.
+        let t = Tensor::zeros_f32(&[8, 64, 128]);
+        b.bench("tensor_to_literal_256KB", || t.to_literal().unwrap());
+        let lit = t.to_literal().unwrap();
+        b.bench("tensor_from_literal_256KB", || Tensor::from_literal(&lit).unwrap());
 
-    let sigb = rt.signature("block_bwd").unwrap().clone();
-    let binputs: Vec<Tensor> = sigb
-        .inputs
-        .iter()
-        .map(|s| Tensor::zeros_f32(&s.shape))
-        .collect();
-    let brefs: Vec<&Tensor> = binputs.iter().collect();
-    b.bench("pjrt_block_bwd", || rt.execute("block_bwd", &brefs).unwrap());
+        let mut params = vec![0.01f32; 1_000_000];
+        let grads = vec![0.001f32; 1_000_000];
+        let mut opt = Optimizer::new(OptimizerCfg::sgd(0.05), &[1_000_000]);
+        b.bench("optimizer_sgd_1M_params", || {
+            opt.step(&mut [&mut params], &[&grads]);
+        });
 
-    // One full 2-stage HPP round (amortised over steps).
-    let micro = lm.microbatch;
-    let vocab = *lm.config.get("vocab").unwrap() as usize;
-    let seq = *lm.config.get("seq").unwrap() as usize;
-    let nl = lm.layers.len();
-    let plan = Plan {
-        stages: vec![
-            Stage { layers: (0, nl / 2), devices: vec![0], alloc: vec![micro], kp: 3 },
-            Stage { layers: (nl / 2, nl), devices: vec![1], alloc: vec![micro], kp: 1 },
-        ],
-        microbatch: micro,
-        num_micro: 4,
-    };
-    let mut data = LmTask::new(vocab, seq, micro, 1);
-    let t0 = std::time::Instant::now();
-    let steps = 6;
-    let stats = train(
-        &artifacts,
-        "lm",
-        &plan,
-        &TrainOpts { steps, log_every: 0, ..Default::default() },
-        &mut data,
-    )
-    .unwrap();
-    println!(
-        "{:<44} {:>12.3} s/round (incl. startup {:.1}s total; {:.1} samples/s steady)",
-        "e2e_hpp_round_2stage",
-        stats.round_secs.iter().sum::<f64>() / stats.round_secs.len() as f64,
-        t0.elapsed().as_secs_f64(),
-        stats.samples_per_sec,
-    );
-    let _ = data.next_microbatch();
+        let comm = GroupComm::new(1, 0.0);
+        let local = vec![1.0f32; 1_000_000];
+        b.bench("allreduce_identity_1M", || comm.allreduce_sum(&local));
+
+        // PJRT stage executions (the per-micro-batch hot path).
+        let rt = Runtime::load(&lm, &["block_fwd", "block_bwd"]).unwrap();
+        let sig = rt.signature("block_fwd").unwrap().clone();
+        let inputs: Vec<Tensor> = sig
+            .inputs
+            .iter()
+            .map(|s| Tensor::zeros_f32(&s.shape))
+            .collect();
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        b.bench("pjrt_block_fwd", || rt.execute("block_fwd", &refs).unwrap());
+
+        let sigb = rt.signature("block_bwd").unwrap().clone();
+        let binputs: Vec<Tensor> = sigb
+            .inputs
+            .iter()
+            .map(|s| Tensor::zeros_f32(&s.shape))
+            .collect();
+        let brefs: Vec<&Tensor> = binputs.iter().collect();
+        b.bench("pjrt_block_bwd", || rt.execute("block_bwd", &brefs).unwrap());
+
+        // One full 2-stage HPP round (amortised over steps).
+        let micro = lm.microbatch;
+        let vocab = lm.cfg_usize("vocab").unwrap();
+        let seq = lm.cfg_usize("seq").unwrap();
+        let nl = lm.layers.len();
+        let plan = Plan {
+            stages: vec![
+                Stage { layers: (0, nl / 2), devices: vec![0], alloc: vec![micro], kp: 3 },
+                Stage { layers: (nl / 2, nl), devices: vec![1], alloc: vec![micro], kp: 1 },
+            ],
+            microbatch: micro,
+            num_micro: 4,
+        };
+        let mut data = LmTask::new(vocab, seq, micro, 1);
+        let t0 = std::time::Instant::now();
+        let steps = 6;
+        let stats = train(
+            &artifacts,
+            "lm",
+            &plan,
+            &TrainOpts { steps, log_every: 0, ..Default::default() },
+            &mut data,
+        )
+        .unwrap();
+        println!(
+            "{:<44} {:>12.3} s/round (incl. startup {:.1}s total; {:.1} samples/s steady)",
+            "e2e_hpp_round_2stage",
+            stats.round_secs.iter().sum::<f64>() / stats.round_secs.len() as f64,
+            t0.elapsed().as_secs_f64(),
+            stats.samples_per_sec,
+        );
+        let _ = data.next_microbatch();
+    }
 }

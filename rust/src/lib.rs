@@ -7,11 +7,21 @@
 //!
 //! Three layers: Pallas kernels (python, build-time) -> JAX stage
 //! models (python, build-time, AOT-lowered to HLO text) -> this Rust
-//! coordinator (planner + simulator + real PJRT pipeline runtime).
+//! crate (planner + simulator + real PJRT pipeline runtime).
+//!
+//! The user-facing surface is [`session`]: a typed
+//! [`session::SessionBuilder`] covers preprocessing + planning (every
+//! planner through one [`planner::Planner`] dispatch), and an
+//! [`session::ExecutionBackend`] — [`session::SimBackend`] or
+//! [`session::PjrtBackend`] — turns the planned session into one
+//! unified [`session::RunReport`].  Device-exit fault tolerance is a
+//! declarative [`session::FaultSpec`] on the session.
+//!
+//! Live execution needs the `pjrt` cargo feature (see rust/xla/); the
+//! default build carries the full planner/simulator/fault stack.
 
 pub mod comm;
 pub mod config;
-pub mod coordinator;
 pub mod data;
 pub mod fault;
 pub mod metrics;
@@ -22,5 +32,6 @@ pub mod profiler;
 pub mod repro;
 pub mod runtime;
 pub mod schedule;
+pub mod session;
 pub mod sim;
 pub mod util;

@@ -1,28 +1,28 @@
 //! `asteroid` — the coordinator CLI (leader entrypoint).
 //!
 //! ```text
-//! asteroid plan     --model <zoo|lm|cnn> --env B --mbps 100 [--minibatch N --micro B]
-//! asteroid simulate --model <zoo|lm|cnn> --env B --mbps 100 [...]
+//! asteroid plan     --model <zoo|lm|cnn> --env B --mbps 100 [--method dp|pp|...]
+//! asteroid simulate --model <zoo|lm|cnn> --env B --mbps 100 [--method M --schedule gpipe]
 //! asteroid train    --model lm|cnn --env B [--steps N --lr X --emulate]
 //! asteroid replay   --model effnet --env D --fail <device-id>
 //! asteroid envs
 //! ```
 //!
-//! `plan`/`simulate` accept the paper's zoo models (efficientnet-b1,
-//! mobilenetv2, resnet50, bert-small) or the AOT-compiled `lm`/`cnn`
-//! manifest models; `train` runs the real PJRT pipeline (manifest
-//! models only).
-
-use std::path::PathBuf;
+//! Every command assembles one [`Session`] (preprocessing + planning)
+//! and, where it executes, runs it through an [`ExecutionBackend`]:
+//! `simulate`/`replay` price with [`SimBackend`], `train` runs the
+//! live [`PjrtBackend`] (manifest models + `--features pjrt` only).
+//! `--method` selects any paper baseline planner without code edits.
 
 use anyhow::{bail, Context, Result};
 
 use asteroid::config::{ClusterSpec, TrainConfig};
-use asteroid::coordinator::Coordinator;
-use asteroid::data::{LmTask, VisionTask};
-use asteroid::model::from_manifest::Manifest;
 use asteroid::model::zoo;
-use asteroid::pipeline::{OptimizerCfg, TrainOpts};
+use asteroid::pipeline::OptimizerCfg;
+use asteroid::planner::baselines::Method;
+use asteroid::planner::Planner;
+use asteroid::schedule::{GpipeFillDrain, SchedulePolicy, DEFAULT_POLICY};
+use asteroid::session::{FaultSpec, PjrtBackend, RecoveryKind, Session, SimBackend};
 use asteroid::util::cli::Args;
 use asteroid::util::stats::{human_bytes, human_secs};
 
@@ -34,60 +34,121 @@ fn cluster_from(args: &Args) -> Result<ClusterSpec> {
     ClusterSpec::env(&args.str_or("env", "B"), mbps)
 }
 
-fn coordinator_from(args: &Args) -> Result<Coordinator> {
-    let model = args.str_or("model", "mobilenetv2");
+fn planner_from(args: &Args) -> Result<Planner> {
+    let method: Method = args.str_or("method", "asteroid").parse()?;
+    Ok(match method {
+        Method::Asteroid => Planner::Asteroid,
+        other => Planner::Baseline(other),
+    })
+}
+
+fn policy_from(args: &Args) -> Result<&'static dyn SchedulePolicy> {
+    Ok(match args.str_or("schedule", "1f1b").as_str() {
+        "1f1b" | "1f1b-kp" | "default" => DEFAULT_POLICY,
+        "gpipe" | "fill-drain" => &GpipeFillDrain,
+        other => bail!("unknown schedule policy {other:?} (expected 1f1b or gpipe)"),
+    })
+}
+
+/// Assemble the session every command starts from: model (zoo or AOT
+/// manifest), cluster, training config, planner, schedule policy and
+/// run options — one builder, no per-command phase wiring.
+fn session_from(args: &Args, default_model: &str) -> Result<Session> {
+    let model = args.str_or("model", default_model);
     let cluster = cluster_from(args)?;
+    let mut b = Session::builder()
+        .cluster(cluster)
+        .planner(planner_from(args)?)
+        .schedule(policy_from(args)?)
+        .steps(args.usize_or("steps", 30)?)
+        .optimizer(OptimizerCfg::Sgd {
+            lr: args.f64_or("lr", 0.05)? as f32,
+            momentum: args.f64_or("momentum", 0.9)? as f32,
+        })
+        .seed(args.u64_or("seed", 42)?)
+        .emulate(args.has_flag("emulate"))
+        .log_every(args.usize_or("log-every", 5)?);
     if zoo::by_name(&model).is_some() {
-        let cfg = TrainConfig::new(
+        b = b.model(&model).train(TrainConfig::new(
             args.usize_or("minibatch", 2048)?,
             args.usize_or("micro", 32)?,
-        );
-        Coordinator::for_zoo_model(&model, cluster, cfg)
+        ));
     } else {
-        let dir = PathBuf::from(args.str_or("artifacts", "artifacts"));
-        let manifest = Manifest::load(&dir)?;
-        let micro = manifest.model(&model)?.microbatch;
-        let cfg = TrainConfig::new(args.usize_or("minibatch", micro * 8)?, micro);
-        Coordinator::for_artifact_model(&dir, &model, cluster, cfg)
+        b = b.artifact_model(args.str_or("artifacts", "artifacts"), &model);
+        // Micro-batch is compiled into the artifact; `--minibatch`
+        // alone scales the round and the manifest supplies the rest.
+        if let Some(mb) = args.get("minibatch") {
+            let minibatch: usize = mb
+                .parse()
+                .with_context(|| format!("--minibatch expects an integer, got {mb:?}"))?;
+            b = match args.get("micro") {
+                Some(_) => b.train(TrainConfig::new(minibatch, args.usize_or("micro", 0)?)),
+                None => b.minibatch(minibatch),
+            };
+        }
+    }
+    b.build()
+}
+
+fn print_plan(s: &Session) {
+    let out = s.outcome();
+    let cfg = s.train_config();
+    println!("model     : {}", s.model().name);
+    println!("cluster   : {}", s.cluster().describe());
+    println!("planner   : {}", s.planner().describe());
+    println!(
+        "mini-batch: {} (micro {}, M {})",
+        cfg.minibatch,
+        cfg.microbatch,
+        cfg.num_microbatches()
+    );
+    println!("plan      : {}", out.plan.describe(s.cluster()));
+    println!(
+        "predicted : {:.2} samples/s (round {})",
+        out.predicted_throughput,
+        human_secs(out.predicted_latency)
+    );
+    println!("planning  : {}", human_secs(out.planning_time_s));
+    for (p, st) in out.plan.stages.iter().enumerate() {
+        let w = s.model().weight_bytes_range(st.layers.0, st.layers.1);
+        println!(
+            "  stage {p}: layers [{}, {}) on {:?} alloc {:?} K_p={} weights {}",
+            st.layers.0,
+            st.layers.1,
+            st.devices
+                .iter()
+                .map(|&d| s.cluster().devices[d].name.clone())
+                .collect::<Vec<_>>(),
+            st.alloc,
+            st.kp,
+            human_bytes(w),
+        );
     }
 }
 
 fn cmd_plan(args: &Args) -> Result<()> {
-    let c = coordinator_from(args)?;
-    let out = c.plan()?;
-    println!("model     : {}", c.model.name);
-    println!("cluster   : {}", c.cluster.describe());
-    println!("mini-batch: {} (micro {}, M {})", c.cfg.minibatch, c.cfg.microbatch,
-             c.cfg.num_microbatches());
-    println!("plan      : {}", out.plan.describe(&c.cluster));
-    println!("predicted : {:.2} samples/s (round {})",
-             out.predicted_throughput, human_secs(out.predicted_latency));
-    println!("planning  : {}", human_secs(out.planning_time_s));
-    for (p, s) in out.plan.stages.iter().enumerate() {
-        let w = c.model.weight_bytes_range(s.layers.0, s.layers.1);
-        println!(
-            "  stage {p}: layers [{}, {}) on {:?} alloc {:?} K_p={} weights {}",
-            s.layers.0, s.layers.1,
-            s.devices.iter().map(|&d| c.cluster.devices[d].name.clone()).collect::<Vec<_>>(),
-            s.alloc, s.kp, human_bytes(w),
-        );
-    }
+    let s = session_from(args, "mobilenetv2")?;
+    print_plan(&s);
     Ok(())
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {
-    let c = coordinator_from(args)?;
-    let out = c.plan()?;
-    let sim = c.simulate(&out.plan);
-    println!("plan        : {}", out.plan.describe(&c.cluster));
-    println!("predicted   : {:.2} samples/s", out.predicted_throughput);
-    println!("simulated   : {:.2} samples/s (round {})",
-             sim.throughput, human_secs(sim.round_latency));
-    println!("network     : {} per round", human_bytes(sim.bytes_on_network));
-    for &d in &out.plan.devices() {
+    let s = session_from(args, "mobilenetv2")?;
+    let report = s.run(&mut SimBackend::default())?;
+    let sim = report.sim.as_ref().expect("sim backend always prices");
+    println!("planner     : {}", s.planner().describe());
+    println!("plan        : {}", report.plan.describe(s.cluster()));
+    println!("predicted   : {:.2} samples/s", report.predicted_throughput);
+    println!(
+        "simulated   : {:.2} samples/s (round {})",
+        report.throughput,
+        human_secs(sim.round_latency)
+    );
+    println!("network     : {} per round", human_bytes(report.bytes_on_network));
+    for &d in &report.plan.devices() {
         println!(
             "  {}: busy {} bubbles {:.0}% inflight {} peak-mem {}",
-            c.cluster.devices[d].name,
+            s.cluster().devices[d].name,
             human_secs(sim.busy[d]),
             100.0 * sim.bubble_fraction[d],
             sim.peak_inflight[d],
@@ -98,67 +159,53 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
-    let model = args.str_or("model", "lm");
-    let c = coordinator_from(args)?;
-    c.artifacts
-        .as_ref()
-        .context("`train` needs an AOT model (lm or cnn); run `make artifacts`")?;
-    let out = c.plan()?;
-    println!("plan: {}", out.plan.describe(&c.cluster));
-    let opts = TrainOpts {
-        steps: args.usize_or("steps", 30)?,
-        opt: OptimizerCfg::Sgd {
-            lr: args.f64_or("lr", 0.05)? as f32,
-            momentum: args.f64_or("momentum", 0.9)? as f32,
-        },
-        seed: args.u64_or("seed", 42)?,
-        emulate: if args.has_flag("emulate") { Some(c.cluster.clone()) } else { None },
-        log_every: args.usize_or("log-every", 5)?,
-        initial_params: None,
-    };
-    let manifest = Manifest::load(c.artifacts.as_ref().unwrap().0.as_path())?;
-    let mm = manifest.model(&model)?;
-    let stats = match mm.kind.as_str() {
-        "transformer" => {
-            let vocab = *mm.config.get("vocab").unwrap() as usize;
-            let seq = *mm.config.get("seq").unwrap() as usize;
-            let mut data = LmTask::new(vocab, seq, mm.microbatch, opts.seed);
-            c.train(&out.plan, &opts, &mut data)?
-        }
-        _ => {
-            let hw = *mm.config.get("hw").unwrap() as usize;
-            let ch = *mm.config.get("in_ch").unwrap() as usize;
-            let classes = *mm.config.get("classes").unwrap() as usize;
-            let mut data = VisionTask::new(hw, ch, classes, mm.microbatch, opts.seed);
-            c.train(&out.plan, &opts, &mut data)?
-        }
-    };
+    let s = session_from(args, "lm")?;
+    println!("plan: {}", s.plan().describe(s.cluster()));
+    let report = s.run(&mut PjrtBackend::new())?;
     println!(
         "trained {} rounds: loss {:.4} -> {:.4}, {:.1} samples/s",
-        stats.losses.len(),
-        stats.losses.first().unwrap(),
-        stats.losses.last().unwrap(),
-        stats.samples_per_sec,
+        report.rounds,
+        report.first_loss().context("no rounds ran")?,
+        report.last_loss().context("no rounds ran")?,
+        report.throughput,
     );
     Ok(())
 }
 
 fn cmd_replay(args: &Args) -> Result<()> {
-    let c = coordinator_from(args)?;
-    let plan = c.plan()?.plan;
-    let failed = args.usize_or("fail", *plan.devices().last().unwrap())?;
-    println!("plan: {}", plan.describe(&c.cluster));
-    println!("before: {:.2} samples/s", c.simulate(&plan).throughput);
-    println!("failing device {} ({})", failed, c.cluster.devices[failed].name);
-    for (name, r) in [
-        ("lightweight", c.recover_lightweight(&plan, failed)?),
-        ("heavy", c.recover_heavy(&plan, failed)?),
-    ] {
+    let base = session_from(args, "efficientnet-b1")?;
+    let devices = base.plan().devices();
+    let failed = args.usize_or("fail", *devices.last().unwrap())?;
+    anyhow::ensure!(
+        devices.contains(&failed),
+        "--fail {failed} is not a planned device (plan uses {devices:?})"
+    );
+    println!("plan: {}", base.plan().describe(base.cluster()));
+    let before = base.run(&mut SimBackend::default())?;
+    println!("before: {:.2} samples/s", before.throughput);
+    println!(
+        "failing device {} ({})",
+        failed,
+        base.cluster().devices[failed].name
+    );
+    for kind in [RecoveryKind::Lightweight, RecoveryKind::Heavy] {
+        let s = base
+            .clone()
+            .with_fault(FaultSpec::device(failed).with_recovery(kind));
+        let report = s.run(&mut SimBackend::default())?;
+        let ev = &report.recoveries[0];
+        let r = &ev.report;
         println!(
-            "{name:<12} detect {:.2}s restore {:.2}s replan {:.2}s migrate {:.2}s \
+            "{:<12} detect {:.2}s restore {:.2}s replan {:.2}s migrate {:.2}s \
              = {:.2}s -> {:.2} samples/s  [{}]",
-            r.detection_s, r.restore_s, r.replan_s, r.migration_s, r.total_s(),
-            r.new_throughput, r.new_plan.describe(&c.cluster),
+            r.mechanism,
+            r.detection_s,
+            r.restore_s,
+            r.replan_s,
+            r.migration_s,
+            r.total_s(),
+            r.new_throughput,
+            r.new_plan.describe(base.cluster()),
         );
     }
     Ok(())
@@ -172,6 +219,14 @@ fn cmd_envs() -> Result<()> {
     }
     println!("zoo models: efficientnet-b1, mobilenetv2, resnet50, bert-small");
     println!("AOT models: lm, cnn (run `make artifacts`)");
+    println!(
+        "methods   : {}",
+        Method::ALL
+            .iter()
+            .map(|m| m.name().to_ascii_lowercase())
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
     Ok(())
 }
 
@@ -186,7 +241,8 @@ fn main() -> Result<()> {
         other => {
             eprintln!(
                 "asteroid: unknown command {other:?}\n\
-                 usage: asteroid <plan|simulate|train|replay|envs> [--model M --env E --mbps N ...]"
+                 usage: asteroid <plan|simulate|train|replay|envs> \
+                 [--model M --env E --mbps N --method P ...]"
             );
             if other.is_none() {
                 cmd_envs()?;

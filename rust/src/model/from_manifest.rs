@@ -132,6 +132,33 @@ impl ManifestModel {
             .with_context(|| format!("model {}: no artifact {name:?}", self.name))
     }
 
+    /// Fallible config lookup.  The `config` map is whatever
+    /// `python/compile/aot.py` emitted for this model — a missing key
+    /// means a stale or hand-edited manifest, which should surface as
+    /// an error naming the key, never as a panicking `unwrap()`.
+    pub fn cfg_f64(&self, key: &str) -> Result<f64> {
+        self.config.get(key).copied().with_context(|| {
+            format!(
+                "model {}: manifest config has no key {key:?} (available: {:?}); \
+                 re-run `make artifacts`",
+                self.name,
+                self.config.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    /// [`Self::cfg_f64`] narrowed to a non-negative integer (sizes,
+    /// counts: vocab, seq, hw, classes, ...).
+    pub fn cfg_usize(&self, key: &str) -> Result<usize> {
+        let v = self.cfg_f64(key)?;
+        anyhow::ensure!(
+            v >= 0.0 && v.fract() == 0.0 && v <= usize::MAX as f64,
+            "model {}: config {key:?} = {v} is not a valid size",
+            self.name
+        );
+        Ok(v as usize)
+    }
+
     /// Planner view: per-sample ModelDesc (manifest numbers are per
     /// micro-batch; divide by B).
     pub fn to_model_desc(&self) -> ModelDesc {
@@ -341,6 +368,17 @@ mod tests {
         assert_eq!(desc.num_layers(), lm.layers.len());
         let manifest_flops: f64 = lm.layers.iter().map(|l| l.flops_fwd + l.flops_bwd).sum();
         assert!((desc.total_flops() - manifest_flops / b).abs() / manifest_flops < 0.01);
+    }
+
+    #[test]
+    fn config_accessors_fail_cleanly() {
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let lm = m.model("lm").unwrap();
+        assert!(lm.cfg_usize("vocab").unwrap() > 1);
+        assert!(lm.cfg_f64("seq").unwrap() > 0.0);
+        let err = lm.cfg_f64("no-such-key").unwrap_err().to_string();
+        assert!(err.contains("no-such-key"), "{err}");
+        assert!(err.contains("lm"), "{err}");
     }
 
     #[test]

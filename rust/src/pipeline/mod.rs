@@ -5,13 +5,21 @@
 //! warm-up window) is not decided here: the orchestrator builds one
 //! `schedule::Schedule` for the round and each worker executes its
 //! device's compute script from it.
+//!
+//! The worker threads execute compiled HLO through the `xla` PJRT
+//! binding and only exist under the `pjrt` feature; channels,
+//! collectives, optimizers and the `TrainOpts`/`TrainStats` types are
+//! feature-independent (the session layer reports through them either
+//! way).
 
 pub mod channel;
 pub mod collective;
 pub mod optimizer;
 pub mod train;
+#[cfg(feature = "pjrt")]
 pub mod worker;
 
 pub use optimizer::{Optimizer, OptimizerCfg};
 pub use train::{train, TrainOpts, TrainStats};
+#[cfg(feature = "pjrt")]
 pub use worker::{Msg, Report, WorkerSpec};

@@ -3,23 +3,23 @@
 //! topology, feed micro-batches, collect per-round losses.
 //!
 //! This is the L3 hot path: Python is never involved — all compute runs
-//! through the AOT PJRT executables inside the workers.
+//! through the AOT PJRT executables inside the workers.  The engine
+//! itself only exists under the `pjrt` feature; without it, [`train`]
+//! is a stub that reports the missing feature (the session layer's
+//! `SimBackend` covers every featureless use case).
 
+#[cfg(not(feature = "pjrt"))]
 use std::path::Path;
-use std::sync::mpsc;
-use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
+#[cfg(not(feature = "pjrt"))]
+use anyhow::Result;
 
 use crate::config::ClusterSpec;
+#[cfg(not(feature = "pjrt"))]
 use crate::data::DataSource;
-use crate::model::from_manifest::Manifest;
-use crate::pipeline::channel::{channel, LinkModel, Rx, Shaper, Tx};
-use crate::pipeline::collective::GroupComm;
 use crate::pipeline::optimizer::OptimizerCfg;
-use crate::pipeline::worker::{run_worker, Msg, Report, WorkerSpec};
+#[cfg(not(feature = "pjrt"))]
 use crate::planner::plan::Plan;
-use crate::schedule::{Schedule, DEFAULT_POLICY};
 
 /// Training options for the real pipeline engine.
 #[derive(Debug, Clone)]
@@ -64,199 +64,237 @@ pub struct TrainStats {
     pub final_params: std::collections::BTreeMap<usize, Vec<crate::runtime::Tensor>>,
 }
 
-/// Train `model_name` under `plan` for `opts.steps` HPP-Rounds.
+/// Stub without the `pjrt` feature: live execution is unavailable, and
+/// says so instead of deadlocking or linking against nothing.
+#[cfg(not(feature = "pjrt"))]
 pub fn train(
-    artifacts_dir: &Path,
-    model_name: &str,
-    plan: &Plan,
-    opts: &TrainOpts,
-    data: &mut dyn DataSource,
+    _artifacts_dir: &Path,
+    _model_name: &str,
+    _plan: &Plan,
+    _opts: &TrainOpts,
+    _data: &mut dyn DataSource,
 ) -> Result<TrainStats> {
-    let manifest = Manifest::load(artifacts_dir)?;
-    let model = manifest.model(model_name)?.clone();
-    if plan.microbatch != model.microbatch {
-        bail!(
-            "plan micro-batch {} != compiled micro-batch {} (re-run aot.py)",
-            plan.microbatch,
-            model.microbatch
-        );
-    }
-    let n_stages = plan.stages.len();
-    let m_total = plan.num_micro;
+    anyhow::bail!(
+        "live pipeline execution requires the `pjrt` cargo feature \
+         (cargo build --release --features pjrt, with a real xla binding — \
+         see rust/xla/README.md); use session::SimBackend for schedule pricing"
+    )
+}
 
-    // ---- the round schedule: one IR, every worker executes its slice --
-    // Round-robin sharding (micro m -> slot m mod g) under the default
-    // 1F1B/K_p policy; each worker receives its device's compute script
-    // and never re-derives the order.
-    let sched = Schedule::for_runtime(plan, DEFAULT_POLICY);
-    // Hard check: an invalid schedule would deadlock the worker
-    // threads silently; validation is microseconds next to a round.
-    sched.validate().context("invalid round schedule")?;
+#[cfg(feature = "pjrt")]
+pub use live::train;
 
-    // ---- channels: one inbox per worker -------------------------------
-    let mut txs: Vec<Vec<Tx<Msg>>> = Vec::new(); // [stage][slot]
-    let mut rxs: Vec<Vec<Option<Rx<Msg>>>> = Vec::new();
-    for stage in &plan.stages {
-        let mut st = Vec::new();
-        let mut sr = Vec::new();
-        for _ in &stage.devices {
-            let (tx, rx) = channel();
-            st.push(tx);
-            sr.push(Some(rx));
-        }
-        txs.push(st);
-        rxs.push(sr);
-    }
+#[cfg(feature = "pjrt")]
+mod live {
+    use std::path::Path;
+    use std::sync::mpsc;
+    use std::time::Instant;
 
-    // ---- link shaping ---------------------------------------------------
-    let epoch = Instant::now();
-    let shaped = |from_dev: usize, to_dev: usize, tx: &Tx<Msg>| -> Tx<Msg> {
-        match &opts.emulate {
-            None => tx.clone(),
-            Some(cluster) => {
-                let bw = cluster.bandwidth[from_dev][to_dev];
-                tx.shaped(Shaper::new(
-                    LinkModel { bytes_per_sec: bw, latency_s: cluster.latency_s },
-                    epoch,
-                ))
-            }
-        }
-    };
+    use anyhow::{bail, Context, Result};
 
-    // ---- spawn workers ---------------------------------------------------
-    let (report_tx, report_rx) = mpsc::channel::<Report>();
-    let mut handles = Vec::new();
-    let mut groups: Vec<std::sync::Arc<GroupComm>> = Vec::new();
-    for (p, stage) in plan.stages.iter().enumerate() {
-        let g = stage.devices.len();
-        let secs_per_byte = match &opts.emulate {
-            Some(cluster) if g > 1 => {
-                let bw = cluster.min_bandwidth(&stage.devices);
-                2.0 * (g as f64 - 1.0) / (g as f64 * bw)
-            }
-            _ => 0.0,
-        };
-        groups.push(GroupComm::new(g, secs_per_byte));
-        for (slot, &dev) in stage.devices.iter().enumerate() {
-            let spec = WorkerSpec {
-                stage: p,
-                layers: stage.layers,
-                slot,
-                script: sched.compute_script(p, slot),
-                num_micro: m_total,
-                is_first: p == 0,
-                is_last: p + 1 == n_stages,
-                seed: opts.seed,
-                opt: opts.opt,
-                initial_params: opts.initial_params.clone(),
-            };
-            let next: Vec<Tx<Msg>> = if p + 1 < n_stages {
-                plan.stages[p + 1]
-                    .devices
-                    .iter()
-                    .zip(&txs[p + 1])
-                    .map(|(&to_dev, tx)| shaped(dev, to_dev, tx))
-                    .collect()
-            } else {
-                Vec::new()
-            };
-            let prev: Vec<Tx<Msg>> = if p > 0 {
-                plan.stages[p - 1]
-                    .devices
-                    .iter()
-                    .zip(&txs[p - 1])
-                    .map(|(&to_dev, tx)| shaped(dev, to_dev, tx))
-                    .collect()
-            } else {
-                Vec::new()
-            };
-            let rx = rxs[p][slot].take().unwrap();
-            let model_c = model.clone();
-            let report_c = report_tx.clone();
-            let group_c = groups[p].clone();
-            handles.push(std::thread::spawn(move || {
-                run_worker(spec, model_c, rx, next, prev, report_c, group_c)
-            }));
-        }
-    }
-    let n_workers = handles.len();
+    use super::{TrainOpts, TrainStats};
+    use crate::data::DataSource;
+    use crate::model::from_manifest::Manifest;
+    use crate::pipeline::channel::{channel, LinkModel, Rx, Shaper, Tx};
+    use crate::pipeline::collective::GroupComm;
+    use crate::pipeline::worker::{run_worker, Msg, Report, WorkerSpec};
+    use crate::planner::plan::Plan;
+    use crate::schedule::{Schedule, DEFAULT_POLICY};
 
-    // ---- training loop ----------------------------------------------------
-    let first_g = plan.stages[0].devices.len();
-    let last = n_stages - 1;
-    let last_g = plan.stages[last].devices.len();
-    let mut losses = Vec::with_capacity(opts.steps);
-    let mut round_secs = Vec::with_capacity(opts.steps);
-    let run_t0 = Instant::now();
-
-    for step in 0..opts.steps {
-        let t0 = Instant::now();
-        for m in 0..m_total {
-            let (input, target) = data.next_microbatch();
-            let ib = input.byte_len();
-            txs[0][m % first_g].send(ib, Msg::Act { micro: m, t: input })?;
-            let tb = target.byte_len();
-            txs[last][m % last_g].send(tb, Msg::Targets { micro: m, t: target })?;
-        }
-
-        // Round barrier: all workers report.
-        let mut loss_sum = 0.0f64;
-        let mut micro_seen = 0usize;
-        for _ in 0..n_workers {
-            match report_rx.recv().context("worker died")? {
-                Report::RoundDone { stage, loss_sum: l, micros, .. } => {
-                    if stage == last {
-                        loss_sum += l;
-                        micro_seen += micros;
-                    }
-                }
-                Report::Fatal { stage, slot, error } => {
-                    bail!("worker s{stage}/r{slot} failed: {error}");
-                }
-                Report::FinalParams { .. } => {
-                    bail!("unexpected FinalParams mid-round");
-                }
-            }
-        }
-        debug_assert_eq!(micro_seen, m_total);
-        let loss = loss_sum / m_total as f64;
-        losses.push(loss);
-        round_secs.push(t0.elapsed().as_secs_f64());
-        if opts.log_every > 0 && (step % opts.log_every == 0 || step + 1 == opts.steps) {
-            println!(
-                "step {step:>4}  loss {loss:.4}  ({:.2} s/round)",
-                round_secs.last().unwrap()
+    /// Train `model_name` under `plan` for `opts.steps` HPP-Rounds.
+    pub fn train(
+        artifacts_dir: &Path,
+        model_name: &str,
+        plan: &Plan,
+        opts: &TrainOpts,
+        data: &mut dyn DataSource,
+    ) -> Result<TrainStats> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let model = manifest.model(model_name)?.clone();
+        if plan.microbatch != model.microbatch {
+            bail!(
+                "plan micro-batch {} != compiled micro-batch {} (re-run aot.py)",
+                plan.microbatch,
+                model.microbatch
             );
         }
-        // Release the barrier (workers idle at the inter-round wait
-        // after the final step, where Stop reaches them cleanly).
-        if step + 1 < opts.steps {
-            for st in &txs {
-                for tx in st {
-                    tx.send(0, Msg::NextRound)?;
+        let n_stages = plan.stages.len();
+        let m_total = plan.num_micro;
+
+        // ---- the round schedule: one IR, every worker executes its slice --
+        // Round-robin sharding (micro m -> slot m mod g) under the default
+        // 1F1B/K_p policy; each worker receives its device's compute script
+        // and never re-derives the order.
+        let sched = Schedule::for_runtime(plan, DEFAULT_POLICY);
+        // Hard check: an invalid schedule would deadlock the worker
+        // threads silently; validation is microseconds next to a round.
+        sched.validate().context("invalid round schedule")?;
+
+        // ---- channels: one inbox per worker -------------------------------
+        let mut txs: Vec<Vec<Tx<Msg>>> = Vec::new(); // [stage][slot]
+        let mut rxs: Vec<Vec<Option<Rx<Msg>>>> = Vec::new();
+        for stage in &plan.stages {
+            let mut st = Vec::new();
+            let mut sr = Vec::new();
+            for _ in &stage.devices {
+                let (tx, rx) = channel();
+                st.push(tx);
+                sr.push(Some(rx));
+            }
+            txs.push(st);
+            rxs.push(sr);
+        }
+
+        // ---- link shaping ---------------------------------------------------
+        let epoch = Instant::now();
+        let shaped = |from_dev: usize, to_dev: usize, tx: &Tx<Msg>| -> Tx<Msg> {
+            match &opts.emulate {
+                None => tx.clone(),
+                Some(cluster) => {
+                    let bw = cluster.bandwidth[from_dev][to_dev];
+                    tx.shaped(Shaper::new(
+                        LinkModel { bytes_per_sec: bw, latency_s: cluster.latency_s },
+                        epoch,
+                    ))
+                }
+            }
+        };
+
+        // ---- spawn workers ---------------------------------------------------
+        let (report_tx, report_rx) = mpsc::channel::<Report>();
+        let mut handles = Vec::new();
+        let mut groups: Vec<std::sync::Arc<GroupComm>> = Vec::new();
+        for (p, stage) in plan.stages.iter().enumerate() {
+            let g = stage.devices.len();
+            let secs_per_byte = match &opts.emulate {
+                Some(cluster) if g > 1 => {
+                    let bw = cluster.min_bandwidth(&stage.devices);
+                    2.0 * (g as f64 - 1.0) / (g as f64 * bw)
+                }
+                _ => 0.0,
+            };
+            groups.push(GroupComm::new(g, secs_per_byte));
+            for (slot, &dev) in stage.devices.iter().enumerate() {
+                let spec = WorkerSpec {
+                    stage: p,
+                    layers: stage.layers,
+                    slot,
+                    script: sched.compute_script(p, slot),
+                    num_micro: m_total,
+                    is_first: p == 0,
+                    is_last: p + 1 == n_stages,
+                    seed: opts.seed,
+                    opt: opts.opt,
+                    initial_params: opts.initial_params.clone(),
+                };
+                let next: Vec<Tx<Msg>> = if p + 1 < n_stages {
+                    plan.stages[p + 1]
+                        .devices
+                        .iter()
+                        .zip(&txs[p + 1])
+                        .map(|(&to_dev, tx)| shaped(dev, to_dev, tx))
+                        .collect()
+                } else {
+                    Vec::new()
+                };
+                let prev: Vec<Tx<Msg>> = if p > 0 {
+                    plan.stages[p - 1]
+                        .devices
+                        .iter()
+                        .zip(&txs[p - 1])
+                        .map(|(&to_dev, tx)| shaped(dev, to_dev, tx))
+                        .collect()
+                } else {
+                    Vec::new()
+                };
+                let rx = rxs[p][slot].take().unwrap();
+                let model_c = model.clone();
+                let report_c = report_tx.clone();
+                let group_c = groups[p].clone();
+                handles.push(std::thread::spawn(move || {
+                    run_worker(spec, model_c, rx, next, prev, report_c, group_c)
+                }));
+            }
+        }
+        let n_workers = handles.len();
+
+        // ---- training loop ----------------------------------------------------
+        let first_g = plan.stages[0].devices.len();
+        let last = n_stages - 1;
+        let last_g = plan.stages[last].devices.len();
+        let mut losses = Vec::with_capacity(opts.steps);
+        let mut round_secs = Vec::with_capacity(opts.steps);
+        let run_t0 = Instant::now();
+
+        for step in 0..opts.steps {
+            let t0 = Instant::now();
+            for m in 0..m_total {
+                let (input, target) = data.next_microbatch();
+                let ib = input.byte_len();
+                txs[0][m % first_g].send(ib, Msg::Act { micro: m, t: input })?;
+                let tb = target.byte_len();
+                txs[last][m % last_g].send(tb, Msg::Targets { micro: m, t: target })?;
+            }
+
+            // Round barrier: all workers report.
+            let mut loss_sum = 0.0f64;
+            let mut micro_seen = 0usize;
+            for _ in 0..n_workers {
+                match report_rx.recv().context("worker died")? {
+                    Report::RoundDone { stage, loss_sum: l, micros, .. } => {
+                        if stage == last {
+                            loss_sum += l;
+                            micro_seen += micros;
+                        }
+                    }
+                    Report::Fatal { stage, slot, error } => {
+                        bail!("worker s{stage}/r{slot} failed: {error}");
+                    }
+                    Report::FinalParams { .. } => {
+                        bail!("unexpected FinalParams mid-round");
+                    }
+                }
+            }
+            debug_assert_eq!(micro_seen, m_total);
+            let loss = loss_sum / m_total as f64;
+            losses.push(loss);
+            round_secs.push(t0.elapsed().as_secs_f64());
+            if opts.log_every > 0 && (step % opts.log_every == 0 || step + 1 == opts.steps) {
+                println!(
+                    "step {step:>4}  loss {loss:.4}  ({:.2} s/round)",
+                    round_secs.last().unwrap()
+                );
+            }
+            // Release the barrier (workers idle at the inter-round wait
+            // after the final step, where Stop reaches them cleanly).
+            if step + 1 < opts.steps {
+                for st in &txs {
+                    for tx in st {
+                        tx.send(0, Msg::NextRound)?;
+                    }
                 }
             }
         }
-    }
 
-    // ---- shutdown: collect the final weights (checkpoint) -------------------
-    for st in &txs {
-        for tx in st {
-            let _ = tx.send(0, Msg::Stop);
+        // ---- shutdown: collect the final weights (checkpoint) -------------------
+        for st in &txs {
+            for tx in st {
+                let _ = tx.send(0, Msg::Stop);
+            }
         }
-    }
-    for h in handles {
-        let _ = h.join();
-    }
-    drop(report_tx);
-    let mut final_params = std::collections::BTreeMap::new();
-    while let Ok(rep) = report_rx.try_recv() {
-        if let Report::FinalParams { layer, values } = rep {
-            final_params.insert(layer, values);
+        for h in handles {
+            let _ = h.join();
         }
-    }
+        drop(report_tx);
+        let mut final_params = std::collections::BTreeMap::new();
+        while let Ok(rep) = report_rx.try_recv() {
+            if let Report::FinalParams { layer, values } = rep {
+                final_params.insert(layer, values);
+            }
+        }
 
-    let total = run_t0.elapsed().as_secs_f64();
-    let samples = (opts.steps * plan.samples_per_round()) as f64;
-    Ok(TrainStats { losses, round_secs, samples_per_sec: samples / total, final_params })
+        let total = run_t0.elapsed().as_secs_f64();
+        let samples = (opts.steps * plan.samples_per_round()) as f64;
+        Ok(TrainStats { losses, round_secs, samples_per_sec: samples / total, final_params })
+    }
 }

@@ -19,6 +19,9 @@ pub mod data_parallel;
 pub mod gpipe;
 pub mod hetpipe;
 
+use std::fmt;
+use std::str::FromStr;
+
 use anyhow::Result;
 
 use crate::config::{ClusterSpec, TrainConfig};
@@ -46,6 +49,18 @@ pub enum Method {
 }
 
 impl Method {
+    /// Every method, in the paper's presentation order.
+    pub const ALL: [Method; 8] = [
+        Method::Asteroid,
+        Method::OnDevice,
+        Method::DataParallel,
+        Method::Eddl,
+        Method::GpipePP,
+        Method::PipeDream,
+        Method::Dapple,
+        Method::HetPipe,
+    ];
+
     pub fn name(&self) -> &'static str {
         match self {
             Method::Asteroid => "Asteroid",
@@ -67,6 +82,35 @@ impl Method {
             Method::HetPipe,
             Method::Asteroid,
         ]
+    }
+}
+
+impl fmt::Display for Method {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl FromStr for Method {
+    type Err = anyhow::Error;
+
+    /// Case-insensitive; accepts every `name()` plus the common
+    /// spellings (`--method dp`, `--method gpipe`, ...).
+    fn from_str(s: &str) -> Result<Method> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "asteroid" | "ours" => Method::Asteroid,
+            "on-device" | "ondevice" | "device" => Method::OnDevice,
+            "dp" | "data-parallel" | "dataparallel" => Method::DataParallel,
+            "eddl" => Method::Eddl,
+            "pp" | "gpipe" | "gpipe-pp" => Method::GpipePP,
+            "pipedream" => Method::PipeDream,
+            "dapple" => Method::Dapple,
+            "hetpipe" => Method::HetPipe,
+            other => anyhow::bail!(
+                "unknown method {other:?} (expected one of: asteroid, on-device, dp, \
+                 eddl, pp, pipedream, dapple, hetpipe)"
+            ),
+        })
     }
 }
 
@@ -154,5 +198,16 @@ mod tests {
     fn method_names_stable() {
         assert_eq!(Method::Asteroid.name(), "Asteroid");
         assert_eq!(Method::all_fig13().len(), 5);
+    }
+
+    #[test]
+    fn method_display_fromstr_roundtrip() {
+        for m in Method::ALL {
+            let parsed: Method = m.to_string().to_ascii_lowercase().parse().unwrap();
+            assert_eq!(parsed, m, "{m}");
+        }
+        assert!("warp-speed".parse::<Method>().is_err());
+        assert_eq!("GPipe".parse::<Method>().unwrap(), Method::GpipePP);
+        assert_eq!("DP".parse::<Method>().unwrap(), Method::DataParallel);
     }
 }

@@ -6,6 +6,11 @@
 //! * `cost`     — Eqs. (4)-(6), (8), (11): dominant-step latency model;
 //! * `dp`       — Algorithm 2: dynamic-programming stage/group search;
 //! * `baselines`— DP, EDDL, GPipe-PP, PipeDream, Dapple, HetPipe.
+//!
+//! [`Planner`] is the single dispatch point over all of the above: the
+//! session layer (and anything else that wants a plan) names a planner
+//! declaratively and calls [`Planner::plan`] — there is no per-method
+//! entry-point family to wire by hand.
 
 pub mod alloc;
 pub mod baselines;
@@ -18,3 +23,160 @@ pub use alloc::{allocate_microbatch, AllocOpts};
 pub use cost::{plan_steps, predicted_throughput, round_latency, StepCost};
 pub use dp::{plan_hpp, plan_hpp_sweep_microbatch, PlanOutcome, PlannerConfig};
 pub use plan::{KpPolicy, Plan, Stage};
+
+use anyhow::{Context, Result};
+
+use crate::config::{ClusterSpec, TrainConfig};
+use crate::model::ModelDesc;
+use crate::profiler::ProfileTable;
+
+use self::baselines::Method;
+
+/// Every way to produce an HPP plan, dispatched through one
+/// [`Planner::plan`] path (the paper's Fig. 3 "parallelism planning"
+/// phase).
+///
+/// * `Asteroid` — Algorithm 2 with the default configuration;
+/// * `Baseline(method)` — one of the paper's comparison planners
+///   (§5.1), including the single-device on-device baseline;
+/// * `Custom(config)` — Algorithm 2 under an explicit
+///   [`PlannerConfig`] (the Fig. 15(a) ablations).
+#[derive(Debug, Clone, Copy, Default)]
+pub enum Planner {
+    #[default]
+    Asteroid,
+    Baseline(Method),
+    Custom(PlannerConfig),
+}
+
+impl Planner {
+    /// Short human-readable name for reports and CLI output.
+    pub fn describe(&self) -> String {
+        match self {
+            Planner::Asteroid => "Asteroid".to_string(),
+            Planner::Baseline(m) => m.name().to_string(),
+            Planner::Custom(_) => "Asteroid (custom config)".to_string(),
+        }
+    }
+
+    /// The one planning entry point: every method — ours and the
+    /// baselines — routes through here.
+    ///
+    /// `Baseline(HetPipe)` errors: HetPipe is hybrid *data*
+    /// parallelism (HDP), whose plan is not an HPP [`Plan`]; its
+    /// analytic result lives at [`baselines::plan_hetpipe`].
+    pub fn plan(
+        &self,
+        table: &ProfileTable,
+        cluster: &ClusterSpec,
+        model: &ModelDesc,
+        cfg: &TrainConfig,
+    ) -> Result<PlanOutcome> {
+        match *self {
+            Planner::Asteroid | Planner::Baseline(Method::Asteroid) => {
+                plan_hpp(table, cluster, model, cfg, &PlannerConfig::default())
+            }
+            Planner::Custom(pc) => plan_hpp(table, cluster, model, cfg, &pc),
+            Planner::Baseline(Method::DataParallel) | Planner::Baseline(Method::Eddl) => {
+                baselines::plan_dp(table, cluster, model, cfg, AllocOpts::default())
+            }
+            Planner::Baseline(Method::GpipePP) => {
+                baselines::plan_gpipe_pp(table, cluster, model, cfg)
+            }
+            Planner::Baseline(Method::PipeDream) => {
+                baselines::plan_pipedream(table, cluster, model, cfg)
+            }
+            Planner::Baseline(Method::Dapple) => {
+                baselines::plan_dapple(table, cluster, model, cfg)
+            }
+            Planner::Baseline(Method::OnDevice) => plan_on_device(cluster, model, cfg),
+            Planner::Baseline(Method::HetPipe) => anyhow::bail!(
+                "HetPipe is hybrid data parallelism (HDP), not an HPP plan; \
+                 use planner::baselines::plan_hetpipe for its analytic result"
+            ),
+        }
+    }
+}
+
+/// On-device baseline: the single strongest device, single stage.
+fn plan_on_device(
+    cluster: &ClusterSpec,
+    model: &ModelDesc,
+    cfg: &TrainConfig,
+) -> Result<PlanOutcome> {
+    let best = cluster
+        .devices
+        .iter()
+        .max_by(|a, b| a.peak_flops.partial_cmp(&b.peak_flops).unwrap())
+        .context("cluster has no devices")?
+        .id;
+    let mut single = cluster.clone();
+    single.devices = vec![cluster.devices[best].clone()];
+    single.devices[0].id = 0;
+    single.bandwidth = vec![vec![0.0]];
+    let table = ProfileTable::new(&single, model);
+    let mut out = plan_hpp(&table, &single, model, cfg, &PlannerConfig::default())?;
+    // Map back to the original device id.
+    for s in &mut out.plan.stages {
+        for d in &mut s.devices {
+            *d = best;
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterSpec;
+    use crate::model::zoo;
+
+    fn fixture(env: &str) -> (ClusterSpec, ModelDesc, ProfileTable, TrainConfig) {
+        let cluster = ClusterSpec::env(env, 100.0).unwrap();
+        let model = zoo::mobilenet_v2();
+        let table = ProfileTable::new(&cluster, &model);
+        let cfg = TrainConfig::new(128, 16);
+        (cluster, model, table, cfg)
+    }
+
+    #[test]
+    fn every_hpp_method_plans_through_one_path() {
+        let (cluster, model, table, cfg) = fixture("A");
+        for m in [
+            Method::Asteroid,
+            Method::OnDevice,
+            Method::DataParallel,
+            Method::Eddl,
+            Method::GpipePP,
+            Method::PipeDream,
+            Method::Dapple,
+        ] {
+            let out = Planner::Baseline(m).plan(&table, &cluster, &model, &cfg).unwrap();
+            assert!(out.predicted_throughput > 0.0, "{m:?}");
+        }
+        assert!(Planner::Baseline(Method::HetPipe)
+            .plan(&table, &cluster, &model, &cfg)
+            .is_err());
+    }
+
+    #[test]
+    fn asteroid_and_default_custom_agree() {
+        let (cluster, model, table, cfg) = fixture("B");
+        let a = Planner::Asteroid.plan(&table, &cluster, &model, &cfg).unwrap();
+        let c = Planner::Custom(PlannerConfig::default())
+            .plan(&table, &cluster, &model, &cfg)
+            .unwrap();
+        assert_eq!(a.plan, c.plan);
+    }
+
+    #[test]
+    fn on_device_uses_strongest() {
+        // Env C: NX is device 0.
+        let (cluster, model, table, cfg) = fixture("C");
+        let out = Planner::Baseline(Method::OnDevice)
+            .plan(&table, &cluster, &model, &cfg)
+            .unwrap();
+        assert_eq!(out.plan.num_stages(), 1);
+        assert_eq!(out.plan.stages[0].devices, vec![0]);
+    }
+}

@@ -7,21 +7,26 @@
 //! (DESIGN.md §Hardware-Adaptation); the claims these tables support
 //! are the paper's *relative* ones — who wins, by roughly what factor,
 //! where crossovers and OOMs appear.
+//!
+//! Every experiment that plans-and-executes goes through the public
+//! [`Session`] surface: one builder per (model, cluster, planner)
+//! triple, priced by [`SimBackend`], with device exits injected as
+//! [`FaultSpec`]s.  Only sub-planner probes (custom plans, K_p policy
+//! sweeps) drop to `sim::simulate_round` directly.
 
 use anyhow::Result;
 
 use crate::comm;
 use crate::config::{ClusterSpec, DeviceKind, DeviceSpec, TrainConfig};
-use crate::coordinator::Coordinator;
-use crate::fault::HeartbeatCfg;
 use crate::metrics::{fx, Table};
 use crate::model::{zoo, ModelDesc};
 use crate::planner::baselines::{plan_hetpipe, Method};
 use crate::planner::cost::plan_peak_memory;
-use crate::planner::dp::{PlanOutcome, PlannerConfig};
+use crate::planner::dp::PlannerConfig;
 use crate::planner::plan::KpPolicy;
-use crate::planner::AllocOpts;
+use crate::planner::{AllocOpts, Plan, Planner};
 use crate::profiler::{self, ProfileTable};
+use crate::session::{FaultSpec, RecoveryKind, Session, SimBackend};
 use crate::sim::convergence::convergence_point;
 use crate::sim::simulate_round;
 
@@ -48,6 +53,37 @@ fn epoch_size(model_name: &str) -> usize {
         "bert-small" => 20_000,
         _ => 50_000,
     }
+}
+
+/// Plan + profile one (model, cluster, planner) triple.
+fn zoo_session(
+    model: &str,
+    cluster: ClusterSpec,
+    cfg: TrainConfig,
+    planner: Planner,
+) -> Result<Session> {
+    Session::builder()
+        .model(model)
+        .cluster(cluster)
+        .train(cfg)
+        .planner(planner)
+        .build()
+}
+
+/// Event-accurate samples/s of a planned session.
+fn priced_throughput(s: &Session) -> f64 {
+    s.run(&mut SimBackend::default())
+        .expect("sim pricing of a planned session")
+        .throughput
+}
+
+/// Whether the session's plan violates any device's memory budget
+/// (the baselines plan memory-blind; the paper marks those runs
+/// x/OOM).
+fn plan_ooms(s: &Session) -> bool {
+    plan_peak_memory(s.model(), s.train_config(), s.plan())
+        .iter()
+        .any(|&(d, used)| used > s.cluster().devices[d].mem_bytes)
 }
 
 // ====================================================================
@@ -111,11 +147,15 @@ pub fn fig1() -> (Table, Table) {
         let cfg = eval_cfg(&model.name);
         let dp = comm::dp_bytes_per_sample(&model, 3, cfg.minibatch);
         // PP cut into 3 compute-balanced stages (GPipe-style cuts).
-        let c = Coordinator::for_zoo_model(&model.name, ClusterSpec::nanos(3, 100.0), cfg)
-            .unwrap();
-        let pp = c.plan_baseline(Method::GpipePP).unwrap();
+        let s = zoo_session(
+            &model.name,
+            ClusterSpec::nanos(3, 100.0),
+            cfg,
+            Planner::Baseline(Method::GpipePP),
+        )
+        .unwrap();
         let bounds: Vec<usize> =
-            pp.plan.stages.iter().skip(1).map(|s| s.layers.0).collect();
+            s.plan().stages.iter().skip(1).map(|st| st.layers.0).collect();
         let ppb = comm::pp_bytes_per_sample(&model, &bounds);
         right.row(vec![
             model.name.clone(),
@@ -233,24 +273,32 @@ pub fn table4() -> Table {
         for &(env, mbps) in &envs {
             let cluster = ClusterSpec::env(env, mbps).unwrap();
             let cfg = eval_cfg(&model.name);
-            let c = Coordinator::for_zoo_model(&model.name, cluster.clone(), cfg).unwrap();
-            let ours = c.plan().unwrap();
-            let sim = c.simulate(&ours.plan);
-            let tput = |o: Result<PlanOutcome>| -> Option<f64> {
-                o.ok().map(|o| c.simulate(&o.plan).throughput)
+            let ours =
+                zoo_session(&model.name, cluster.clone(), cfg.clone(), Planner::Asteroid)
+                    .unwrap();
+            let ours_tput = priced_throughput(&ours);
+            let tput = |m: Method| -> Option<f64> {
+                let s = zoo_session(
+                    &model.name,
+                    cluster.clone(),
+                    cfg.clone(),
+                    Planner::Baseline(m),
+                )
+                .ok()?;
+                Some(priced_throughput(&s))
             };
-            let dev = tput(c.plan_baseline(Method::OnDevice));
-            let dp = tput(c.plan_baseline(Method::DataParallel));
-            let pp = tput(c.plan_baseline(Method::GpipePP));
+            let dev = tput(Method::OnDevice);
+            let dp = tput(Method::DataParallel);
+            let pp = tput(Method::GpipePP);
             let rel = |x: Option<f64>| match x {
-                Some(v) if v > 0.0 => fx(sim.throughput / v, 1) + "x",
+                Some(v) if v > 0.0 => fx(ours_tput / v, 1) + "x",
                 _ => "OOM".into(),
             };
             t.row(vec![
                 model.name.clone(),
                 format!("{env}@{mbps:.0}Mbps"),
-                ours.plan.describe(&cluster),
-                fx(sim.throughput, 1),
+                ours.plan().describe(&cluster),
+                fx(ours_tput, 1),
                 rel(dev),
                 rel(dp),
                 rel(pp),
@@ -264,14 +312,6 @@ pub fn table4() -> Table {
 // Fig. 13: Asteroid vs EDDL / PipeDream / Dapple / HetPipe
 // ====================================================================
 
-/// Whether a plan violates any device's memory budget (the baselines
-/// plan memory-blind; the paper marks those runs x/OOM).
-fn plan_ooms(c: &Coordinator, plan: &crate::planner::Plan) -> bool {
-    plan_peak_memory(&c.model, &c.cfg, plan)
-        .iter()
-        .any(|&(d, used)| used > c.cluster.devices[d].mem_bytes)
-}
-
 pub fn fig13() -> Table {
     let mut t = Table::new(
         "Fig 13: throughput (samples/s) vs existing systems on Env B and C",
@@ -281,29 +321,32 @@ pub fn fig13() -> Table {
         for env in ["B", "C"] {
             let cluster = ClusterSpec::env(env, 100.0).unwrap();
             let cfg = eval_cfg(&model.name);
-            let c = Coordinator::for_zoo_model(&model.name, cluster.clone(), cfg.clone())
-                .unwrap();
             let cell = |m: Method| -> String {
-                match c.plan_baseline(m) {
-                    Ok(o) => {
-                        if plan_ooms(&c, &o.plan) {
+                match zoo_session(
+                    &model.name,
+                    cluster.clone(),
+                    cfg.clone(),
+                    Planner::Baseline(m),
+                ) {
+                    Ok(s) => {
+                        if plan_ooms(&s) {
                             "OOM".into()
                         } else {
-                            fx(c.simulate(&o.plan).throughput, 1)
+                            fx(priced_throughput(&s), 1)
                         }
                     }
                     Err(_) => "OOM".into(),
                 }
             };
-            let table = ProfileTable::new(&cluster, &c.model);
-            let hetpipe = match plan_hetpipe(&table, &cluster, &c.model, &cfg) {
+            let table = ProfileTable::new(&cluster, &model);
+            let hetpipe = match plan_hetpipe(&table, &cluster, &model, &cfg) {
                 Err(_) => "OOM".into(),
                 Ok(h) if h.groups.len() == 1 => {
                     // G = 1 degenerates to a plain pipeline: score it with
                     // the same simulator as every other method.
                     let g = &h.groups[0];
                     let cuts = &h.cuts[0];
-                    let plan = crate::planner::Plan {
+                    let plan = Plan {
                         stages: (0..g.len())
                             .map(|s| crate::planner::Stage {
                                 layers: (cuts[s], cuts[s + 1]),
@@ -316,7 +359,7 @@ pub fn fig13() -> Table {
                         microbatch: cfg.microbatch,
                         num_micro: cfg.num_microbatches(),
                     };
-                    fx(c.simulate(&plan).throughput, 1)
+                    fx(simulate_round(&table, &cluster, &model, &plan).throughput, 1)
                 }
                 Ok(h) => fx(h.throughput, 1),
             };
@@ -349,8 +392,6 @@ pub fn fig14() -> Table {
         for env in ["B", "C"] {
             let cluster = ClusterSpec::env(env, 100.0).unwrap();
             let cfg = eval_cfg(&model.name);
-            let c = Coordinator::for_zoo_model(&model.name, cluster.clone(), cfg.clone())
-                .unwrap();
             let ds = epoch_size(&model.name);
             let mut add = |name: &str, tput: f64, asynchronous: bool| {
                 let p = convergence_point(name, tput, epochs_to_target, ds, asynchronous);
@@ -363,20 +404,23 @@ pub fn fig14() -> Table {
                     fx(p.hours_to_target, 2),
                 ]);
             };
-            if let Ok(o) = c.plan_baseline(Method::Eddl) {
-                add("EDDL", c.simulate(&o.plan).throughput, false);
+            let session_for = |m: Method| {
+                zoo_session(&model.name, cluster.clone(), cfg.clone(), Planner::Baseline(m))
+            };
+            if let Ok(s) = session_for(Method::Eddl) {
+                add("EDDL", priced_throughput(&s), false);
             }
-            if let Ok(o) = c.plan_baseline(Method::Dapple) {
-                if !plan_ooms(&c, &o.plan) {
-                    add("Dapple", c.simulate(&o.plan).throughput, false);
+            if let Ok(s) = session_for(Method::Dapple) {
+                if !plan_ooms(&s) {
+                    add("Dapple", priced_throughput(&s), false);
                 }
             }
-            let table = ProfileTable::new(&cluster, &c.model);
-            if let Ok(h) = plan_hetpipe(&table, &cluster, &c.model, &cfg) {
+            let table = ProfileTable::new(&cluster, &model);
+            if let Ok(h) = plan_hetpipe(&table, &cluster, &model, &cfg) {
                 add("HetPipe", h.throughput, true);
             }
-            let ours = c.plan().unwrap();
-            add("Asteroid", c.simulate(&ours.plan).throughput, false);
+            let ours = session_for(Method::Asteroid).unwrap();
+            add("Asteroid", priced_throughput(&ours), false);
         }
     }
     t
@@ -397,7 +441,6 @@ pub fn fig15a() -> Table {
     for model in [zoo::efficientnet_b1(), zoo::mobilenet_v2()] {
         let cluster = ClusterSpec::env("C", 100.0).unwrap();
         let cfg = TrainConfig::new(2048, 64);
-        let c = Coordinator::for_zoo_model(&model.name, cluster, cfg).unwrap();
 
         let variants: Vec<(&str, PlannerConfig)> = vec![
             (
@@ -427,10 +470,10 @@ pub fn fig15a() -> Table {
             ("+intra-stage (A+B)", PlannerConfig::default()),
         ];
         for (name, pc) in variants {
-            match c.plan_with(&pc) {
-                Ok(o) => {
-                    let oom = plan_ooms(&c, &o.plan);
-                    let tput = c.simulate(&o.plan).throughput;
+            match zoo_session(&model.name, cluster.clone(), cfg.clone(), Planner::Custom(pc)) {
+                Ok(s) => {
+                    let oom = plan_ooms(&s);
+                    let tput = priced_throughput(&s);
                     t.row(vec![
                         model.name.clone(),
                         name.into(),
@@ -499,6 +542,17 @@ pub fn fig15b() -> Table {
 // Fig. 16: fault tolerance across dropout scenarios
 // ====================================================================
 
+/// The recovery report a session + fault spec produces under sim
+/// pricing.
+fn recovery_of(base: &Session, spec: FaultSpec) -> crate::fault::RecoveryReport {
+    let mut report = base
+        .clone()
+        .with_fault(spec)
+        .run(&mut SimBackend::default())
+        .expect("sim-priced recovery");
+    report.recoveries.remove(0).report
+}
+
 pub fn fig16() -> Table {
     let mut t = Table::new(
         "Fig 16: recovery time + post-recovery throughput per dropped device (EffNet-B1, Env D)",
@@ -507,15 +561,10 @@ pub fn fig16() -> Table {
     let cluster = ClusterSpec::env("D", 100.0).unwrap();
     let model = zoo::efficientnet_b1();
     let cfg = eval_cfg(&model.name);
-    let c = Coordinator::for_zoo_model(&model.name, cluster.clone(), cfg).unwrap();
-    let plan = c.plan().unwrap().plan;
-    for &failed in &plan.devices() {
-        for heavy in [false, true] {
-            let r = if heavy {
-                c.recover_heavy(&plan, failed).unwrap()
-            } else {
-                c.recover_lightweight(&plan, failed).unwrap()
-            };
+    let base = zoo_session(&model.name, cluster.clone(), cfg, Planner::Asteroid).unwrap();
+    for &failed in &base.plan().devices() {
+        for kind in [RecoveryKind::Lightweight, RecoveryKind::Heavy] {
+            let r = recovery_of(&base, FaultSpec::device(failed).with_recovery(kind));
             t.row(vec![
                 cluster.devices[failed].name.clone(),
                 r.mechanism.into(),
@@ -543,13 +592,12 @@ pub fn fig17() -> Table {
     let cluster = ClusterSpec::env("D", 100.0).unwrap();
     let model = zoo::efficientnet_b1();
     let cfg = eval_cfg(&model.name);
-    let c = Coordinator::for_zoo_model(&model.name, cluster, cfg).unwrap();
-    let plan = c.plan().unwrap().plan;
-    let before = c.simulate(&plan).throughput;
+    let base = zoo_session(&model.name, cluster, cfg, Planner::Asteroid).unwrap();
+    let before = priced_throughput(&base);
     // "device B": the second device of the orchestration.
-    let failed = plan.devices()[1];
-    let lite = c.recover_lightweight(&plan, failed).unwrap();
-    let heavy = c.recover_heavy(&plan, failed).unwrap();
+    let failed = base.plan().devices()[1];
+    let lite = recovery_of(&base, FaultSpec::device(failed));
+    let heavy = recovery_of(&base, FaultSpec::device(failed).heavy());
     let horizon = 100.0 + heavy.total_s() * 1.3 + 20.0;
     let dt = (horizon / 60.0).max(1.0);
     let tl_l = crate::fault::throughput_timeline(before, &lite, 100.0, horizon, dt);
@@ -574,14 +622,18 @@ pub fn fig18() -> Table {
             let cluster = ClusterSpec::nanos(n, 100.0);
             let micro = 32 * n;
             let cfg = TrainConfig::new(micro * 16, micro);
-            let c = Coordinator::for_zoo_model(&model.name, cluster, cfg).unwrap();
             let cell = |m: Method| -> String {
-                match c.plan_baseline(m) {
-                    Ok(o) => {
-                        if plan_ooms(&c, &o.plan) {
+                match zoo_session(
+                    &model.name,
+                    cluster.clone(),
+                    cfg.clone(),
+                    Planner::Baseline(m),
+                ) {
+                    Ok(s) => {
+                        if plan_ooms(&s) {
                             "OOM".into()
                         } else {
-                            fx(c.simulate(&o.plan).throughput, 1)
+                            fx(priced_throughput(&s), 1)
                         }
                     }
                     Err(_) => "OOM".into(),
@@ -611,13 +663,15 @@ pub fn table7() -> Table {
     for model in eval_models() {
         let cluster = ClusterSpec::env("C", 100.0).unwrap();
         let cfg = eval_cfg(&model.name);
-        let c = Coordinator::for_zoo_model(&model.name, cluster, cfg).unwrap();
-        let out = c.plan().unwrap();
+        let s = zoo_session(&model.name, cluster, cfg, Planner::Asteroid).unwrap();
         t.row(vec![
             model.name.clone(),
             model.num_layers().to_string(),
-            fx(out.planning_time_s, 2),
-            fx(out.planning_time_s * crate::fault::replay::EDGE_PLANNER_SLOWDOWN, 0),
+            fx(s.outcome().planning_time_s, 2),
+            fx(
+                s.outcome().planning_time_s * crate::fault::replay::EDGE_PLANNER_SLOWDOWN,
+                0,
+            ),
         ]);
     }
     t
@@ -661,11 +715,12 @@ pub fn energy() -> Table {
     let cluster = ClusterSpec::env("D", 100.0).unwrap();
     let model = zoo::efficientnet_b1();
     let cfg = eval_cfg(&model.name);
-    let c = Coordinator::for_zoo_model(&model.name, cluster.clone(), cfg).unwrap();
     let watts: f64 = cluster.devices.iter().map(|d| power(d.kind)).sum();
     for m in [Method::Asteroid, Method::DataParallel] {
-        if let Ok(o) = c.plan_baseline(m) {
-            let tput = c.simulate(&o.plan).throughput;
+        if let Ok(s) =
+            zoo_session(&model.name, cluster.clone(), cfg.clone(), Planner::Baseline(m))
+        {
+            let tput = priced_throughput(&s);
             t.row(vec![
                 m.name().into(),
                 fx(tput, 1),
@@ -686,11 +741,10 @@ pub fn recovery_headline() -> Table {
     let cluster = ClusterSpec::env("D", 100.0).unwrap();
     let model = zoo::efficientnet_b1();
     let cfg = eval_cfg(&model.name);
-    let c = Coordinator::for_zoo_model(&model.name, cluster, cfg).unwrap();
-    let plan = c.plan().unwrap().plan;
-    let failed = plan.devices()[1];
-    let lite = c.recover_lightweight(&plan, failed).unwrap();
-    let heavy = c.recover_heavy(&plan, failed).unwrap();
+    let base = zoo_session(&model.name, cluster, cfg, Planner::Asteroid).unwrap();
+    let failed = base.plan().devices()[1];
+    let lite = recovery_of(&base, FaultSpec::device(failed));
+    let heavy = recovery_of(&base, FaultSpec::device(failed).heavy());
     t.row(vec![
         "lightweight".into(),
         fx(lite.total_s(), 2),
@@ -703,7 +757,6 @@ pub fn recovery_headline() -> Table {
         fx(heavy.new_throughput, 1),
         "1.0x".into(),
     ]);
-    let _ = HeartbeatCfg::default();
     t
 }
 

@@ -10,22 +10,30 @@
 pub mod params;
 pub mod tensor;
 
+#[cfg(feature = "pjrt")]
 use std::collections::BTreeMap;
+#[cfg(feature = "pjrt")]
 use std::path::Path;
 
+#[cfg(feature = "pjrt")]
 use anyhow::{Context, Result};
 
+#[cfg(feature = "pjrt")]
 use crate::model::from_manifest::{ArtifactSig, Manifest, ManifestModel};
 pub use params::{init_layer_params, LayerParams};
 pub use tensor::{Tensor, TensorData};
 
 /// A compiled model runtime: one PJRT client plus the compiled
-/// executables this worker's stage needs.
+/// executables this worker's stage needs.  Only exists under the
+/// `pjrt` feature — the rest of the crate (planner, simulator, fault
+/// machinery, host tensors) never touches XLA.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     client: xla::PjRtClient,
     exes: BTreeMap<String, (xla::PjRtLoadedExecutable, ArtifactSig)>,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Compile the named artifacts of `model` (or all of them when
     /// `names` is empty).
@@ -143,7 +151,7 @@ impl Runtime {
     }
 }
 
-#[cfg(test)]
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     use super::*;
     use crate::model::from_manifest::Manifest;
@@ -164,7 +172,7 @@ mod tests {
         let sig = rt.signature("head_loss").unwrap().clone();
         // params + x as zeros except LN scale = 1 → uniform logits →
         // loss = ln(vocab).
-        let vocab = *lm.config.get("vocab").unwrap() as usize;
+        let vocab = lm.cfg_usize("vocab").unwrap();
         let inputs: Vec<Tensor> = sig
             .inputs
             .iter()

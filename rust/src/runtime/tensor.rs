@@ -99,9 +99,14 @@ impl Tensor {
         }
         Ok(())
     }
+}
 
-    // ------------------------------------------------- XLA boundary
-
+// ---------------------------------------------------- XLA boundary
+//
+// Literal conversion is the only place host tensors meet the PJRT
+// binding; it only exists under the `pjrt` feature.
+#[cfg(feature = "pjrt")]
+impl Tensor {
     pub fn to_literal(&self) -> Result<xla::Literal> {
         // Single memcpy via the untyped constructor (vec1().reshape()
         // copies twice — 10x slower on the 256 KB stage tensors; see
@@ -186,6 +191,7 @@ mod tests {
         assert!(Tensor::from_f32(&[2], vec![1.0, 2.0]).scalar_f32().is_err());
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn literal_roundtrip_f32() {
         let t = Tensor::from_f32(&[2, 3], (0..6).map(|i| i as f32).collect());
@@ -194,6 +200,7 @@ mod tests {
         assert_eq!(t, back);
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn literal_roundtrip_i32() {
         let t = Tensor::from_i32(&[4], vec![7, -1, 0, 3]);

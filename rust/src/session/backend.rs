@@ -1,0 +1,245 @@
+//! Execution backends: how a planned [`Session`] becomes a
+//! [`RunReport`].
+//!
+//! * [`SimBackend`] — event-accurate schedule pricing
+//!   (`sim::price_schedule`): every throughput/latency number the
+//!   paper tables report, with no numerics;
+//! * [`PjrtBackend`] — the live worker pipeline over AOT-compiled
+//!   artifacts, with optional edge-link emulation.  Requires an
+//!   artifact-model session and a build with the `pjrt` feature.
+//!
+//! Both honour the session's [`FaultSpec`](super::FaultSpec): the sim
+//! backend prices the pre-failure schedule, runs the spec'd recovery
+//! mechanism and re-prices the recovery plan; the live backend trains
+//! to the exit round, recovers, warm-starts the new pipeline from the
+//! streamed checkpoint and keeps training — the loss curve must
+//! continue, which the integration tests assert.
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::data::{DataSource, LmTask, VisionTask};
+use crate::model::from_manifest::ManifestModel;
+use crate::pipeline::{train, TrainOpts, TrainStats};
+use crate::schedule::DEFAULT_POLICY;
+use crate::sim::price_schedule;
+
+use super::{RecoveryEvent, RunReport, Session};
+
+/// Turns a planned [`Session`] into a [`RunReport`].  Implementations
+/// are free to carry their own state (a data source, a device handle);
+/// the session itself is immutable during a run.
+pub trait ExecutionBackend {
+    fn name(&self) -> &'static str;
+
+    fn run(&mut self, session: &Session) -> Result<RunReport>;
+}
+
+/// Event-accurate schedule pricing (no numerics, no artifacts
+/// needed).  Works for every session, zoo or artifact.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SimBackend;
+
+impl ExecutionBackend for SimBackend {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn run(&mut self, s: &Session) -> Result<RunReport> {
+        let sim = price_schedule(s.schedule(), s.table(), s.cluster(), s.model(), s.plan());
+        let rounds = s.run_config().steps;
+        let mut round_secs = vec![sim.round_latency; rounds];
+        let mut recoveries = Vec::new();
+
+        if let Some(spec) = s.fault() {
+            let failed = s.resolve_fault_device(spec)?;
+            let report = s.recover(spec, failed)?;
+            let at = spec.fail_after.min(rounds);
+            let new_latency =
+                report.new_plan.samples_per_round() as f64 / report.new_throughput;
+            for r in round_secs.iter_mut().skip(at) {
+                *r = new_latency;
+            }
+            recoveries.push(RecoveryEvent { round: at, failed_device: failed, report });
+        }
+
+        Ok(RunReport {
+            backend: self.name(),
+            plan: s.plan().clone(),
+            schedule: s.schedule().clone(),
+            rounds,
+            losses: Vec::new(),
+            round_secs,
+            throughput: sim.throughput,
+            predicted_throughput: s.outcome().predicted_throughput,
+            bytes_on_network: sim.bytes_on_network,
+            sim: Some(sim),
+            recoveries,
+            final_params: None,
+        })
+    }
+}
+
+/// The live multi-worker PJRT pipeline engine.  By default it
+/// synthesises the model's own task stream (LM or vision, from the
+/// manifest config); [`PjrtBackend::with_data`] substitutes a custom
+/// [`DataSource`].
+#[derive(Default)]
+pub struct PjrtBackend {
+    data: Option<Box<dyn DataSource>>,
+}
+
+impl PjrtBackend {
+    pub fn new() -> PjrtBackend {
+        PjrtBackend { data: None }
+    }
+
+    pub fn with_data(data: Box<dyn DataSource>) -> PjrtBackend {
+        PjrtBackend { data: Some(data) }
+    }
+}
+
+/// The synthetic task matching a manifest model's kind and config —
+/// what the examples and CLI train on.
+pub fn default_task(mm: &ManifestModel, seed: u64) -> Result<Box<dyn DataSource>> {
+    Ok(match mm.kind.as_str() {
+        "transformer" => Box::new(LmTask::new(
+            mm.cfg_usize("vocab")?,
+            mm.cfg_usize("seq")?,
+            mm.microbatch,
+            seed,
+        )),
+        _ => Box::new(VisionTask::new(
+            mm.cfg_usize("hw")?,
+            mm.cfg_usize("in_ch")?,
+            mm.cfg_usize("classes")?,
+            mm.microbatch,
+            seed,
+        )),
+    })
+}
+
+impl ExecutionBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn run(&mut self, s: &Session) -> Result<RunReport> {
+        let (dir, name) = s.artifacts().context(
+            "live execution requires an artifact model \
+             (SessionBuilder::artifact_model); zoo models are simulation-only",
+        )?;
+        // The live workers execute the default 1F1B/K_p scripts; a
+        // session built with another policy would price one schedule
+        // and run another.
+        anyhow::ensure!(
+            s.policy().name() == DEFAULT_POLICY.name(),
+            "the live engine runs the default {:?} schedule policy (session uses {:?}); \
+             price other policies with SimBackend",
+            DEFAULT_POLICY.name(),
+            s.policy().name()
+        );
+
+        let rc = s.run_config().clone();
+        let opts = TrainOpts {
+            steps: rc.steps,
+            opt: rc.opt,
+            seed: rc.seed,
+            emulate: if rc.emulate { Some(s.cluster().clone()) } else { None },
+            log_every: rc.log_every,
+            initial_params: None,
+        };
+        let mut owned;
+        let data: &mut dyn DataSource = match self.data.as_mut() {
+            Some(d) => d.as_mut(),
+            None => {
+                let mm = s
+                    .manifest_model()
+                    .context("artifact session is missing its manifest model")?;
+                owned = default_task(mm, rc.seed)?;
+                owned.as_mut()
+            }
+        };
+
+        match s.fault() {
+            None => {
+                let stats = train(dir, name, s.plan(), &opts, data)?;
+                Ok(live_report(s, stats, Vec::new()))
+            }
+            Some(spec) => {
+                let failed = s.resolve_fault_device(spec)?;
+
+                // Phase 1: train until the exit; final_params is the
+                // live checkpoint (fault::replication topology).
+                let mut before_opts = opts.clone();
+                before_opts.steps = spec.fail_after;
+                let before = train(dir, name, s.plan(), &before_opts, data)?;
+
+                // Phase 2: the spec'd recovery mechanism (timing model
+                // for the report; weights come from the checkpoint).
+                let report = s.recover(spec, failed)?;
+
+                // Phase 3: resume on the recovery plan, warm-started.
+                let mut after_opts = opts.clone();
+                after_opts.steps = spec.resume_rounds;
+                after_opts.initial_params = Some(Arc::new(before.final_params.clone()));
+                let after = train(dir, name, &report.new_plan, &after_opts, data)?;
+
+                let event = RecoveryEvent {
+                    round: spec.fail_after,
+                    failed_device: failed,
+                    report,
+                };
+                Ok(merge_live_phases(s, before, after, event))
+            }
+        }
+    }
+}
+
+fn live_report(s: &Session, stats: TrainStats, recoveries: Vec<RecoveryEvent>) -> RunReport {
+    RunReport {
+        backend: "pjrt",
+        plan: s.plan().clone(),
+        schedule: s.schedule().clone(),
+        rounds: stats.losses.len(),
+        losses: stats.losses,
+        round_secs: stats.round_secs,
+        throughput: stats.samples_per_sec,
+        predicted_throughput: s.outcome().predicted_throughput,
+        bytes_on_network: 0,
+        sim: None,
+        recoveries,
+        final_params: Some(stats.final_params),
+    }
+}
+
+fn merge_live_phases(
+    s: &Session,
+    before: TrainStats,
+    after: TrainStats,
+    event: RecoveryEvent,
+) -> RunReport {
+    // `throughput` is the pre-fault pipeline's rate on every backend
+    // (the recovery event carries the post-fault rate); the per-phase
+    // wall-clocks stay recoverable from `round_secs`.
+    let pre_fault_throughput = before.samples_per_sec;
+    let mut losses = before.losses;
+    losses.extend(after.losses);
+    let mut round_secs = before.round_secs;
+    round_secs.extend(after.round_secs);
+    RunReport {
+        backend: "pjrt",
+        plan: s.plan().clone(),
+        schedule: s.schedule().clone(),
+        rounds: losses.len(),
+        losses,
+        round_secs,
+        throughput: pre_fault_throughput,
+        predicted_throughput: s.outcome().predicted_throughput,
+        bytes_on_network: 0,
+        sim: None,
+        recoveries: vec![event],
+        final_params: Some(after.final_params),
+    }
+}

@@ -1,0 +1,699 @@
+//! The Asteroid session: **one** typed path from (model, cluster,
+//! training config) to a [`RunReport`], covering all three phases of
+//! the paper's Fig. 3.
+//!
+//! * **Preprocessing** — [`SessionBuilder::build`] resolves the model
+//!   source (zoo or AOT artifact manifest) and builds the
+//!   [`ProfileTable`] for the cluster;
+//! * **Planning** — the builder's declarative [`Planner`] choice runs
+//!   through the unified `Planner::plan` dispatch (Algorithm 2 or any
+//!   baseline) and the planned [`Session`] carries the resulting
+//!   [`PlanOutcome`] plus the explicit round [`Schedule`];
+//! * **Execution** — any [`ExecutionBackend`] turns the planned
+//!   session into a [`RunReport`]: [`SimBackend`] prices the schedule
+//!   event-accurately, [`PjrtBackend`] runs the live worker pipeline.
+//!
+//! Device-exit fault tolerance (paper §3.4) is a *property of the
+//! session*, not a special entry point: attach a [`FaultSpec`] and
+//! every backend injects the exit and recovers (lightweight replay or
+//! heavy rescheduling), reporting the event in
+//! [`RunReport::recoveries`].
+//!
+//! ```no_run
+//! use asteroid::config::{ClusterSpec, TrainConfig};
+//! use asteroid::planner::Planner;
+//! use asteroid::session::{FaultSpec, Session, SimBackend};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let session = Session::builder()
+//!     .model("mobilenetv2")
+//!     .cluster(ClusterSpec::env("B", 100.0)?)
+//!     .train(TrainConfig::new(256, 16))
+//!     .planner(Planner::Asteroid)
+//!     .fault(FaultSpec::last_planned())
+//!     .build()?;
+//! let report = session.run(&mut SimBackend::default())?;
+//! println!("{:.1} samples/s", report.throughput);
+//! # Ok(())
+//! # }
+//! ```
+
+pub mod backend;
+
+pub use backend::{ExecutionBackend, PjrtBackend, SimBackend};
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::config::{ClusterSpec, TrainConfig};
+use crate::fault::{
+    heavy_reschedule, lightweight_replay, HeartbeatCfg, RecoveryReport,
+};
+use crate::model::from_manifest::{Manifest, ManifestModel};
+use crate::model::{zoo, ModelDesc};
+use crate::pipeline::OptimizerCfg;
+use crate::planner::dp::PlanOutcome;
+use crate::planner::{Plan, Planner};
+use crate::profiler::ProfileTable;
+use crate::runtime::Tensor;
+use crate::schedule::{Schedule, SchedulePolicy, DEFAULT_POLICY};
+use crate::sim::SimResult;
+
+/// Where a session's model comes from.
+#[derive(Debug, Clone)]
+pub enum ModelSource {
+    /// Analytic zoo model (simulation-only).
+    Zoo(String),
+    /// AOT-compiled manifest model (live execution available).
+    Artifact { dir: PathBuf, name: String },
+}
+
+/// Which device exits in a [`FaultSpec`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultTarget {
+    /// A specific cluster device id.
+    Device(usize),
+    /// The last device of the planned pipeline (resolved after
+    /// planning — handy for specs written before the plan exists).
+    LastPlanned,
+}
+
+/// Which §3.4 recovery mechanism handles the exit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecoveryKind {
+    /// Ours: heartbeat detect → restore from the replication topology
+    /// → FLOPs-based layer re-planning → boundary migration.
+    Lightweight,
+    /// Baseline: gather all weights, re-run the full planner on the
+    /// strongest remaining device, redistribute everything.
+    Heavy,
+}
+
+/// Declarative device-exit injection: *what* fails, *when*, and *how*
+/// the session recovers.  Replaces the old bespoke
+/// failure-training/recovery entry points.
+#[derive(Debug, Clone)]
+pub struct FaultSpec {
+    /// HPP-Rounds to run before the device exits.
+    pub fail_after: usize,
+    /// The exiting device.
+    pub target: FaultTarget,
+    pub recovery: RecoveryKind,
+    /// Rounds to run on the recovered pipeline (live backend; the sim
+    /// backend prices the remaining `steps - fail_after` rounds on the
+    /// recovery plan instead).
+    pub resume_rounds: usize,
+    /// Detection model for the recovery report.
+    pub heartbeat: HeartbeatCfg,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec {
+            fail_after: 4,
+            target: FaultTarget::LastPlanned,
+            recovery: RecoveryKind::Lightweight,
+            resume_rounds: 4,
+            heartbeat: HeartbeatCfg::default(),
+        }
+    }
+}
+
+impl FaultSpec {
+    /// Exit of a specific device id.
+    pub fn device(id: usize) -> FaultSpec {
+        FaultSpec { target: FaultTarget::Device(id), ..FaultSpec::default() }
+    }
+
+    /// Exit of the last planned device.
+    pub fn last_planned() -> FaultSpec {
+        FaultSpec::default()
+    }
+
+    pub fn after(mut self, rounds: usize) -> FaultSpec {
+        self.fail_after = rounds;
+        self
+    }
+
+    pub fn resume_for(mut self, rounds: usize) -> FaultSpec {
+        self.resume_rounds = rounds;
+        self
+    }
+
+    pub fn with_recovery(mut self, kind: RecoveryKind) -> FaultSpec {
+        self.recovery = kind;
+        self
+    }
+
+    /// Shorthand for the heavy-rescheduling baseline.
+    pub fn heavy(self) -> FaultSpec {
+        self.with_recovery(RecoveryKind::Heavy)
+    }
+}
+
+/// Per-run execution options shared by every backend.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// HPP-Rounds to execute (without a fault; with one, the live
+    /// backend runs `fault.fail_after + fault.resume_rounds`).
+    pub steps: usize,
+    pub opt: OptimizerCfg,
+    pub seed: u64,
+    /// Shape live inter-worker links with the cluster's D2D bandwidth
+    /// matrix (edge-network emulation).
+    pub emulate: bool,
+    /// Print a progress line every n steps (0 = silent).
+    pub log_every: usize,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            steps: 20,
+            opt: OptimizerCfg::sgd(0.05),
+            seed: 42,
+            emulate: false,
+            log_every: 5,
+        }
+    }
+}
+
+/// One device-exit + recovery observed during a run.
+#[derive(Debug, Clone)]
+pub struct RecoveryEvent {
+    /// Round index the exit was injected at.
+    pub round: usize,
+    pub failed_device: usize,
+    /// Full §3.4 breakdown: detect/restore/replan/migrate, the
+    /// recovery plan, its throughput, and the schedule-diff-derived
+    /// replay set.
+    pub report: RecoveryReport,
+}
+
+/// The unified result every [`ExecutionBackend`] returns.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    /// Which backend produced this (`"sim"` / `"pjrt"`).
+    pub backend: &'static str,
+    /// The plan that was executed.
+    pub plan: Plan,
+    /// Its explicit HPP-Round schedule (the session's policy,
+    /// sample-sharded form).
+    pub schedule: Schedule,
+    /// Rounds executed (sim: priced).
+    pub rounds: usize,
+    /// Mean loss per round.  Empty for the sim backend: schedule
+    /// pricing has no numerics.
+    pub losses: Vec<f64>,
+    /// Wall-clock seconds per round (sim: the priced round latency,
+    /// switching to the recovery plan's latency after a fault).
+    pub round_secs: Vec<f64>,
+    /// Samples/second of the (pre-fault) pipeline.
+    pub throughput: f64,
+    /// The planner's analytic Eq. 4-6 prediction, for cross-checks.
+    pub predicted_throughput: f64,
+    /// Bytes moved across links in one round (sim backend; the live
+    /// engine does not meter its channels).
+    pub bytes_on_network: u64,
+    /// Event-accurate pricing detail (sim backend only).
+    pub sim: Option<SimResult>,
+    /// Device exits injected via the session's [`FaultSpec`].
+    pub recoveries: Vec<RecoveryEvent>,
+    /// Final weights by global layer index (live backend only) — the
+    /// coordinator-side checkpoint.
+    pub final_params: Option<BTreeMap<usize, Vec<Tensor>>>,
+}
+
+impl RunReport {
+    pub fn first_loss(&self) -> Option<f64> {
+        self.losses.first().copied()
+    }
+
+    pub fn last_loss(&self) -> Option<f64> {
+        self.losses.last().copied()
+    }
+
+    /// Mean seconds per round.
+    pub fn mean_round_secs(&self) -> f64 {
+        if self.round_secs.is_empty() {
+            0.0
+        } else {
+            self.round_secs.iter().sum::<f64>() / self.round_secs.len() as f64
+        }
+    }
+}
+
+/// Builder for a planned [`Session`].  `build()` runs preprocessing
+/// and planning; execution is a separate, backend-polymorphic step.
+pub struct SessionBuilder {
+    model: Option<ModelSource>,
+    cluster: Option<ClusterSpec>,
+    train: Option<TrainConfig>,
+    minibatch: Option<usize>,
+    planner: Planner,
+    policy: &'static dyn SchedulePolicy,
+    fault: Option<FaultSpec>,
+    run: RunConfig,
+}
+
+impl Default for SessionBuilder {
+    fn default() -> Self {
+        SessionBuilder {
+            model: None,
+            cluster: None,
+            train: None,
+            minibatch: None,
+            planner: Planner::Asteroid,
+            policy: DEFAULT_POLICY,
+            fault: None,
+            run: RunConfig::default(),
+        }
+    }
+}
+
+impl SessionBuilder {
+    /// A zoo model by name (`mobilenetv2`, `efficientnet-b1`,
+    /// `resnet50`, `bert-small`).  Simulation-only.
+    pub fn model(mut self, zoo_name: &str) -> Self {
+        self.model = Some(ModelSource::Zoo(zoo_name.to_string()));
+        self
+    }
+
+    /// An AOT-compiled manifest model (built by `make artifacts`).
+    /// Required for live execution through [`PjrtBackend`].
+    pub fn artifact_model(mut self, dir: impl Into<PathBuf>, name: &str) -> Self {
+        self.model = Some(ModelSource::Artifact { dir: dir.into(), name: name.to_string() });
+        self
+    }
+
+    pub fn cluster(mut self, cluster: ClusterSpec) -> Self {
+        self.cluster = Some(cluster);
+        self
+    }
+
+    /// Mini-batch / micro-batch configuration.  Required for zoo
+    /// models; artifact models default to (8 × compiled micro-batch,
+    /// compiled micro-batch).
+    pub fn train(mut self, cfg: TrainConfig) -> Self {
+        self.train = Some(cfg);
+        self
+    }
+
+    /// Mini-batch size alone, with the micro-batch taken from the
+    /// compiled manifest — artifact models only (a zoo model has no
+    /// compiled micro-batch to default from; use [`Self::train`]).
+    pub fn minibatch(mut self, minibatch: usize) -> Self {
+        self.minibatch = Some(minibatch);
+        self
+    }
+
+    pub fn planner(mut self, planner: Planner) -> Self {
+        self.planner = planner;
+        self
+    }
+
+    /// Round schedule policy (default: the paper's 1F1B/K_p).
+    pub fn schedule(mut self, policy: &'static dyn SchedulePolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Declarative device-exit injection (see [`FaultSpec`]).
+    pub fn fault(mut self, spec: FaultSpec) -> Self {
+        self.fault = Some(spec);
+        self
+    }
+
+    pub fn steps(mut self, steps: usize) -> Self {
+        self.run.steps = steps;
+        self
+    }
+
+    pub fn optimizer(mut self, opt: OptimizerCfg) -> Self {
+        self.run.opt = opt;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.run.seed = seed;
+        self
+    }
+
+    pub fn emulate(mut self, on: bool) -> Self {
+        self.run.emulate = on;
+        self
+    }
+
+    pub fn log_every(mut self, n: usize) -> Self {
+        self.run.log_every = n;
+        self
+    }
+
+    /// Preprocessing + planning: resolve the model, profile the
+    /// cluster, and run the chosen planner.  Every validation error a
+    /// mis-assembled session can produce surfaces here, before any
+    /// execution.
+    pub fn build(self) -> Result<Session> {
+        let source = self
+            .model
+            .context("Session::builder(): .model(..) or .artifact_model(..) is required")?;
+        let cluster = self
+            .cluster
+            .context("Session::builder(): .cluster(..) is required")?;
+        anyhow::ensure!(!cluster.devices.is_empty(), "cluster has no devices");
+
+        let (model, artifacts, manifest_model, cfg) = match &source {
+            ModelSource::Zoo(name) => {
+                let model = zoo::by_name(name).with_context(|| {
+                    format!("unknown zoo model {name:?} (run `asteroid envs` for the list)")
+                })?;
+                anyhow::ensure!(
+                    self.minibatch.is_none(),
+                    "SessionBuilder::minibatch is for artifact models (micro-batch comes \
+                     from the manifest); zoo sessions take a full .train(TrainConfig)"
+                );
+                let cfg = self.train.context(
+                    "zoo sessions need an explicit .train(TrainConfig) — there is no \
+                     compiled micro-batch to default from",
+                )?;
+                (model, None, None, cfg)
+            }
+            ModelSource::Artifact { dir, name } => {
+                let manifest = Manifest::load(dir)?;
+                let mm = manifest.model(name)?.clone();
+                let cfg = match (self.train, self.minibatch) {
+                    (Some(_), Some(_)) => anyhow::bail!(
+                        ".train(..) and .minibatch(..) are mutually exclusive"
+                    ),
+                    (Some(cfg), None) => cfg,
+                    (None, Some(mb)) => TrainConfig::new(mb, mm.microbatch),
+                    (None, None) => TrainConfig::new(mm.microbatch * 8, mm.microbatch),
+                };
+                anyhow::ensure!(
+                    cfg.microbatch == mm.microbatch,
+                    "training micro-batch {} != compiled micro-batch {} (re-run aot.py)",
+                    cfg.microbatch,
+                    mm.microbatch
+                );
+                let model = mm.to_model_desc();
+                (model, Some((dir.clone(), name.clone())), Some(mm), cfg)
+            }
+        };
+
+        let table = ProfileTable::new(&cluster, &model);
+        let outcome = self
+            .planner
+            .plan(&table, &cluster, &model, &cfg)
+            .with_context(|| format!("planning ({})", self.planner.describe()))?;
+        let schedule = Schedule::for_sim(&outcome.plan, &model, self.policy);
+
+        Ok(Session {
+            source,
+            cluster,
+            model,
+            table,
+            cfg,
+            planner: self.planner,
+            policy: self.policy,
+            fault: self.fault,
+            run_cfg: self.run,
+            artifacts,
+            manifest_model,
+            outcome,
+            schedule,
+        })
+    }
+}
+
+/// A planned session: model + cluster + profiles + the chosen plan and
+/// its round schedule.  Hand it to an [`ExecutionBackend`] (or call
+/// [`Session::run`]) to get a [`RunReport`].
+#[derive(Clone)]
+pub struct Session {
+    source: ModelSource,
+    cluster: ClusterSpec,
+    model: ModelDesc,
+    table: ProfileTable,
+    cfg: TrainConfig,
+    planner: Planner,
+    policy: &'static dyn SchedulePolicy,
+    fault: Option<FaultSpec>,
+    run_cfg: RunConfig,
+    artifacts: Option<(PathBuf, String)>,
+    /// Resolved at build so backends never re-parse the manifest.
+    manifest_model: Option<ManifestModel>,
+    outcome: PlanOutcome,
+    schedule: Schedule,
+}
+
+impl Session {
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder::default()
+    }
+
+    pub fn cluster(&self) -> &ClusterSpec {
+        &self.cluster
+    }
+
+    pub fn model(&self) -> &ModelDesc {
+        &self.model
+    }
+
+    pub fn table(&self) -> &ProfileTable {
+        &self.table
+    }
+
+    pub fn train_config(&self) -> &TrainConfig {
+        &self.cfg
+    }
+
+    pub fn planner(&self) -> Planner {
+        self.planner
+    }
+
+    pub fn policy(&self) -> &'static dyn SchedulePolicy {
+        self.policy
+    }
+
+    pub fn source(&self) -> &ModelSource {
+        &self.source
+    }
+
+    pub fn fault(&self) -> Option<&FaultSpec> {
+        self.fault.as_ref()
+    }
+
+    pub fn run_config(&self) -> &RunConfig {
+        &self.run_cfg
+    }
+
+    /// Artifact directory + model name when this is a live-capable
+    /// session.
+    pub fn artifacts(&self) -> Option<(&Path, &str)> {
+        self.artifacts.as_ref().map(|(d, n)| (d.as_path(), n.as_str()))
+    }
+
+    /// The parsed manifest model backing an artifact session.
+    pub fn manifest_model(&self) -> Option<&ManifestModel> {
+        self.manifest_model.as_ref()
+    }
+
+    /// The full planning outcome (plan, planner schedule, predictions,
+    /// planning time).
+    pub fn outcome(&self) -> &PlanOutcome {
+        &self.outcome
+    }
+
+    pub fn plan(&self) -> &Plan {
+        &self.outcome.plan
+    }
+
+    /// The session's explicit HPP-Round schedule (its policy,
+    /// sample-sharded form — what [`SimBackend`] prices).
+    pub fn schedule(&self) -> &Schedule {
+        &self.schedule
+    }
+
+    /// Re-attach a different fault spec without re-planning (the plan
+    /// and profiles are unchanged by *how* we intend to break it).
+    pub fn with_fault(mut self, spec: FaultSpec) -> Session {
+        self.fault = Some(spec);
+        self
+    }
+
+    pub fn without_fault(mut self) -> Session {
+        self.fault = None;
+        self
+    }
+
+    /// Execute this session on a backend.  This is the single public
+    /// entry path from a planned session to a [`RunReport`].
+    pub fn run(&self, backend: &mut dyn ExecutionBackend) -> Result<RunReport> {
+        backend.run(self)
+    }
+
+    /// Resolve a fault target against the planned pipeline.
+    pub(crate) fn resolve_fault_device(&self, spec: &FaultSpec) -> Result<usize> {
+        let devices = self.plan().devices();
+        match spec.target {
+            FaultTarget::LastPlanned => devices
+                .last()
+                .copied()
+                .context("plan has no devices to fail"),
+            FaultTarget::Device(id) => {
+                anyhow::ensure!(
+                    devices.contains(&id),
+                    "fault target device {id} is not part of the plan (devices: {devices:?})"
+                );
+                Ok(id)
+            }
+        }
+    }
+
+    /// Run the spec'd §3.4 recovery mechanism for an exit of `failed`.
+    pub(crate) fn recover(&self, spec: &FaultSpec, failed: usize) -> Result<RecoveryReport> {
+        match spec.recovery {
+            RecoveryKind::Lightweight => lightweight_replay(
+                &self.table,
+                &self.cluster,
+                &self.model,
+                &self.cfg,
+                self.plan(),
+                failed,
+                &spec.heartbeat,
+            ),
+            RecoveryKind::Heavy => heavy_reschedule(
+                &self.table,
+                &self.cluster,
+                &self.model,
+                &self.cfg,
+                self.plan(),
+                failed,
+                &spec.heartbeat,
+            ),
+        }
+    }
+
+    /// One-line summary for CLI/report output.
+    pub fn describe(&self) -> String {
+        format!(
+            "{} on {} via {} ({})",
+            self.model.name,
+            self.cluster.describe(),
+            self.planner.describe(),
+            self.plan().describe(&self.cluster)
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner::baselines::Method;
+
+    fn zoo_session(env: &str) -> Session {
+        Session::builder()
+            .model("mobilenetv2")
+            .cluster(ClusterSpec::env(env, 100.0).unwrap())
+            .train(TrainConfig::new(256, 16))
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn builds_plans_and_prices() {
+        let s = zoo_session("B");
+        let report = s.run(&mut SimBackend::default()).unwrap();
+        assert!(report.throughput > 0.0);
+        assert_eq!(report.backend, "sim");
+        assert_eq!(&report.plan, s.plan());
+    }
+
+    #[test]
+    fn builder_requires_model_and_cluster() {
+        let err = Session::builder().build().unwrap_err().to_string();
+        assert!(err.contains(".model"), "{err}");
+        let err = Session::builder().model("mobilenetv2").build().unwrap_err().to_string();
+        assert!(err.contains(".cluster"), "{err}");
+        // Zoo sessions must pass an explicit training config.
+        let err = Session::builder()
+            .model("mobilenetv2")
+            .cluster(ClusterSpec::env("A", 100.0).unwrap())
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("train"), "{err}");
+    }
+
+    #[test]
+    fn unknown_zoo_model_rejected() {
+        assert!(Session::builder()
+            .model("nope")
+            .cluster(ClusterSpec::env("A", 100.0).unwrap())
+            .train(TrainConfig::new(64, 8))
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn baselines_reachable_through_builder() {
+        for m in [
+            Method::DataParallel,
+            Method::GpipePP,
+            Method::PipeDream,
+            Method::Dapple,
+            Method::OnDevice,
+        ] {
+            let s = Session::builder()
+                .model("mobilenetv2")
+                .cluster(ClusterSpec::env("A", 100.0).unwrap())
+                .train(TrainConfig::new(128, 16))
+                .planner(Planner::Baseline(m))
+                .build()
+                .unwrap();
+            assert!(s.outcome().predicted_throughput > 0.0, "{m:?}");
+        }
+        assert!(Session::builder()
+            .model("mobilenetv2")
+            .cluster(ClusterSpec::env("A", 100.0).unwrap())
+            .train(TrainConfig::new(128, 16))
+            .planner(Planner::Baseline(Method::HetPipe))
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn fault_spec_drives_both_recovery_mechanisms() {
+        let base = Session::builder()
+            .model("efficientnet-b1")
+            .cluster(ClusterSpec::env("D", 100.0).unwrap())
+            .train(TrainConfig::new(256, 16))
+            .steps(8)
+            .build()
+            .unwrap();
+        let lite = base
+            .clone()
+            .with_fault(FaultSpec::last_planned().after(3))
+            .run(&mut SimBackend::default())
+            .unwrap();
+        let heavy = base
+            .with_fault(FaultSpec::last_planned().after(3).heavy())
+            .run(&mut SimBackend::default())
+            .unwrap();
+        let (l, h) = (&lite.recoveries[0].report, &heavy.recoveries[0].report);
+        assert!(l.total_s() < h.total_s(), "lite {} vs heavy {}", l.total_s(), h.total_s());
+        assert!(!l.new_plan.devices().contains(&lite.recoveries[0].failed_device));
+        // Post-fault rounds are priced on the recovery plan.
+        assert_eq!(lite.round_secs.len(), 8);
+        assert_ne!(lite.round_secs[0], lite.round_secs[7]);
+    }
+
+    #[test]
+    fn fault_target_must_be_planned() {
+        let s = zoo_session("B");
+        let spec = FaultSpec::device(999);
+        assert!(s.resolve_fault_device(&spec).is_err());
+    }
+}

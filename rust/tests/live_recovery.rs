@@ -1,14 +1,17 @@
 //! Live fault-tolerance integration: a device exits mid-training and
 //! the pipeline replays — real PJRT execution before and after, with
-//! the checkpointed weights carried across the re-planning.
+//! the checkpointed weights carried across the re-planning.  The exit
+//! is injected declaratively: a `FaultSpec` on the session, one
+//! `PjrtBackend` run.
+#![cfg(feature = "pjrt")]
 
 use std::path::PathBuf;
 
 use asteroid::config::{ClusterSpec, TrainConfig};
-use asteroid::coordinator::Coordinator;
 use asteroid::data::LmTask;
 use asteroid::model::from_manifest::Manifest;
-use asteroid::pipeline::{OptimizerCfg, TrainOpts};
+use asteroid::pipeline::{train, OptimizerCfg, TrainOpts};
+use asteroid::session::{FaultSpec, PjrtBackend, Session};
 
 fn artifacts_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
@@ -20,38 +23,40 @@ fn training_survives_device_exit_with_warm_weights() {
     let manifest = Manifest::load(&artifacts).expect("run `make artifacts` first");
     let lm = manifest.model("lm").unwrap();
     let micro = lm.microbatch;
-    let vocab = *lm.config.get("vocab").unwrap() as usize;
-    let seq = *lm.config.get("seq").unwrap() as usize;
+    let vocab = lm.cfg_usize("vocab").unwrap();
 
     // 3-device cluster so losing one still leaves a pipeline.
-    let cluster = ClusterSpec::env("D", 1000.0).unwrap();
-    let cfg = TrainConfig::new(micro * 4, micro);
-    let c = Coordinator::for_artifact_model(&artifacts, "lm", cluster, cfg).unwrap();
-    let plan = c.plan().unwrap().plan;
-    assert!(plan.devices().len() >= 2, "need a multi-device plan");
+    let session = Session::builder()
+        .artifact_model(&artifacts, "lm")
+        .cluster(ClusterSpec::env("D", 1000.0).unwrap())
+        .train(TrainConfig::new(micro * 4, micro))
+        .optimizer(OptimizerCfg::Sgd { lr: 0.05, momentum: 0.9 })
+        .seed(11)
+        .log_every(0)
+        .build()
+        .unwrap();
+    assert!(session.plan().devices().len() >= 2, "need a multi-device plan");
 
-    let opts = TrainOpts {
-        steps: 0, // set per phase by train_with_failure
-        opt: OptimizerCfg::Sgd { lr: 0.05, momentum: 0.9 },
-        seed: 11,
-        emulate: None,
-        log_every: 0,
-        initial_params: None,
-    };
-    let mut data = LmTask::new(vocab, seq, micro, 11);
-    let failed = *plan.devices().last().unwrap();
-    let (before, report, after) = c
-        .train_with_failure(&plan, &opts, &mut data, 8, failed, 6)
+    let fail_after = 8;
+    let report = session
+        .with_fault(FaultSpec::last_planned().after(fail_after).resume_for(6))
+        .run(&mut PjrtBackend::new())
         .unwrap();
 
+    // One unified report: the recovery event sits between the phases.
+    assert_eq!(report.rounds, fail_after + 6);
+    assert_eq!(report.losses.len(), report.rounds);
+    let event = &report.recoveries[0];
+    assert_eq!(event.round, fail_after);
+
     // The replayed pipeline excludes the failed device.
-    assert!(!report.new_plan.devices().contains(&failed));
+    assert!(!event.report.new_plan.devices().contains(&event.failed_device));
 
     // Loss must *continue*, not restart: the first post-recovery loss
     // stays close to the last pre-failure loss, far below a cold
     // restart at ln(V).
-    let last_before = *before.losses.last().unwrap();
-    let first_after = after.losses[0];
+    let last_before = report.losses[fail_after - 1];
+    let first_after = report.losses[fail_after];
     let cold = (vocab as f64).ln();
     assert!(
         first_after < last_before + 0.4,
@@ -62,25 +67,25 @@ fn training_survives_device_exit_with_warm_weights() {
         "looks like a cold restart: {first_after} vs ln(V) = {cold}"
     );
     // ... and training keeps improving afterwards.
-    let final_loss = *after.losses.last().unwrap();
+    let final_loss = *report.losses.last().unwrap();
     assert!(final_loss <= first_after + 0.05, "{first_after} -> {final_loss}");
+    // The checkpoint stream survives to the end of the run.
+    assert!(report.final_params.is_some());
 }
 
 #[test]
 fn checkpoint_roundtrip_preserves_training_state() {
     // Train k steps, stop, warm-start a fresh pipeline from the final
     // weights: the loss must continue exactly as if uninterrupted.
+    // (Engine-level test: drives pipeline::train on a hand-built plan.)
     let artifacts = artifacts_dir();
     let manifest = Manifest::load(&artifacts).unwrap();
     let lm = manifest.model("lm").unwrap();
     let micro = lm.microbatch;
-    let vocab = *lm.config.get("vocab").unwrap() as usize;
-    let seq = *lm.config.get("seq").unwrap() as usize;
+    let vocab = lm.cfg_usize("vocab").unwrap();
+    let seq = lm.cfg_usize("seq").unwrap();
     let nl = lm.layers.len();
 
-    let cluster = ClusterSpec::env("D", 1000.0).unwrap();
-    let cfg = TrainConfig::new(micro * 2, micro);
-    let c = Coordinator::for_artifact_model(&artifacts, "lm", cluster, cfg).unwrap();
     let plan = asteroid::planner::Plan {
         stages: vec![asteroid::planner::Stage {
             layers: (0, nl),
@@ -100,19 +105,19 @@ fn checkpoint_roundtrip_preserves_training_state() {
         ..Default::default()
     };
     let mut data = LmTask::new(vocab, seq, micro, 3);
-    let phase1 = c.train(&plan, &opts, &mut data).unwrap();
+    let phase1 = train(&artifacts, "lm", &plan, &opts, &mut data).unwrap();
     assert_eq!(phase1.final_params.len(), nl, "checkpoint covers every layer");
 
     opts.initial_params = Some(std::sync::Arc::new(phase1.final_params.clone()));
     opts.steps = 3;
-    let phase2 = c.train(&plan, &opts, &mut data).unwrap();
+    let phase2 = train(&artifacts, "lm", &plan, &opts, &mut data).unwrap();
 
     // Continuous run over the same data stream for reference.
     let mut opts_ref = opts.clone();
     opts_ref.initial_params = None;
     opts_ref.steps = 8;
     let mut data_ref = LmTask::new(vocab, seq, micro, 3);
-    let reference = c.train(&plan, &opts_ref, &mut data_ref).unwrap();
+    let reference = train(&artifacts, "lm", &plan, &opts_ref, &mut data_ref).unwrap();
 
     for (i, (split, cont)) in phase1
         .losses

@@ -4,6 +4,9 @@
 //! through multi-threaded HPP training and check the numerics: losses
 //! start near ln(V) and fall, stage partitioning is transparent, and
 //! replicated stages produce the same math as single-device stages.
+//! They exercise the live engine directly on hand-built plans, so they
+//! need a `--features pjrt` build with a real xla binding.
+#![cfg(feature = "pjrt")]
 
 use std::path::PathBuf;
 
@@ -19,8 +22,8 @@ fn artifacts_dir() -> PathBuf {
 fn lm_cfg() -> (usize, usize, usize) {
     let manifest = Manifest::load(&artifacts_dir()).expect("run `make artifacts` first");
     let lm = manifest.model("lm").unwrap();
-    let vocab = *lm.config.get("vocab").unwrap() as usize;
-    let seq = *lm.config.get("seq").unwrap() as usize;
+    let vocab = lm.cfg_usize("vocab").unwrap();
+    let seq = lm.cfg_usize("seq").unwrap();
     (vocab, seq, lm.microbatch)
 }
 

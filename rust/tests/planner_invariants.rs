@@ -1,4 +1,4 @@
-//! Property-based tests over the coordinator's planning invariants:
+//! Property-based tests over the planner's invariants:
 //! random heterogeneous clusters, models and training configs must
 //! always yield plans that are structurally valid, memory-safe,
 //! allocation-complete and consistent between the analytic cost model

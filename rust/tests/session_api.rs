@@ -1,0 +1,287 @@
+//! Integration tests for the unified plan→execute surface: builder
+//! validation, Asteroid-vs-baseline parity through the one `Planner`
+//! dispatch, `FaultSpec`-driven recovery, and sim-vs-live `RunReport`
+//! structural parity.
+
+use asteroid::config::{ClusterSpec, TrainConfig};
+use asteroid::planner::baselines::{self, Method};
+use asteroid::planner::{AllocOpts, Planner, PlannerConfig};
+use asteroid::profiler::ProfileTable;
+use asteroid::schedule::GpipeFillDrain;
+use asteroid::session::{FaultSpec, Session, SimBackend};
+
+fn builder(env: &str) -> asteroid::session::SessionBuilder {
+    Session::builder()
+        .model("mobilenetv2")
+        .cluster(ClusterSpec::env(env, 100.0).unwrap())
+        .train(TrainConfig::new(256, 16))
+}
+
+// ----------------------------------------------------------- builder
+
+#[test]
+fn builder_validation_errors_name_the_missing_piece() {
+    let err = Session::builder().build().unwrap_err().to_string();
+    assert!(err.contains(".model"), "{err}");
+
+    let err = Session::builder()
+        .model("mobilenetv2")
+        .build()
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains(".cluster"), "{err}");
+
+    let err = Session::builder()
+        .model("mobilenetv2")
+        .cluster(ClusterSpec::env("B", 100.0).unwrap())
+        .build()
+        .unwrap_err()
+        .to_string();
+    assert!(err.to_lowercase().contains("train"), "{err}");
+
+    let err = Session::builder()
+        .model("not-a-model")
+        .cluster(ClusterSpec::env("B", 100.0).unwrap())
+        .train(TrainConfig::new(64, 8))
+        .build()
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("not-a-model"), "{err}");
+}
+
+#[test]
+fn missing_artifacts_fail_at_build_not_at_run() {
+    let err = Session::builder()
+        .artifact_model("definitely/not/a/dir", "lm")
+        .cluster(ClusterSpec::env("B", 100.0).unwrap())
+        .build()
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("manifest"), "{err:#}");
+}
+
+// ------------------------------------------- planner dispatch parity
+
+/// Each baseline `Method` planned through the unified `Planner` path
+/// must match the dedicated planner function it folded in.
+#[test]
+fn unified_dispatch_matches_legacy_planner_functions() {
+    let cluster = ClusterSpec::env("C", 100.0).unwrap();
+    let model = asteroid::model::zoo::mobilenet_v2();
+    let table = ProfileTable::new(&cluster, &model);
+    let cfg = TrainConfig::new(256, 16);
+
+    let legacy: Vec<(Method, asteroid::planner::Plan)> = vec![
+        (
+            Method::DataParallel,
+            baselines::plan_dp(&table, &cluster, &model, &cfg, AllocOpts::default())
+                .unwrap()
+                .plan,
+        ),
+        (
+            Method::Eddl,
+            baselines::plan_dp(&table, &cluster, &model, &cfg, AllocOpts::default())
+                .unwrap()
+                .plan,
+        ),
+        (
+            Method::GpipePP,
+            baselines::plan_gpipe_pp(&table, &cluster, &model, &cfg).unwrap().plan,
+        ),
+        (
+            Method::PipeDream,
+            baselines::plan_pipedream(&table, &cluster, &model, &cfg).unwrap().plan,
+        ),
+        (
+            Method::Dapple,
+            baselines::plan_dapple(&table, &cluster, &model, &cfg).unwrap().plan,
+        ),
+    ];
+    for (m, expected) in legacy {
+        let s = Session::builder()
+            .model("mobilenetv2")
+            .cluster(cluster.clone())
+            .train(cfg.clone())
+            .planner(Planner::Baseline(m))
+            .build()
+            .unwrap();
+        assert_eq!(s.plan(), &expected, "{m} diverged from its legacy planner");
+    }
+
+    // Asteroid == Custom(default config) == Baseline(Asteroid).
+    let a = Planner::Asteroid.plan(&table, &cluster, &model, &cfg).unwrap().plan;
+    let b = Planner::Baseline(Method::Asteroid)
+        .plan(&table, &cluster, &model, &cfg)
+        .unwrap()
+        .plan;
+    let c = Planner::Custom(PlannerConfig::default())
+        .plan(&table, &cluster, &model, &cfg)
+        .unwrap()
+        .plan;
+    assert_eq!(a, b);
+    assert_eq!(a, c);
+}
+
+#[test]
+fn hetpipe_is_rejected_with_a_pointer_to_hdp() {
+    let err = builder("B")
+        .planner(Planner::Baseline(Method::HetPipe))
+        .build()
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("plan_hetpipe"), "{err:#}");
+}
+
+#[test]
+fn method_cli_round_trip() {
+    for m in Method::ALL {
+        assert_eq!(m.to_string().to_ascii_lowercase().parse::<Method>().unwrap(), m);
+    }
+}
+
+// ------------------------------------------------------ sim backend
+
+#[test]
+fn sim_report_is_fully_populated() {
+    let s = builder("B").steps(6).build().unwrap();
+    let report = s.run(&mut SimBackend::default()).unwrap();
+    assert_eq!(report.backend, "sim");
+    assert_eq!(report.rounds, 6);
+    assert_eq!(report.round_secs.len(), 6);
+    assert!(report.losses.is_empty(), "pricing has no numerics");
+    assert!(report.throughput > 0.0);
+    if report.plan.devices().len() > 1 {
+        assert!(report.bytes_on_network > 0);
+    }
+    let sim = report.sim.as_ref().expect("sim detail");
+    assert!(sim.round_latency > 0.0);
+    assert_eq!(&report.plan, s.plan());
+    assert_eq!(report.schedule.policy, s.schedule().policy);
+    assert!(report.recoveries.is_empty());
+    assert!(report.final_params.is_none());
+}
+
+#[test]
+fn schedule_policy_is_a_session_property() {
+    let one = builder("B").build().unwrap();
+    let gpipe = builder("B").schedule(&GpipeFillDrain).build().unwrap();
+    assert_eq!(one.plan(), gpipe.plan(), "policy must not change the plan");
+    assert_ne!(one.schedule().policy, gpipe.schedule().policy);
+    let t_one = one.run(&mut SimBackend::default()).unwrap();
+    let t_gp = gpipe.run(&mut SimBackend::default()).unwrap();
+    assert!(t_one.throughput > 0.0 && t_gp.throughput > 0.0);
+}
+
+// ------------------------------------------------- fault via FaultSpec
+
+#[test]
+fn fault_spec_replaces_bespoke_recovery_entry_points() {
+    let base = Session::builder()
+        .model("efficientnet-b1")
+        .cluster(ClusterSpec::env("D", 100.0).unwrap())
+        .train(TrainConfig::new(256, 16))
+        .steps(10)
+        .build()
+        .unwrap();
+    let failed = *base.plan().devices().last().unwrap();
+
+    let lite = base
+        .clone()
+        .with_fault(FaultSpec::device(failed).after(4))
+        .run(&mut SimBackend::default())
+        .unwrap();
+    let heavy = base
+        .clone()
+        .with_fault(FaultSpec::device(failed).after(4).heavy())
+        .run(&mut SimBackend::default())
+        .unwrap();
+
+    let (l, h) = (&lite.recoveries[0], &heavy.recoveries[0]);
+    assert_eq!(l.round, 4);
+    assert_eq!(l.failed_device, failed);
+    assert_eq!(l.report.mechanism, "lightweight");
+    assert_eq!(h.report.mechanism, "heavy");
+    // Fig. 16/17 headline, through the declarative surface.
+    assert!(
+        h.report.total_s() > 2.0 * l.report.total_s(),
+        "heavy {} vs lite {}",
+        h.report.total_s(),
+        l.report.total_s()
+    );
+    assert!(!l.report.new_plan.devices().contains(&failed));
+    // Replay ordering comes from the schedule diff.
+    assert!(!l.report.replay_micros.is_empty());
+    assert!(l.report.refill_s > 0.0);
+
+    // A fault target outside the plan is a validation error.
+    assert!(base
+        .with_fault(FaultSpec::device(4096))
+        .run(&mut SimBackend::default())
+        .is_err());
+}
+
+// ---------------------------------------------- sim-vs-live parity
+
+/// Without the pjrt feature the live backend must fail loudly, not
+/// deadlock: the session surface stays one-path either way.
+#[cfg(not(feature = "pjrt"))]
+#[test]
+fn live_engine_requires_pjrt_feature() {
+    use asteroid::data::LmTask;
+    use asteroid::pipeline::{train, TrainOpts};
+    use asteroid::planner::{Plan, Stage};
+
+    let plan = Plan {
+        stages: vec![Stage { layers: (0, 1), devices: vec![0], alloc: vec![4], kp: 1 }],
+        microbatch: 4,
+        num_micro: 1,
+    };
+    let mut data = LmTask::new(16, 8, 4, 0);
+    let err = train(
+        std::path::Path::new("artifacts"),
+        "lm",
+        &plan,
+        &TrainOpts::default(),
+        &mut data,
+    )
+    .unwrap_err();
+    assert!(format!("{err:#}").contains("pjrt"), "{err:#}");
+}
+
+/// `SimBackend` and `PjrtBackend` must produce structurally identical
+/// `RunReport`s for one small plan: same plan, same schedule, same
+/// round count — the backend only changes how rounds are priced vs
+/// executed.  Needs `--features pjrt` with a real binding plus
+/// `make artifacts`; skips (with a note) when artifacts are absent.
+#[cfg(feature = "pjrt")]
+#[test]
+fn sim_and_live_reports_share_structure() {
+    use asteroid::session::PjrtBackend;
+
+    let artifacts =
+        std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !artifacts.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let session = Session::builder()
+        .artifact_model(&artifacts, "lm")
+        .cluster(ClusterSpec::env("D", 1000.0).unwrap())
+        .steps(3)
+        .log_every(0)
+        .build()
+        .unwrap();
+
+    let sim = session.run(&mut SimBackend::default()).unwrap();
+    let live = session.run(&mut PjrtBackend::new()).unwrap();
+
+    assert_eq!(sim.plan, live.plan);
+    assert_eq!(sim.schedule.policy, live.schedule.policy);
+    assert_eq!(sim.rounds, live.rounds);
+    assert_eq!(sim.round_secs.len(), live.round_secs.len());
+    assert_eq!(sim.predicted_throughput, live.predicted_throughput);
+    assert!(sim.throughput > 0.0 && live.throughput > 0.0);
+    // Backend-specific halves: pricing has detail but no numerics,
+    // the live engine has numerics (and the checkpoint) but no pricing.
+    assert!(sim.sim.is_some() && sim.losses.is_empty() && sim.final_params.is_none());
+    assert!(live.sim.is_none() && live.losses.len() == live.rounds);
+    assert!(live.final_params.is_some());
+}

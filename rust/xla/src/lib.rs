@@ -1,0 +1,256 @@
+//! Offline stand-in for the `xla-rs` PJRT binding.
+//!
+//! Mirrors the subset of the real crate's API that the Asteroid
+//! runtime consumes (see `rust/src/runtime/` and
+//! `rust/src/pipeline/worker.rs`).  Host-side `Literal`s are real byte
+//! buffers — construction, shape queries and readback work — while
+//! anything requiring native XLA (client creation, HLO parsing,
+//! compilation, execution) returns [`Error`] at runtime.  README.md
+//! explains how to swap in the real binding.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Error type matching the real binding's `anyhow`-compatible shape.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "xla stub: {what} requires the real PJRT binding \
+         (repoint the `xla` dependency at xla-rs; see rust/xla/README.md)"
+    )))
+}
+
+/// Element types of the real binding that this repo's artifacts use,
+/// plus the common ones so `match` sites stay non-trivial.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S8,
+    S32,
+    S64,
+    U8,
+    U32,
+    U64,
+    F16,
+    Bf16,
+    F32,
+    F64,
+}
+
+impl ElementType {
+    fn size_bytes(&self) -> usize {
+        match self {
+            ElementType::Pred | ElementType::S8 | ElementType::U8 => 1,
+            ElementType::F16 | ElementType::Bf16 => 2,
+            ElementType::S32 | ElementType::U32 | ElementType::F32 => 4,
+            ElementType::S64 | ElementType::U64 | ElementType::F64 => 8,
+        }
+    }
+}
+
+/// Host value types `Literal::to_vec` can read back.
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    fn from_ne(bytes: &[u8]) -> Self;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn from_ne(bytes: &[u8]) -> f32 {
+        f32::from_ne_bytes(bytes.try_into().unwrap())
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn from_ne(bytes: &[u8]) -> i32 {
+        i32::from_ne_bytes(bytes.try_into().unwrap())
+    }
+}
+
+/// Array shape: dims + element type.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// A host literal: a typed, shaped byte buffer.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<i64>,
+    bytes: Vec<u8>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        untyped_data: &[u8],
+    ) -> Result<Literal> {
+        let elements: usize = dims.iter().product();
+        if elements * ty.size_bytes() != untyped_data.len() {
+            return Err(Error(format!(
+                "literal data is {} bytes but shape {dims:?} of {ty:?} wants {}",
+                untyped_data.len(),
+                elements * ty.size_bytes()
+            )));
+        }
+        Ok(Literal {
+            ty,
+            dims: dims.iter().map(|&d| d as i64).collect(),
+            bytes: untyped_data.to_vec(),
+        })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape { dims: self.dims.clone(), ty: self.ty })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if self.ty != T::TY {
+            return Err(Error(format!(
+                "literal is {:?}, requested {:?}",
+                self.ty,
+                T::TY
+            )));
+        }
+        Ok(self
+            .bytes
+            .chunks_exact(self.ty.size_bytes())
+            .map(T::from_ne)
+            .collect())
+    }
+
+    /// Tuple literals only come out of executions, which the stub
+    /// cannot perform.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable("destructuring an execution result tuple")
+    }
+}
+
+/// Parsed HLO module (never constructible in the stub).
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        unavailable(&format!("parsing HLO text {path:?}"))
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+#[derive(Debug)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        // Unreachable in practice: no HloModuleProto can exist here.
+        XlaComputation { _private: () }
+    }
+}
+
+/// A device buffer handle (never constructible in the stub).
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("reading back a device buffer")
+    }
+}
+
+/// A compiled executable (never constructible in the stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("executing a compiled artifact")
+    }
+}
+
+/// The PJRT client handle.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("creating a PJRT CPU client")
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("compiling an XLA computation")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_works_on_host() {
+        let v: Vec<f32> = vec![1.0, -2.5, 3.25, 0.0, 9.0, 7.5];
+        let bytes: Vec<u8> = v.iter().flat_map(|x| x.to_ne_bytes()).collect();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2, 3], &bytes)
+                .unwrap();
+        let shape = lit.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 3]);
+        assert_eq!(shape.ty(), ElementType::F32);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), v);
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn shape_size_mismatch_rejected() {
+        assert!(
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[4], &[0u8; 3])
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn native_execution_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("real PJRT binding"), "{err}");
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+    }
+}
