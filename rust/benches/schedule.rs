@@ -1,10 +1,12 @@
 //! Schedule IR benchmarks: generation + simulator pricing on an
-//! 8-device / 8-stage plan (the shape the repro tables hammer).
+//! 8-device / 8-stage plan (the shape the repro tables hammer), now
+//! per policy so the bubble-ratio trajectory is tracked across PRs.
 //!
 //! Uses the in-repo `util::bench::Bencher` harness (criterion is not
 //! vendored offline; benches run with `harness = false`).  On exit the
-//! results are recorded to `BENCH_schedule.json` at the repo root so
-//! later PRs have a trajectory:
+//! results are recorded to `BENCH_schedule.json` at the repo root —
+//! timing rows per policy plus a deterministic `policies` section with
+//! each policy's priced round latency and mean bubble fraction:
 //!
 //!     cargo bench --bench schedule
 
@@ -12,7 +14,7 @@ use asteroid::config::ClusterSpec;
 use asteroid::model::zoo;
 use asteroid::planner::plan::{Plan, Stage};
 use asteroid::profiler::ProfileTable;
-use asteroid::schedule::{GpipeFillDrain, OneFOneBKp, Schedule};
+use asteroid::schedule::{builtin_policies, Schedule};
 use asteroid::sim::{price_schedule, simulate_round};
 use asteroid::util::bench::Bencher;
 
@@ -38,22 +40,44 @@ fn main() {
     };
     plan.apply_default_kp();
 
-    b.bench("schedule_build/8dev_8stage_m64", || {
-        Schedule::for_sim(&plan, &model, &OneFOneBKp)
-    });
-    b.bench("schedule_build_gpipe/8dev_8stage_m64", || {
-        Schedule::for_sim(&plan, &model, &GpipeFillDrain)
-    });
+    // Per-policy timing rows: IR generation and event-accurate pricing.
+    for policy in builtin_policies() {
+        b.bench(&format!("schedule_build/{}/8dev_8stage_m64", policy.name()), || {
+            Schedule::for_sim(&plan, &model, policy)
+        });
+        let sched = Schedule::for_sim(&plan, &model, policy);
+        b.bench(&format!("price_schedule/{}/8dev_8stage_m64", policy.name()), || {
+            price_schedule(&sched, &table, &cluster, &model, &plan)
+        });
+    }
 
-    let sched = Schedule::for_sim(&plan, &model, &OneFOneBKp);
+    let sched = Schedule::for_sim(&plan, &model, builtin_policies()[0]);
     b.bench("schedule_validate/8dev_8stage_m64", || sched.validate());
-    b.bench("price_schedule/8dev_8stage_m64", || {
-        price_schedule(&sched, &table, &cluster, &model, &plan)
-    });
     // End-to-end wrapper (build + price), the planner sim_select path.
     b.bench("simulate_round/8dev_8stage_m64", || {
         simulate_round(&table, &cluster, &model, &plan)
     });
+
+    // Deterministic per-policy quality rows: priced round latency and
+    // mean bubble fraction over the plan's devices — the numbers whose
+    // trajectory (zb-h1 below 1f1b-kp, gpipe above) later PRs watch.
+    let policy_rows: Vec<String> = builtin_policies()
+        .iter()
+        .map(|policy| {
+            let sched = Schedule::for_sim(&plan, &model, *policy);
+            let sim = price_schedule(&sched, &table, &cluster, &model, &plan);
+            let devs = plan.devices();
+            let mean_bubble: f64 =
+                devs.iter().map(|&d| sim.bubble_fraction[d]).sum::<f64>() / devs.len() as f64;
+            format!(
+                "    {{\"policy\": \"{}\", \"round_latency_s\": {:e}, \
+                 \"mean_bubble_fraction\": {:.6}}}",
+                policy.name(),
+                sim.round_latency,
+                mean_bubble
+            )
+        })
+        .collect();
 
     // ---- record the trajectory ----------------------------------------
     let rows: Vec<String> = b
@@ -70,8 +94,9 @@ fn main() {
         .collect();
     let json = format!(
         "{{\n  \"bench\": \"schedule\",\n  \"shape\": \"8dev_8stage_m64\",\n  \
-         \"results\": [\n{}\n  ]\n}}\n",
-        rows.join(",\n")
+         \"results\": [\n{}\n  ],\n  \"policies\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n"),
+        policy_rows.join(",\n")
     );
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_schedule.json");
     match std::fs::write(path, &json) {

@@ -26,8 +26,8 @@ use crate::model::ModelDesc;
 use crate::planner::dp::{plan_hpp, PlannerConfig};
 use crate::planner::plan::Plan;
 use crate::profiler::ProfileTable;
-use crate::schedule::{diff, Schedule, ScheduleDiff, DEFAULT_POLICY};
-use crate::sim::simulate_round;
+use crate::schedule::{diff, Schedule, SchedulePolicy, ScheduleDiff};
+use crate::sim::price_schedule;
 
 /// How much slower the planner re-run is in the paper's heavy-
 /// rescheduling baseline than our in-process run: the baseline re-plans
@@ -69,7 +69,11 @@ impl RecoveryReport {
     }
 }
 
-/// Lightweight pipeline replay after `failed_dev` exits.
+/// Lightweight pipeline replay after `failed_dev` exits.  `policy` is
+/// the session's round schedule policy: the recovery diff and the
+/// re-priced post-failure round must describe the timeline the session
+/// actually executes, not a hardcoded default.
+#[allow(clippy::too_many_arguments)]
 pub fn lightweight_replay(
     table: &ProfileTable,
     cluster: &ClusterSpec,
@@ -78,6 +82,7 @@ pub fn lightweight_replay(
     plan: &Plan,
     failed_dev: usize,
     hb: &HeartbeatCfg,
+    policy: &'static dyn SchedulePolicy,
 ) -> Result<RecoveryReport> {
     let repl = replication_plan(model, plan);
     let failed_stage = plan
@@ -91,8 +96,8 @@ pub fn lightweight_replay(
     let restore_s = restore_time(model, plan, &repl, failed_stage, bw);
     let r = lightweight_replan(table, cluster, model, cfg, plan, failed_dev)?;
     let migration_s = migration_time(cluster, &r, plan, bw);
-    let sdiff = recovery_diff(plan, &r.plan);
-    let sim = simulate_round(table, cluster, model, &r.plan);
+    let sdiff = recovery_diff(plan, &r.plan, policy);
+    let sim = price_round(table, cluster, model, &r.plan, policy);
 
     Ok(RecoveryReport {
         mechanism: "lightweight",
@@ -108,19 +113,43 @@ pub fn lightweight_replay(
     })
 }
 
-/// Diff the pre- and post-failure round schedules: the single source
-/// of recovery ordering for both mechanisms.  Uses the *runtime*
-/// (round-robin) sharding so `replay_micros` names the micro-batches
-/// that were actually resident on the failed device in the executing
-/// pipeline — under sample sharding every device touches every micro,
-/// which would over-approximate the replay set on replicated stages.
-fn recovery_diff(old_plan: &Plan, new_plan: &Plan) -> ScheduleDiff {
-    let old = Schedule::for_runtime(old_plan, DEFAULT_POLICY);
-    let new = Schedule::for_runtime(new_plan, DEFAULT_POLICY);
+/// Diff the pre- and post-failure round schedules built with the
+/// session's policy: the single source of recovery ordering for both
+/// mechanisms.  The policy matters — a fill-drain session has its
+/// whole micro load in flight at the failure point, so its replay set
+/// is far larger than 1F1B's K_p window; diffing a default-policy
+/// timeline would replay micros nobody lost and skip micros nobody
+/// saved.  Uses the *runtime* (round-robin) sharding so `replay_micros`
+/// names the micro-batches that were actually resident on the failed
+/// device in the executing pipeline — under sample sharding every
+/// device touches every micro, which would over-approximate the replay
+/// set on replicated stages.
+fn recovery_diff(
+    old_plan: &Plan,
+    new_plan: &Plan,
+    policy: &dyn SchedulePolicy,
+) -> ScheduleDiff {
+    let old = Schedule::for_runtime(old_plan, policy);
+    let new = Schedule::for_runtime(new_plan, policy);
     diff(&old, &new)
 }
 
+/// Price one round of `plan` under the session's policy (what
+/// `new_throughput`/`refill_s` report — the schedule the recovered
+/// pipeline actually runs).
+fn price_round(
+    table: &ProfileTable,
+    cluster: &ClusterSpec,
+    model: &ModelDesc,
+    plan: &Plan,
+    policy: &dyn SchedulePolicy,
+) -> crate::sim::SimResult {
+    let sched = Schedule::for_sim(plan, model, policy);
+    price_schedule(&sched, table, cluster, model, plan)
+}
+
 /// Heavy rescheduling baseline after `failed_dev` exits.
+#[allow(clippy::too_many_arguments)]
 pub fn heavy_reschedule(
     table: &ProfileTable,
     cluster: &ClusterSpec,
@@ -129,6 +158,7 @@ pub fn heavy_reschedule(
     plan: &Plan,
     failed_dev: usize,
     hb: &HeartbeatCfg,
+    policy: &'static dyn SchedulePolicy,
 ) -> Result<RecoveryReport> {
     // Surviving sub-cluster (device ids preserved by masking memory of
     // the failed device to zero is messy — rebuild a cluster without it
@@ -145,7 +175,13 @@ pub fn heavy_reschedule(
         .collect();
 
     let sub_table = ProfileTable::new(&sub, model);
-    let outcome = plan_hpp(&sub_table, &sub, model, cfg, &PlannerConfig::default())?;
+    let outcome = plan_hpp(
+        &sub_table,
+        &sub,
+        model,
+        cfg,
+        &PlannerConfig { policy, ..PlannerConfig::default() },
+    )?;
 
     // Weight traffic: every stage model flows to the coordinator, then
     // the full model flows back out — all through one device's links,
@@ -162,8 +198,8 @@ pub fn heavy_reschedule(
             *d = keep[*d];
         }
     }
-    let sdiff = recovery_diff(plan, &new_plan);
-    let sim = simulate_round(table, cluster, model, &new_plan);
+    let sdiff = recovery_diff(plan, &new_plan, policy);
+    let sim = price_round(table, cluster, model, &new_plan, policy);
 
     Ok(RecoveryReport {
         mechanism: "heavy",
@@ -210,6 +246,7 @@ mod tests {
     use super::*;
     use crate::config::ClusterSpec;
     use crate::model::zoo;
+    use crate::schedule::{GpipeFillDrain, DEFAULT_POLICY};
 
     fn setup() -> (ClusterSpec, ModelDesc, ProfileTable, TrainConfig, Plan) {
         let cluster = ClusterSpec::env("D", 100.0).unwrap();
@@ -230,10 +267,14 @@ mod tests {
         let hb = HeartbeatCfg::default();
         let mut best_ratio: f64 = 0.0;
         for &failed in &plan.devices() {
-            let lite =
-                lightweight_replay(&table, &cluster, &model, &cfg, &plan, failed, &hb).unwrap();
-            let heavy =
-                heavy_reschedule(&table, &cluster, &model, &cfg, &plan, failed, &hb).unwrap();
+            let lite = lightweight_replay(
+                &table, &cluster, &model, &cfg, &plan, failed, &hb, DEFAULT_POLICY,
+            )
+            .unwrap();
+            let heavy = heavy_reschedule(
+                &table, &cluster, &model, &cfg, &plan, failed, &hb, DEFAULT_POLICY,
+            )
+            .unwrap();
             let ratio = heavy.total_s() / lite.total_s();
             best_ratio = best_ratio.max(ratio);
             // Every scenario recovers at least 2x faster (wall-clock of
@@ -255,8 +296,14 @@ mod tests {
         let (cluster, model, table, cfg, plan) = setup();
         let hb = HeartbeatCfg::default();
         let failed = *plan.devices().last().unwrap();
-        let lite = lightweight_replay(&table, &cluster, &model, &cfg, &plan, failed, &hb).unwrap();
-        let heavy = heavy_reschedule(&table, &cluster, &model, &cfg, &plan, failed, &hb).unwrap();
+        let lite = lightweight_replay(
+            &table, &cluster, &model, &cfg, &plan, failed, &hb, DEFAULT_POLICY,
+        )
+        .unwrap();
+        let heavy = heavy_reschedule(
+            &table, &cluster, &model, &cfg, &plan, failed, &hb, DEFAULT_POLICY,
+        )
+        .unwrap();
         assert!(
             lite.new_throughput > 0.6 * heavy.new_throughput,
             "lite {} vs heavy {}",
@@ -270,7 +317,10 @@ mod tests {
         let (cluster, model, table, cfg, plan) = setup();
         let hb = HeartbeatCfg::default();
         let failed = *plan.devices().last().unwrap();
-        let lite = lightweight_replay(&table, &cluster, &model, &cfg, &plan, failed, &hb).unwrap();
+        let lite = lightweight_replay(
+            &table, &cluster, &model, &cfg, &plan, failed, &hb, DEFAULT_POLICY,
+        )
+        .unwrap();
         let tl = throughput_timeline(100.0, &lite, 10.0, 40.0, 1.0);
         assert_eq!(tl.len(), 41);
         assert_eq!(tl[0].1, 100.0);
@@ -288,8 +338,10 @@ mod tests {
         let (cluster, model, table, cfg, plan) = setup();
         let hb = HeartbeatCfg::default();
         let failed = plan.devices()[0];
-        let lite =
-            lightweight_replay(&table, &cluster, &model, &cfg, &plan, failed, &hb).unwrap();
+        let lite = lightweight_replay(
+            &table, &cluster, &model, &cfg, &plan, failed, &hb, DEFAULT_POLICY,
+        )
+        .unwrap();
         // The failed device's warm-up window is re-injected: micros
         // start at 0 and never exceed the stage's effective K_p.
         let stage = plan
@@ -304,10 +356,49 @@ mod tests {
         assert!(lite.refill_s > 0.0);
         assert!(!lite.retasked_devices.contains(&failed));
         // Heavy rescheduling reports the same diff-derived fields.
-        let heavy =
-            heavy_reschedule(&table, &cluster, &model, &cfg, &plan, failed, &hb).unwrap();
+        let heavy = heavy_reschedule(
+            &table, &cluster, &model, &cfg, &plan, failed, &hb, DEFAULT_POLICY,
+        )
+        .unwrap();
         assert!(!heavy.replay_micros.is_empty());
         assert!(heavy.refill_s > 0.0);
+    }
+
+    #[test]
+    fn gpipe_session_recovery_replays_its_whole_in_flight_load() {
+        // Regression for the policy-blind diff: a fill-drain session
+        // has *every* assigned micro in flight when the device dies
+        // (its warm-up prefix is all of its forwards), so the replay
+        // set must be the device's whole round-robin load — not the
+        // 1F1B K_p window a DEFAULT_POLICY diff would report.
+        let (cluster, model, table, cfg, plan) = setup();
+        let hb = HeartbeatCfg::default();
+        let failed = plan.devices()[0];
+        let one = lightweight_replay(
+            &table, &cluster, &model, &cfg, &plan, failed, &hb, DEFAULT_POLICY,
+        )
+        .unwrap();
+        let gp = lightweight_replay(
+            &table, &cluster, &model, &cfg, &plan, failed, &hb, &GpipeFillDrain,
+        )
+        .unwrap();
+        let stage = plan
+            .stages
+            .iter()
+            .find(|s| s.devices.contains(&failed))
+            .unwrap();
+        let g = stage.devices.len();
+        let slot = stage.devices.iter().position(|&d| d == failed).unwrap();
+        let assigned = (0..plan.num_micro).filter(|m| m % g == slot).count();
+        assert_eq!(gp.replay_micros.len(), assigned);
+        assert!(
+            gp.replay_micros.len() >= one.replay_micros.len(),
+            "gpipe replay {} < 1f1b replay {}",
+            gp.replay_micros.len(),
+            one.replay_micros.len()
+        );
+        // The recovered round is priced under the session's policy.
+        assert!(gp.new_throughput > 0.0 && gp.refill_s > 0.0);
     }
 
     #[test]
@@ -315,9 +406,15 @@ mod tests {
         let (cluster, model, table, cfg, plan) = setup();
         let hb = HeartbeatCfg::default();
         let failed = plan.devices()[0];
-        let lite = lightweight_replay(&table, &cluster, &model, &cfg, &plan, failed, &hb).unwrap();
+        let lite = lightweight_replay(
+            &table, &cluster, &model, &cfg, &plan, failed, &hb, DEFAULT_POLICY,
+        )
+        .unwrap();
         lite.new_plan.validate(&model, &cluster).unwrap();
-        let heavy = heavy_reschedule(&table, &cluster, &model, &cfg, &plan, failed, &hb).unwrap();
+        let heavy = heavy_reschedule(
+            &table, &cluster, &model, &cfg, &plan, failed, &hb, DEFAULT_POLICY,
+        )
+        .unwrap();
         heavy.new_plan.validate(&model, &cluster).unwrap();
         assert!(!heavy.new_plan.devices().contains(&failed));
     }

@@ -21,7 +21,7 @@ use asteroid::model::zoo;
 use asteroid::pipeline::OptimizerCfg;
 use asteroid::planner::baselines::Method;
 use asteroid::planner::Planner;
-use asteroid::schedule::{GpipeFillDrain, SchedulePolicy, DEFAULT_POLICY};
+use asteroid::schedule::{builtin_policies, policy_by_name, SchedulePolicy};
 use asteroid::session::{FaultSpec, PjrtBackend, RecoveryKind, Session, SimBackend};
 use asteroid::util::cli::Args;
 use asteroid::util::stats::{human_bytes, human_secs};
@@ -43,10 +43,16 @@ fn planner_from(args: &Args) -> Result<Planner> {
 }
 
 fn policy_from(args: &Args) -> Result<&'static dyn SchedulePolicy> {
-    Ok(match args.str_or("schedule", "1f1b").as_str() {
-        "1f1b" | "1f1b-kp" | "default" => DEFAULT_POLICY,
-        "gpipe" | "fill-drain" => &GpipeFillDrain,
-        other => bail!("unknown schedule policy {other:?} (expected 1f1b or gpipe)"),
+    let name = args.str_or("schedule", "1f1b");
+    policy_by_name(&name).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown schedule policy {name:?} (expected one of: {})",
+            builtin_policies()
+                .iter()
+                .map(|p| p.name())
+                .collect::<Vec<_>>()
+                .join(", ")
+        )
     })
 }
 
@@ -96,6 +102,7 @@ fn print_plan(s: &Session) {
     println!("model     : {}", s.model().name);
     println!("cluster   : {}", s.cluster().describe());
     println!("planner   : {}", s.planner().describe());
+    println!("schedule  : {}", s.schedule().policy);
     println!(
         "mini-batch: {} (micro {}, M {})",
         cfg.minibatch,
@@ -219,6 +226,14 @@ fn cmd_envs() -> Result<()> {
     }
     println!("zoo models: efficientnet-b1, mobilenetv2, resnet50, bert-small");
     println!("AOT models: lm, cnn (run `make artifacts`)");
+    println!(
+        "schedules : {}  (--schedule)",
+        builtin_policies()
+            .iter()
+            .map(|p| p.name())
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
     println!(
         "methods   : {}",
         Method::ALL

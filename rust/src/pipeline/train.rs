@@ -20,6 +20,7 @@ use crate::data::DataSource;
 use crate::pipeline::optimizer::OptimizerCfg;
 #[cfg(not(feature = "pjrt"))]
 use crate::planner::plan::Plan;
+use crate::schedule::{SchedulePolicy, DEFAULT_POLICY};
 
 /// Training options for the real pipeline engine.
 #[derive(Debug, Clone)]
@@ -35,6 +36,10 @@ pub struct TrainOpts {
     /// Warm-start parameters by global layer index (fault-tolerance
     /// restore or checkpoint resume).
     pub initial_params: Option<std::sync::Arc<std::collections::BTreeMap<usize, Vec<crate::runtime::Tensor>>>>,
+    /// Round schedule policy the workers execute (the session threads
+    /// its `.schedule(..)` choice here; the default is only for direct
+    /// `train` callers).
+    pub policy: &'static dyn SchedulePolicy,
 }
 
 impl Default for TrainOpts {
@@ -46,6 +51,7 @@ impl Default for TrainOpts {
             emulate: None,
             log_every: 5,
             initial_params: None,
+            policy: DEFAULT_POLICY,
         }
     }
 }
@@ -99,7 +105,7 @@ mod live {
     use crate::pipeline::collective::GroupComm;
     use crate::pipeline::worker::{run_worker, Msg, Report, WorkerSpec};
     use crate::planner::plan::Plan;
-    use crate::schedule::{Schedule, DEFAULT_POLICY};
+    use crate::schedule::Schedule;
 
     /// Train `model_name` under `plan` for `opts.steps` HPP-Rounds.
     pub fn train(
@@ -122,10 +128,10 @@ mod live {
         let m_total = plan.num_micro;
 
         // ---- the round schedule: one IR, every worker executes its slice --
-        // Round-robin sharding (micro m -> slot m mod g) under the default
-        // 1F1B/K_p policy; each worker receives its device's compute script
+        // Round-robin sharding (micro m -> slot m mod g) under the run's
+        // schedule policy; each worker receives its device's compute script
         // and never re-derives the order.
-        let sched = Schedule::for_runtime(plan, DEFAULT_POLICY);
+        let sched = Schedule::for_runtime(plan, opts.policy);
         // Hard check: an invalid schedule would deadlock the worker
         // threads silently; validation is microseconds next to a round.
         sched.validate().context("invalid round schedule")?;

@@ -278,6 +278,14 @@ fn run_round(
     let mut targets: BTreeMap<usize, Tensor> = BTreeMap::new();
     // Per-micro stash of layer inputs (for the rematerialising BP).
     let mut stash: BTreeMap<usize, Vec<Tensor>> = BTreeMap::new();
+    // Split-backward scripts (zero-bubble policies): the AOT backward
+    // executable computes input- and weight-gradients fused, so both
+    // are accumulated at the Bwd op and the scheduled BwdW is a
+    // bookkeeping op that only validates the order.  Accumulation
+    // order does not change the summed round gradient, and realising
+    // the weight-grad at Bwd avoids holding O(M) deferred gradient
+    // copies that no memory model charges.
+    let mut bwd_done: std::collections::BTreeSet<usize> = std::collections::BTreeSet::new();
     // Head stage only: boundary activations awaiting their scheduled
     // Bwd (the head artifact fuses its FP with the loss BP, so the
     // head runs at the Bwd position to honour the script order under
@@ -337,11 +345,26 @@ fn run_round(
                         .with_context(|| format!("no stashed inputs for micro {m}"))?;
                     backward_through(layers, rt, params, lits, &inputs, g)?
                 };
+                bwd_done.insert(m);
                 if !spec.is_first {
                     let t = gx.context("non-first stage must produce an input gradient")?;
                     let bytes = t.byte_len();
                     prev[m % prev.len()].send(bytes, Msg::Grad { micro: m, t })?;
                 }
+            }
+            ComputeOp::BwdW(m) => {
+                // Scheduled weight-gradient slot of a split backward.
+                // The fused AOT executable already accumulated it at
+                // this micro's Bwd; a BwdW whose Bwd has not run is a
+                // schedule the engine cannot execute — report it as
+                // such, not as a policy-name mismatch.
+                anyhow::ensure!(
+                    bwd_done.contains(&m),
+                    "unsupported op order: BwdW({m}) before its Bwd \
+                     (stage {} slot {})",
+                    spec.stage,
+                    spec.slot
+                );
             }
         }
     }

@@ -12,25 +12,38 @@ use crate::planner::cost::{plan_steps, round_latency};
 use crate::planner::dp::PlanOutcome;
 use crate::planner::plan::{Plan, Stage};
 use crate::profiler::ProfileTable;
-use crate::schedule::{Schedule, DEFAULT_POLICY};
+use crate::schedule::{Schedule, SchedulePolicy};
 
-/// Plan conventional data parallelism over all cluster devices.
+/// Plan conventional data parallelism over all cluster devices, for
+/// the given round schedule policy.
 pub fn plan_dp(
     table: &ProfileTable,
     cluster: &ClusterSpec,
     model: &ModelDesc,
     cfg: &TrainConfig,
     opts: AllocOpts,
+    policy: &'static dyn SchedulePolicy,
 ) -> Result<PlanOutcome> {
     let t0 = std::time::Instant::now();
     let devices: Vec<usize> = (0..cluster.n()).collect();
     let nl = model.num_layers();
-    // DP holds one micro-batch of activations at a time (K_p = 1).
+    // DP's warm-up depth is 1; the policy decides what that means for
+    // residency (fill-drain still buffers the whole round).
+    let kp = 1;
     let alloc = allocate_microbatch(
-        table, cluster, model, cfg, 0, nl, &devices, cfg.microbatch, 1, opts,
+        table,
+        cluster,
+        model,
+        cfg,
+        0,
+        nl,
+        &devices,
+        cfg.microbatch,
+        policy.effective_kp(kp, cfg.num_microbatches()),
+        opts,
     )?;
     let plan = Plan {
-        stages: vec![Stage { layers: (0, nl), devices, alloc, kp: 1 }],
+        stages: vec![Stage { layers: (0, nl), devices, alloc, kp }],
         microbatch: cfg.microbatch,
         num_micro: cfg.num_microbatches(),
     };
@@ -40,7 +53,8 @@ pub fn plan_dp(
         predicted_throughput: plan.samples_per_round() as f64 / latency,
         predicted_latency: latency,
         planning_time_s: t0.elapsed().as_secs_f64(),
-        schedule: Schedule::for_sim(&plan, model, DEFAULT_POLICY),
+        schedule: Schedule::for_sim(&plan, model, policy),
+        policy,
         plan,
     })
 }
@@ -57,7 +71,15 @@ mod tests {
         let model = zoo::mobilenet_v2();
         let table = ProfileTable::new(&cluster, &model);
         let cfg = TrainConfig::new(256, 16);
-        let out = plan_dp(&table, &cluster, &model, &cfg, AllocOpts::default()).unwrap();
+        let out = plan_dp(
+            &table,
+            &cluster,
+            &model,
+            &cfg,
+            AllocOpts::default(),
+            crate::schedule::DEFAULT_POLICY,
+        )
+        .unwrap();
         assert_eq!(out.plan.num_stages(), 1);
         assert_eq!(out.plan.stages[0].devices.len(), 5);
         out.plan.validate(&model, &cluster).unwrap();
@@ -71,7 +93,15 @@ mod tests {
         let model = zoo::mobilenet_v2();
         let table = ProfileTable::new(&cluster, &model);
         let cfg = TrainConfig::new(256, 16);
-        let out = plan_dp(&table, &cluster, &model, &cfg, AllocOpts::default()).unwrap();
+        let out = plan_dp(
+            &table,
+            &cluster,
+            &model,
+            &cfg,
+            AllocOpts::default(),
+            crate::schedule::DEFAULT_POLICY,
+        )
+        .unwrap();
         let steps = plan_steps(&table, &cluster, &model, &out.plan);
         let w = model.total_weight_bytes() as f64;
         let bw = cluster.min_bandwidth(&[0, 1, 2, 3, 4]);
@@ -87,8 +117,24 @@ mod tests {
         let c1000 = ClusterSpec::env("A", 1000.0).unwrap();
         let t100 = ProfileTable::new(&c100, &model);
         let t1000 = ProfileTable::new(&c1000, &model);
-        let s = plan_dp(&t100, &c100, &model, &cfg, AllocOpts::default()).unwrap();
-        let f = plan_dp(&t1000, &c1000, &model, &cfg, AllocOpts::default()).unwrap();
+        let s = plan_dp(
+            &t100,
+            &c100,
+            &model,
+            &cfg,
+            AllocOpts::default(),
+            crate::schedule::DEFAULT_POLICY,
+        )
+        .unwrap();
+        let f = plan_dp(
+            &t1000,
+            &c1000,
+            &model,
+            &cfg,
+            AllocOpts::default(),
+            crate::schedule::DEFAULT_POLICY,
+        )
+        .unwrap();
         assert!(f.predicted_throughput > s.predicted_throughput);
     }
 }

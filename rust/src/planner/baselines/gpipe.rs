@@ -14,15 +14,17 @@ use crate::planner::cost::{plan_steps, round_latency};
 use crate::planner::dp::PlanOutcome;
 use crate::planner::plan::{kp_policy_ours, Plan, Stage};
 use crate::profiler::ProfileTable;
-use crate::schedule::{Schedule, DEFAULT_POLICY};
+use crate::schedule::{Schedule, SchedulePolicy};
 
 /// Chain-partition the model into `n` single-device stages minimising
-/// the max per-stage FP+BP time (compute only, no comm terms).
+/// the max per-stage FP+BP time (compute only, no comm terms), for the
+/// given round schedule policy.
 pub fn plan_gpipe_pp(
     table: &ProfileTable,
     cluster: &ClusterSpec,
     model: &ModelDesc,
     cfg: &TrainConfig,
+    policy: &'static dyn SchedulePolicy,
 ) -> Result<PlanOutcome> {
     let t0 = std::time::Instant::now();
     let n = cluster.n();
@@ -94,7 +96,8 @@ pub fn plan_gpipe_pp(
         predicted_throughput: plan.samples_per_round() as f64 / latency,
         predicted_latency: latency,
         planning_time_s: t0.elapsed().as_secs_f64(),
-        schedule: Schedule::for_sim(&plan, model, DEFAULT_POLICY),
+        schedule: Schedule::for_sim(&plan, model, policy),
+        policy,
         plan,
     })
 }
@@ -111,7 +114,9 @@ mod tests {
         let model = zoo::mobilenet_v2();
         let table = ProfileTable::new(&cluster, &model);
         let cfg = TrainConfig::new(256, 16);
-        let out = plan_gpipe_pp(&table, &cluster, &model, &cfg).unwrap();
+        let out =
+            plan_gpipe_pp(&table, &cluster, &model, &cfg, crate::schedule::DEFAULT_POLICY)
+                .unwrap();
         assert_eq!(out.plan.num_stages(), 5);
         assert!(out.plan.stages.iter().all(|s| s.replicas() == 1));
         out.plan.validate(&model, &cluster).unwrap();
@@ -123,7 +128,9 @@ mod tests {
         let model = zoo::efficientnet_b1();
         let table = ProfileTable::new(&cluster, &model);
         let cfg = TrainConfig::new(256, 16);
-        let out = plan_gpipe_pp(&table, &cluster, &model, &cfg).unwrap();
+        let out =
+            plan_gpipe_pp(&table, &cluster, &model, &cfg, crate::schedule::DEFAULT_POLICY)
+                .unwrap();
         // Per-stage compute times within ~4x of each other (perfect
         // balance impossible at layer granularity).
         let times: Vec<f64> = out
@@ -145,7 +152,9 @@ mod tests {
         let model = zoo::resnet50();
         let table = ProfileTable::new(&cluster, &model);
         let cfg = TrainConfig::new(64, 4);
-        let pp = plan_gpipe_pp(&table, &cluster, &model, &cfg).unwrap();
+        let pp =
+            plan_gpipe_pp(&table, &cluster, &model, &cfg, crate::schedule::DEFAULT_POLICY)
+                .unwrap();
         let ours = crate::planner::dp::plan_hpp(
             &table,
             &cluster,

@@ -30,6 +30,7 @@ use crate::planner::alloc::AllocOpts;
 use crate::planner::dp::{plan_hpp, PlanOutcome, PlannerConfig};
 use crate::planner::plan::KpPolicy;
 use crate::profiler::ProfileTable;
+use crate::schedule::SchedulePolicy;
 
 pub use data_parallel::plan_dp;
 pub use gpipe::plan_gpipe_pp;
@@ -122,6 +123,7 @@ pub fn plan_pipedream(
     cluster: &ClusterSpec,
     model: &ModelDesc,
     cfg: &TrainConfig,
+    policy: &'static dyn SchedulePolicy,
 ) -> Result<PlanOutcome> {
     let pc = PlannerConfig {
         alloc: AllocOpts {
@@ -135,6 +137,7 @@ pub fn plan_pipedream(
         // Baselines pick by their own (approximate) cost model — the
         // paper's PipeDream/Dapple planners have no simulator check.
         sim_select: false,
+        policy,
     };
     plan_hpp(table, cluster, model, cfg, &pc)
 }
@@ -146,6 +149,7 @@ pub fn plan_dapple(
     cluster: &ClusterSpec,
     model: &ModelDesc,
     cfg: &TrainConfig,
+    policy: &'static dyn SchedulePolicy,
 ) -> Result<PlanOutcome> {
     let pc = PlannerConfig {
         alloc: AllocOpts {
@@ -157,6 +161,7 @@ pub fn plan_dapple(
         max_stages: 8,
         kp_policy: KpPolicy::Ours,
         sim_select: false,
+        policy,
     };
     plan_hpp(table, cluster, model, cfg, &pc)
 }
@@ -179,8 +184,14 @@ mod tests {
 
         let ours = plan_hpp(&table, &cluster, &model, &cfg, &PlannerConfig::default()).unwrap();
         for (name, other) in [
-            ("pipedream", plan_pipedream(&table, &cluster, &model, &cfg)),
-            ("dapple", plan_dapple(&table, &cluster, &model, &cfg)),
+            (
+                "pipedream",
+                plan_pipedream(&table, &cluster, &model, &cfg, crate::schedule::DEFAULT_POLICY),
+            ),
+            (
+                "dapple",
+                plan_dapple(&table, &cluster, &model, &cfg, crate::schedule::DEFAULT_POLICY),
+            ),
         ] {
             let other = other.unwrap();
             // Evaluate BOTH plans under the true (heterogeneous) cost

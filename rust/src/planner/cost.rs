@@ -150,18 +150,29 @@ pub fn predicted_throughput(
     plan.samples_per_round() as f64 / latency
 }
 
-/// Per-device peak memory (bytes) under the plan — used for OOM checks
-/// and the Fig. 15(b) memory reporting.
+/// Per-device peak memory (bytes) under the plan and schedule policy —
+/// used for OOM checks and the Fig. 15(b) memory reporting.  The
+/// policy matters: fill-drain residency is O(M), not O(K_p).
 pub fn plan_peak_memory(
     model: &ModelDesc,
     cfg: &TrainConfig,
     plan: &Plan,
+    policy: &dyn crate::schedule::SchedulePolicy,
 ) -> Vec<(usize, u64)> {
-    use crate::planner::memory::stage_memory;
+    use crate::planner::memory::stage_memory_for_policy;
     let mut out = Vec::new();
     for stage in &plan.stages {
         for (&d, &y) in stage.devices.iter().zip(&stage.alloc) {
-            let mem = stage_memory(model, cfg, stage.layers.0, stage.layers.1, y, stage.kp);
+            let mem = stage_memory_for_policy(
+                model,
+                cfg,
+                stage.layers.0,
+                stage.layers.1,
+                y,
+                stage.kp,
+                plan.num_micro,
+                policy,
+            );
             out.push((d, mem.total()));
         }
     }
@@ -280,8 +291,15 @@ mod tests {
         let (_, model, _) = fixture();
         let cfg = TrainConfig::new(64, 8);
         let plan = mk_plan(&model);
-        let peaks = plan_peak_memory(&model, &cfg, &plan);
+        let peaks = plan_peak_memory(&model, &cfg, &plan, crate::schedule::DEFAULT_POLICY);
         assert_eq!(peaks.len(), 3);
         assert!(peaks.iter().all(|&(_, m)| m > 0));
+        // Fill-drain charges its true O(M) residency: strictly more
+        // than the K_p-windowed default on every device.
+        let gp = plan_peak_memory(&model, &cfg, &plan, &crate::schedule::GpipeFillDrain);
+        for (a, b) in peaks.iter().zip(&gp) {
+            assert_eq!(a.0, b.0);
+            assert!(b.1 > a.1, "device {}: gpipe {} <= 1f1b {}", a.0, b.1, a.1);
+        }
     }
 }

@@ -19,7 +19,7 @@ use crate::planner::alloc::{allocate_microbatch, AllocOpts};
 use crate::planner::cost::{comm_step_cost, exec_step_cost, round_latency, StepCost};
 use crate::planner::plan::{KpPolicy, Plan, Stage};
 use crate::profiler::ProfileTable;
-use crate::schedule::{Schedule, DEFAULT_POLICY};
+use crate::schedule::{Schedule, SchedulePolicy, DEFAULT_POLICY};
 
 /// Planner behaviour configuration (ablations of Fig. 15(a)).
 #[derive(Debug, Clone, Copy)]
@@ -36,6 +36,14 @@ pub struct PlannerConfig {
     /// effective", §3.3) — this final check removes its residual
     /// ranking errors at the cost of <= max_stages simulations.
     pub sim_select: bool,
+    /// The round schedule policy this run plans *for*: memory budgets
+    /// charge the policy's `effective_kp`, `sim_select` prices each
+    /// finalist under it (picking the best (plan, policy) pair rather
+    /// than assuming 1F1B), and the outcome's schedule is built with
+    /// it.  `Planner::plan` overrides this field with the session's
+    /// threaded policy, so `.schedule(..)` is authoritative; set it
+    /// directly only when calling `plan_hpp` by hand.
+    pub policy: &'static dyn SchedulePolicy,
 }
 
 impl Default for PlannerConfig {
@@ -46,6 +54,7 @@ impl Default for PlannerConfig {
             max_stages: 8,
             kp_policy: KpPolicy::Ours,
             sim_select: true,
+            policy: DEFAULT_POLICY,
         }
     }
 }
@@ -54,13 +63,23 @@ impl Default for PlannerConfig {
 #[derive(Debug, Clone)]
 pub struct PlanOutcome {
     pub plan: Plan,
-    /// The chosen plan's explicit HPP-Round schedule (default policy,
+    /// The chosen plan's explicit HPP-Round schedule (the run's policy,
     /// sample-sharded) — downstream layers consume this instead of
-    /// re-deriving 1F1B/K_p ordering from the plan.
+    /// re-deriving the op ordering from the plan.
     pub schedule: Schedule,
-    /// Predicted HPP-Round latency (seconds) from the cost model.
+    /// The schedule policy the run planned for (carried so downstream
+    /// layers never fall back to a hardcoded default).
+    pub policy: &'static dyn SchedulePolicy,
+    /// Predicted HPP-Round latency (seconds) from the *analytic*
+    /// Eq. 4-6 dominant-step model.  Deliberately policy-blind: the
+    /// paper's cost model assumes 1F1B-style overlap, and this field
+    /// is kept as the analytic cross-check it always was.  The
+    /// authoritative per-policy number is the event-accurate sim price
+    /// (`schedule` through `sim::price_schedule`, what `sim_select`
+    /// ranks and `RunReport::throughput` reports).
     pub predicted_latency: f64,
-    /// Predicted throughput (samples/s).
+    /// Predicted throughput (samples/s) from the same analytic model
+    /// (see `predicted_latency` for the policy-blindness caveat).
     pub predicted_throughput: f64,
     /// Wall-clock planning time (Table 7).
     pub planning_time_s: f64,
@@ -133,8 +152,11 @@ pub fn plan_hpp(
             return hit.clone();
         }
         let devices: Vec<usize> = order[ds..de].to_vec();
+        // Memory budgets charge the policy's true in-flight residency
+        // (e.g. the whole round for fill-drain), not the raw warm-up.
+        let eff_kp = pc.policy.effective_kp(kp, m);
         let result = allocate_microbatch(
-            table, cluster, model, cfg, i, j, &devices, b, kp, pc.alloc,
+            table, cluster, model, cfg, i, j, &devices, b, eff_kp, pc.alloc,
         )
         .ok()
         .map(|alloc| {
@@ -239,14 +261,17 @@ pub fn plan_hpp(
             cluster.describe()
         );
     }
-    // Price each finalist's explicit schedule with the event-accurate
-    // executor (one Schedule build + pricing per finalist); the
-    // winner's schedule is reused in the outcome instead of rebuilt.
+    // Price each finalist's explicit schedule under the run's policy
+    // with the event-accurate executor (one Schedule build + pricing
+    // per finalist): sim_select ranks (plan, policy) pairs, so a
+    // zero-bubble or fill-drain run picks the stage split that is best
+    // *under that ordering*, not under an assumed 1F1B.  The winner's
+    // schedule is reused in the outcome instead of rebuilt.
     let (best, prebuilt): (&QEntry, Option<Schedule>) = if pc.sim_select && finalists.len() > 1
     {
         let scored = finalists.iter().map(|e| {
             let plan = Plan { stages: e.stages.clone(), microbatch: b, num_micro: m };
-            let sched = Schedule::for_sim(&plan, model, DEFAULT_POLICY);
+            let sched = Schedule::for_sim(&plan, model, pc.policy);
             let lat =
                 crate::sim::price_schedule(&sched, table, cluster, model, &plan).round_latency;
             (lat, *e, sched)
@@ -269,14 +294,14 @@ pub fn plan_hpp(
         num_micro: m,
     };
     plan.validate(model, cluster)?;
-    let schedule =
-        prebuilt.unwrap_or_else(|| Schedule::for_sim(&plan, model, DEFAULT_POLICY));
+    let schedule = prebuilt.unwrap_or_else(|| Schedule::for_sim(&plan, model, pc.policy));
     let latency = best.latency;
     Ok(PlanOutcome {
         predicted_throughput: plan.samples_per_round() as f64 / latency,
         predicted_latency: latency,
         planning_time_s: t0.elapsed().as_secs_f64(),
         schedule,
+        policy: pc.policy,
         plan,
     })
 }
@@ -390,6 +415,7 @@ mod tests {
         let dp = crate::planner::baselines::plan_dp(
             &table, &cluster, &model, &cfg,
             crate::planner::alloc::AllocOpts::default(),
+            crate::schedule::DEFAULT_POLICY,
         )
         .unwrap();
         assert!(out.predicted_throughput > 1.5 * dp.predicted_throughput);
@@ -420,10 +446,34 @@ mod tests {
         let table = ProfileTable::new(&cluster, &model);
         let cfg = TrainConfig::new(256, 32);
         let out = plan_hpp(&table, &cluster, &model, &cfg, &PlannerConfig::default()).unwrap();
-        for (d, used) in plan_peak_memory(&model, &cfg, &out.plan) {
+        for (d, used) in plan_peak_memory(&model, &cfg, &out.plan, crate::schedule::DEFAULT_POLICY)
+        {
             assert!(
                 used <= cluster.devices[d].mem_bytes,
                 "device {d}: {used} > {}",
+                cluster.devices[d].mem_bytes
+            );
+        }
+    }
+
+    #[test]
+    fn policy_aware_planning_respects_fill_drain_residency() {
+        // With the policy threaded into the memory model, a fill-drain
+        // run's plan must fit its O(M) activation residency — the old
+        // raw-K_p accounting could emit plans that OOM at execution.
+        use crate::schedule::GpipeFillDrain;
+        let model = zoo::mobilenet_v2();
+        let cluster = ClusterSpec::env("D", 100.0).unwrap();
+        let table = ProfileTable::new(&cluster, &model);
+        let cfg = TrainConfig::new(128, 16);
+        let pc = PlannerConfig { policy: &GpipeFillDrain, ..PlannerConfig::default() };
+        let out = plan_hpp(&table, &cluster, &model, &cfg, &pc).unwrap();
+        assert_eq!(out.schedule.policy, "gpipe-fill-drain");
+        assert_eq!(out.policy.name(), "gpipe-fill-drain");
+        for (d, used) in plan_peak_memory(&model, &cfg, &out.plan, &GpipeFillDrain) {
+            assert!(
+                used <= cluster.devices[d].mem_bytes,
+                "device {d}: gpipe-priced {used} > {}",
                 cluster.devices[d].mem_bytes
             );
         }

@@ -9,6 +9,7 @@
 
 use crate::config::{DeviceSpec, TrainConfig};
 use crate::model::ModelDesc;
+use crate::schedule::SchedulePolicy;
 
 /// Memory components of one stage for a given per-device batch `beta`.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -54,9 +55,32 @@ pub fn stage_memory(
     }
 }
 
+/// Eq. (3) under a schedule policy: the in-flight bound is the
+/// policy's *effective* K_p, not the plan's raw warm-up depth.  A
+/// fill-drain policy holds every micro of the round (O(M) residency,
+/// Fig. 15(b)); charging raw `stage.kp` for it under-counts the peak
+/// by (M - K_p) activations and lets the planner emit OOM plans — the
+/// bug this function exists to close.  1F1B-family policies clamp to
+/// the same value as before, so default plans are unchanged.
+#[allow(clippy::too_many_arguments)]
+pub fn stage_memory_for_policy(
+    model: &ModelDesc,
+    cfg: &TrainConfig,
+    i: usize,
+    j: usize,
+    beta: usize,
+    stage_kp: usize,
+    n_micros: usize,
+    policy: &dyn SchedulePolicy,
+) -> StageMemory {
+    stage_memory(model, cfg, i, j, beta, policy.effective_kp(stage_kp, n_micros))
+}
+
 /// Largest per-device batch that fits the device budget (the `bs_d`
-/// bound of Algorithm 1, line 7).  Returns 0 when even the fixed cost
-/// (weights + optimizer) exceeds the budget.
+/// bound of Algorithm 1, line 7).  `kp` is the *effective* in-flight
+/// bound (callers apply `SchedulePolicy::effective_kp` first).
+/// Returns 0 when even the fixed cost (weights + optimizer) exceeds
+/// the budget.
 pub fn max_batch_under_budget(
     model: &ModelDesc,
     cfg: &TrainConfig,
@@ -109,6 +133,32 @@ mod tests {
             s.kp as u64 * s.activation_bytes_per_mb,
             s.model_bytes + s.optimizer_bytes
         );
+    }
+
+    #[test]
+    fn raw_kp_undercounts_fill_drain_peak_memory() {
+        // Regression for the Eq. 3 accounting bug: a GPipe fill-drain
+        // round holds all M micro-batches in flight, but the old model
+        // charged the stage's raw K_p — under-counting the peak by
+        // (M - K_p) activation sets.
+        use crate::schedule::{GpipeFillDrain, OneFOneBKp, ZeroBubbleH1};
+        let m = zoo::mobilenet_v2();
+        let cfg = TrainConfig::new(256, 8); // M = 32
+        let n_micros = cfg.num_microbatches();
+        let raw = stage_memory(&m, &cfg, 0, 20, 8, 1);
+        let gp = stage_memory_for_policy(&m, &cfg, 0, 20, 8, 1, n_micros, &GpipeFillDrain);
+        assert_eq!(gp.kp, n_micros);
+        assert!(gp.total() > raw.total(), "old model under-counts fill-drain");
+        assert_eq!(
+            gp.total() - raw.total(),
+            (n_micros as u64 - 1) * raw.activation_bytes_per_mb
+        );
+        // 1F1B-family policies charge the clamped warm-up depth — the
+        // planner's default behaviour is unchanged.
+        let one = stage_memory_for_policy(&m, &cfg, 0, 20, 8, 3, n_micros, &OneFOneBKp);
+        assert_eq!(one, stage_memory(&m, &cfg, 0, 20, 8, 3));
+        let zb = stage_memory_for_policy(&m, &cfg, 0, 20, 8, 3, n_micros, &ZeroBubbleH1);
+        assert_eq!(zb.kp, 3);
     }
 
     #[test]

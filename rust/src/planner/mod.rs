@@ -29,6 +29,7 @@ use anyhow::{Context, Result};
 use crate::config::{ClusterSpec, TrainConfig};
 use crate::model::ModelDesc;
 use crate::profiler::ProfileTable;
+use crate::schedule::SchedulePolicy;
 
 use self::baselines::Method;
 
@@ -60,7 +61,12 @@ impl Planner {
     }
 
     /// The one planning entry point: every method — ours and the
-    /// baselines — routes through here.
+    /// baselines — routes through here, planning *for* the given round
+    /// schedule policy (memory budgets, sim_select pricing and the
+    /// outcome schedule all honour it; the session threads its
+    /// `.schedule(..)` choice into this argument).  For a
+    /// `Planner::Custom` config the threaded policy overrides the
+    /// config's own `policy` field, so the session stays authoritative.
     ///
     /// `Baseline(HetPipe)` errors: HetPipe is hybrid *data*
     /// parallelism (HDP), whose plan is not an HPP [`Plan`]; its
@@ -71,25 +77,32 @@ impl Planner {
         cluster: &ClusterSpec,
         model: &ModelDesc,
         cfg: &TrainConfig,
+        policy: &'static dyn SchedulePolicy,
     ) -> Result<PlanOutcome> {
         match *self {
-            Planner::Asteroid | Planner::Baseline(Method::Asteroid) => {
-                plan_hpp(table, cluster, model, cfg, &PlannerConfig::default())
+            Planner::Asteroid | Planner::Baseline(Method::Asteroid) => plan_hpp(
+                table,
+                cluster,
+                model,
+                cfg,
+                &PlannerConfig { policy, ..PlannerConfig::default() },
+            ),
+            Planner::Custom(pc) => {
+                plan_hpp(table, cluster, model, cfg, &PlannerConfig { policy, ..pc })
             }
-            Planner::Custom(pc) => plan_hpp(table, cluster, model, cfg, &pc),
             Planner::Baseline(Method::DataParallel) | Planner::Baseline(Method::Eddl) => {
-                baselines::plan_dp(table, cluster, model, cfg, AllocOpts::default())
+                baselines::plan_dp(table, cluster, model, cfg, AllocOpts::default(), policy)
             }
             Planner::Baseline(Method::GpipePP) => {
-                baselines::plan_gpipe_pp(table, cluster, model, cfg)
+                baselines::plan_gpipe_pp(table, cluster, model, cfg, policy)
             }
             Planner::Baseline(Method::PipeDream) => {
-                baselines::plan_pipedream(table, cluster, model, cfg)
+                baselines::plan_pipedream(table, cluster, model, cfg, policy)
             }
             Planner::Baseline(Method::Dapple) => {
-                baselines::plan_dapple(table, cluster, model, cfg)
+                baselines::plan_dapple(table, cluster, model, cfg, policy)
             }
-            Planner::Baseline(Method::OnDevice) => plan_on_device(cluster, model, cfg),
+            Planner::Baseline(Method::OnDevice) => plan_on_device(cluster, model, cfg, policy),
             Planner::Baseline(Method::HetPipe) => anyhow::bail!(
                 "HetPipe is hybrid data parallelism (HDP), not an HPP plan; \
                  use planner::baselines::plan_hetpipe for its analytic result"
@@ -103,6 +116,7 @@ fn plan_on_device(
     cluster: &ClusterSpec,
     model: &ModelDesc,
     cfg: &TrainConfig,
+    policy: &'static dyn SchedulePolicy,
 ) -> Result<PlanOutcome> {
     let best = cluster
         .devices
@@ -115,13 +129,22 @@ fn plan_on_device(
     single.devices[0].id = 0;
     single.bandwidth = vec![vec![0.0]];
     let table = ProfileTable::new(&single, model);
-    let mut out = plan_hpp(&table, &single, model, cfg, &PlannerConfig::default())?;
-    // Map back to the original device id.
+    let mut out = plan_hpp(
+        &table,
+        &single,
+        model,
+        cfg,
+        &PlannerConfig { policy, ..PlannerConfig::default() },
+    )?;
+    // Map back to the original device id and rebuild the schedule so
+    // its timelines name the real device (the session consumes the
+    // outcome's schedule as-is).
     for s in &mut out.plan.stages {
         for d in &mut s.devices {
             *d = best;
         }
     }
+    out.schedule = crate::schedule::Schedule::for_sim(&out.plan, model, policy);
     Ok(out)
 }
 
@@ -130,6 +153,7 @@ mod tests {
     use super::*;
     use crate::config::ClusterSpec;
     use crate::model::zoo;
+    use crate::schedule::{ZeroBubbleH1, DEFAULT_POLICY};
 
     fn fixture(env: &str) -> (ClusterSpec, ModelDesc, ProfileTable, TrainConfig) {
         let cluster = ClusterSpec::env(env, 100.0).unwrap();
@@ -151,22 +175,45 @@ mod tests {
             Method::PipeDream,
             Method::Dapple,
         ] {
-            let out = Planner::Baseline(m).plan(&table, &cluster, &model, &cfg).unwrap();
+            let out = Planner::Baseline(m)
+                .plan(&table, &cluster, &model, &cfg, DEFAULT_POLICY)
+                .unwrap();
             assert!(out.predicted_throughput > 0.0, "{m:?}");
+            assert_eq!(out.policy.name(), DEFAULT_POLICY.name(), "{m:?}");
         }
         assert!(Planner::Baseline(Method::HetPipe)
-            .plan(&table, &cluster, &model, &cfg)
+            .plan(&table, &cluster, &model, &cfg, DEFAULT_POLICY)
             .is_err());
     }
 
     #[test]
     fn asteroid_and_default_custom_agree() {
         let (cluster, model, table, cfg) = fixture("B");
-        let a = Planner::Asteroid.plan(&table, &cluster, &model, &cfg).unwrap();
+        let a = Planner::Asteroid
+            .plan(&table, &cluster, &model, &cfg, DEFAULT_POLICY)
+            .unwrap();
         let c = Planner::Custom(PlannerConfig::default())
-            .plan(&table, &cluster, &model, &cfg)
+            .plan(&table, &cluster, &model, &cfg, DEFAULT_POLICY)
             .unwrap();
         assert_eq!(a.plan, c.plan);
+    }
+
+    #[test]
+    fn threaded_policy_overrides_custom_config_policy() {
+        // `.schedule(..)` must win over a stale PlannerConfig::policy:
+        // the outcome carries the threaded policy, on every method.
+        let (cluster, model, table, cfg) = fixture("B");
+        let out = Planner::Custom(PlannerConfig::default())
+            .plan(&table, &cluster, &model, &cfg, &ZeroBubbleH1)
+            .unwrap();
+        assert_eq!(out.policy.name(), "zb-h1");
+        assert_eq!(out.schedule.policy, "zb-h1");
+        for m in [Method::DataParallel, Method::GpipePP, Method::OnDevice] {
+            let out = Planner::Baseline(m)
+                .plan(&table, &cluster, &model, &cfg, &ZeroBubbleH1)
+                .unwrap();
+            assert_eq!(out.schedule.policy, "zb-h1", "{m:?}");
+        }
     }
 
     #[test]
@@ -174,7 +221,7 @@ mod tests {
         // Env C: NX is device 0.
         let (cluster, model, table, cfg) = fixture("C");
         let out = Planner::Baseline(Method::OnDevice)
-            .plan(&table, &cluster, &model, &cfg)
+            .plan(&table, &cluster, &model, &cfg, DEFAULT_POLICY)
             .unwrap();
         assert_eq!(out.plan.num_stages(), 1);
         assert_eq!(out.plan.stages[0].devices, vec![0]);

@@ -81,7 +81,7 @@ fn priced_throughput(s: &Session) -> f64 {
 /// (the baselines plan memory-blind; the paper marks those runs
 /// x/OOM).
 fn plan_ooms(s: &Session) -> bool {
-    plan_peak_memory(s.model(), s.train_config(), s.plan())
+    plan_peak_memory(s.model(), s.train_config(), s.plan(), s.policy())
         .iter()
         .any(|&(d, used)| used > s.cluster().devices[d].mem_bytes)
 }
@@ -519,10 +519,15 @@ pub fn fig15b() -> Table {
         let plan = match crate::planner::dp::plan_hpp(&table, &cluster, &model, &cfg, &pc) {
             Ok(o) if o.plan.num_stages() >= 2 => o.plan,
             _ => {
-                let mut o =
-                    crate::planner::baselines::plan_gpipe_pp(&table, &cluster, &model, &cfg)
-                        .unwrap()
-                        .plan;
+                let mut o = crate::planner::baselines::plan_gpipe_pp(
+                    &table,
+                    &cluster,
+                    &model,
+                    &cfg,
+                    crate::schedule::DEFAULT_POLICY,
+                )
+                .unwrap()
+                .plan;
                 let m = o.num_micro;
                 let p_total = o.stages.len();
                 for (p, s) in o.stages.iter_mut().enumerate() {

@@ -35,15 +35,19 @@ use anyhow::{bail, Result};
 use crate::model::ModelDesc;
 use crate::planner::plan::Plan;
 
-pub use policy::{ComputeOp, GpipeFillDrain, OneFOneBKp, SchedulePolicy};
+pub use policy::{
+    builtin_policies, policy_by_name, ComputeOp, GpipeFillDrain, Interleaved, OneFOneBKp,
+    SchedulePolicy, ZeroBubbleH1, BWD_INPUT_FRAC,
+};
 
-/// The one schedule policy every consumer (planner, simulator, live
-/// runtime, fault replay) uses unless a caller explicitly passes
-/// another: the paper's 1F1B with K_p warm-up.  Keeping this a single
-/// named constant prevents the call sites from silently disagreeing
-/// about the default; threading a *per-run* policy through
-/// `PlanOutcome` is the next step once a second runtime policy lands
-/// (see ROADMAP).
+/// The policy a consumer falls back to when no per-run policy was
+/// chosen: the paper's 1F1B with K_p warm-up.  This constant is only
+/// legitimate in *defaults* (`SessionBuilder::default`,
+/// `PlannerConfig::default`, `TrainOpts::default`, the
+/// `sim::simulate_round` convenience wrapper, and tests); every
+/// planning/execution/replay path takes the session's threaded
+/// `&'static dyn SchedulePolicy` instead of calling this directly, so
+/// `Session::builder().schedule(..)` governs the whole run.
 pub const DEFAULT_POLICY: &dyn SchedulePolicy = &OneFOneBKp;
 
 /// What an inter-stage transfer carries.
@@ -60,8 +64,14 @@ pub enum Payload {
 pub enum Task {
     /// Forward pass of one micro-batch (this device's share of it).
     Fwd { micro: usize },
-    /// Backward pass of one micro-batch.
+    /// Backward pass of one micro-batch.  Under a split-backward policy
+    /// this is the input-gradient half only (the part that feeds the
+    /// upstream `Send`); otherwise it is the full backward.
     Bwd { micro: usize },
+    /// Deferred weight-gradient half of a split backward (zero-bubble
+    /// policies).  Purely local compute: no transfers, and the micro's
+    /// activation residency was already released by its `Bwd`.
+    BwdW { micro: usize },
     /// Transfer to a peer device; placed right after the producing
     /// compute task.  `bytes` may be 0 in runtime-built schedules,
     /// where actual tensor sizes are only known at execution time.
@@ -101,6 +111,7 @@ impl DeviceTimeline {
             .filter_map(|t| match *t {
                 Task::Fwd { micro } => Some(ComputeOp::Fwd(micro)),
                 Task::Bwd { micro } => Some(ComputeOp::Bwd(micro)),
+                Task::BwdW { micro } => Some(ComputeOp::BwdW(micro)),
                 _ => None,
             })
             .collect()
@@ -355,6 +366,9 @@ impl Schedule {
                                 }
                             }
                         }
+                        // Weight-grad halves are pure local compute:
+                        // no transfer fan-out in either direction.
+                        ComputeOp::BwdW(m) => tasks.push(Task::BwdW { micro: m }),
                     }
                 }
                 if stage.devices.len() > 1 {
@@ -405,6 +419,8 @@ impl Schedule {
     /// Validate the IR's dependency invariants:
     ///   * every micro appears exactly once as Fwd and once as Bwd, in
     ///     that order, on each non-idle timeline;
+    ///   * a split-backward timeline has exactly one BwdW per micro,
+    ///     after that micro's Bwd (all-or-none per timeline);
     ///   * the running in-flight count never exceeds the timeline's
     ///     effective K_p;
     ///   * Send follows its producing compute, Recv precedes its
@@ -419,6 +435,7 @@ impl Schedule {
             let d = tl.device;
             let mut fwd_pos: HashMap<usize, usize> = HashMap::new();
             let mut bwd_pos: HashMap<usize, usize> = HashMap::new();
+            let mut bww_pos: HashMap<usize, usize> = HashMap::new();
             let mut inflight: usize = 0;
             let mut peak: usize = 0;
             for (k, t) in tl.tasks.iter().enumerate() {
@@ -439,8 +456,23 @@ impl Schedule {
                         }
                         inflight -= 1;
                     }
+                    Task::BwdW { micro } => {
+                        if !bwd_pos.contains_key(&micro) {
+                            bail!("device {d}: BwdW before Bwd for micro {micro}");
+                        }
+                        if bww_pos.insert(micro, k).is_some() {
+                            bail!("device {d}: duplicate BwdW for micro {micro}");
+                        }
+                    }
                     _ => {}
                 }
+            }
+            if !bww_pos.is_empty() && bww_pos.len() != bwd_pos.len() {
+                bail!(
+                    "device {d}: partial backward split ({} BwdW for {} Bwd)",
+                    bww_pos.len(),
+                    bwd_pos.len()
+                );
             }
             if peak > tl.kp.max(1) {
                 bail!(
@@ -762,6 +794,44 @@ mod tests {
         for tl in &sched.timelines {
             assert_eq!(tl.kp, plan.num_micro);
         }
+    }
+
+    #[test]
+    fn zero_bubble_and_interleaved_schedules_validate() {
+        let model = zoo::mobilenet_v2();
+        let plan = two_stage_plan(&model);
+        let sched = Schedule::for_sim(&plan, &model, &ZeroBubbleH1);
+        sched.validate().unwrap();
+        for tl in &sched.timelines {
+            // Same warm-up window as 1F1B, plus one BwdW per micro.
+            let n_w = tl
+                .tasks
+                .iter()
+                .filter(|t| matches!(t, Task::BwdW { .. }))
+                .count();
+            assert_eq!(n_w, plan.num_micro);
+            assert_eq!(tl.kp, plan.stages[tl.stage].kp.min(plan.num_micro));
+        }
+        Schedule::for_runtime(&plan, &ZeroBubbleH1).validate().unwrap();
+        let il = Interleaved { virtual_per_device: 2 };
+        Schedule::for_sim(&plan, &model, &il).validate().unwrap();
+        Schedule::for_runtime(&plan, &il).validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_partial_backward_split() {
+        let model = zoo::mobilenet_v2();
+        let plan = two_stage_plan(&model);
+        let mut sched = Schedule::for_sim(&plan, &model, &ZeroBubbleH1);
+        // Drop one weight-grad task: the split is no longer total.
+        let tl = &mut sched.timelines[2];
+        let w = tl
+            .tasks
+            .iter()
+            .position(|t| matches!(t, Task::BwdW { .. }))
+            .unwrap();
+        tl.tasks.remove(w);
+        assert!(sched.validate().is_err());
     }
 
     #[test]

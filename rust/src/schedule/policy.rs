@@ -5,30 +5,49 @@
 //! Everything downstream (simulator pricing, live workers, fault
 //! replay) consumes the emitted order; no consumer re-derives it.
 //!
-//! Two built-in policies prove the abstraction:
+//! Four built-in policies:
 //!   * [`OneFOneBKp`] — the paper's 1F1B with a K_p warm-up window
 //!     (§3.2): K_p forwards fill the pipeline, then strict
 //!     one-backward-one-forward, then the backward drain.
 //!   * [`GpipeFillDrain`] — GPipe-style fill-drain: every forward of
 //!     the round, then every backward.  Its activation residency is
 //!     O(M) instead of O(K_p) (Fig. 15(b)).
+//!   * [`ZeroBubbleH1`] — ZB-H1-style split backward (Qi et al.): each
+//!     backward is split into an input-gradient op ([`ComputeOp::Bwd`],
+//!     which unblocks the upstream stage) and a deferred weight-gradient
+//!     op ([`ComputeOp::BwdW`]) that fills the drain bubbles.
+//!   * [`Interleaved`] — Megatron-style virtual chunks: the device's
+//!     micros are partitioned round-robin into `virtual_per_device`
+//!     chunks and run 1F1B in chunk-major order, so the next chunk's
+//!     forwards overlap the previous chunk's backward drain.
 //!
-//! Adding a new schedule (zero-bubble, interleaved, ...) means adding a
-//! policy here — not touching the simulator, the workers, or the fault
-//! machinery.
+//! Adding a new schedule means adding a policy here — not touching the
+//! simulator, the workers, or the fault machinery.
 
-/// One unit of compute work on a device: forward or backward of one
-/// micro-batch (identified by its round-global micro id).
+use std::collections::VecDeque;
+use std::fmt;
+
+/// One unit of compute work on a device: forward, backward, or (for
+/// split-backward policies) the deferred weight-gradient half of a
+/// backward, each identified by its round-global micro id.
+///
+/// Under a split-backward policy `Bwd` means the *input-gradient* half
+/// only — the part on the inter-stage critical path — and `BwdW`
+/// carries the weight-gradient half, schedulable anywhere after its
+/// micro's `Bwd`.  Policies that do not split simply never emit `BwdW`,
+/// and `Bwd` keeps its full-backward meaning.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ComputeOp {
     Fwd(usize),
     Bwd(usize),
+    /// Deferred weight-gradient computation of a split backward.
+    BwdW(usize),
 }
 
 impl ComputeOp {
     pub fn micro(&self) -> usize {
         match *self {
-            ComputeOp::Fwd(m) | ComputeOp::Bwd(m) => m,
+            ComputeOp::Fwd(m) | ComputeOp::Bwd(m) | ComputeOp::BwdW(m) => m,
         }
     }
 
@@ -37,14 +56,23 @@ impl ComputeOp {
     }
 }
 
+/// Fraction of the profiled full-backward time charged to the
+/// input-gradient half (`Bwd`) when a policy splits the backward; the
+/// weight-gradient half (`BwdW`) gets the rest.  Backward is roughly
+/// one activation-gradient plus one weight-gradient GEMM of similar
+/// cost, so the split conserves total compute: B + W = full backward.
+pub const BWD_INPUT_FRAC: f64 = 0.5;
+
 /// A schedule policy orders one device's FP/BP ops for an HPP-Round.
-pub trait SchedulePolicy {
+pub trait SchedulePolicy: fmt::Debug + Sync {
     fn name(&self) -> &'static str;
 
     /// Ordered FP/BP ops over this device's assigned micro ids
     /// (ascending), under the stage's warm-up depth `kp`.  Every micro
     /// must appear exactly once as `Fwd` and once as `Bwd`, with the
-    /// `Fwd` first.
+    /// `Fwd` first.  A split-backward policy additionally emits exactly
+    /// one `BwdW` per micro, after that micro's `Bwd` (all-or-none: an
+    /// order either splits every backward or none).
     fn compute_order(&self, micros: &[usize], kp: usize) -> Vec<ComputeOp>;
 
     /// The in-flight activation bound the emitted order actually
@@ -112,6 +140,136 @@ impl SchedulePolicy for GpipeFillDrain {
     }
 }
 
+/// Zero-bubble H1 (after Qi et al., "Zero Bubble Pipeline
+/// Parallelism"): the 1F1B/K_p skeleton with every backward split into
+/// an input-gradient op (`Bwd`, emitted in the 1F1B position so the
+/// upstream gradient leaves as early as possible) and a weight-gradient
+/// op (`BwdW`, deferred into the drain phase where 1F1B idles waiting
+/// for downstream gradients, then flushed before the round closes).
+/// The inter-stage critical path only carries the `Bwd` halves, so the
+/// drain bubble of every non-dominant stage is filled with `BwdW` work
+/// instead of idle time.
+///
+/// Activation residency is charged as in 1F1B (`Fwd` acquires, `Bwd`
+/// releases): this reproduction's Eq. 3 model treats the weight-grad
+/// half as operating on the stage's retained boundary input, a
+/// simplification relative to the ZB paper's exact memory profile
+/// (documented in `docs/SCHEDULE.md`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ZeroBubbleH1;
+
+impl SchedulePolicy for ZeroBubbleH1 {
+    fn name(&self) -> &'static str {
+        "zb-h1"
+    }
+
+    fn compute_order(&self, micros: &[usize], kp: usize) -> Vec<ComputeOp> {
+        let n = micros.len();
+        let k = self.effective_kp(kp, n);
+        let mut ops = Vec::with_capacity(3 * n);
+        let mut pending_w: VecDeque<usize> = VecDeque::new();
+        // Warm-up: identical to 1F1B.
+        for &m in micros.iter().take(k) {
+            ops.push(ComputeOp::Fwd(m));
+        }
+        // Steady state: B (input-grad only) then F; W deferred.
+        for i in k..n {
+            ops.push(ComputeOp::Bwd(micros[i - k]));
+            pending_w.push_back(micros[i - k]);
+            ops.push(ComputeOp::Fwd(micros[i]));
+        }
+        // Drain: each remaining B is chased by one deferred W — the
+        // slot where 1F1B waits on the downstream gradient.
+        for &m in micros.iter().skip(n.saturating_sub(k)) {
+            ops.push(ComputeOp::Bwd(m));
+            pending_w.push_back(m);
+            if let Some(w) = pending_w.pop_front() {
+                ops.push(ComputeOp::BwdW(w));
+            }
+        }
+        // Flush the rest before the round's AllReduce.
+        while let Some(w) = pending_w.pop_front() {
+            ops.push(ComputeOp::BwdW(w));
+        }
+        ops
+    }
+
+    fn effective_kp(&self, kp: usize, n_micros: usize) -> usize {
+        kp.clamp(1, n_micros.max(1))
+    }
+}
+
+/// Megatron-style interleaved schedule, expressed at the policy level:
+/// the device's micros are partitioned round-robin into
+/// `virtual_per_device` virtual chunks (chunk c = micros with
+/// `m % v == c`) and the 1F1B/K_p order runs chunk-major, so chunk
+/// c+1's forwards fill chunk c's backward drain.  The chunk key is a
+/// function of the round-global micro id alone, so every stage and slot
+/// orders its micros consistently with one global priority — the
+/// property that keeps the cross-stage schedule deadlock-free under
+/// both sharding modes.
+///
+/// Scope note: the chunk-major reordering is effective under
+/// `Sharding::SampleShard` (the planner/simulator path, where every
+/// device runs every micro).  Under the runtime's `RoundRobin`
+/// sharding, a slot whose group size shares a factor with `v` sees a
+/// constant `m % v` (its residue class *is* a virtual chunk), so the
+/// local order intentionally reduces to plain 1F1B — a non-constant
+/// key there would break the single-global-priority property and
+/// reintroduce cross-stage deadlocks.
+#[derive(Debug, Clone, Copy)]
+pub struct Interleaved {
+    /// Virtual stage chunks per device (Megatron's v); 2 is the
+    /// built-in CLI variant.  Values are clamped to >= 1.
+    pub virtual_per_device: usize,
+}
+
+impl Default for Interleaved {
+    fn default() -> Self {
+        Interleaved { virtual_per_device: 2 }
+    }
+}
+
+impl SchedulePolicy for Interleaved {
+    fn name(&self) -> &'static str {
+        "interleaved"
+    }
+
+    fn compute_order(&self, micros: &[usize], kp: usize) -> Vec<ComputeOp> {
+        let v = self.virtual_per_device.max(1);
+        let mut perm: Vec<usize> = micros.to_vec();
+        perm.sort_by_key(|&m| (m % v, m / v));
+        OneFOneBKp.compute_order(&perm, kp)
+    }
+
+    fn effective_kp(&self, kp: usize, n_micros: usize) -> usize {
+        OneFOneBKp.effective_kp(kp, n_micros)
+    }
+}
+
+/// Every built-in policy, in presentation order — what the CLI, the
+/// property tests and the per-policy benches iterate over.
+pub fn builtin_policies() -> [&'static dyn SchedulePolicy; 4] {
+    [
+        &OneFOneBKp,
+        &GpipeFillDrain,
+        &ZeroBubbleH1,
+        &Interleaved { virtual_per_device: 2 },
+    ]
+}
+
+/// Resolve a `--schedule` flag value to a policy.  Accepts each
+/// policy's `name()` plus the common short spellings.
+pub fn policy_by_name(name: &str) -> Option<&'static dyn SchedulePolicy> {
+    Some(match name {
+        "1f1b" | "1f1b-kp" | "default" => &OneFOneBKp,
+        "gpipe" | "fill-drain" | "gpipe-fill-drain" => &GpipeFillDrain,
+        "zb" | "zb-h1" | "zero-bubble" => &ZeroBubbleH1,
+        "interleaved" | "interleaved-2" | "vpp" => &Interleaved { virtual_per_device: 2 },
+        _ => return None,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -126,6 +284,7 @@ mod tests {
                     peak = peak.max(cur);
                 }
                 ComputeOp::Bwd(_) => cur -= 1,
+                ComputeOp::BwdW(_) => {}
             }
         }
         peak
@@ -168,24 +327,98 @@ mod tests {
     }
 
     #[test]
+    fn zero_bubble_canonical_order() {
+        // n = 4, kp = 3: warm-up F0..F2, one steady pair, then the
+        // drain interleaves deferred weight-grads, then the flush.
+        let ops = ZeroBubbleH1.compute_order(&[0, 1, 2, 3], 3);
+        use ComputeOp::*;
+        assert_eq!(
+            ops,
+            vec![
+                Fwd(0),
+                Fwd(1),
+                Fwd(2),
+                Bwd(0),
+                Fwd(3),
+                Bwd(1),
+                BwdW(0),
+                Bwd(2),
+                BwdW(1),
+                Bwd(3),
+                BwdW(2),
+                BwdW(3),
+            ]
+        );
+        // Same 1F1B activation window; the W ops never hold activations.
+        assert_eq!(inflight_peak(&ops), 3);
+        assert_eq!(ZeroBubbleH1.effective_kp(3, 4), 3);
+    }
+
+    #[test]
+    fn zero_bubble_every_weight_grad_after_its_input_grad() {
+        for kp in 1..=6 {
+            let micros: Vec<usize> = (0..7).collect();
+            let ops = ZeroBubbleH1.compute_order(&micros, kp);
+            assert_eq!(ops.len(), 3 * micros.len(), "kp={kp}");
+            for &m in &micros {
+                let b = ops.iter().position(|o| *o == ComputeOp::Bwd(m)).unwrap();
+                let w = ops.iter().position(|o| *o == ComputeOp::BwdW(m)).unwrap();
+                assert!(b < w, "kp={kp}: micro {m} weight-grad before input-grad");
+            }
+        }
+    }
+
+    #[test]
+    fn interleaved_runs_chunks_in_global_key_order() {
+        // v = 2 over micros 0..6: chunk 0 = evens, chunk 1 = odds,
+        // chunk-major — the next chunk's forwards fill the drain.
+        let ops = Interleaved { virtual_per_device: 2 }.compute_order(&[0, 1, 2, 3, 4, 5], 2);
+        let fwd_order: Vec<usize> =
+            ops.iter().filter(|o| o.is_fwd()).map(|o| o.micro()).collect();
+        assert_eq!(fwd_order, vec![0, 2, 4, 1, 3, 5]);
+        assert_eq!(inflight_peak(&ops), 2);
+        // v = 1 degenerates to plain 1F1B.
+        let one = Interleaved { virtual_per_device: 1 }.compute_order(&[0, 1, 2], 1);
+        assert_eq!(one, OneFOneBKp.compute_order(&[0, 1, 2], 1));
+    }
+
+    #[test]
     fn empty_load_is_empty() {
-        assert!(OneFOneBKp.compute_order(&[], 3).is_empty());
-        assert!(GpipeFillDrain.compute_order(&[], 3).is_empty());
+        for policy in builtin_policies() {
+            assert!(policy.compute_order(&[], 3).is_empty(), "{}", policy.name());
+        }
     }
 
     #[test]
     fn every_micro_once_fwd_then_bwd() {
-        for policy in [&OneFOneBKp as &dyn SchedulePolicy, &GpipeFillDrain] {
+        for policy in builtin_policies() {
             for kp in 1..=5 {
                 let micros: Vec<usize> = (0..7).map(|i| i * 3).collect();
                 let ops = policy.compute_order(&micros, kp);
-                assert_eq!(ops.len(), 2 * micros.len(), "{}", policy.name());
                 for &m in &micros {
                     let f = ops.iter().position(|o| *o == ComputeOp::Fwd(m)).unwrap();
                     let b = ops.iter().position(|o| *o == ComputeOp::Bwd(m)).unwrap();
                     assert!(f < b, "{}: micro {m} bwd before fwd", policy.name());
                 }
+                // Split policies emit one BwdW per micro; others none.
+                let n_w = ops.iter().filter(|o| matches!(o, ComputeOp::BwdW(_))).count();
+                assert!(
+                    n_w == 0 || n_w == micros.len(),
+                    "{}: partial backward split",
+                    policy.name()
+                );
             }
         }
+    }
+
+    #[test]
+    fn policy_by_name_resolves_all_builtins() {
+        for policy in builtin_policies() {
+            let resolved = policy_by_name(policy.name()).unwrap();
+            assert_eq!(resolved.name(), policy.name());
+        }
+        assert!(policy_by_name("1f1b").is_some());
+        assert!(policy_by_name("zb").is_some());
+        assert!(policy_by_name("nope").is_none());
     }
 }

@@ -22,7 +22,6 @@ use anyhow::{Context, Result};
 use crate::data::{DataSource, LmTask, VisionTask};
 use crate::model::from_manifest::ManifestModel;
 use crate::pipeline::{train, TrainOpts, TrainStats};
-use crate::schedule::DEFAULT_POLICY;
 use crate::sim::price_schedule;
 
 use super::{RecoveryEvent, RunReport, Session};
@@ -130,17 +129,11 @@ impl ExecutionBackend for PjrtBackend {
             "live execution requires an artifact model \
              (SessionBuilder::artifact_model); zoo models are simulation-only",
         )?;
-        // The live workers execute the default 1F1B/K_p scripts; a
-        // session built with another policy would price one schedule
-        // and run another.
-        anyhow::ensure!(
-            s.policy().name() == DEFAULT_POLICY.name(),
-            "the live engine runs the default {:?} schedule policy (session uses {:?}); \
-             price other policies with SimBackend",
-            DEFAULT_POLICY.name(),
-            s.policy().name()
-        );
-
+        // The live workers execute whatever compute script the
+        // session's policy emits (the schedule is validated before the
+        // workers spawn, and a worker that meets an op it cannot
+        // execute reports a structured error) — no policy-name
+        // allowlist here.
         let rc = s.run_config().clone();
         let opts = TrainOpts {
             steps: rc.steps,
@@ -149,6 +142,7 @@ impl ExecutionBackend for PjrtBackend {
             emulate: if rc.emulate { Some(s.cluster().clone()) } else { None },
             log_every: rc.log_every,
             initial_params: None,
+            policy: s.policy(),
         };
         let mut owned;
         let data: &mut dyn DataSource = match self.data.as_mut() {

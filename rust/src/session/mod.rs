@@ -403,11 +403,13 @@ impl SessionBuilder {
         };
 
         let table = ProfileTable::new(&cluster, &model);
+        // The session's policy governs planning too: memory budgets,
+        // sim_select pricing and the outcome schedule all honour it.
         let outcome = self
             .planner
-            .plan(&table, &cluster, &model, &cfg)
+            .plan(&table, &cluster, &model, &cfg, self.policy)
             .with_context(|| format!("planning ({})", self.planner.describe()))?;
-        let schedule = Schedule::for_sim(&outcome.plan, &model, self.policy);
+        let schedule = outcome.schedule.clone();
 
         Ok(Session {
             source,
@@ -563,6 +565,7 @@ impl Session {
                 self.plan(),
                 failed,
                 &spec.heartbeat,
+                self.policy,
             ),
             RecoveryKind::Heavy => heavy_reschedule(
                 &self.table,
@@ -572,6 +575,7 @@ impl Session {
                 self.plan(),
                 failed,
                 &spec.heartbeat,
+                self.policy,
             ),
         }
     }

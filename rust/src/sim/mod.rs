@@ -24,7 +24,7 @@ use crate::config::ClusterSpec;
 use crate::model::ModelDesc;
 use crate::planner::plan::Plan;
 use crate::profiler::ProfileTable;
-use crate::schedule::{Payload, Schedule, Sharding, Task, DEFAULT_POLICY};
+use crate::schedule::{Payload, Schedule, Sharding, Task, BWD_INPUT_FRAC, DEFAULT_POLICY};
 
 use engine::{EventQueue, LinkSet};
 
@@ -65,6 +65,11 @@ struct ExecDev<'a> {
     /// Index of the next task to start (the task a `Done` refers to
     /// while `running`).
     pos: usize,
+    /// Whether this timeline splits backwards (contains BwdW tasks):
+    /// its Bwd tasks then price the input-gradient fraction only, and
+    /// BwdW tasks carry the weight-gradient remainder, conserving
+    /// total backward compute.
+    split_bwd: bool,
     running: bool,
     busy_total: f64,
     first_start: f64,
@@ -116,6 +121,7 @@ pub fn price_schedule(
                 ExecDev {
                     tl,
                     pos: 0,
+                    split_bwd: tl.tasks.iter().any(|t| matches!(t, Task::BwdW { .. })),
                     running: false,
                     busy_total: 0.0,
                     first_start: f64::INFINITY,
@@ -166,18 +172,23 @@ pub fn price_schedule(
                         return; // blocked until the matching Send arrives
                     }
                 }
-                Task::Fwd { .. } | Task::Bwd { .. } => {
+                Task::Fwd { .. } | Task::Bwd { .. } | Task::BwdW { .. } => {
                     let (i, j) = plan.stages[st.tl.stage].layers;
-                    let is_fwd = matches!(st.tl.tasks[st.pos], Task::Fwd { .. });
-                    let t = if is_fwd {
-                        table.time_fwd(d, i, j, st.tl.share)
-                    } else {
-                        table.time_bwd(d, i, j, st.tl.share)
+                    let t = match st.tl.tasks[st.pos] {
+                        Task::Fwd { .. } => {
+                            st.inflight += 1;
+                            st.peak_inflight = st.peak_inflight.max(st.inflight);
+                            table.time_fwd(d, i, j, st.tl.share)
+                        }
+                        Task::Bwd { .. } => {
+                            let tb = table.time_bwd(d, i, j, st.tl.share);
+                            if st.split_bwd { tb * BWD_INPUT_FRAC } else { tb }
+                        }
+                        Task::BwdW { .. } => {
+                            table.time_bwd(d, i, j, st.tl.share) * (1.0 - BWD_INPUT_FRAC)
+                        }
+                        _ => unreachable!(),
                     };
-                    if is_fwd {
-                        st.inflight += 1;
-                        st.peak_inflight = st.peak_inflight.max(st.inflight);
-                    }
                     st.running = true;
                     st.first_start = st.first_start.min(now);
                     st.busy_total += t;
@@ -218,6 +229,10 @@ pub fn price_schedule(
                         st.bwd_done += 1;
                         st.inflight -= 1;
                     }
+                    // Weight-grad halves occupy the device but neither
+                    // hold activations nor count toward BP completion
+                    // (their micro's Bwd already did).
+                    Task::BwdW { .. } => {}
                     _ => unreachable!("Done for a non-compute task"),
                 }
                 st.pos += 1;
@@ -452,6 +467,85 @@ mod tests {
         let gpipe_m8 = simulate_round(&table, &cluster, &model, &mk(8, 8));
         let gpipe_m32 = simulate_round(&table, &cluster, &model, &mk(32, 32));
         assert!(gpipe_m32.peak_inflight[0] > gpipe_m8.peak_inflight[0]);
+    }
+
+    #[test]
+    fn zero_bubble_strictly_beats_1f1b_on_heterogeneous_chain() {
+        // The reference heterogeneous cluster fixture: env C's NX
+        // (device 0) feeds a Nano (device 3) that owns the larger layer
+        // slice — the classic setup where 1F1B's upstream drain idles
+        // waiting for downstream gradients.  ZB-H1 sends each
+        // input-gradient as soon as its half-backward finishes and
+        // fills the drain gaps with deferred weight-grad work, so the
+        // observed round makespan must be *strictly* lower while total
+        // per-device compute is conserved.
+        use crate::schedule::{OneFOneBKp, ZeroBubbleH1};
+        let cluster = ClusterSpec::env("C", 100.0).unwrap();
+        let model = zoo::mobilenet_v2();
+        let table = ProfileTable::new(&cluster, &model);
+        let nl = model.num_layers();
+        let plan = Plan {
+            stages: vec![
+                Stage { layers: (0, nl / 3), devices: vec![0], alloc: vec![8], kp: 3 },
+                Stage { layers: (nl / 3, nl), devices: vec![3], alloc: vec![8], kp: 1 },
+            ],
+            microbatch: 8,
+            num_micro: 8,
+        };
+        let one_sched = Schedule::for_sim(&plan, &model, &OneFOneBKp);
+        let zb_sched = Schedule::for_sim(&plan, &model, &ZeroBubbleH1);
+        zb_sched.validate().unwrap();
+        let one = price_schedule(&one_sched, &table, &cluster, &model, &plan);
+        let zb = price_schedule(&zb_sched, &table, &cluster, &model, &plan);
+        assert!(
+            zb.round_latency < one.round_latency,
+            "zb-h1 {} !< 1f1b {}",
+            zb.round_latency,
+            one.round_latency
+        );
+        // Splitting conserves compute (B + W = full backward) and the
+        // 1F1B activation window.
+        for d in [0usize, 3] {
+            assert!(
+                (zb.busy[d] - one.busy[d]).abs() < 1e-9 * one.busy[d].max(1e-12),
+                "device {d}: zb busy {} vs 1f1b {}",
+                zb.busy[d],
+                one.busy[d]
+            );
+        }
+        assert_eq!(zb.peak_inflight, one.peak_inflight);
+        assert_eq!(zb.bytes_on_network, one.bytes_on_network);
+    }
+
+    #[test]
+    fn interleaved_prices_like_1f1b_on_symmetric_micros() {
+        // In the sample-sharded sim every micro is identical, so the
+        // chunk-major permutation must not change the makespan — the
+        // policy's value is its schedule shape, not sim throughput.
+        use crate::schedule::{Interleaved, OneFOneBKp};
+        let (cluster, model, table) = fixture("A");
+        let nl = model.num_layers();
+        let mut plan = Plan {
+            stages: vec![
+                Stage { layers: (0, nl / 2), devices: vec![0], alloc: vec![8], kp: 1 },
+                Stage { layers: (nl / 2, nl), devices: vec![1], alloc: vec![8], kp: 1 },
+            ],
+            microbatch: 8,
+            num_micro: 8,
+        };
+        plan.apply_default_kp();
+        let il_sched = Schedule::for_sim(&plan, &model, &Interleaved { virtual_per_device: 2 });
+        il_sched.validate().unwrap();
+        let il = price_schedule(&il_sched, &table, &cluster, &model, &plan);
+        let one = price_schedule(
+            &Schedule::for_sim(&plan, &model, &OneFOneBKp),
+            &table,
+            &cluster,
+            &model,
+            &plan,
+        );
+        assert!((il.round_latency - one.round_latency).abs() < 1e-9 * one.round_latency);
+        assert_eq!(il.peak_inflight, one.peak_inflight);
     }
 
     #[test]

@@ -39,7 +39,7 @@ fn opts(steps: usize) -> TrainOpts {
         seed: 7,
         emulate: None,
         log_every: 0,
-        initial_params: None,
+        ..Default::default()
     }
 }
 

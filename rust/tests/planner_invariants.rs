@@ -55,7 +55,9 @@ fn prop_plans_always_validate_and_fit_memory() {
                     out.plan
                         .validate(model, cluster)
                         .map_err(|e| format!("invalid plan: {e:#}"))?;
-                    for (d, used) in plan_peak_memory(model, cfg, &out.plan) {
+                    for (d, used) in
+                        plan_peak_memory(model, cfg, &out.plan, asteroid::schedule::DEFAULT_POLICY)
+                    {
                         if used > cluster.devices[d].mem_bytes {
                             return Err(format!(
                                 "memory violated on {d}: {used} > {}",

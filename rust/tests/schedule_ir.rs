@@ -12,7 +12,10 @@ use asteroid::model::{Layer, ModelDesc};
 use asteroid::planner::cost::{plan_steps, round_latency};
 use asteroid::planner::plan::{Plan, Stage};
 use asteroid::profiler::ProfileTable;
-use asteroid::schedule::{GpipeFillDrain, OneFOneBKp, Schedule, SchedulePolicy, Task};
+use asteroid::schedule::{
+    builtin_policies, diff, ComputeOp, GpipeFillDrain, OneFOneBKp, Schedule, SchedulePolicy,
+    Task,
+};
 use asteroid::sim::simulate_round;
 
 /// A model of `n` identical layers: equal splits give *exactly* equal
@@ -50,7 +53,7 @@ fn chain_plan(model: &ModelDesc, stages: usize, microbatch: usize, num_micro: us
 #[test]
 fn task_lists_dependency_valid_across_grid() {
     let model = uniform_model(24);
-    let policies: [&dyn SchedulePolicy; 2] = [&OneFOneBKp, &GpipeFillDrain];
+    let policies: [&'static dyn SchedulePolicy; 4] = builtin_policies();
     for &stages in &[1usize, 2, 3, 4] {
         for &m in &[1usize, 2, 4, 8] {
             for &kp_override in &[0usize, 1, 2, m] {
@@ -105,9 +108,72 @@ fn grid_includes_replicated_stages() {
             num_micro: m,
         };
         plan.apply_default_kp();
-        for policy in [&OneFOneBKp as &dyn SchedulePolicy, &GpipeFillDrain] {
+        for policy in builtin_policies() {
             Schedule::for_sim(&plan, &model, policy).validate().unwrap();
             Schedule::for_runtime(&plan, policy).validate().unwrap();
+        }
+    }
+}
+
+/// Satellite property: for every policy over an (n_micros × K_p) grid,
+/// the emitted order's in-flight activation peak equals exactly what
+/// `effective_kp` promises — the value Eq. 3 memory accounting charges.
+#[test]
+fn inflight_peak_equals_effective_kp_for_every_policy() {
+    for policy in builtin_policies() {
+        for n in [1usize, 2, 3, 5, 8, 13] {
+            for kp in 1..=(n + 2) {
+                let micros: Vec<usize> = (0..n).collect();
+                let ops = policy.compute_order(&micros, kp);
+                let mut cur = 0usize;
+                let mut peak = 0usize;
+                for op in &ops {
+                    match op {
+                        ComputeOp::Fwd(_) => {
+                            cur += 1;
+                            peak = peak.max(cur);
+                        }
+                        ComputeOp::Bwd(_) => cur -= 1,
+                        ComputeOp::BwdW(_) => {}
+                    }
+                }
+                assert_eq!(
+                    peak,
+                    policy.effective_kp(kp, n),
+                    "{}: n={n} kp={kp}",
+                    policy.name()
+                );
+            }
+        }
+    }
+}
+
+/// Satellite property: `schedule::diff` of a policy with itself is
+/// empty — recovery machinery never replays or retasks anything when
+/// the schedule did not change, whatever the policy.
+#[test]
+fn diff_of_policy_with_itself_is_empty() {
+    let model = uniform_model(24);
+    for policy in builtin_policies() {
+        for &m in &[2usize, 4, 8] {
+            let plan = chain_plan(&model, 3, 4, m);
+            let a = Schedule::for_sim(&plan, &model, policy);
+            let b = Schedule::for_sim(&plan, &model, policy);
+            let d = diff(&a, &b);
+            assert!(
+                d.removed.is_empty()
+                    && d.added.is_empty()
+                    && d.retasked.is_empty()
+                    && d.replay_micros.is_empty(),
+                "{}: m={m}",
+                policy.name()
+            );
+            assert_eq!(d.unchanged.len(), a.timelines.len());
+            // Same for the runtime sharding the replay path diffs.
+            let ra = Schedule::for_runtime(&plan, policy);
+            let rb = Schedule::for_runtime(&plan, policy);
+            let rd = diff(&ra, &rb);
+            assert!(rd.retasked.is_empty() && rd.replay_micros.is_empty());
         }
     }
 }

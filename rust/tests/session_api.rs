@@ -7,7 +7,7 @@ use asteroid::config::{ClusterSpec, TrainConfig};
 use asteroid::planner::baselines::{self, Method};
 use asteroid::planner::{AllocOpts, Planner, PlannerConfig};
 use asteroid::profiler::ProfileTable;
-use asteroid::schedule::GpipeFillDrain;
+use asteroid::schedule::{GpipeFillDrain, Task, ZeroBubbleH1, DEFAULT_POLICY};
 use asteroid::session::{FaultSpec, Session, SimBackend};
 
 fn builder(env: &str) -> asteroid::session::SessionBuilder {
@@ -73,27 +73,33 @@ fn unified_dispatch_matches_legacy_planner_functions() {
     let legacy: Vec<(Method, asteroid::planner::Plan)> = vec![
         (
             Method::DataParallel,
-            baselines::plan_dp(&table, &cluster, &model, &cfg, AllocOpts::default())
+            baselines::plan_dp(&table, &cluster, &model, &cfg, AllocOpts::default(), DEFAULT_POLICY)
                 .unwrap()
                 .plan,
         ),
         (
             Method::Eddl,
-            baselines::plan_dp(&table, &cluster, &model, &cfg, AllocOpts::default())
+            baselines::plan_dp(&table, &cluster, &model, &cfg, AllocOpts::default(), DEFAULT_POLICY)
                 .unwrap()
                 .plan,
         ),
         (
             Method::GpipePP,
-            baselines::plan_gpipe_pp(&table, &cluster, &model, &cfg).unwrap().plan,
+            baselines::plan_gpipe_pp(&table, &cluster, &model, &cfg, DEFAULT_POLICY)
+                .unwrap()
+                .plan,
         ),
         (
             Method::PipeDream,
-            baselines::plan_pipedream(&table, &cluster, &model, &cfg).unwrap().plan,
+            baselines::plan_pipedream(&table, &cluster, &model, &cfg, DEFAULT_POLICY)
+                .unwrap()
+                .plan,
         ),
         (
             Method::Dapple,
-            baselines::plan_dapple(&table, &cluster, &model, &cfg).unwrap().plan,
+            baselines::plan_dapple(&table, &cluster, &model, &cfg, DEFAULT_POLICY)
+                .unwrap()
+                .plan,
         ),
     ];
     for (m, expected) in legacy {
@@ -108,13 +114,16 @@ fn unified_dispatch_matches_legacy_planner_functions() {
     }
 
     // Asteroid == Custom(default config) == Baseline(Asteroid).
-    let a = Planner::Asteroid.plan(&table, &cluster, &model, &cfg).unwrap().plan;
+    let a = Planner::Asteroid
+        .plan(&table, &cluster, &model, &cfg, DEFAULT_POLICY)
+        .unwrap()
+        .plan;
     let b = Planner::Baseline(Method::Asteroid)
-        .plan(&table, &cluster, &model, &cfg)
+        .plan(&table, &cluster, &model, &cfg, DEFAULT_POLICY)
         .unwrap()
         .plan;
     let c = Planner::Custom(PlannerConfig::default())
-        .plan(&table, &cluster, &model, &cfg)
+        .plan(&table, &cluster, &model, &cfg, DEFAULT_POLICY)
         .unwrap()
         .plan;
     assert_eq!(a, b);
@@ -161,13 +170,77 @@ fn sim_report_is_fully_populated() {
 
 #[test]
 fn schedule_policy_is_a_session_property() {
-    let one = builder("B").build().unwrap();
-    let gpipe = builder("B").schedule(&GpipeFillDrain).build().unwrap();
-    assert_eq!(one.plan(), gpipe.plan(), "policy must not change the plan");
+    // The policy now governs *planning* as well as pricing: a
+    // fill-drain session's memory budgets charge O(M) residency, so
+    // its plan may legitimately differ from the 1F1B session's — what
+    // must hold is that each session plans, validates and executes
+    // under its own policy end-to-end.
+    // Small round (M = 4) so fill-drain's O(M) residency fits env D
+    // comfortably — the point is the threading, not an OOM corner.
+    let mk = |env: &str| {
+        Session::builder()
+            .model("mobilenetv2")
+            .cluster(ClusterSpec::env(env, 100.0).unwrap())
+            .train(TrainConfig::new(64, 16))
+    };
+    let one = mk("D").build().unwrap();
+    let gpipe = mk("D").schedule(&GpipeFillDrain).build().unwrap();
     assert_ne!(one.schedule().policy, gpipe.schedule().policy);
+    assert_eq!(gpipe.schedule().policy, "gpipe-fill-drain");
+    assert_eq!(gpipe.outcome().policy.name(), "gpipe-fill-drain");
+    gpipe.schedule().validate().unwrap();
+    // Every timeline of the fill-drain schedule buffers its whole load.
+    for tl in &gpipe.schedule().timelines {
+        assert_eq!(tl.kp, gpipe.plan().num_micro);
+    }
     let t_one = one.run(&mut SimBackend::default()).unwrap();
     let t_gp = gpipe.run(&mut SimBackend::default()).unwrap();
     assert!(t_one.throughput > 0.0 && t_gp.throughput > 0.0);
+}
+
+#[test]
+fn zero_bubble_session_plans_executes_and_replays_end_to_end() {
+    // Acceptance check: `.schedule(&ZeroBubbleH1)` governs planning,
+    // sim execution and fault replay — no DEFAULT_POLICY fallback
+    // anywhere on the path.
+    let zb = Session::builder()
+        .model("efficientnet-b1")
+        .cluster(ClusterSpec::env("D", 100.0).unwrap())
+        .train(TrainConfig::new(256, 16))
+        .schedule(&ZeroBubbleH1)
+        .steps(6)
+        .fault(FaultSpec::last_planned().after(3))
+        .build()
+        .unwrap();
+    assert_eq!(zb.schedule().policy, "zb-h1");
+    assert_eq!(zb.outcome().schedule.policy, "zb-h1");
+    // The planned schedule really is split-backward: one BwdW per Bwd.
+    let n_bwd: usize = zb
+        .schedule()
+        .timelines
+        .iter()
+        .flat_map(|tl| tl.tasks.iter())
+        .filter(|t| matches!(t, Task::Bwd { .. }))
+        .count();
+    let n_bww: usize = zb
+        .schedule()
+        .timelines
+        .iter()
+        .flat_map(|tl| tl.tasks.iter())
+        .filter(|t| matches!(t, Task::BwdW { .. }))
+        .count();
+    assert!(n_bwd > 0);
+    assert_eq!(n_bwd, n_bww);
+
+    let report = zb.run(&mut SimBackend::default()).unwrap();
+    assert_eq!(report.schedule.policy, "zb-h1");
+    assert!(report.throughput > 0.0);
+    // The fault replay diffed zb-h1 timelines and priced the recovered
+    // round under zb-h1.
+    assert_eq!(report.recoveries.len(), 1);
+    let r = &report.recoveries[0].report;
+    assert!(!r.replay_micros.is_empty());
+    assert!(r.new_throughput > 0.0 && r.refill_s > 0.0);
 }
 
 // ------------------------------------------------- fault via FaultSpec
