@@ -14,8 +14,8 @@ use asteroid::config::ClusterSpec;
 use asteroid::model::zoo;
 use asteroid::planner::plan::{Plan, Stage};
 use asteroid::profiler::ProfileTable;
-use asteroid::schedule::{builtin_policies, Schedule};
-use asteroid::sim::{price_schedule, simulate_round};
+use asteroid::schedule::{builtin_policies, policy_by_name, Schedule};
+use asteroid::sim::{price_policy, price_schedule, simulate_round};
 use asteroid::util::bench::Bencher;
 
 fn main() {
@@ -60,12 +60,13 @@ fn main() {
 
     // Deterministic per-policy quality rows: priced round latency and
     // mean bubble fraction over the plan's devices — the numbers whose
-    // trajectory (zb-h1 below 1f1b-kp, gpipe above) later PRs watch.
+    // trajectory (async below zb-h1 below 1f1b-kp, gpipe above) later
+    // PRs watch.  Priced through `price_policy` so bounded-staleness
+    // policies report their steady-state figures.
     let policy_rows: Vec<String> = builtin_policies()
         .iter()
         .map(|policy| {
-            let sched = Schedule::for_sim(&plan, &model, *policy);
-            let sim = price_schedule(&sched, &table, &cluster, &model, &plan);
+            let sim = price_policy(&table, &cluster, &model, &plan, *policy);
             let devs = plan.devices();
             let mean_bubble: f64 =
                 devs.iter().map(|&d| sim.bubble_fraction[d]).sum::<f64>() / devs.len() as f64;
@@ -75,6 +76,26 @@ fn main() {
                 policy.name(),
                 sim.round_latency,
                 mean_bubble
+            )
+        })
+        .collect();
+
+    // Staleness sweep: how the bounded-staleness budget trades stash
+    // memory for bubble elimination on the same plan (deterministic —
+    // priced, not timed).
+    let staleness_rows: Vec<String> = [0usize, 1, 2, 3]
+        .iter()
+        .map(|&s| {
+            let policy = policy_by_name(&format!("async:{s}")).unwrap();
+            let sim = price_policy(&table, &cluster, &model, &plan, policy);
+            format!(
+                "    {{\"policy\": \"{}\", \"max_staleness\": {s}, \
+                 \"round_latency_s\": {:e}, \"round_bubble_ratio\": {:.6}, \
+                 \"rounds_priced\": {}}}",
+                policy.name(),
+                sim.round_latency,
+                sim.round_bubble_ratio,
+                sim.rounds_priced
             )
         })
         .collect();
@@ -94,9 +115,11 @@ fn main() {
         .collect();
     let json = format!(
         "{{\n  \"bench\": \"schedule\",\n  \"shape\": \"8dev_8stage_m64\",\n  \
-         \"results\": [\n{}\n  ],\n  \"policies\": [\n{}\n  ]\n}}\n",
+         \"results\": [\n{}\n  ],\n  \"policies\": [\n{}\n  ],\n  \
+         \"staleness\": [\n{}\n  ]\n}}\n",
         rows.join(",\n"),
-        policy_rows.join(",\n")
+        policy_rows.join(",\n"),
+        staleness_rows.join(",\n")
     );
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_schedule.json");
     match std::fs::write(path, &json) {

@@ -27,7 +27,6 @@ use crate::planner::dp::{plan_hpp, PlannerConfig};
 use crate::planner::plan::Plan;
 use crate::profiler::ProfileTable;
 use crate::schedule::{diff, Schedule, SchedulePolicy, ScheduleDiff};
-use crate::sim::price_schedule;
 
 /// How much slower the planner re-run is in the paper's heavy-
 /// rescheduling baseline than our in-process run: the baseline re-plans
@@ -136,7 +135,9 @@ fn recovery_diff(
 
 /// Price one round of `plan` under the session's policy (what
 /// `new_throughput`/`refill_s` report — the schedule the recovered
-/// pipeline actually runs).
+/// pipeline actually runs).  Routed through `sim::price_policy`, so a
+/// bounded-staleness session's recovered throughput is its steady-state
+/// rate, same as everywhere else in the stack.
 fn price_round(
     table: &ProfileTable,
     cluster: &ClusterSpec,
@@ -144,8 +145,7 @@ fn price_round(
     plan: &Plan,
     policy: &dyn SchedulePolicy,
 ) -> crate::sim::SimResult {
-    let sched = Schedule::for_sim(plan, model, policy);
-    price_schedule(&sched, table, cluster, model, plan)
+    crate::sim::price_policy(table, cluster, model, plan, policy)
 }
 
 /// Heavy rescheduling baseline after `failed_dev` exits.
@@ -399,6 +399,47 @@ mod tests {
         );
         // The recovered round is priced under the session's policy.
         assert!(gp.new_throughput > 0.0 && gp.refill_s > 0.0);
+    }
+
+    #[test]
+    fn async_session_recovery_replays_the_full_in_flight_window() {
+        // A bounded-staleness session has K_p + sigma micros in flight
+        // when a device dies — the schedule diff must re-inject that
+        // whole widened window, not the 1F1B K_p prefix.
+        use crate::schedule::AsyncPipe;
+        let (cluster, model, table, cfg, plan) = setup();
+        let hb = HeartbeatCfg::default();
+        let failed = plan.devices()[0];
+        let one = lightweight_replay(
+            &table, &cluster, &model, &cfg, &plan, failed, &hb, DEFAULT_POLICY,
+        )
+        .unwrap();
+        static ASYNC2: AsyncPipe = AsyncPipe { max_staleness: 2 };
+        let asy = lightweight_replay(
+            &table, &cluster, &model, &cfg, &plan, failed, &hb, &ASYNC2,
+        )
+        .unwrap();
+        let stage = plan
+            .stages
+            .iter()
+            .find(|s| s.devices.contains(&failed))
+            .unwrap();
+        let g = stage.devices.len();
+        let slot = stage.devices.iter().position(|&d| d == failed).unwrap();
+        let assigned = (0..plan.num_micro).filter(|m| m % g == slot).count();
+        // Warm-up prefix of the failed device's round-robin timeline
+        // under the widened window (K_p + sigma forwards admitted
+        // before its first backward), clamped to its assigned load.
+        let window = (stage.kp + 2).min(assigned);
+        assert_eq!(asy.replay_micros.len(), window);
+        assert!(
+            asy.replay_micros.len() >= one.replay_micros.len(),
+            "async replay {} < 1f1b replay {}",
+            asy.replay_micros.len(),
+            one.replay_micros.len()
+        );
+        // The recovered round is priced at the async steady-state rate.
+        assert!(asy.new_throughput > 0.0 && asy.refill_s > 0.0);
     }
 
     #[test]

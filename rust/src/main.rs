@@ -2,7 +2,7 @@
 //!
 //! ```text
 //! asteroid plan     --model <zoo|lm|cnn> --env B --mbps 100 [--method dp|pp|...]
-//! asteroid simulate --model <zoo|lm|cnn> --env B --mbps 100 [--method M --schedule gpipe]
+//! asteroid simulate --model <zoo|lm|cnn> --env B --mbps 100 [--method M --schedule gpipe|zb-h1|async:<s>]
 //! asteroid train    --model lm|cnn --env B [--steps N --lr X --emulate]
 //! asteroid replay   --model effnet --env D --fail <device-id>
 //! asteroid envs
@@ -46,7 +46,8 @@ fn policy_from(args: &Args) -> Result<&'static dyn SchedulePolicy> {
     let name = args.str_or("schedule", "1f1b");
     policy_by_name(&name).ok_or_else(|| {
         anyhow::anyhow!(
-            "unknown schedule policy {name:?} (expected one of: {})",
+            "unknown schedule policy {name:?} (expected one of: {}, or async:<s> \
+             for a bounded-staleness budget of s)",
             builtin_policies()
                 .iter()
                 .map(|p| p.name())
@@ -227,7 +228,7 @@ fn cmd_envs() -> Result<()> {
     println!("zoo models: efficientnet-b1, mobilenetv2, resnet50, bert-small");
     println!("AOT models: lm, cnn (run `make artifacts`)");
     println!(
-        "schedules : {}  (--schedule)",
+        "schedules : {}, async:<s>  (--schedule)",
         builtin_policies()
             .iter()
             .map(|p| p.name())

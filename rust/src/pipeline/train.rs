@@ -181,11 +181,20 @@ mod live {
             };
             groups.push(GroupComm::new(g, secs_per_byte));
             for (slot, &dev) in stage.devices.iter().enumerate() {
+                // Bounded-staleness policies carry their stash-ring
+                // depth (the timeline's effective admission window)
+                // into the worker; synchronous policies pass 0.
+                let stash_slots = if opts.policy.max_staleness() > 0 {
+                    sched.timeline_at(p, slot).map(|tl| tl.kp).unwrap_or(0)
+                } else {
+                    0
+                };
                 let spec = WorkerSpec {
                     stage: p,
                     layers: stage.layers,
                     slot,
                     script: sched.compute_script(p, slot),
+                    stash_slots,
                     num_micro: m_total,
                     is_first: p == 0,
                     is_last: p + 1 == n_stages,

@@ -28,7 +28,7 @@ use crate::model::from_manifest::ManifestModel;
 use crate::pipeline::channel::{Rx, Tx};
 use crate::pipeline::collective::GroupComm;
 use crate::pipeline::optimizer::{Optimizer, OptimizerCfg};
-use crate::runtime::{init_layer_params, LayerParams, Runtime, Tensor};
+use crate::runtime::{init_layer_params, LayerParams, ParamStash, Runtime, Tensor};
 use crate::schedule::ComputeOp;
 use crate::util::rng::Rng;
 
@@ -76,6 +76,15 @@ pub struct WorkerSpec {
     /// `Schedule::compute_script(stage, slot)` — the single source of
     /// 1F1B/K_p ordering.
     pub script: Vec<ComputeOp>,
+    /// Bounded-staleness weight-stash ring depth (the schedule's
+    /// effective admission window, K_p + sigma).  0 = synchronous
+    /// policy: gradients accumulate across the round and no stash
+    /// exists.  > 0 switches the worker to version-tagged parameter
+    /// reads/writes: one update per backward, each backward computed
+    /// against the snapshot its forward read (`runtime::ParamStash`),
+    /// and the round barrier reconciling replicas by parameter
+    /// averaging instead of gradient AllReduce.
+    pub stash_slots: usize,
     pub num_micro: usize,
     pub is_first: bool,
     pub is_last: bool,
@@ -153,54 +162,56 @@ fn worker_loop(
         .flat_map(|p| p.values.iter().map(|t| t.elements()))
         .collect();
     let mut opt = Optimizer::new(spec.opt, &sizes);
+    let async_updates = spec.stash_slots > 0;
+    // The stash pins the already-converted parameter *literals* per
+    // weight version, so a version-tagged backward never re-pays the
+    // tensor-to-literal conversion (the engine's documented top
+    // hot-path cost).
+    let mut stash: ParamStash<Vec<Vec<xla::Literal>>> = ParamStash::new(spec.stash_slots);
+    let mut version: u64 = 0;
 
-    // Parameter literals are cached across the round and rebuilt only
-    // after the optimizer step: converting ~MBs of weights per layer on
-    // EVERY micro-batch execution was the engine's top hot-path cost
-    // (EXPERIMENTS.md §Perf).
-    let build_lits = |params: &[LayerParams]| -> Result<Vec<Vec<xla::Literal>>> {
-        params
-            .iter()
-            .map(|p| p.values.iter().map(|t| t.to_literal()).collect())
-            .collect()
-    };
-    let mut lits = build_lits(&params)?;
+    let mut lits = Arc::new(build_lits(&params)?);
 
     loop {
-        let loss_sum = run_round(spec, layers, &rt, &mut params, &lits, rx, next, prev)?;
+        let loss_sum = run_round(
+            spec, layers, &rt, &mut params, &mut lits, &mut opt, &sizes, &mut stash,
+            &mut version, rx, next, prev,
+        )?;
 
-        // ---- gradient AllReduce (sum across replicas) + scale by 1/M.
-        let flat: Vec<f32> = params
-            .iter()
-            .flat_map(|p| p.grads.iter().flat_map(|g| g.as_f32().unwrap().iter().copied()))
-            .collect();
-        let reduced = group.allreduce_sum(&flat);
-        let scale = 1.0 / spec.num_micro as f32;
-
-        // ---- optimizer step over (params, scaled grads).
-        {
-            let mut grads_scaled = reduced;
-            for v in &mut grads_scaled {
-                *v *= scale;
-            }
-            let mut p_refs: Vec<&mut [f32]> = Vec::new();
-            for p in &mut params {
-                for t in &mut p.values {
-                    p_refs.push(t.as_f32_mut()?);
+        if async_updates {
+            // Bounded staleness already applied one update per backward
+            // inside the round; the round barrier is the sigma-bounded
+            // group sync.  Replicas of a DP group drifted micro-by-micro
+            // (no per-micro gradient AllReduce), so reconcile by
+            // parameter averaging instead of gradient summing.
+            if group.size() > 1 {
+                let red = group.allreduce_sum(&flat_values(&params));
+                let g = group.size() as f32;
+                let mut off = 0;
+                for p in &mut params {
+                    for t in &mut p.values {
+                        for v in t.as_f32_mut()? {
+                            *v = red[off] / g;
+                            off += 1;
+                        }
+                    }
                 }
+                lits = Arc::new(build_lits(&params)?);
+                // The averaging rewrote the weights out-of-band: the
+                // next round's forwards must not alias the pre-average
+                // snapshot recorded under the same version number.
+                stash.invalidate_last();
             }
-            let mut g_refs: Vec<&[f32]> = Vec::new();
-            let mut off = 0;
-            for &n in &sizes {
-                g_refs.push(&grads_scaled[off..off + n]);
-                off += n;
+        } else {
+            // ---- gradient AllReduce (sum across replicas), one
+            // optimizer step over the 1/M-scaled round gradient.
+            let reduced = group.allreduce_sum(&flat_grads(&params));
+            apply_update(&mut params, &sizes, &mut opt, reduced, 1.0 / spec.num_micro as f32)?;
+            for p in &mut params {
+                p.zero_grads();
             }
-            opt.step(&mut p_refs, &g_refs);
+            lits = Arc::new(build_lits(&params)?);
         }
-        for p in &mut params {
-            p.zero_grads();
-        }
-        lits = build_lits(&params)?;
 
         let assigned = spec.script.iter().filter(|op| op.is_fwd()).count();
         report
@@ -260,24 +271,96 @@ fn pump(
     Ok(())
 }
 
+/// Convert the live parameter values to cached XLA literals.
+/// Parameter literals are cached across weight versions and rebuilt
+/// only after an optimizer step: converting ~MBs of weights per layer
+/// on EVERY micro-batch execution was the engine's top hot-path cost
+/// (EXPERIMENTS.md §Perf).
+fn build_lits(params: &[LayerParams]) -> Result<Vec<Vec<xla::Literal>>> {
+    params
+        .iter()
+        .map(|p| p.values.iter().map(|t| t.to_literal()).collect())
+        .collect()
+}
+
+/// Flatten the accumulated gradient buffers (AllReduce order).
+fn flat_grads(params: &[LayerParams]) -> Vec<f32> {
+    params
+        .iter()
+        .flat_map(|p| p.grads.iter().flat_map(|g| g.as_f32().unwrap().iter().copied()))
+        .collect()
+}
+
+/// Flatten the live parameter values (parameter-averaging order).
+fn flat_values(params: &[LayerParams]) -> Vec<f32> {
+    params
+        .iter()
+        .flat_map(|p| p.values.iter().flat_map(|t| t.as_f32().unwrap().iter().copied()))
+        .collect()
+}
+
+/// One optimizer step over the live parameters with `grads` scaled by
+/// `scale` — the shared write path of the per-round (sync) and
+/// per-micro (bounded-staleness) updates.
+fn apply_update(
+    params: &mut [LayerParams],
+    sizes: &[usize],
+    opt: &mut Optimizer,
+    mut grads: Vec<f32>,
+    scale: f32,
+) -> Result<()> {
+    for v in &mut grads {
+        *v *= scale;
+    }
+    let mut p_refs: Vec<&mut [f32]> = Vec::new();
+    for p in params.iter_mut() {
+        for t in &mut p.values {
+            p_refs.push(t.as_f32_mut()?);
+        }
+    }
+    let mut g_refs: Vec<&[f32]> = Vec::new();
+    let mut off = 0;
+    for &n in sizes {
+        g_refs.push(&grads[off..off + n]);
+        off += n;
+    }
+    opt.step(&mut p_refs, &g_refs);
+    Ok(())
+}
+
 /// Process one HPP-Round by executing the worker's schedule script;
 /// returns the loss sum (head stage only).
+///
+/// Under a bounded-staleness script (`spec.stash_slots` > 0) this is
+/// where the Schedule IR's weight-version tags become real: every
+/// `Fwd` pins the literals of the version it read into the bounded
+/// stash ring (an `Arc` clone of the cached `lits` — no conversion),
+/// every `Bwd` computes against exactly that snapshot and then applies
+/// its update to the live weights (advancing the version), so a
+/// forward may read weights at most sigma updates behind the frontier
+/// — never more, or `ParamStash::record` reports the overrun.
 #[allow(clippy::too_many_arguments)]
 fn run_round(
     spec: &WorkerSpec,
     layers: &[crate::model::from_manifest::ManifestLayer],
     rt: &Runtime,
     params: &mut [LayerParams],
-    lits: &[Vec<xla::Literal>],
+    lits: &mut Arc<Vec<Vec<xla::Literal>>>,
+    opt: &mut Optimizer,
+    sizes: &[usize],
+    stash: &mut ParamStash<Vec<Vec<xla::Literal>>>,
+    version: &mut u64,
     rx: &Rx<Msg>,
     next: &[Tx<Msg>],
     prev: &[Tx<Msg>],
 ) -> Result<f64> {
+    let async_updates = spec.stash_slots > 0;
     let mut acts: BTreeMap<usize, Tensor> = BTreeMap::new();
     let mut grads_in: BTreeMap<usize, Tensor> = BTreeMap::new();
     let mut targets: BTreeMap<usize, Tensor> = BTreeMap::new();
-    // Per-micro stash of layer inputs (for the rematerialising BP).
-    let mut stash: BTreeMap<usize, Vec<Tensor>> = BTreeMap::new();
+    // Per-micro stash of layer inputs (for the rematerialising BP) —
+    // distinct from the weight-version `ParamStash`.
+    let mut input_stash: BTreeMap<usize, Vec<Tensor>> = BTreeMap::new();
     // Split-backward scripts (zero-bubble policies): the AOT backward
     // executable computes input- and weight-gradients fused, so both
     // are accumulated at the Bwd op and the scheduled BwdW is a
@@ -299,57 +382,96 @@ fn run_round(
         match *op {
             ComputeOp::Fwd(m) => {
                 // Block until this op's inputs are in (the script order
-                // already respects 1F1B and the K_p window).
+                // already respects 1F1B and the K_p/staleness window).
                 while !acts.contains_key(&m) {
                     pump(rx, &mut acts, &mut grads_in, &mut targets)?;
+                }
+                // Version-tagged read: pin the literals this forward
+                // uses (an Arc clone of the cached conversion — free),
+                // so its backward runs against the same version after
+                // intervening per-micro updates.
+                if async_updates {
+                    stash.record(m, *version, || lits.clone())?;
                 }
                 let x = acts.remove(&m).unwrap();
                 if head_is_here {
                     let n = layers.len();
                     let (cur, inputs) =
                         forward_through(&layers[..n - 1], rt, &lits[..n - 1], x)?;
-                    stash.insert(m, inputs);
+                    input_stash.insert(m, inputs);
                     head_acts.insert(m, cur);
                 } else {
-                    let (out, inputs) = forward_through(layers, rt, lits, x)?;
-                    stash.insert(m, inputs);
+                    let (out, inputs) = forward_through(layers, rt, &lits[..], x)?;
+                    input_stash.insert(m, inputs);
                     let bytes = out.byte_len();
                     next[m % next.len()].send(bytes, Msg::Act { micro: m, t: out })?;
                 }
             }
             ComputeOp::Bwd(m) => {
-                let gx = if head_is_here {
-                    // Fused head FP+BP on the stashed boundary
-                    // activation, then BP through the stashed layers.
-                    while !targets.contains_key(&m) {
-                        pump(rx, &mut acts, &mut grads_in, &mut targets)?;
+                let gx = {
+                    // Version-tagged weights for this backward: the
+                    // stashed literals its forward read (bounded
+                    // staleness), or the round-constant literals (sync).
+                    // Either way pre-converted — no per-micro
+                    // tensor-to-literal cost here.
+                    let snap = if async_updates {
+                        Some(
+                            stash
+                                .take(m)
+                                .with_context(|| format!("no stashed weights for micro {m}"))?,
+                        )
+                    } else {
+                        None
+                    };
+                    let bwd_lits: &[Vec<xla::Literal>] = match &snap {
+                        Some((_, weights)) => &weights[..],
+                        None => &lits[..],
+                    };
+                    if head_is_here {
+                        // Fused head FP+BP on the stashed boundary
+                        // activation, then BP through the stashed layers.
+                        while !targets.contains_key(&m) {
+                            pump(rx, &mut acts, &mut grads_in, &mut targets)?;
+                        }
+                        let tgt = targets.remove(&m).unwrap();
+                        let cur = head_acts
+                            .remove(&m)
+                            .with_context(|| format!("no head activation for micro {m}"))?;
+                        let inputs = input_stash
+                            .remove(&m)
+                            .with_context(|| format!("no stashed inputs for micro {m}"))?;
+                        let (loss, gx) =
+                            head_backward(layers, rt, params, bwd_lits, cur, &tgt, &inputs)?;
+                        loss_sum += loss as f64;
+                        gx
+                    } else {
+                        while !grads_in.contains_key(&m) {
+                            pump(rx, &mut acts, &mut grads_in, &mut targets)?;
+                        }
+                        let g = grads_in.remove(&m).unwrap();
+                        let inputs = input_stash
+                            .remove(&m)
+                            .with_context(|| format!("no stashed inputs for micro {m}"))?;
+                        backward_through(layers, rt, params, bwd_lits, &inputs, g)?
                     }
-                    let tgt = targets.remove(&m).unwrap();
-                    let cur = head_acts
-                        .remove(&m)
-                        .with_context(|| format!("no head activation for micro {m}"))?;
-                    let inputs = stash
-                        .remove(&m)
-                        .with_context(|| format!("no stashed inputs for micro {m}"))?;
-                    let (loss, gx) =
-                        head_backward(layers, rt, params, lits, cur, &tgt, &inputs)?;
-                    loss_sum += loss as f64;
-                    gx
-                } else {
-                    while !grads_in.contains_key(&m) {
-                        pump(rx, &mut acts, &mut grads_in, &mut targets)?;
-                    }
-                    let g = grads_in.remove(&m).unwrap();
-                    let inputs = stash
-                        .remove(&m)
-                        .with_context(|| format!("no stashed inputs for micro {m}"))?;
-                    backward_through(layers, rt, params, lits, &inputs, g)?
                 };
                 bwd_done.insert(m);
                 if !spec.is_first {
                     let t = gx.context("non-first stage must produce an input gradient")?;
                     let bytes = t.byte_len();
                     prev[m % prev.len()].send(bytes, Msg::Grad { micro: m, t })?;
+                }
+                // Version-tagged write: a bounded-staleness worker
+                // applies this micro's gradient immediately, advancing
+                // the weight version the next forward reads.
+                if async_updates {
+                    let grads = flat_grads(params);
+                    apply_update(params, sizes, opt, grads, 1.0 / spec.num_micro as f32)?;
+                    for p in params.iter_mut() {
+                        p.zero_grads();
+                    }
+                    *version += 1;
+                    *lits = Arc::new(build_lits(params)?);
                 }
             }
             ComputeOp::BwdW(m) => {

@@ -27,11 +27,21 @@ pub struct AllocOpts {
     pub heterogeneity_aware: bool,
     /// Run phase 2 (straggler offloading).
     pub straggler_offload: bool,
+    /// Extra per-device stage-weight copies charged against the Eq. 3
+    /// budget — the weight-version stash of a bounded-staleness
+    /// schedule policy (0 for synchronous policies).  The planner
+    /// derives it from `SchedulePolicy::weight_stash_copies`.
+    pub stash_copies: usize,
 }
 
 impl Default for AllocOpts {
     fn default() -> Self {
-        AllocOpts { memory_aware: true, heterogeneity_aware: true, straggler_offload: true }
+        AllocOpts {
+            memory_aware: true,
+            heterogeneity_aware: true,
+            straggler_offload: true,
+            stash_copies: 0,
+        }
     }
 }
 
@@ -59,7 +69,7 @@ pub fn allocate_microbatch(
         .iter()
         .map(|&d| {
             if opts.memory_aware {
-                max_batch_under_budget(model, cfg, i, j, kp, &cluster.devices[d])
+                max_batch_under_budget(model, cfg, i, j, kp, opts.stash_copies, &cluster.devices[d])
             } else {
                 usize::MAX
             }

@@ -28,8 +28,13 @@ pub fn plan_dp(
     let devices: Vec<usize> = (0..cluster.n()).collect();
     let nl = model.num_layers();
     // DP's warm-up depth is 1; the policy decides what that means for
-    // residency (fill-drain still buffers the whole round).
+    // residency (fill-drain still buffers the whole round, bounded
+    // staleness adds its weight-stash copies).
     let kp = 1;
+    let opts = AllocOpts {
+        stash_copies: policy.weight_stash_copies(kp, cfg.num_microbatches()),
+        ..opts
+    };
     let alloc = allocate_microbatch(
         table,
         cluster,

@@ -130,6 +130,7 @@ pub fn plan_pipedream(
             memory_aware: false,
             heterogeneity_aware: false,
             straggler_offload: false,
+            ..AllocOpts::default()
         },
         comm_aware: false,
         max_stages: 8,
@@ -156,6 +157,7 @@ pub fn plan_dapple(
             memory_aware: false,
             heterogeneity_aware: false,
             straggler_offload: false,
+            ..AllocOpts::default()
         },
         comm_aware: true,
         max_stages: 8,

@@ -99,7 +99,7 @@ pub fn plan_steps(
 }
 
 /// Index of the dominant step: maximises the aligned total
-/// M*(E_f+E_b) + sum_{i<s}(E_f^i + E_b^i)   (the paper's
+/// `M*(E_f+E_b) + sum_{i<s}(E_f^i + E_b^i)` (the paper's
 /// fewest-bubbles criterion, cf. Eq. 11).
 pub fn dominant_step(steps: &[StepCost], m: usize) -> usize {
     let mut best = 0;

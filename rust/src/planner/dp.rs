@@ -153,10 +153,16 @@ pub fn plan_hpp(
         }
         let devices: Vec<usize> = order[ds..de].to_vec();
         // Memory budgets charge the policy's true in-flight residency
-        // (e.g. the whole round for fill-drain), not the raw warm-up.
+        // (e.g. the whole round for fill-drain), not the raw warm-up —
+        // plus the weight-version stash copies of a bounded-staleness
+        // policy (Eq. 3's fourth term).
         let eff_kp = pc.policy.effective_kp(kp, m);
+        let alloc_opts = AllocOpts {
+            stash_copies: pc.policy.weight_stash_copies(kp, m),
+            ..pc.alloc
+        };
         let result = allocate_microbatch(
-            table, cluster, model, cfg, i, j, &devices, b, eff_kp, pc.alloc,
+            table, cluster, model, cfg, i, j, &devices, b, eff_kp, alloc_opts,
         )
         .ok()
         .map(|alloc| {
@@ -261,31 +267,29 @@ pub fn plan_hpp(
             cluster.describe()
         );
     }
-    // Price each finalist's explicit schedule under the run's policy
-    // with the event-accurate executor (one Schedule build + pricing
-    // per finalist): sim_select ranks (plan, policy) pairs, so a
-    // zero-bubble or fill-drain run picks the stage split that is best
-    // *under that ordering*, not under an assumed 1F1B.  The winner's
-    // schedule is reused in the outcome instead of rebuilt.
-    let (best, prebuilt): (&QEntry, Option<Schedule>) = if pc.sim_select && finalists.len() > 1
-    {
+    // Price each finalist under the run's policy with the
+    // event-accurate executor: sim_select ranks (plan, policy) pairs,
+    // so a zero-bubble or fill-drain run picks the stage split that is
+    // best *under that ordering*, not under an assumed 1F1B.
+    // `sim::price_policy` prices bounded-staleness policies in steady
+    // state (multi-round, barrier-free), so an async run's finalists
+    // are ranked by the throughput it will actually sustain.
+    let best: &QEntry = if pc.sim_select && finalists.len() > 1 {
         let scored = finalists.iter().map(|e| {
             let plan = Plan { stages: e.stages.clone(), microbatch: b, num_micro: m };
-            let sched = Schedule::for_sim(&plan, model, pc.policy);
             let lat =
-                crate::sim::price_schedule(&sched, table, cluster, model, &plan).round_latency;
-            (lat, *e, sched)
+                crate::sim::price_policy(table, cluster, model, &plan, pc.policy).round_latency;
+            (lat, *e)
         });
-        let (_, e, sched) = scored
+        scored
             .min_by(|x, y| x.0.partial_cmp(&y.0).unwrap())
-            .unwrap();
-        (e, Some(sched))
+            .unwrap()
+            .1
     } else {
-        let e = *finalists
+        *finalists
             .iter()
             .min_by(|x, y| x.latency.partial_cmp(&y.latency).unwrap())
-            .unwrap();
-        (e, None)
+            .unwrap()
     };
 
     let plan = Plan {
@@ -294,7 +298,7 @@ pub fn plan_hpp(
         num_micro: m,
     };
     plan.validate(model, cluster)?;
-    let schedule = prebuilt.unwrap_or_else(|| Schedule::for_sim(&plan, model, pc.policy));
+    let schedule = Schedule::for_sim(&plan, model, pc.policy);
     let latency = best.latency;
     Ok(PlanOutcome {
         predicted_throughput: plan.samples_per_round() as f64 / latency,
@@ -474,6 +478,32 @@ mod tests {
             assert!(
                 used <= cluster.devices[d].mem_bytes,
                 "device {d}: gpipe-priced {used} > {}",
+                cluster.devices[d].mem_bytes
+            );
+        }
+    }
+
+    #[test]
+    fn async_planning_respects_stash_augmented_budget() {
+        // Bounded staleness widens the activation window (K_p + sigma)
+        // and pins weight-stash copies: the planner must charge both,
+        // and the chosen plan must fit them on every device.
+        use crate::schedule::AsyncPipe;
+        let model = zoo::mobilenet_v2();
+        let cluster = ClusterSpec::env("D", 100.0).unwrap();
+        let table = ProfileTable::new(&cluster, &model);
+        let cfg = TrainConfig::new(128, 16);
+        static ASYNC2: AsyncPipe = AsyncPipe { max_staleness: 2 };
+        let pc = PlannerConfig { policy: &ASYNC2, ..PlannerConfig::default() };
+        let out = plan_hpp(&table, &cluster, &model, &cfg, &pc).unwrap();
+        assert_eq!(out.policy.name(), "async:2");
+        assert_eq!(out.schedule.policy, "async:2");
+        assert_eq!(out.schedule.max_staleness, 2);
+        out.schedule.validate().unwrap();
+        for (d, used) in plan_peak_memory(&model, &cfg, &out.plan, &ASYNC2) {
+            assert!(
+                used <= cluster.devices[d].mem_bytes,
+                "device {d}: async-priced {used} > {}",
                 cluster.devices[d].mem_bytes
             );
         }

@@ -6,6 +6,13 @@
 //! * OPT — optimizer state (momentum = 1x, Adam = 2x weight bytes);
 //! * ACT — intermediate activations of ONE in-flight micro-batch; K_p
 //!   micro-batches are resident before strict 1F1B kicks in.
+//!
+//! A bounded-staleness policy (`AsyncPipe`) extends the equation with
+//! a fourth term: the weight-version **stash** — one stage-weight
+//! snapshot pinned per in-flight micro-batch beyond the live copy, so
+//! every backward can run against the version its forward read.
+//! [`stage_memory_for_policy`] charges it via
+//! `SchedulePolicy::weight_stash_copies`.
 
 use crate::config::{DeviceSpec, TrainConfig};
 use crate::model::ModelDesc;
@@ -14,15 +21,27 @@ use crate::schedule::SchedulePolicy;
 /// Memory components of one stage for a given per-device batch `beta`.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct StageMemory {
+    /// Stage weights plus accumulated gradients (2x weight bytes).
     pub model_bytes: u64,
+    /// Optimizer state (momentum = 1x, Adam = 2x weight bytes).
     pub optimizer_bytes: u64,
+    /// Activations of one in-flight micro-batch at this `beta`.
     pub activation_bytes_per_mb: u64,
+    /// In-flight micro-batch bound charged (the *effective* K_p).
     pub kp: usize,
+    /// Weight-version stash copies of a bounded-staleness policy (0
+    /// for synchronous policies).
+    pub weight_stash_bytes: u64,
 }
 
 impl StageMemory {
+    /// Total Eq. 3 peak: fixed (model + optimizer + stash) plus the
+    /// K_p-windowed activation residency.
     pub fn total(&self) -> u64 {
-        self.model_bytes + self.optimizer_bytes + self.kp as u64 * self.activation_bytes_per_mb
+        self.model_bytes
+            + self.optimizer_bytes
+            + self.weight_stash_bytes
+            + self.kp as u64 * self.activation_bytes_per_mb
     }
 }
 
@@ -52,6 +71,7 @@ pub fn stage_memory(
         optimizer_bytes,
         activation_bytes_per_mb: act_per_sample * beta as u64,
         kp,
+        weight_stash_bytes: 0,
     }
 }
 
@@ -62,6 +82,12 @@ pub fn stage_memory(
 /// by (M - K_p) activations and lets the planner emit OOM plans — the
 /// bug this function exists to close.  1F1B-family policies clamp to
 /// the same value as before, so default plans are unchanged.
+///
+/// A bounded-staleness policy additionally charges its weight-stash
+/// copies (`weight_stash_copies` x stage weight bytes): every
+/// in-flight micro beyond the live weights pins one stage-weight
+/// snapshot so its backward can run against the version its forward
+/// read.
 #[allow(clippy::too_many_arguments)]
 pub fn stage_memory_for_policy(
     model: &ModelDesc,
@@ -73,24 +99,32 @@ pub fn stage_memory_for_policy(
     n_micros: usize,
     policy: &dyn SchedulePolicy,
 ) -> StageMemory {
-    stage_memory(model, cfg, i, j, beta, policy.effective_kp(stage_kp, n_micros))
+    let mut mem = stage_memory(model, cfg, i, j, beta, policy.effective_kp(stage_kp, n_micros));
+    mem.weight_stash_bytes =
+        policy.weight_stash_copies(stage_kp, n_micros) as u64 * model.weight_bytes_range(i, j);
+    mem
 }
 
 /// Largest per-device batch that fits the device budget (the `bs_d`
 /// bound of Algorithm 1, line 7).  `kp` is the *effective* in-flight
-/// bound (callers apply `SchedulePolicy::effective_kp` first).
-/// Returns 0 when even the fixed cost (weights + optimizer) exceeds
-/// the budget.
+/// bound and `stash_copies` the policy's extra weight-stash copies
+/// (callers apply `SchedulePolicy::effective_kp` /
+/// `weight_stash_copies` first; both are batch-independent fixed
+/// costs except the K_p activation term).  Returns 0 when even the
+/// fixed cost (weights + optimizer + stash) exceeds the budget.
 pub fn max_batch_under_budget(
     model: &ModelDesc,
     cfg: &TrainConfig,
     i: usize,
     j: usize,
     kp: usize,
+    stash_copies: usize,
     dev: &DeviceSpec,
 ) -> usize {
     let m1 = stage_memory(model, cfg, i, j, 1, kp);
-    let fixed = m1.model_bytes + m1.optimizer_bytes;
+    let fixed = m1.model_bytes
+        + m1.optimizer_bytes
+        + stash_copies as u64 * model.weight_bytes_range(i, j);
     if fixed >= dev.mem_bytes {
         return 0;
     }
@@ -162,14 +196,42 @@ mod tests {
     }
 
     #[test]
+    fn async_staleness_charges_weight_stash_copies() {
+        // The stash ring pins one stage-weight snapshot per in-flight
+        // micro beyond the live copy: window - 1 copies, on top of the
+        // widened K_p + sigma activation residency.
+        use crate::schedule::{AsyncPipe, OneFOneBKp};
+        let m = zoo::mobilenet_v2();
+        let cfg = TrainConfig::new(256, 8); // M = 32
+        let n_micros = cfg.num_microbatches();
+        let sync = stage_memory_for_policy(&m, &cfg, 0, 20, 8, 3, n_micros, &OneFOneBKp);
+        assert_eq!(sync.weight_stash_bytes, 0);
+        let a = AsyncPipe { max_staleness: 2 };
+        let asy = stage_memory_for_policy(&m, &cfg, 0, 20, 8, 3, n_micros, &a);
+        assert_eq!(asy.kp, 5); // K_p + sigma
+        let w = m.weight_bytes_range(0, 20);
+        assert_eq!(asy.weight_stash_bytes, 4 * w); // window 5 -> 4 copies
+        assert_eq!(
+            asy.total() - sync.total(),
+            2 * sync.activation_bytes_per_mb + 4 * w
+        );
+        // The stash is a fixed cost in the batch-size bound too.
+        use crate::config::{DeviceKind, DeviceSpec};
+        let nano = DeviceSpec::of_kind(DeviceKind::JetsonNano, 0);
+        let plain = max_batch_under_budget(&m, &cfg, 0, 20, 5, 0, &nano);
+        let stashed = max_batch_under_budget(&m, &cfg, 0, 20, 5, 4, &nano);
+        assert!(stashed <= plain);
+    }
+
+    #[test]
     fn max_batch_monotone_in_memory() {
         let m = zoo::mobilenet_v2();
         let cfg = TrainConfig::new(256, 8);
         let nano = DeviceSpec::of_kind(DeviceKind::JetsonNano, 0);
         let nx = DeviceSpec::of_kind(DeviceKind::JetsonNX, 1);
         let nl = m.num_layers();
-        let b_nano = max_batch_under_budget(&m, &cfg, 0, nl, 3, &nano);
-        let b_nx = max_batch_under_budget(&m, &cfg, 0, nl, 3, &nx);
+        let b_nano = max_batch_under_budget(&m, &cfg, 0, nl, 3, 0, &nano);
+        let b_nx = max_batch_under_budget(&m, &cfg, 0, nl, 3, 0, &nx);
         assert!(b_nx > b_nano, "nx {b_nx} vs nano {b_nano}");
         assert!(b_nano > 0);
     }
@@ -181,7 +243,7 @@ mod tests {
         let mut tiny = DeviceSpec::of_kind(DeviceKind::JetsonNano, 0);
         tiny.mem_bytes = 10 * 1024 * 1024; // 10 MiB
         assert_eq!(
-            max_batch_under_budget(&m, &cfg, 0, m.num_layers(), 1, &tiny),
+            max_batch_under_budget(&m, &cfg, 0, m.num_layers(), 1, 0, &tiny),
             0
         );
     }

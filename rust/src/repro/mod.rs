@@ -450,6 +450,7 @@ pub fn fig15a() -> Table {
                         memory_aware: false,
                         heterogeneity_aware: false,
                         straggler_offload: false,
+                        ..AllocOpts::default()
                     },
                     comm_aware: false,
                     ..PlannerConfig::default()
@@ -462,6 +463,7 @@ pub fn fig15a() -> Table {
                         memory_aware: false,
                         heterogeneity_aware: false,
                         straggler_offload: false,
+                        ..AllocOpts::default()
                     },
                     comm_aware: true,
                     ..PlannerConfig::default()

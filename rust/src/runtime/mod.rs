@@ -20,7 +20,7 @@ use anyhow::{Context, Result};
 
 #[cfg(feature = "pjrt")]
 use crate::model::from_manifest::{ArtifactSig, Manifest, ManifestModel};
-pub use params::{init_layer_params, LayerParams};
+pub use params::{init_layer_params, LayerParams, ParamSnapshot, ParamStash};
 pub use tensor::{Tensor, TensorData};
 
 /// A compiled model runtime: one PJRT client plus the compiled

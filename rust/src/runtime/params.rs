@@ -5,6 +5,15 @@
 //! the optimizer a plain f32 stream, AllReduce a buffer average, and
 //! fault-tolerant replication (§3.4) a memcpy — the weights *are* the
 //! checkpoint.
+//!
+//! [`ParamStash`] adds the bounded-staleness machinery: a
+//! capacity-bounded ring of weight-version snapshots keyed by
+//! micro-batch, so an `AsyncPipe` worker's backward can run against
+//! exactly the version its forward read (PipeDream-style weight
+//! stashing) while the scheduler keeps updating the live weights.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use crate::model::from_manifest::ManifestLayer;
 use crate::runtime::tensor::Tensor;
@@ -51,6 +60,104 @@ impl LayerParams {
     /// Total bytes of the parameter values (replication cost).
     pub fn byte_len(&self) -> usize {
         self.values.iter().map(|t| t.byte_len()).sum()
+    }
+}
+
+/// One stashed weight version as host tensors: every parameter tensor
+/// of every layer of the stage, in layer order.
+pub type ParamSnapshot = Arc<Vec<Vec<Tensor>>>;
+
+/// Bounded ring of weight-version snapshots for a bounded-staleness
+/// worker (the live realisation of the Schedule IR's version tags).
+/// Generic over the snapshot payload `T`: host tensors
+/// ([`ParamSnapshot`]) or — what the live worker actually stashes —
+/// the already-converted XLA parameter literals, so a backward never
+/// pays a tensor-to-literal conversion (that conversion is the
+/// engine's documented top hot-path cost).
+///
+/// * [`ParamStash::record`] pins the current weights for a micro-batch
+///   at its `Fwd` — reusing the previously recorded snapshot when the
+///   version is unchanged, calling `snap` otherwise (snapshots are
+///   `Arc`-shared, so recording an existing `Arc` is free).
+/// * [`ParamStash::take`] releases the snapshot at the micro's `Bwd`,
+///   returning the version the gradient must be computed against.
+/// * Capacity is the schedule's admission window (K_p + sigma): a
+///   `record` beyond it means the worker ran ahead of the staleness
+///   bound — a scheduling bug, reported as an error rather than grown
+///   past the memory the planner charged (Eq. 3's stash term).
+pub struct ParamStash<T> {
+    capacity: usize,
+    by_micro: BTreeMap<usize, (u64, Arc<T>)>,
+    last: Option<(u64, Arc<T>)>,
+}
+
+impl<T> ParamStash<T> {
+    /// A ring holding at most `capacity` in-flight snapshots (the
+    /// policy's effective admission window).
+    pub fn new(capacity: usize) -> ParamStash<T> {
+        ParamStash { capacity, by_micro: BTreeMap::new(), last: None }
+    }
+
+    /// Pin the weights `version` for `micro`; `snap` is only called
+    /// when `version` differs from the most recently recorded one.
+    pub fn record(
+        &mut self,
+        micro: usize,
+        version: u64,
+        snap: impl FnOnce() -> Arc<T>,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.by_micro.len() < self.capacity,
+            "weight stash ring full ({} in flight): micro {micro} exceeds the \
+             staleness window",
+            self.by_micro.len()
+        );
+        anyhow::ensure!(
+            !self.by_micro.contains_key(&micro),
+            "micro {micro} already stashed"
+        );
+        let snap = match &self.last {
+            Some((v, s)) if *v == version => s.clone(),
+            _ => {
+                let s = snap();
+                self.last = Some((version, s.clone()));
+                s
+            }
+        };
+        self.by_micro.insert(micro, (version, snap));
+        Ok(())
+    }
+
+    /// Release and return the stashed (version, weights) of `micro`.
+    pub fn take(&mut self, micro: usize) -> Option<(u64, Arc<T>)> {
+        self.by_micro.remove(&micro)
+    }
+
+    /// Forget the `record`-dedup anchor (call after any out-of-band
+    /// weight write, e.g. the round-end parameter averaging, so a
+    /// later `record` at an old version number cannot alias weights
+    /// that changed underneath it).
+    pub fn invalidate_last(&mut self) {
+        self.last = None;
+    }
+
+    /// In-flight snapshot count (bounded by the capacity).
+    pub fn len(&self) -> usize {
+        self.by_micro.len()
+    }
+
+    /// True when no snapshot is in flight.
+    pub fn is_empty(&self) -> bool {
+        self.by_micro.is_empty()
+    }
+
+    /// Distinct weight versions currently pinned (shared snapshots
+    /// counted once) — bounded by the ring capacity.
+    pub fn distinct_versions(&self) -> usize {
+        let mut vs: Vec<u64> = self.by_micro.values().map(|(v, _)| *v).collect();
+        vs.sort_unstable();
+        vs.dedup();
+        vs.len()
     }
 }
 
@@ -138,5 +245,62 @@ mod tests {
         let mut rng = Rng::new(1);
         let mut p = init_layer_params(&mk_layer(), &mut rng);
         assert!(p.accumulate(&[]).is_err());
+    }
+
+    fn snap(v: f32) -> ParamSnapshot {
+        Arc::new(vec![vec![Tensor::from_f32(&[2], vec![v, v])]])
+    }
+
+    #[test]
+    fn stash_roundtrips_versions() {
+        let mut s: ParamStash<Vec<Vec<Tensor>>> = ParamStash::new(3);
+        s.record(0, 0, || snap(0.0)).unwrap();
+        s.record(1, 0, || snap(99.0)).unwrap(); // same version: closure skipped
+        s.record(2, 1, || snap(1.0)).unwrap();
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.distinct_versions(), 2);
+        let (v0, w0) = s.take(0).unwrap();
+        assert_eq!(v0, 0);
+        assert_eq!(w0[0][0].as_f32().unwrap(), &[0.0, 0.0]);
+        // Micro 1 shares micro 0's snapshot (recorded at the same
+        // version), so the 99.0 closure never ran.
+        let (v1, w1) = s.take(1).unwrap();
+        assert_eq!(v1, 0);
+        assert!(Arc::ptr_eq(&w0, &w1));
+        let (v2, w2) = s.take(2).unwrap();
+        assert_eq!(v2, 1);
+        assert_eq!(w2[0][0].as_f32().unwrap(), &[1.0, 1.0]);
+        assert!(s.is_empty());
+        assert!(s.take(0).is_none());
+    }
+
+    #[test]
+    fn stash_ring_is_bounded() {
+        let mut s: ParamStash<Vec<Vec<Tensor>>> = ParamStash::new(2);
+        s.record(0, 0, || snap(0.0)).unwrap();
+        s.record(1, 1, || snap(1.0)).unwrap();
+        // A third in-flight micro exceeds the staleness window.
+        assert!(s.record(2, 2, || snap(2.0)).is_err());
+        // Duplicate stash for an in-flight micro is a bug too.
+        assert!(s.record(1, 1, || snap(1.0)).is_err());
+        // Draining one reader frees a slot.
+        s.take(0).unwrap();
+        s.record(2, 2, || snap(2.0)).unwrap();
+        assert_eq!(s.len(), 2);
+    }
+
+    #[test]
+    fn stash_invalidate_last_breaks_version_aliasing() {
+        // After an out-of-band weight write (round-end parameter
+        // averaging), a record at the *same* version number must not
+        // alias the pre-write snapshot.
+        let mut s: ParamStash<Vec<Vec<Tensor>>> = ParamStash::new(2);
+        s.record(0, 7, || snap(0.0)).unwrap();
+        let (_, before) = s.take(0).unwrap();
+        s.invalidate_last();
+        s.record(1, 7, || snap(1.0)).unwrap();
+        let (_, after) = s.take(1).unwrap();
+        assert!(!Arc::ptr_eq(&before, &after));
+        assert_eq!(after[0][0].as_f32().unwrap(), &[1.0, 1.0]);
     }
 }

@@ -25,6 +25,13 @@
 //! the simulator prices), [`Sharding::RoundRobin`] assigns whole
 //! micro-batches round-robin (what the live runtime executes; see
 //! `pipeline::worker` docs for why).
+//!
+//! Since the [`AsyncPipe`] policy landed, the IR carries **weight
+//! semantics**, not just task order: compute tasks are tagged with the
+//! weight version they read/apply, a schedule declares its
+//! bounded-staleness budget (`Schedule::max_staleness`), and the
+//! validator enforces either the synchronous all-versions-zero
+//! guarantee or the staleness bound (see [`Schedule::validate`]).
 
 pub mod policy;
 
@@ -36,8 +43,8 @@ use crate::model::ModelDesc;
 use crate::planner::plan::Plan;
 
 pub use policy::{
-    builtin_policies, policy_by_name, ComputeOp, GpipeFillDrain, Interleaved, OneFOneBKp,
-    SchedulePolicy, ZeroBubbleH1, BWD_INPUT_FRAC,
+    builtin_policies, policy_by_name, AsyncPipe, ComputeOp, GpipeFillDrain, Interleaved,
+    OneFOneBKp, SchedulePolicy, ZeroBubbleH1, BWD_INPUT_FRAC,
 };
 
 /// The policy a consumer falls back to when no per-run policy was
@@ -60,18 +67,34 @@ pub enum Payload {
 }
 
 /// One scheduled unit of work on a device timeline.
+///
+/// Compute tasks carry a **weight-version tag**: the number of
+/// intra-round weight updates applied on this device before the task
+/// runs.  Synchronous policies accumulate gradients across the round
+/// (no intra-round updates), so all their tags are 0 — a guarantee the
+/// validator enforces.  A bounded-staleness policy
+/// ([`AsyncPipe`], `max_staleness` > 0) applies one update per
+/// backward: its `Fwd` tag names the version the forward *reads*, its
+/// `Bwd`/`BwdW` tags name the stashed version the gradient is computed
+/// against (weight stashing — always the version its own `Fwd` read),
+/// and the validator bounds how far any read may lag the update
+/// frontier.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Task {
-    /// Forward pass of one micro-batch (this device's share of it).
-    Fwd { micro: usize },
-    /// Backward pass of one micro-batch.  Under a split-backward policy
-    /// this is the input-gradient half only (the part that feeds the
-    /// upstream `Send`); otherwise it is the full backward.
-    Bwd { micro: usize },
+    /// Forward pass of one micro-batch (this device's share of it),
+    /// reading weight version `version`.
+    Fwd { micro: usize, version: usize },
+    /// Backward pass of one micro-batch, computed against stashed
+    /// weight version `version` (= its `Fwd`'s tag).  Under a
+    /// split-backward policy this is the input-gradient half only (the
+    /// part that feeds the upstream `Send`); otherwise it is the full
+    /// backward.
+    Bwd { micro: usize, version: usize },
     /// Deferred weight-gradient half of a split backward (zero-bubble
-    /// policies).  Purely local compute: no transfers, and the micro's
-    /// activation residency was already released by its `Bwd`.
-    BwdW { micro: usize },
+    /// policies), against the same stashed version as its `Bwd`.
+    /// Purely local compute: no transfers, and the micro's activation
+    /// residency was already released by its `Bwd`.
+    BwdW { micro: usize, version: usize },
     /// Transfer to a peer device; placed right after the producing
     /// compute task.  `bytes` may be 0 in runtime-built schedules,
     /// where actual tensor sizes are only known at execution time.
@@ -98,8 +121,14 @@ pub struct DeviceTimeline {
     /// size under `RoundRobin` (0 for idle slots).
     pub share: usize,
     /// The in-flight bound actually encoded in `tasks` (the policy's
-    /// effective K_p, e.g. the whole micro load for GPipe).
+    /// effective K_p, e.g. the whole micro load for GPipe; always the
+    /// *per-round* window, also for multi-round steady-state builds).
     pub kp: usize,
+    /// Weight-stash copies the policy charges for this timeline
+    /// (`SchedulePolicy::weight_stash_copies` — recorded here so the
+    /// simulator prices exactly what the planner budgeted, one source
+    /// of truth).
+    pub stash_copies: usize,
     pub tasks: Vec<Task>,
 }
 
@@ -109,14 +138,16 @@ impl DeviceTimeline {
         self.tasks
             .iter()
             .filter_map(|t| match *t {
-                Task::Fwd { micro } => Some(ComputeOp::Fwd(micro)),
-                Task::Bwd { micro } => Some(ComputeOp::Bwd(micro)),
-                Task::BwdW { micro } => Some(ComputeOp::BwdW(micro)),
+                Task::Fwd { micro, .. } => Some(ComputeOp::Fwd(micro)),
+                Task::Bwd { micro, .. } => Some(ComputeOp::Bwd(micro)),
+                Task::BwdW { micro, .. } => Some(ComputeOp::BwdW(micro)),
                 _ => None,
             })
             .collect()
     }
 
+    /// Number of forward tasks on this timeline (= its assigned micro
+    /// count, times the encoded round count for steady-state builds).
     pub fn num_fwd(&self) -> usize {
         self.tasks
             .iter()
@@ -146,12 +177,24 @@ pub enum Sharding {
 /// A full HPP-Round schedule: one timeline per participating device.
 #[derive(Debug, Clone)]
 pub struct Schedule {
+    /// One ordered task list per participating device.
     pub timelines: Vec<DeviceTimeline>,
+    /// Micro-batches per HPP-Round (`rounds` rounds are encoded when
+    /// the schedule was built for steady-state pricing, with round r's
+    /// micros offset by `r * num_micro`).
     pub num_micro: usize,
+    /// Pipeline depth of the generating plan.
     pub num_stages: usize,
+    /// How micro-batches map onto the devices of a stage group.
     pub sharding: Sharding,
     /// Name of the policy that generated the compute order.
     pub policy: &'static str,
+    /// The policy's bounded-staleness budget σ (0 = synchronous; the
+    /// validator then requires every weight-version tag to be 0).
+    pub max_staleness: usize,
+    /// HPP-Rounds encoded back-to-back in the timelines (1 for every
+    /// consumer except the steady-state async pricing path).
+    pub rounds: usize,
 }
 
 /// Sharding-specific wiring consumed by the single schedule builder:
@@ -286,11 +329,30 @@ impl Schedule {
     /// every transfer come from the model's boundary activation sizes
     /// and the Fig. 10 sample-overlap routing.
     pub fn for_sim(plan: &Plan, model: &ModelDesc, policy: &dyn SchedulePolicy) -> Schedule {
+        Schedule::for_sim_rounds(plan, model, policy, 1)
+    }
+
+    /// Like [`Schedule::for_sim`], but encoding `rounds` HPP-Rounds
+    /// back-to-back in one continuous timeline (round r's micros are
+    /// offset by `r * num_micro`).  For a bounded-staleness policy this
+    /// is the steady-state form: there is no inter-round barrier, so
+    /// the policy's admission window lets round r+1's forwards fill
+    /// round r's drain — what `sim::price_policy` prices to measure
+    /// async throughput honestly.  The round-closing AllReduce is
+    /// charged once with `rounds`× the volume (the σ-bounded group
+    /// syncs overlap compute in steady state).
+    pub fn for_sim_rounds(
+        plan: &Plan,
+        model: &ModelDesc,
+        policy: &dyn SchedulePolicy,
+        rounds: usize,
+    ) -> Schedule {
         Schedule::build(
             plan,
             policy,
             Sharding::SampleShard,
             &SampleShardRouter::new(plan, model),
+            rounds,
         )
     }
 
@@ -298,31 +360,56 @@ impl Schedule {
     /// m runs on slot `m % g`, and transfers carry whole micro-batch
     /// tensors (bytes unknown until execution time, recorded as 0).
     pub fn for_runtime(plan: &Plan, policy: &dyn SchedulePolicy) -> Schedule {
-        Schedule::build(plan, policy, Sharding::RoundRobin, &RoundRobinRouter { plan })
+        Schedule::build(plan, policy, Sharding::RoundRobin, &RoundRobinRouter { plan }, 1)
     }
 
     /// The one task-emission core both builders share: Recvs gate the
     /// compute that consumes them, Sends trail the compute that
-    /// produces them, AllReduce closes multi-device stages.
+    /// produces them, AllReduce closes multi-device stages, and every
+    /// compute task is tagged with the weight version it reads (all 0
+    /// under a synchronous policy; incremented per backward under a
+    /// bounded-staleness one).
     fn build(
         plan: &Plan,
         policy: &dyn SchedulePolicy,
         sharding: Sharding,
         router: &dyn Router,
+        rounds: usize,
     ) -> Schedule {
+        let rounds = rounds.max(1);
         let m_total = plan.num_micro;
         let n_stages = plan.stages.len();
+        // Per-micro weight updates only under bounded staleness;
+        // synchronous rounds accumulate and keep version 0 throughout.
+        let versioned = policy.max_staleness() > 0;
         let mut timelines = Vec::new();
         for (p, stage) in plan.stages.iter().enumerate() {
             for (slot, &d) in stage.devices.iter().enumerate() {
-                let micros = router.assign(p, slot);
-                let ops = policy.compute_order(&micros, stage.kp);
+                let base = router.assign(p, slot);
+                let mut micros = base.clone();
+                for r in 1..rounds {
+                    micros.extend(base.iter().map(|&m| m + r * m_total));
+                }
+                let mut ops = policy.compute_order(&micros, stage.kp);
+                // The per-round admission window — what the planner's
+                // Eq. 3 budget charged (effective_kp clamps at the
+                // per-round load).  A multi-round chain must respect
+                // the same bound: a policy whose raw window exceeds the
+                // per-round load would otherwise admit more in-flight
+                // micros across the round boundary than any budget
+                // ever priced, so the chained order is re-windowed.
+                let round_kp = policy.effective_kp(stage.kp, base.len());
+                if rounds > 1 {
+                    ops = rewindow(ops, round_kp);
+                }
                 let mut tasks = Vec::with_capacity(4 * ops.len() + 1);
+                let mut updates = 0usize; // backwards applied so far
+                let mut read_version: HashMap<usize, usize> = HashMap::new();
                 for op in ops {
                     match op {
                         ComputeOp::Fwd(m) => {
                             if p > 0 {
-                                for (from, bytes) in router.from_prev(p, slot, m) {
+                                for (from, bytes) in router.from_prev(p, slot, m % m_total) {
                                     tasks.push(Task::Recv {
                                         micro: m,
                                         from,
@@ -331,9 +418,11 @@ impl Schedule {
                                     });
                                 }
                             }
-                            tasks.push(Task::Fwd { micro: m });
+                            let version = if versioned { updates } else { 0 };
+                            read_version.insert(m, version);
+                            tasks.push(Task::Fwd { micro: m, version });
                             if p + 1 < n_stages {
-                                for (to, bytes) in router.to_next(p, slot, m) {
+                                for (to, bytes) in router.to_next(p, slot, m % m_total) {
                                     tasks.push(Task::Send {
                                         micro: m,
                                         to,
@@ -345,7 +434,7 @@ impl Schedule {
                         }
                         ComputeOp::Bwd(m) => {
                             if p + 1 < n_stages {
-                                for (from, bytes) in router.to_next(p, slot, m) {
+                                for (from, bytes) in router.to_next(p, slot, m % m_total) {
                                     tasks.push(Task::Recv {
                                         micro: m,
                                         from,
@@ -354,9 +443,15 @@ impl Schedule {
                                     });
                                 }
                             }
-                            tasks.push(Task::Bwd { micro: m });
+                            // Weight stashing: the backward runs against
+                            // the version its forward read.
+                            let version = read_version.get(&m).copied().unwrap_or(0);
+                            tasks.push(Task::Bwd { micro: m, version });
+                            if versioned {
+                                updates += 1;
+                            }
                             if p > 0 {
-                                for (to, bytes) in router.from_prev(p, slot, m) {
+                                for (to, bytes) in router.from_prev(p, slot, m % m_total) {
                                     tasks.push(Task::Send {
                                         micro: m,
                                         to,
@@ -368,18 +463,24 @@ impl Schedule {
                         }
                         // Weight-grad halves are pure local compute:
                         // no transfer fan-out in either direction.
-                        ComputeOp::BwdW(m) => tasks.push(Task::BwdW { micro: m }),
+                        ComputeOp::BwdW(m) => tasks.push(Task::BwdW {
+                            micro: m,
+                            version: read_version.get(&m).copied().unwrap_or(0),
+                        }),
                     }
                 }
                 if stage.devices.len() > 1 {
-                    tasks.push(Task::AllReduce { bytes: router.allreduce_bytes(p) });
+                    tasks.push(Task::AllReduce {
+                        bytes: router.allreduce_bytes(p) * rounds as u64,
+                    });
                 }
                 timelines.push(DeviceTimeline {
                     device: d,
                     stage: p,
                     slot,
                     share: router.share(p, slot),
-                    kp: policy.effective_kp(stage.kp, micros.len()),
+                    kp: round_kp,
+                    stash_copies: policy.weight_stash_copies(stage.kp, base.len()),
                     tasks,
                 });
             }
@@ -390,6 +491,8 @@ impl Schedule {
             num_stages: n_stages,
             sharding,
             policy: policy.name(),
+            max_staleness: policy.max_staleness(),
+            rounds,
         }
     }
 
@@ -412,6 +515,7 @@ impl Schedule {
             .unwrap_or_default()
     }
 
+    /// Total task count across every timeline (bench/diagnostic aid).
     pub fn total_tasks(&self) -> usize {
         self.timelines.iter().map(|t| t.tasks.len()).sum()
     }
@@ -421,8 +525,16 @@ impl Schedule {
     ///     that order, on each non-idle timeline;
     ///   * a split-backward timeline has exactly one BwdW per micro,
     ///     after that micro's Bwd (all-or-none per timeline);
-    ///   * the running in-flight count never exceeds the timeline's
-    ///     effective K_p;
+    ///   * the **staleness bound**: the running in-flight count never
+    ///     exceeds the timeline's effective K_p (which includes the
+    ///     policy's staleness budget).  Under a synchronous schedule
+    ///     (`max_staleness` = 0) every weight-version tag must be 0 —
+    ///     the old strict guarantee, kept exactly.  Under bounded
+    ///     staleness the tags must be consistent (a Fwd reads the
+    ///     update count at its position; Bwd/BwdW carry their Fwd's
+    ///     stashed version) and no backward may apply a gradient
+    ///     computed more than `effective K_p − 1` updates ago — the
+    ///     weight-stash window implied by the staleness bound;
     ///   * Send follows its producing compute, Recv precedes its
     ///     consuming compute;
     ///   * every Recv has exactly one matching Send (same endpoints,
@@ -431,37 +543,75 @@ impl Schedule {
     ///     (which only delivers a Recv after its matching Send has
     ///     executed on the peer) drains every timeline.
     pub fn validate(&self) -> Result<()> {
+        let versioned = self.max_staleness > 0;
         for tl in &self.timelines {
             let d = tl.device;
             let mut fwd_pos: HashMap<usize, usize> = HashMap::new();
+            let mut fwd_ver: HashMap<usize, usize> = HashMap::new();
             let mut bwd_pos: HashMap<usize, usize> = HashMap::new();
             let mut bww_pos: HashMap<usize, usize> = HashMap::new();
             let mut inflight: usize = 0;
             let mut peak: usize = 0;
+            let mut updates: usize = 0;
             for (k, t) in tl.tasks.iter().enumerate() {
                 match *t {
-                    Task::Fwd { micro } => {
+                    Task::Fwd { micro, version } => {
                         if fwd_pos.insert(micro, k).is_some() {
                             bail!("device {d}: duplicate Fwd for micro {micro}");
                         }
+                        let expect = if versioned { updates } else { 0 };
+                        if version != expect {
+                            bail!(
+                                "device {d}: Fwd of micro {micro} tagged version \
+                                 {version}, expected {expect}"
+                            );
+                        }
+                        fwd_ver.insert(micro, version);
                         inflight += 1;
                         peak = peak.max(inflight);
                     }
-                    Task::Bwd { micro } => {
+                    Task::Bwd { micro, version } => {
                         if !fwd_pos.contains_key(&micro) {
                             bail!("device {d}: Bwd before Fwd for micro {micro}");
                         }
                         if bwd_pos.insert(micro, k).is_some() {
                             bail!("device {d}: duplicate Bwd for micro {micro}");
                         }
+                        if version != fwd_ver[&micro] {
+                            bail!(
+                                "device {d}: Bwd of micro {micro} tagged version \
+                                 {version}, its Fwd read {}",
+                                fwd_ver[&micro]
+                            );
+                        }
+                        if versioned {
+                            // Staleness bound: the applied gradient was
+                            // computed inside the weight-stash window.
+                            let lag = updates - version;
+                            if lag + 1 > tl.kp.max(1) {
+                                bail!(
+                                    "device {d}: Bwd of micro {micro} applies a \
+                                     gradient {lag} updates stale (window {})",
+                                    tl.kp
+                                );
+                            }
+                            updates += 1;
+                        }
                         inflight -= 1;
                     }
-                    Task::BwdW { micro } => {
+                    Task::BwdW { micro, version } => {
                         if !bwd_pos.contains_key(&micro) {
                             bail!("device {d}: BwdW before Bwd for micro {micro}");
                         }
                         if bww_pos.insert(micro, k).is_some() {
                             bail!("device {d}: duplicate BwdW for micro {micro}");
+                        }
+                        if version != fwd_ver[&micro] {
+                            bail!(
+                                "device {d}: BwdW of micro {micro} tagged version \
+                                 {version}, its Fwd read {}",
+                                fwd_ver[&micro]
+                            );
                         }
                     }
                     _ => {}
@@ -476,7 +626,8 @@ impl Schedule {
             }
             if peak > tl.kp.max(1) {
                 bail!(
-                    "device {d}: in-flight peak {peak} exceeds K_p bound {}",
+                    "device {d}: in-flight peak {peak} exceeds the K_p + staleness \
+                     bound {}",
                     tl.kp
                 );
             }
@@ -679,6 +830,45 @@ pub fn diff(old: &Schedule, new: &Schedule) -> ScheduleDiff {
     out
 }
 
+/// Re-window a 1F1B-shaped compute order to an in-flight bound of
+/// `window`: forwards that would exceed it are deferred (FIFO) until a
+/// backward frees a slot.  Used by multi-round steady-state builds,
+/// where the policy emitted its order over `rounds x M` micros and its
+/// raw window may exceed the per-round budget the planner charged.
+/// Preserves each micro's Fwd-before-Bwd order: a deferred `Fwd(m)` is
+/// re-admitted by one of the at-least-`window` backwards that precede
+/// `Bwd(m)` in the source order.
+fn rewindow(ops: Vec<ComputeOp>, window: usize) -> Vec<ComputeOp> {
+    let window = window.max(1);
+    let mut out = Vec::with_capacity(ops.len());
+    let mut deferred: std::collections::VecDeque<ComputeOp> = Default::default();
+    let mut inflight = 0usize;
+    for op in ops {
+        match op {
+            ComputeOp::Fwd(_) => {
+                if inflight < window {
+                    inflight += 1;
+                    out.push(op);
+                } else {
+                    deferred.push_back(op);
+                }
+            }
+            ComputeOp::Bwd(_) => {
+                out.push(op);
+                inflight -= 1;
+                if let Some(f) = deferred.pop_front() {
+                    inflight += 1;
+                    out.push(f);
+                }
+            }
+            ComputeOp::BwdW(_) => out.push(op),
+        }
+    }
+    debug_assert!(deferred.is_empty(), "rewindow left forwards undrained");
+    out.extend(deferred);
+    out
+}
+
 /// The forwards a timeline admits before its first backward — the
 /// micro-batches whose activations are resident during warm-up.
 fn warmup_prefix(tl: &DeviceTimeline) -> Vec<usize> {
@@ -686,7 +876,7 @@ fn warmup_prefix(tl: &DeviceTimeline) -> Vec<usize> {
     for t in &tl.tasks {
         match *t {
             Task::Bwd { .. } => break,
-            Task::Fwd { micro } => v.push(micro),
+            Task::Fwd { micro, .. } => v.push(micro),
             _ => {}
         }
     }
@@ -884,6 +1074,145 @@ mod tests {
         assert_eq!(d.replay_micros, vec![0, 1, 2]);
         // Device 0's share changed (5 -> 8 samples): retasked.
         assert!(d.retasked.contains(&0));
+    }
+
+    #[test]
+    fn async_schedule_tags_versions_and_validates() {
+        let model = zoo::mobilenet_v2();
+        let plan = two_stage_plan(&model);
+        let a = AsyncPipe { max_staleness: 2 };
+        let sched = Schedule::for_sim(&plan, &model, &a);
+        sched.validate().unwrap();
+        assert_eq!(sched.max_staleness, 2);
+        assert_eq!(sched.rounds, 1);
+        for tl in &sched.timelines {
+            // Window = stage K_p + σ, clamped to the load.
+            assert_eq!(tl.kp, (plan.stages[tl.stage].kp + 2).min(plan.num_micro));
+            // Version tags: Fwd reads the update count at its position,
+            // Bwd applies against its Fwd's stashed version.
+            let mut updates = 0usize;
+            let mut read: HashMap<usize, usize> = HashMap::new();
+            for t in &tl.tasks {
+                match *t {
+                    Task::Fwd { micro, version } => {
+                        assert_eq!(version, updates);
+                        read.insert(micro, version);
+                    }
+                    Task::Bwd { micro, version } => {
+                        assert_eq!(version, read[&micro]);
+                        assert!(updates - version < tl.kp, "stash window exceeded");
+                        updates += 1;
+                    }
+                    _ => {}
+                }
+            }
+        }
+        Schedule::for_runtime(&plan, &a).validate().unwrap();
+        // Synchronous policies keep the all-versions-zero guarantee.
+        let sync = Schedule::for_sim(&plan, &model, &OneFOneBKp);
+        for tl in &sync.timelines {
+            for t in &tl.tasks {
+                if let Task::Fwd { version, .. } | Task::Bwd { version, .. } = *t {
+                    assert_eq!(version, 0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn validate_rejects_corrupted_version_tag() {
+        let model = zoo::mobilenet_v2();
+        let plan = two_stage_plan(&model);
+        let mut sched = Schedule::for_sim(&plan, &model, &AsyncPipe { max_staleness: 1 });
+        let tl = &mut sched.timelines[2];
+        let b = tl
+            .tasks
+            .iter()
+            .position(|t| matches!(t, Task::Bwd { .. }))
+            .unwrap();
+        if let Task::Bwd { version, .. } = &mut tl.tasks[b] {
+            *version += 1; // claims to apply against a version its Fwd never read
+        }
+        assert!(sched.validate().is_err());
+        // A synchronous schedule with a non-zero tag is equally invalid.
+        let mut sync = Schedule::for_sim(&plan, &model, &OneFOneBKp);
+        let tl = &mut sync.timelines[0];
+        let f = tl.tasks.iter().position(|t| matches!(t, Task::Fwd { .. })).unwrap();
+        if let Task::Fwd { version, .. } = &mut tl.tasks[f] {
+            *version = 1;
+        }
+        assert!(sync.validate().is_err());
+    }
+
+    #[test]
+    fn multi_round_async_schedule_pipelines_across_the_boundary() {
+        let model = zoo::mobilenet_v2();
+        let plan = two_stage_plan(&model); // M = 4
+        let a = AsyncPipe { max_staleness: 2 };
+        let sched = Schedule::for_sim_rounds(&plan, &model, &a, 3);
+        sched.validate().unwrap();
+        assert_eq!(sched.rounds, 3);
+        assert_eq!(sched.num_micro, plan.num_micro);
+        for tl in &sched.timelines {
+            // All 3 rounds' micros flow through one continuous window.
+            assert_eq!(tl.num_fwd(), 3 * plan.num_micro);
+            // Round 1's first forwards are admitted before round 0 has
+            // fully drained — the cross-round overlap a barrier forbids.
+            let first_r1_fwd = tl
+                .tasks
+                .iter()
+                .position(|t| matches!(t, Task::Fwd { micro, .. } if *micro >= plan.num_micro))
+                .unwrap();
+            let last_r0_bwd = tl
+                .tasks
+                .iter()
+                .rposition(|t| matches!(t, Task::Bwd { micro, .. } if *micro < plan.num_micro))
+                .unwrap();
+            assert!(
+                first_r1_fwd < last_r0_bwd,
+                "device {}: no cross-round overlap",
+                tl.device
+            );
+        }
+    }
+
+    #[test]
+    fn multi_round_chain_respects_the_per_round_window() {
+        // Regression: with kp + sigma exceeding the per-round load, the
+        // raw chained order could admit up to rounds x M in-flight
+        // micros — more than the Eq. 3 budget (clamped at M) the
+        // planner validated.  The chain is re-windowed to the
+        // per-round effective K_p.
+        let model = zoo::mobilenet_v2();
+        let nl = model.num_layers();
+        let plan = Plan {
+            stages: vec![
+                Stage { layers: (0, nl / 2), devices: vec![0], alloc: vec![4], kp: 1 },
+                Stage { layers: (nl / 2, nl), devices: vec![1], alloc: vec![4], kp: 1 },
+            ],
+            microbatch: 4,
+            num_micro: 2, // M = 2 < kp + sigma = 4
+        };
+        let a = AsyncPipe { max_staleness: 3 };
+        let sched = Schedule::for_sim_rounds(&plan, &model, &a, 4);
+        sched.validate().unwrap(); // includes the peak <= tl.kp check
+        for tl in &sched.timelines {
+            assert_eq!(tl.kp, a.effective_kp(1, plan.num_micro)); // = 2
+            let mut cur = 0usize;
+            let mut peak = 0usize;
+            for t in &tl.tasks {
+                match t {
+                    Task::Fwd { .. } => {
+                        cur += 1;
+                        peak = peak.max(cur);
+                    }
+                    Task::Bwd { .. } => cur -= 1,
+                    _ => {}
+                }
+            }
+            assert_eq!(peak, tl.kp, "chain admitted beyond the per-round window");
+            assert_eq!(tl.num_fwd(), 4 * plan.num_micro);
+        }
     }
 
     #[test]

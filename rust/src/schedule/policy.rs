@@ -5,7 +5,7 @@
 //! Everything downstream (simulator pricing, live workers, fault
 //! replay) consumes the emitted order; no consumer re-derives it.
 //!
-//! Four built-in policies:
+//! Five built-in policies:
 //!   * [`OneFOneBKp`] — the paper's 1F1B with a K_p warm-up window
 //!     (§3.2): K_p forwards fill the pipeline, then strict
 //!     one-backward-one-forward, then the backward drain.
@@ -20,6 +20,12 @@
 //!     micros are partitioned round-robin into `virtual_per_device`
 //!     chunks and run 1F1B in chunk-major order, so the next chunk's
 //!     forwards overlap the previous chunk's backward drain.
+//!   * [`AsyncPipe`] — AshPipe/PipeDream-flavoured bounded staleness:
+//!     a stage may admit `Fwd(m + s)` (s ≤ `max_staleness`) before
+//!     `Bwd(m)` has returned, applying weight updates per micro-batch
+//!     against version-stashed parameters.  The first policy that
+//!     changes the IR's *semantics* (weight-version tags on tasks,
+//!     see `schedule::Task`) rather than just the task order.
 //!
 //! Adding a new schedule means adding a policy here — not touching the
 //! simulator, the workers, or the fault machinery.
@@ -38,19 +44,23 @@ use std::fmt;
 /// and `Bwd` keeps its full-backward meaning.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ComputeOp {
+    /// Forward pass of the given micro-batch.
     Fwd(usize),
+    /// Backward pass (or its input-gradient half under a split policy).
     Bwd(usize),
     /// Deferred weight-gradient computation of a split backward.
     BwdW(usize),
 }
 
 impl ComputeOp {
+    /// The round-global micro-batch id this op works on.
     pub fn micro(&self) -> usize {
         match *self {
             ComputeOp::Fwd(m) | ComputeOp::Bwd(m) | ComputeOp::BwdW(m) => m,
         }
     }
 
+    /// True for the forward variant.
     pub fn is_fwd(&self) -> bool {
         matches!(self, ComputeOp::Fwd(_))
     }
@@ -65,6 +75,7 @@ pub const BWD_INPUT_FRAC: f64 = 0.5;
 
 /// A schedule policy orders one device's FP/BP ops for an HPP-Round.
 pub trait SchedulePolicy: fmt::Debug + Sync {
+    /// Stable policy name; also the canonical `--schedule` spelling.
     fn name(&self) -> &'static str;
 
     /// Ordered FP/BP ops over this device's assigned micro ids
@@ -76,8 +87,41 @@ pub trait SchedulePolicy: fmt::Debug + Sync {
     fn compute_order(&self, micros: &[usize], kp: usize) -> Vec<ComputeOp>;
 
     /// The in-flight activation bound the emitted order actually
-    /// respects (what Eq. 3 memory accounting should use).
+    /// respects (what Eq. 3 memory accounting should use).  For a
+    /// bounded-staleness policy this *includes* the staleness budget:
+    /// `effective_kp - max_staleness` is the policy's synchronous
+    /// baseline window.
     fn effective_kp(&self, kp: usize, n_micros: usize) -> usize;
+
+    /// Bounded-staleness budget of the policy: how many weight updates
+    /// a `Fwd` may miss relative to the policy's K_p-synchronous
+    /// frontier (equivalently, how far the admission window extends
+    /// beyond the synchronous `effective_kp`).  Synchronous policies
+    /// return 0 — their rounds accumulate gradients and every task
+    /// reads weight version 0 — and the IR validator holds them to
+    /// that guarantee.  A non-zero value switches the whole stack to
+    /// version-tagged semantics: `Schedule::build` tags every compute
+    /// task with the weight version it reads/applies, the validator
+    /// enforces the staleness bound instead of the strict
+    /// one-Fwd-one-Bwd alternation, and the simulator prices the
+    /// schedule in steady state (rounds pipelined through the drain).
+    fn max_staleness(&self) -> usize {
+        0
+    }
+
+    /// Extra whole-stage weight copies the policy's weight-version
+    /// stash ring holds beyond the live parameters (what Eq. 3 charges;
+    /// 0 for synchronous policies).  One snapshot is pinned per
+    /// in-flight micro-batch, so the ring depth — and the worst-case
+    /// distinct-version count — is the effective admission window,
+    /// K_p + `max_staleness`.
+    fn weight_stash_copies(&self, kp: usize, n_micros: usize) -> usize {
+        if self.max_staleness() == 0 {
+            0
+        } else {
+            self.effective_kp(kp, n_micros).saturating_sub(1)
+        }
+    }
 }
 
 /// The paper's 1F1B with K_p warm-up (default policy, §3.2).
@@ -247,26 +291,152 @@ impl SchedulePolicy for Interleaved {
     }
 }
 
+/// AshPipe-style bounded-staleness pipeline (the async member of the
+/// policy family, after PipeDream's weight stashing and SSP's bounded
+/// staleness): the 1F1B/K_p skeleton with the admission window widened
+/// by `max_staleness` — a stage may run `Fwd(m + s)` (s ≤
+/// `max_staleness`) before `Bwd(m)` has returned, reading weights that
+/// miss up to `max_staleness` updates relative to the K_p-synchronous
+/// frontier.  Weight updates apply per micro-batch (not per round), so
+/// backwards must run against the *stashed* version their forward read
+/// — the live workers keep a bounded ring of parameter snapshots
+/// (`runtime::ParamStash`), and Eq. 3 charges those stash copies via
+/// [`SchedulePolicy::weight_stash_copies`].
+///
+/// This is the first policy that relaxes the IR's synchronous
+/// invariant: its tasks carry non-zero weight-version tags, and the
+/// validator checks the staleness bound (window ≤ K_p + σ, every
+/// backward applied at most window − 1 updates after its read) instead
+/// of the all-versions-zero guarantee the synchronous policies keep.
+/// The payoff is priced in steady state: without a round barrier the
+/// drain of round r overlaps the fill of round r+1, so the per-round
+/// bubble strictly shrinks on heterogeneous chains (see
+/// `sim::price_policy` and the env-C test).
+#[derive(Debug, Clone, Copy)]
+pub struct AsyncPipe {
+    /// Staleness budget σ: extra forwards admitted beyond the K_p
+    /// window = weight updates a forward may miss.  0 degenerates to
+    /// plain 1F1B/K_p order (but keeps per-micro update semantics).
+    pub max_staleness: usize,
+}
+
+impl Default for AsyncPipe {
+    fn default() -> Self {
+        AsyncPipe { max_staleness: 1 }
+    }
+}
+
+impl SchedulePolicy for AsyncPipe {
+    fn name(&self) -> &'static str {
+        // Exact `async:<s>` spelling for every sigma, so the recorded
+        // policy name always round-trips through `policy_by_name` to
+        // the same staleness budget.  Names beyond the static table
+        // are interned once per distinct sigma.
+        match self.max_staleness {
+            0 => "async:0",
+            1 => "async:1",
+            2 => "async:2",
+            3 => "async:3",
+            4 => "async:4",
+            s => interned_async_name(s),
+        }
+    }
+
+    fn compute_order(&self, micros: &[usize], kp: usize) -> Vec<ComputeOp> {
+        // The 1F1B shape over the widened window: σ extra in-flight
+        // micros hide gradient latency the K_p window cannot.
+        let n = micros.len();
+        let k = self.effective_kp(kp, n);
+        let mut ops = Vec::with_capacity(2 * n);
+        for &m in micros.iter().take(k) {
+            ops.push(ComputeOp::Fwd(m));
+        }
+        for i in k..n {
+            ops.push(ComputeOp::Bwd(micros[i - k]));
+            ops.push(ComputeOp::Fwd(micros[i]));
+        }
+        for &m in micros.iter().skip(n.saturating_sub(k)) {
+            ops.push(ComputeOp::Bwd(m));
+        }
+        ops
+    }
+
+    fn effective_kp(&self, kp: usize, n_micros: usize) -> usize {
+        (kp + self.max_staleness).clamp(1, n_micros.max(1))
+    }
+
+    fn max_staleness(&self) -> usize {
+        self.max_staleness
+    }
+}
+
+/// The statically-allocated `AsyncPipe` variants `policy_by_name`
+/// resolves without allocation (σ = index).
+static ASYNC_PIPES: [AsyncPipe; 5] = [
+    AsyncPipe { max_staleness: 0 },
+    AsyncPipe { max_staleness: 1 },
+    AsyncPipe { max_staleness: 2 },
+    AsyncPipe { max_staleness: 3 },
+    AsyncPipe { max_staleness: 4 },
+];
+
+/// `&'static AsyncPipe` for any σ: the table for the common budgets,
+/// an interning map beyond it (policies are `&'static` by design, so
+/// out-of-table instances are allocated once per distinct σ and kept
+/// for the process lifetime — never once per lookup).
+fn async_policy(sigma: usize) -> &'static AsyncPipe {
+    use std::sync::{Mutex, OnceLock};
+    if let Some(p) = ASYNC_PIPES.get(sigma) {
+        return p;
+    }
+    static EXTRA: OnceLock<Mutex<std::collections::BTreeMap<usize, &'static AsyncPipe>>> =
+        OnceLock::new();
+    let mut map = EXTRA
+        .get_or_init(|| Mutex::new(std::collections::BTreeMap::new()))
+        .lock()
+        .unwrap();
+    *map.entry(sigma)
+        .or_insert_with(|| Box::leak(Box::new(AsyncPipe { max_staleness: sigma })))
+}
+
+/// Interned `"async:<s>"` label for an out-of-table σ (one allocation
+/// per distinct σ for the process lifetime).
+fn interned_async_name(sigma: usize) -> &'static str {
+    use std::sync::{Mutex, OnceLock};
+    static NAMES: OnceLock<Mutex<std::collections::BTreeMap<usize, &'static str>>> =
+        OnceLock::new();
+    let mut map = NAMES
+        .get_or_init(|| Mutex::new(std::collections::BTreeMap::new()))
+        .lock()
+        .unwrap();
+    *map.entry(sigma)
+        .or_insert_with(|| Box::leak(format!("async:{sigma}").into_boxed_str()))
+}
+
 /// Every built-in policy, in presentation order — what the CLI, the
 /// property tests and the per-policy benches iterate over.
-pub fn builtin_policies() -> [&'static dyn SchedulePolicy; 4] {
+pub fn builtin_policies() -> [&'static dyn SchedulePolicy; 5] {
     [
         &OneFOneBKp,
         &GpipeFillDrain,
         &ZeroBubbleH1,
         &Interleaved { virtual_per_device: 2 },
+        &ASYNC_PIPES[1],
     ]
 }
 
 /// Resolve a `--schedule` flag value to a policy.  Accepts each
-/// policy's `name()` plus the common short spellings.
+/// policy's `name()` plus the common short spellings, and the
+/// parameterised `async:<s>` staleness form (any σ; out-of-table
+/// budgets are interned once per distinct σ).
 pub fn policy_by_name(name: &str) -> Option<&'static dyn SchedulePolicy> {
     Some(match name {
         "1f1b" | "1f1b-kp" | "default" => &OneFOneBKp,
         "gpipe" | "fill-drain" | "gpipe-fill-drain" => &GpipeFillDrain,
         "zb" | "zb-h1" | "zero-bubble" => &ZeroBubbleH1,
         "interleaved" | "interleaved-2" | "vpp" => &Interleaved { virtual_per_device: 2 },
-        _ => return None,
+        "async" | "async-pipe" | "ashpipe" => &ASYNC_PIPES[1],
+        other => async_policy(other.strip_prefix("async:")?.parse().ok()?),
     })
 }
 
@@ -420,5 +590,81 @@ mod tests {
         assert!(policy_by_name("1f1b").is_some());
         assert!(policy_by_name("zb").is_some());
         assert!(policy_by_name("nope").is_none());
+    }
+
+    #[test]
+    fn async_pipe_widens_the_window_by_its_staleness_budget() {
+        // σ = 2 over kp = 1: the admission window is 3 — Fwd(m + 2)
+        // runs before Bwd(m) has returned, which 1F1B forbids.
+        let a = AsyncPipe { max_staleness: 2 };
+        let ops = a.compute_order(&[0, 1, 2, 3, 4], 1);
+        use ComputeOp::*;
+        assert_eq!(
+            ops,
+            vec![
+                Fwd(0),
+                Fwd(1),
+                Fwd(2),
+                Bwd(0),
+                Fwd(3),
+                Bwd(1),
+                Fwd(4),
+                Bwd(2),
+                Bwd(3),
+                Bwd(4),
+            ]
+        );
+        assert_eq!(inflight_peak(&ops), 3);
+        assert_eq!(a.effective_kp(1, 5), 3);
+        // The widened window never exceeds the sync window by more
+        // than σ, and σ = 0 degenerates to exactly 1F1B.
+        for kp in 1..=4 {
+            for n in 1..=8 {
+                let sync = OneFOneBKp.effective_kp(kp, n);
+                assert!(a.effective_kp(kp, n) <= sync + a.max_staleness);
+            }
+        }
+        let a0 = AsyncPipe { max_staleness: 0 };
+        assert_eq!(a0.compute_order(&[0, 1, 2], 2), OneFOneBKp.compute_order(&[0, 1, 2], 2));
+    }
+
+    #[test]
+    fn async_pipe_charges_stash_copies_sync_policies_none() {
+        let a = AsyncPipe { max_staleness: 2 };
+        // Ring depth = effective window; one copy is the live weights.
+        assert_eq!(a.weight_stash_copies(3, 8), 4); // window 5 -> 4 extra
+        assert_eq!(a.weight_stash_copies(1, 1), 0); // window clamps to 1
+        for policy in [
+            &OneFOneBKp as &dyn SchedulePolicy,
+            &GpipeFillDrain,
+            &ZeroBubbleH1,
+            &Interleaved { virtual_per_device: 2 },
+        ] {
+            assert_eq!(policy.max_staleness(), 0, "{}", policy.name());
+            assert_eq!(policy.weight_stash_copies(3, 8), 0, "{}", policy.name());
+        }
+    }
+
+    #[test]
+    fn policy_by_name_parses_async_staleness() {
+        for (spec, sigma) in
+            [("async", 1), ("async-pipe", 1), ("async:0", 0), ("async:2", 2), ("async:4", 4)]
+        {
+            let p = policy_by_name(spec).unwrap();
+            assert_eq!(p.max_staleness(), sigma, "{spec}");
+        }
+        // σ beyond the static table resolves, round-trips its exact
+        // name, and is interned (same instance on every lookup, not a
+        // fresh allocation per call).
+        let p7 = policy_by_name("async:7").unwrap();
+        assert_eq!(p7.max_staleness(), 7);
+        assert_eq!(p7.name(), "async:7");
+        assert_eq!(policy_by_name(p7.name()).unwrap().max_staleness(), 7);
+        let again = policy_by_name("async:7").unwrap();
+        assert!(std::ptr::eq(
+            p7 as *const dyn SchedulePolicy as *const (),
+            again as *const dyn SchedulePolicy as *const ()
+        ));
+        assert!(policy_by_name("async:x").is_none());
     }
 }

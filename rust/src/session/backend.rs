@@ -22,7 +22,7 @@ use anyhow::{Context, Result};
 use crate::data::{DataSource, LmTask, VisionTask};
 use crate::model::from_manifest::ManifestModel;
 use crate::pipeline::{train, TrainOpts, TrainStats};
-use crate::sim::price_schedule;
+use crate::sim::price_policy;
 
 use super::{RecoveryEvent, RunReport, Session};
 
@@ -46,7 +46,10 @@ impl ExecutionBackend for SimBackend {
     }
 
     fn run(&mut self, s: &Session) -> Result<RunReport> {
-        let sim = price_schedule(s.schedule(), s.table(), s.cluster(), s.model(), s.plan());
+        // Policy-aware pricing: synchronous policies price the
+        // session's one-round schedule; bounded-staleness policies
+        // price their steady state (barrier-free multi-round chain).
+        let sim = price_policy(s.table(), s.cluster(), s.model(), s.plan(), s.policy());
         let rounds = s.run_config().steps;
         let mut round_secs = vec![sim.round_latency; rounds];
         let mut recoveries = Vec::new();
@@ -72,6 +75,8 @@ impl ExecutionBackend for SimBackend {
             round_secs,
             throughput: sim.throughput,
             predicted_throughput: s.outcome().predicted_throughput,
+            max_staleness: s.policy().max_staleness(),
+            weight_stash_slots: s.weight_stash_slots(),
             bytes_on_network: sim.bytes_on_network,
             sim: Some(sim),
             recoveries,
@@ -201,6 +206,8 @@ fn live_report(s: &Session, stats: TrainStats, recoveries: Vec<RecoveryEvent>) -
         round_secs: stats.round_secs,
         throughput: stats.samples_per_sec,
         predicted_throughput: s.outcome().predicted_throughput,
+        max_staleness: s.policy().max_staleness(),
+        weight_stash_slots: s.weight_stash_slots(),
         bytes_on_network: 0,
         sim: None,
         recoveries,
@@ -231,6 +238,8 @@ fn merge_live_phases(
         round_secs,
         throughput: pre_fault_throughput,
         predicted_throughput: s.outcome().predicted_throughput,
+        max_staleness: s.policy().max_staleness(),
+        weight_stash_slots: s.weight_stash_slots(),
         bytes_on_network: 0,
         sim: None,
         recoveries: vec![event],

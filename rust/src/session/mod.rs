@@ -214,6 +214,14 @@ pub struct RunReport {
     pub throughput: f64,
     /// The planner's analytic Eq. 4-6 prediction, for cross-checks.
     pub predicted_throughput: f64,
+    /// Bounded-staleness budget of the session's schedule policy (0 =
+    /// synchronous: round-accumulated gradients, version-0 weights).
+    pub max_staleness: usize,
+    /// Weight-version stash ring depth the policy implies: the largest
+    /// per-stage admission window (K_p + sigma) across the plan, i.e.
+    /// how many parameter snapshots a worker may pin at once (1 = just
+    /// the live weights; synchronous policies).
+    pub weight_stash_slots: usize,
     /// Bytes moved across links in one round (sim backend; the live
     /// engine does not meter its channels).
     pub bytes_on_network: u64,
@@ -516,6 +524,21 @@ impl Session {
     /// sample-sharded form — what [`SimBackend`] prices).
     pub fn schedule(&self) -> &Schedule {
         &self.schedule
+    }
+
+    /// The weight-version stash ring depth the session's policy
+    /// implies: the largest per-stage admission window of the plan
+    /// (1 = live weights only; see [`RunReport::weight_stash_slots`]).
+    pub fn weight_stash_slots(&self) -> usize {
+        if self.policy.max_staleness() == 0 {
+            return 1;
+        }
+        self.plan()
+            .stages
+            .iter()
+            .map(|s| self.policy.effective_kp(s.kp, self.plan().num_micro))
+            .max()
+            .unwrap_or(1)
     }
 
     /// Re-attach a different fault spec without re-planning (the plan

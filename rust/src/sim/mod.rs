@@ -14,6 +14,11 @@
 //! is entirely encoded in the `Schedule` IR by its `SchedulePolicy`.
 //! [`simulate_round`] is a thin wrapper that builds the default
 //! (1F1B-K_p, sample-sharded) schedule for a plan and prices it.
+//! [`price_policy`] is the policy-aware entry: synchronous policies
+//! price as one barriered round, bounded-staleness policies as a
+//! barrier-free [`ASYNC_STEADY_ROUNDS`]-round chain normalised to
+//! per-round figures (their fill/drain amortises away — the async
+//! payoff).
 
 pub mod convergence;
 pub mod engine;
@@ -24,14 +29,26 @@ use crate::config::ClusterSpec;
 use crate::model::ModelDesc;
 use crate::planner::plan::Plan;
 use crate::profiler::ProfileTable;
-use crate::schedule::{Payload, Schedule, Sharding, Task, BWD_INPUT_FRAC, DEFAULT_POLICY};
+use crate::schedule::{
+    Payload, Schedule, SchedulePolicy, Sharding, Task, BWD_INPUT_FRAC, DEFAULT_POLICY,
+};
 
 use engine::{EventQueue, LinkSet};
+
+/// How many HPP-Rounds [`price_policy`] chains back-to-back when
+/// pricing a bounded-staleness policy: without an inter-round barrier
+/// the fill/drain of consecutive rounds overlap, and the per-round
+/// steady-state latency is the chained makespan divided by the round
+/// count.  Large enough to amortise the one fill + one drain that
+/// remain at the window edges.
+pub const ASYNC_STEADY_ROUNDS: usize = 6;
 
 /// Result of pricing one HPP-Round.
 #[derive(Debug, Clone)]
 pub struct SimResult {
     /// Wall-clock of the round (first FP start to last AllReduce end).
+    /// For a steady-state (multi-round async) pricing this is the
+    /// per-round figure: chained makespan / rounds.
     pub round_latency: f64,
     /// Samples per second.
     pub throughput: f64,
@@ -39,9 +56,16 @@ pub struct SimResult {
     pub busy: Vec<f64>,
     /// Per device: 1 - busy/span over the device's active span.
     pub bubble_fraction: Vec<f64>,
+    /// Pipeline bubble ratio of the whole round: 1 - total busy time /
+    /// (participating devices x round latency).  The cross-policy
+    /// comparison metric — per-device compute is conserved across
+    /// policies, so a strictly lower ratio means a strictly shorter
+    /// round.
+    pub round_bubble_ratio: f64,
     /// Per device: peak in-flight micro-batches (drives Eq. 3 memory).
     pub peak_inflight: Vec<usize>,
-    /// Per device: peak memory bytes (Eq. 3 with observed in-flight).
+    /// Per device: peak memory bytes (Eq. 3 with observed in-flight,
+    /// plus the weight-stash copies of a bounded-staleness schedule).
     pub peak_memory: Vec<u64>,
     /// Total bytes moved across links during the round.
     pub bytes_on_network: u64,
@@ -49,6 +73,10 @@ pub struct SimResult {
     /// its first compute task.  This is the warm-up cost the fault
     /// machinery charges a freshly replayed pipeline.
     pub fill_latency: f64,
+    /// HPP-Rounds the priced timeline encoded (1 for synchronous
+    /// policies; [`ASYNC_STEADY_ROUNDS`] for bounded-staleness
+    /// steady-state pricing).
+    pub rounds_priced: usize,
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -92,6 +120,42 @@ pub fn simulate_round(
     price_schedule(&sched, table, cluster, model, plan)
 }
 
+/// Price `plan` under `policy`, choosing the pricing form the policy's
+/// semantics call for: a synchronous policy is priced as one barriered
+/// HPP-Round ([`Schedule::for_sim`] + [`price_schedule`]); a
+/// bounded-staleness policy ([`SchedulePolicy::max_staleness`] > 0) is
+/// priced in **steady state** — [`ASYNC_STEADY_ROUNDS`] rounds chained
+/// without a barrier, per-round figures normalised by the round count —
+/// because its whole point is that round r+1's warm-up fills round r's
+/// drain.  This is the single entry the planner's `sim_select`, the
+/// session's `SimBackend` and the fault re-pricing all use, so every
+/// reported throughput compares policies on their honest semantics.
+pub fn price_policy(
+    table: &ProfileTable,
+    cluster: &ClusterSpec,
+    model: &ModelDesc,
+    plan: &Plan,
+    policy: &dyn SchedulePolicy,
+) -> SimResult {
+    if policy.max_staleness() == 0 {
+        let sched = Schedule::for_sim(plan, model, policy);
+        return price_schedule(&sched, table, cluster, model, plan);
+    }
+    let rounds = ASYNC_STEADY_ROUNDS;
+    let sched = Schedule::for_sim_rounds(plan, model, policy, rounds);
+    let mut sim = price_schedule(&sched, table, cluster, model, plan);
+    // Normalise the chained run to per-round figures.  Ratios
+    // (bubbles, throughput) are already steady-state: numerator and
+    // denominator scale together.
+    let r = rounds as f64;
+    sim.round_latency /= r;
+    for b in &mut sim.busy {
+        *b /= r;
+    }
+    sim.bytes_on_network /= rounds as u64;
+    sim
+}
+
 /// Price an explicit sample-sharded `Schedule` against the profile and
 /// link models.  Panics if the schedule deadlocks (i.e. it would fail
 /// `Schedule::validate`) — callers price planner/policy output, which
@@ -111,6 +175,7 @@ pub fn price_schedule(
     );
     assert_eq!(sched.num_micro, plan.num_micro, "schedule/plan micro mismatch");
     assert_eq!(sched.num_stages, plan.stages.len(), "schedule/plan stage mismatch");
+    let rounds = sched.rounds.max(1);
 
     let mut states: BTreeMap<usize, ExecDev> = sched
         .timelines
@@ -272,7 +337,7 @@ pub fn price_schedule(
         if stage.devices.len() > 1 {
             let ta = crate::planner::cost::allreduce_time(cluster, model, stage);
             let w = model.weight_bytes_range(stage.layers.0, stage.layers.1);
-            bytes_on_network += 2 * (stage.devices.len() as u64 - 1) * w;
+            bytes_on_network += rounds as u64 * 2 * (stage.devices.len() as u64 - 1) * w;
             round_end = round_end.max(ar_ready[p] + ta);
         }
     }
@@ -303,18 +368,30 @@ pub fn price_schedule(
             st.tl.share,
             st.peak_inflight.max(1),
         );
-        peak_memory[d] = mem.total();
+        // Bounded-staleness schedules additionally pin their weight
+        // stash; the copy count was recorded on the timeline by the
+        // policy (`weight_stash_copies`), so the priced memory is
+        // exactly what the planner budgeted.
+        let stash = st.tl.stash_copies as u64
+            * model.weight_bytes_range(stage.layers.0, stage.layers.1);
+        peak_memory[d] = mem.total() + stash;
     }
+
+    let active = busy.iter().filter(|&&b| b > 0.0).count().max(1);
+    let round_bubble_ratio =
+        (1.0 - busy.iter().sum::<f64>() / (active as f64 * round_end)).max(0.0);
 
     SimResult {
         round_latency: round_end,
-        throughput: plan.samples_per_round() as f64 / round_end,
+        throughput: (plan.samples_per_round() * rounds) as f64 / round_end,
         busy,
         bubble_fraction: bubble,
+        round_bubble_ratio,
         peak_inflight,
         peak_memory,
         bytes_on_network,
         fill_latency,
+        rounds_priced: rounds,
     }
 }
 
@@ -515,6 +592,66 @@ mod tests {
         }
         assert_eq!(zb.peak_inflight, one.peak_inflight);
         assert_eq!(zb.bytes_on_network, one.bytes_on_network);
+    }
+
+    #[test]
+    fn async_pipe_strictly_beats_zero_bubble_on_heterogeneous_chain() {
+        // Same env-C NX -> Nano chain as the ZB-H1 test.  ZB-H1 fills
+        // the drain with deferred weight-grad work but still pays the
+        // fill and the round barrier every round; bounded staleness
+        // removes the barrier entirely — in steady state round r+1's
+        // warm-up forwards run inside round r's drain — so with
+        // per-device compute conserved, both the per-round latency and
+        // the pipeline bubble ratio must be *strictly* lower.
+        use crate::schedule::{AsyncPipe, OneFOneBKp, ZeroBubbleH1};
+        let cluster = ClusterSpec::env("C", 100.0).unwrap();
+        let model = zoo::mobilenet_v2();
+        let table = ProfileTable::new(&cluster, &model);
+        let nl = model.num_layers();
+        let plan = Plan {
+            stages: vec![
+                Stage { layers: (0, nl / 3), devices: vec![0], alloc: vec![8], kp: 3 },
+                Stage { layers: (nl / 3, nl), devices: vec![3], alloc: vec![8], kp: 1 },
+            ],
+            microbatch: 8,
+            num_micro: 8,
+        };
+        let asy = price_policy(&table, &cluster, &model, &plan, &AsyncPipe { max_staleness: 2 });
+        let zb = price_policy(&table, &cluster, &model, &plan, &ZeroBubbleH1);
+        let one = price_policy(&table, &cluster, &model, &plan, &OneFOneBKp);
+        assert_eq!(asy.rounds_priced, ASYNC_STEADY_ROUNDS);
+        assert_eq!(zb.rounds_priced, 1);
+        assert!(
+            asy.round_latency < zb.round_latency,
+            "async {} !< zb-h1 {}",
+            asy.round_latency,
+            zb.round_latency
+        );
+        assert!(
+            asy.round_bubble_ratio < zb.round_bubble_ratio,
+            "async bubble {} !< zb-h1 bubble {}",
+            asy.round_bubble_ratio,
+            zb.round_bubble_ratio
+        );
+        // ... and transitively below plain 1F1B on both metrics.
+        assert!(asy.round_latency < one.round_latency);
+        assert!(asy.round_bubble_ratio < one.round_bubble_ratio);
+        // Steady-state normalisation conserves per-device compute and
+        // per-round network volume.
+        for d in [0usize, 3] {
+            assert!(
+                (asy.busy[d] - one.busy[d]).abs() < 1e-9 * one.busy[d].max(1e-12),
+                "device {d}: async busy {} vs 1f1b {}",
+                asy.busy[d],
+                one.busy[d]
+            );
+        }
+        assert_eq!(asy.bytes_on_network, one.bytes_on_network);
+        // The widened window shows up as extra in-flight residency,
+        // bounded by K_p + sigma.
+        assert!(asy.peak_inflight[0] > one.peak_inflight[0]);
+        assert!(asy.peak_inflight[0] <= 3 + 2);
+        assert!(asy.peak_memory[0] > one.peak_memory[0], "stash copies must be charged");
     }
 
     #[test]

@@ -112,7 +112,7 @@ fn prop_alloc_conserves_and_respects_limits() {
                     // Memory limits hold per device.
                     for (&d, &y) in devs.iter().zip(&alloc) {
                         let cap = asteroid::planner::memory::max_batch_under_budget(
-                            model, cfg, *i, *j, *kp, &cluster.devices[d],
+                            model, cfg, *i, *j, *kp, 0, &cluster.devices[d],
                         );
                         if y > cap {
                             return Err(format!("device {d}: alloc {y} > cap {cap}"));

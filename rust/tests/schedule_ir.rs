@@ -1,11 +1,11 @@
 //! Schedule IR invariants across a plan grid, plus the exact
 //! simulator/cost-model cross-check for homogeneous chains.
 //!
-//! The grid covers (stages x micros x K_p) for both built-in policies
-//! and both sharding modes; every generated timeline must be
-//! dependency-valid (no Bwd before its Fwd, no Recv before the
-//! matching Send, the K_p in-flight bound respected) and the whole
-//! schedule deadlock-free.
+//! The grid covers (stages x micros x K_p x staleness) for all five
+//! built-in policies and both sharding modes; every generated timeline
+//! must be dependency-valid (no Bwd before its Fwd, no Recv before the
+//! matching Send, the K_p + staleness in-flight bound respected, weight
+//! version tags consistent) and the whole schedule deadlock-free.
 
 use asteroid::config::ClusterSpec;
 use asteroid::model::{Layer, ModelDesc};
@@ -53,7 +53,7 @@ fn chain_plan(model: &ModelDesc, stages: usize, microbatch: usize, num_micro: us
 #[test]
 fn task_lists_dependency_valid_across_grid() {
     let model = uniform_model(24);
-    let policies: [&'static dyn SchedulePolicy; 4] = builtin_policies();
+    let policies: [&'static dyn SchedulePolicy; 5] = builtin_policies();
     for &stages in &[1usize, 2, 3, 4] {
         for &m in &[1usize, 2, 4, 8] {
             for &kp_override in &[0usize, 1, 2, m] {
@@ -141,6 +141,77 @@ fn inflight_peak_equals_effective_kp_for_every_policy() {
                     peak,
                     policy.effective_kp(kp, n),
                     "{}: n={n} kp={kp}",
+                    policy.name()
+                );
+            }
+        }
+    }
+}
+
+/// Satellite property: over every policy × (n_micros, K_p, staleness)
+/// grid point, no task observes a weight version older than the
+/// policy's `max_staleness` bound — i.e. the admission window never
+/// runs more than σ forwards ahead of the policy's synchronous
+/// frontier (`effective_kp − max_staleness`), no backward applies a
+/// gradient computed outside the stash window — and the in-flight
+/// peak still equals exactly `effective_kp` (the value Eq. 3 charges).
+#[test]
+fn staleness_bound_and_inflight_peak_across_policy_grid() {
+    use asteroid::schedule::policy_by_name;
+    let mut policies: Vec<&'static dyn SchedulePolicy> = builtin_policies().to_vec();
+    for sigma in [0usize, 2, 3] {
+        policies.push(policy_by_name(&format!("async:{sigma}")).unwrap());
+    }
+    for policy in policies {
+        let sigma = policy.max_staleness();
+        for n in [1usize, 2, 3, 5, 8, 13] {
+            for kp in 1..=(n + 2) {
+                let micros: Vec<usize> = (0..n).collect();
+                let ops = policy.compute_order(&micros, kp);
+                let window = policy.effective_kp(kp, n);
+                let sync_frontier = window - sigma.min(window - 1);
+                let mut inflight = 0usize;
+                let mut peak = 0usize;
+                let mut updates = 0usize; // one per Bwd under σ > 0
+                let mut read_at: std::collections::HashMap<usize, usize> =
+                    std::collections::HashMap::new();
+                for op in &ops {
+                    match op {
+                        ComputeOp::Fwd(m) => {
+                            inflight += 1;
+                            peak = peak.max(inflight);
+                            read_at.insert(*m, updates);
+                            // Staleness: forwards admitted beyond the
+                            // synchronous frontier never exceed σ.
+                            let ahead = inflight.saturating_sub(sync_frontier);
+                            assert!(
+                                ahead <= sigma,
+                                "{}: n={n} kp={kp}: Fwd({m}) is {ahead} updates \
+                                 beyond the sync frontier (σ = {sigma})",
+                                policy.name()
+                            );
+                        }
+                        ComputeOp::Bwd(m) => {
+                            inflight -= 1;
+                            if sigma > 0 {
+                                // Weight stashing: the gradient applied
+                                // now was computed inside the window.
+                                let lag = updates - read_at[m];
+                                assert!(
+                                    lag < window,
+                                    "{}: n={n} kp={kp}: Bwd({m}) lag {lag}",
+                                    policy.name()
+                                );
+                                updates += 1;
+                            }
+                        }
+                        ComputeOp::BwdW(_) => {}
+                    }
+                }
+                assert_eq!(
+                    peak,
+                    window,
+                    "{}: n={n} kp={kp}: in-flight peak != effective_kp",
                     policy.name()
                 );
             }

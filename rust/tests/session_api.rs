@@ -243,6 +243,45 @@ fn zero_bubble_session_plans_executes_and_replays_end_to_end() {
     assert!(r.new_throughput > 0.0 && r.refill_s > 0.0);
 }
 
+#[test]
+fn async_session_plans_prices_and_replays_end_to_end() {
+    // Acceptance check for the bounded-staleness policy: selectable via
+    // `.schedule(policy_by_name("async:<s>"))`, planned with
+    // stash-aware budgets, priced at its steady state, recovered with
+    // the full in-flight window — and the staleness fields surface in
+    // the RunReport.
+    use asteroid::schedule::policy_by_name;
+    let policy = policy_by_name("async:2").unwrap();
+    let s = Session::builder()
+        .model("efficientnet-b1")
+        .cluster(ClusterSpec::env("D", 100.0).unwrap())
+        .train(TrainConfig::new(256, 16))
+        .schedule(policy)
+        .steps(6)
+        .fault(FaultSpec::last_planned().after(3))
+        .build()
+        .unwrap();
+    assert_eq!(s.schedule().policy, "async:2");
+    assert_eq!(s.schedule().max_staleness, 2);
+    s.schedule().validate().unwrap();
+    let report = s.run(&mut SimBackend::default()).unwrap();
+    assert_eq!(report.max_staleness, 2);
+    assert!(report.weight_stash_slots > 1, "window must exceed the live copy");
+    let sim = report.sim.as_ref().unwrap();
+    assert_eq!(sim.rounds_priced, asteroid::sim::ASYNC_STEADY_ROUNDS);
+    assert!(report.throughput > 0.0);
+    assert_eq!(report.recoveries.len(), 1);
+    assert!(!report.recoveries[0].report.replay_micros.is_empty());
+
+    // A synchronous session reports no staleness and single-round
+    // pricing.
+    let sync = builder("B").steps(2).build().unwrap();
+    let sync_report = sync.run(&mut SimBackend::default()).unwrap();
+    assert_eq!(sync_report.max_staleness, 0);
+    assert_eq!(sync_report.weight_stash_slots, 1);
+    assert_eq!(sync_report.sim.as_ref().unwrap().rounds_priced, 1);
+}
+
 // ------------------------------------------------- fault via FaultSpec
 
 #[test]
