@@ -1,0 +1,50 @@
+//! `asteroid-worker` — one pipeline stage slot as a standalone edge
+//! process.
+//!
+//! ```text
+//! asteroid-worker --listen 127.0.0.1:7101 [--quiet]
+//! ```
+//!
+//! The worker binds its listen address, prints `listening on <addr>`
+//! (launch scripts and tests parse this — with `--listen host:0` the
+//! kernel picks the port), and then serves the
+//! [`asteroid::comm::rpc`] protocol until the driver says `Exit`, the
+//! control connection dies, or a `Die` fault injection terminates the
+//! process unclean (exit code 86).
+//!
+//! Everything else — which stage it plays, the schedule script, peer
+//! addresses, optimizer, heartbeat period — arrives over the wire from
+//! the `asteroid train --backend rpc` driver; restarting a run never
+//! needs worker-side flags.
+
+use std::net::TcpListener;
+
+use anyhow::{Context, Result};
+
+use asteroid::pipeline::rpc_worker::{serve, ServeOpts, ServeOutcome};
+use asteroid::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env(&["quiet"])?;
+    if args.positional.first().map(String::as_str) == Some("help") {
+        eprintln!("usage: asteroid-worker --listen <host:port> [--quiet]");
+        return Ok(());
+    }
+    let listen = args.str_or("listen", "127.0.0.1:0");
+    let listener = TcpListener::bind(&listen)
+        .with_context(|| format!("binding worker listener on {listen}"))?;
+    // Parsed by launchers: the actual bound address (port 0 resolved).
+    // Explicit flush — stdout is block-buffered when piped, and the
+    // launcher blocks on this line.
+    println!("listening on {}", listener.local_addr()?);
+    use std::io::Write as _;
+    std::io::stdout().flush().ok();
+
+    let opts = ServeOpts { die_for_real: true, verbose: !args.has_flag("quiet") };
+    match serve(listener, opts)? {
+        ServeOutcome::Clean => Ok(()),
+        // Unreachable with die_for_real (the process exits instead),
+        // but keep the mapping total.
+        ServeOutcome::Died => std::process::exit(86),
+    }
+}

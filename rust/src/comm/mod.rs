@@ -1,9 +1,12 @@
-//! Communication-volume analytics (paper §2.2-2.3, Eqs. 1-2, Fig. 1,
-//! Table 2).
+//! Communication: closed-form volume analytics (paper §2.2-2.3,
+//! Eqs. 1-2, Fig. 1, Table 2) and the live [`rpc`] transport of the
+//! multi-process edge backend.
 //!
-//! These closed forms quantify why HPP beats both plain DP and HDP on
+//! The closed forms quantify why HPP beats both plain DP and HDP on
 //! edge networks: HPP confines AllReduce to the parameter-light layers
 //! it replicates and avoids cutting through huge feature maps.
+
+pub mod rpc;
 
 use crate::model::ModelDesc;
 use crate::planner::plan::Plan;

@@ -1,0 +1,956 @@
+//! Length-prefixed TCP framing + the RPC message set of the
+//! multi-process edge backend (`session::RpcBackend` +
+//! `asteroid-worker`).
+//!
+//! Two planes share one wire format:
+//!
+//! * **control plane** (driver <-> worker): worker assignment
+//!   ([`AssignSpec`]: plan slice + compute script + peer addresses),
+//!   round control, heartbeats, round reports, parameter
+//!   fetch/restore, group round-sync mediation, and fault injection;
+//! * **data plane** (worker <-> worker): boundary activation and
+//!   gradient tensors between adjacent pipeline stages.
+//!
+//! The codec is a hand-rolled binary format (the build is offline:
+//! no serde/bincode), little-endian for payload scalars, with a
+//! 9-byte frame header:
+//!
+//! ```text
+//!   magic "ASTR" (4) | version (1) | payload length, big-endian u32 (4)
+//! ```
+//!
+//! Readers use `read_exact`, so partial reads (TCP segmentation) are
+//! handled by construction; frames above [`MAX_FRAME`] are rejected
+//! *before* any allocation, so a corrupt or hostile peer cannot make a
+//! worker allocate gigabytes from four bytes of length.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+use crate::pipeline::optimizer::OptimizerCfg;
+use crate::pipeline::step::RefLayerSpec;
+use crate::runtime::{Tensor, TensorData};
+use crate::schedule::ComputeOp;
+
+/// Frame magic: an `asteroid-worker` port answers nothing else.
+pub const MAGIC: [u8; 4] = *b"ASTR";
+/// Wire-format version; bumped on any incompatible codec change.
+pub const VERSION: u8 = 1;
+/// Hard ceiling on one frame's payload (activations of deep stages
+/// stay far below this; anything larger is a framing error).
+pub const MAX_FRAME: usize = 256 << 20;
+/// Frame header length: magic + version + payload length.
+pub const HEADER_LEN: usize = 9;
+
+// ------------------------------------------------------------ framing
+
+/// Write one frame (header + payload) and flush.
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> Result<()> {
+    if payload.len() > MAX_FRAME {
+        bail!("frame payload {} exceeds MAX_FRAME {}", payload.len(), MAX_FRAME);
+    }
+    let mut header = [0u8; HEADER_LEN];
+    header[..4].copy_from_slice(&MAGIC);
+    header[4] = VERSION;
+    header[5..9].copy_from_slice(&(payload.len() as u32).to_be_bytes());
+    w.write_all(&header)?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame's payload.  Blocks until a whole frame arrived
+/// (partial reads are reassembled by `read_exact`); rejects bad magic,
+/// version mismatches and oversized lengths before allocating.
+pub fn read_frame(r: &mut impl Read) -> Result<Vec<u8>> {
+    let mut header = [0u8; HEADER_LEN];
+    r.read_exact(&mut header).context("reading frame header")?;
+    if header[..4] != MAGIC {
+        bail!("bad frame magic {:02x?} (not an asteroid peer?)", &header[..4]);
+    }
+    if header[4] != VERSION {
+        bail!("wire version {} != {}", header[4], VERSION);
+    }
+    let len = u32::from_be_bytes([header[5], header[6], header[7], header[8]]) as usize;
+    if len > MAX_FRAME {
+        bail!("frame length {len} exceeds MAX_FRAME {MAX_FRAME}");
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload).context("reading frame payload")?;
+    Ok(payload)
+}
+
+/// Encode + frame + send one message.
+pub fn send_msg(w: &mut impl Write, msg: &RpcMsg) -> Result<()> {
+    write_frame(w, &msg.encode())
+}
+
+/// Receive + decode one message.
+pub fn recv_msg(r: &mut impl Read) -> Result<RpcMsg> {
+    RpcMsg::decode(&read_frame(r)?)
+}
+
+// ------------------------------------------------------------- codec
+
+/// Append-only binary encoder (little-endian scalars).
+#[derive(Default)]
+pub struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    pub fn f32s(&mut self, v: &[f32]) {
+        // One reservation up front: these carry whole boundary tensors
+        // on the data-plane hot path, and growth-reallocating per
+        // element would copy the buffer O(log n) times.
+        self.buf.reserve(4 + 4 * v.len());
+        self.u32(v.len() as u32);
+        for x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    pub fn i32s(&mut self, v: &[i32]) {
+        self.buf.reserve(4 + 4 * v.len());
+        self.u32(v.len() as u32);
+        for x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    pub fn tensor(&mut self, t: &Tensor) {
+        self.u8(t.shape.len() as u8);
+        for &d in &t.shape {
+            self.u32(d as u32);
+        }
+        match &t.data {
+            TensorData::F32(v) => {
+                self.u8(0);
+                self.f32s(v);
+            }
+            TensorData::I32(v) => {
+                self.u8(1);
+                self.i32s(v);
+            }
+        }
+    }
+}
+
+/// Bounds-checked binary decoder over one frame payload.
+pub struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    pub fn new(buf: &'a [u8]) -> Dec<'a> {
+        Dec { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!(
+                "truncated message: wanted {n} bytes at offset {}, frame has {}",
+                self.pos,
+                self.buf.len()
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn done(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+
+    /// Bytes left in the frame.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Read an element count and validate it against the bytes that
+    /// are actually left (each element occupies at least
+    /// `min_elem_bytes`), so a corrupt count can never drive a huge
+    /// `Vec::with_capacity` — the frame-level `MAX_FRAME` cap bounds
+    /// the payload, this bounds what the payload may claim to contain.
+    pub fn count(&mut self, min_elem_bytes: usize) -> Result<usize> {
+        let n = self.u32()? as usize;
+        let cap = self.remaining() / min_elem_bytes.max(1);
+        if n > cap {
+            bail!(
+                "corrupt count: {n} elements claimed, at most {cap} fit in the \
+                 {} remaining frame bytes",
+                self.remaining()
+            );
+        }
+        Ok(n)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        Ok(String::from_utf8(self.take(n)?.to_vec()).context("non-utf8 string")?)
+    }
+
+    pub fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n.checked_mul(4).context("f32 vec overflow")?)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn i32s(&mut self) -> Result<Vec<i32>> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n.checked_mul(4).context("i32 vec overflow")?)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn tensor(&mut self) -> Result<Tensor> {
+        let ndim = self.u8()? as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(self.u32()? as usize);
+        }
+        let elems: usize = shape.iter().product();
+        let tag = self.u8()?;
+        let t = match tag {
+            0 => Tensor::from_f32(&shape, self.f32s()?),
+            1 => Tensor::from_i32(&shape, self.i32s()?),
+            other => bail!("unknown tensor dtype tag {other}"),
+        };
+        if t.elements() != elems {
+            bail!("tensor data length does not match shape {shape:?}");
+        }
+        Ok(t)
+    }
+}
+
+// ----------------------------------------------------------- messages
+
+/// What a freshly-accepted connection is for — the first frame on
+/// every connection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ConnRole {
+    /// The driver's control connection.
+    Control,
+    /// A peer worker's data connection (identified by its position).
+    Data { stage: usize, slot: usize },
+}
+
+/// Saved parameter state of one reference layer (checkpoint /
+/// warm-start unit).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerState {
+    /// Global model layer index.
+    pub layer: usize,
+    pub scale: Vec<f32>,
+    pub bias: Vec<f32>,
+}
+
+/// Everything one worker needs to run its pipeline slice: the plan
+/// slice, the schedule script, the reference-layer dimensions, its
+/// peers' data addresses and the round-sync/heartbeat configuration.
+/// Re-sent in full after a fault (retasked workers get new scripts and
+/// layer ranges; `warm_start` restores the checkpointed weights).
+#[derive(Debug, Clone)]
+pub struct AssignSpec {
+    /// Monotone assignment generation (driver-wide).  Every data-plane
+    /// tensor frame carries its sender's generation, and receivers
+    /// drop frames from other generations — so a stale activation
+    /// still in flight from an aborted round can never be consumed as
+    /// fresh input by the replayed round after a recovery re-task.
+    pub generation: u64,
+    /// Global cluster device id this worker plays.
+    pub device: usize,
+    pub stage: usize,
+    pub slot: usize,
+    pub num_stages: usize,
+    /// Replicas in this stage's group (driver-mediated round sync is
+    /// only engaged when > 1).
+    pub group_size: usize,
+    /// This device's ordered compute script for one HPP-Round
+    /// (`Schedule::compute_script`).
+    pub script: Vec<ComputeOp>,
+    /// Bounded-staleness stash ring depth (0 = synchronous).
+    pub stash_slots: usize,
+    pub num_micro: usize,
+    pub microbatch: usize,
+    pub seed: u64,
+    pub opt: OptimizerCfg,
+    /// Worker -> driver heartbeat period, milliseconds.
+    pub heartbeat_ms: u64,
+    /// Reference-layer dimensions of this stage's layer range.
+    pub layers: Vec<RefLayerSpec>,
+    /// Data addresses of the next stage's slots (activation fan-out).
+    pub next: Vec<String>,
+    /// Data addresses of the previous stage's slots (gradient fan-out).
+    pub prev: Vec<String>,
+    /// Warm-start parameters by global layer index (fault restore);
+    /// empty = fresh seeded init.
+    pub warm_start: Vec<LayerState>,
+}
+
+/// One message of either plane.  The `u8` tags below are the wire
+/// format — append-only (never renumber a released tag).
+#[derive(Debug, Clone)]
+pub enum RpcMsg {
+    /// First frame on every connection.
+    Hello { role: ConnRole },
+    /// Driver -> worker: full (re)assignment.
+    Assign(Box<AssignSpec>),
+    /// Worker -> driver: assignment applied, data links up.
+    Ready { device: usize },
+    /// Driver -> worker: begin HPP-Round `round`.
+    StartRound { round: usize },
+    /// Stage input for a micro-batch (driver -> stage 0, or
+    /// prev-stage worker -> this worker).  `gen` is the sender's
+    /// assignment generation; receivers drop other generations.
+    Act { gen: u64, micro: usize, t: Tensor },
+    /// Head-stage targets for a micro-batch (driver -> last stage).
+    Targets { gen: u64, micro: usize, t: Tensor },
+    /// Gradient w.r.t. a stage's output (next-stage worker -> this).
+    Grad { gen: u64, micro: usize, t: Tensor },
+    /// Worker -> driver: periodic liveness beacon.
+    Heartbeat { device: usize, seq: u64 },
+    /// Worker -> driver: round finished on this worker.
+    RoundDone { device: usize, round: usize, loss_sum: f64, micros: usize, compute_s: f64 },
+    /// Worker -> driver: replicated-stage round sync contribution
+    /// (kind 0 = summed gradients of a synchronous round, kind 1 =
+    /// parameters for bounded-staleness averaging).
+    SyncRequest { device: usize, kind: u8, flat: Vec<f32> },
+    /// Driver -> worker: the group-reduced buffer.
+    SyncResult { flat: Vec<f32> },
+    /// Driver -> worker: abandon the current round (fault recovery);
+    /// the worker discards in-flight state and awaits re-assignment.
+    AbortRound,
+    /// Worker -> driver: the round died under it (peer loss / abort);
+    /// the worker is idle again and awaits instructions.
+    RoundFailed { device: usize, error: String },
+    /// Driver -> worker: send back the current parameters.
+    FetchParams,
+    /// Worker -> driver: checkpoint of this worker's layer states.
+    Params { layers: Vec<LayerState> },
+    /// Driver -> worker: clean shutdown (worker answers `Bye`).
+    Exit,
+    /// Driver -> worker: die *immediately and unclean* — the fault
+    /// injection the integration tests use to make a real process
+    /// disappear mid-round.
+    Die,
+    /// Worker -> driver: clean-shutdown acknowledgement.
+    Bye,
+    /// Worker -> driver: unrecoverable worker error.
+    Fatal { device: usize, error: String },
+}
+
+const T_HELLO: u8 = 1;
+const T_ASSIGN: u8 = 2;
+const T_READY: u8 = 3;
+const T_START_ROUND: u8 = 4;
+const T_ACT: u8 = 5;
+const T_TARGETS: u8 = 6;
+const T_GRAD: u8 = 7;
+const T_HEARTBEAT: u8 = 8;
+const T_ROUND_DONE: u8 = 9;
+const T_SYNC_REQUEST: u8 = 10;
+const T_SYNC_RESULT: u8 = 11;
+const T_ABORT_ROUND: u8 = 12;
+const T_ROUND_FAILED: u8 = 13;
+const T_FETCH_PARAMS: u8 = 14;
+const T_PARAMS: u8 = 15;
+const T_EXIT: u8 = 16;
+const T_DIE: u8 = 17;
+const T_BYE: u8 = 18;
+const T_FATAL: u8 = 19;
+
+fn enc_op(e: &mut Enc, op: &ComputeOp) {
+    match *op {
+        ComputeOp::Fwd(m) => {
+            e.u8(0);
+            e.u32(m as u32);
+        }
+        ComputeOp::Bwd(m) => {
+            e.u8(1);
+            e.u32(m as u32);
+        }
+        ComputeOp::BwdW(m) => {
+            e.u8(2);
+            e.u32(m as u32);
+        }
+    }
+}
+
+fn dec_op(d: &mut Dec) -> Result<ComputeOp> {
+    let tag = d.u8()?;
+    let m = d.u32()? as usize;
+    Ok(match tag {
+        0 => ComputeOp::Fwd(m),
+        1 => ComputeOp::Bwd(m),
+        2 => ComputeOp::BwdW(m),
+        other => bail!("unknown compute-op tag {other}"),
+    })
+}
+
+fn enc_opt(e: &mut Enc, opt: &OptimizerCfg) {
+    match *opt {
+        OptimizerCfg::Sgd { lr, momentum } => {
+            e.u8(0);
+            e.f32s(&[lr, momentum]);
+        }
+        OptimizerCfg::Adam { lr, beta1, beta2, eps } => {
+            e.u8(1);
+            e.f32s(&[lr, beta1, beta2, eps]);
+        }
+    }
+}
+
+fn dec_opt(d: &mut Dec) -> Result<OptimizerCfg> {
+    let tag = d.u8()?;
+    let v = d.f32s()?;
+    Ok(match (tag, v.as_slice()) {
+        (0, [lr, momentum]) => OptimizerCfg::Sgd { lr: *lr, momentum: *momentum },
+        (1, [lr, b1, b2, eps]) => {
+            OptimizerCfg::Adam { lr: *lr, beta1: *b1, beta2: *b2, eps: *eps }
+        }
+        _ => bail!("bad optimizer encoding (tag {tag}, {} params)", v.len()),
+    })
+}
+
+fn enc_layer_state(e: &mut Enc, s: &LayerState) {
+    e.u64(s.layer as u64);
+    e.f32s(&s.scale);
+    e.f32s(&s.bias);
+}
+
+fn dec_layer_state(d: &mut Dec) -> Result<LayerState> {
+    Ok(LayerState { layer: d.u64()? as usize, scale: d.f32s()?, bias: d.f32s()? })
+}
+
+impl RpcMsg {
+    /// Short tag name for logs/errors.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            RpcMsg::Hello { .. } => "Hello",
+            RpcMsg::Assign(_) => "Assign",
+            RpcMsg::Ready { .. } => "Ready",
+            RpcMsg::StartRound { .. } => "StartRound",
+            RpcMsg::Act { .. } => "Act",
+            RpcMsg::Targets { .. } => "Targets",
+            RpcMsg::Grad { .. } => "Grad",
+            RpcMsg::Heartbeat { .. } => "Heartbeat",
+            RpcMsg::RoundDone { .. } => "RoundDone",
+            RpcMsg::SyncRequest { .. } => "SyncRequest",
+            RpcMsg::SyncResult { .. } => "SyncResult",
+            RpcMsg::AbortRound => "AbortRound",
+            RpcMsg::RoundFailed { .. } => "RoundFailed",
+            RpcMsg::FetchParams => "FetchParams",
+            RpcMsg::Params { .. } => "Params",
+            RpcMsg::Exit => "Exit",
+            RpcMsg::Die => "Die",
+            RpcMsg::Bye => "Bye",
+            RpcMsg::Fatal { .. } => "Fatal",
+        }
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Enc::default();
+        match self {
+            RpcMsg::Hello { role } => {
+                e.u8(T_HELLO);
+                match role {
+                    ConnRole::Control => e.u8(0),
+                    ConnRole::Data { stage, slot } => {
+                        e.u8(1);
+                        e.u32(*stage as u32);
+                        e.u32(*slot as u32);
+                    }
+                }
+            }
+            RpcMsg::Assign(a) => {
+                e.u8(T_ASSIGN);
+                e.u64(a.generation);
+                e.u64(a.device as u64);
+                e.u32(a.stage as u32);
+                e.u32(a.slot as u32);
+                e.u32(a.num_stages as u32);
+                e.u32(a.group_size as u32);
+                e.u32(a.script.len() as u32);
+                for op in &a.script {
+                    enc_op(&mut e, op);
+                }
+                e.u32(a.stash_slots as u32);
+                e.u32(a.num_micro as u32);
+                e.u32(a.microbatch as u32);
+                e.u64(a.seed);
+                enc_opt(&mut e, &a.opt);
+                e.u64(a.heartbeat_ms);
+                e.u32(a.layers.len() as u32);
+                for l in &a.layers {
+                    e.u64(l.layer as u64);
+                    e.u32(l.in_elems as u32);
+                    e.u32(l.out_elems as u32);
+                    e.u8(u8::from(l.head));
+                }
+                e.u32(a.next.len() as u32);
+                for s in &a.next {
+                    e.str(s);
+                }
+                e.u32(a.prev.len() as u32);
+                for s in &a.prev {
+                    e.str(s);
+                }
+                e.u32(a.warm_start.len() as u32);
+                for s in &a.warm_start {
+                    enc_layer_state(&mut e, s);
+                }
+            }
+            RpcMsg::Ready { device } => {
+                e.u8(T_READY);
+                e.u64(*device as u64);
+            }
+            RpcMsg::StartRound { round } => {
+                e.u8(T_START_ROUND);
+                e.u64(*round as u64);
+            }
+            RpcMsg::Act { gen, micro, t } => {
+                e.u8(T_ACT);
+                e.u64(*gen);
+                e.u64(*micro as u64);
+                e.tensor(t);
+            }
+            RpcMsg::Targets { gen, micro, t } => {
+                e.u8(T_TARGETS);
+                e.u64(*gen);
+                e.u64(*micro as u64);
+                e.tensor(t);
+            }
+            RpcMsg::Grad { gen, micro, t } => {
+                e.u8(T_GRAD);
+                e.u64(*gen);
+                e.u64(*micro as u64);
+                e.tensor(t);
+            }
+            RpcMsg::Heartbeat { device, seq } => {
+                e.u8(T_HEARTBEAT);
+                e.u64(*device as u64);
+                e.u64(*seq);
+            }
+            RpcMsg::RoundDone { device, round, loss_sum, micros, compute_s } => {
+                e.u8(T_ROUND_DONE);
+                e.u64(*device as u64);
+                e.u64(*round as u64);
+                e.f64(*loss_sum);
+                e.u64(*micros as u64);
+                e.f64(*compute_s);
+            }
+            RpcMsg::SyncRequest { device, kind, flat } => {
+                e.u8(T_SYNC_REQUEST);
+                e.u64(*device as u64);
+                e.u8(*kind);
+                e.f32s(flat);
+            }
+            RpcMsg::SyncResult { flat } => {
+                e.u8(T_SYNC_RESULT);
+                e.f32s(flat);
+            }
+            RpcMsg::AbortRound => e.u8(T_ABORT_ROUND),
+            RpcMsg::RoundFailed { device, error } => {
+                e.u8(T_ROUND_FAILED);
+                e.u64(*device as u64);
+                e.str(error);
+            }
+            RpcMsg::FetchParams => e.u8(T_FETCH_PARAMS),
+            RpcMsg::Params { layers } => {
+                e.u8(T_PARAMS);
+                e.u32(layers.len() as u32);
+                for s in layers {
+                    enc_layer_state(&mut e, s);
+                }
+            }
+            RpcMsg::Exit => e.u8(T_EXIT),
+            RpcMsg::Die => e.u8(T_DIE),
+            RpcMsg::Bye => e.u8(T_BYE),
+            RpcMsg::Fatal { device, error } => {
+                e.u8(T_FATAL);
+                e.u64(*device as u64);
+                e.str(error);
+            }
+        }
+        e.into_bytes()
+    }
+
+    pub fn decode(payload: &[u8]) -> Result<RpcMsg> {
+        let mut d = Dec::new(payload);
+        let tag = d.u8().context("empty frame")?;
+        let msg = match tag {
+            T_HELLO => {
+                let role = match d.u8()? {
+                    0 => ConnRole::Control,
+                    1 => ConnRole::Data {
+                        stage: d.u32()? as usize,
+                        slot: d.u32()? as usize,
+                    },
+                    other => bail!("unknown connection role {other}"),
+                };
+                RpcMsg::Hello { role }
+            }
+            T_ASSIGN => {
+                let generation = d.u64()?;
+                let device = d.u64()? as usize;
+                let stage = d.u32()? as usize;
+                let slot = d.u32()? as usize;
+                let num_stages = d.u32()? as usize;
+                let group_size = d.u32()? as usize;
+                let n_ops = d.count(5)?; // op = tag u8 + micro u32
+                let mut script = Vec::with_capacity(n_ops);
+                for _ in 0..n_ops {
+                    script.push(dec_op(&mut d)?);
+                }
+                let stash_slots = d.u32()? as usize;
+                let num_micro = d.u32()? as usize;
+                let microbatch = d.u32()? as usize;
+                let seed = d.u64()?;
+                let opt = dec_opt(&mut d)?;
+                let heartbeat_ms = d.u64()?;
+                let n_layers = d.count(17)?; // u64 + 2 x u32 + u8
+                let mut layers = Vec::with_capacity(n_layers);
+                for _ in 0..n_layers {
+                    layers.push(RefLayerSpec {
+                        layer: d.u64()? as usize,
+                        in_elems: d.u32()? as usize,
+                        out_elems: d.u32()? as usize,
+                        head: d.u8()? != 0,
+                    });
+                }
+                let n_next = d.count(4)?; // string length prefix
+                let mut next = Vec::with_capacity(n_next);
+                for _ in 0..n_next {
+                    next.push(d.str()?);
+                }
+                let n_prev = d.count(4)?;
+                let mut prev = Vec::with_capacity(n_prev);
+                for _ in 0..n_prev {
+                    prev.push(d.str()?);
+                }
+                let n_warm = d.count(16)?; // u64 + 2 empty-f32s prefixes
+                let mut warm_start = Vec::with_capacity(n_warm);
+                for _ in 0..n_warm {
+                    warm_start.push(dec_layer_state(&mut d)?);
+                }
+                RpcMsg::Assign(Box::new(AssignSpec {
+                    generation,
+                    device,
+                    stage,
+                    slot,
+                    num_stages,
+                    group_size,
+                    script,
+                    stash_slots,
+                    num_micro,
+                    microbatch,
+                    seed,
+                    opt,
+                    heartbeat_ms,
+                    layers,
+                    next,
+                    prev,
+                    warm_start,
+                }))
+            }
+            T_READY => RpcMsg::Ready { device: d.u64()? as usize },
+            T_START_ROUND => RpcMsg::StartRound { round: d.u64()? as usize },
+            T_ACT => RpcMsg::Act { gen: d.u64()?, micro: d.u64()? as usize, t: d.tensor()? },
+            T_TARGETS => {
+                RpcMsg::Targets { gen: d.u64()?, micro: d.u64()? as usize, t: d.tensor()? }
+            }
+            T_GRAD => RpcMsg::Grad { gen: d.u64()?, micro: d.u64()? as usize, t: d.tensor()? },
+            T_HEARTBEAT => RpcMsg::Heartbeat { device: d.u64()? as usize, seq: d.u64()? },
+            T_ROUND_DONE => RpcMsg::RoundDone {
+                device: d.u64()? as usize,
+                round: d.u64()? as usize,
+                loss_sum: d.f64()?,
+                micros: d.u64()? as usize,
+                compute_s: d.f64()?,
+            },
+            T_SYNC_REQUEST => RpcMsg::SyncRequest {
+                device: d.u64()? as usize,
+                kind: d.u8()?,
+                flat: d.f32s()?,
+            },
+            T_SYNC_RESULT => RpcMsg::SyncResult { flat: d.f32s()? },
+            T_ABORT_ROUND => RpcMsg::AbortRound,
+            T_ROUND_FAILED => RpcMsg::RoundFailed {
+                device: d.u64()? as usize,
+                error: d.str()?,
+            },
+            T_FETCH_PARAMS => RpcMsg::FetchParams,
+            T_PARAMS => {
+                let n = d.count(16)?;
+                let mut layers = Vec::with_capacity(n);
+                for _ in 0..n {
+                    layers.push(dec_layer_state(&mut d)?);
+                }
+                RpcMsg::Params { layers }
+            }
+            T_EXIT => RpcMsg::Exit,
+            T_DIE => RpcMsg::Die,
+            T_BYE => RpcMsg::Bye,
+            T_FATAL => RpcMsg::Fatal { device: d.u64()? as usize, error: d.str()? },
+            other => bail!("unknown message tag {other}"),
+        };
+        if !d.done() {
+            bail!("{} bytes of trailing garbage after {}", payload.len() - d.pos, msg.kind());
+        }
+        Ok(msg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+    use std::net::{TcpListener, TcpStream};
+
+    fn roundtrip(msg: &RpcMsg) -> RpcMsg {
+        RpcMsg::decode(&msg.encode()).unwrap()
+    }
+
+    #[test]
+    fn codec_roundtrips_control_messages() {
+        let spec = AssignSpec {
+            generation: 3,
+            device: 2,
+            stage: 1,
+            slot: 0,
+            num_stages: 3,
+            group_size: 1,
+            script: vec![ComputeOp::Fwd(0), ComputeOp::Bwd(0), ComputeOp::BwdW(0)],
+            stash_slots: 2,
+            num_micro: 4,
+            microbatch: 2,
+            seed: 42,
+            opt: OptimizerCfg::Sgd { lr: 0.05, momentum: 0.9 },
+            heartbeat_ms: 100,
+            layers: vec![RefLayerSpec { layer: 3, in_elems: 8, out_elems: 4, head: true }],
+            next: vec!["127.0.0.1:7000".into()],
+            prev: vec![],
+            warm_start: vec![LayerState {
+                layer: 3,
+                scale: vec![1.0, 2.0],
+                bias: vec![0.5],
+            }],
+        };
+        match roundtrip(&RpcMsg::Assign(Box::new(spec.clone()))) {
+            RpcMsg::Assign(a) => {
+                assert_eq!(a.generation, 3);
+                assert_eq!(a.device, 2);
+                assert_eq!(a.script, spec.script);
+                assert_eq!(a.layers.len(), 1);
+                assert!(a.layers[0].head);
+                assert_eq!(a.next, spec.next);
+                assert_eq!(a.warm_start, spec.warm_start);
+                match a.opt {
+                    OptimizerCfg::Sgd { lr, momentum } => {
+                        assert_eq!(lr, 0.05);
+                        assert_eq!(momentum, 0.9);
+                    }
+                    other => panic!("wrong optimizer {other:?}"),
+                }
+            }
+            other => panic!("decoded {}", other.kind()),
+        }
+        match roundtrip(&RpcMsg::RoundDone {
+            device: 1,
+            round: 7,
+            loss_sum: 2.5,
+            micros: 4,
+            compute_s: 0.25,
+        }) {
+            RpcMsg::RoundDone { device, round, loss_sum, micros, compute_s } => {
+                assert_eq!((device, round, micros), (1, 7, 4));
+                assert_eq!(loss_sum, 2.5);
+                assert_eq!(compute_s, 0.25);
+            }
+            other => panic!("decoded {}", other.kind()),
+        }
+        for msg in [RpcMsg::Exit, RpcMsg::Die, RpcMsg::Bye, RpcMsg::AbortRound, RpcMsg::FetchParams]
+        {
+            assert_eq!(roundtrip(&msg).kind(), msg.kind());
+        }
+        match roundtrip(&RpcMsg::Hello { role: ConnRole::Data { stage: 2, slot: 1 } }) {
+            RpcMsg::Hello { role } => assert_eq!(role, ConnRole::Data { stage: 2, slot: 1 }),
+            other => panic!("decoded {}", other.kind()),
+        }
+    }
+
+    #[test]
+    fn codec_roundtrips_tensor_messages() {
+        let f = Tensor::from_f32(&[2, 3], vec![1.0, -2.0, 3.5, 0.0, 5.0, -6.25]);
+        match roundtrip(&RpcMsg::Act { gen: 7, micro: 3, t: f.clone() }) {
+            RpcMsg::Act { gen, micro, t } => {
+                assert_eq!((gen, micro), (7, 3));
+                assert_eq!(t, f);
+            }
+            other => panic!("decoded {}", other.kind()),
+        }
+        let i = Tensor::from_i32(&[4], vec![1, -2, 3, -4]);
+        match roundtrip(&RpcMsg::Targets { gen: 0, micro: 0, t: i.clone() }) {
+            RpcMsg::Targets { t, .. } => assert_eq!(t, i),
+            other => panic!("decoded {}", other.kind()),
+        }
+    }
+
+    #[test]
+    fn loopback_roundtrip_over_tcp() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let (mut conn, _) = listener.accept().unwrap();
+            let a = recv_msg(&mut conn).unwrap();
+            let b = recv_msg(&mut conn).unwrap();
+            (a, b)
+        });
+        let mut c = TcpStream::connect(addr).unwrap();
+        send_msg(&mut c, &RpcMsg::Hello { role: ConnRole::Control }).unwrap();
+        let t = Tensor::from_f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        send_msg(&mut c, &RpcMsg::Grad { gen: 1, micro: 9, t: t.clone() }).unwrap();
+        let (a, b) = h.join().unwrap();
+        assert_eq!(a.kind(), "Hello");
+        match b {
+            RpcMsg::Grad { gen, micro, t: got } => {
+                assert_eq!((gen, micro), (1, 9));
+                assert_eq!(got, t);
+            }
+            other => panic!("decoded {}", other.kind()),
+        }
+    }
+
+    #[test]
+    fn partial_reads_reassemble() {
+        // A frame delivered byte-dribbled across the socket must decode
+        // identically — read_exact reassembles TCP segmentation.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let (mut conn, _) = listener.accept().unwrap();
+            recv_msg(&mut conn).unwrap()
+        });
+        let mut c = TcpStream::connect(addr).unwrap();
+        let msg = RpcMsg::Act {
+            gen: 0,
+            micro: 5,
+            t: Tensor::from_f32(&[3], vec![0.25, 0.5, 0.75]),
+        };
+        let payload = msg.encode();
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&MAGIC);
+        wire.push(VERSION);
+        wire.extend_from_slice(&(payload.len() as u32).to_be_bytes());
+        wire.extend_from_slice(&payload);
+        for b in wire {
+            c.write_all(&[b]).unwrap();
+            c.flush().unwrap();
+        }
+        match h.join().unwrap() {
+            RpcMsg::Act { gen, micro, t } => {
+                assert_eq!((gen, micro), (0, 5));
+                assert_eq!(t.as_f32().unwrap(), &[0.25, 0.5, 0.75]);
+            }
+            other => panic!("decoded {}", other.kind()),
+        }
+    }
+
+    #[test]
+    fn oversized_and_corrupt_frames_rejected() {
+        // Oversized length is refused before any allocation.
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&MAGIC);
+        wire.push(VERSION);
+        wire.extend_from_slice(&((MAX_FRAME as u32) + 1).to_be_bytes());
+        let err = read_frame(&mut wire.as_slice()).unwrap_err().to_string();
+        assert!(err.contains("MAX_FRAME"), "{err}");
+
+        // Bad magic: not an asteroid peer.
+        let mut wire = Vec::new();
+        wire.extend_from_slice(b"HTTP");
+        wire.extend_from_slice(&[1, 0, 0, 0, 0]);
+        let err = read_frame(&mut wire.as_slice()).unwrap_err().to_string();
+        assert!(err.contains("magic"), "{err}");
+
+        // Wrong version.
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&MAGIC);
+        wire.push(VERSION + 1);
+        wire.extend_from_slice(&0u32.to_be_bytes());
+        assert!(read_frame(&mut wire.as_slice()).is_err());
+
+        // Truncated payload errors instead of blocking forever.
+        let msg = RpcMsg::Exit.encode();
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&MAGIC);
+        wire.push(VERSION);
+        wire.extend_from_slice(&((msg.len() as u32) + 4).to_be_bytes());
+        wire.extend_from_slice(&msg);
+        assert!(read_frame(&mut wire.as_slice()).is_err());
+
+        // Trailing garbage inside a decoded message is rejected.
+        let mut payload = RpcMsg::Exit.encode();
+        payload.push(0xAB);
+        assert!(RpcMsg::decode(&payload).is_err());
+
+        // A corrupt element count cannot drive a huge pre-allocation:
+        // a tiny Params frame claiming u32::MAX layer states is
+        // refused by the count-vs-remaining-bytes check.
+        let mut e = Enc::default();
+        e.u8(15); // T_PARAMS
+        e.u32(u32::MAX);
+        let err = RpcMsg::decode(&e.into_bytes()).unwrap_err().to_string();
+        assert!(err.contains("corrupt count"), "{err}");
+    }
+}

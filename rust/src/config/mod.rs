@@ -209,6 +209,19 @@ impl ClusterSpec {
     /// Paper Table 6 environments plus the single-A100 reference.
     pub fn env(name: &str, mbps: f64) -> Result<ClusterSpec> {
         use DeviceKind::*;
+        // `nanos:<n>`: n homogeneous Jetson Nanos — the shape the
+        // multi-process RPC quickstart and CI pipelines use (worker
+        // count is explicit, so `--method pp` gives exactly one stage
+        // per worker).
+        if let Some(n) = name.strip_prefix("nanos:") {
+            let n: usize = n
+                .parse()
+                .map_err(|_| anyhow::anyhow!("nanos:<n> expects an integer, got {name:?}"))?;
+            if n == 0 {
+                bail!("nanos:<n> needs at least one device");
+            }
+            return Ok(ClusterSpec::nanos(n, mbps));
+        }
         let kinds: Vec<DeviceKind> = match name.to_ascii_uppercase().as_str() {
             // A: 5 x Nano
             "A" => vec![JetsonNano; 5],
@@ -219,7 +232,7 @@ impl ClusterSpec {
             // D: 1 x TX2, 3 x Nano
             "D" => vec![JetsonTX2, JetsonNano, JetsonNano, JetsonNano],
             "A100" => vec![A100],
-            other => bail!("unknown environment {other:?} (want A/B/C/D/A100)"),
+            other => bail!("unknown environment {other:?} (want A/B/C/D/A100, or nanos:<n>)"),
         };
         Ok(ClusterSpec::uniform(&kinds, mbps))
     }

@@ -10,6 +10,8 @@
 use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
+use anyhow::{bail, Result};
+
 /// Detector configuration.
 #[derive(Debug, Clone, Copy)]
 pub struct HeartbeatCfg {
@@ -32,11 +34,73 @@ impl Default for HeartbeatCfg {
 }
 
 impl HeartbeatCfg {
+    /// Minimum beat interval a configuration may use: below this, OS
+    /// scheduling jitter on a loaded CI runner is the same order as
+    /// the interval and a healthy worker gets declared dead — the
+    /// validated floor is what lets integration tests run *tight*
+    /// timings without flaking.
+    pub const MIN_INTERVAL: Duration = Duration::from_millis(10);
+
+    /// Explicit timing constructor — validated, so a mistyped
+    /// zero-interval or zero-threshold config fails at build time
+    /// instead of spinning or never detecting.
+    pub fn new(interval: Duration, miss_threshold: u32, probe_rtt: Duration) -> Result<Self> {
+        let cfg = HeartbeatCfg { interval, miss_threshold, probe_rtt };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Tight-but-safe timing for tests and CI fault injection:
+    /// detection in ~0.17 s instead of the default ~1.1 s.  Respects
+    /// the validated floor with 5x headroom.
+    pub fn tight() -> HeartbeatCfg {
+        HeartbeatCfg {
+            interval: Duration::from_millis(50),
+            miss_threshold: 3,
+            probe_rtt: Duration::from_millis(20),
+        }
+    }
+
+    /// Validate the timing: a positive interval at or above
+    /// [`Self::MIN_INTERVAL`], at least one tolerated miss, and a
+    /// probe allowance that does not dwarf the silence deadline (a
+    /// probe slower than the whole deadline means the "detection"
+    /// would mostly measure the probe).
+    pub fn validate(&self) -> Result<()> {
+        if self.interval < Self::MIN_INTERVAL {
+            bail!(
+                "heartbeat interval {:?} is below the {:?} floor (CI scheduling \
+                 jitter would fake device deaths)",
+                self.interval,
+                Self::MIN_INTERVAL
+            );
+        }
+        if self.miss_threshold == 0 {
+            bail!("heartbeat miss_threshold must be >= 1 (0 suspects a live device instantly)");
+        }
+        if self.probe_rtt > self.deadline() {
+            bail!(
+                "probe_rtt {:?} exceeds the silence deadline {:?} (interval x misses)",
+                self.probe_rtt,
+                self.deadline()
+            );
+        }
+        Ok(())
+    }
+
+    /// The silence deadline after which a device is suspected:
+    /// `interval * miss_threshold`.  The live monitor and the closed
+    /// form both derive from this, so sim and RPC agree on detection
+    /// latency by construction.
+    pub fn deadline(&self) -> Duration {
+        self.interval * self.miss_threshold
+    }
+
     /// Expected worst-case detection latency: the device dies right
     /// after beating, so `miss_threshold` intervals elapse before
     /// suspicion, plus the probe RTT.
     pub fn detection_time(&self) -> f64 {
-        self.interval.as_secs_f64() * self.miss_threshold as f64 + self.probe_rtt.as_secs_f64()
+        self.deadline().as_secs_f64() + self.probe_rtt.as_secs_f64()
     }
 }
 
@@ -91,7 +155,7 @@ impl HeartbeatMonitor {
         let Some(last) = self.last_beat.get(&device) else {
             return Liveness::Confirmed;
         };
-        let deadline = self.cfg.interval * self.cfg.miss_threshold;
+        let deadline = self.cfg.deadline();
         if last.elapsed() > deadline {
             Liveness::Suspected
         } else {
@@ -168,5 +232,26 @@ mod tests {
             probe_rtt: Duration::from_millis(100),
         };
         assert!((cfg.detection_time() - 1.1).abs() < 1e-9);
+        assert_eq!(cfg.deadline(), Duration::from_secs(1));
+    }
+
+    #[test]
+    fn validation_rejects_degenerate_timings() {
+        // Interval below the CI-jitter floor.
+        assert!(HeartbeatCfg::new(Duration::from_millis(1), 2, Duration::ZERO).is_err());
+        // Zero misses tolerated: instant false suspicion.
+        assert!(HeartbeatCfg::new(Duration::from_millis(50), 0, Duration::ZERO).is_err());
+        // Probe slower than the whole silence deadline.
+        assert!(HeartbeatCfg::new(
+            Duration::from_millis(50),
+            2,
+            Duration::from_millis(500)
+        )
+        .is_err());
+        // Defaults and the tight preset both validate.
+        HeartbeatCfg::default().validate().unwrap();
+        HeartbeatCfg::tight().validate().unwrap();
+        assert!(HeartbeatCfg::tight().detection_time() < 0.25);
+        assert!(HeartbeatCfg::tight().detection_time() < HeartbeatCfg::default().detection_time());
     }
 }

@@ -12,13 +12,16 @@
 //! The user-facing surface is [`session`]: a typed
 //! [`session::SessionBuilder`] covers preprocessing + planning (every
 //! planner through one [`planner::Planner`] dispatch), and an
-//! [`session::ExecutionBackend`] — [`session::SimBackend`] or
-//! [`session::PjrtBackend`] — turns the planned session into one
+//! [`session::ExecutionBackend`] — [`session::SimBackend`],
+//! [`session::PjrtBackend`] or the multi-process
+//! [`session::RpcBackend`] — turns the planned session into one
 //! unified [`session::RunReport`].  Device-exit fault tolerance is a
 //! declarative [`session::FaultSpec`] on the session.
 //!
-//! Live execution needs the `pjrt` cargo feature (see rust/xla/); the
-//! default build carries the full planner/simulator/fault stack.
+//! The default build carries the full planner/simulator/fault stack
+//! plus the multi-process RPC backend (`asteroid-worker` processes
+//! over TCP, reference-kernel numerics); in-process PJRT execution of
+//! AOT artifacts needs the `pjrt` cargo feature (see rust/xla/).
 
 pub mod comm;
 pub mod config;

@@ -4,6 +4,8 @@
 //! asteroid plan     --model <zoo|lm|cnn> --env B --mbps 100 [--method dp|pp|...]
 //! asteroid simulate --model <zoo|lm|cnn> --env B --mbps 100 [--method M --schedule gpipe|zb-h1|async:<s>]
 //! asteroid train    --model lm|cnn --env B [--steps N --lr X --emulate]
+//! asteroid train    --backend rpc --connect h:p,h:p,h:p --env nanos:3 --method pp \
+//!                   [--fail-after N --resume N --heartbeat-ms M] [--report out.json]
 //! asteroid replay   --model effnet --env D --fail <device-id>
 //! asteroid envs
 //! ```
@@ -11,18 +13,29 @@
 //! Every command assembles one [`Session`] (preprocessing + planning)
 //! and, where it executes, runs it through an [`ExecutionBackend`]:
 //! `simulate`/`replay` price with [`SimBackend`], `train` runs the
-//! live [`PjrtBackend`] (manifest models + `--features pjrt` only).
-//! `--method` selects any paper baseline planner without code edits.
+//! live [`PjrtBackend`] by default (manifest models + `--features
+//! pjrt` only), or — with `--backend rpc --connect <addrs>` — drives
+//! separate `asteroid-worker` processes over TCP (works featureless;
+//! zoo models train on the reference kernel).  `--method` selects any
+//! paper baseline planner without code edits; `--report` writes the
+//! machine-readable `RunReport` JSON the CI integration job asserts
+//! on.
+
+use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
 use asteroid::config::{ClusterSpec, TrainConfig};
+use asteroid::fault::HeartbeatCfg;
 use asteroid::model::zoo;
 use asteroid::pipeline::OptimizerCfg;
 use asteroid::planner::baselines::Method;
 use asteroid::planner::Planner;
 use asteroid::schedule::{builtin_policies, policy_by_name, SchedulePolicy};
-use asteroid::session::{FaultSpec, PjrtBackend, RecoveryKind, Session, SimBackend};
+use asteroid::session::{
+    ExecutionBackend, FaultSpec, PjrtBackend, RecoveryKind, RpcBackend, RunReport, Session,
+    SimBackend,
+};
 use asteroid::util::cli::Args;
 use asteroid::util::stats::{human_bytes, human_secs};
 
@@ -57,6 +70,41 @@ fn policy_from(args: &Args) -> Result<&'static dyn SchedulePolicy> {
     })
 }
 
+/// Declarative device-exit injection from flags: `--fail-after N`
+/// arms a [`FaultSpec`] (`--fail <dev>` picks the device, default
+/// last-planned; `--recovery heavy` the baseline mechanism;
+/// `--resume N` post-recovery rounds; `--heartbeat-ms M` a tight
+/// validated detection config for CI).
+fn fault_from(args: &Args) -> Result<Option<FaultSpec>> {
+    let Some(after) = args.get("fail-after") else {
+        return Ok(None);
+    };
+    let after: usize = after
+        .parse()
+        .with_context(|| format!("--fail-after expects an integer, got {after:?}"))?;
+    let mut spec = match args.get("fail") {
+        Some(_) => FaultSpec::device(args.usize_or("fail", 0)?),
+        None => FaultSpec::last_planned(),
+    };
+    spec = spec.after(after).resume_for(args.usize_or("resume", 2)?);
+    match args.str_or("recovery", "lightweight").as_str() {
+        "lightweight" | "lite" => {}
+        "heavy" => spec = spec.with_recovery(RecoveryKind::Heavy),
+        other => bail!("--recovery expects lightweight|heavy, got {other:?}"),
+    }
+    if let Some(ms) = args.get("heartbeat-ms") {
+        let ms: u64 = ms
+            .parse()
+            .with_context(|| format!("--heartbeat-ms expects an integer, got {ms:?}"))?;
+        spec = spec.with_heartbeat(HeartbeatCfg::new(
+            Duration::from_millis(ms),
+            3,
+            Duration::from_millis(ms / 2),
+        )?);
+    }
+    Ok(Some(spec))
+}
+
 /// Assemble the session every command starts from: model (zoo or AOT
 /// manifest), cluster, training config, planner, schedule policy and
 /// run options — one builder, no per-command phase wiring.
@@ -75,6 +123,9 @@ fn session_from(args: &Args, default_model: &str) -> Result<Session> {
         .seed(args.u64_or("seed", 42)?)
         .emulate(args.has_flag("emulate"))
         .log_every(args.usize_or("log-every", 5)?);
+    if let Some(fault) = fault_from(args)? {
+        b = b.fault(fault);
+    }
     if zoo::by_name(&model).is_some() {
         b = b.model(&model).train(TrainConfig::new(
             args.usize_or("minibatch", 2048)?,
@@ -167,17 +218,133 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
-    let s = session_from(args, "lm")?;
+    let backend_name = args.str_or("backend", "pjrt");
+    // The RPC backend trains zoo models on the reference kernel, so
+    // its natural default model differs from the artifact-only pjrt
+    // engine.
+    let default_model = if backend_name == "rpc" { "mobilenetv2" } else { "lm" };
+    let s = session_from(args, default_model)?;
     println!("plan: {}", s.plan().describe(s.cluster()));
-    let report = s.run(&mut PjrtBackend::new())?;
-    println!(
-        "trained {} rounds: loss {:.4} -> {:.4}, {:.1} samples/s",
-        report.rounds,
-        report.first_loss().context("no rounds ran")?,
-        report.last_loss().context("no rounds ran")?,
-        report.throughput,
-    );
+    let mut backend: Box<dyn ExecutionBackend> = match backend_name.as_str() {
+        "pjrt" => Box::new(PjrtBackend::new()),
+        "sim" => Box::new(SimBackend),
+        "rpc" => {
+            let addrs: Vec<String> = args
+                .require("connect")
+                .context("--backend rpc needs --connect host:port[,host:port,...]")?
+                .split(',')
+                .map(str::trim)
+                .filter(|a| !a.is_empty())
+                .map(String::from)
+                .collect();
+            anyhow::ensure!(!addrs.is_empty(), "--connect lists no worker addresses");
+            Box::new(RpcBackend::connect(addrs))
+        }
+        other => bail!("unknown backend {other:?} (want sim|pjrt|rpc)"),
+    };
+    let report = s.run(backend.as_mut())?;
+    match (report.first_loss(), report.last_loss()) {
+        (Some(first), Some(last)) => println!(
+            "trained {} rounds [{}]: loss {first:.4} -> {last:.4}, {:.1} samples/s",
+            report.rounds, report.backend, report.throughput,
+        ),
+        // Pricing backends have no numerics; the round count and rate
+        // are still the answer.
+        _ => println!(
+            "priced {} rounds [{}]: {:.1} samples/s",
+            report.rounds, report.backend, report.throughput,
+        ),
+    }
+    for ev in &report.recoveries {
+        println!(
+            "recovered from device {} exit at round {} via {} in {:.2}s \
+             (replayed {} micros, retasked {} devices)",
+            ev.failed_device,
+            ev.round,
+            ev.report.mechanism,
+            ev.report.total_s(),
+            ev.report.replay_micros.len(),
+            ev.report.retasked_devices.len(),
+        );
+    }
+    if let Some(path) = args.get("report") {
+        std::fs::write(path, report_json(&report))
+            .with_context(|| format!("writing report to {path}"))?;
+        println!("report written to {path}");
+    }
     Ok(())
+}
+
+/// Machine-readable `RunReport` summary — what the CI integration job
+/// parses and asserts on.  Hand-rolled (all values numeric or fixed
+/// strings), matching the repo's offline no-serde substrate.
+fn report_json(r: &RunReport) -> String {
+    let list = |v: &[f64]| -> String {
+        v.iter().map(|x| format!("{x:.6}")).collect::<Vec<_>>().join(", ")
+    };
+    let recoveries: Vec<String> = r
+        .recoveries
+        .iter()
+        .map(|e| {
+            format!(
+                "{{\"round\": {}, \"failed_device\": {}, \"mechanism\": \"{}\", \
+                 \"total_s\": {:.6}, \"replay_micros\": {}, \"retasked_devices\": {}}}",
+                e.round,
+                e.failed_device,
+                e.report.mechanism,
+                e.report.total_s(),
+                e.report.replay_micros.len(),
+                e.report.retasked_devices.len(),
+            )
+        })
+        .collect();
+    let rpc = match &r.rpc {
+        None => "null".to_string(),
+        Some(stats) => {
+            let rows: Vec<String> = stats
+                .per_device
+                .iter()
+                .map(|d| {
+                    format!(
+                        "{{\"device\": {}, \"addr\": \"{}\", \"heartbeats\": {}, \
+                         \"rounds_reported\": {}, \"mean_round_compute_s\": {:.6}, \
+                         \"bytes_tx\": {}, \"bytes_rx\": {}}}",
+                        d.device,
+                        d.addr,
+                        d.heartbeats,
+                        d.rounds_reported,
+                        d.mean_round_compute_s,
+                        d.bytes_tx,
+                        d.bytes_rx,
+                    )
+                })
+                .collect();
+            let detect = match stats.detection_wall_s {
+                Some(s) => format!("{s:.6}"),
+                None => "null".to_string(),
+            };
+            format!(
+                "{{\"detection_wall_s\": {detect}, \"per_device\": [{}]}}",
+                rows.join(", ")
+            )
+        }
+    };
+    format!(
+        "{{\n  \"backend\": \"{}\",\n  \"policy\": \"{}\",\n  \"max_staleness\": {},\n  \
+         \"rounds\": {},\n  \"throughput\": {:.6},\n  \"predicted_throughput\": {:.6},\n  \
+         \"losses\": [{}],\n  \"round_secs\": [{}],\n  \"recoveries\": [{}],\n  \
+         \"rpc\": {}\n}}\n",
+        r.backend,
+        r.schedule.policy,
+        r.max_staleness,
+        r.rounds,
+        r.throughput,
+        r.predicted_throughput,
+        list(&r.losses),
+        list(&r.round_secs),
+        recoveries.join(", "),
+        rpc,
+    )
 }
 
 fn cmd_replay(args: &Args) -> Result<()> {
@@ -225,8 +392,10 @@ fn cmd_envs() -> Result<()> {
         let c = ClusterSpec::env(env, 100.0)?;
         println!("  {env}: {}", c.describe());
     }
+    println!("  nanos:<n>: n homogeneous Jetson Nanos (RPC quickstart shape)");
     println!("zoo models: efficientnet-b1, mobilenetv2, resnet50, bert-small");
     println!("AOT models: lm, cnn (run `make artifacts`)");
+    println!("backends  : sim, pjrt (--features pjrt), rpc (--backend rpc --connect ...)");
     println!(
         "schedules : {}, async:<s>  (--schedule)",
         builtin_policies()

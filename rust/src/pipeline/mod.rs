@@ -1,25 +1,35 @@
-//! Real pipeline execution engine (the paper's Execution Phase, §3.2 +
-//! Fig. 11): worker threads with per-thread PJRT runtimes, bandwidth-
-//! shaped channels, gradient accumulation, intra-stage AllReduce and
-//! in-Rust optimizers.  Micro-batch ordering (1F1B with the K_p
-//! warm-up window) is not decided here: the orchestrator builds one
-//! `schedule::Schedule` for the round and each worker executes its
-//! device's compute script from it.
+//! Real pipeline execution engines (the paper's Execution Phase, §3.2
+//! + Fig. 11): script-driven workers, bandwidth-shaped channels,
+//! gradient accumulation, intra-stage sync and in-Rust optimizers.
+//! Micro-batch ordering (1F1B with the K_p warm-up window) is not
+//! decided here: the orchestrator builds one `schedule::Schedule` for
+//! the round and each worker executes its device's compute script.
 //!
-//! The worker threads execute compiled HLO through the `xla` PJRT
-//! binding and only exist under the `pjrt` feature; channels,
-//! collectives, optimizers and the `TrainOpts`/`TrainStats` types are
-//! feature-independent (the session layer reports through them either
-//! way).
+//! Two worker substrates share the transport-agnostic step core of
+//! [`step`]:
+//!
+//! * `worker` — in-process threads executing compiled HLO through
+//!   the `xla` PJRT binding (`pjrt` feature only);
+//! * [`rpc_worker`] — the `asteroid-worker` process serving the
+//!   [`crate::comm::rpc`] protocol over TCP with the
+//!   feature-independent [`step::ReferenceStage`] kernel (the
+//!   multi-process `session::RpcBackend` drives it).
+//!
+//! Channels, collectives, optimizers and the `TrainOpts`/`TrainStats`
+//! types are feature-independent (the session layer reports through
+//! them either way).
 
 pub mod channel;
 pub mod collective;
 pub mod optimizer;
+pub mod rpc_worker;
+pub mod step;
 pub mod train;
 #[cfg(feature = "pjrt")]
 pub mod worker;
 
 pub use optimizer::{Optimizer, OptimizerCfg};
+pub use step::{ReferenceStage, WorkerSpec};
 pub use train::{train, TrainOpts, TrainStats};
 #[cfg(feature = "pjrt")]
-pub use worker::{Msg, Report, WorkerSpec};
+pub use worker::{Msg, Report};

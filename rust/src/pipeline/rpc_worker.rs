@@ -1,0 +1,580 @@
+//! The `asteroid-worker` serve loop: one pipeline stage slot as a
+//! standalone TCP peer.
+//!
+//! A worker binds **one** listening socket.  Every inbound connection
+//! introduces itself with an `RpcMsg::Hello` frame: the driver's
+//! control connection (assignment, round control, heartbeat backchannel,
+//! parameter fetch, fault injection) or a peer worker's data connection
+//! (activations from the previous stage, gradients from the next).
+//! Outbound data connections are dialled after [`crate::comm::rpc::AssignSpec`]
+//! arrives, toward the peer addresses it names.
+//!
+//! The compute itself is the transport-agnostic core of
+//! [`crate::pipeline::step`]: the worker executes its device's schedule
+//! script over a [`ReferenceStage`] kernel and never re-derives
+//! 1F1B/K_p/staleness ordering.
+//!
+//! Fault semantics are *real* here: `RpcMsg::Die` makes the process
+//! exit unclean mid-round (when [`ServeOpts::die_for_real`]), peers
+//! observe EOF, the driver's heartbeat monitor observes silence, and a
+//! re-`Assign` later rebuilds the stage (optionally warm-started from
+//! the driver's checkpoint) with fresh data links.
+
+use std::collections::VecDeque;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::comm::rpc::{recv_msg, send_msg, AssignSpec, ConnRole, LayerState, RpcMsg};
+use crate::pipeline::step::{run_script_round, DataMsg, DataPlane, ReferenceStage};
+
+/// How long a worker keeps re-dialling a peer data address before
+/// giving up (covers slow peer start in CI).
+const PEER_DIAL_TIMEOUT: Duration = Duration::from_secs(20);
+
+/// Options for one serve run.
+#[derive(Debug, Clone)]
+pub struct ServeOpts {
+    /// `RpcMsg::Die` terminates the *process* (the real fault the
+    /// integration pipeline injects).  Disabled when the serve loop
+    /// runs on a thread inside a test process: there the serve loop
+    /// returns [`ServeOutcome::Died`] silently (data links dropped; a
+    /// thread cannot sever its process's remaining sockets, so the
+    /// caller should drop or exit promptly).
+    pub die_for_real: bool,
+    /// Log lifecycle events to stderr.
+    pub verbose: bool,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        ServeOpts { die_for_real: true, verbose: false }
+    }
+}
+
+/// How a serve loop ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeOutcome {
+    /// Driver sent `Exit`; `Bye` was answered.
+    Clean,
+    /// Driver sent `Die` with `die_for_real` off (thread mode): the
+    /// caller should drop everything, as a process exit would have.
+    Died,
+}
+
+/// One item of the worker's single inbox: every reader thread funnels
+/// here, so the main loop (and the in-round data plane) has one place
+/// to block on.  Data items carry their sender's assignment
+/// generation — the data plane drops frames from other generations
+/// (stale in-flight tensors of a round aborted before a re-task).
+enum Inbox {
+    Ctrl(RpcMsg),
+    Data(u64, DataMsg),
+    /// A connection's reader ended (EOF or error).
+    Closed(ConnRole),
+}
+
+/// Marker error: thread-mode (`die_for_real` off) death injection
+/// observed mid-round — the serve loop turns it into
+/// [`ServeOutcome::Died`] instead of a round failure.
+#[derive(Debug)]
+struct DieMidRound;
+
+impl std::fmt::Display for DieMidRound {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("death injected mid-round")
+    }
+}
+
+impl std::error::Error for DieMidRound {}
+
+/// Serve one worker on `listener` until the driver says `Exit`/`Die`
+/// or the control connection dies.
+pub fn serve(listener: TcpListener, opts: ServeOpts) -> Result<ServeOutcome> {
+    let local = listener.local_addr()?;
+    let (tx, rx) = std::sync::mpsc::channel::<Inbox>();
+    let control_writer: Arc<Mutex<Option<TcpStream>>> = Arc::new(Mutex::new(None));
+
+    // Accept loop: classify each connection by its Hello frame and
+    // spawn a reader thread for it.
+    {
+        let tx = tx.clone();
+        let control_writer = control_writer.clone();
+        let opts_c = opts.clone();
+        std::thread::spawn(move || loop {
+            let (conn, _) = match listener.accept() {
+                Ok(c) => c,
+                Err(_) => return, // listener dropped: process exiting
+            };
+            let _ = conn.set_nodelay(true);
+            let tx = tx.clone();
+            let control_writer = control_writer.clone();
+            let opts = opts_c.clone();
+            std::thread::spawn(move || read_connection(conn, tx, control_writer, opts));
+        });
+    }
+
+    if opts.verbose {
+        eprintln!("asteroid-worker: listening on {local}");
+    }
+
+    let mut state = WorkerState {
+        rx,
+        control_writer,
+        assigned: None,
+        carryover: VecDeque::new(),
+        pending_ctrl: VecDeque::new(),
+        opts,
+    };
+    state.main_loop()
+}
+
+/// Reader thread of one inbound connection.
+fn read_connection(
+    mut conn: TcpStream,
+    tx: Sender<Inbox>,
+    control_writer: Arc<Mutex<Option<TcpStream>>>,
+    opts: ServeOpts,
+) {
+    let role = match recv_msg(&mut conn) {
+        Ok(RpcMsg::Hello { role }) => role,
+        _ => return, // not a peer: drop silently
+    };
+    if role == ConnRole::Control {
+        match conn.try_clone() {
+            Ok(w) => *control_writer.lock().unwrap() = Some(w),
+            Err(_) => return,
+        }
+    }
+    loop {
+        match recv_msg(&mut conn) {
+            Ok(RpcMsg::Act { gen, micro, t }) => {
+                if tx.send(Inbox::Data(gen, DataMsg::Act { micro, t })).is_err() {
+                    return;
+                }
+            }
+            Ok(RpcMsg::Grad { gen, micro, t }) => {
+                if tx.send(Inbox::Data(gen, DataMsg::Grad { micro, t })).is_err() {
+                    return;
+                }
+            }
+            Ok(RpcMsg::Targets { gen, micro, t }) => {
+                if tx.send(Inbox::Data(gen, DataMsg::Targets { micro, t })).is_err() {
+                    return;
+                }
+            }
+            Ok(RpcMsg::Die) if opts.die_for_real => {
+                // The injected device exit: disappear *now*, unclean,
+                // exactly as a powered-off edge device would.  Peers
+                // and driver learn from EOF + heartbeat silence.
+                eprintln!("asteroid-worker: Die injected — exiting unclean");
+                std::process::exit(86);
+            }
+            Ok(msg) => {
+                if tx.send(Inbox::Ctrl(msg)).is_err() {
+                    return;
+                }
+            }
+            Err(_) => {
+                let _ = tx.send(Inbox::Closed(role));
+                return;
+            }
+        }
+    }
+}
+
+/// One applied assignment: the stage kernel plus its outbound links
+/// and heartbeat thread.
+struct Assigned {
+    spec: AssignSpec,
+    stage: ReferenceStage,
+    next: Vec<TcpStream>,
+    prev: Vec<TcpStream>,
+    hb_stop: Arc<AtomicBool>,
+}
+
+impl Drop for Assigned {
+    fn drop(&mut self) {
+        self.hb_stop.store(true, Ordering::Relaxed);
+    }
+}
+
+struct WorkerState {
+    rx: Receiver<Inbox>,
+    control_writer: Arc<Mutex<Option<TcpStream>>>,
+    assigned: Option<Assigned>,
+    /// Data frames that arrived while idle (a fast upstream peer may
+    /// start its round before our `StartRound` lands), tagged with the
+    /// sender's assignment generation — consumed first by the next
+    /// round's data plane, which drops other generations.
+    carryover: VecDeque<(u64, DataMsg)>,
+    /// Control frames observed while draining stale data.
+    pending_ctrl: VecDeque<RpcMsg>,
+    opts: ServeOpts,
+}
+
+impl WorkerState {
+    fn send_ctrl(&self, msg: &RpcMsg) -> Result<()> {
+        let mut guard = self.control_writer.lock().unwrap();
+        let w = guard.as_mut().context("no control connection")?;
+        send_msg(w, msg)
+    }
+
+    fn next_event(&mut self) -> Result<Inbox> {
+        if let Some(m) = self.pending_ctrl.pop_front() {
+            return Ok(Inbox::Ctrl(m));
+        }
+        self.rx.recv().map_err(|_| anyhow!("worker inbox closed"))
+    }
+
+    fn main_loop(&mut self) -> Result<ServeOutcome> {
+        loop {
+            match self.next_event()? {
+                Inbox::Data(g, d) => self.carryover.push_back((g, d)),
+                Inbox::Closed(ConnRole::Control) => {
+                    bail!("driver control connection lost");
+                }
+                Inbox::Closed(ConnRole::Data { .. }) => {} // peer churn: fine while idle
+                Inbox::Ctrl(msg) => match msg {
+                    RpcMsg::Assign(spec) => self.apply_assign(*spec)?,
+                    RpcMsg::StartRound { round } => {
+                        if self.run_round(round)? {
+                            return Ok(ServeOutcome::Died);
+                        }
+                    }
+                    RpcMsg::FetchParams => {
+                        let layers = match &self.assigned {
+                            Some(a) => a
+                                .stage
+                                .layer_states()
+                                .into_iter()
+                                .map(|(layer, scale, bias)| LayerState { layer, scale, bias })
+                                .collect(),
+                            None => Vec::new(),
+                        };
+                        self.send_ctrl(&RpcMsg::Params { layers })?;
+                    }
+                    RpcMsg::AbortRound => {
+                        // Idle abort: the driver is tearing a round down
+                        // that we already finished (or never started) —
+                        // drop stale in-flight data and acknowledge by
+                        // reporting idle-failure once.
+                        self.discard_round_state();
+                        if let Some(a) = &self.assigned {
+                            let _ = self.send_ctrl(&RpcMsg::RoundFailed {
+                                device: a.spec.device,
+                                error: "aborted while idle".into(),
+                            });
+                        }
+                    }
+                    RpcMsg::Exit => {
+                        let _ = self.send_ctrl(&RpcMsg::Bye);
+                        return Ok(ServeOutcome::Clean);
+                    }
+                    RpcMsg::Die => {
+                        // Only reachable with die_for_real off (thread
+                        // mode): emulate process death by dropping
+                        // every connection.
+                        return Ok(ServeOutcome::Died);
+                    }
+                    other => {
+                        if self.opts.verbose {
+                            eprintln!("asteroid-worker: ignoring {} while idle", other.kind());
+                        }
+                    }
+                },
+            }
+        }
+    }
+
+    fn discard_round_state(&mut self) {
+        self.carryover.clear();
+        if let Some(a) = &mut self.assigned {
+            a.stage.abort_round();
+        }
+        // Drain whatever already sits in the inbox: stale data or
+        // closed-peer notices.  Control frames are preserved in order.
+        while let Ok(item) = self.rx.try_recv() {
+            match item {
+                Inbox::Ctrl(m) => self.pending_ctrl.push_back(m),
+                Inbox::Data(..) | Inbox::Closed(ConnRole::Data { .. }) => {}
+                Inbox::Closed(ConnRole::Control) => {
+                    self.pending_ctrl.push_back(RpcMsg::Exit);
+                }
+            }
+        }
+    }
+
+    fn apply_assign(&mut self, spec: AssignSpec) -> Result<()> {
+        // Tear down any previous assignment (stops its heartbeat and
+        // drops its out-links) and flush stale round state first.
+        self.assigned = None;
+        self.discard_round_state();
+
+        let mut stage = ReferenceStage::new(
+            &spec.layers,
+            spec.seed,
+            spec.opt,
+            spec.stash_slots,
+            spec.microbatch,
+            spec.num_micro,
+        )?;
+        if !spec.warm_start.is_empty() {
+            let states: Vec<(usize, Vec<f32>, Vec<f32>)> = spec
+                .warm_start
+                .iter()
+                .map(|s| (s.layer, s.scale.clone(), s.bias.clone()))
+                .collect();
+            stage.load_layer_states(&states)?;
+        }
+
+        let me = ConnRole::Data { stage: spec.stage, slot: spec.slot };
+        let next = dial_peers(&spec.next, me)?;
+        let prev = dial_peers(&spec.prev, me)?;
+
+        // (Re)start the heartbeat: one thread per assignment, writing
+        // through the shared control writer at the driver-configured
+        // period (the same interval the sim's detection model charges).
+        let hb_stop = Arc::new(AtomicBool::new(false));
+        {
+            let stop = hb_stop.clone();
+            let writer = self.control_writer.clone();
+            let device = spec.device;
+            let period = Duration::from_millis(spec.heartbeat_ms.max(1));
+            std::thread::spawn(move || {
+                let mut seq = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    std::thread::sleep(period);
+                    if stop.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    let mut guard = writer.lock().unwrap();
+                    let Some(w) = guard.as_mut() else { return };
+                    if send_msg(w, &RpcMsg::Heartbeat { device, seq }).is_err() {
+                        return;
+                    }
+                    seq += 1;
+                }
+            });
+        }
+
+        let device = spec.device;
+        self.assigned = Some(Assigned { spec, stage, next, prev, hb_stop });
+        self.send_ctrl(&RpcMsg::Ready { device })?;
+        if self.opts.verbose {
+            eprintln!("asteroid-worker: device {device} assigned and ready");
+        }
+        Ok(())
+    }
+
+    /// Run one round.  Returns `true` when a thread-mode death
+    /// injection ended it (the serve loop then reports
+    /// [`ServeOutcome::Died`]).
+    fn run_round(&mut self, round: usize) -> Result<bool> {
+        let Some(mut a) = self.assigned.take() else {
+            bail!("StartRound before Assign");
+        };
+        let t0 = Instant::now();
+        let outcome = round_body(&mut a, &mut self.carryover, &self.rx, &self.control_writer);
+        let compute_s = t0.elapsed().as_secs_f64();
+        let device = a.spec.device;
+        match outcome {
+            Ok(loss_sum) => {
+                let micros = a.spec.script.iter().filter(|op| op.is_fwd()).count();
+                self.assigned = Some(a);
+                self.send_ctrl(&RpcMsg::RoundDone {
+                    device,
+                    round,
+                    loss_sum,
+                    micros,
+                    compute_s,
+                })?;
+            }
+            Err(e) if e.is::<DieMidRound>() => {
+                // Thread-mode death: say nothing, drop the assignment
+                // (and with it the data links) — as close to a process
+                // exit as a thread can get.
+                drop(a);
+                return Ok(true);
+            }
+            Err(e) => {
+                // Peer loss or a driver abort: return to idle cleanly —
+                // the driver decides what happens next (re-assign for
+                // recovery, or shutdown).
+                a.stage.abort_round();
+                self.assigned = Some(a);
+                self.discard_round_state();
+                let _ = self.send_ctrl(&RpcMsg::RoundFailed {
+                    device,
+                    error: format!("{e:#}"),
+                });
+            }
+        }
+        Ok(false)
+    }
+}
+
+/// One round: script execution plus the replicated-stage round sync.
+fn round_body(
+    a: &mut Assigned,
+    carryover: &mut VecDeque<DataMsg>,
+    rx: &Receiver<Inbox>,
+    control_writer: &Arc<Mutex<Option<TcpStream>>>,
+) -> Result<f64> {
+    let is_first = a.spec.stage == 0;
+    let is_last = a.spec.stage + 1 == a.spec.num_stages;
+    let loss_sum = {
+        let mut dp = RpcDataPlane {
+            gen: a.spec.generation,
+            carryover,
+            rx,
+            next: &mut a.next,
+            prev: &mut a.prev,
+        };
+        run_script_round(&a.spec.script, is_first, is_last, &mut a.stage, &mut dp)?
+    };
+
+    if a.spec.group_size > 1 {
+        // Driver-mediated round sync for the replicated stage: summed
+        // gradients under a synchronous policy, parameter averaging
+        // under bounded staleness (replicas drifted per micro).  The
+        // sync rides the control link; data connections stay dedicated
+        // to tensors.
+        let asynchronous = a.spec.stash_slots > 0;
+        let (kind, flat) = if asynchronous {
+            (1u8, a.stage.flat_params())
+        } else {
+            (0u8, a.stage.flat_grads())
+        };
+        {
+            let mut guard = control_writer.lock().unwrap();
+            let w = guard.as_mut().context("no control connection for round sync")?;
+            send_msg(w, &RpcMsg::SyncRequest { device: a.spec.device, kind, flat })?;
+        }
+        let reduced = wait_sync_result(carryover, rx)?;
+        if asynchronous {
+            a.stage.set_flat_params(&reduced)?;
+        } else {
+            a.stage.apply_round_gradients(&reduced)?;
+        }
+    } else {
+        a.stage.end_round_local()?;
+    }
+    Ok(loss_sum)
+}
+
+/// Block until the driver's `SyncResult` arrives, buffering any early
+/// next-round data frames.
+fn wait_sync_result(
+    carryover: &mut VecDeque<(u64, DataMsg)>,
+    rx: &Receiver<Inbox>,
+) -> Result<Vec<f32>> {
+    loop {
+        match rx.recv().map_err(|_| anyhow!("worker inbox closed"))? {
+            Inbox::Ctrl(RpcMsg::SyncResult { flat }) => return Ok(flat),
+            Inbox::Ctrl(RpcMsg::AbortRound) => bail!("round aborted during sync"),
+            Inbox::Ctrl(other) => bail!("unexpected {} during round sync", other.kind()),
+            Inbox::Data(g, d) => carryover.push_back((g, d)),
+            Inbox::Closed(ConnRole::Control) => bail!("driver lost during round sync"),
+            Inbox::Closed(ConnRole::Data { .. }) => {} // peer churn: driver decides
+        }
+    }
+}
+
+/// The worker-side [`DataPlane`]: receive from the funnel inbox
+/// (buffered carryover first), send over the per-peer framed streams
+/// with the same `micro % g` routing as the in-process engine.  Every
+/// outgoing frame carries this assignment's generation; incoming
+/// frames from other generations are dropped (stale tensors of an
+/// aborted round that were still in flight across a recovery
+/// re-task).
+struct RpcDataPlane<'a> {
+    gen: u64,
+    carryover: &'a mut VecDeque<(u64, DataMsg)>,
+    rx: &'a Receiver<Inbox>,
+    next: &'a mut [TcpStream],
+    prev: &'a mut [TcpStream],
+}
+
+impl DataPlane for RpcDataPlane<'_> {
+    fn recv(&mut self) -> Result<DataMsg> {
+        while let Some((g, d)) = self.carryover.pop_front() {
+            if g == self.gen {
+                return Ok(d);
+            }
+        }
+        loop {
+            match self.rx.recv().map_err(|_| anyhow!("worker inbox closed"))? {
+                Inbox::Data(g, d) => {
+                    if g == self.gen {
+                        return Ok(d);
+                    }
+                    // Stale generation: a frame the aborted round left
+                    // in flight — drop it.
+                }
+                Inbox::Ctrl(RpcMsg::AbortRound) => bail!("round aborted by driver"),
+                Inbox::Ctrl(RpcMsg::Die) => return Err(anyhow::Error::new(DieMidRound)),
+                Inbox::Ctrl(RpcMsg::Exit) => bail!("shutdown requested mid-round"),
+                Inbox::Ctrl(other) => {
+                    bail!("unexpected control message {} mid-round", other.kind())
+                }
+                Inbox::Closed(ConnRole::Control) => bail!("driver lost mid-round"),
+                // A data connection ended.  This is either churn from a
+                // superseded assignment (stale peers closing after a
+                // recovery re-task — harmless) or a genuinely dead peer
+                // — in which case the tensors it owed us never arrive
+                // and the driver's abort/timeout resolves the round.
+                // Either way the driver owns the verdict; keep waiting.
+                Inbox::Closed(ConnRole::Data { .. }) => continue,
+            }
+        }
+    }
+
+    fn send_act(&mut self, micro: usize, t: crate::runtime::Tensor) -> Result<()> {
+        anyhow::ensure!(!self.next.is_empty(), "no next-stage links to send to");
+        let i = micro % self.next.len();
+        send_msg(&mut self.next[i], &RpcMsg::Act { gen: self.gen, micro, t })
+            .with_context(|| format!("sending activation of micro {micro}"))
+    }
+
+    fn send_grad(&mut self, micro: usize, t: crate::runtime::Tensor) -> Result<()> {
+        anyhow::ensure!(!self.prev.is_empty(), "no prev-stage links to send to");
+        let i = micro % self.prev.len();
+        send_msg(&mut self.prev[i], &RpcMsg::Grad { gen: self.gen, micro, t })
+            .with_context(|| format!("sending gradient of micro {micro}"))
+    }
+}
+
+/// Dial every peer address with retry (peers may still be starting).
+fn dial_peers(addrs: &[String], me: ConnRole) -> Result<Vec<TcpStream>> {
+    addrs
+        .iter()
+        .map(|addr| {
+            let mut conn = dial_with_retry(addr, PEER_DIAL_TIMEOUT)
+                .with_context(|| format!("dialling peer {addr}"))?;
+            conn.set_nodelay(true).ok();
+            send_msg(&mut conn, &RpcMsg::Hello { role: me })?;
+            Ok(conn)
+        })
+        .collect()
+}
+
+/// Connect with retry until `timeout`.
+pub fn dial_with_retry(addr: &str, timeout: Duration) -> Result<TcpStream> {
+    let deadline = Instant::now() + timeout;
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(c) => return Ok(c),
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(e).with_context(|| format!("connecting to {addr}"));
+                }
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}

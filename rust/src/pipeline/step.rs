@@ -1,0 +1,964 @@
+//! The transport-agnostic step-execution core shared by every live
+//! worker.
+//!
+//! A worker — in-process thread (`pipeline::worker`, `pjrt` feature)
+//! or separate OS process (`asteroid-worker` over the
+//! [`crate::comm::rpc`] transport) — is the same machine: execute the
+//! device's `schedule::ComputeOp` script in order, blocking on the
+//! inputs each scripted op needs, forwarding boundary activations
+//! downstream and gradients upstream.  This module owns that machine
+//! once, parameterised over
+//!
+//! * a [`DataPlane`] — where micro-batch tensors come from and go to
+//!   (in-process channels, or framed TCP connections); and
+//! * a [`StageCompute`] — what forward/backward actually *compute*
+//!   (AOT-compiled PJRT executables, or the feature-independent
+//!   [`ReferenceStage`] kernel the multi-process backend trains with
+//!   when no accelerator binding is built in).
+//!
+//! Neither implementation re-derives schedule order: 1F1B, K_p windows
+//! and the bounded-staleness admission window are properties of the
+//! script, exactly as in the in-process engine.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::model::ModelDesc;
+use crate::pipeline::optimizer::{Optimizer, OptimizerCfg};
+use crate::runtime::{ParamStash, Tensor};
+use crate::schedule::ComputeOp;
+use crate::util::rng::Rng;
+
+/// One micro-batch tensor moving through the pipeline, transport-
+/// agnostically.
+#[derive(Debug)]
+pub enum DataMsg {
+    /// Stage input (activations; raw data for stage 0).
+    Act { micro: usize, t: Tensor },
+    /// Gradient w.r.t. this stage's output.
+    Grad { micro: usize, t: Tensor },
+    /// Head-stage targets.
+    Targets { micro: usize, t: Tensor },
+}
+
+/// Where a worker's micro-batch tensors come from and go to.  `recv`
+/// blocks until the next in-flight tensor arrives (or the transport
+/// dies / the round is aborted — an error ends the round).
+pub trait DataPlane {
+    fn recv(&mut self) -> Result<DataMsg>;
+    fn send_act(&mut self, micro: usize, t: Tensor) -> Result<()>;
+    fn send_grad(&mut self, micro: usize, t: Tensor) -> Result<()>;
+}
+
+/// What a stage's forward/backward actually compute.  Implementations
+/// own their parameters, gradient accumulators and (under bounded
+/// staleness) the weight-version stash; the script runner owns
+/// ordering and transport only.
+pub trait StageCompute {
+    /// Forward one micro-batch.  Returns the boundary activation to
+    /// ship downstream, or `None` when this stage holds the model head
+    /// (the prediction is stashed for the fused loss backward).
+    fn forward(&mut self, micro: usize, input: Tensor) -> Result<Option<Tensor>>;
+
+    /// Backward one micro-batch from the downstream gradient.  Returns
+    /// the input gradient for the upstream stage (`None` only when the
+    /// first layer consumes it).
+    fn backward(&mut self, micro: usize, grad: Tensor) -> Result<Option<Tensor>>;
+
+    /// Fused head loss + backward for one micro-batch (head stage
+    /// only): returns (loss, input gradient for upstream).
+    fn backward_head(&mut self, micro: usize, targets: Tensor) -> Result<(f64, Option<Tensor>)>;
+
+    /// Deferred weight-gradient slot of a split backward (zero-bubble
+    /// policies).  Order-validated bookkeeping unless the kernel
+    /// actually defers weight gradients.
+    fn backward_weights(&mut self, micro: usize) -> Result<()>;
+}
+
+/// Static description of one worker — the schedule slice plus the
+/// training knobs both engines consume (moved here from the pjrt-gated
+/// worker so the multi-process backend shares one definition).
+#[derive(Debug, Clone)]
+pub struct WorkerSpec {
+    pub stage: usize,
+    /// Layer range [lo, hi) into the model's layer list.
+    pub layers: (usize, usize),
+    pub slot: usize,
+    /// This device's ordered FP/BP work for one HPP-Round, from
+    /// `Schedule::compute_script(stage, slot)` — the single source of
+    /// 1F1B/K_p ordering.
+    pub script: Vec<ComputeOp>,
+    /// Bounded-staleness weight-stash ring depth (the schedule's
+    /// effective admission window, K_p + sigma).  0 = synchronous
+    /// policy: gradients accumulate across the round and no stash
+    /// exists.
+    pub stash_slots: usize,
+    pub num_micro: usize,
+    pub is_first: bool,
+    pub is_last: bool,
+    pub seed: u64,
+    pub opt: OptimizerCfg,
+    /// Warm-start parameters by global layer index (fault-tolerance
+    /// restore / checkpoint resume); layers not present use fresh init.
+    pub initial_params: Option<Arc<BTreeMap<usize, Vec<Tensor>>>>,
+}
+
+/// Execute one HPP-Round of `script` against `compute`, pumping
+/// tensors through `dp`.  Returns the round's loss sum (head stage
+/// only; 0 elsewhere).
+///
+/// The runner buffers out-of-order arrivals per kind and blocks before
+/// each op until its input is present — the script order already
+/// respects 1F1B and the K_p/staleness window, so this cannot deadlock
+/// for any schedule that passed `Schedule::validate`.
+pub fn run_script_round(
+    script: &[ComputeOp],
+    is_first: bool,
+    is_last: bool,
+    compute: &mut dyn StageCompute,
+    dp: &mut dyn DataPlane,
+) -> Result<f64> {
+    let mut acts: BTreeMap<usize, Tensor> = BTreeMap::new();
+    let mut grads_in: BTreeMap<usize, Tensor> = BTreeMap::new();
+    let mut targets: BTreeMap<usize, Tensor> = BTreeMap::new();
+    let mut loss_sum = 0.0f64;
+
+    let mut pump = |acts: &mut BTreeMap<usize, Tensor>,
+                    grads_in: &mut BTreeMap<usize, Tensor>,
+                    targets: &mut BTreeMap<usize, Tensor>,
+                    dp: &mut dyn DataPlane|
+     -> Result<()> {
+        match dp.recv()? {
+            DataMsg::Act { micro, t } => {
+                acts.insert(micro, t);
+            }
+            DataMsg::Grad { micro, t } => {
+                grads_in.insert(micro, t);
+            }
+            DataMsg::Targets { micro, t } => {
+                targets.insert(micro, t);
+            }
+        }
+        Ok(())
+    };
+
+    for op in script {
+        match *op {
+            ComputeOp::Fwd(m) => {
+                while !acts.contains_key(&m) {
+                    pump(&mut acts, &mut grads_in, &mut targets, dp)?;
+                }
+                let x = acts.remove(&m).unwrap();
+                if let Some(out) = compute.forward(m, x)? {
+                    dp.send_act(m, out)?;
+                }
+            }
+            ComputeOp::Bwd(m) => {
+                let gx = if is_last {
+                    while !targets.contains_key(&m) {
+                        pump(&mut acts, &mut grads_in, &mut targets, dp)?;
+                    }
+                    let tgt = targets.remove(&m).unwrap();
+                    let (loss, gx) = compute.backward_head(m, tgt)?;
+                    loss_sum += loss;
+                    gx
+                } else {
+                    while !grads_in.contains_key(&m) {
+                        pump(&mut acts, &mut grads_in, &mut targets, dp)?;
+                    }
+                    let g = grads_in.remove(&m).unwrap();
+                    compute.backward(m, g)?
+                };
+                if !is_first {
+                    let t = gx.context("non-first stage must produce an input gradient")?;
+                    dp.send_grad(m, t)?;
+                }
+            }
+            ComputeOp::BwdW(m) => compute.backward_weights(m)?,
+        }
+    }
+    Ok(loss_sum)
+}
+
+// =====================================================================
+// Reference compute kernel (feature-independent)
+// =====================================================================
+
+/// Dimensions of one reference layer, derived from the planned model's
+/// layer table: the tensors this kernel moves have exactly the byte
+/// sizes the planner and simulator priced (Eq. 3 / the link model),
+/// while the arithmetic is a cheap learnable surrogate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RefLayerSpec {
+    /// Global model layer index (checkpoint / warm-start key).
+    pub layer: usize,
+    /// Input elements per sample.
+    pub in_elems: usize,
+    /// Output elements per sample.
+    pub out_elems: usize,
+    /// True for the model's final layer: its output is the prediction
+    /// the MSE head scores against the targets.
+    pub head: bool,
+}
+
+/// Reference layer dimensions for the model slice [lo, hi) — the
+/// element counts come straight from the model's activation byte
+/// table, so inter-stage transfers carry honestly-sized tensors.
+pub fn reference_layers(model: &ModelDesc, lo: usize, hi: usize) -> Vec<RefLayerSpec> {
+    let f32_bytes = 4;
+    (lo..hi)
+        .map(|k| {
+            let in_bytes = if k == 0 { model.input_bytes } else { model.boundary_bytes(k) };
+            RefLayerSpec {
+                layer: k,
+                in_elems: (in_bytes as usize / f32_bytes).max(1),
+                out_elems: (model.layers[k].out_bytes as usize / f32_bytes).max(1),
+                head: k + 1 == model.num_layers(),
+            }
+        })
+        .collect()
+}
+
+/// Per-sample input element count of the whole model (what the driver
+/// feeds stage 0).
+pub fn reference_input_elems(model: &ModelDesc) -> usize {
+    (model.input_bytes as usize / 4).max(1)
+}
+
+/// Per-sample target element count (the head layer's output width).
+pub fn reference_target_elems(model: &ModelDesc) -> usize {
+    (model.layers[model.num_layers() - 1].out_bytes as usize / 4).max(1)
+}
+
+struct RefLayer {
+    spec: RefLayerSpec,
+    scale: Vec<f32>,
+    bias: Vec<f32>,
+    g_scale: Vec<f32>,
+    g_bias: Vec<f32>,
+}
+
+/// Per-micro forward trace of one layer (rematerialisation-free BP).
+struct LayerTrace {
+    input: Vec<f32>,
+    output: Vec<f32>,
+}
+
+type RefSnapshot = Vec<(Vec<f32>, Vec<f32>)>;
+
+/// The feature-independent stage kernel the multi-process backend
+/// executes: per layer `y[j] = tanh(scale[j] * x[j mod d_in] + bias[j])`
+/// with exact analytic gradients, seeded layer-deterministic init
+/// (replicas of a layer agree), per-micro bounded-staleness updates
+/// against [`ParamStash`]-pinned snapshots, and an MSE head.
+///
+/// This is a *surrogate* for the AOT-compiled model math (DESIGN.md
+/// §Substitutions): tensor shapes, transfer bytes, schedule semantics,
+/// weight-version behaviour and loss learnability are real; the
+/// numerics are not the paper's models.  Build with `--features pjrt`
+/// and a real binding for those.
+pub struct ReferenceStage {
+    layers: Vec<RefLayer>,
+    microbatch: usize,
+    num_micro: usize,
+    stash_slots: usize,
+    opt: Optimizer,
+    version: u64,
+    stash: ParamStash<RefSnapshot>,
+    /// Per-micro traces of every layer, released at the micro's Bwd.
+    saved: BTreeMap<usize, Vec<LayerTrace>>,
+    bwd_done: std::collections::BTreeSet<usize>,
+}
+
+impl ReferenceStage {
+    /// Seeded init: layer k's parameters depend on (seed, k) only, so
+    /// replicas agree and a re-spawned worker reproduces them exactly.
+    pub fn new(
+        specs: &[RefLayerSpec],
+        seed: u64,
+        opt: OptimizerCfg,
+        stash_slots: usize,
+        microbatch: usize,
+        num_micro: usize,
+    ) -> Result<ReferenceStage> {
+        anyhow::ensure!(!specs.is_empty(), "reference stage has no layers");
+        anyhow::ensure!(num_micro > 0 && microbatch > 0, "empty round");
+        let mut layers = Vec::with_capacity(specs.len());
+        for s in specs {
+            let mut rng = Rng::new(seed ^ (s.layer as u64).wrapping_mul(0x9E37_79B9));
+            let mut scale = vec![0.0f32; s.out_elems];
+            rng.fill_normal(&mut scale, 0.4);
+            for v in &mut scale {
+                *v += 0.6; // centred near identity-ish gain, sign-diverse
+            }
+            layers.push(RefLayer {
+                spec: *s,
+                scale,
+                bias: vec![0.0; s.out_elems],
+                g_scale: vec![0.0; s.out_elems],
+                g_bias: vec![0.0; s.out_elems],
+            });
+        }
+        let sizes: Vec<usize> = layers
+            .iter()
+            .flat_map(|l| [l.scale.len(), l.bias.len()])
+            .collect();
+        Ok(ReferenceStage {
+            layers,
+            microbatch,
+            num_micro,
+            stash_slots,
+            opt: Optimizer::new(opt, &sizes),
+            version: 0,
+            stash: ParamStash::new(stash_slots.max(1)),
+            saved: BTreeMap::new(),
+            bwd_done: Default::default(),
+        })
+    }
+
+    fn async_updates(&self) -> bool {
+        self.stash_slots > 0
+    }
+
+    /// Expected stage input width per sample.
+    pub fn in_elems(&self) -> usize {
+        self.layers[0].spec.in_elems
+    }
+
+    /// Forward one micro through every layer with `weights`, recording
+    /// traces.  Returns the last layer's output batch.
+    fn forward_with(
+        &mut self,
+        micro: usize,
+        x: &[f32],
+        weights: Option<&RefSnapshot>,
+    ) -> Result<Vec<f32>> {
+        let b = self.microbatch;
+        anyhow::ensure!(
+            x.len() == b * self.in_elems(),
+            "stage input for micro {micro}: {} elements, expected {} ({}x{})",
+            x.len(),
+            b * self.in_elems(),
+            b,
+            self.in_elems()
+        );
+        let mut traces = Vec::with_capacity(self.layers.len());
+        let mut cur = x.to_vec();
+        for (k, l) in self.layers.iter().enumerate() {
+            let (scale, bias) = match weights {
+                Some(w) => (&w[k].0, &w[k].1),
+                None => (&l.scale, &l.bias),
+            };
+            let d_in = l.spec.in_elems;
+            let d_out = l.spec.out_elems;
+            anyhow::ensure!(
+                cur.len() == b * d_in,
+                "layer {} input width {} != {}",
+                l.spec.layer,
+                cur.len(),
+                b * d_in
+            );
+            let mut out = vec![0.0f32; b * d_out];
+            for s in 0..b {
+                let xin = &cur[s * d_in..(s + 1) * d_in];
+                let yout = &mut out[s * d_out..(s + 1) * d_out];
+                for j in 0..d_out {
+                    yout[j] = (scale[j] * xin[j % d_in] + bias[j]).tanh();
+                }
+            }
+            traces.push(LayerTrace { input: cur, output: out.clone() });
+            cur = out;
+        }
+        self.saved.insert(micro, traces);
+        Ok(cur)
+    }
+
+    /// Backward one micro from the loss gradient at the stage output,
+    /// accumulating parameter gradients against `weights` and returning
+    /// the input gradient.
+    fn backward_with(
+        &mut self,
+        micro: usize,
+        mut g: Vec<f32>,
+        weights: Option<&RefSnapshot>,
+    ) -> Result<Vec<f32>> {
+        let traces = self
+            .saved
+            .remove(&micro)
+            .with_context(|| format!("no stashed forward trace for micro {micro}"))?;
+        let b = self.microbatch;
+        for k in (0..self.layers.len()).rev() {
+            let d_in = self.layers[k].spec.in_elems;
+            let d_out = self.layers[k].spec.out_elems;
+            let tr = &traces[k];
+            anyhow::ensure!(g.len() == b * d_out, "gradient width mismatch at layer {k}");
+            let scale = match weights {
+                Some(w) => w[k].0.clone(),
+                None => self.layers[k].scale.clone(),
+            };
+            let mut gx = vec![0.0f32; b * d_in];
+            {
+                let l = &mut self.layers[k];
+                for s in 0..b {
+                    let xin = &tr.input[s * d_in..(s + 1) * d_in];
+                    let yout = &tr.output[s * d_out..(s + 1) * d_out];
+                    let gy = &g[s * d_out..(s + 1) * d_out];
+                    let gxi = &mut gx[s * d_in..(s + 1) * d_in];
+                    for j in 0..d_out {
+                        let dz = gy[j] * (1.0 - yout[j] * yout[j]);
+                        l.g_scale[j] += dz * xin[j % d_in];
+                        l.g_bias[j] += dz;
+                        gxi[j % d_in] += dz * scale[j];
+                    }
+                }
+            }
+            g = gx;
+        }
+        self.bwd_done.insert(micro);
+        Ok(g)
+    }
+
+    /// Release the weight snapshot a backward must run against
+    /// (bounded staleness: the version its forward pinned), mirroring
+    /// the pjrt worker's `take_bwd_lits`.  `None` for synchronous
+    /// policies — the round-constant live weights apply.
+    fn take_pinned(&mut self, micro: usize) -> Result<Option<Arc<RefSnapshot>>> {
+        if !self.async_updates() {
+            return Ok(None);
+        }
+        let (_, snap) = self
+            .stash
+            .take(micro)
+            .with_context(|| format!("no stashed weights for micro {micro}"))?;
+        Ok(Some(snap))
+    }
+
+    /// Post-backward bookkeeping shared by both backward paths
+    /// (mirrors the pjrt worker's `post_backward`): a bounded-
+    /// staleness stage applies this micro's gradient immediately,
+    /// advancing the version the next forward reads; synchronous
+    /// stages just keep accumulating.
+    fn finish_backward(&mut self) -> Result<()> {
+        if self.async_updates() {
+            self.apply_scaled(1.0 / self.num_micro as f32);
+            self.zero_grads();
+            self.version += 1;
+        }
+        Ok(())
+    }
+
+    fn apply_scaled(&mut self, scale: f32) {
+        let mut grads: Vec<Vec<f32>> = Vec::with_capacity(2 * self.layers.len());
+        for l in &self.layers {
+            grads.push(l.g_scale.iter().map(|g| g * scale).collect());
+            grads.push(l.g_bias.iter().map(|g| g * scale).collect());
+        }
+        let mut p_refs: Vec<&mut [f32]> = Vec::with_capacity(grads.len());
+        for l in &mut self.layers {
+            p_refs.push(&mut l.scale);
+            p_refs.push(&mut l.bias);
+        }
+        let g_refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+        self.opt.step(&mut p_refs, &g_refs);
+    }
+
+    fn zero_grads(&mut self) {
+        for l in &mut self.layers {
+            l.g_scale.iter_mut().for_each(|v| *v = 0.0);
+            l.g_bias.iter_mut().for_each(|v| *v = 0.0);
+        }
+    }
+
+    /// Round-end update for a synchronous policy running without a
+    /// replica group: one optimizer step over the 1/M-scaled round
+    /// gradient (bounded-staleness stages already updated per micro).
+    pub fn end_round_local(&mut self) -> Result<()> {
+        self.bwd_done.clear();
+        if self.async_updates() {
+            return Ok(());
+        }
+        self.apply_scaled(1.0 / self.num_micro as f32);
+        self.zero_grads();
+        Ok(())
+    }
+
+    /// Flattened gradient accumulators (replicated-stage round sync,
+    /// synchronous policies).
+    pub fn flat_grads(&self) -> Vec<f32> {
+        self.layers
+            .iter()
+            .flat_map(|l| l.g_scale.iter().chain(l.g_bias.iter()).copied())
+            .collect()
+    }
+
+    /// Flattened live parameters (replicated-stage parameter
+    /// averaging, bounded-staleness policies).
+    pub fn flat_params(&self) -> Vec<f32> {
+        self.layers
+            .iter()
+            .flat_map(|l| l.scale.iter().chain(l.bias.iter()).copied())
+            .collect()
+    }
+
+    /// Apply the group-summed round gradient (synchronous policies):
+    /// one step over the 1/M-scaled sum, as the in-process AllReduce
+    /// path does.
+    pub fn apply_round_gradients(&mut self, summed: &[f32]) -> Result<()> {
+        self.bwd_done.clear();
+        let expect: usize = self.layers.iter().map(|l| 2 * l.scale.len()).sum();
+        anyhow::ensure!(summed.len() == expect, "round-sync gradient length mismatch");
+        let mut off = 0;
+        for l in &mut self.layers {
+            let n = l.g_scale.len();
+            l.g_scale.copy_from_slice(&summed[off..off + n]);
+            off += n;
+            l.g_bias.copy_from_slice(&summed[off..off + n]);
+            off += n;
+        }
+        self.apply_scaled(1.0 / self.num_micro as f32);
+        self.zero_grads();
+        Ok(())
+    }
+
+    /// Overwrite the live parameters (replica parameter averaging);
+    /// invalidates the stash dedup anchor — the next forward must not
+    /// alias a pre-average snapshot.
+    pub fn set_flat_params(&mut self, flat: &[f32]) -> Result<()> {
+        self.bwd_done.clear();
+        let expect: usize = self.layers.iter().map(|l| 2 * l.scale.len()).sum();
+        anyhow::ensure!(flat.len() == expect, "round-sync parameter length mismatch");
+        let mut off = 0;
+        for l in &mut self.layers {
+            let n = l.scale.len();
+            l.scale.copy_from_slice(&flat[off..off + n]);
+            off += n;
+            l.bias.copy_from_slice(&flat[off..off + n]);
+            off += n;
+        }
+        self.stash.invalidate_last();
+        Ok(())
+    }
+
+    /// Current parameters by global layer index (checkpoint stream).
+    pub fn layer_states(&self) -> Vec<(usize, Vec<f32>, Vec<f32>)> {
+        self.layers
+            .iter()
+            .map(|l| (l.spec.layer, l.scale.clone(), l.bias.clone()))
+            .collect()
+    }
+
+    /// Warm-start from checkpointed layer states (ignores layers
+    /// outside this stage's range).
+    pub fn load_layer_states(
+        &mut self,
+        states: &[(usize, Vec<f32>, Vec<f32>)],
+    ) -> Result<()> {
+        for (layer, scale, bias) in states {
+            if let Some(l) = self.layers.iter_mut().find(|l| l.spec.layer == *layer) {
+                anyhow::ensure!(
+                    scale.len() == l.scale.len() && bias.len() == l.bias.len(),
+                    "warm-start arity for layer {layer}"
+                );
+                l.scale.copy_from_slice(scale);
+                l.bias.copy_from_slice(bias);
+            }
+        }
+        self.stash.invalidate_last();
+        Ok(())
+    }
+
+    /// Drop all in-flight round state (fault-recovery abort): stashed
+    /// traces, pinned weight versions and accumulated gradients.
+    pub fn abort_round(&mut self) {
+        self.saved.clear();
+        self.bwd_done.clear();
+        self.stash = ParamStash::new(self.stash_slots.max(1));
+        self.zero_grads();
+    }
+}
+
+impl StageCompute for ReferenceStage {
+    fn forward(&mut self, micro: usize, input: Tensor) -> Result<Option<Tensor>> {
+        if self.async_updates() {
+            // Pin the version this forward reads; the live weights ARE
+            // that version right now, so the forward itself runs on
+            // them and only the backward needs the pinned copy.  The
+            // snapshot closure stays lazy — `ParamStash::record` skips
+            // it when the version is unchanged since the last record
+            // (warm-up admits K_p + sigma forwards of one version), so
+            // the parameter deep-copy happens once per version, not
+            // once per forward.
+            let ReferenceStage { stash, layers, version, .. } = self;
+            stash.record(micro, *version, || {
+                Arc::new(layers.iter().map(|l| (l.scale.clone(), l.bias.clone())).collect())
+            })?;
+        }
+        let x = input.as_f32().context("reference stage expects f32 input")?.to_vec();
+        let out = self.forward_with(micro, &x, None)?;
+        let head = self.layers.last().unwrap().spec.head;
+        if head {
+            // Prediction stashed in the trace; scored at the Bwd slot.
+            Ok(None)
+        } else {
+            let d_out = self.layers.last().unwrap().spec.out_elems;
+            Ok(Some(Tensor::from_f32(&[self.microbatch, d_out], out)))
+        }
+    }
+
+    fn backward(&mut self, micro: usize, grad: Tensor) -> Result<Option<Tensor>> {
+        let snap = self.take_pinned(micro)?;
+        let g = grad.as_f32().context("gradient must be f32")?.to_vec();
+        let gx = self.backward_with(micro, g, snap.as_deref())?;
+        self.finish_backward()?;
+        let d_in = self.in_elems();
+        Ok(Some(Tensor::from_f32(&[self.microbatch, d_in], gx)))
+    }
+
+    fn backward_head(&mut self, micro: usize, targets: Tensor) -> Result<(f64, Option<Tensor>)> {
+        let snap = self.take_pinned(micro)?;
+        let head = self.layers.last().unwrap().spec;
+        anyhow::ensure!(head.head, "backward_head on a stage without the model head");
+        let pred = {
+            let traces = self
+                .saved
+                .get(&micro)
+                .with_context(|| format!("no forward trace for micro {micro}"))?;
+            traces.last().unwrap().output.clone()
+        };
+        let tgt = targets.as_f32().context("targets must be f32")?;
+        anyhow::ensure!(
+            tgt.len() == pred.len(),
+            "targets: {} elements, prediction has {}",
+            tgt.len(),
+            pred.len()
+        );
+        // MSE over (batch x head width); gradient 2(p - t)/n.
+        let n = pred.len() as f64;
+        let mut loss = 0.0f64;
+        let mut g = vec![0.0f32; pred.len()];
+        for (i, (&p, &t)) in pred.iter().zip(tgt).enumerate() {
+            let d = (p - t) as f64;
+            loss += d * d;
+            g[i] = (2.0 * d / n) as f32;
+        }
+        loss /= n;
+        let gx = self.backward_with(micro, g, snap.as_deref())?;
+        self.finish_backward()?;
+        let d_in = self.in_elems();
+        Ok((loss, Some(Tensor::from_f32(&[self.microbatch, d_in], gx))))
+    }
+
+    fn backward_weights(&mut self, micro: usize) -> Result<()> {
+        // The reference backward computes input- and weight-gradients
+        // fused (like the AOT executables), so the scheduled BwdW slot
+        // only validates order — same contract as the pjrt worker.
+        anyhow::ensure!(
+            self.bwd_done.contains(&micro),
+            "unsupported op order: BwdW({micro}) before its Bwd"
+        );
+        Ok(())
+    }
+}
+
+// =====================================================================
+// Reference task (driver-side synthetic data)
+// =====================================================================
+
+/// Deterministic synthetic task for the reference kernel: inputs are
+/// seeded noise, targets follow a fixed per-position affine map of the
+/// sample mean squashed through tanh — learnable by the reference
+/// stack, reproducible per (seed, round, micro) so a fault-recovery
+/// replay regenerates byte-identical micro-batches.
+pub struct RefTask {
+    in_elems: usize,
+    target_elems: usize,
+    microbatch: usize,
+    seed: u64,
+    /// Fixed target-map coefficients (never trained).
+    map_a: Vec<f32>,
+    map_b: Vec<f32>,
+}
+
+impl RefTask {
+    pub fn new(model: &ModelDesc, microbatch: usize, seed: u64) -> RefTask {
+        let target_elems = reference_target_elems(model);
+        let mut rng = Rng::new(seed ^ 0xA57E_401D);
+        let mut map_a = vec![0.0f32; target_elems];
+        let mut map_b = vec![0.0f32; target_elems];
+        rng.fill_normal(&mut map_a, 1.0);
+        rng.fill_normal(&mut map_b, 0.3);
+        RefTask {
+            in_elems: reference_input_elems(model),
+            target_elems,
+            microbatch,
+            seed,
+            map_a,
+            map_b,
+        }
+    }
+
+    /// The (input, target) pair of `micro` in `round` — a pure
+    /// function of (seed, round, micro).
+    pub fn microbatch(&self, round: usize, micro: usize) -> (Tensor, Tensor) {
+        let tag = (round as u64) << 32 | micro as u64;
+        let mut rng = Rng::new(self.seed ^ tag.wrapping_mul(0xD134_2543_DE82_EF95));
+        let b = self.microbatch;
+        let mut x = vec![0.0f32; b * self.in_elems];
+        rng.fill_normal(&mut x, 1.0);
+        let mut t = vec![0.0f32; b * self.target_elems];
+        for s in 0..b {
+            let xs = &x[s * self.in_elems..(s + 1) * self.in_elems];
+            let mean: f32 = xs.iter().sum::<f32>() / xs.len() as f32;
+            let ts = &mut t[s * self.target_elems..(s + 1) * self.target_elems];
+            for (j, v) in ts.iter_mut().enumerate() {
+                *v = (self.map_a[j] * mean + self.map_b[j]).tanh();
+            }
+        }
+        (
+            Tensor::from_f32(&[b, self.in_elems], x),
+            Tensor::from_f32(&[b, self.target_elems], t),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+    use crate::schedule::{OneFOneBKp, SchedulePolicy};
+    use std::collections::VecDeque;
+
+    /// Loopback data plane for single-stage tests: sends loop back
+    /// into the receive queue of a mailbox.
+    struct Mailbox {
+        inbox: VecDeque<DataMsg>,
+        sent_acts: Vec<(usize, Tensor)>,
+        sent_grads: Vec<(usize, Tensor)>,
+    }
+
+    impl DataPlane for Mailbox {
+        fn recv(&mut self) -> Result<DataMsg> {
+            self.inbox.pop_front().context("mailbox empty")
+        }
+
+        fn send_act(&mut self, micro: usize, t: Tensor) -> Result<()> {
+            self.sent_acts.push((micro, t));
+            Ok(())
+        }
+
+        fn send_grad(&mut self, micro: usize, t: Tensor) -> Result<()> {
+            self.sent_grads.push((micro, t));
+            Ok(())
+        }
+    }
+
+    fn tiny_model() -> ModelDesc {
+        use crate::model::Layer;
+        ModelDesc::new(
+            "tiny",
+            vec![
+                Layer::new("a", 100.0, 64, 32),
+                Layer::new("b", 100.0, 64, 24),
+                Layer::new("head", 100.0, 64, 16),
+            ],
+            40,
+        )
+    }
+
+    #[test]
+    fn reference_layers_match_model_bytes() {
+        let model = tiny_model();
+        let specs = reference_layers(&model, 0, 3);
+        assert_eq!(specs.len(), 3);
+        assert_eq!(specs[0].in_elems, 10); // input_bytes 40 / 4
+        assert_eq!(specs[0].out_elems, 8); // 32 / 4
+        assert_eq!(specs[1].in_elems, 8);
+        assert_eq!(specs[2].out_elems, 4);
+        assert!(specs[2].head && !specs[0].head);
+        assert_eq!(reference_input_elems(&model), 10);
+        assert_eq!(reference_target_elems(&model), 4);
+    }
+
+    #[test]
+    fn single_stage_round_learns() {
+        // One stage holding the whole tiny model: the MSE loss over the
+        // deterministic task must fall over a few rounds.
+        let model = tiny_model();
+        let specs = reference_layers(&model, 0, 3);
+        let b = 4;
+        let m_total = 2;
+        let mut stage = ReferenceStage::new(
+            &specs,
+            7,
+            OptimizerCfg::sgd(0.1),
+            0,
+            b,
+            m_total,
+        )
+        .unwrap();
+        let task = RefTask::new(&model, b, 7);
+        let script = OneFOneBKp.compute_order(&[0, 1], 1);
+        let mut losses = Vec::new();
+        for round in 0..12 {
+            let mut dp = Mailbox {
+                inbox: VecDeque::new(),
+                sent_acts: Vec::new(),
+                sent_grads: Vec::new(),
+            };
+            for m in 0..m_total {
+                let (x, t) = task.microbatch(round, m);
+                dp.inbox.push_back(DataMsg::Act { micro: m, t: x });
+                dp.inbox.push_back(DataMsg::Targets { micro: m, t });
+            }
+            let loss = run_script_round(&script, true, true, &mut stage, &mut dp).unwrap();
+            stage.end_round_local().unwrap();
+            assert!(dp.sent_acts.is_empty(), "head stage must not forward");
+            assert!(dp.sent_grads.is_empty(), "first stage must not send grads");
+            losses.push(loss / m_total as f64);
+        }
+        assert!(
+            *losses.last().unwrap() < losses[0] * 0.95,
+            "loss did not fall: {losses:?}"
+        );
+    }
+
+    #[test]
+    fn two_stage_chain_matches_boundary_shapes() {
+        // Stage 0 forwards an honestly-shaped boundary tensor; feeding
+        // it into stage 1 and returning the gradient closes the loop.
+        let model = tiny_model();
+        let b = 2;
+        let mut s0 =
+            ReferenceStage::new(&reference_layers(&model, 0, 1), 1, OptimizerCfg::sgd(0.1), 0, b, 1)
+                .unwrap();
+        let mut s1 =
+            ReferenceStage::new(&reference_layers(&model, 1, 3), 1, OptimizerCfg::sgd(0.1), 0, b, 1)
+                .unwrap();
+        let task = RefTask::new(&model, b, 1);
+        let (x, t) = task.microbatch(0, 0);
+
+        let act = s0.forward(0, x).unwrap().expect("stage 0 forwards");
+        assert_eq!(act.shape, vec![b, 8]); // 32 bytes / 4 per sample
+        assert!(s1.forward(0, act).unwrap().is_none(), "head stage stashes");
+        let (loss, gx) = s1.backward_head(0, t).unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+        let gx = gx.unwrap();
+        assert_eq!(gx.shape, vec![b, 8]);
+        let g0 = s0.backward(0, gx).unwrap().unwrap();
+        assert_eq!(g0.shape, vec![b, 10]);
+        s0.end_round_local().unwrap();
+        s1.end_round_local().unwrap();
+    }
+
+    #[test]
+    fn async_updates_pin_forward_versions() {
+        // Under a bounded-staleness script the backward must run
+        // against the snapshot its forward read even after intervening
+        // per-micro updates — take() returns the pinned version.
+        let model = tiny_model();
+        let specs = reference_layers(&model, 0, 3);
+        let b = 2;
+        let mut stage =
+            ReferenceStage::new(&specs, 3, OptimizerCfg::sgd(0.3), 3, b, 3).unwrap();
+        let task = RefTask::new(&model, b, 3);
+        // Admit three forwards (versions 0,0,0), then three backwards:
+        // each advances the version; each must still find its pin.
+        for m in 0..3 {
+            let (x, _) = task.microbatch(0, m);
+            assert!(stage.forward(m, x).unwrap().is_none());
+        }
+        assert_eq!(stage.stash.len(), 3);
+        for m in 0..3 {
+            let (_, t) = task.microbatch(0, m);
+            let (loss, _) = stage.backward_head(m, t).unwrap();
+            assert!(loss.is_finite());
+        }
+        assert_eq!(stage.version, 3, "one update per backward");
+        assert!(stage.stash.is_empty());
+        stage.end_round_local().unwrap();
+        // Overflowing the ring is a scheduling bug, reported as such.
+        let mut tight =
+            ReferenceStage::new(&specs, 3, OptimizerCfg::sgd(0.3), 1, b, 3).unwrap();
+        let (x0, _) = task.microbatch(0, 0);
+        let (x1, _) = task.microbatch(0, 1);
+        assert!(tight.forward(0, x0).unwrap().is_none());
+        assert!(tight.forward(1, x1).is_err(), "stash ring must reject overrun");
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_and_abort() {
+        let model = tiny_model();
+        let specs = reference_layers(&model, 0, 3);
+        let mut a = ReferenceStage::new(&specs, 5, OptimizerCfg::sgd(0.1), 0, 2, 1).unwrap();
+        let mut b = ReferenceStage::new(&specs, 99, OptimizerCfg::sgd(0.1), 0, 2, 1).unwrap();
+        let states = a.layer_states();
+        assert_ne!(b.layer_states(), states, "different seeds differ");
+        b.load_layer_states(&states).unwrap();
+        assert_eq!(b.layer_states(), states);
+        // Abort clears in-flight traces so a restarted round is clean.
+        let task = RefTask::new(&model, 2, 5);
+        let (x, _) = task.microbatch(0, 0);
+        let _ = a.forward(0, x).unwrap();
+        assert!(!a.saved.is_empty());
+        a.abort_round();
+        assert!(a.saved.is_empty());
+    }
+
+    #[test]
+    fn ref_task_is_deterministic() {
+        let model = tiny_model();
+        let t1 = RefTask::new(&model, 4, 11);
+        let t2 = RefTask::new(&model, 4, 11);
+        let (a_in, a_t) = t1.microbatch(3, 1);
+        let (b_in, b_t) = t2.microbatch(3, 1);
+        assert_eq!(a_in, b_in);
+        assert_eq!(a_t, b_t);
+        let (c_in, _) = t1.microbatch(4, 1);
+        assert_ne!(a_in, c_in, "rounds must differ");
+    }
+
+    #[test]
+    fn reference_layers_for_zoo_models() {
+        // Every zoo model yields a usable reference chain.
+        for m in [zoo::mobilenet_v2(), zoo::efficientnet_b1(), zoo::bert_small()] {
+            let specs = reference_layers(&m, 0, m.num_layers());
+            assert_eq!(specs.len(), m.num_layers());
+            assert!(specs.iter().all(|s| s.in_elems > 0 && s.out_elems > 0));
+            assert!(specs.last().unwrap().head);
+        }
+    }
+
+    /// `WorkerSpec` stays constructible featureless (it moved here from
+    /// the pjrt-gated worker).
+    #[test]
+    fn worker_spec_is_feature_independent() {
+        use crate::planner::plan::Plan;
+        let plan = Plan {
+            stages: vec![crate::planner::plan::Stage {
+                layers: (0, 2),
+                devices: vec![0],
+                alloc: vec![4],
+                kp: 1,
+            }],
+            microbatch: 4,
+            num_micro: 2,
+        };
+        let sched = crate::schedule::Schedule::for_runtime(&plan, &OneFOneBKp);
+        let spec = WorkerSpec {
+            stage: 0,
+            layers: (0, 2),
+            slot: 0,
+            script: sched.compute_script(0, 0),
+            stash_slots: 0,
+            num_micro: 2,
+            is_first: true,
+            is_last: true,
+            seed: 1,
+            opt: OptimizerCfg::sgd(0.1),
+            initial_params: None,
+        };
+        assert_eq!(spec.script.len(), 4);
+    }
+}

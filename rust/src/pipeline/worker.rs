@@ -1,15 +1,19 @@
-//! Asteroid Worker (paper Fig. 11): one per (stage, replica slot).
+//! Asteroid Worker (paper Fig. 11): one per (stage, replica slot),
+//! in-process thread flavour.
 //!
 //! Each worker thread owns its own PJRT runtime (XLA handles are not
 //! `Send`), its stage's parameters, optimizer state, and an in-memory
 //! task pool.  It executes its device's `schedule::ComputeOp` script —
 //! derived once from the plan's `schedule::Schedule` by the training
-//! orchestrator — blocking on the inputs each scripted op needs.  The
-//! worker itself contains **no scheduling logic**: 1F1B order and the
-//! K_p warm-up window are properties of the script, not of this loop.
-//! After the script it accumulates gradients across the HPP-Round,
-//! AllReduces within its replica group, applies the optimizer, then
-//! reports to the coordinator and waits for the next round.
+//! orchestrator — through the transport-agnostic step core of
+//! [`crate::pipeline::step`]: the [`PjrtStage`] here implements
+//! [`StageCompute`] over the AOT executables, and the channel pair
+//! implements [`DataPlane`].  The worker itself contains **no
+//! scheduling logic**: 1F1B order and the K_p warm-up window are
+//! properties of the script, not of this loop.  After the script it
+//! accumulates gradients across the HPP-Round, AllReduces within its
+//! replica group, applies the optimizer, then reports to the
+//! coordinator and waits for the next round.
 //!
 //! Intra-stage data parallelism assigns whole micro-batches round-robin
 //! across the group (micro m -> slot m mod g, the Schedule IR's
@@ -24,13 +28,14 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use crate::model::from_manifest::ManifestModel;
+use crate::model::from_manifest::{ManifestLayer, ManifestModel};
 use crate::pipeline::channel::{Rx, Tx};
 use crate::pipeline::collective::GroupComm;
-use crate::pipeline::optimizer::{Optimizer, OptimizerCfg};
+use crate::pipeline::optimizer::Optimizer;
+use crate::pipeline::step::{run_script_round, DataMsg, DataPlane, StageCompute};
 use crate::runtime::{init_layer_params, LayerParams, ParamStash, Runtime, Tensor};
-use crate::schedule::ComputeOp;
-use crate::util::rng::Rng;
+
+pub use crate::pipeline::step::WorkerSpec;
 
 /// Messages between workers / coordinator.
 #[derive(Debug)]
@@ -65,36 +70,6 @@ pub enum Report {
     Fatal { stage: usize, slot: usize, error: String },
 }
 
-/// Static description of one worker.
-#[derive(Debug, Clone)]
-pub struct WorkerSpec {
-    pub stage: usize,
-    /// Layer range [lo, hi) into the manifest layer list.
-    pub layers: (usize, usize),
-    pub slot: usize,
-    /// This device's ordered FP/BP work for one HPP-Round, from
-    /// `Schedule::compute_script(stage, slot)` — the single source of
-    /// 1F1B/K_p ordering.
-    pub script: Vec<ComputeOp>,
-    /// Bounded-staleness weight-stash ring depth (the schedule's
-    /// effective admission window, K_p + sigma).  0 = synchronous
-    /// policy: gradients accumulate across the round and no stash
-    /// exists.  > 0 switches the worker to version-tagged parameter
-    /// reads/writes: one update per backward, each backward computed
-    /// against the snapshot its forward read (`runtime::ParamStash`),
-    /// and the round barrier reconciling replicas by parameter
-    /// averaging instead of gradient AllReduce.
-    pub stash_slots: usize,
-    pub num_micro: usize,
-    pub is_first: bool,
-    pub is_last: bool,
-    pub seed: u64,
-    pub opt: OptimizerCfg,
-    /// Warm-start parameters by global layer index (fault-tolerance
-    /// restore / checkpoint resume); layers not present use fresh init.
-    pub initial_params: Option<Arc<std::collections::BTreeMap<usize, Vec<Tensor>>>>,
-}
-
 /// Run the worker loop (call from a dedicated thread).  `next`/`prev`
 /// are per-destination (possibly bandwidth-shaped) send handles.
 pub fn run_worker(
@@ -113,6 +88,37 @@ pub fn run_worker(
             slot: spec.slot,
             error: format!("{e:#}"),
         });
+    }
+}
+
+/// The channel-backed [`DataPlane`]: receive from the worker's inbox,
+/// send over the per-destination (possibly shaped) handles with the
+/// round-robin `micro % g` routing.
+struct ChannelPlane<'a> {
+    rx: &'a Rx<Msg>,
+    next: &'a [Tx<Msg>],
+    prev: &'a [Tx<Msg>],
+}
+
+impl DataPlane for ChannelPlane<'_> {
+    fn recv(&mut self) -> Result<DataMsg> {
+        match self.rx.recv()? {
+            Msg::Act { micro, t } => Ok(DataMsg::Act { micro, t }),
+            Msg::Grad { micro, t } => Ok(DataMsg::Grad { micro, t }),
+            Msg::Targets { micro, t } => Ok(DataMsg::Targets { micro, t }),
+            Msg::Stop => bail!("stopped mid-round"),
+            Msg::NextRound => bail!("unexpected NextRound mid-round"),
+        }
+    }
+
+    fn send_act(&mut self, micro: usize, t: Tensor) -> Result<()> {
+        let bytes = t.byte_len();
+        self.next[micro % self.next.len()].send(bytes, Msg::Act { micro, t })
+    }
+
+    fn send_grad(&mut self, micro: usize, t: Tensor) -> Result<()> {
+        let bytes = t.byte_len();
+        self.prev[micro % self.prev.len()].send(bytes, Msg::Grad { micro, t })
     }
 }
 
@@ -144,11 +150,12 @@ fn worker_loop(
     // parameters (required for DP correctness).  Warm-start values (a
     // restore after a device failure, or a checkpoint resume) override
     // the fresh init per layer.
-    let mut params: Vec<LayerParams> = layers
+    let params: Vec<LayerParams> = layers
         .iter()
         .enumerate()
         .map(|(k, l)| {
-            let mut rng = Rng::new(spec.seed ^ ((lo + k) as u64).wrapping_mul(0x9E37_79B9));
+            let mut rng =
+                crate::util::rng::Rng::new(spec.seed ^ ((lo + k) as u64).wrapping_mul(0x9E37_79B9));
             let mut p = init_layer_params(l, &mut rng);
             if let Some(init) = spec.initial_params.as_ref().and_then(|m| m.get(&(lo + k))) {
                 assert_eq!(init.len(), p.values.len(), "warm-start arity for {}", l.name);
@@ -161,22 +168,34 @@ fn worker_loop(
         .iter()
         .flat_map(|p| p.values.iter().map(|t| t.elements()))
         .collect();
-    let mut opt = Optimizer::new(spec.opt, &sizes);
+    let opt = Optimizer::new(spec.opt, &sizes);
     let async_updates = spec.stash_slots > 0;
-    // The stash pins the already-converted parameter *literals* per
-    // weight version, so a version-tagged backward never re-pays the
-    // tensor-to-literal conversion (the engine's documented top
-    // hot-path cost).
-    let mut stash: ParamStash<Vec<Vec<xla::Literal>>> = ParamStash::new(spec.stash_slots);
-    let mut version: u64 = 0;
+    let lits = Arc::new(build_lits(&params)?);
 
-    let mut lits = Arc::new(build_lits(&params)?);
+    let mut stage = PjrtStage {
+        spec,
+        layers,
+        rt: &rt,
+        params,
+        lits,
+        opt,
+        sizes,
+        // The stash pins the already-converted parameter *literals* per
+        // weight version, so a version-tagged backward never re-pays
+        // the tensor-to-literal conversion (the engine's documented top
+        // hot-path cost).
+        stash: ParamStash::new(spec.stash_slots.max(1)),
+        version: 0,
+        input_stash: BTreeMap::new(),
+        head_acts: BTreeMap::new(),
+        bwd_done: Default::default(),
+    };
 
     loop {
-        let loss_sum = run_round(
-            spec, layers, &rt, &mut params, &mut lits, &mut opt, &sizes, &mut stash,
-            &mut version, rx, next, prev,
-        )?;
+        let loss_sum = {
+            let mut plane = ChannelPlane { rx, next, prev };
+            run_script_round(&spec.script, spec.is_first, spec.is_last, &mut stage, &mut plane)?
+        };
 
         if async_updates {
             // Bounded staleness already applied one update per backward
@@ -185,10 +204,10 @@ fn worker_loop(
             // (no per-micro gradient AllReduce), so reconcile by
             // parameter averaging instead of gradient summing.
             if group.size() > 1 {
-                let red = group.allreduce_sum(&flat_values(&params));
+                let red = group.allreduce_sum(&flat_values(&stage.params));
                 let g = group.size() as f32;
                 let mut off = 0;
-                for p in &mut params {
+                for p in &mut stage.params {
                     for t in &mut p.values {
                         for v in t.as_f32_mut()? {
                             *v = red[off] / g;
@@ -196,22 +215,29 @@ fn worker_loop(
                         }
                     }
                 }
-                lits = Arc::new(build_lits(&params)?);
+                stage.lits = Arc::new(build_lits(&stage.params)?);
                 // The averaging rewrote the weights out-of-band: the
                 // next round's forwards must not alias the pre-average
                 // snapshot recorded under the same version number.
-                stash.invalidate_last();
+                stage.stash.invalidate_last();
             }
         } else {
             // ---- gradient AllReduce (sum across replicas), one
             // optimizer step over the 1/M-scaled round gradient.
-            let reduced = group.allreduce_sum(&flat_grads(&params));
-            apply_update(&mut params, &sizes, &mut opt, reduced, 1.0 / spec.num_micro as f32)?;
-            for p in &mut params {
+            let reduced = group.allreduce_sum(&flat_grads(&stage.params));
+            apply_update(
+                &mut stage.params,
+                &stage.sizes,
+                &mut stage.opt,
+                reduced,
+                1.0 / spec.num_micro as f32,
+            )?;
+            for p in &mut stage.params {
                 p.zero_grads();
             }
-            lits = Arc::new(build_lits(&params)?);
+            stage.lits = Arc::new(build_lits(&stage.params)?);
         }
+        stage.bwd_done.clear();
 
         let assigned = spec.script.iter().filter(|op| op.is_fwd()).count();
         report
@@ -231,7 +257,7 @@ fn worker_loop(
                     // Clean shutdown: slot 0 streams its stage weights
                     // back (the coordinator-side checkpoint).
                     if spec.slot == 0 {
-                        for (k, p) in params.iter().enumerate() {
+                        for (k, p) in stage.params.iter().enumerate() {
                             report
                                 .send(Report::FinalParams {
                                     layer: lo + k,
@@ -246,29 +272,6 @@ fn worker_loop(
             }
         }
     }
-}
-
-/// Pump one message from the inbox into the per-kind buffers.
-fn pump(
-    rx: &Rx<Msg>,
-    acts: &mut BTreeMap<usize, Tensor>,
-    grads_in: &mut BTreeMap<usize, Tensor>,
-    targets: &mut BTreeMap<usize, Tensor>,
-) -> Result<()> {
-    match rx.recv()? {
-        Msg::Act { micro, t } => {
-            acts.insert(micro, t);
-        }
-        Msg::Grad { micro, t } => {
-            grads_in.insert(micro, t);
-        }
-        Msg::Targets { micro, t } => {
-            targets.insert(micro, t);
-        }
-        Msg::Stop => bail!("stopped mid-round"),
-        Msg::NextRound => bail!("unexpected NextRound mid-round"),
-    }
-    Ok(())
 }
 
 /// Convert the live parameter values to cached XLA literals.
@@ -328,8 +331,9 @@ fn apply_update(
     Ok(())
 }
 
-/// Process one HPP-Round by executing the worker's schedule script;
-/// returns the loss sum (head stage only).
+/// The PJRT [`StageCompute`]: this stage's compiled executables,
+/// parameters and (under bounded staleness) the literal-pinning
+/// weight-version stash.
 ///
 /// Under a bounded-staleness script (`spec.stash_slots` > 0) this is
 /// where the Schedule IR's weight-version tags become real: every
@@ -339,164 +343,174 @@ fn apply_update(
 /// its update to the live weights (advancing the version), so a
 /// forward may read weights at most sigma updates behind the frontier
 /// — never more, or `ParamStash::record` reports the overrun.
-#[allow(clippy::too_many_arguments)]
-fn run_round(
-    spec: &WorkerSpec,
-    layers: &[crate::model::from_manifest::ManifestLayer],
-    rt: &Runtime,
-    params: &mut [LayerParams],
-    lits: &mut Arc<Vec<Vec<xla::Literal>>>,
-    opt: &mut Optimizer,
-    sizes: &[usize],
-    stash: &mut ParamStash<Vec<Vec<xla::Literal>>>,
-    version: &mut u64,
-    rx: &Rx<Msg>,
-    next: &[Tx<Msg>],
-    prev: &[Tx<Msg>],
-) -> Result<f64> {
-    let async_updates = spec.stash_slots > 0;
-    let mut acts: BTreeMap<usize, Tensor> = BTreeMap::new();
-    let mut grads_in: BTreeMap<usize, Tensor> = BTreeMap::new();
-    let mut targets: BTreeMap<usize, Tensor> = BTreeMap::new();
-    // Per-micro stash of layer inputs (for the rematerialising BP) —
-    // distinct from the weight-version `ParamStash`.
-    let mut input_stash: BTreeMap<usize, Vec<Tensor>> = BTreeMap::new();
-    // Split-backward scripts (zero-bubble policies): the AOT backward
-    // executable computes input- and weight-gradients fused, so both
-    // are accumulated at the Bwd op and the scheduled BwdW is a
-    // bookkeeping op that only validates the order.  Accumulation
-    // order does not change the summed round gradient, and realising
-    // the weight-grad at Bwd avoids holding O(M) deferred gradient
-    // copies that no memory model charges.
-    let mut bwd_done: std::collections::BTreeSet<usize> = std::collections::BTreeSet::new();
-    // Head stage only: boundary activations awaiting their scheduled
-    // Bwd (the head artifact fuses its FP with the loss BP, so the
-    // head runs at the Bwd position to honour the script order under
-    // any policy — fill-drain included).
-    let mut head_acts: BTreeMap<usize, Tensor> = BTreeMap::new();
-    let mut loss_sum = 0.0f64;
+struct PjrtStage<'a> {
+    spec: &'a WorkerSpec,
+    layers: &'a [ManifestLayer],
+    rt: &'a Runtime,
+    params: Vec<LayerParams>,
+    lits: Arc<Vec<Vec<xla::Literal>>>,
+    opt: Optimizer,
+    sizes: Vec<usize>,
+    stash: ParamStash<Vec<Vec<xla::Literal>>>,
+    version: u64,
+    /// Per-micro stash of layer inputs (for the rematerialising BP) —
+    /// distinct from the weight-version `ParamStash`.
+    input_stash: BTreeMap<usize, Vec<Tensor>>,
+    /// Head stage only: boundary activations awaiting their scheduled
+    /// Bwd (the head artifact fuses its FP with the loss BP, so the
+    /// head runs at the Bwd position to honour the script order under
+    /// any policy — fill-drain included).
+    head_acts: BTreeMap<usize, Tensor>,
+    /// Split-backward scripts (zero-bubble policies): the AOT backward
+    /// executable computes input- and weight-gradients fused, so both
+    /// are accumulated at the Bwd op and the scheduled BwdW is a
+    /// bookkeeping op that only validates the order.
+    bwd_done: std::collections::BTreeSet<usize>,
+}
 
-    let head_is_here = spec.is_last;
+/// One pinned weight version: (version, cached parameter literals).
+type PinnedLits = (u64, Arc<Vec<Vec<xla::Literal>>>);
 
-    for op in &spec.script {
-        match *op {
-            ComputeOp::Fwd(m) => {
-                // Block until this op's inputs are in (the script order
-                // already respects 1F1B and the K_p/staleness window).
-                while !acts.contains_key(&m) {
-                    pump(rx, &mut acts, &mut grads_in, &mut targets)?;
-                }
-                // Version-tagged read: pin the literals this forward
-                // uses (an Arc clone of the cached conversion — free),
-                // so its backward runs against the same version after
-                // intervening per-micro updates.
-                if async_updates {
-                    stash.record(m, *version, || lits.clone())?;
-                }
-                let x = acts.remove(&m).unwrap();
-                if head_is_here {
-                    let n = layers.len();
-                    let (cur, inputs) =
-                        forward_through(&layers[..n - 1], rt, &lits[..n - 1], x)?;
-                    input_stash.insert(m, inputs);
-                    head_acts.insert(m, cur);
-                } else {
-                    let (out, inputs) = forward_through(layers, rt, &lits[..], x)?;
-                    input_stash.insert(m, inputs);
-                    let bytes = out.byte_len();
-                    next[m % next.len()].send(bytes, Msg::Act { micro: m, t: out })?;
-                }
-            }
-            ComputeOp::Bwd(m) => {
-                let gx = {
-                    // Version-tagged weights for this backward: the
-                    // stashed literals its forward read (bounded
-                    // staleness), or the round-constant literals (sync).
-                    // Either way pre-converted — no per-micro
-                    // tensor-to-literal cost here.
-                    let snap = if async_updates {
-                        Some(
-                            stash
-                                .take(m)
-                                .with_context(|| format!("no stashed weights for micro {m}"))?,
-                        )
-                    } else {
-                        None
-                    };
-                    let bwd_lits: &[Vec<xla::Literal>] = match &snap {
-                        Some((_, weights)) => &weights[..],
-                        None => &lits[..],
-                    };
-                    if head_is_here {
-                        // Fused head FP+BP on the stashed boundary
-                        // activation, then BP through the stashed layers.
-                        while !targets.contains_key(&m) {
-                            pump(rx, &mut acts, &mut grads_in, &mut targets)?;
-                        }
-                        let tgt = targets.remove(&m).unwrap();
-                        let cur = head_acts
-                            .remove(&m)
-                            .with_context(|| format!("no head activation for micro {m}"))?;
-                        let inputs = input_stash
-                            .remove(&m)
-                            .with_context(|| format!("no stashed inputs for micro {m}"))?;
-                        let (loss, gx) =
-                            head_backward(layers, rt, params, bwd_lits, cur, &tgt, &inputs)?;
-                        loss_sum += loss as f64;
-                        gx
-                    } else {
-                        while !grads_in.contains_key(&m) {
-                            pump(rx, &mut acts, &mut grads_in, &mut targets)?;
-                        }
-                        let g = grads_in.remove(&m).unwrap();
-                        let inputs = input_stash
-                            .remove(&m)
-                            .with_context(|| format!("no stashed inputs for micro {m}"))?;
-                        backward_through(layers, rt, params, bwd_lits, &inputs, g)?
-                    }
-                };
-                bwd_done.insert(m);
-                if !spec.is_first {
-                    let t = gx.context("non-first stage must produce an input gradient")?;
-                    let bytes = t.byte_len();
-                    prev[m % prev.len()].send(bytes, Msg::Grad { micro: m, t })?;
-                }
-                // Version-tagged write: a bounded-staleness worker
-                // applies this micro's gradient immediately, advancing
-                // the weight version the next forward reads.
-                if async_updates {
-                    let grads = flat_grads(params);
-                    apply_update(params, sizes, opt, grads, 1.0 / spec.num_micro as f32)?;
-                    for p in params.iter_mut() {
-                        p.zero_grads();
-                    }
-                    *version += 1;
-                    *lits = Arc::new(build_lits(params)?);
-                }
-            }
-            ComputeOp::BwdW(m) => {
-                // Scheduled weight-gradient slot of a split backward.
-                // The fused AOT executable already accumulated it at
-                // this micro's Bwd; a BwdW whose Bwd has not run is a
-                // schedule the engine cannot execute — report it as
-                // such, not as a policy-name mismatch.
-                anyhow::ensure!(
-                    bwd_done.contains(&m),
-                    "unsupported op order: BwdW({m}) before its Bwd \
-                     (stage {} slot {})",
-                    spec.stage,
-                    spec.slot
-                );
-            }
+impl PjrtStage<'_> {
+    fn async_updates(&self) -> bool {
+        self.spec.stash_slots > 0
+    }
+
+    /// The stashed-or-live literal set a backward must use, plus the
+    /// post-backward per-micro update for bounded-staleness scripts.
+    fn take_bwd_lits(&mut self, micro: usize) -> Result<Option<PinnedLits>> {
+        if self.async_updates() {
+            Ok(Some(
+                self.stash
+                    .take(micro)
+                    .with_context(|| format!("no stashed weights for micro {micro}"))?,
+            ))
+        } else {
+            Ok(None)
         }
     }
-    Ok(loss_sum)
+
+    fn post_backward(&mut self, micro: usize) -> Result<()> {
+        self.bwd_done.insert(micro);
+        // Version-tagged write: a bounded-staleness worker applies this
+        // micro's gradient immediately, advancing the weight version
+        // the next forward reads.
+        if self.async_updates() {
+            let grads = flat_grads(&self.params);
+            apply_update(
+                &mut self.params,
+                &self.sizes,
+                &mut self.opt,
+                grads,
+                1.0 / self.spec.num_micro as f32,
+            )?;
+            for p in self.params.iter_mut() {
+                p.zero_grads();
+            }
+            self.version += 1;
+            self.lits = Arc::new(build_lits(&self.params)?);
+        }
+        Ok(())
+    }
+}
+
+impl StageCompute for PjrtStage<'_> {
+    fn forward(&mut self, micro: usize, x: Tensor) -> Result<Option<Tensor>> {
+        // Version-tagged read: pin the literals this forward uses (an
+        // Arc clone of the cached conversion — free), so its backward
+        // runs against the same version after intervening per-micro
+        // updates.
+        if self.async_updates() {
+            let lits = self.lits.clone();
+            self.stash.record(micro, self.version, || lits)?;
+        }
+        if self.spec.is_last {
+            let n = self.layers.len();
+            let (cur, inputs) =
+                forward_through(&self.layers[..n - 1], self.rt, &self.lits[..n - 1], x)?;
+            self.input_stash.insert(micro, inputs);
+            self.head_acts.insert(micro, cur);
+            Ok(None)
+        } else {
+            let (out, inputs) = forward_through(self.layers, self.rt, &self.lits[..], x)?;
+            self.input_stash.insert(micro, inputs);
+            Ok(Some(out))
+        }
+    }
+
+    fn backward(&mut self, micro: usize, g: Tensor) -> Result<Option<Tensor>> {
+        let snap = self.take_bwd_lits(micro)?;
+        let gx = {
+            // Version-tagged weights for this backward: the stashed
+            // literals its forward read (bounded staleness), or the
+            // round-constant literals (sync).  Either way pre-converted
+            // — no per-micro tensor-to-literal cost here.
+            let bwd_lits: &[Vec<xla::Literal>] = match &snap {
+                Some((_, weights)) => &weights[..],
+                None => &self.lits[..],
+            };
+            let inputs = self
+                .input_stash
+                .remove(&micro)
+                .with_context(|| format!("no stashed inputs for micro {micro}"))?;
+            backward_through(self.layers, self.rt, &mut self.params, bwd_lits, &inputs, g)?
+        };
+        self.post_backward(micro)?;
+        Ok(gx)
+    }
+
+    fn backward_head(&mut self, micro: usize, targets: Tensor) -> Result<(f64, Option<Tensor>)> {
+        let snap = self.take_bwd_lits(micro)?;
+        let (loss, gx) = {
+            let bwd_lits: &[Vec<xla::Literal>] = match &snap {
+                Some((_, weights)) => &weights[..],
+                None => &self.lits[..],
+            };
+            // Fused head FP+BP on the stashed boundary activation, then
+            // BP through the stashed layers.
+            let cur = self
+                .head_acts
+                .remove(&micro)
+                .with_context(|| format!("no head activation for micro {micro}"))?;
+            let inputs = self
+                .input_stash
+                .remove(&micro)
+                .with_context(|| format!("no stashed inputs for micro {micro}"))?;
+            head_backward(
+                self.layers,
+                self.rt,
+                &mut self.params,
+                bwd_lits,
+                cur,
+                &targets,
+                &inputs,
+            )?
+        };
+        self.post_backward(micro)?;
+        Ok((loss as f64, gx))
+    }
+
+    fn backward_weights(&mut self, micro: usize) -> Result<()> {
+        // Scheduled weight-gradient slot of a split backward.  The
+        // fused AOT executable already accumulated it at this micro's
+        // Bwd; a BwdW whose Bwd has not run is a schedule the engine
+        // cannot execute — report it as such, not as a policy-name
+        // mismatch.
+        anyhow::ensure!(
+            self.bwd_done.contains(&micro),
+            "unsupported op order: BwdW({micro}) before its Bwd \
+             (stage {} slot {})",
+            self.spec.stage,
+            self.spec.slot
+        );
+        Ok(())
+    }
 }
 
 /// FP through all non-head layers; returns (stage output, stashed
 /// per-layer inputs).
 fn forward_through(
-    layers: &[crate::model::from_manifest::ManifestLayer],
+    layers: &[ManifestLayer],
     rt: &Runtime,
     lits: &[Vec<xla::Literal>],
     x: Tensor,
@@ -523,7 +537,7 @@ fn forward_through(
 /// back through this stage's stashed non-head layers.  Returns (loss,
 /// gradient for the previous stage if any).
 fn head_backward(
-    layers: &[crate::model::from_manifest::ManifestLayer],
+    layers: &[ManifestLayer],
     rt: &Runtime,
     params: &mut [LayerParams],
     lits: &[Vec<xla::Literal>],
@@ -562,7 +576,7 @@ fn head_backward(
 /// gradient unless the first layer consumes it (embed/stem bwd with no
 /// g_x output).
 fn backward_through(
-    layers: &[crate::model::from_manifest::ManifestLayer],
+    layers: &[ManifestLayer],
     rt: &Runtime,
     params: &mut [LayerParams],
     lits: &[Vec<xla::Literal>],

@@ -4,9 +4,13 @@
 //! * [`SimBackend`] — event-accurate schedule pricing
 //!   (`sim::price_schedule`): every throughput/latency number the
 //!   paper tables report, with no numerics;
-//! * [`PjrtBackend`] — the live worker pipeline over AOT-compiled
-//!   artifacts, with optional edge-link emulation.  Requires an
-//!   artifact-model session and a build with the `pjrt` feature.
+//! * [`PjrtBackend`] — the live in-process worker pipeline over
+//!   AOT-compiled artifacts, with optional edge-link emulation.
+//!   Requires an artifact-model session and a build with the `pjrt`
+//!   feature;
+//! * [`super::RpcBackend`] (in `session::rpc`) — the multi-process
+//!   edge backend: each stage slot is a separate `asteroid-worker` OS
+//!   process driven over TCP, feature-independent.
 //!
 //! Both honour the session's [`FaultSpec`](super::FaultSpec): the sim
 //! backend prices the pre-failure schedule, runs the spec'd recovery
@@ -81,6 +85,7 @@ impl ExecutionBackend for SimBackend {
             sim: Some(sim),
             recoveries,
             final_params: None,
+            rpc: None,
         })
     }
 }
@@ -212,6 +217,7 @@ fn live_report(s: &Session, stats: TrainStats, recoveries: Vec<RecoveryEvent>) -
         sim: None,
         recoveries,
         final_params: Some(stats.final_params),
+        rpc: None,
     }
 }
 
@@ -244,5 +250,6 @@ fn merge_live_phases(
         sim: None,
         recoveries: vec![event],
         final_params: Some(after.final_params),
+        rpc: None,
     }
 }

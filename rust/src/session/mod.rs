@@ -11,7 +11,10 @@
 //!   [`PlanOutcome`] plus the explicit round [`Schedule`];
 //! * **Execution** — any [`ExecutionBackend`] turns the planned
 //!   session into a [`RunReport`]: [`SimBackend`] prices the schedule
-//!   event-accurately, [`PjrtBackend`] runs the live worker pipeline.
+//!   event-accurately, [`PjrtBackend`] runs the live in-process worker
+//!   pipeline, and [`RpcBackend`] drives separate `asteroid-worker`
+//!   OS processes over TCP (real transport, heartbeats, and device
+//!   exits that actually kill a process).
 //!
 //! Device-exit fault tolerance (paper §3.4) is a *property of the
 //! session*, not a special entry point: attach a [`FaultSpec`] and
@@ -39,8 +42,10 @@
 //! ```
 
 pub mod backend;
+pub mod rpc;
 
 pub use backend::{ExecutionBackend, PjrtBackend, SimBackend};
+pub use rpc::{RpcBackend, RpcDeviceStats, RpcStats};
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -101,11 +106,16 @@ pub struct FaultSpec {
     /// The exiting device.
     pub target: FaultTarget,
     pub recovery: RecoveryKind,
-    /// Rounds to run on the recovered pipeline (live backend; the sim
+    /// Rounds to run on the recovered pipeline (live backends; the sim
     /// backend prices the remaining `steps - fail_after` rounds on the
     /// recovery plan instead).
     pub resume_rounds: usize,
-    /// Detection model for the recovery report.
+    /// Heartbeat timing: the detection model the recovery report
+    /// charges, *and* the live beat period / silence deadline the
+    /// `RpcBackend` driver and its workers actually run with — one
+    /// configuration, so sim and live agree on detection latency.
+    /// Validated at `SessionBuilder::build` (see
+    /// [`HeartbeatCfg::validate`]).
     pub heartbeat: HeartbeatCfg,
 }
 
@@ -151,6 +161,16 @@ impl FaultSpec {
     pub fn heavy(self) -> FaultSpec {
         self.with_recovery(RecoveryKind::Heavy)
     }
+
+    /// Override the heartbeat timing (beat interval, miss threshold,
+    /// probe RTT).  Tight configurations ([`HeartbeatCfg::tight`])
+    /// keep integration tests fast; the validated floor keeps them
+    /// from flaking.  The same numbers drive the sim's detection model
+    /// and the live RPC monitor.
+    pub fn with_heartbeat(mut self, hb: HeartbeatCfg) -> FaultSpec {
+        self.heartbeat = hb;
+        self
+    }
 }
 
 /// Per-run execution options shared by every backend.
@@ -195,7 +215,7 @@ pub struct RecoveryEvent {
 /// The unified result every [`ExecutionBackend`] returns.
 #[derive(Debug, Clone)]
 pub struct RunReport {
-    /// Which backend produced this (`"sim"` / `"pjrt"`).
+    /// Which backend produced this (`"sim"` / `"pjrt"` / `"rpc"`).
     pub backend: &'static str,
     /// The plan that was executed.
     pub plan: Plan,
@@ -229,6 +249,8 @@ pub struct RunReport {
     pub sim: Option<SimResult>,
     /// Device exits injected via the session's [`FaultSpec`].
     pub recoveries: Vec<RecoveryEvent>,
+    /// Per-device RPC timings and byte meters ([`RpcBackend`] only).
+    pub rpc: Option<RpcStats>,
     /// Final weights by global layer index (live backend only) — the
     /// coordinator-side checkpoint.
     pub final_params: Option<BTreeMap<usize, Vec<Tensor>>>,
@@ -371,6 +393,11 @@ impl SessionBuilder {
             .cluster
             .context("Session::builder(): .cluster(..) is required")?;
         anyhow::ensure!(!cluster.devices.is_empty(), "cluster has no devices");
+        if let Some(f) = &self.fault {
+            f.heartbeat
+                .validate()
+                .context("Session::builder(): invalid FaultSpec heartbeat timing")?;
+        }
 
         let (model, artifacts, manifest_model, cfg) = match &source {
             ModelSource::Zoo(name) => {

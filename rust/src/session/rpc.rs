@@ -1,0 +1,799 @@
+//! `RpcBackend`: the multi-process edge execution backend.
+//!
+//! Each pipeline stage slot runs as a separate OS process (the
+//! `asteroid-worker` binary) reachable over TCP; this driver speaks the
+//! [`crate::comm::rpc`] protocol to them: it distributes the plan slice +
+//! schedule script to every worker (control plane), feeds micro-batch
+//! inputs/targets each HPP-Round, mediates replicated-stage round
+//! sync, consumes heartbeats into the §3.4
+//! [`HeartbeatMonitor`](crate::fault::HeartbeatMonitor), and — when the
+//! session carries a [`FaultSpec`](super::FaultSpec) — injects a *real*
+//! device exit: the target worker process dies unclean mid-round, the
+//! monitor detects the silence, the session's recovery mechanism
+//! re-plans, and the surviving processes are re-tasked over live
+//! connections (warm-started from the driver-side checkpoint) to
+//! replay the failed round and resume training.
+//!
+//! Workers execute the session's schedule policy end-to-end (all five,
+//! including `async:<s>` weight-version stashing) over the
+//! feature-independent
+//! [`ReferenceStage`](crate::pipeline::step::ReferenceStage) kernel —
+//! tensor shapes and transfer bytes are the planned model's, the
+//! arithmetic is a learnable surrogate (see `pipeline::step`).  That is
+//! what makes this backend exercisable in CI with no accelerator
+//! binding: zoo sessions become live-runnable, not simulation-only.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::comm::rpc::{
+    read_frame, send_msg, write_frame, AssignSpec, ConnRole, LayerState, RpcMsg, HEADER_LEN,
+};
+use crate::fault::{HeartbeatCfg, HeartbeatMonitor, Liveness};
+use crate::pipeline::rpc_worker::dial_with_retry;
+use crate::pipeline::step::{reference_layers, RefTask};
+use crate::planner::plan::Plan;
+use crate::runtime::Tensor;
+use crate::schedule::Schedule;
+
+use super::{ExecutionBackend, RecoveryEvent, RunReport, Session};
+
+/// How long the driver keeps dialling a worker address.
+const CONNECT_TIMEOUT: Duration = Duration::from_secs(30);
+/// Deadline for all workers to acknowledge an assignment.
+const READY_TIMEOUT: Duration = Duration::from_secs(60);
+/// Deadline for one HPP-Round (and for shutdown/param collection).
+const ROUND_TIMEOUT: Duration = Duration::from_secs(180);
+
+/// Per-device control-plane accounting surfaced in
+/// [`RunReport::rpc`](super::RunReport::rpc).
+#[derive(Debug, Clone)]
+pub struct RpcDeviceStats {
+    /// Cluster device id this worker played.
+    pub device: usize,
+    /// The worker's listen address.
+    pub addr: String,
+    /// Heartbeats the driver consumed from this worker.
+    pub heartbeats: u64,
+    /// Rounds this worker reported complete.
+    pub rounds_reported: u64,
+    /// Mean worker-side round compute wall-clock (seconds).
+    pub mean_round_compute_s: f64,
+    /// Control-plane bytes driver -> worker (including the stage-0
+    /// inputs / head targets the driver feeds).
+    pub bytes_tx: u64,
+    /// Control-plane bytes worker -> driver.
+    pub bytes_rx: u64,
+}
+
+/// RPC run telemetry: one row per worker the driver drove, plus the
+/// measured failure-detection wall-clock when an exit was injected.
+#[derive(Debug, Clone, Default)]
+pub struct RpcStats {
+    pub per_device: Vec<RpcDeviceStats>,
+    /// Wall-clock from fault injection to heartbeat-confirmed death
+    /// (None without a fault).  Compare with
+    /// `HeartbeatCfg::detection_time`, the closed form the sim and the
+    /// recovery report charge.
+    pub detection_wall_s: Option<f64>,
+}
+
+/// The multi-process execution backend: drives `asteroid-worker`
+/// processes, one per (stage, slot) of the planned pipeline in
+/// stage-major order.  Surplus addresses are ignored (those workers
+/// are never contacted — recovery re-tasks survivors only).
+pub struct RpcBackend {
+    addrs: Vec<String>,
+}
+
+impl RpcBackend {
+    /// A driver for already-running workers (`asteroid-worker --listen
+    /// <addr>`).
+    pub fn connect<S: Into<String>>(addrs: Vec<S>) -> RpcBackend {
+        RpcBackend { addrs: addrs.into_iter().map(Into::into).collect() }
+    }
+}
+
+impl ExecutionBackend for RpcBackend {
+    fn name(&self) -> &'static str {
+        "rpc"
+    }
+
+    fn run(&mut self, s: &Session) -> Result<RunReport> {
+        let mut driver = Driver::new(&self.addrs, s)?;
+        driver.run()
+    }
+}
+
+// --------------------------------------------------------------- driver
+
+enum Event {
+    Msg(RpcMsg),
+    Eof,
+}
+
+/// A polled, pre-filtered inbox item (heartbeats and sync requests are
+/// absorbed before call sites see anything).
+enum Polled {
+    Msg(usize, RpcMsg),
+    Eof(usize),
+}
+
+/// Driver-side handle of one worker process.
+struct Remote {
+    device: usize,
+    addr: String,
+    writer: TcpStream,
+    alive: bool,
+    heartbeats: u64,
+    rounds_reported: u64,
+    compute_s_sum: f64,
+    bytes_tx: u64,
+    bytes_rx: Arc<AtomicU64>,
+}
+
+impl Remote {
+    fn send(&mut self, msg: &RpcMsg) -> Result<()> {
+        let payload = msg.encode();
+        self.bytes_tx += payload.len() as u64 + HEADER_LEN as u64;
+        write_frame(&mut self.writer, &payload)
+            .with_context(|| format!("sending {} to device {}", msg.kind(), self.device))
+    }
+}
+
+struct Driver<'s> {
+    session: &'s Session,
+    hb_cfg: HeartbeatCfg,
+    /// Device id -> worker address (fixed for the run; recovery plans
+    /// reuse the surviving devices' workers).
+    remotes: BTreeMap<usize, Remote>,
+    inbox: Receiver<(usize, Event)>,
+    /// The plan currently executing (switches after a recovery).
+    plan: Plan,
+    sched: Schedule,
+    monitor: HeartbeatMonitor,
+    /// Layer -> state, refreshed after each round while a fault is
+    /// spec'd — the coordinator-side replication store §3.4 restores
+    /// from.
+    checkpoint: BTreeMap<usize, LayerState>,
+    /// Round-sync contributions per stage index: (device, kind, flat).
+    sync_pending: BTreeMap<usize, Vec<(usize, u8, Vec<f32>)>>,
+    /// Assignment generation (bumped per `assign_all`); every
+    /// data-plane frame is tagged with it so stale in-flight tensors
+    /// of an aborted round can never leak into the replayed one.
+    generation: u64,
+    detection_wall_s: Option<f64>,
+}
+
+impl<'s> Driver<'s> {
+    fn new(addrs: &[String], s: &'s Session) -> Result<Driver<'s>> {
+        let plan = s.plan().clone();
+        let slots: usize = plan.stages.iter().map(|st| st.devices.len()).sum();
+        anyhow::ensure!(
+            addrs.len() >= slots,
+            "RpcBackend: plan needs {slots} workers (one per stage slot), \
+             only {} address(es) given",
+            addrs.len()
+        );
+        let sched = Schedule::for_runtime(&plan, s.policy());
+        sched.validate().context("invalid round schedule")?;
+
+        let hb_cfg = s.fault().map(|f| f.heartbeat).unwrap_or_default();
+        hb_cfg.validate()?;
+
+        // Connect a control link per plan slot, stage-major.
+        let (tx, rx) = std::sync::mpsc::channel::<(usize, Event)>();
+        let mut remotes = BTreeMap::new();
+        let mut next_addr = 0usize;
+        for stage in &plan.stages {
+            for &device in &stage.devices {
+                let addr = addrs[next_addr].clone();
+                next_addr += 1;
+                let remote = connect_remote(device, &addr, &tx)
+                    .with_context(|| format!("worker for device {device} at {addr}"))?;
+                remotes.insert(device, remote);
+            }
+        }
+
+        let devices = plan.devices();
+        Ok(Driver {
+            session: s,
+            hb_cfg,
+            remotes,
+            inbox: rx,
+            plan,
+            sched,
+            monitor: HeartbeatMonitor::new(hb_cfg, &devices),
+            checkpoint: BTreeMap::new(),
+            sync_pending: BTreeMap::new(),
+            generation: 0,
+            detection_wall_s: None,
+        })
+    }
+
+    // ------------------------------------------------------ event pump
+
+    /// Wait at most `timeout` for one inbox item.  Background traffic
+    /// (heartbeats, sync mediation) is absorbed and yields `None`, as
+    /// does a timeout — so call sites can interleave their own checks
+    /// (liveness, deadlines) between events.
+    fn poll_once(&mut self, timeout: Duration) -> Result<Option<Polled>> {
+        match self.inbox.recv_timeout(timeout) {
+            Ok((device, Event::Msg(msg))) => match msg {
+                RpcMsg::Heartbeat { device: d, .. } => {
+                    self.monitor.beat(d);
+                    if let Some(r) = self.remotes.get_mut(&d) {
+                        r.heartbeats += 1;
+                    }
+                    Ok(None)
+                }
+                RpcMsg::SyncRequest { device: d, kind, flat } => {
+                    self.handle_sync(d, kind, flat)?;
+                    Ok(None)
+                }
+                RpcMsg::Fatal { device: d, error } => {
+                    bail!("worker for device {d} failed: {error}");
+                }
+                other => Ok(Some(Polled::Msg(device, other))),
+            },
+            Ok((device, Event::Eof)) => {
+                if let Some(r) = self.remotes.get_mut(&device) {
+                    r.alive = false;
+                }
+                Ok(Some(Polled::Eof(device)))
+            }
+            Err(RecvTimeoutError::Timeout) => Ok(None),
+            Err(RecvTimeoutError::Disconnected) => bail!("driver inbox closed"),
+        }
+    }
+
+    /// Receive the next non-background event before `deadline`.
+    fn poll(&mut self, deadline: Instant) -> Result<Polled> {
+        loop {
+            let now = Instant::now();
+            if now >= deadline {
+                bail!("timed out waiting for workers");
+            }
+            let step = (deadline - now).min(Duration::from_millis(100));
+            if let Some(p) = self.poll_once(step)? {
+                return Ok(p);
+            }
+        }
+    }
+
+    /// Mediate one replicated-stage round-sync contribution: when the
+    /// whole group reported, reply with the reduction (sum of gradients
+    /// for synchronous policies, parameter mean for bounded-staleness
+    /// ones).
+    fn handle_sync(&mut self, device: usize, kind: u8, flat: Vec<f32>) -> Result<()> {
+        let stage_idx = self
+            .plan
+            .stages
+            .iter()
+            .position(|st| st.devices.contains(&device))
+            .with_context(|| format!("sync from device {device} outside the plan"))?;
+        let group = self.plan.stages[stage_idx].devices.clone();
+        let pending = self.sync_pending.entry(stage_idx).or_default();
+        anyhow::ensure!(
+            pending.iter().all(|(d, _, _)| *d != device),
+            "device {device} double-contributed to the stage {stage_idx} round sync"
+        );
+        anyhow::ensure!(
+            pending.iter().all(|(_, k, _)| *k == kind),
+            "mixed sync kinds in stage {stage_idx}"
+        );
+        pending.push((device, kind, flat));
+        if pending.len() < group.len() {
+            return Ok(());
+        }
+        let contributions = self.sync_pending.remove(&stage_idx).unwrap();
+        let n = contributions[0].2.len();
+        anyhow::ensure!(
+            contributions.iter().all(|(_, _, f)| f.len() == n),
+            "sync length mismatch in stage {stage_idx}"
+        );
+        let mut reduced = vec![0.0f32; n];
+        for (_, _, f) in &contributions {
+            for (acc, v) in reduced.iter_mut().zip(f) {
+                *acc += *v;
+            }
+        }
+        if kind == 1 {
+            let g = contributions.len() as f32;
+            for v in &mut reduced {
+                *v /= g;
+            }
+        }
+        for (d, _, _) in &contributions {
+            let msg = RpcMsg::SyncResult { flat: reduced.clone() };
+            self.remotes
+                .get_mut(d)
+                .with_context(|| format!("no remote for device {d}"))?
+                .send(&msg)?;
+        }
+        Ok(())
+    }
+
+    // ----------------------------------------------------- assignment
+
+    /// (Re)distribute the current plan: every (stage, slot) worker gets
+    /// its layer slice, compute script, stash depth, peer addresses and
+    /// (after a fault) the checkpointed warm-start weights.
+    fn assign_all(&mut self, warm: bool) -> Result<()> {
+        self.generation += 1;
+        let s = self.session;
+        let model = s.model();
+        let rc = s.run_config();
+        let heartbeat_ms = self.hb_cfg.interval.as_millis().max(1) as u64;
+        let n_stages = self.plan.stages.len();
+        let addr_of = |d: usize, remotes: &BTreeMap<usize, Remote>| -> Result<String> {
+            Ok(remotes
+                .get(&d)
+                .with_context(|| format!("no worker address for device {d}"))?
+                .addr
+                .clone())
+        };
+        let versioned = s.policy().max_staleness() > 0;
+        let mut specs: Vec<(usize, AssignSpec)> = Vec::new();
+        for (p, stage) in self.plan.stages.iter().enumerate() {
+            let mut next = Vec::new();
+            if p + 1 < n_stages {
+                for &d in &self.plan.stages[p + 1].devices {
+                    next.push(addr_of(d, &self.remotes)?);
+                }
+            }
+            let mut prev = Vec::new();
+            if p > 0 {
+                for &d in &self.plan.stages[p - 1].devices {
+                    prev.push(addr_of(d, &self.remotes)?);
+                }
+            }
+            let layers = reference_layers(model, stage.layers.0, stage.layers.1);
+            let warm_start: Vec<LayerState> = if warm {
+                (stage.layers.0..stage.layers.1)
+                    .filter_map(|k| self.checkpoint.get(&k).cloned())
+                    .collect()
+            } else {
+                Vec::new()
+            };
+            for (slot, &device) in stage.devices.iter().enumerate() {
+                let stash_slots = if versioned {
+                    self.sched.timeline_at(p, slot).map(|tl| tl.kp).unwrap_or(0)
+                } else {
+                    0
+                };
+                specs.push((
+                    device,
+                    AssignSpec {
+                        generation: self.generation,
+                        device,
+                        stage: p,
+                        slot,
+                        num_stages: n_stages,
+                        group_size: stage.devices.len(),
+                        script: self.sched.compute_script(p, slot),
+                        stash_slots,
+                        num_micro: self.plan.num_micro,
+                        microbatch: self.plan.microbatch,
+                        seed: rc.seed,
+                        opt: rc.opt,
+                        heartbeat_ms,
+                        layers: layers.clone(),
+                        next: next.clone(),
+                        prev: prev.clone(),
+                        warm_start: warm_start.clone(),
+                    },
+                ));
+            }
+        }
+        for (device, spec) in specs {
+            self.remotes
+                .get_mut(&device)
+                .with_context(|| format!("no remote for device {device}"))?
+                .send(&RpcMsg::Assign(Box::new(spec)))?;
+        }
+        self.wait_ready()?;
+        // Fresh liveness baseline for the (possibly new) device set.
+        self.monitor = HeartbeatMonitor::new(self.hb_cfg, &self.plan.devices());
+        Ok(())
+    }
+
+    fn wait_ready(&mut self) -> Result<()> {
+        let mut waiting: BTreeSet<usize> = self.plan.devices().into_iter().collect();
+        let deadline = Instant::now() + READY_TIMEOUT;
+        while !waiting.is_empty() {
+            match self.poll(deadline)? {
+                Polled::Msg(_, RpcMsg::Ready { device }) => {
+                    waiting.remove(&device);
+                }
+                // Settled leftovers from an aborted round are harmless
+                // here; anything else is a protocol error.
+                Polled::Msg(_, RpcMsg::RoundFailed { .. }) => {}
+                Polled::Msg(d, other) => {
+                    bail!("device {d}: unexpected {} while assigning", other.kind())
+                }
+                Polled::Eof(d) => bail!("worker for device {d} died while assigning"),
+            }
+        }
+        Ok(())
+    }
+
+    // --------------------------------------------------------- rounds
+
+    /// Feed one round's micro-batches: inputs to stage 0, targets to
+    /// the head stage (round-robin across each group, like the
+    /// in-process engine).
+    fn feed_round(&mut self, task: &RefTask, round: usize) -> Result<()> {
+        let first: Vec<usize> = self.plan.stages[0].devices.clone();
+        let last: Vec<usize> = self.plan.stages[self.plan.stages.len() - 1].devices.clone();
+        let gen = self.generation;
+        for m in 0..self.plan.num_micro {
+            let (x, t) = task.microbatch(round, m);
+            let d_in = first[m % first.len()];
+            self.remotes
+                .get_mut(&d_in)
+                .context("missing stage-0 remote")?
+                .send(&RpcMsg::Act { gen, micro: m, t: x })?;
+            let d_tgt = last[m % last.len()];
+            self.remotes
+                .get_mut(&d_tgt)
+                .context("missing head-stage remote")?
+                .send(&RpcMsg::Targets { gen, micro: m, t })?;
+        }
+        Ok(())
+    }
+
+    /// One full HPP-Round: start, feed, await every worker's report.
+    /// Returns the mean loss over the round's micro-batches.
+    fn run_round(&mut self, task: &RefTask, round: usize) -> Result<f64> {
+        let devices = self.plan.devices();
+        for &d in &devices {
+            self.remotes.get_mut(&d).unwrap().send(&RpcMsg::StartRound { round })?;
+        }
+        self.feed_round(task, round)?;
+
+        let last_stage: BTreeSet<usize> =
+            self.plan.stages[self.plan.stages.len() - 1].devices.iter().copied().collect();
+        let mut waiting: BTreeSet<usize> = devices.iter().copied().collect();
+        let mut loss_sum = 0.0f64;
+        let mut micro_seen = 0usize;
+        let deadline = Instant::now() + ROUND_TIMEOUT;
+        while !waiting.is_empty() {
+            match self.poll(deadline)? {
+                Polled::Msg(
+                    _,
+                    RpcMsg::RoundDone { device, round: r, loss_sum: l, micros, compute_s },
+                ) => {
+                    if r != round {
+                        continue; // settled leftover of an aborted round
+                    }
+                    waiting.remove(&device);
+                    if let Some(rem) = self.remotes.get_mut(&device) {
+                        rem.rounds_reported += 1;
+                        rem.compute_s_sum += compute_s;
+                    }
+                    if last_stage.contains(&device) {
+                        loss_sum += l;
+                        micro_seen += micros;
+                    }
+                }
+                Polled::Msg(d, RpcMsg::RoundFailed { device, error }) => {
+                    bail!("device {device} (conn {d}) failed round {round}: {error}");
+                }
+                Polled::Msg(d, other) => {
+                    bail!("device {d}: unexpected {} mid-round", other.kind())
+                }
+                Polled::Eof(d) => bail!("worker for device {d} died mid-round"),
+            }
+        }
+        debug_assert_eq!(micro_seen, self.plan.num_micro);
+        Ok(loss_sum / self.plan.num_micro as f64)
+    }
+
+    /// Pull a parameter checkpoint from slot 0 of every stage (the
+    /// coordinator-side replication store).
+    fn pull_checkpoint(&mut self) -> Result<BTreeMap<usize, LayerState>> {
+        let firsts: Vec<usize> =
+            self.plan.stages.iter().map(|st| st.devices[0]).collect();
+        for &d in &firsts {
+            self.remotes.get_mut(&d).unwrap().send(&RpcMsg::FetchParams)?;
+        }
+        let mut waiting: BTreeSet<usize> = firsts.into_iter().collect();
+        let mut out = BTreeMap::new();
+        let deadline = Instant::now() + ROUND_TIMEOUT;
+        while !waiting.is_empty() {
+            match self.poll(deadline)? {
+                Polled::Msg(d, RpcMsg::Params { layers }) => {
+                    waiting.remove(&d);
+                    for l in layers {
+                        out.insert(l.layer, l);
+                    }
+                }
+                Polled::Msg(d, other) => {
+                    bail!("device {d}: unexpected {} during checkpoint", other.kind())
+                }
+                Polled::Eof(d) => bail!("worker for device {d} died during checkpoint"),
+            }
+        }
+        Ok(out)
+    }
+
+    // ---------------------------------------------------------- fault
+
+    /// Inject the spec'd device exit mid-round and recover: kill the
+    /// worker process, detect via heartbeat silence, abort the round on
+    /// the survivors, run the session's §3.4 recovery mechanism,
+    /// re-task the surviving workers under the recovery plan
+    /// (warm-started from the checkpoint) and return the event.
+    fn inject_and_recover(
+        &mut self,
+        task: &RefTask,
+        round: usize,
+        failed: usize,
+    ) -> Result<RecoveryEvent> {
+        let spec = self.session.fault().expect("fault spec present").clone();
+        let devices = self.plan.devices();
+        for &d in &devices {
+            self.remotes.get_mut(&d).unwrap().send(&RpcMsg::StartRound { round })?;
+        }
+        self.feed_round(task, round)?;
+        // The device exit: the worker process dies unclean, mid-round.
+        let t0 = Instant::now();
+        let _ = self.remotes.get_mut(&failed).unwrap().send(&RpcMsg::Die);
+
+        // §3.4 module 1: heartbeat detection.  The monitor flags the
+        // silence after miss_threshold intervals; the EOF on the
+        // control connection is the probe confirmation.
+        let mut eof_seen = false;
+        let detect_deadline = Instant::now()
+            + Duration::from_secs_f64(self.hb_cfg.detection_time() * 10.0 + 5.0);
+        while !(eof_seen && self.monitor.liveness(failed) != Liveness::Alive) {
+            if Instant::now() >= detect_deadline {
+                bail!("failure detection timed out for device {failed}");
+            }
+            match self.poll_once(Duration::from_millis(20))? {
+                None => {} // idle tick: recheck liveness
+                Some(Polled::Eof(d)) if d == failed => eof_seen = true,
+                Some(Polled::Eof(d)) => bail!("unrelated worker {d} died during fault"),
+                // Survivors may still finish their half of the broken
+                // round or report its failure; both are expected noise.
+                Some(Polled::Msg(_, RpcMsg::RoundDone { .. })) => {}
+                Some(Polled::Msg(_, RpcMsg::RoundFailed { .. })) => {}
+                Some(Polled::Msg(d, other)) => {
+                    bail!("device {d}: unexpected {} during detection", other.kind())
+                }
+            }
+        }
+        self.monitor.confirm_failure(failed);
+        self.detection_wall_s = Some(t0.elapsed().as_secs_f64());
+        self.remotes.get_mut(&failed).unwrap().alive = false;
+
+        // Abort the broken round on every survivor and wait for each
+        // to settle back to idle.
+        let survivors: Vec<usize> = devices.iter().copied().filter(|&d| d != failed).collect();
+        for &d in &survivors {
+            self.remotes.get_mut(&d).unwrap().send(&RpcMsg::AbortRound)?;
+        }
+        let mut waiting: BTreeSet<usize> = survivors.iter().copied().collect();
+        let deadline = Instant::now() + READY_TIMEOUT;
+        while !waiting.is_empty() {
+            match self.poll(deadline)? {
+                Polled::Msg(_, RpcMsg::RoundFailed { device, .. }) => {
+                    waiting.remove(&device);
+                }
+                Polled::Msg(_, RpcMsg::RoundDone { .. }) => {}
+                Polled::Msg(d, other) => {
+                    bail!("device {d}: unexpected {} during abort", other.kind())
+                }
+                Polled::Eof(d) => bail!("worker for device {d} died during abort"),
+            }
+        }
+        self.sync_pending.clear();
+
+        // §3.4 modules 2-4: restore / re-plan / migrate — the session's
+        // declarative recovery mechanism (same path the sim and pjrt
+        // backends price), then re-task the survivors for real.
+        let report = self.session.recover(&spec, failed)?;
+        self.plan = report.new_plan.clone();
+        self.sched = Schedule::for_runtime(&self.plan, self.session.policy());
+        self.sched.validate().context("invalid recovery schedule")?;
+        self.assign_all(true)?;
+        Ok(RecoveryEvent { round, failed_device: failed, report })
+    }
+
+    // ------------------------------------------------------------ run
+
+    fn run(&mut self) -> Result<RunReport> {
+        let s = self.session;
+        let rc = s.run_config();
+        let task = RefTask::new(s.model(), self.plan.microbatch, rc.seed);
+        let fault = s.fault().cloned();
+        let failed_device = match &fault {
+            Some(spec) => Some(s.resolve_fault_device(spec)?),
+            None => None,
+        };
+
+        self.assign_all(false)?;
+
+        let total_rounds = match &fault {
+            Some(spec) => spec.fail_after + spec.resume_rounds,
+            None => rc.steps,
+        };
+        let mut losses: Vec<f64> = Vec::with_capacity(total_rounds);
+        let mut round_secs: Vec<f64> = Vec::with_capacity(total_rounds);
+        let mut recoveries: Vec<RecoveryEvent> = Vec::new();
+
+        let mut round = 0usize;
+        while round < total_rounds {
+            if let (Some(spec), Some(failed)) = (&fault, failed_device) {
+                if round == spec.fail_after && recoveries.is_empty() {
+                    let event = self.inject_and_recover(&task, round, failed)?;
+                    recoveries.push(event);
+                    // The failed round restarts on the recovery plan.
+                }
+            }
+            let t0 = Instant::now();
+            let loss = self.run_round(&task, round)?;
+            round_secs.push(t0.elapsed().as_secs_f64());
+            losses.push(loss);
+            if rc.log_every > 0 && (round % rc.log_every == 0 || round + 1 == total_rounds) {
+                println!(
+                    "round {round:>4}  loss {loss:.4}  ({:.3} s/round, rpc)",
+                    round_secs.last().unwrap()
+                );
+            }
+            if fault.is_some() {
+                self.checkpoint = self.pull_checkpoint()?;
+            }
+            round += 1;
+        }
+
+        // Final checkpoint is the report's weight stream.
+        let final_states = self.pull_checkpoint()?;
+
+        // Clean shutdown: Exit everyone still alive, await Bye
+        // best-effort.
+        let live: Vec<usize> = self
+            .remotes
+            .values()
+            .filter(|r| r.alive)
+            .map(|r| r.device)
+            .collect();
+        for d in &live {
+            let _ = self.remotes.get_mut(d).unwrap().send(&RpcMsg::Exit);
+        }
+        let bye_deadline = Instant::now() + Duration::from_secs(5);
+        let mut waiting: BTreeSet<usize> = live.into_iter().collect();
+        while !waiting.is_empty() {
+            match self.poll(bye_deadline) {
+                Ok(Polled::Msg(d, RpcMsg::Bye)) => {
+                    waiting.remove(&d);
+                }
+                Ok(Polled::Eof(d)) => {
+                    waiting.remove(&d);
+                }
+                Ok(_) => {}
+                Err(_) => break, // shutdown is best-effort
+            }
+        }
+
+        // ---- report ----------------------------------------------
+        // Pre-fault throughput (every backend reports the pre-fault
+        // pipeline's rate): pair the pre-fault round timings with the
+        // *original* plan's round size — after a recovery `self.plan`
+        // is the recovery plan, whose samples_per_round may differ.
+        let (samples, window): (f64, &[f64]) = match &fault {
+            Some(spec) if spec.fail_after > 0 && round_secs.len() >= spec.fail_after => {
+                (s.plan().samples_per_round() as f64, &round_secs[..spec.fail_after])
+            }
+            _ => (self.plan.samples_per_round() as f64, &round_secs[..]),
+        };
+        let mean_round = window.iter().sum::<f64>() / window.len().max(1) as f64;
+        let throughput = if mean_round > 0.0 { samples / mean_round } else { 0.0 };
+
+        let final_params: BTreeMap<usize, Vec<Tensor>> = final_states
+            .into_iter()
+            .map(|(k, st)| {
+                let n_s = st.scale.len();
+                let n_b = st.bias.len();
+                (k, vec![
+                    Tensor::from_f32(&[n_s], st.scale),
+                    Tensor::from_f32(&[n_b], st.bias),
+                ])
+            })
+            .collect();
+
+        let per_device: Vec<RpcDeviceStats> = self
+            .remotes
+            .values()
+            .map(|r| RpcDeviceStats {
+                device: r.device,
+                addr: r.addr.clone(),
+                heartbeats: r.heartbeats,
+                rounds_reported: r.rounds_reported,
+                mean_round_compute_s: if r.rounds_reported > 0 {
+                    r.compute_s_sum / r.rounds_reported as f64
+                } else {
+                    0.0
+                },
+                bytes_tx: r.bytes_tx,
+                bytes_rx: r.bytes_rx.load(Ordering::Relaxed),
+            })
+            .collect();
+
+        Ok(RunReport {
+            backend: "rpc",
+            plan: s.plan().clone(),
+            schedule: s.schedule().clone(),
+            rounds: losses.len(),
+            losses,
+            round_secs,
+            throughput,
+            predicted_throughput: s.outcome().predicted_throughput,
+            max_staleness: s.policy().max_staleness(),
+            weight_stash_slots: s.weight_stash_slots(),
+            bytes_on_network: 0,
+            sim: None,
+            recoveries,
+            final_params: Some(final_params),
+            rpc: Some(RpcStats { per_device, detection_wall_s: self.detection_wall_s }),
+        })
+    }
+}
+
+/// Dial one worker's control link and spawn its reader thread.
+fn connect_remote(
+    device: usize,
+    addr: &str,
+    tx: &Sender<(usize, Event)>,
+) -> Result<Remote> {
+    let mut conn = dial_with_retry(addr, CONNECT_TIMEOUT)?;
+    conn.set_nodelay(true).ok();
+    send_msg(&mut conn, &RpcMsg::Hello { role: ConnRole::Control })?;
+    let writer = conn.try_clone().context("cloning control stream")?;
+    let bytes_rx = Arc::new(AtomicU64::new(0));
+    {
+        let tx = tx.clone();
+        let bytes_rx = bytes_rx.clone();
+        std::thread::spawn(move || {
+            loop {
+                let payload = match read_frame(&mut conn) {
+                    Ok(p) => p,
+                    Err(_) => {
+                        let _ = tx.send((device, Event::Eof));
+                        return;
+                    }
+                };
+                bytes_rx.fetch_add(payload.len() as u64 + HEADER_LEN as u64, Ordering::Relaxed);
+                match RpcMsg::decode(&payload) {
+                    Ok(msg) => {
+                        if tx.send((device, Event::Msg(msg))).is_err() {
+                            return;
+                        }
+                    }
+                    Err(_) => {
+                        let _ = tx.send((device, Event::Eof));
+                        return;
+                    }
+                }
+            }
+        });
+    }
+    Ok(Remote {
+        device,
+        addr: addr.to_string(),
+        writer,
+        alive: true,
+        heartbeats: 0,
+        rounds_reported: 0,
+        compute_s_sum: 0.0,
+        bytes_tx: 0,
+        bytes_rx,
+    })
+}

@@ -1,0 +1,143 @@
+//! End-to-end tests of the multi-process RPC backend: real
+//! `asteroid-worker` OS processes (spawned from the built binary),
+//! real TCP transport, and a real mid-round process kill with
+//! heartbeat-detected recovery.
+//!
+//! These are the in-repo versions of the CI `integration` job: tier-1
+//! (`cargo test`) exercises process isolation too, not just CI.
+
+use std::io::BufRead;
+use std::process::{Child, Command, Stdio};
+use std::time::Duration;
+
+use asteroid::config::{ClusterSpec, TrainConfig};
+use asteroid::fault::HeartbeatCfg;
+use asteroid::planner::baselines::Method;
+use asteroid::planner::Planner;
+use asteroid::session::{FaultSpec, RpcBackend, Session};
+
+/// A spawned worker process, killed on drop so a failing test never
+/// leaks listeners.
+struct Worker {
+    child: Child,
+    addr: String,
+}
+
+impl Drop for Worker {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+fn spawn_worker() -> Worker {
+    let mut child = Command::new(env!("CARGO_BIN_EXE_asteroid-worker"))
+        .args(["--listen", "127.0.0.1:0", "--quiet"])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawning asteroid-worker");
+    // The worker prints `listening on <addr>` once bound (port 0
+    // resolved by the kernel, so parallel tests never collide).
+    let stdout = child.stdout.take().expect("worker stdout");
+    let mut line = String::new();
+    std::io::BufReader::new(stdout)
+        .read_line(&mut line)
+        .expect("reading worker banner");
+    let addr = line
+        .trim()
+        .strip_prefix("listening on ")
+        .unwrap_or_else(|| panic!("unexpected worker banner {line:?}"))
+        .to_string();
+    Worker { child, addr }
+}
+
+/// 3 homogeneous devices, GPipe-PP planning (exactly one stage per
+/// device — the canonical 3-process shape), tiny round.
+fn three_stage_session() -> asteroid::session::SessionBuilder {
+    Session::builder()
+        .model("mobilenetv2")
+        .cluster(ClusterSpec::env("nanos:3", 100.0).unwrap())
+        .train(TrainConfig::new(8, 2))
+        .planner(Planner::Baseline(Method::GpipePP))
+        .steps(2)
+        .log_every(0)
+}
+
+#[test]
+fn three_processes_train_two_rounds() {
+    let workers: Vec<Worker> = (0..3).map(|_| spawn_worker()).collect();
+    let addrs: Vec<String> = workers.iter().map(|w| w.addr.clone()).collect();
+
+    let session = three_stage_session().build().unwrap();
+    assert_eq!(session.plan().stages.len(), 3, "pp on 3 devices = 3 stages");
+
+    let report = session.run(&mut RpcBackend::connect(addrs)).unwrap();
+    assert_eq!(report.backend, "rpc");
+    assert_eq!(report.rounds, 2);
+    assert_eq!(report.losses.len(), 2);
+    assert!(report.losses.iter().all(|l| l.is_finite() && *l > 0.0), "{:?}", report.losses);
+    assert!(report.throughput > 0.0);
+    assert!(report.recoveries.is_empty());
+    // The checkpoint stream covers the whole model.
+    let fp = report.final_params.as_ref().expect("rpc returns final params");
+    assert_eq!(fp.len(), session.model().num_layers());
+    // Per-device RPC telemetry: every worker beat and reported.
+    let rpc = report.rpc.as_ref().expect("rpc stats");
+    assert_eq!(rpc.per_device.len(), 3);
+    for d in &rpc.per_device {
+        assert_eq!(d.rounds_reported, 2, "device {}", d.device);
+        assert!(d.bytes_tx > 0 && d.bytes_rx > 0, "device {}", d.device);
+    }
+    assert!(rpc.detection_wall_s.is_none());
+}
+
+#[test]
+fn worker_process_kill_is_detected_and_replayed() {
+    let mut workers: Vec<Worker> = (0..3).map(|_| spawn_worker()).collect();
+    let addrs: Vec<String> = workers.iter().map(|w| w.addr.clone()).collect();
+
+    let session = three_stage_session()
+        .fault(
+            FaultSpec::last_planned()
+                .after(1)
+                .resume_for(1)
+                .with_heartbeat(HeartbeatCfg::tight()),
+        )
+        .build()
+        .unwrap();
+    // LastPlanned on a 3-stage chain = the head-stage device, which is
+    // the third worker in stage-major address order.
+    let failed_device = *session.plan().devices().last().unwrap();
+    assert_eq!(failed_device, 2);
+
+    let report = session.run(&mut RpcBackend::connect(addrs)).unwrap();
+    assert_eq!(report.rounds, 2, "1 pre-fault + 1 resumed");
+    assert_eq!(report.losses.len(), 2);
+    assert!(report.losses.iter().all(|l| l.is_finite()));
+    assert_eq!(report.recoveries.len(), 1);
+    let ev = &report.recoveries[0];
+    assert_eq!(ev.round, 1);
+    assert_eq!(ev.failed_device, failed_device);
+    assert_eq!(ev.report.mechanism, "lightweight");
+    assert!(!ev.report.new_plan.devices().contains(&failed_device));
+    assert!(!ev.report.replay_micros.is_empty());
+    // Live detection happened on the heartbeat clock, not a fluke:
+    // wall-clock is at least the silence deadline and well under the
+    // driver's timeouts.
+    let rpc = report.rpc.as_ref().expect("rpc stats");
+    let detect = rpc.detection_wall_s.expect("measured detection");
+    assert!(detect < 10.0, "detection took {detect}s");
+
+    // The killed worker really is a dead OS process (exit code 86),
+    // not a live thread pretending.
+    std::thread::sleep(Duration::from_millis(100));
+    let status = workers[2]
+        .child
+        .try_wait()
+        .expect("try_wait")
+        .expect("killed worker should have exited");
+    assert_eq!(status.code(), Some(86), "Die exits with the fault code");
+    // Survivors got a clean Exit from the driver; Drop reaps them.
+    drop(workers);
+}

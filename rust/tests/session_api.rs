@@ -332,6 +332,104 @@ fn fault_spec_replaces_bespoke_recovery_entry_points() {
 
 // ---------------------------------------------- sim-vs-live parity
 
+/// `RpcBackend` and `SimBackend` must produce structurally identical
+/// `RunReport`s for the same plan: same plan, same schedule policy,
+/// same round count — the backend only changes whether rounds are
+/// priced or executed over real sockets.  The workers here are serve
+/// loops on threads (real TCP via loopback, one process); the
+/// process-isolation flavour lives in `tests/rpc_e2e.rs`.
+#[test]
+fn rpc_and_sim_reports_share_structure() {
+    use asteroid::pipeline::rpc_worker::{serve, ServeOpts, ServeOutcome};
+    use asteroid::session::RpcBackend;
+    use std::net::TcpListener;
+
+    let mut addrs = Vec::new();
+    let mut handles = Vec::new();
+    for _ in 0..3 {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        addrs.push(listener.local_addr().unwrap().to_string());
+        handles.push(std::thread::spawn(move || {
+            serve(listener, ServeOpts { die_for_real: false, verbose: false })
+        }));
+    }
+
+    let session = Session::builder()
+        .model("mobilenetv2")
+        .cluster(ClusterSpec::env("nanos:3", 100.0).unwrap())
+        .train(TrainConfig::new(8, 2))
+        .planner(Planner::Baseline(Method::GpipePP))
+        .steps(2)
+        .log_every(0)
+        .build()
+        .unwrap();
+    assert_eq!(session.plan().stages.len(), 3);
+
+    let sim = session.run(&mut SimBackend::default()).unwrap();
+    let live = session.run(&mut RpcBackend::connect(addrs)).unwrap();
+
+    assert_eq!(sim.plan, live.plan);
+    assert_eq!(sim.schedule.policy, live.schedule.policy);
+    assert_eq!(sim.rounds, live.rounds);
+    assert_eq!(sim.round_secs.len(), live.round_secs.len());
+    assert_eq!(sim.predicted_throughput, live.predicted_throughput);
+    assert_eq!(sim.max_staleness, live.max_staleness);
+    assert_eq!(sim.weight_stash_slots, live.weight_stash_slots);
+    assert!(sim.throughput > 0.0 && live.throughput > 0.0);
+    // Backend-specific halves: pricing has detail but no numerics or
+    // transport; the RPC run has numerics, the checkpoint and the
+    // per-device transport meters, but no pricing.
+    assert!(sim.sim.is_some() && sim.losses.is_empty() && sim.final_params.is_none());
+    assert!(sim.rpc.is_none());
+    assert!(live.sim.is_none() && live.losses.len() == live.rounds);
+    assert!(live.final_params.is_some());
+    assert_eq!(live.rpc.as_ref().unwrap().per_device.len(), 3);
+
+    // The driver's Exit ends every serve loop cleanly.
+    for h in handles {
+        assert_eq!(h.join().unwrap().unwrap(), ServeOutcome::Clean);
+    }
+}
+
+/// A bounded-staleness policy runs over the RPC transport too: the
+/// version-stash semantics survive process/transport boundaries.
+#[test]
+fn rpc_runs_bounded_staleness_policies() {
+    use asteroid::pipeline::rpc_worker::{serve, ServeOpts};
+    use asteroid::schedule::policy_by_name;
+    use asteroid::session::RpcBackend;
+    use std::net::TcpListener;
+
+    let mut addrs = Vec::new();
+    let mut handles = Vec::new();
+    for _ in 0..3 {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        addrs.push(listener.local_addr().unwrap().to_string());
+        handles.push(std::thread::spawn(move || {
+            serve(listener, ServeOpts { die_for_real: false, verbose: false })
+        }));
+    }
+    let session = Session::builder()
+        .model("mobilenetv2")
+        .cluster(ClusterSpec::env("nanos:3", 100.0).unwrap())
+        .train(TrainConfig::new(8, 2))
+        .planner(Planner::Baseline(Method::GpipePP))
+        .schedule(policy_by_name("async:1").unwrap())
+        .steps(2)
+        .log_every(0)
+        .build()
+        .unwrap();
+    let report = session.run(&mut RpcBackend::connect(addrs)).unwrap();
+    assert_eq!(report.backend, "rpc");
+    assert_eq!(report.max_staleness, 1);
+    assert!(report.weight_stash_slots > 1);
+    assert_eq!(report.rounds, 2);
+    assert!(report.losses.iter().all(|l| l.is_finite() && *l > 0.0));
+    for h in handles {
+        h.join().unwrap().unwrap();
+    }
+}
+
 /// Without the pjrt feature the live backend must fail loudly, not
 /// deadlock: the session surface stays one-path either way.
 #[cfg(not(feature = "pjrt"))]
