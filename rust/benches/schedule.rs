@@ -1,6 +1,8 @@
 //! Schedule IR benchmarks: generation + simulator pricing on an
 //! 8-device / 8-stage plan (the shape the repro tables hammer), now
-//! per policy so the bubble-ratio trajectory is tracked across PRs.
+//! per policy so the bubble-ratio trajectory is tracked across PRs —
+//! plus fleet-scale planning rows (128/512/2048 synthetic devices)
+//! whose 512-device total is CI-gated against `plan_budget.budget_s`.
 //!
 //! Uses the in-repo `util::bench::Bencher` harness (criterion is not
 //! vendored offline; benches run with `harness = false`).  On exit the
@@ -10,13 +12,51 @@
 //!
 //!     cargo bench --bench schedule
 
-use asteroid::config::ClusterSpec;
-use asteroid::model::zoo;
+use asteroid::config::{ClusterSpec, TrainConfig};
+use asteroid::model::{zoo, ModelDesc};
 use asteroid::planner::plan::{Plan, Stage};
+use asteroid::planner::{
+    plan_hpp, plan_hpp_incremental, plan_hpp_subset, plan_hpp_with_state, PlannerConfig,
+};
 use asteroid::profiler::ProfileTable;
 use asteroid::schedule::{builtin_policies, policy_by_name, Schedule};
 use asteroid::sim::{price_policy, price_schedule, simulate_round};
-use asteroid::util::bench::Bencher;
+use asteroid::util::bench::{synthetic_fleet, Bencher};
+
+/// The 512-device wall-clock budget asserted by CI: mean
+/// `plan_hpp/fleet512` + `schedule_build/fleet512` must stay under it.
+const FLEET_BUDGET_S: f64 = 120.0;
+
+/// Hand-built 8-stage fleet plan: layers split evenly, devices split
+/// evenly across stages, each stage's micro-batch spread one sample at
+/// a time (surplus devices carry a zero share — legal, and exactly the
+/// shape a 32-sample micro takes on a 256-device stage).
+fn fleet_plan(model: &ModelDesc, n: usize, cfg: &TrainConfig) -> Plan {
+    let nl = model.num_layers();
+    let stages = 8;
+    let per = n / stages;
+    let mb = cfg.microbatch;
+    let mut plan = Plan {
+        stages: (0..stages)
+            .map(|s| {
+                let mut alloc = vec![mb / per; per];
+                for a in alloc.iter_mut().take(mb % per) {
+                    *a += 1;
+                }
+                Stage {
+                    layers: (s * nl / stages, (s + 1) * nl / stages),
+                    devices: (s * per..(s + 1) * per).collect(),
+                    alloc,
+                    kp: 1,
+                }
+            })
+            .collect(),
+        microbatch: mb,
+        num_micro: cfg.num_microbatches(),
+    };
+    plan.apply_default_kp();
+    plan
+}
 
 fn main() {
     let mut b = Bencher::default();
@@ -100,26 +140,72 @@ fn main() {
         })
         .collect();
 
+    // ---- fleet-scale rows (tentpole: planning at 128/512/2048) --------
+    // Single-iteration sampling: one fleet plan is seconds, not micros,
+    // so calibration would only multiply the wall-clock.  The 2048 rows
+    // track the headroom shape; only the 512 sum is budget-gated.
+    let mut fb = Bencher { warmup_s: 0.0, sample_target_s: 0.0, samples: 2, results: vec![] };
+    let fleet_cfg = TrainConfig::new(2048, 64);
+    let pc = PlannerConfig::default();
+    let default_policy = builtin_policies()[0];
+    for n in [128usize, 512, 2048] {
+        let fleet = synthetic_fleet(n, 100.0);
+        let ftable = ProfileTable::new(&fleet, &model);
+        fb.bench(&format!("plan_hpp/fleet{n}"), || {
+            plan_hpp(&ftable, &fleet, &model, &fleet_cfg, &pc).unwrap()
+        });
+        let fplan = fleet_plan(&model, n, &fleet_cfg);
+        fb.bench(&format!("schedule_build/fleet{n}"), || {
+            Schedule::for_sim(&fplan, &model, default_policy)
+        });
+    }
+    // Replan after losing one device: full rebuild vs the incremental
+    // fast path.  Losing the *head* of the planner's device order keeps
+    // every DP suffix intact (best case); losing the tail invalidates
+    // all of them (worst case — the fast path's floor).
+    for n in [128usize, 512] {
+        let fleet = synthetic_fleet(n, 100.0);
+        let ftable = ProfileTable::new(&fleet, &model);
+        let (_, state) = plan_hpp_with_state(&ftable, &fleet, &model, &fleet_cfg, &pc).unwrap();
+        let head = state.order()[0];
+        let tail = *state.order().last().unwrap();
+        let keep: Vec<usize> = state.order().iter().copied().filter(|&d| d != head).collect();
+        fb.bench(&format!("replan_full/fleet{n}"), || {
+            plan_hpp_subset(&ftable, &fleet, &model, &fleet_cfg, &pc, &keep).unwrap()
+        });
+        fb.bench(&format!("replan_incremental_best/fleet{n}"), || {
+            plan_hpp_incremental(&state, &ftable, &fleet, &model, &fleet_cfg, &pc, head).unwrap()
+        });
+        fb.bench(&format!("replan_incremental_worst/fleet{n}"), || {
+            plan_hpp_incremental(&state, &ftable, &fleet, &model, &fleet_cfg, &pc, tail).unwrap()
+        });
+    }
+    let measured_s = fb.mean_of("plan_hpp/fleet512").unwrap()
+        + fb.mean_of("schedule_build/fleet512").unwrap();
+
     // ---- record the trajectory ----------------------------------------
-    let rows: Vec<String> = b
-        .results
-        .iter()
-        .map(|r| {
-            format!(
-                "    {{\"name\": \"{}\", \"mean_s\": {:e}, \"p50_s\": {:e}, \
-                 \"p95_s\": {:e}, \"samples\": {}, \"iters_per_sample\": {}}}",
-                r.name, r.per_iter_s.mean, r.per_iter_s.p50, r.per_iter_s.p95,
-                r.per_iter_s.n, r.iters
-            )
-        })
-        .collect();
+    let row = |r: &asteroid::util::bench::BenchResult| {
+        format!(
+            "    {{\"name\": \"{}\", \"mean_s\": {:e}, \"p50_s\": {:e}, \
+             \"p95_s\": {:e}, \"samples\": {}, \"iters_per_sample\": {}}}",
+            r.name, r.per_iter_s.mean, r.per_iter_s.p50, r.per_iter_s.p95,
+            r.per_iter_s.n, r.iters
+        )
+    };
+    let rows: Vec<String> = b.results.iter().map(row).collect();
+    let plan_rows: Vec<String> = fb.results.iter().map(row).collect();
     let json = format!(
         "{{\n  \"bench\": \"schedule\",\n  \"shape\": \"8dev_8stage_m64\",\n  \
+         \"note\": \"plan rows are fleet-scale (synthetic_fleet topology); \
+         plan_budget gates plan_hpp/fleet512 + schedule_build/fleet512 in CI\",\n  \
          \"results\": [\n{}\n  ],\n  \"policies\": [\n{}\n  ],\n  \
-         \"staleness\": [\n{}\n  ]\n}}\n",
+         \"staleness\": [\n{}\n  ],\n  \"plan\": [\n{}\n  ],\n  \
+         \"plan_budget\": {{\"name\": \"fleet512_plan_plus_build\", \
+         \"budget_s\": {FLEET_BUDGET_S}, \"measured_s\": {measured_s:e}}}\n}}\n",
         rows.join(",\n"),
         policy_rows.join(",\n"),
-        staleness_rows.join(",\n")
+        staleness_rows.join(",\n"),
+        plan_rows.join(",\n")
     );
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_schedule.json");
     match std::fs::write(path, &json) {

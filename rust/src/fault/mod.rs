@@ -10,5 +10,8 @@ pub mod replication;
 
 pub use heartbeat::{HeartbeatCfg, HeartbeatMonitor, Liveness};
 pub use replan::{lightweight_replan, migration_time, Replan};
-pub use replay::{heavy_reschedule, lightweight_replay, throughput_timeline, RecoveryReport};
+pub use replay::{
+    heavy_reschedule, heavy_reschedule_incremental, lightweight_replay, throughput_timeline,
+    RecoveryReport,
+};
 pub use replication::{replication_plan, BackupStore, RecoverySource, ReplicationPlan};

@@ -23,7 +23,7 @@ use crate::fault::heartbeat::HeartbeatCfg;
 use crate::fault::replan::{lightweight_replan, migration_time};
 use crate::fault::replication::{replication_plan, restore_time};
 use crate::model::ModelDesc;
-use crate::planner::dp::{plan_hpp, PlannerConfig};
+use crate::planner::dp::{plan_hpp, plan_hpp_incremental, plan_hpp_subset, DpState, PlannerConfig};
 use crate::planner::plan::Plan;
 use crate::profiler::ProfileTable;
 use crate::schedule::{diff, Schedule, SchedulePolicy, ScheduleDiff};
@@ -213,6 +213,68 @@ pub fn heavy_reschedule(
         retasked_devices: sdiff.retasked,
         refill_s: sim.fill_latency,
     })
+}
+
+/// Heavy rescheduling through the planner's incremental fast path:
+/// the same full-quality Algorithm-2 replan as [`heavy_reschedule`],
+/// but reusing the session's previous [`DpState`] so only DP cells and
+/// stage prices the removal actually invalidated are recomputed — the
+/// plan is bit-for-bit what a from-scratch rebuild would emit
+/// (`plan_hpp_incremental`'s contract).  Unlike the baseline there is
+/// no sub-cluster remap: planning runs in *original device-id space*
+/// over the survivors, and the returned state is ready for the next
+/// failure.  With `prev = None` (or a state from a different
+/// model/cluster/config) it degrades to a full subset rebuild — still
+/// in original id space, still returning a reusable state.
+///
+/// The weight gather/redistribute costs and the `EDGE_PLANNER_SLOWDOWN`
+/// scaling mirror [`heavy_reschedule`], so Fig. 16/17-style comparisons
+/// isolate exactly the replan-time savings.
+#[allow(clippy::too_many_arguments)]
+pub fn heavy_reschedule_incremental(
+    table: &ProfileTable,
+    cluster: &ClusterSpec,
+    model: &ModelDesc,
+    cfg: &TrainConfig,
+    plan: &Plan,
+    failed_dev: usize,
+    hb: &HeartbeatCfg,
+    policy: &'static dyn SchedulePolicy,
+    prev: Option<&DpState>,
+) -> Result<(RecoveryReport, DpState)> {
+    let keep: Vec<usize> = (0..cluster.n()).filter(|&d| d != failed_dev).collect();
+    let pc = PlannerConfig { policy, ..PlannerConfig::default() };
+    let (outcome, state) = match prev {
+        Some(p) if p.order().contains(&failed_dev) => {
+            plan_hpp_incremental(p, table, cluster, model, cfg, &pc, failed_dev)?
+        }
+        _ => plan_hpp_subset(table, cluster, model, cfg, &pc, &keep)?,
+    };
+
+    let bw = cluster.min_bandwidth(&keep);
+    let p_bytes = model.total_weight_bytes() as f64;
+    let gather_s = p_bytes / bw;
+    let redistribute_s = p_bytes / bw;
+
+    let new_plan = outcome.plan;
+    let sdiff = recovery_diff(plan, &new_plan, policy);
+    let sim = price_round(table, cluster, model, &new_plan, policy);
+
+    Ok((
+        RecoveryReport {
+            mechanism: "heavy-incremental",
+            detection_s: hb.detection_time(),
+            restore_s: gather_s,
+            replan_s: outcome.planning_time_s * EDGE_PLANNER_SLOWDOWN,
+            migration_s: redistribute_s,
+            new_throughput: sim.throughput,
+            new_plan,
+            replay_micros: sdiff.replay_micros,
+            retasked_devices: sdiff.retasked,
+            refill_s: sim.fill_latency,
+        },
+        state,
+    ))
 }
 
 /// Fig. 17: throughput over a time window with a failure at `t_fail`.
@@ -440,6 +502,91 @@ mod tests {
         );
         // The recovered round is priced at the async steady-state rate.
         assert!(asy.new_throughput > 0.0 && asy.refill_s > 0.0);
+    }
+
+    #[test]
+    fn incremental_heavy_matches_baseline_heavy_plan() {
+        // The fast path must not change *what* heavy rescheduling
+        // plans — only how fast the planner gets there.  The baseline
+        // plans on a remapped sub-cluster and maps ids back; the
+        // incremental path plans in original-id space.  Same profile
+        // values, same sorted order, same DP — same plan.
+        let (cluster, model, table, cfg, plan) = setup();
+        let hb = HeartbeatCfg::default();
+        let (_, state) = crate::planner::dp::plan_hpp_with_state(
+            &table,
+            &cluster,
+            &model,
+            &cfg,
+            &PlannerConfig::default(),
+        )
+        .unwrap();
+        for &failed in &plan.devices() {
+            let heavy = heavy_reschedule(
+                &table, &cluster, &model, &cfg, &plan, failed, &hb, DEFAULT_POLICY,
+            )
+            .unwrap();
+            let (inc, next_state) = heavy_reschedule_incremental(
+                &table,
+                &cluster,
+                &model,
+                &cfg,
+                &plan,
+                failed,
+                &hb,
+                DEFAULT_POLICY,
+                Some(&state),
+            )
+            .unwrap();
+            assert_eq!(inc.mechanism, "heavy-incremental");
+            assert_eq!(inc.new_plan, heavy.new_plan, "failed={failed}");
+            assert_eq!(inc.replay_micros, heavy.replay_micros, "failed={failed}");
+            assert_eq!(next_state.order().len(), cluster.n() - 1);
+            inc.new_plan.validate(&model, &cluster).unwrap();
+        }
+    }
+
+    #[test]
+    fn incremental_heavy_states_chain_across_failures() {
+        // The state a recovery returns must itself replan the *next*
+        // failure, and without a previous state the path degrades to a
+        // full subset rebuild with the same answer.
+        let (cluster, model, table, cfg, plan) = setup();
+        let hb = HeartbeatCfg::default();
+        let devs = plan.devices();
+        let (first, second) = (devs[0], devs[1]);
+        let (r1, s1) = heavy_reschedule_incremental(
+            &table, &cluster, &model, &cfg, &plan, first, &hb, DEFAULT_POLICY, None,
+        )
+        .unwrap();
+        let (r2, s2) = heavy_reschedule_incremental(
+            &table,
+            &cluster,
+            &model,
+            &cfg,
+            &r1.new_plan,
+            second,
+            &hb,
+            DEFAULT_POLICY,
+            Some(&s1),
+        )
+        .unwrap();
+        let (cold, _) = heavy_reschedule_incremental(
+            &table,
+            &cluster,
+            &model,
+            &cfg,
+            &r1.new_plan,
+            second,
+            &hb,
+            DEFAULT_POLICY,
+            None,
+        )
+        .unwrap();
+        assert_eq!(r2.new_plan, cold.new_plan);
+        assert!(!r2.new_plan.devices().contains(&first));
+        assert!(!r2.new_plan.devices().contains(&second));
+        assert_eq!(s2.order().len(), cluster.n() - 2);
     }
 
     #[test]

@@ -72,7 +72,9 @@ fn policy_from(args: &Args) -> Result<&'static dyn SchedulePolicy> {
 
 /// Declarative device-exit injection from flags: `--fail-after N`
 /// arms a [`FaultSpec`] (`--fail <dev>` picks the device, default
-/// last-planned; `--recovery heavy` the baseline mechanism;
+/// last-planned; `--recovery heavy` the baseline mechanism,
+/// `heavy-incremental` the same replan through the planner's
+/// incremental fast path;
 /// `--resume N` post-recovery rounds; `--heartbeat-ms M` a tight
 /// validated detection config for CI).
 fn fault_from(args: &Args) -> Result<Option<FaultSpec>> {
@@ -90,7 +92,12 @@ fn fault_from(args: &Args) -> Result<Option<FaultSpec>> {
     match args.str_or("recovery", "lightweight").as_str() {
         "lightweight" | "lite" => {}
         "heavy" => spec = spec.with_recovery(RecoveryKind::Heavy),
-        other => bail!("--recovery expects lightweight|heavy, got {other:?}"),
+        "heavy-incremental" | "heavy-inc" => {
+            spec = spec.with_recovery(RecoveryKind::HeavyIncremental)
+        }
+        other => bail!(
+            "--recovery expects lightweight|heavy|heavy-incremental, got {other:?}"
+        ),
     }
     if let Some(ms) = args.get("heartbeat-ms") {
         let ms: u64 = ms
@@ -363,7 +370,11 @@ fn cmd_replay(args: &Args) -> Result<()> {
         failed,
         base.cluster().devices[failed].name
     );
-    for kind in [RecoveryKind::Lightweight, RecoveryKind::Heavy] {
+    for kind in [
+        RecoveryKind::Lightweight,
+        RecoveryKind::Heavy,
+        RecoveryKind::HeavyIncremental,
+    ] {
         let s = base
             .clone()
             .with_fault(FaultSpec::device(failed).with_recovery(kind));

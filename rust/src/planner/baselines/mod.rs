@@ -139,6 +139,7 @@ pub fn plan_pipedream(
         // paper's PipeDream/Dapple planners have no simulator check.
         sim_select: false,
         policy,
+        ..PlannerConfig::default()
     };
     plan_hpp(table, cluster, model, cfg, &pc)
 }
@@ -164,6 +165,7 @@ pub fn plan_dapple(
         kp_policy: KpPolicy::Ours,
         sim_select: false,
         policy,
+        ..PlannerConfig::default()
     };
     plan_hpp(table, cluster, model, cfg, &pc)
 }

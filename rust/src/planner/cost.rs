@@ -38,25 +38,50 @@ pub fn exec_step_cost(
     stage: &Stage,
 ) -> StepCost {
     let (i, j) = stage.layers;
+    let (ef, eb) = exec_times_parts(table, i, j, &stage.devices, &stage.alloc);
+    StepCost { ef, eb, ta: allreduce_time(cluster, model, stage), exec: true }
+}
+
+/// Slowest-device E_f/E_b over a device slice and its allocation
+/// (Eq. 8's max), without constructing a `Stage`.  The fleet-scale DP
+/// calls this directly on arena-owned slices.
+pub fn exec_times_parts(
+    table: &ProfileTable,
+    i: usize,
+    j: usize,
+    devices: &[usize],
+    alloc: &[usize],
+) -> (f64, f64) {
     let mut ef: f64 = 0.0;
     let mut eb: f64 = 0.0;
-    for (&d, &y) in stage.devices.iter().zip(&stage.alloc) {
+    for (&d, &y) in devices.iter().zip(alloc) {
         ef = ef.max(table.time_fwd(d, i, j, y));
         eb = eb.max(table.time_bwd(d, i, j, y));
     }
-    StepCost { ef, eb, ta: allreduce_time(cluster, model, stage), exec: true }
+    (ef, eb)
 }
 
 /// T_a^s (Eq. 5): ring AllReduce of the stage's weights over the
 /// group's slowest link.
 pub fn allreduce_time(cluster: &ClusterSpec, model: &ModelDesc, stage: &Stage) -> f64 {
-    let g = stage.devices.len();
-    if g <= 1 {
+    let w: u64 = model.weight_bytes_range(stage.layers.0, stage.layers.1);
+    let bw = if stage.devices.len() <= 1 {
+        f64::INFINITY // unused: the g <= 1 early-out below fires first
+    } else {
+        cluster.min_bandwidth(&stage.devices)
+    };
+    allreduce_time_parts(w, stage.devices.len(), bw)
+}
+
+/// Eq. 5 from pre-resolved parts: stage weight bytes, group size, and
+/// bottleneck intra-group bandwidth.  `allreduce_time` delegates here;
+/// the DP calls it directly with prefix-summed weights and a memoized
+/// bandwidth oracle so pricing a candidate stage is O(1).
+pub fn allreduce_time_parts(weight_bytes: u64, group: usize, min_bw: f64) -> f64 {
+    if group <= 1 {
         return 0.0;
     }
-    let w: u64 = model.weight_bytes_range(stage.layers.0, stage.layers.1);
-    let bw = cluster.min_bandwidth(&stage.devices);
-    (2 * (g - 1)) as f64 * w as f64 / (g as f64 * bw)
+    (2 * (group - 1)) as f64 * weight_bytes as f64 / (group as f64 * min_bw)
 }
 
 /// E_f^s / E_b^s of the communication step between two adjacent stages:
@@ -71,7 +96,13 @@ pub fn comm_step_cost(
 ) -> StepCost {
     let bytes = model.boundary_bytes(from.layers.1) * microbatch as u64;
     let bw = cluster.group_bandwidth(&from.devices, &to.devices);
-    let t = bytes as f64 / bw + cluster.latency_s;
+    comm_step_cost_parts(bytes, bw, cluster.latency_s)
+}
+
+/// Comm-step cost from pre-resolved parts (total boundary bytes for
+/// one micro-batch, bottleneck cross-group bandwidth, link latency).
+pub fn comm_step_cost_parts(bytes: u64, bw: f64, latency_s: f64) -> StepCost {
+    let t = bytes as f64 / bw + latency_s;
     StepCost { ef: t, eb: t, ta: 0.0, exec: false }
 }
 

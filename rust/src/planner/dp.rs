@@ -7,6 +7,25 @@
 //! larger-memory devices).  The recurrence extends an optimal
 //! sub-pipeline with one new head stage replicated over the next
 //! `n - n'` devices, re-evaluating the dominant step per Eq. (11).
+//!
+//! # Fleet scale
+//!
+//! The DP is arena-backed: cells are a flat dense table of
+//! `(latency, node)` pairs and stage chains live in a parent-pointer
+//! arena, so extending a sub-pipeline is O(1) — no per-candidate
+//! `Vec<Stage>`/`Vec<StepCost>` clones — and the winning chains are
+//! reconstructed into `Stage`s exactly once at the end.  Candidate
+//! stages are screened with a closed-form lower bound on their Eq. 8
+//! step cost before the (expensive) intra-stage allocation runs; the
+//! bound is provably conservative and the comparison preserves the
+//! exact DP's strict-`<` winner, so pruning never changes the emitted
+//! plan.  Above [`PlannerConfig::exact_device_split_below`] devices
+//! the group-size axis walks a geometric ladder ([`device_rungs`])
+//! instead of every count.  Surviving stage prices are memoized in a
+//! content-keyed [`StagePricer`] that persists inside [`DpState`],
+//! which [`plan_hpp_incremental`] feeds back to replan a one-device
+//! removal by reusing unaffected DP cells and prices bit-for-bit (see
+//! ARCHITECTURE.md, "Planner at scale").
 
 use std::collections::HashMap;
 use std::time::Instant;
@@ -16,7 +35,10 @@ use anyhow::{bail, Result};
 use crate::config::{ClusterSpec, TrainConfig};
 use crate::model::ModelDesc;
 use crate::planner::alloc::{allocate_microbatch, AllocOpts};
-use crate::planner::cost::{comm_step_cost, exec_step_cost, round_latency, StepCost};
+use crate::planner::cost::{
+    allreduce_time_parts, comm_step_cost_parts, exec_times_parts, round_latency, StepCost,
+};
+use crate::planner::memory::stage_memory_for_policy;
 use crate::planner::plan::{KpPolicy, Plan, Stage};
 use crate::profiler::ProfileTable;
 use crate::schedule::{Schedule, SchedulePolicy, DEFAULT_POLICY};
@@ -44,6 +66,13 @@ pub struct PlannerConfig {
     /// threaded policy, so `.schedule(..)` is authoritative; set it
     /// directly only when calling `plan_hpp` by hand.
     pub policy: &'static dyn SchedulePolicy,
+    /// Clusters with at most this many devices evaluate every group
+    /// size 1..=n on the DP's device axis (the exact regime,
+    /// bit-identical to the pre-arena planner).  Larger fleets walk
+    /// the [`device_rungs`] ladder instead — every count up to 16,
+    /// then geometric — trading exhaustive group sizing for planning
+    /// time that stays near-linear in fleet size.
+    pub exact_device_split_below: usize,
 }
 
 impl Default for PlannerConfig {
@@ -55,6 +84,7 @@ impl Default for PlannerConfig {
             kp_policy: KpPolicy::Ours,
             sim_select: true,
             policy: DEFAULT_POLICY,
+            exact_device_split_below: 32,
         }
     }
 }
@@ -85,13 +115,6 @@ pub struct PlanOutcome {
     pub planning_time_s: f64,
 }
 
-#[derive(Clone)]
-struct QEntry {
-    stages: Vec<Stage>,
-    steps: Vec<StepCost>,
-    latency: f64,
-}
-
 /// K_p as a function of the stage's distance-from-end q (q = 1 for the
 /// last stage).  Within the DP only the suffix position is known; for
 /// the paper's policy K_p = 2(P-p)-1 = 2q-1.
@@ -106,23 +129,16 @@ fn kp_from_end(policy: KpPolicy, q: usize, m: usize) -> usize {
     v.clamp(1, m.max(1))
 }
 
-/// Run Algorithm 2 and return the best plan over all stage counts.
-pub fn plan_hpp(
-    table: &ProfileTable,
-    cluster: &ClusterSpec,
-    model: &ModelDesc,
-    cfg: &TrainConfig,
-    pc: &PlannerConfig,
-) -> Result<PlanOutcome> {
-    let t0 = Instant::now();
-    let l_total = model.num_layers();
-    let n_total = cluster.n();
-    let m = cfg.num_microbatches();
-    let b = cfg.microbatch;
-    let max_p = pc.max_stages.min(n_total).max(1);
-
-    // Devices sorted by memory desc (ties: capacity desc).
-    let mut order: Vec<usize> = (0..n_total).collect();
+/// Memory-descending planning order over a device subset (the paper's
+/// rule: earlier stages hold more activations, so they get the
+/// larger-memory devices).  The tie-break is **total**: memory
+/// descending, then peak FLOPS descending, then device id ascending —
+/// equal devices therefore sort identically in every run and in every
+/// subset, and removing one device never reorders the survivors.  The
+/// incremental replan's cell-reuse equivalence proof relies on exactly
+/// that stability.
+pub fn sorted_device_order(cluster: &ClusterSpec, subset: &[usize]) -> Vec<usize> {
+    let mut order: Vec<usize> = subset.to_vec();
     order.sort_by(|&a, &b| {
         let da = &cluster.devices[a];
         let db = &cluster.devices[b];
@@ -131,134 +147,827 @@ pub fn plan_hpp(
             .then(db.peak_flops.partial_cmp(&da.peak_flops).unwrap())
             .then(a.cmp(&b))
     });
+    order
+}
 
-    // Stage-cost cache: (layer i, layer j, dev start, dev end, kp) ->
-    // allocation + step cost, or None when the group OOMs.
-    #[allow(clippy::type_complexity)]
-    let mut cache: HashMap<(usize, usize, usize, usize, usize), Option<(Vec<usize>, StepCost)>> =
-        HashMap::new();
-    let stage_cost = |i: usize,
-                          j: usize,
-                          ds: usize,
-                          de: usize,
-                          kp: usize,
-                          cache: &mut HashMap<
-        (usize, usize, usize, usize, usize),
-        Option<(Vec<usize>, StepCost)>,
-    >|
-     -> Option<(Vec<usize>, StepCost)> {
-        let key = (i, j, ds, de, kp);
-        if let Some(hit) = cache.get(&key) {
-            return hit.clone();
+/// The group-size ladder the DP walks on its device axis.  At or below
+/// `exact_below` devices it is every count `1..=n` — the exact regime.
+/// Above, it is every count up to 16, then a geometric (x1.25) ladder,
+/// plus `n` itself.  Rung values below `n` come from a fixed,
+/// fleet-size-independent set, so any sub-pipeline's candidate space
+/// is identical across fleets sharing a device suffix — the property
+/// the incremental replan's cell reuse needs.
+pub fn device_rungs(n_total: usize, exact_below: usize) -> Vec<usize> {
+    if n_total <= exact_below {
+        return (1..=n_total).collect();
+    }
+    let mut rungs: Vec<usize> = (1..=16.min(n_total)).collect();
+    let mut r = 20usize;
+    while r < n_total {
+        rungs.push(r);
+        r = (r * 5) / 4;
+    }
+    rungs.push(n_total);
+    rungs.sort_unstable();
+    rungs.dedup();
+    rungs
+}
+
+/// Content-addressed key of one priced stage candidate: layer range,
+/// warm-up depth, micro-batch geometry, and the exact device-id group.
+/// Keyed on device *ids* (not positions in the sorted order), so
+/// entries stay valid across replans that remove devices and shift
+/// every position.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct StageKey {
+    i: u32,
+    j: u32,
+    kp: u32,
+    b: u32,
+    m: u32,
+    devs: Box<[u32]>,
+}
+
+/// A memoized stage price: the Eq. 8 execution step cost (with Eq. 5
+/// AllReduce) plus the peak Eq. 3 memory across the group under the
+/// allocation `allocate_microbatch` chose.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PricedStage {
+    pub cost: StepCost,
+    pub peak_mem_bytes: u64,
+}
+
+/// Memoized stage pricer shared across DP candidates, the per-p
+/// finalists, micro-batch sweep candidates (b and M are part of the
+/// key), and incremental replans (device-id keys survive removal).
+/// Only allocation-surviving candidates are stored — the lower-bound
+/// screen keeps the table small — and a `None` value records that the
+/// group OOMs, so infeasibility is memoized too.  A pricer is only
+/// valid for one (model, cluster, policy, planner-flag) context;
+/// [`DpState`] carries a fingerprint and cross-state reuse checks it.
+#[derive(Debug, Clone, Default)]
+pub struct StagePricer {
+    memo: HashMap<StageKey, Option<PricedStage>>,
+    /// sim_select pricing cache, threaded to `sim::price_policy`.
+    pub(crate) sim: crate::sim::PriceCache,
+    hits: u64,
+    misses: u64,
+}
+
+impl StagePricer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Distinct stage candidates priced (memo size).
+    pub fn entries(&self) -> usize {
+        self.memo.len()
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// Price one stage through the memo, resolving T_a (Eq. 5) from
+    /// the cluster.  Returns the same `StepCost` as the un-memoized
+    /// `allocate_microbatch` + `exec_step_cost` path, bit-for-bit —
+    /// `tests/fleet_planning.rs` holds it to that; `None` means the
+    /// group cannot fit the micro-batch.
+    #[allow(clippy::too_many_arguments)]
+    pub fn stage_cost(
+        &mut self,
+        table: &ProfileTable,
+        cluster: &ClusterSpec,
+        model: &ModelDesc,
+        cfg: &TrainConfig,
+        pc: &PlannerConfig,
+        i: usize,
+        j: usize,
+        devices: &[usize],
+        kp: usize,
+    ) -> Option<StepCost> {
+        let ta_raw = if devices.len() <= 1 {
+            0.0
+        } else {
+            allreduce_time_parts(
+                model.weight_bytes_range(i, j),
+                devices.len(),
+                cluster.min_bandwidth(devices),
+            )
+        };
+        self.price(table, cluster, model, cfg, pc, i, j, devices, kp, ta_raw, None)
+            .map(|p| p.cost)
+    }
+
+    /// Memo lookup (own table, then a compatible previous state's),
+    /// falling back to a fresh allocation + pricing.  `ta_raw` is the
+    /// Eq. 5 AllReduce time before `comm_aware` zeroing.
+    #[allow(clippy::too_many_arguments)]
+    fn price(
+        &mut self,
+        table: &ProfileTable,
+        cluster: &ClusterSpec,
+        model: &ModelDesc,
+        cfg: &TrainConfig,
+        pc: &PlannerConfig,
+        i: usize,
+        j: usize,
+        devices: &[usize],
+        kp: usize,
+        ta_raw: f64,
+        prev: Option<&StagePricer>,
+    ) -> Option<PricedStage> {
+        let key = StageKey {
+            i: i as u32,
+            j: j as u32,
+            kp: kp as u32,
+            b: cfg.microbatch as u32,
+            m: cfg.num_microbatches() as u32,
+            devs: devices.iter().map(|&d| d as u32).collect(),
+        };
+        if let Some(hit) = self.memo.get(&key) {
+            self.hits += 1;
+            return *hit;
         }
-        let devices: Vec<usize> = order[ds..de].to_vec();
+        if let Some(p) = prev {
+            if let Some(hit) = p.memo.get(&key) {
+                self.hits += 1;
+                self.memo.insert(key, *hit);
+                return *hit;
+            }
+        }
+        self.misses += 1;
+        let priced = Self::compute(table, cluster, model, cfg, pc, i, j, devices, kp, ta_raw);
+        self.memo.insert(key, priced);
+        priced
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn compute(
+        table: &ProfileTable,
+        cluster: &ClusterSpec,
+        model: &ModelDesc,
+        cfg: &TrainConfig,
+        pc: &PlannerConfig,
+        i: usize,
+        j: usize,
+        devices: &[usize],
+        kp: usize,
+        ta_raw: f64,
+    ) -> Option<PricedStage> {
+        let m = cfg.num_microbatches();
+        let b = cfg.microbatch;
         // Memory budgets charge the policy's true in-flight residency
         // (e.g. the whole round for fill-drain), not the raw warm-up —
         // plus the weight-version stash copies of a bounded-staleness
         // policy (Eq. 3's fourth term).
         let eff_kp = pc.policy.effective_kp(kp, m);
-        let alloc_opts = AllocOpts {
-            stash_copies: pc.policy.weight_stash_copies(kp, m),
-            ..pc.alloc
-        };
-        let result = allocate_microbatch(
-            table, cluster, model, cfg, i, j, &devices, b, eff_kp, alloc_opts,
-        )
-        .ok()
-        .map(|alloc| {
-            let stage = Stage { layers: (i, j), devices: devices.clone(), alloc, kp };
-            let mut cost = exec_step_cost(table, cluster, model, &stage);
-            if !pc.comm_aware {
-                cost.ta = 0.0;
-            }
-            (stage.alloc, cost)
-        });
-        cache.insert(key, result.clone());
-        result
-    };
+        let opts = AllocOpts { stash_copies: pc.policy.weight_stash_copies(kp, m), ..pc.alloc };
+        let alloc =
+            allocate_microbatch(table, cluster, model, cfg, i, j, devices, b, eff_kp, opts).ok()?;
+        let (ef, eb) = exec_times_parts(table, i, j, devices, &alloc);
+        let ta = if pc.comm_aware { ta_raw } else { 0.0 };
+        let peak_mem_bytes = alloc
+            .iter()
+            .map(|&y| stage_memory_for_policy(model, cfg, i, j, y, kp, m, pc.policy).total())
+            .max()
+            .unwrap_or(0);
+        Some(PricedStage { cost: StepCost { ef, eb, ta, exec: true }, peak_mem_bytes })
+    }
+}
 
-    // Q[l][n][p]; indices 1-based on l, n, p.
-    let mut q: Vec<Vec<Vec<Option<QEntry>>>> =
-        vec![vec![vec![None; max_p + 1]; n_total + 1]; l_total + 1];
+/// Arena sentinel: "no node" / infeasible cell.
+const NO_NODE: u32 = u32::MAX;
 
-    // Base case p = 1: the last l layers as a single (final) stage on
-    // the last n devices.
-    for l in 1..=l_total {
-        for n in 1..=n_total {
-            let i = l_total - l;
-            let kp = kp_from_end(pc.kp_policy, 1, m);
-            let ds = n_total - n;
-            if let Some((alloc, cost)) = stage_cost(i, l_total, ds, n_total, kp, &mut cache) {
-                let stage = Stage {
-                    layers: (i, l_total),
-                    devices: order[ds..n_total].to_vec(),
-                    alloc,
-                    kp,
-                };
-                let steps = vec![cost];
-                let latency = round_latency(&steps, m);
-                q[l][n][1] = Some(QEntry { stages: vec![stage], steps, latency });
+const ZERO_COMM: StepCost = StepCost { ef: 0.0, eb: 0.0, ta: 0.0, exec: false };
+
+/// One stage in the parent-pointer arena.  `parent` points at the next
+/// stage toward the pipeline tail (`NO_NODE` for the tail stage);
+/// `comm` is the communication step between this stage and its parent.
+/// `ds..de` are *positions in the sorted order*, not device ids.
+#[derive(Debug, Clone, Copy)]
+struct Node {
+    i: u32,
+    j: u32,
+    ds: u32,
+    de: u32,
+    kp: u32,
+    parent: u32,
+    exec: StepCost,
+    comm: StepCost,
+}
+
+/// One dense DP cell: best round latency + arena index of its head
+/// stage (`NO_NODE` = infeasible / not computed).
+#[derive(Debug, Clone, Copy)]
+struct Cell {
+    latency: f64,
+    node: u32,
+}
+
+const EMPTY_CELL: Cell = Cell { latency: f64::INFINITY, node: NO_NODE };
+
+/// Everything that must match before a previous [`DpState`]'s memo or
+/// cells may be reused.  `b`/`m` live in the memo keys, so the pricer
+/// is reusable across a micro-batch sweep (`memo_compatible`); cell
+/// reuse additionally requires exact equality.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct StateFp {
+    model_hash: u64,
+    cluster_hash: u64,
+    policy: &'static str,
+    comm_aware: bool,
+    max_stages: usize,
+    kp_policy: KpPolicy,
+    memory_aware: bool,
+    heterogeneity_aware: bool,
+    straggler_offload: bool,
+    exact_below: usize,
+    opt_mem_bits: u64,
+    b: usize,
+    m: usize,
+}
+
+impl StateFp {
+    fn memo_compatible(&self, other: &StateFp) -> bool {
+        StateFp { b: 0, m: 0, ..*self } == StateFp { b: 0, m: 0, ..*other }
+    }
+}
+
+fn fnv1a(h: &mut u64, x: u64) {
+    *h ^= x;
+    *h = h.wrapping_mul(0x0100_0000_01b3);
+}
+
+fn cluster_hash(cluster: &ClusterSpec) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325_u64;
+    fnv1a(&mut h, cluster.n() as u64);
+    for d in &cluster.devices {
+        fnv1a(&mut h, d.mem_bytes);
+        fnv1a(&mut h, d.peak_flops.to_bits());
+        fnv1a(&mut h, d.work_half.to_bits());
+        fnv1a(&mut h, d.overhead_s.to_bits());
+    }
+    for row in &cluster.bandwidth {
+        for &x in row {
+            fnv1a(&mut h, x.to_bits());
+        }
+    }
+    fnv1a(&mut h, cluster.latency_s.to_bits());
+    h
+}
+
+fn model_hash(model: &ModelDesc) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325_u64;
+    for c in model.name.bytes() {
+        fnv1a(&mut h, c as u64);
+    }
+    fnv1a(&mut h, model.num_layers() as u64);
+    for l in &model.layers {
+        fnv1a(&mut h, l.flops_fwd.to_bits());
+        fnv1a(&mut h, l.flops_bwd.to_bits());
+        fnv1a(&mut h, l.weight_bytes);
+        fnv1a(&mut h, l.out_bytes);
+    }
+    h
+}
+
+fn state_fp(
+    cluster: &ClusterSpec,
+    model: &ModelDesc,
+    cfg: &TrainConfig,
+    pc: &PlannerConfig,
+) -> StateFp {
+    StateFp {
+        model_hash: model_hash(model),
+        cluster_hash: cluster_hash(cluster),
+        policy: pc.policy.name(),
+        comm_aware: pc.comm_aware,
+        max_stages: pc.max_stages,
+        kp_policy: pc.kp_policy,
+        memory_aware: pc.alloc.memory_aware,
+        heterogeneity_aware: pc.alloc.heterogeneity_aware,
+        straggler_offload: pc.alloc.straggler_offload,
+        exact_below: pc.exact_device_split_below,
+        opt_mem_bits: cfg.optimizer_mem_factor.to_bits(),
+        b: cfg.microbatch,
+        m: cfg.num_microbatches(),
+    }
+}
+
+/// Self-contained state of one planning run over a device subset: the
+/// sorted order, the rung ladder, the dense DP table, the stage-chain
+/// arena, and the stage pricer.  Feed it back through
+/// [`plan_hpp_incremental`] after a single device removal: DP cells
+/// whose device suffix is untouched are copied instead of recomputed,
+/// and surviving stage prices hit the memo.  States chain — the state
+/// an incremental replan returns is itself a valid `prev` for the next
+/// removal.
+#[derive(Debug, Clone)]
+pub struct DpState {
+    order: Vec<usize>,
+    rungs: Vec<usize>,
+    cells: Vec<Cell>,
+    arena: Vec<Node>,
+    pricer: StagePricer,
+    fp: StateFp,
+    l_total: usize,
+    max_p: usize,
+}
+
+impl DpState {
+    /// Devices in planning order (memory-descending; see
+    /// [`sorted_device_order`]).
+    pub fn order(&self) -> &[usize] {
+        &self.order
+    }
+
+    /// The group-size ladder this state was computed over.
+    pub fn rungs(&self) -> &[usize] {
+        &self.rungs
+    }
+
+    /// Distinct stage candidates in the pricer memo.
+    pub fn memo_entries(&self) -> usize {
+        self.pricer.entries()
+    }
+
+    /// Nodes in the stage-chain arena.
+    pub fn arena_nodes(&self) -> usize {
+        self.arena.len()
+    }
+
+    fn cell(&self, l: usize, ri: usize, p: usize) -> Cell {
+        self.cells[((p - 1) * (self.l_total + 1) + l) * self.rungs.len() + ri]
+    }
+}
+
+/// Per-run bandwidth oracle.  `min_bandwidth`/`group_bandwidth` are
+/// O(g^2) pairwise scans — ruinous inside the DP's candidate loop at
+/// fleet scale — but every synthetic fleet (and most real deployments)
+/// has a uniform link bandwidth, detected here once with one O(n^2)
+/// scan and answered in O(1) thereafter: the min over any set of equal
+/// off-diagonal entries is that entry, bit-for-bit.  Non-uniform
+/// clusters fall back to the exact pairwise scan, memoized per
+/// contiguous run of the sorted order.
+struct BwOracle<'a> {
+    cluster: &'a ClusterSpec,
+    order: &'a [usize],
+    uniform: Option<f64>,
+    run_min: HashMap<(u32, u32), f64>,
+    cross: HashMap<(u32, u32, u32), f64>,
+}
+
+impl<'a> BwOracle<'a> {
+    fn new(cluster: &'a ClusterSpec, order: &'a [usize]) -> Self {
+        let n = cluster.n();
+        let mut first: Option<f64> = None;
+        let mut uniform = true;
+        'scan: for i in 0..n {
+            for j in 0..n {
+                if i == j {
+                    continue;
+                }
+                let x = cluster.bandwidth[i][j];
+                match first {
+                    None => first = Some(x),
+                    Some(f) if x == f => {}
+                    Some(_) => {
+                        uniform = false;
+                        break 'scan;
+                    }
+                }
             }
+        }
+        BwOracle {
+            cluster,
+            order,
+            uniform: if uniform { first } else { None },
+            run_min: HashMap::new(),
+            cross: HashMap::new(),
         }
     }
 
-    // Recurrence (Eq. 10): extend sub-pipelines with a new head stage.
+    /// Bottleneck intra-group bandwidth of `order[a..b)`.  Callers
+    /// only query groups of >= 2 devices (Eq. 5 early-outs for g <= 1).
+    fn run_min(&mut self, a: usize, b: usize) -> f64 {
+        if let Some(x) = self.uniform {
+            return x;
+        }
+        let (cluster, order) = (self.cluster, self.order);
+        *self
+            .run_min
+            .entry((a as u32, b as u32))
+            .or_insert_with(|| cluster.min_bandwidth(&order[a..b]))
+    }
+
+    /// Bottleneck bandwidth between the adjacent runs `order[a..b)`
+    /// and `order[b..c)`.
+    fn cross(&mut self, a: usize, b: usize, c: usize) -> f64 {
+        if let Some(x) = self.uniform {
+            return x;
+        }
+        let (cluster, order) = (self.cluster, self.order);
+        *self
+            .cross
+            .entry((a as u32, b as u32, c as u32))
+            .or_insert_with(|| cluster.group_bandwidth(&order[a..b], &order[b..c]))
+    }
+}
+
+/// If `new` equals `old` with exactly one element removed, return the
+/// removed position in `old`.
+fn removal_position(old: &[usize], new: &[usize]) -> Option<usize> {
+    if old.len() != new.len() + 1 {
+        return None;
+    }
+    let k = old.iter().zip(new.iter()).position(|(a, b)| a != b).unwrap_or(new.len());
+    (old[..k] == new[..k] && old[k + 1..] == new[k..]).then_some(k)
+}
+
+/// Append a chain's steps `[exec, comm, exec, comm, ...]` to `out`,
+/// head to tail — the same step list the recurrence used to assemble
+/// as a fresh `Vec` per candidate.
+fn push_chain(arena: &[Node], mut node: u32, out: &mut Vec<StepCost>) {
+    while node != NO_NODE {
+        let nd = &arena[node as usize];
+        out.push(nd.exec);
+        if nd.parent != NO_NODE {
+            out.push(nd.comm);
+        }
+        node = nd.parent;
+    }
+}
+
+/// Copy a chain from a previous state's arena into `arena`, shifting
+/// every position down by one (the removed device sorts strictly
+/// before every position a reused chain touches).  `map` dedups shared
+/// sub-chains across cells.
+fn copy_chain(
+    prev: &DpState,
+    root: u32,
+    arena: &mut Vec<Node>,
+    map: &mut HashMap<u32, u32>,
+) -> u32 {
+    let mut stack = Vec::new();
+    let mut cur = root;
+    while cur != NO_NODE && !map.contains_key(&cur) {
+        stack.push(cur);
+        cur = prev.arena[cur as usize].parent;
+    }
+    while let Some(old) = stack.pop() {
+        let nd = prev.arena[old as usize];
+        let parent = if nd.parent == NO_NODE { NO_NODE } else { map[&nd.parent] };
+        arena.push(Node { ds: nd.ds - 1, de: nd.de - 1, parent, ..nd });
+        map.insert(old, (arena.len() - 1) as u32);
+    }
+    map[&root]
+}
+
+/// Walk a winning chain head-to-tail and materialise it as `Stage`s,
+/// re-running the (deterministic) intra-stage allocation for each —
+/// once per final plan, not once per DP candidate.
+#[allow(clippy::too_many_arguments)]
+fn reconstruct_plan(
+    arena: &[Node],
+    order: &[usize],
+    table: &ProfileTable,
+    cluster: &ClusterSpec,
+    model: &ModelDesc,
+    cfg: &TrainConfig,
+    pc: &PlannerConfig,
+    head: u32,
+) -> Result<Plan> {
+    let m = cfg.num_microbatches();
+    let b = cfg.microbatch;
+    let mut stages = Vec::new();
+    let mut cur = head;
+    while cur != NO_NODE {
+        let nd = arena[cur as usize];
+        let (i, j) = (nd.i as usize, nd.j as usize);
+        let devices: Vec<usize> = order[nd.ds as usize..nd.de as usize].to_vec();
+        let kp = nd.kp as usize;
+        let eff_kp = pc.policy.effective_kp(kp, m);
+        let opts = AllocOpts { stash_copies: pc.policy.weight_stash_copies(kp, m), ..pc.alloc };
+        let alloc = allocate_microbatch(table, cluster, model, cfg, i, j, &devices, b, eff_kp, opts)
+            .map_err(|e| anyhow::anyhow!("reconstructing a priced stage failed: {e}"))?;
+        stages.push(Stage { layers: (i, j), devices, alloc, kp });
+        cur = nd.parent;
+    }
+    Ok(Plan { stages, microbatch: b, num_micro: m })
+}
+
+/// Conservative slack on the closed-form stage lower bounds: the bound
+/// is mathematically <= the true Eq. 8 cost, but its floating-point
+/// evaluation differs from the priced path's, so shave a relative
+/// epsilon to make "lb >= incumbent ⇒ candidate loses" robust to
+/// rounding.  Costs a handful of extra allocations, never a changed
+/// plan.
+const LB_SLACK: f64 = 1.0 - 1e-9;
+
+/// The shared core behind [`plan_hpp`], [`plan_hpp_with_state`],
+/// [`plan_hpp_subset`] and [`plan_hpp_incremental`]: Algorithm 2 over
+/// `subset` (default: the whole cluster) in *original device-id
+/// space*, optionally reusing a previous run's DP cells and stage
+/// prices.
+#[allow(clippy::too_many_arguments)]
+fn plan_hpp_core(
+    table: &ProfileTable,
+    cluster: &ClusterSpec,
+    model: &ModelDesc,
+    cfg: &TrainConfig,
+    pc: &PlannerConfig,
+    subset: Option<&[usize]>,
+    prev: Option<&DpState>,
+) -> Result<(PlanOutcome, DpState)> {
+    let t0 = Instant::now();
+    let l_total = model.num_layers();
+    let m = cfg.num_microbatches();
+    let b = cfg.microbatch;
+
+    let devices: Vec<usize> = match subset {
+        Some(s) => s.to_vec(),
+        None => (0..cluster.n()).collect(),
+    };
+    if devices.is_empty() {
+        bail!("no devices to plan over");
+    }
+    let order = sorted_device_order(cluster, &devices);
+    let n_total = order.len();
+    let max_p = pc.max_stages.min(n_total).max(1);
+    let rungs = device_rungs(n_total, pc.exact_device_split_below);
+    let n_rungs = rungs.len();
+
+    let fp = state_fp(cluster, model, cfg, pc);
+    // Memo reuse needs everything but (b, m) to match — those are in
+    // the memo keys.  Cell reuse needs exact config equality AND the
+    // new order to be the previous order minus exactly one device.
+    let prev_memo = prev.filter(|p| p.fp.memo_compatible(&fp)).map(|p| &p.pricer);
+    let removal = prev
+        .filter(|p| p.fp == fp)
+        .and_then(|p| removal_position(&p.order, &order).map(|k| (p, k)));
+
+    let mut pricer = StagePricer::new();
+    let mut arena: Vec<Node> = Vec::new();
+    let mut cells = vec![EMPTY_CELL; (l_total + 1) * n_rungs * max_p];
+    let cell_idx =
+        move |l: usize, ri: usize, p: usize| ((p - 1) * (l_total + 1) + l) * n_rungs + ri;
+    let mut reused = vec![false; n_rungs];
+
+    // ---- incremental fast path: copy unaffected cells -----------------
+    // A rung n' is reusable iff its device suffix (the last n' of the
+    // previous order) survives intact — all its positions sort strictly
+    // after the removed one — and the ladder below n' is unchanged, so
+    // the fresh run would evaluate exactly the same candidate set in
+    // exactly the same sequence.  Copied cells are then bit-identical
+    // to recomputation (`tests/fleet_planning.rs` proves it per plan).
+    if let Some((pstate, k)) = removal {
+        let mut node_map: HashMap<u32, u32> = HashMap::new();
+        for (ri, &n) in rungs.iter().enumerate() {
+            if n > n_total - k {
+                continue;
+            }
+            let Ok(pri) = pstate.rungs.binary_search(&n) else { continue };
+            if pstate.rungs[..pri] != rungs[..ri] {
+                continue;
+            }
+            for p in 1..=max_p.min(pstate.max_p) {
+                for l in 0..=l_total {
+                    let c = pstate.cell(l, pri, p);
+                    if c.node == NO_NODE {
+                        continue;
+                    }
+                    let node = copy_chain(pstate, c.node, &mut arena, &mut node_map);
+                    cells[cell_idx(l, ri, p)] = Cell { latency: c.latency, node };
+                }
+            }
+            reused[ri] = true;
+        }
+    }
+
+    // ---- per-run precomputation ---------------------------------------
+    let mut bw = BwOracle::new(cluster, &order);
+    // Stage-weight prefix sums: w(i, j) in O(1) for Eq. 5.
+    let mut wts = vec![0u64; l_total + 1];
+    for l in 0..l_total {
+        wts[l + 1] = wts[l] + model.weight_bytes_range(l, l + 1);
+    }
+    // Per-position device constants for the stage lower bounds: with
+    // u_d = overhead + work_half/peak, the profiler's affine model is
+    //   ef = layers*u_d + Ff*y_d/peak_d      (y_d >= 1)
+    //   eb = 2*layers*u_d + Fb*y_d/peak_d,
+    // so over any allocation summing to b on group [ds, de):
+    //   ef >= Ff*b / sum(peak)                      (throughput bound)
+    //   ef >= layers*min(u) + Ff*ceil(b/g)/max(peak) (pigeonhole bound)
+    // and both with eb's factor-2 constant term.  `round_latency` is
+    // monotone in the head step's (ef, eb), so a head lower bound gives
+    // a round-latency lower bound.
+    let u: Vec<f64> = order
+        .iter()
+        .map(|&d| {
+            let dev = &cluster.devices[d];
+            dev.overhead_s + dev.work_half / dev.peak_flops
+        })
+        .collect();
+    let peak: Vec<f64> = order.iter().map(|&d| cluster.devices[d].peak_flops).collect();
+    let mut peak_prefix = vec![0.0f64; n_total + 1];
+    for k in 0..n_total {
+        peak_prefix[k + 1] = peak_prefix[k] + peak[k];
+    }
+    // run_aux[ri][g-1] = (min u, max peak) over order[ds, ds+g) where
+    // ds = n_total - rungs[ri].
+    let run_aux: Vec<Vec<(f64, f64)>> = rungs
+        .iter()
+        .map(|&n| {
+            let ds = n_total - n;
+            let mut v = Vec::with_capacity(n_total - ds);
+            let (mut mu, mut mp) = (f64::INFINITY, 0.0f64);
+            for k in ds..n_total {
+                mu = mu.min(u[k]);
+                mp = mp.max(peak[k]);
+                v.push((mu, mp));
+            }
+            v
+        })
+        .collect();
+
+    // ---- base case p = 1 ----------------------------------------------
+    // The last l layers as a single (final) stage on the last n devices.
+    let kp1 = kp_from_end(pc.kp_policy, 1, m);
+    for (ri, &n) in rungs.iter().enumerate() {
+        if reused[ri] {
+            continue;
+        }
+        let ds = n_total - n;
+        for l in 1..=l_total {
+            let i = l_total - l;
+            let ta_raw = if n > 1 {
+                allreduce_time_parts(wts[l_total] - wts[i], n, bw.run_min(ds, n_total))
+            } else {
+                0.0
+            };
+            let Some(pr) = pricer.price(
+                table,
+                cluster,
+                model,
+                cfg,
+                pc,
+                i,
+                l_total,
+                &order[ds..n_total],
+                kp1,
+                ta_raw,
+                prev_memo,
+            ) else {
+                continue;
+            };
+            arena.push(Node {
+                i: i as u32,
+                j: l_total as u32,
+                ds: ds as u32,
+                de: n_total as u32,
+                kp: kp1 as u32,
+                parent: NO_NODE,
+                exec: pr.cost,
+                comm: ZERO_COMM,
+            });
+            let latency = round_latency(&[pr.cost], m);
+            cells[cell_idx(l, ri, 1)] = Cell { latency, node: (arena.len() - 1) as u32 };
+        }
+    }
+
+    // ---- recurrence (Eq. 10) ------------------------------------------
+    // Extend sub-pipelines with a new head stage: layers [L-l, L-lp) on
+    // positions [N-n, N-np).  Candidates are screened with the
+    // closed-form head lower bound before allocation; the incumbent
+    // comparison stays strict-`<` keep-first, so the pruned DP selects
+    // exactly the plans the exhaustive one did.
+    let mut scratch: Vec<StepCost> = Vec::with_capacity(2 * max_p);
     for p in 2..=max_p {
+        let kp = kp_from_end(pc.kp_policy, p, m);
         for l in p..=l_total {
-            for n in p..=n_total {
-                let mut best: Option<QEntry> = None;
+            for (ri, &n) in rungs.iter().enumerate() {
+                if n < p || reused[ri] {
+                    continue;
+                }
+                let ds = n_total - n;
+                let mut best_lat = f64::INFINITY;
+                let mut best: Option<(u32, u32, u32, StepCost, StepCost, u32)> = None;
                 for lp in (p - 1)..l {
-                    for np in (p - 1)..n {
-                        let Some(sub) = q[lp][np][p - 1].as_ref() else { continue };
-                        // New head stage: layers [L-l, L-lp) on devices
-                        // order[N-n .. N-np).
-                        let i = l_total - l;
-                        let j = l_total - lp;
-                        let ds = n_total - n;
+                    let i = l_total - l;
+                    let j = l_total - lp;
+                    let ff = table.flops_fwd_range(i, j);
+                    let fbk = table.flops_bwd_range(i, j);
+                    let w = wts[j] - wts[i];
+                    let boundary = model.boundary_bytes(j) * b as u64;
+                    let lc = (j - i) as f64;
+                    for (rpi, &np) in rungs.iter().enumerate() {
+                        if np >= n {
+                            break;
+                        }
+                        if np < p - 1 {
+                            continue;
+                        }
+                        let sub = cells[cell_idx(lp, rpi, p - 1)];
+                        if sub.node == NO_NODE {
+                            continue;
+                        }
                         let de = n_total - np;
-                        let kp = kp_from_end(pc.kp_policy, p, m);
-                        let Some((alloc, exec_cost)) = stage_cost(i, j, ds, de, kp, &mut cache)
-                        else {
+                        let g = n - np;
+                        let ta_raw = if g > 1 {
+                            allreduce_time_parts(w, g, bw.run_min(ds, de))
+                        } else {
+                            0.0
+                        };
+                        let ta = if pc.comm_aware { ta_raw } else { 0.0 };
+                        let comm = if pc.comm_aware {
+                            let sub_head_de = arena[sub.node as usize].de as usize;
+                            comm_step_cost_parts(
+                                boundary,
+                                bw.cross(ds, de, sub_head_de),
+                                cluster.latency_s,
+                            )
+                        } else {
+                            ZERO_COMM
+                        };
+                        // O(1) head lower bound; skip allocation when
+                        // even the bound cannot beat the incumbent.
+                        if best.is_some() {
+                            let (min_u, max_peak) = run_aux[ri][g - 1];
+                            let sum_peak = peak_prefix[de] - peak_prefix[ds];
+                            let q = ((b + g - 1) / g) as f64;
+                            let bf = b as f64;
+                            let lb_ef =
+                                (ff * bf / sum_peak).max(lc * min_u + ff * q / max_peak) * LB_SLACK;
+                            let lb_eb = (fbk * bf / sum_peak)
+                                .max(2.0 * lc * min_u + fbk * q / max_peak)
+                                * LB_SLACK;
+                            scratch.clear();
+                            scratch.push(StepCost { ef: lb_ef, eb: lb_eb, ta, exec: true });
+                            scratch.push(comm);
+                            push_chain(&arena, sub.node, &mut scratch);
+                            if round_latency(&scratch, m) >= best_lat {
+                                continue;
+                            }
+                        }
+                        let Some(pr) = pricer.price(
+                            table,
+                            cluster,
+                            model,
+                            cfg,
+                            pc,
+                            i,
+                            j,
+                            &order[ds..de],
+                            kp,
+                            ta_raw,
+                            prev_memo,
+                        ) else {
                             continue;
                         };
-                        let new_stage = Stage {
-                            layers: (i, j),
-                            devices: order[ds..de].to_vec(),
-                            alloc,
-                            kp,
-                        };
-                        // Communication step to the sub-pipeline's head.
-                        let sub_head = &sub.stages[0];
-                        let mut comm =
-                            comm_step_cost(cluster, model, &new_stage, sub_head, b);
-                        if !pc.comm_aware {
-                            comm = StepCost { ef: 0.0, eb: 0.0, ta: 0.0, exec: false };
-                        }
-                        // Assemble steps; dominant step re-derived inside
-                        // round_latency per Eq. (11).
-                        let mut steps = Vec::with_capacity(sub.steps.len() + 2);
-                        steps.push(exec_cost);
-                        steps.push(comm);
-                        steps.extend_from_slice(&sub.steps);
-                        let latency = round_latency(&steps, m);
-                        if best.as_ref().map_or(true, |e| latency < e.latency) {
-                            let mut stages = Vec::with_capacity(sub.stages.len() + 1);
-                            stages.push(new_stage);
-                            stages.extend_from_slice(&sub.stages);
-                            best = Some(QEntry { stages, steps, latency });
+                        scratch.clear();
+                        scratch.push(pr.cost);
+                        scratch.push(comm);
+                        push_chain(&arena, sub.node, &mut scratch);
+                        let latency = round_latency(&scratch, m);
+                        if latency < best_lat {
+                            best_lat = latency;
+                            best = Some((i as u32, j as u32, de as u32, pr.cost, comm, sub.node));
                         }
                     }
                 }
-                q[l][n][p] = best;
+                if let Some((i, j, de, exec, comm, sub_node)) = best {
+                    arena.push(Node {
+                        i,
+                        j,
+                        ds: ds as u32,
+                        de,
+                        kp: kp as u32,
+                        parent: sub_node,
+                        exec,
+                        comm,
+                    });
+                    cells[cell_idx(l, ri, p)] =
+                        Cell { latency: best_lat, node: (arena.len() - 1) as u32 };
+                }
             }
         }
     }
 
-    // min_p Q(L, N, p): analytic ranking, optionally re-ranked by the
-    // event-accurate simulator over the per-p finalists.
-    let finalists: Vec<&QEntry> = (1..=max_p)
-        .filter_map(|p| q[l_total][n_total][p].as_ref())
-        .collect();
+    // ---- finalists + selection ----------------------------------------
+    let top_ri = n_rungs - 1;
+    debug_assert_eq!(rungs[top_ri], n_total);
+    let mut finalists: Vec<(f64, u32)> = Vec::new();
+    for p in 1..=max_p {
+        let c = cells[cell_idx(l_total, top_ri, p)];
+        if c.node != NO_NODE {
+            finalists.push((c.latency, c.node));
+        }
+    }
     if finalists.is_empty() {
         bail!(
             "no feasible HPP plan: model {} does not fit on cluster {} \
@@ -267,54 +976,123 @@ pub fn plan_hpp(
             cluster.describe()
         );
     }
+    let mut scored: Vec<(f64, Plan)> = Vec::with_capacity(finalists.len());
+    for &(lat, node) in &finalists {
+        scored
+            .push((lat, reconstruct_plan(&arena, &order, table, cluster, model, cfg, pc, node)?));
+    }
     // Price each finalist under the run's policy with the
     // event-accurate executor: sim_select ranks (plan, policy) pairs,
     // so a zero-bubble or fill-drain run picks the stage split that is
-    // best *under that ordering*, not under an assumed 1F1B.
-    // `sim::price_policy` prices bounded-staleness policies in steady
-    // state (multi-round, barrier-free), so an async run's finalists
-    // are ranked by the throughput it will actually sustain.
-    let best: &QEntry = if pc.sim_select && finalists.len() > 1 {
-        let scored = finalists.iter().map(|e| {
-            let plan = Plan { stages: e.stages.clone(), microbatch: b, num_micro: m };
-            let lat =
-                crate::sim::price_policy(table, cluster, model, &plan, pc.policy).round_latency;
-            (lat, *e)
-        });
-        scored
-            .min_by(|x, y| x.0.partial_cmp(&y.0).unwrap())
-            .unwrap()
-            .1
+    // best *under that ordering*, not under an assumed 1F1B.  Prices
+    // go through the pricer's sim cache, so replans re-pricing an
+    // unchanged finalist hit instead of re-simulating.  Both branches
+    // keep the *last* of equal minima, like `Iterator::min_by` did.
+    let best_idx = if pc.sim_select && scored.len() > 1 {
+        let mut bi = 0usize;
+        let mut bl = f64::INFINITY;
+        for (idx, (_, plan)) in scored.iter().enumerate() {
+            let lat = pricer.sim.price(table, cluster, model, plan, pc.policy).round_latency;
+            if lat <= bl {
+                bl = lat;
+                bi = idx;
+            }
+        }
+        bi
     } else {
-        *finalists
-            .iter()
-            .min_by(|x, y| x.latency.partial_cmp(&y.latency).unwrap())
-            .unwrap()
+        let mut bi = 0usize;
+        for idx in 0..scored.len() {
+            if scored[idx].0 <= scored[bi].0 {
+                bi = idx;
+            }
+        }
+        bi
     };
-
-    let plan = Plan {
-        stages: best.stages.clone(),
-        microbatch: b,
-        num_micro: m,
-    };
+    let (latency, plan) = scored.swap_remove(best_idx);
     plan.validate(model, cluster)?;
     let schedule = Schedule::for_sim(&plan, model, pc.policy);
-    let latency = best.latency;
-    Ok(PlanOutcome {
+    let outcome = PlanOutcome {
         predicted_throughput: plan.samples_per_round() as f64 / latency,
         predicted_latency: latency,
         planning_time_s: t0.elapsed().as_secs_f64(),
         schedule,
         policy: pc.policy,
         plan,
-    })
+    };
+    let state = DpState { order, rungs, cells, arena, pricer, fp, l_total, max_p };
+    Ok((outcome, state))
+}
+
+/// Run Algorithm 2 and return the best plan over all stage counts.
+pub fn plan_hpp(
+    table: &ProfileTable,
+    cluster: &ClusterSpec,
+    model: &ModelDesc,
+    cfg: &TrainConfig,
+    pc: &PlannerConfig,
+) -> Result<PlanOutcome> {
+    plan_hpp_core(table, cluster, model, cfg, pc, None, None).map(|(o, _)| o)
+}
+
+/// [`plan_hpp`], additionally returning the [`DpState`] for later
+/// incremental replans.
+pub fn plan_hpp_with_state(
+    table: &ProfileTable,
+    cluster: &ClusterSpec,
+    model: &ModelDesc,
+    cfg: &TrainConfig,
+    pc: &PlannerConfig,
+) -> Result<(PlanOutcome, DpState)> {
+    plan_hpp_core(table, cluster, model, cfg, pc, None, None)
+}
+
+/// Plan over a subset of the cluster's devices, in original device-id
+/// space (the emitted plan's device ids index `cluster` directly — no
+/// sub-cluster remapping).  `devices` must be distinct ids; order does
+/// not matter.
+pub fn plan_hpp_subset(
+    table: &ProfileTable,
+    cluster: &ClusterSpec,
+    model: &ModelDesc,
+    cfg: &TrainConfig,
+    pc: &PlannerConfig,
+    devices: &[usize],
+) -> Result<(PlanOutcome, DpState)> {
+    plan_hpp_core(table, cluster, model, cfg, pc, Some(devices), None)
+}
+
+/// Replan after removing one device from a previous run's device set,
+/// reusing that run's DP cells and stage prices where valid.  The
+/// result is **bit-for-bit identical** to a full
+/// [`plan_hpp_subset`] rebuild over the survivors (the property test
+/// in `tests/fleet_planning.rs` asserts it): reused cells cover device
+/// suffixes the removal cannot have touched, and both paths walk the
+/// same candidate sets in the same order with the same arithmetic.
+/// When `prev` is incompatible — different model, cluster, config, or
+/// not a single-device removal — the fast path silently degrades to a
+/// full rebuild (still reusing memoized prices when only the device
+/// set changed).
+pub fn plan_hpp_incremental(
+    prev: &DpState,
+    table: &ProfileTable,
+    cluster: &ClusterSpec,
+    model: &ModelDesc,
+    cfg: &TrainConfig,
+    pc: &PlannerConfig,
+    removed: usize,
+) -> Result<(PlanOutcome, DpState)> {
+    let keep: Vec<usize> = prev.order.iter().copied().filter(|&d| d != removed).collect();
+    plan_hpp_core(table, cluster, model, cfg, pc, Some(&keep), Some(prev))
 }
 
 /// Sweep candidate micro-batch sizes and return the best plan overall.
 /// The paper's profiler measures every batch size precisely because
 /// execution time is non-linear in B (Fig. 6) — which micro-batch wins
 /// depends on the cluster; this makes B a planned quantity rather than
-/// a hyper-parameter.
+/// a hyper-parameter.  Candidates share one stage pricer (B and M are
+/// part of the memo key), so batch-independent infeasibilities and the
+/// sim cache carry across the sweep instead of re-profiling from
+/// scratch per candidate.
 pub fn plan_hpp_sweep_microbatch(
     table: &ProfileTable,
     cluster: &ClusterSpec,
@@ -325,18 +1103,22 @@ pub fn plan_hpp_sweep_microbatch(
 ) -> Result<PlanOutcome> {
     let t0 = Instant::now();
     let mut best: Option<PlanOutcome> = None;
+    let mut carry: Option<DpState> = None;
     for &b in candidates {
         if b == 0 || b > minibatch {
             continue;
         }
         let cfg = TrainConfig::new(minibatch, b);
-        if let Ok(out) = plan_hpp(table, cluster, model, &cfg, pc) {
+        if let Ok((out, state)) =
+            plan_hpp_core(table, cluster, model, &cfg, pc, None, carry.as_ref())
+        {
             if best
                 .as_ref()
                 .map_or(true, |bst| out.predicted_throughput > bst.predicted_throughput)
             {
                 best = Some(out);
             }
+            carry = Some(state);
         }
     }
     let mut best = best.ok_or_else(|| {
@@ -345,7 +1127,6 @@ pub fn plan_hpp_sweep_microbatch(
     best.planning_time_s = t0.elapsed().as_secs_f64();
     Ok(best)
 }
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -588,5 +1369,111 @@ mod tests {
             fast.predicted_throughput,
             slow.predicted_throughput
         );
+    }
+
+    #[test]
+    fn device_rungs_exact_below_threshold() {
+        // At or below the threshold: every count (the exact regime).
+        assert_eq!(device_rungs(6, 32), vec![1, 2, 3, 4, 5, 6]);
+        assert_eq!(device_rungs(32, 32), (1..=32).collect::<Vec<_>>());
+        // Above: dense 1..=16, then geometric, always ending at n.
+        let r = device_rungs(128, 32);
+        assert_eq!(&r[..16], &(1..=16).collect::<Vec<_>>()[..]);
+        assert_eq!(*r.last().unwrap(), 128);
+        assert!(r.windows(2).all(|w| w[0] < w[1]), "sorted, deduped: {r:?}");
+        // Ladder values below n are fleet-size independent: the 512
+        // ladder restricted to <=128 equals the 128 ladder minus its
+        // own terminal rung (cell-reuse relies on this).
+        let r512: Vec<usize> = device_rungs(512, 32).into_iter().filter(|&x| x < 128).collect();
+        assert_eq!(r512, r[..r.len() - 1].to_vec());
+    }
+
+    #[test]
+    fn order_tie_break_is_total_and_stable_under_removal() {
+        // Env A is all-Nano: every device ties on memory and FLOPS, so
+        // the id tie-break must produce ascending ids — and removing
+        // any one device must not reorder the survivors.
+        let cluster = ClusterSpec::env("A", 100.0).unwrap();
+        let all: Vec<usize> = (0..cluster.n()).collect();
+        let order = sorted_device_order(&cluster, &all);
+        assert_eq!(order, all, "equal devices sort by ascending id");
+        for &gone in &all {
+            let keep: Vec<usize> = all.iter().copied().filter(|&d| d != gone).collect();
+            let sub = sorted_device_order(&cluster, &keep);
+            let expect: Vec<usize> = order.iter().copied().filter(|&d| d != gone).collect();
+            assert_eq!(sub, expect, "removal of {gone} must not reorder survivors");
+        }
+    }
+
+    #[test]
+    fn with_state_matches_plain_plan() {
+        let model = zoo::mobilenet_v2();
+        let cluster = ClusterSpec::env("C", 100.0).unwrap();
+        let table = ProfileTable::new(&cluster, &model);
+        let cfg = TrainConfig::new(256, 16);
+        let pc = PlannerConfig::default();
+        let plain = plan_hpp(&table, &cluster, &model, &cfg, &pc).unwrap();
+        let (stateful, state) =
+            plan_hpp_with_state(&table, &cluster, &model, &cfg, &pc).unwrap();
+        assert_eq!(plain.plan, stateful.plan);
+        assert_eq!(
+            plain.predicted_latency.to_bits(),
+            stateful.predicted_latency.to_bits()
+        );
+        assert_eq!(state.order().len(), cluster.n());
+        assert!(state.memo_entries() > 0 && state.arena_nodes() > 0);
+    }
+
+    #[test]
+    fn subset_plan_uses_only_subset_devices() {
+        let model = zoo::mobilenet_v2();
+        let cluster = ClusterSpec::env("C", 100.0).unwrap();
+        let table = ProfileTable::new(&cluster, &model);
+        let cfg = TrainConfig::new(256, 16);
+        let pc = PlannerConfig::default();
+        let subset = [0usize, 2, 3, 5];
+        let (out, state) =
+            plan_hpp_subset(&table, &cluster, &model, &cfg, &pc, &subset).unwrap();
+        out.plan.validate(&model, &cluster).unwrap();
+        for d in out.plan.devices() {
+            assert!(subset.contains(&d), "plan uses non-subset device {d}");
+        }
+        assert_eq!(state.order().len(), subset.len());
+    }
+
+    #[test]
+    fn incremental_replan_matches_full_rebuild_env_c() {
+        // The delta-update-equals-rebuild contract, exhaustively over
+        // every single-device removal from env C: the incremental
+        // replan must emit the *identical* plan and analytic latency
+        // (to the bit) as a from-scratch subset rebuild.
+        let model = zoo::mobilenet_v2();
+        let cluster = ClusterSpec::env("C", 100.0).unwrap();
+        let table = ProfileTable::new(&cluster, &model);
+        let cfg = TrainConfig::new(256, 16);
+        let pc = PlannerConfig::default();
+        let (_, state) = plan_hpp_with_state(&table, &cluster, &model, &cfg, &pc).unwrap();
+        for gone in 0..cluster.n() {
+            let keep: Vec<usize> = (0..cluster.n()).filter(|&d| d != gone).collect();
+            let full = plan_hpp_subset(&table, &cluster, &model, &cfg, &pc, &keep);
+            let fast = plan_hpp_incremental(&state, &table, &cluster, &model, &cfg, &pc, gone);
+            match (full, fast) {
+                (Ok((f, _)), Ok((i, inc_state))) => {
+                    assert_eq!(f.plan, i.plan, "removal of {gone}: plans diverge");
+                    assert_eq!(
+                        f.predicted_latency.to_bits(),
+                        i.predicted_latency.to_bits(),
+                        "removal of {gone}: latency diverges"
+                    );
+                    assert_eq!(inc_state.order().len(), keep.len());
+                }
+                (Err(_), Err(_)) => {} // both infeasible is also agreement
+                (full, fast) => panic!(
+                    "removal of {gone}: feasibility diverges (full ok={}, incremental ok={})",
+                    full.is_ok(),
+                    fast.is_ok()
+                ),
+            }
+        }
     }
 }

@@ -21,7 +21,10 @@ pub mod plan;
 
 pub use alloc::{allocate_microbatch, AllocOpts};
 pub use cost::{plan_steps, predicted_throughput, round_latency, StepCost};
-pub use dp::{plan_hpp, plan_hpp_sweep_microbatch, PlanOutcome, PlannerConfig};
+pub use dp::{
+    device_rungs, plan_hpp, plan_hpp_incremental, plan_hpp_subset, plan_hpp_sweep_microbatch,
+    plan_hpp_with_state, sorted_device_order, DpState, PlanOutcome, PlannerConfig, StagePricer,
+};
 pub use plan::{KpPolicy, Plan, Stage};
 
 use anyhow::{Context, Result};
@@ -107,6 +110,36 @@ impl Planner {
                 "HetPipe is hybrid data parallelism (HDP), not an HPP plan; \
                  use planner::baselines::plan_hetpipe for its analytic result"
             ),
+        }
+    }
+
+    /// [`Planner::plan`], additionally returning the planner's
+    /// [`DpState`] when the method runs Algorithm 2 (`Asteroid` /
+    /// `Custom`) — the state the session keeps so a later device
+    /// failure can take [`plan_hpp_incremental`]'s fast path.  Baseline
+    /// planners have no reusable DP state and return `None`.
+    pub fn plan_with_state(
+        &self,
+        table: &ProfileTable,
+        cluster: &ClusterSpec,
+        model: &ModelDesc,
+        cfg: &TrainConfig,
+        policy: &'static dyn SchedulePolicy,
+    ) -> Result<(PlanOutcome, Option<DpState>)> {
+        match *self {
+            Planner::Asteroid | Planner::Baseline(Method::Asteroid) => plan_hpp_with_state(
+                table,
+                cluster,
+                model,
+                cfg,
+                &PlannerConfig { policy, ..PlannerConfig::default() },
+            )
+            .map(|(o, s)| (o, Some(s))),
+            Planner::Custom(pc) => {
+                plan_hpp_with_state(table, cluster, model, cfg, &PlannerConfig { policy, ..pc })
+                    .map(|(o, s)| (o, Some(s)))
+            }
+            _ => self.plan(table, cluster, model, cfg, policy).map(|o| (o, None)),
         }
     }
 }

@@ -105,6 +105,20 @@ impl ProfileTable {
         self.time_fwd(d, i, j, beta) + self.time_bwd(d, i, j, beta)
     }
 
+    /// Total forward FLOPs of layers [i, j) (prefix-sum difference).
+    /// Exposed so the planner can form closed-form lower bounds on
+    /// stage execution time without enumerating allocations.
+    pub fn flops_fwd_range(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i <= j && j <= self.num_layers);
+        self.ff[j] - self.ff[i]
+    }
+
+    /// Total backward FLOPs of layers [i, j).
+    pub fn flops_bwd_range(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i <= j && j <= self.num_layers);
+        self.fb[j] - self.fb[i]
+    }
+
     /// Computing capacity v_d of Eq. (9): inverse FP+BP time over the
     /// stage's layers with a full micro-batch.
     pub fn capacity(&self, d: usize, i: usize, j: usize, micro: usize) -> f64 {

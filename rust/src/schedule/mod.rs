@@ -201,6 +201,10 @@ pub struct Schedule {
 /// which micros a slot runs, its per-micro sample share, and the peer
 /// fan-out toward the previous/next stage.  Gradient routing is always
 /// the mirror of activation routing, so two direction queries suffice.
+/// Peer queries fill a caller-provided buffer (cleared first): the
+/// build loop runs them once per compute task, and for both routers
+/// the peer *count* is micro-independent — which also lets the builder
+/// pre-size each timeline's task vector exactly.
 trait Router {
     /// Micro ids assigned to (stage, slot), ascending.
     fn assign(&self, p: usize, slot: usize) -> Vec<usize>;
@@ -208,10 +212,10 @@ trait Router {
     fn share(&self, p: usize, slot: usize) -> usize;
     /// Previous-stage peers feeding (stage, slot) for `micro`:
     /// (device, bytes).  Also the Gradient-Send fan-out of Bwd.
-    fn from_prev(&self, p: usize, slot: usize, micro: usize) -> Vec<(usize, u64)>;
+    fn from_prev_into(&self, p: usize, slot: usize, micro: usize, out: &mut Vec<(usize, u64)>);
     /// Next-stage peers fed by (stage, slot) for `micro`.  Also the
     /// Gradient-Recv fan-in of Bwd.
-    fn to_next(&self, p: usize, slot: usize, micro: usize) -> Vec<(usize, u64)>;
+    fn to_next_into(&self, p: usize, slot: usize, micro: usize, out: &mut Vec<(usize, u64)>);
     /// Ring-AllReduce payload of stage `p` (0 if unknown at build time).
     fn allreduce_bytes(&self, p: usize) -> u64;
 }
@@ -228,13 +232,15 @@ struct SampleShardRouter<'a> {
 
 impl<'a> SampleShardRouter<'a> {
     fn new(plan: &'a Plan, model: &'a ModelDesc) -> Self {
-        let routes = plan
-            .stages
-            .windows(2)
-            .map(|w| {
-                let a = model.boundary_bytes(w[0].layers.1); // per sample
-                let from_ranges = ranges(&w[0].alloc);
-                let to_ranges = ranges(&w[1].alloc);
+        // Two range buffers reused across every adjacent stage pair.
+        let mut from_ranges: Vec<(usize, usize)> = Vec::new();
+        let mut to_ranges: Vec<(usize, usize)> = Vec::new();
+        let mut routes = Vec::with_capacity(plan.stages.len().saturating_sub(1));
+        for w in plan.stages.windows(2) {
+            let a = model.boundary_bytes(w[0].layers.1); // per sample
+            ranges_into(&w[0].alloc, &mut from_ranges);
+            ranges_into(&w[1].alloc, &mut to_ranges);
+            routes.push(
                 from_ranges
                     .iter()
                     .map(|fr| {
@@ -243,9 +249,9 @@ impl<'a> SampleShardRouter<'a> {
                             .map(|tr| a * overlap(*fr, *tr) as u64)
                             .collect()
                     })
-                    .collect()
-            })
-            .collect();
+                    .collect(),
+            );
+        }
         SampleShardRouter { plan, model, routes }
     }
 }
@@ -263,24 +269,28 @@ impl Router for SampleShardRouter<'_> {
         self.plan.stages[p].alloc[slot]
     }
 
-    fn from_prev(&self, p: usize, slot: usize, _micro: usize) -> Vec<(usize, u64)> {
+    fn from_prev_into(&self, p: usize, slot: usize, _micro: usize, out: &mut Vec<(usize, u64)>) {
+        out.clear();
         let prev = &self.plan.stages[p - 1];
-        prev.devices
-            .iter()
-            .enumerate()
-            .map(|(fs, &fd)| (fd, self.routes[p - 1][fs][slot]))
-            .filter(|&(_, bytes)| bytes > 0)
-            .collect()
+        out.extend(
+            prev.devices
+                .iter()
+                .enumerate()
+                .map(|(fs, &fd)| (fd, self.routes[p - 1][fs][slot]))
+                .filter(|&(_, bytes)| bytes > 0),
+        );
     }
 
-    fn to_next(&self, p: usize, slot: usize, _micro: usize) -> Vec<(usize, u64)> {
+    fn to_next_into(&self, p: usize, slot: usize, _micro: usize, out: &mut Vec<(usize, u64)>) {
+        out.clear();
         let next = &self.plan.stages[p + 1];
-        next.devices
-            .iter()
-            .enumerate()
-            .map(|(ts, &td)| (td, self.routes[p][slot][ts]))
-            .filter(|&(_, bytes)| bytes > 0)
-            .collect()
+        out.extend(
+            next.devices
+                .iter()
+                .enumerate()
+                .map(|(ts, &td)| (td, self.routes[p][slot][ts]))
+                .filter(|&(_, bytes)| bytes > 0),
+        );
     }
 
     fn allreduce_bytes(&self, p: usize) -> u64 {
@@ -309,14 +319,16 @@ impl Router for RoundRobinRouter<'_> {
         }
     }
 
-    fn from_prev(&self, p: usize, _slot: usize, micro: usize) -> Vec<(usize, u64)> {
+    fn from_prev_into(&self, p: usize, _slot: usize, micro: usize, out: &mut Vec<(usize, u64)>) {
+        out.clear();
         let prev = &self.plan.stages[p - 1];
-        vec![(prev.devices[micro % prev.devices.len()], 0)]
+        out.push((prev.devices[micro % prev.devices.len()], 0));
     }
 
-    fn to_next(&self, p: usize, _slot: usize, micro: usize) -> Vec<(usize, u64)> {
+    fn to_next_into(&self, p: usize, _slot: usize, micro: usize, out: &mut Vec<(usize, u64)>) {
+        out.clear();
         let next = &self.plan.stages[p + 1];
-        vec![(next.devices[micro % next.devices.len()], 0)]
+        out.push((next.devices[micro % next.devices.len()], 0));
     }
 
     fn allreduce_bytes(&self, _p: usize) -> u64 {
@@ -382,13 +394,21 @@ impl Schedule {
         // Per-micro weight updates only under bounded staleness;
         // synchronous rounds accumulate and keep version 0 throughout.
         let versioned = policy.max_staleness() > 0;
-        let mut timelines = Vec::new();
+        let mut timelines =
+            Vec::with_capacity(plan.stages.iter().map(|s| s.devices.len()).sum());
+        // Peer scratch reused across every task emission below.
+        let mut peers: Vec<(usize, u64)> = Vec::new();
         for (p, stage) in plan.stages.iter().enumerate() {
             for (slot, &d) in stage.devices.iter().enumerate() {
-                let base = router.assign(p, slot);
-                let mut micros = base.clone();
+                // Round r repeats the base assignment offset by
+                // r * m_total; extend in place instead of cloning.
+                let mut micros = router.assign(p, slot);
+                let base_len = micros.len();
                 for r in 1..rounds {
-                    micros.extend(base.iter().map(|&m| m + r * m_total));
+                    for i in 0..base_len {
+                        let m = micros[i] + r * m_total;
+                        micros.push(m);
+                    }
                 }
                 let mut ops = policy.compute_order(&micros, stage.kp);
                 // The per-round admission window — what the planner's
@@ -398,18 +418,54 @@ impl Schedule {
                 // per-round load would otherwise admit more in-flight
                 // micros across the round boundary than any budget
                 // ever priced, so the chained order is re-windowed.
-                let round_kp = policy.effective_kp(stage.kp, base.len());
+                let round_kp = policy.effective_kp(stage.kp, base_len);
                 if rounds > 1 {
                     ops = rewindow(ops, round_kp);
                 }
-                let mut tasks = Vec::with_capacity(4 * ops.len() + 1);
+                // Both routers' peer counts are micro-independent, so
+                // one probe prices the exact task count: each Fwd/Bwd
+                // is 1 compute + fanin + fanout transfers, each BwdW is
+                // 1, plus the closing AllReduce on multi-device stages.
+                let (fanin, fanout) = match micros.first() {
+                    Some(&m0) => {
+                        let m0 = m0 % m_total;
+                        let fanin = if p > 0 {
+                            router.from_prev_into(p, slot, m0, &mut peers);
+                            peers.len()
+                        } else {
+                            0
+                        };
+                        let fanout = if p + 1 < n_stages {
+                            router.to_next_into(p, slot, m0, &mut peers);
+                            peers.len()
+                        } else {
+                            0
+                        };
+                        (fanin, fanout)
+                    }
+                    None => (0, 0),
+                };
+                let (mut nf, mut nb, mut nw) = (0usize, 0usize, 0usize);
+                for op in &ops {
+                    match op {
+                        ComputeOp::Fwd(_) => nf += 1,
+                        ComputeOp::Bwd(_) => nb += 1,
+                        ComputeOp::BwdW(_) => nw += 1,
+                    }
+                }
+                let cap = nf * (1 + fanin + fanout)
+                    + nb * (1 + fanin + fanout)
+                    + nw
+                    + usize::from(stage.devices.len() > 1);
+                let mut tasks = Vec::with_capacity(cap);
                 let mut updates = 0usize; // backwards applied so far
                 let mut read_version: HashMap<usize, usize> = HashMap::new();
                 for op in ops {
                     match op {
                         ComputeOp::Fwd(m) => {
                             if p > 0 {
-                                for (from, bytes) in router.from_prev(p, slot, m % m_total) {
+                                router.from_prev_into(p, slot, m % m_total, &mut peers);
+                                for &(from, bytes) in &peers {
                                     tasks.push(Task::Recv {
                                         micro: m,
                                         from,
@@ -422,7 +478,8 @@ impl Schedule {
                             read_version.insert(m, version);
                             tasks.push(Task::Fwd { micro: m, version });
                             if p + 1 < n_stages {
-                                for (to, bytes) in router.to_next(p, slot, m % m_total) {
+                                router.to_next_into(p, slot, m % m_total, &mut peers);
+                                for &(to, bytes) in &peers {
                                     tasks.push(Task::Send {
                                         micro: m,
                                         to,
@@ -434,7 +491,8 @@ impl Schedule {
                         }
                         ComputeOp::Bwd(m) => {
                             if p + 1 < n_stages {
-                                for (from, bytes) in router.to_next(p, slot, m % m_total) {
+                                router.to_next_into(p, slot, m % m_total, &mut peers);
+                                for &(from, bytes) in &peers {
                                     tasks.push(Task::Recv {
                                         micro: m,
                                         from,
@@ -451,7 +509,8 @@ impl Schedule {
                                 updates += 1;
                             }
                             if p > 0 {
-                                for (to, bytes) in router.from_prev(p, slot, m % m_total) {
+                                router.from_prev_into(p, slot, m % m_total, &mut peers);
+                                for &(to, bytes) in &peers {
                                     tasks.push(Task::Send {
                                         micro: m,
                                         to,
@@ -474,13 +533,18 @@ impl Schedule {
                         bytes: router.allreduce_bytes(p) * rounds as u64,
                     });
                 }
+                debug_assert_eq!(
+                    tasks.len(),
+                    cap,
+                    "task emission must match the pre-sized capacity"
+                );
                 timelines.push(DeviceTimeline {
                     device: d,
                     stage: p,
                     slot,
                     share: router.share(p, slot),
                     kp: round_kp,
-                    stash_copies: policy.weight_stash_copies(stage.kp, base.len()),
+                    stash_copies: policy.weight_stash_copies(stage.kp, base_len),
                     tasks,
                 });
             }
@@ -887,12 +951,20 @@ fn warmup_prefix(tl: &DeviceTimeline) -> Vec<usize> {
 /// [(0,3), (3,8)] (Fig. 10 routing).
 pub(crate) fn ranges(alloc: &[usize]) -> Vec<(usize, usize)> {
     let mut out = Vec::with_capacity(alloc.len());
+    ranges_into(alloc, &mut out);
+    out
+}
+
+/// [`ranges`] into a caller-provided buffer (cleared first), so hot
+/// paths can reuse one allocation across many stage windows.
+pub(crate) fn ranges_into(alloc: &[usize], out: &mut Vec<(usize, usize)>) {
+    out.clear();
+    out.reserve(alloc.len());
     let mut start = 0;
     for &y in alloc {
         out.push((start, start + y));
         start += y;
     }
-    out
 }
 
 pub(crate) fn overlap(a: (usize, usize), b: (usize, usize)) -> usize {

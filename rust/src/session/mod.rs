@@ -54,12 +54,13 @@ use anyhow::{Context, Result};
 
 use crate::config::{ClusterSpec, TrainConfig};
 use crate::fault::{
-    heavy_reschedule, lightweight_replay, HeartbeatCfg, RecoveryReport,
+    heavy_reschedule, heavy_reschedule_incremental, lightweight_replay, HeartbeatCfg,
+    RecoveryReport,
 };
 use crate::model::from_manifest::{Manifest, ManifestModel};
 use crate::model::{zoo, ModelDesc};
 use crate::pipeline::OptimizerCfg;
-use crate::planner::dp::PlanOutcome;
+use crate::planner::dp::{DpState, PlanOutcome};
 use crate::planner::{Plan, Planner};
 use crate::profiler::ProfileTable;
 use crate::runtime::Tensor;
@@ -94,6 +95,14 @@ pub enum RecoveryKind {
     /// Baseline: gather all weights, re-run the full planner on the
     /// strongest remaining device, redistribute everything.
     Heavy,
+    /// Heavy rescheduling through the planner's incremental fast
+    /// path: the same full-quality Algorithm-2 replan, but seeded with
+    /// the session's retained [`DpState`] so only the DP cells the
+    /// removal invalidated are recomputed (bit-for-bit the same plan;
+    /// see `fault::heavy_reschedule_incremental`).  Falls back to a
+    /// full rebuild when the session has no state — e.g. a baseline
+    /// planner built it.
+    HeavyIncremental,
 }
 
 /// Declarative device-exit injection: *what* fails, *when*, and *how*
@@ -160,6 +169,12 @@ impl FaultSpec {
     /// Shorthand for the heavy-rescheduling baseline.
     pub fn heavy(self) -> FaultSpec {
         self.with_recovery(RecoveryKind::Heavy)
+    }
+
+    /// Shorthand for heavy rescheduling through the planner's
+    /// incremental fast path (see [`RecoveryKind::HeavyIncremental`]).
+    pub fn heavy_incremental(self) -> FaultSpec {
+        self.with_recovery(RecoveryKind::HeavyIncremental)
     }
 
     /// Override the heartbeat timing (beat interval, miss threshold,
@@ -440,9 +455,12 @@ impl SessionBuilder {
         let table = ProfileTable::new(&cluster, &model);
         // The session's policy governs planning too: memory budgets,
         // sim_select pricing and the outcome schedule all honour it.
-        let outcome = self
+        // Algorithm-2 planners also hand back their DP state, which
+        // the session retains so a device-exit recovery can take the
+        // incremental replan fast path.
+        let (outcome, dp_state) = self
             .planner
-            .plan(&table, &cluster, &model, &cfg, self.policy)
+            .plan_with_state(&table, &cluster, &model, &cfg, self.policy)
             .with_context(|| format!("planning ({})", self.planner.describe()))?;
         let schedule = outcome.schedule.clone();
 
@@ -460,6 +478,7 @@ impl SessionBuilder {
             manifest_model,
             outcome,
             schedule,
+            dp_state: dp_state.map(std::sync::Arc::new),
         })
     }
 }
@@ -483,6 +502,9 @@ pub struct Session {
     manifest_model: Option<ManifestModel>,
     outcome: PlanOutcome,
     schedule: Schedule,
+    /// Retained Algorithm-2 planner state (`None` for baseline
+    /// planners): the seed for incremental replans on device exit.
+    dp_state: Option<std::sync::Arc<DpState>>,
 }
 
 impl Session {
@@ -551,6 +573,12 @@ impl Session {
     /// sample-sharded form — what [`SimBackend`] prices).
     pub fn schedule(&self) -> &Schedule {
         &self.schedule
+    }
+
+    /// The retained Algorithm-2 planner state, when the session's
+    /// planner produced one (the incremental-replan seed).
+    pub fn dp_state(&self) -> Option<&DpState> {
+        self.dp_state.as_deref()
     }
 
     /// The weight-version stash ring depth the session's policy
@@ -627,6 +655,18 @@ impl Session {
                 &spec.heartbeat,
                 self.policy,
             ),
+            RecoveryKind::HeavyIncremental => heavy_reschedule_incremental(
+                &self.table,
+                &self.cluster,
+                &self.model,
+                &self.cfg,
+                self.plan(),
+                failed,
+                &spec.heartbeat,
+                self.policy,
+                self.dp_state.as_deref(),
+            )
+            .map(|(report, _)| report),
         }
     }
 
@@ -742,6 +782,47 @@ mod tests {
         // Post-fault rounds are priced on the recovery plan.
         assert_eq!(lite.round_secs.len(), 8);
         assert_ne!(lite.round_secs[0], lite.round_secs[7]);
+    }
+
+    #[test]
+    fn heavy_incremental_recovery_matches_heavy_plan() {
+        // The session retains the planner's DP state and the
+        // incremental recovery replans to the *same* plan as the heavy
+        // baseline — only the replan cost path differs.
+        let base = Session::builder()
+            .model("efficientnet-b1")
+            .cluster(ClusterSpec::env("D", 100.0).unwrap())
+            .train(TrainConfig::new(256, 16))
+            .steps(8)
+            .build()
+            .unwrap();
+        assert!(base.dp_state().is_some(), "Asteroid sessions retain DP state");
+        let heavy = base
+            .clone()
+            .with_fault(FaultSpec::last_planned().after(3).heavy())
+            .run(&mut SimBackend::default())
+            .unwrap();
+        let inc = base
+            .with_fault(FaultSpec::last_planned().after(3).heavy_incremental())
+            .run(&mut SimBackend::default())
+            .unwrap();
+        let (h, i) = (&heavy.recoveries[0].report, &inc.recoveries[0].report);
+        assert_eq!(i.mechanism, "heavy-incremental");
+        assert_eq!(i.new_plan, h.new_plan);
+        // Baseline-planned sessions have no DP state and still recover
+        // (full-rebuild fallback inside the fast path).
+        let baseline = Session::builder()
+            .model("efficientnet-b1")
+            .cluster(ClusterSpec::env("D", 100.0).unwrap())
+            .train(TrainConfig::new(256, 16))
+            .planner(Planner::Baseline(Method::Dapple))
+            .fault(FaultSpec::last_planned().after(3).heavy_incremental())
+            .steps(8)
+            .build()
+            .unwrap();
+        assert!(baseline.dp_state().is_none());
+        let rep = baseline.run(&mut SimBackend::default()).unwrap();
+        assert_eq!(rep.recoveries[0].report.mechanism, "heavy-incremental");
     }
 
     #[test]

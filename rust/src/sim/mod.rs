@@ -156,6 +156,93 @@ pub fn price_policy(
     sim
 }
 
+/// Memo for repeated [`price_policy`] calls over identical
+/// (plan, policy) pairs.  `sim_select` prices up to `max_stages`
+/// finalists per planning run, and replans — micro-batch sweeps,
+/// fault-time incremental replans — re-price mostly-identical
+/// finalists.  The cache keys on an FNV fingerprint of the plan and
+/// policy name, with full `Plan` equality verified on hit, so a hit is
+/// exact, never heuristic.  Prices are only valid for the
+/// (table, cluster, model) the cache was populated under — callers
+/// thread one cache per planning context (`planner::StagePricer` owns
+/// one and `plan_hpp` threads it through replans).
+#[derive(Debug, Clone, Default)]
+pub struct PriceCache {
+    entries: std::collections::HashMap<u64, Vec<(Plan, &'static str, SimResult)>>,
+    hits: u64,
+}
+
+impl PriceCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Exact-hit count so far (observability for bench/test assertions).
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    fn fingerprint(plan: &Plan, policy: &str) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325_u64;
+        let mut put = |h: &mut u64, x: u64| {
+            *h ^= x;
+            *h = h.wrapping_mul(0x0100_0000_01b3);
+        };
+        put(&mut h, plan.microbatch as u64);
+        put(&mut h, plan.num_micro as u64);
+        for s in &plan.stages {
+            put(&mut h, s.layers.0 as u64);
+            put(&mut h, s.layers.1 as u64);
+            put(&mut h, s.kp as u64);
+            for &d in &s.devices {
+                put(&mut h, d as u64);
+            }
+            for &a in &s.alloc {
+                put(&mut h, a as u64);
+            }
+        }
+        for c in policy.bytes() {
+            put(&mut h, c as u64);
+        }
+        h
+    }
+
+    /// [`price_policy`] through the cache.
+    pub fn price(
+        &mut self,
+        table: &ProfileTable,
+        cluster: &ClusterSpec,
+        model: &ModelDesc,
+        plan: &Plan,
+        policy: &dyn SchedulePolicy,
+    ) -> SimResult {
+        let name = policy.name();
+        let key = Self::fingerprint(plan, name);
+        if let Some(list) = self.entries.get(&key) {
+            if let Some((_, _, r)) = list.iter().find(|(p, n, _)| *n == name && p == plan) {
+                self.hits += 1;
+                return r.clone();
+            }
+        }
+        let r = price_policy(table, cluster, model, plan, policy);
+        self.entries.entry(key).or_default().push((plan.clone(), name, r.clone()));
+        r
+    }
+}
+
+/// [`price_policy`] through a [`PriceCache`] — the memoized entry the
+/// planner's `sim_select` uses across finalists and replans.
+pub fn price_policy_cached(
+    cache: &mut PriceCache,
+    table: &ProfileTable,
+    cluster: &ClusterSpec,
+    model: &ModelDesc,
+    plan: &Plan,
+    policy: &dyn SchedulePolicy,
+) -> SimResult {
+    cache.price(table, cluster, model, plan, policy)
+}
+
 /// Price an explicit sample-sharded `Schedule` against the profile and
 /// link models.  Panics if the schedule deadlocks (i.e. it would fail
 /// `Schedule::validate`) — callers price planner/policy output, which

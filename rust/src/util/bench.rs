@@ -95,9 +95,42 @@ impl Bencher {
     }
 }
 
+/// Deterministic synthetic fleet for scale benchmarks: `n` devices
+/// cycling nano/nano/tx2/nx (a 2:1:1 heterogeneous mix) on a uniform
+/// `mbps` link.  Pure function of its arguments, so the 128/512/2048
+/// bench shapes and the CI budget gate always price the same topology.
+pub fn synthetic_fleet(n: usize, mbps: f64) -> crate::config::ClusterSpec {
+    use crate::config::DeviceKind;
+    const CYCLE: [DeviceKind; 4] = [
+        DeviceKind::JetsonNano,
+        DeviceKind::JetsonNano,
+        DeviceKind::JetsonTX2,
+        DeviceKind::JetsonNX,
+    ];
+    let kinds: Vec<DeviceKind> = (0..n).map(|i| CYCLE[i % CYCLE.len()]).collect();
+    crate::config::ClusterSpec::uniform(&kinds, mbps)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn synthetic_fleet_is_deterministic_and_cycles_kinds() {
+        let a = synthetic_fleet(128, 100.0);
+        let b = synthetic_fleet(128, 100.0);
+        assert_eq!(a.devices.len(), 128);
+        for (da, db) in a.devices.iter().zip(&b.devices) {
+            assert_eq!(da.kind, db.kind);
+            assert_eq!(da.id, db.id);
+        }
+        use crate::config::DeviceKind;
+        assert_eq!(a.devices[0].kind, DeviceKind::JetsonNano);
+        assert_eq!(a.devices[1].kind, DeviceKind::JetsonNano);
+        assert_eq!(a.devices[2].kind, DeviceKind::JetsonTX2);
+        assert_eq!(a.devices[3].kind, DeviceKind::JetsonNX);
+        assert_eq!(a.devices[4].kind, DeviceKind::JetsonNano);
+    }
 
     #[test]
     fn benches_and_records() {

@@ -1,0 +1,178 @@
+//! Fleet-scale planning invariants (the PR-6 tentpole's contracts):
+//!
+//! 1. **Incremental replan equivalence** — after any single-device
+//!    removal, `plan_hpp_incremental` (which reuses the previous run's
+//!    DP cells and memoized stage prices) must be *bit-for-bit*
+//!    identical to a cold `plan_hpp_subset` rebuild over the survivors,
+//!    across schedule policies, cluster shapes and removal positions.
+//! 2. **Memoized pricer fidelity** — `StagePricer::stage_cost` must
+//!    return exactly the `StepCost` the un-memoized
+//!    `allocate_microbatch` + `exec_times_parts` + `allreduce_time_parts`
+//!    path produces, and repeat queries must come from the memo.
+
+use asteroid::config::{ClusterSpec, TrainConfig};
+use asteroid::model::zoo;
+use asteroid::planner::cost::{allreduce_time_parts, exec_times_parts};
+use asteroid::planner::{
+    allocate_microbatch, plan_hpp_incremental, plan_hpp_subset, plan_hpp_with_state,
+    sorted_device_order, AllocOpts, PlannerConfig, StagePricer,
+};
+use asteroid::profiler::ProfileTable;
+use asteroid::prop_assert;
+use asteroid::schedule::policy_by_name;
+use asteroid::util::bench::synthetic_fleet;
+use asteroid::util::proptest::check;
+
+/// Policy × cluster × removal-position sweep: the incremental fast
+/// path must never change the plan, only the time it takes to find it.
+#[test]
+fn incremental_replan_equals_full_rebuild() {
+    const POLICIES: [&str; 4] = ["1f1b-kp", "gpipe-fill-drain", "zb-h1", "async:1"];
+    const ENVS: [&str; 4] = ["A", "B", "C", "D"];
+    let model = zoo::mobilenet_v2();
+    check(
+        24,
+        |rng| {
+            // Half the cases exercise the paper's testbed envs, half a
+            // heterogeneous synthetic fleet (8-12 devices) — big enough
+            // to hit multi-device stage groups, small enough to sweep.
+            let env = if rng.below(2) == 0 {
+                ENVS[rng.below(ENVS.len())].to_string()
+            } else {
+                format!("fleet:{}", 8 + rng.below(5))
+            };
+            let policy = POLICIES[rng.below(POLICIES.len())];
+            let removal_seed = rng.below(64);
+            (env, policy, removal_seed)
+        },
+        |case| {
+            let (env, policy_name, removal_seed) = (&case.0, case.1, case.2);
+            let cluster = match env.strip_prefix("fleet:") {
+                Some(n) => synthetic_fleet(n.parse().unwrap(), 100.0),
+                None => ClusterSpec::env(env, 100.0).unwrap(),
+            };
+            let table = ProfileTable::new(&cluster, &model);
+            let cfg = TrainConfig::new(128, 16);
+            let policy = policy_by_name(policy_name).unwrap();
+            let pc = PlannerConfig { policy, ..PlannerConfig::default() };
+
+            let (_, state) = plan_hpp_with_state(&table, &cluster, &model, &cfg, &pc)
+                .map_err(|e| format!("initial plan failed: {e}"))?;
+            let removed = state.order()[removal_seed % state.order().len()];
+            let keep: Vec<usize> =
+                state.order().iter().copied().filter(|&d| d != removed).collect();
+
+            let inc = plan_hpp_incremental(&state, &table, &cluster, &model, &cfg, &pc, removed);
+            let full = plan_hpp_subset(&table, &cluster, &model, &cfg, &pc, &keep);
+            match (inc, full) {
+                (Ok((i, _)), Ok((f, _))) => {
+                    prop_assert!(
+                        i.plan == f.plan,
+                        "plans diverge after removing {removed}:\n inc {:?}\n full {:?}",
+                        i.plan,
+                        f.plan
+                    );
+                    prop_assert!(
+                        i.predicted_latency.to_bits() == f.predicted_latency.to_bits(),
+                        "latency diverges: inc {} vs full {}",
+                        i.predicted_latency,
+                        f.predicted_latency
+                    );
+                    Ok(())
+                }
+                (Err(_), Err(_)) => Ok(()), // both infeasible: consistent
+                (inc, full) => Err(format!(
+                    "feasibility diverges after removing {removed}: inc ok={}, full ok={}",
+                    inc.is_ok(),
+                    full.is_ok()
+                )),
+            }
+        },
+    );
+}
+
+/// `StagePricer::stage_cost` vs the raw pricing path on every
+/// (layer-range, group-size) candidate of the env-C chain: identical
+/// bits, and the second sweep served entirely from the memo.
+#[test]
+fn memoized_pricer_matches_unmemoized_path_env_c() {
+    let cluster = ClusterSpec::env("C", 100.0).unwrap();
+    let model = zoo::mobilenet_v2();
+    let table = ProfileTable::new(&cluster, &model);
+    let cfg = TrainConfig::new(128, 16);
+    let pc = PlannerConfig::default();
+    let m = cfg.num_microbatches();
+    let b = cfg.microbatch;
+    let ids: Vec<usize> = (0..cluster.n()).collect();
+    let order = sorted_device_order(&cluster, &ids);
+    let nl = model.num_layers();
+
+    let mut pricer = StagePricer::new();
+    let mut candidates = 0usize;
+    for g in 1..=order.len() {
+        let devices = &order[..g];
+        for i in (0..nl).step_by(7) {
+            for j in ((i + 1)..=nl).step_by(5) {
+                let kp = (m / 2).max(1);
+                let memoized = pricer
+                    .stage_cost(&table, &cluster, &model, &cfg, &pc, i, j, devices, kp);
+
+                // The raw path, exactly as the pre-memo planner priced it.
+                let eff_kp = pc.policy.effective_kp(kp, m);
+                let opts = AllocOpts {
+                    stash_copies: pc.policy.weight_stash_copies(kp, m),
+                    ..pc.alloc
+                };
+                let raw = allocate_microbatch(
+                    &table, &cluster, &model, &cfg, i, j, devices, b, eff_kp, opts,
+                )
+                .ok()
+                .map(|alloc| {
+                    let (ef, eb) = exec_times_parts(&table, i, j, devices, &alloc);
+                    let ta_raw = if g <= 1 {
+                        0.0
+                    } else {
+                        allreduce_time_parts(
+                            model.weight_bytes_range(i, j),
+                            g,
+                            cluster.min_bandwidth(devices),
+                        )
+                    };
+                    (ef, eb, if pc.comm_aware { ta_raw } else { 0.0 })
+                });
+
+                match (memoized, raw) {
+                    (Some(c), Some((ef, eb, ta))) => {
+                        assert_eq!(c.ef.to_bits(), ef.to_bits(), "ef differs at ({i},{j},{g})");
+                        assert_eq!(c.eb.to_bits(), eb.to_bits(), "eb differs at ({i},{j},{g})");
+                        assert_eq!(c.ta.to_bits(), ta.to_bits(), "ta differs at ({i},{j},{g})");
+                        assert!(c.exec);
+                    }
+                    (None, None) => {} // OOM is memoized too
+                    (memoized, raw) => panic!(
+                        "feasibility differs at ({i},{j},{g}): memo {} raw {}",
+                        memoized.is_some(),
+                        raw.is_some()
+                    ),
+                }
+                candidates += 1;
+            }
+        }
+    }
+    assert!(candidates > 50, "sweep too small: {candidates}");
+    assert_eq!(pricer.misses(), candidates as u64);
+
+    // Second identical sweep: pure memo hits, identical answers.
+    let misses_before = pricer.misses();
+    for g in 1..=order.len() {
+        let devices = &order[..g];
+        for i in (0..nl).step_by(7) {
+            for j in ((i + 1)..=nl).step_by(5) {
+                let kp = (m / 2).max(1);
+                pricer.stage_cost(&table, &cluster, &model, &cfg, &pc, i, j, devices, kp);
+            }
+        }
+    }
+    assert_eq!(pricer.misses(), misses_before, "second sweep must not recompute");
+    assert_eq!(pricer.hits(), candidates as u64);
+}
