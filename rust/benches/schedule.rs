@@ -12,6 +12,7 @@
 //!
 //!     cargo bench --bench schedule
 
+use asteroid::codec::{Codec, CodecSpec};
 use asteroid::config::{ClusterSpec, TrainConfig};
 use asteroid::model::{zoo, ModelDesc};
 use asteroid::planner::plan::{Plan, Stage};
@@ -20,7 +21,7 @@ use asteroid::planner::{
 };
 use asteroid::profiler::ProfileTable;
 use asteroid::schedule::{builtin_policies, policy_by_name, Schedule};
-use asteroid::sim::{price_policy, price_schedule, simulate_round};
+use asteroid::sim::{price_policy, price_policy_codec, price_schedule, simulate_round};
 use asteroid::util::bench::{synthetic_fleet, Bencher};
 
 /// The 512-device wall-clock budget asserted by CI: mean
@@ -140,6 +141,45 @@ fn main() {
         })
         .collect();
 
+    // Per-codec data-plane rows on the heterogeneous env-C chain
+    // (deterministic — priced, not timed): each codec plans its own
+    // wire-aware cut points, then the chosen plan is priced both at
+    // wire size (the codec's real round) and at fp32 (the logical
+    // bytes the same plan would move uncompressed), so the recorded
+    // compression ratio and latency win are explicit.
+    let codec_rows: Vec<String> = {
+        let ccluster = ClusterSpec::env("C", 100.0).unwrap();
+        let ctable = ProfileTable::new(&ccluster, &model);
+        let ccfg = TrainConfig::new(256, 16);
+        let policy = builtin_policies()[0];
+        Codec::ALL
+            .iter()
+            .map(|&c| {
+                let spec = CodecSpec::uniform(c);
+                let cpc = PlannerConfig { codec: spec, ..PlannerConfig::default() };
+                let out = plan_hpp(&ctable, &ccluster, &model, &ccfg, &cpc).unwrap();
+                let wire =
+                    price_policy_codec(&ctable, &ccluster, &model, &out.plan, policy, &spec);
+                let logical = price_policy_codec(
+                    &ctable,
+                    &ccluster,
+                    &model,
+                    &out.plan,
+                    policy,
+                    &CodecSpec::default(),
+                );
+                format!(
+                    "    {{\"codec\": \"{}\", \"round_latency_s\": {:e}, \
+                     \"wire_bytes_per_round\": {}, \"logical_bytes_per_round\": {}}}",
+                    c.name(),
+                    wire.round_latency,
+                    wire.bytes_on_network,
+                    logical.bytes_on_network
+                )
+            })
+            .collect()
+    };
+
     // ---- fleet-scale rows (tentpole: planning at 128/512/2048) --------
     // Single-iteration sampling: one fleet plan is seconds, not micros,
     // so calibration would only multiply the wall-clock.  The 2048 rows
@@ -199,12 +239,14 @@ fn main() {
          \"note\": \"plan rows are fleet-scale (synthetic_fleet topology); \
          plan_budget gates plan_hpp/fleet512 + schedule_build/fleet512 in CI\",\n  \
          \"results\": [\n{}\n  ],\n  \"policies\": [\n{}\n  ],\n  \
-         \"staleness\": [\n{}\n  ],\n  \"plan\": [\n{}\n  ],\n  \
+         \"staleness\": [\n{}\n  ],\n  \"codecs\": [\n{}\n  ],\n  \
+         \"plan\": [\n{}\n  ],\n  \
          \"plan_budget\": {{\"name\": \"fleet512_plan_plus_build\", \
          \"budget_s\": {FLEET_BUDGET_S}, \"measured_s\": {measured_s:e}}}\n}}\n",
         rows.join(",\n"),
         policy_rows.join(",\n"),
         staleness_rows.join(",\n"),
+        codec_rows.join(",\n"),
         plan_rows.join(",\n")
     );
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_schedule.json");

@@ -1,0 +1,657 @@
+//! The compressed data plane: per-link wire codecs priced end-to-end.
+//!
+//! Asteroid's HPP-Round latency (Eq. 4-6) is dominated on real edge
+//! links by activation/gradient transfer, and AccEPT-style activation
+//! quantization attacks exactly that term.  This module owns the codec
+//! taxonomy once, for every byte-touching layer:
+//!
+//! * [`Codec`] — one wire format for a stream of f32 values: `fp32`
+//!   passthrough, `fp16` (IEEE half), `bf16` (truncated f32), `int8`
+//!   (per-tensor affine quantization with a stored scale/zero-point
+//!   header);
+//! * [`CodecSpec`] — the per-link assignment: one uniform default
+//!   (`--codec <name>`) plus optional per-boundary overrides
+//!   (`--codec fp32,12=int8`), `Copy` so it travels inside
+//!   `PlannerConfig` and `Planner` unchanged;
+//! * exact wire accounting: [`Codec::wire_bytes`] maps logical tensor
+//!   bytes (via `DType::size_bytes`) to on-the-wire bytes, and the
+//!   planner cost model, `sim::price_policy` and the RPC byte meters
+//!   all consume it — so the DP optimizes cut points for the bytes
+//!   that actually cross the link.
+//!
+//! Non-f32 tensors (i32 targets) always pass through uncompressed:
+//! lossy codecs are defined over f32 streams only.
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::from_manifest::DType;
+use crate::runtime::{Tensor, TensorData};
+
+// ------------------------------------------------------------- Codec
+
+/// One wire format for a stream of f32 values.  The `u8` tags are the
+/// wire encoding (frame codec tag) — append-only, never renumber.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Codec {
+    /// Raw little-endian f32 (exact; the only format prior wire
+    /// versions spoke).
+    #[default]
+    Fp32,
+    /// IEEE 754 binary16, round-to-nearest-even.  2 bytes/element.
+    Fp16,
+    /// bfloat16: f32 truncated to its top 16 bits (round-to-nearest-
+    /// even).  2 bytes/element, f32's full exponent range.
+    Bf16,
+    /// Per-tensor affine u8 quantization: an 8-byte header (scale f32,
+    /// zero-point f32) + 1 byte/element.  `q = round((x - zero)/scale)`
+    /// saturating to [0, 255]; non-finite values clamp (NaN/-inf -> 0,
+    /// +inf -> 255).
+    Int8,
+}
+
+/// Bytes of the int8 per-tensor header (scale f32 + zero-point f32).
+pub const INT8_HEADER_BYTES: u64 = 8;
+
+impl Codec {
+    pub const ALL: [Codec; 4] = [Codec::Fp32, Codec::Fp16, Codec::Bf16, Codec::Int8];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Codec::Fp32 => "fp32",
+            Codec::Fp16 => "fp16",
+            Codec::Bf16 => "bf16",
+            Codec::Int8 => "int8",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Codec> {
+        Ok(match s {
+            "fp32" => Codec::Fp32,
+            "fp16" => Codec::Fp16,
+            "bf16" => Codec::Bf16,
+            "int8" => Codec::Int8,
+            other => bail!("unknown codec {other:?} (fp32|fp16|bf16|int8)"),
+        })
+    }
+
+    /// Wire tag (frame codec byte).
+    pub fn tag(self) -> u8 {
+        match self {
+            Codec::Fp32 => 0,
+            Codec::Fp16 => 1,
+            Codec::Bf16 => 2,
+            Codec::Int8 => 3,
+        }
+    }
+
+    pub fn from_tag(tag: u8) -> Result<Codec> {
+        Ok(match tag {
+            0 => Codec::Fp32,
+            1 => Codec::Fp16,
+            2 => Codec::Bf16,
+            3 => Codec::Int8,
+            other => bail!("unknown codec tag {other}"),
+        })
+    }
+
+    /// Encoded payload bytes for `n` f32 elements (excluding any
+    /// element-count prefix the framing adds).
+    pub fn payload_bytes(self, n: usize) -> usize {
+        match self {
+            Codec::Fp32 => 4 * n,
+            Codec::Fp16 | Codec::Bf16 => 2 * n,
+            Codec::Int8 => INT8_HEADER_BYTES as usize + n,
+        }
+    }
+
+    /// Exact wire bytes for `logical_bytes` of `dtype` data.  Lossy
+    /// codecs are defined over f32 only — any other dtype passes
+    /// through unchanged, and `Fp32` is the identity, so fp32 pricing
+    /// is bit-compatible with the uncompressed cost model.
+    pub fn wire_bytes(self, logical_bytes: u64, dtype: DType) -> u64 {
+        if dtype != DType::F32 || self == Codec::Fp32 {
+            return logical_bytes;
+        }
+        let n = logical_bytes / DType::F32.size_bytes() as u64;
+        self.payload_bytes(n as usize) as u64
+    }
+
+    /// Append the encoded form of `v` to `out`.
+    pub fn encode_f32s(self, v: &[f32], out: &mut Vec<u8>) {
+        match self {
+            Codec::Fp32 => {
+                out.reserve(4 * v.len());
+                for x in v {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            Codec::Fp16 => {
+                out.reserve(2 * v.len());
+                for &x in v {
+                    out.extend_from_slice(&f32_to_f16_bits(x).to_le_bytes());
+                }
+            }
+            Codec::Bf16 => {
+                out.reserve(2 * v.len());
+                for &x in v {
+                    out.extend_from_slice(&f32_to_bf16_bits(x).to_le_bytes());
+                }
+            }
+            Codec::Int8 => encode_int8(v, out),
+        }
+    }
+
+    /// Decode exactly `n` f32 elements from `bytes`
+    /// (`bytes.len() == self.payload_bytes(n)`, checked).
+    pub fn decode_f32s(self, n: usize, bytes: &[u8]) -> Result<Vec<f32>> {
+        if bytes.len() != self.payload_bytes(n) {
+            bail!(
+                "codec {}: payload is {} bytes, {n} elements need {}",
+                self.name(),
+                bytes.len(),
+                self.payload_bytes(n)
+            );
+        }
+        Ok(match self {
+            Codec::Fp32 => bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect(),
+            Codec::Fp16 => bytes
+                .chunks_exact(2)
+                .map(|c| f16_bits_to_f32(u16::from_le_bytes(c.try_into().unwrap())))
+                .collect(),
+            Codec::Bf16 => bytes
+                .chunks_exact(2)
+                .map(|c| bf16_bits_to_f32(u16::from_le_bytes(c.try_into().unwrap())))
+                .collect(),
+            Codec::Int8 => {
+                let scale = f32::from_le_bytes(bytes[0..4].try_into().unwrap());
+                let zero = f32::from_le_bytes(bytes[4..8].try_into().unwrap());
+                bytes[8..].iter().map(|&q| zero + q as f32 * scale).collect()
+            }
+        })
+    }
+
+    /// What the receiving stage computes on: encode-then-decode.  The
+    /// in-process engine uses this at its data-plane send so both live
+    /// paths see exactly the wire's numerics; `Fp32` and non-f32
+    /// tensors pass through untouched.
+    pub fn transcode(self, t: &Tensor) -> Tensor {
+        match (&t.data, self) {
+            (TensorData::F32(v), c) if c != Codec::Fp32 => {
+                let mut buf = Vec::new();
+                c.encode_f32s(v, &mut buf);
+                let back = c.decode_f32s(v.len(), &buf).expect("self-roundtrip");
+                Tensor::from_f32(&t.shape, back)
+            }
+            _ => t.clone(),
+        }
+    }
+}
+
+// ---------------------------------------------------------- CodecSpec
+
+/// Upper bound on per-boundary overrides (keeps [`CodecSpec`] `Copy`
+/// so it rides inside `PlannerConfig`/`Planner` unchanged).
+pub const MAX_OVERRIDES: usize = 8;
+
+/// The per-link codec assignment: a uniform default plus optional
+/// per-boundary overrides keyed by the model boundary index `j` (the
+/// activation cut after layer `j`; a gradient crossing the same cut
+/// uses the same codec, as it rides the same link).  Driver-mediated
+/// sync traffic (`SyncRequest`/`SyncResult` flats) and the Eq. 5
+/// AllReduce term use the default codec.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CodecSpec {
+    default: Codec,
+    overrides: [(u32, Codec); MAX_OVERRIDES],
+    n_overrides: u8,
+}
+
+impl Default for CodecSpec {
+    fn default() -> Self {
+        CodecSpec::uniform(Codec::Fp32)
+    }
+}
+
+impl CodecSpec {
+    /// One codec on every link.
+    pub fn uniform(codec: Codec) -> CodecSpec {
+        CodecSpec {
+            default: codec,
+            overrides: [(0, Codec::Fp32); MAX_OVERRIDES],
+            n_overrides: 0,
+        }
+    }
+
+    /// Parse `"<default>[,<boundary>=<codec>]*"`, e.g. `"int8"` or
+    /// `"fp32,12=int8,20=fp16"`.
+    pub fn parse(s: &str) -> Result<CodecSpec> {
+        let mut parts = s.split(',');
+        let mut spec =
+            CodecSpec::uniform(Codec::parse(parts.next().context("empty codec spec")?.trim())?);
+        for part in parts {
+            let (b, c) = part
+                .split_once('=')
+                .with_context(|| format!("override {part:?} is not <boundary>=<codec>"))?;
+            let boundary: usize =
+                b.trim().parse().with_context(|| format!("bad boundary index {b:?}"))?;
+            spec = spec.with_override(boundary, Codec::parse(c.trim())?)?;
+        }
+        Ok(spec)
+    }
+
+    /// Override the codec at model boundary `j` (builder-style).
+    pub fn with_override(mut self, boundary: usize, codec: Codec) -> Result<CodecSpec> {
+        for slot in self.overrides.iter_mut().take(self.n_overrides as usize) {
+            if slot.0 as usize == boundary {
+                slot.1 = codec;
+                return Ok(self);
+            }
+        }
+        if (self.n_overrides as usize) >= MAX_OVERRIDES {
+            bail!("at most {MAX_OVERRIDES} per-boundary codec overrides");
+        }
+        self.overrides[self.n_overrides as usize] = (boundary as u32, codec);
+        self.n_overrides += 1;
+        Ok(self)
+    }
+
+    /// The codec on the link crossing model boundary `j`.
+    pub fn at_boundary(&self, j: usize) -> Codec {
+        self.overrides
+            .iter()
+            .take(self.n_overrides as usize)
+            .find(|(b, _)| *b as usize == j)
+            .map(|(_, c)| *c)
+            .unwrap_or(self.default)
+    }
+
+    /// Uniform default (driver feeds + sync traffic).
+    pub fn default_codec(&self) -> Codec {
+        self.default
+    }
+
+    /// Codec of the driver-mediated group sync / Eq. 5 AllReduce.
+    pub fn sync(&self) -> Codec {
+        self.default
+    }
+
+    /// True when every link is raw fp32 — wire == logical everywhere.
+    pub fn is_identity(&self) -> bool {
+        self.default == Codec::Fp32
+            && self.overrides.iter().take(self.n_overrides as usize).all(|(_, c)| *c == Codec::Fp32)
+    }
+
+    /// Wire bytes of an f32 activation/gradient tensor crossing model
+    /// boundary `j`.
+    pub fn wire_activation_bytes(&self, j: usize, logical_bytes: u64) -> u64 {
+        self.at_boundary(j).wire_bytes(logical_bytes, DType::F32)
+    }
+
+    /// Wire bytes of an f32 sync/AllReduce buffer.
+    pub fn wire_sync_bytes(&self, logical_bytes: u64) -> u64 {
+        self.sync().wire_bytes(logical_bytes, DType::F32)
+    }
+
+    /// FNV-1a fingerprint over the canonical (sorted) link assignment —
+    /// the component planner memo keys (`StagePricer`, DP state
+    /// fingerprints, `sim::PriceCache`) mix in so prices computed under
+    /// one codec spec can never answer a query under another.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325_u64;
+        let mut put = |h: &mut u64, x: u64| {
+            *h ^= x;
+            *h = h.wrapping_mul(0x0100_0000_01b3);
+        };
+        put(&mut h, self.default.tag() as u64);
+        let mut ovr: Vec<(u32, Codec)> =
+            self.overrides.iter().take(self.n_overrides as usize).copied().collect();
+        ovr.sort_unstable_by_key(|(b, _)| *b);
+        for (b, c) in ovr {
+            put(&mut h, b as u64 + 1);
+            put(&mut h, c.tag() as u64);
+        }
+        h
+    }
+
+    /// Canonical display form, parseable by [`CodecSpec::parse`].
+    pub fn describe(&self) -> String {
+        let mut ovr: Vec<(u32, Codec)> =
+            self.overrides.iter().take(self.n_overrides as usize).copied().collect();
+        ovr.sort_unstable_by_key(|(b, _)| *b);
+        let mut s = self.default.name().to_string();
+        for (b, c) in ovr {
+            s.push_str(&format!(",{}={}", b, c.name()));
+        }
+        s
+    }
+}
+
+// ------------------------------------------------ scalar conversions
+
+/// f32 -> IEEE binary16 bits, round-to-nearest-even; NaN stays NaN
+/// (quietened), overflow saturates to +/-inf.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let b = x.to_bits();
+    let sign = ((b >> 16) & 0x8000) as u16;
+    let exp = (b >> 23) & 0xff;
+    let man = b & 0x007f_ffff;
+    if exp == 0xff {
+        return sign | 0x7c00 | if man != 0 { 0x0200 } else { 0 };
+    }
+    let e = exp as i32 - 127 + 15;
+    if e >= 0x1f {
+        return sign | 0x7c00;
+    }
+    if e <= 0 {
+        if e < -10 {
+            return sign; // underflow to signed zero
+        }
+        // Subnormal: shift the implicit-bit mantissa into 10 bits.
+        let m = man | 0x0080_0000;
+        let shift = (14 - e) as u32;
+        let mut v = m >> shift;
+        let rem = m & ((1u32 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        if rem > half || (rem == half && v & 1 == 1) {
+            v += 1;
+        }
+        return sign | v as u16;
+    }
+    let mut v = ((e as u32) << 10) | (man >> 13);
+    let rem = man & 0x1fff;
+    if rem > 0x1000 || (rem == 0x1000 && v & 1 == 1) {
+        v += 1; // a carry into the exponent is correct rounding
+    }
+    sign | v as u16
+}
+
+/// IEEE binary16 bits -> f32 (exact).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = (h >> 10) & 0x1f;
+    let man = (h & 0x3ff) as u32;
+    if exp == 0x1f {
+        return f32::from_bits(sign | 0x7f80_0000 | (man << 13));
+    }
+    if exp == 0 {
+        // Subnormal (or zero): value = man * 2^-24, exactly
+        // representable in f32.
+        let v = man as f32 / 16_777_216.0;
+        return if sign != 0 { -v } else { v };
+    }
+    f32::from_bits(sign | ((exp as u32 + 127 - 15) << 23) | (man << 13))
+}
+
+/// f32 -> bfloat16 bits: truncate to the top 16 bits with
+/// round-to-nearest-even; NaN keeps a mantissa bit set.
+pub fn f32_to_bf16_bits(x: f32) -> u16 {
+    let b = x.to_bits();
+    if x.is_nan() {
+        return ((b >> 16) as u16) | 0x0040;
+    }
+    let round = ((b >> 16) & 1) + 0x7fff;
+    (b.wrapping_add(round) >> 16) as u16
+}
+
+/// bfloat16 bits -> f32 (exact).
+pub fn bf16_bits_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+/// Per-tensor affine u8 quantization over the finite value range.
+/// Header: scale f32 LE, zero-point f32 LE.  A tensor with no finite
+/// values (or a constant one) degenerates to scale 1.0 around its
+/// zero-point, so decode is still well-defined.
+fn encode_int8(v: &[f32], out: &mut Vec<u8>) {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &x in v {
+        if x.is_finite() {
+            lo = lo.min(x);
+            hi = hi.max(x);
+        }
+    }
+    if !lo.is_finite() {
+        lo = 0.0;
+        hi = 0.0;
+    }
+    let scale = if hi > lo { (hi - lo) / 255.0 } else { 1.0 };
+    out.reserve(INT8_HEADER_BYTES as usize + v.len());
+    out.extend_from_slice(&scale.to_le_bytes());
+    out.extend_from_slice(&lo.to_le_bytes());
+    for &x in v {
+        // Saturating float->int cast: NaN and -inf -> 0, +inf -> 255.
+        let q = ((x - lo) / scale).round() as u8;
+        out.push(q);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    fn roundtrip(codec: Codec, v: &[f32]) -> Vec<f32> {
+        let mut buf = Vec::new();
+        codec.encode_f32s(v, &mut buf);
+        assert_eq!(buf.len(), codec.payload_bytes(v.len()), "{}", codec.name());
+        codec.decode_f32s(v.len(), &buf).unwrap()
+    }
+
+    #[test]
+    fn fp32_is_exact_passthrough() {
+        let v = [0.0f32, -1.5, f32::NAN, f32::INFINITY, f32::MIN_POSITIVE, 1e-42];
+        let back = roundtrip(Codec::Fp32, &v);
+        for (a, b) in v.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(Codec::Fp32.wire_bytes(400, DType::F32), 400);
+    }
+
+    #[test]
+    fn wire_bytes_accounting() {
+        // 100 f32 elements = 400 logical bytes.
+        assert_eq!(Codec::Fp16.wire_bytes(400, DType::F32), 200);
+        assert_eq!(Codec::Bf16.wire_bytes(400, DType::F32), 200);
+        assert_eq!(Codec::Int8.wire_bytes(400, DType::F32), 100 + INT8_HEADER_BYTES);
+        // Non-f32 dtypes pass through uncompressed.
+        assert_eq!(Codec::Int8.wire_bytes(400, DType::S32), 400);
+        // Empty tensors still pay the int8 header.
+        assert_eq!(Codec::Int8.wire_bytes(0, DType::F32), INT8_HEADER_BYTES);
+        assert_eq!(Codec::Fp16.wire_bytes(0, DType::F32), 0);
+    }
+
+    #[test]
+    fn half_conversions_match_known_bit_patterns() {
+        // (f32, f16 bits): exact cases from the IEEE 754 tables.
+        for (x, bits) in [
+            (0.0f32, 0x0000u16),
+            (-0.0, 0x8000),
+            (1.0, 0x3c00),
+            (-2.0, 0xc000),
+            (65504.0, 0x7bff),  // largest finite half
+            (65536.0, 0x7c00),  // overflow -> inf
+            (6.1035156e-5, 0x0400), // smallest normal
+            (5.9604645e-8, 0x0001), // smallest subnormal
+            (f32::INFINITY, 0x7c00),
+        ] {
+            assert_eq!(f32_to_f16_bits(x), bits, "f32_to_f16({x})");
+        }
+        for bits in [0x0000u16, 0x8000, 0x3c00, 0xc000, 0x7bff, 0x0400, 0x0001, 0x03ff] {
+            assert_eq!(
+                f32_to_f16_bits(f16_bits_to_f32(bits)),
+                bits,
+                "f16 bits {bits:#06x} must roundtrip exactly"
+            );
+        }
+        assert!(f16_bits_to_f32(0x7e00).is_nan());
+        assert!(f32_to_f16_bits(f32::NAN) & 0x7c00 == 0x7c00);
+        assert!(f32_to_f16_bits(f32::NAN) & 0x03ff != 0, "NaN must stay NaN");
+    }
+
+    #[test]
+    fn bf16_truncation_is_faithful() {
+        assert_eq!(f32_to_bf16_bits(1.0), 0x3f80);
+        assert_eq!(bf16_bits_to_f32(0x3f80), 1.0);
+        assert_eq!(f32_to_bf16_bits(f32::INFINITY), 0x7f80);
+        assert!(bf16_bits_to_f32(f32_to_bf16_bits(f32::NAN)).is_nan());
+        // Round-to-nearest-even at the truncation boundary.
+        let x = f32::from_bits(0x3f80_8000); // exactly halfway
+        assert_eq!(f32_to_bf16_bits(x), 0x3f80, "ties to even");
+        let y = f32::from_bits(0x3f80_8001); // just above halfway
+        assert_eq!(f32_to_bf16_bits(y), 0x3f81);
+    }
+
+    #[test]
+    fn int8_handles_non_finite_and_clamp_boundaries() {
+        // Finite range [0, 255] makes scale exactly 1.0, so the clamp
+        // boundaries decode bit-exactly.
+        let v = [f32::NAN, f32::INFINITY, f32::NEG_INFINITY, 0.0, 255.0, 127.5];
+        let back = roundtrip(Codec::Int8, &v);
+        assert_eq!(back[0], 0.0, "NaN saturates to q=0 -> lo");
+        assert_eq!(back[1], 255.0, "+inf clamps to hi");
+        assert_eq!(back[2], 0.0, "-inf clamps to lo");
+        assert_eq!(back[3], 0.0);
+        assert_eq!(back[4], 255.0);
+        // A mid value lands within scale/2 of itself (ties round even).
+        assert!((back[5] - 127.5).abs() <= 0.5, "{}", back[5]);
+        // General finite values stay within the scale/2 bound.
+        let w = [-3.0f32, -1.0, 0.0, 2.5, 5.0];
+        let wb = roundtrip(Codec::Int8, &w);
+        let scale = 8.0 / 255.0;
+        for (&a, &b) in w.iter().zip(&wb) {
+            assert!((a - b).abs() <= scale * 0.5 + 1e-5, "{a} -> {b}");
+        }
+        // All-non-finite and constant tensors stay well-defined.
+        assert_eq!(roundtrip(Codec::Int8, &[f32::NAN, f32::INFINITY]), vec![0.0, 255.0]);
+        assert_eq!(roundtrip(Codec::Int8, &[7.25; 4]), vec![7.25; 4]);
+    }
+
+    #[test]
+    fn empty_tensors_roundtrip_under_every_codec() {
+        for c in Codec::ALL {
+            assert_eq!(roundtrip(c, &[]), Vec::<f32>::new(), "{}", c.name());
+        }
+    }
+
+    /// Property: for every codec x shape, finite values roundtrip
+    /// within the codec's error bound (fp16 relative ~2^-11 within
+    /// range, bf16 relative ~2^-8, int8 absolute scale/2).
+    #[test]
+    fn roundtrip_error_bounded_per_codec() {
+        check(
+            48,
+            |rng| {
+                let n = [0usize, 1, 2, 7, 64, 1000][rng.below(6)];
+                let seed = rng.below(1 << 30) as u64;
+                let codec = Codec::ALL[rng.below(4)];
+                (n, seed, codec)
+            },
+            |&(n, seed, codec)| {
+                let mut rng = Rng::new(seed ^ 0xC0DEC);
+                let mut v = vec![0.0f32; n];
+                rng.fill_normal(&mut v, 3.0);
+                let back = roundtrip(codec, &v);
+                if back.len() != v.len() {
+                    return Err(format!("{}: length {} != {}", codec.name(), back.len(), n));
+                }
+                let (lo, hi) = v.iter().fold((f32::INFINITY, f32::NEG_INFINITY), |(l, h), &x| {
+                    (l.min(x), h.max(x))
+                });
+                let scale = if hi > lo { (hi - lo) / 255.0 } else { 1.0 };
+                for (&a, &b) in v.iter().zip(&back) {
+                    let tol = match codec {
+                        Codec::Fp32 => 0.0,
+                        Codec::Fp16 => a.abs() * 1e-3 + 1e-7,
+                        Codec::Bf16 => a.abs() * 8e-3 + 1e-7,
+                        // scale/2 quantization error + f32 arithmetic
+                        // slack in the decode's zero + q*scale.
+                        Codec::Int8 => scale * 0.5 + 1e-4,
+                    };
+                    if (a - b).abs() > tol {
+                        return Err(format!(
+                            "{}: {a} -> {b} exceeds tol {tol}",
+                            codec.name()
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn decode_rejects_wrong_payload_length() {
+        for c in [Codec::Fp16, Codec::Int8, Codec::Fp32] {
+            let mut buf = Vec::new();
+            c.encode_f32s(&[1.0, 2.0, 3.0], &mut buf);
+            buf.pop(); // truncate
+            assert!(c.decode_f32s(3, &buf).is_err(), "{} accepted truncation", c.name());
+        }
+        // int8 payloads shorter than their header are rejected, not
+        // panicked on.
+        assert!(Codec::Int8.decode_f32s(0, &[0u8; 4]).is_err());
+    }
+
+    #[test]
+    fn transcode_matches_roundtrip_and_passes_i32_through() {
+        let t = Tensor::from_f32(&[2, 3], vec![0.1, -0.2, 0.3, 1.0, -1.0, 0.0]);
+        let tc = Codec::Int8.transcode(&t);
+        assert_eq!(tc.shape, t.shape);
+        assert_eq!(tc.as_f32().unwrap(), roundtrip(Codec::Int8, t.as_f32().unwrap()));
+        let i = Tensor::from_i32(&[3], vec![1, -2, 3]);
+        assert_eq!(Codec::Int8.transcode(&i), i);
+        assert_eq!(Codec::Fp32.transcode(&t), t);
+    }
+
+    #[test]
+    fn spec_parse_overrides_and_fingerprint() {
+        let spec = CodecSpec::parse("fp32,12=int8,20=fp16").unwrap();
+        assert_eq!(spec.at_boundary(12), Codec::Int8);
+        assert_eq!(spec.at_boundary(20), Codec::Fp16);
+        assert_eq!(spec.at_boundary(5), Codec::Fp32);
+        assert_eq!(spec.sync(), Codec::Fp32);
+        assert!(!spec.is_identity());
+        assert_eq!(spec.describe(), "fp32,12=int8,20=fp16");
+        assert_eq!(CodecSpec::parse(&spec.describe()).unwrap(), spec);
+
+        let uni = CodecSpec::parse("int8").unwrap();
+        assert_eq!(uni, CodecSpec::uniform(Codec::Int8));
+        assert_eq!(uni.at_boundary(3), Codec::Int8);
+        assert!(CodecSpec::default().is_identity());
+
+        // Fingerprints separate distinct specs and ignore override order.
+        assert_ne!(spec.fingerprint(), uni.fingerprint());
+        assert_ne!(uni.fingerprint(), CodecSpec::default().fingerprint());
+        let swapped = CodecSpec::parse("fp32,20=fp16,12=int8").unwrap();
+        assert_eq!(spec.fingerprint(), swapped.fingerprint());
+
+        assert!(CodecSpec::parse("zstd").is_err());
+        assert!(CodecSpec::parse("fp32,x=int8").is_err());
+        assert!(CodecSpec::parse("fp32,3:int8").is_err());
+
+        // Override capacity is bounded (Copy-ability), and re-setting
+        // the same boundary replaces instead of consuming a slot.
+        let mut s = CodecSpec::uniform(Codec::Fp32);
+        for b in 0..MAX_OVERRIDES {
+            s = s.with_override(b, Codec::Int8).unwrap();
+        }
+        assert!(s.with_override(99, Codec::Fp16).is_err());
+        let r = s.with_override(0, Codec::Fp16).unwrap();
+        assert_eq!(r.at_boundary(0), Codec::Fp16);
+    }
+
+    #[test]
+    fn spec_wire_accounting_follows_links() {
+        let spec = CodecSpec::parse("fp32,4=int8").unwrap();
+        assert_eq!(spec.wire_activation_bytes(4, 4000), 1000 + INT8_HEADER_BYTES);
+        assert_eq!(spec.wire_activation_bytes(5, 4000), 4000);
+        assert_eq!(spec.wire_sync_bytes(4000), 4000);
+        let uni = CodecSpec::uniform(Codec::Fp16);
+        assert_eq!(uni.wire_sync_bytes(4000), 2000);
+    }
+}

@@ -28,6 +28,7 @@ use std::io::{Read, Write};
 
 use anyhow::{bail, Context, Result};
 
+use crate::codec::Codec;
 use crate::pipeline::optimizer::OptimizerCfg;
 use crate::pipeline::step::RefLayerSpec;
 use crate::runtime::{Tensor, TensorData};
@@ -36,7 +37,11 @@ use crate::schedule::ComputeOp;
 /// Frame magic: an `asteroid-worker` port answers nothing else.
 pub const MAGIC: [u8; 4] = *b"ASTR";
 /// Wire-format version; bumped on any incompatible codec change.
-pub const VERSION: u8 = 1;
+/// v2: f32 tensor payloads and Sync flats carry a wire-codec tag
+/// (fp32/fp16/bf16/int8 compressed data plane); `AssignSpec` carries
+/// the worker's per-boundary codecs; `RoundDone` carries data-plane
+/// byte meters.
+pub const VERSION: u8 = 2;
 /// Hard ceiling on one frame's payload (activations of deep stages
 /// stay far below this; anything larger is a framing error).
 pub const MAX_FRAME: usize = 256 << 20;
@@ -86,6 +91,12 @@ pub fn send_msg(w: &mut impl Write, msg: &RpcMsg) -> Result<()> {
     write_frame(w, &msg.encode())
 }
 
+/// [`send_msg`] compressing f32 tensor payloads / Sync flats with
+/// `codec` (the data-plane hot path; control messages are unaffected).
+pub fn send_msg_codec(w: &mut impl Write, msg: &RpcMsg, codec: Codec) -> Result<()> {
+    write_frame(w, &msg.encode_with(codec))
+}
+
 /// Receive + decode one message.
 pub fn recv_msg(r: &mut impl Read) -> Result<RpcMsg> {
     RpcMsg::decode(&read_frame(r)?)
@@ -128,23 +139,49 @@ impl Enc {
     pub fn f32s(&mut self, v: &[f32]) {
         // One reservation up front: these carry whole boundary tensors
         // on the data-plane hot path, and growth-reallocating per
-        // element would copy the buffer O(log n) times.
+        // element would copy the buffer O(log n) times.  Elements are
+        // staged through a fixed chunk so the buffer grows by bulk
+        // `extend_from_slice` calls, not 4-byte appends.
         self.buf.reserve(4 + 4 * v.len());
         self.u32(v.len() as u32);
-        for x in v {
-            self.buf.extend_from_slice(&x.to_le_bytes());
+        let mut tmp = [0u8; 4 * LE_CHUNK];
+        for chunk in v.chunks(LE_CHUNK) {
+            for (i, x) in chunk.iter().enumerate() {
+                tmp[4 * i..4 * i + 4].copy_from_slice(&x.to_le_bytes());
+            }
+            self.buf.extend_from_slice(&tmp[..4 * chunk.len()]);
         }
     }
 
     pub fn i32s(&mut self, v: &[i32]) {
         self.buf.reserve(4 + 4 * v.len());
         self.u32(v.len() as u32);
-        for x in v {
-            self.buf.extend_from_slice(&x.to_le_bytes());
+        let mut tmp = [0u8; 4 * LE_CHUNK];
+        for chunk in v.chunks(LE_CHUNK) {
+            for (i, x) in chunk.iter().enumerate() {
+                tmp[4 * i..4 * i + 4].copy_from_slice(&x.to_le_bytes());
+            }
+            self.buf.extend_from_slice(&tmp[..4 * chunk.len()]);
         }
     }
 
+    /// An f32 vector compressed with `codec` — self-describing on the
+    /// wire (element count, codec tag, codec payload), so the decoder
+    /// needs no side channel.
+    pub fn f32s_codec(&mut self, v: &[f32], codec: Codec) {
+        self.buf.reserve(5 + codec.payload_bytes(v.len()));
+        self.u32(v.len() as u32);
+        self.u8(codec.tag());
+        codec.encode_f32s(v, &mut self.buf);
+    }
+
     pub fn tensor(&mut self, t: &Tensor) {
+        self.tensor_codec(t, Codec::Fp32);
+    }
+
+    /// A tensor whose f32 payload is compressed with `codec` (i32
+    /// payloads pass through: lossy codecs are defined over f32 only).
+    pub fn tensor_codec(&mut self, t: &Tensor, codec: Codec) {
         self.u8(t.shape.len() as u8);
         for &d in &t.shape {
             self.u32(d as u32);
@@ -152,7 +189,7 @@ impl Enc {
         match &t.data {
             TensorData::F32(v) => {
                 self.u8(0);
-                self.f32s(v);
+                self.f32s_codec(v, codec);
             }
             TensorData::I32(v) => {
                 self.u8(1);
@@ -161,6 +198,9 @@ impl Enc {
         }
     }
 }
+
+/// Staging-chunk length (elements) for the bulk LE scalar copies.
+const LE_CHUNK: usize = 1024;
 
 /// Bounds-checked binary decoder over one frame payload.
 pub struct Dec<'a> {
@@ -237,19 +277,35 @@ impl<'a> Dec<'a> {
     pub fn f32s(&mut self) -> Result<Vec<f32>> {
         let n = self.u32()? as usize;
         let raw = self.take(n.checked_mul(4).context("f32 vec overflow")?)?;
-        Ok(raw
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-            .collect())
+        // Bulk decode into a pre-sized buffer (data-plane hot path).
+        let mut out = vec![0f32; n];
+        for (x, c) in out.iter_mut().zip(raw.chunks_exact(4)) {
+            *x = f32::from_le_bytes(c.try_into().unwrap());
+        }
+        Ok(out)
     }
 
     pub fn i32s(&mut self) -> Result<Vec<i32>> {
         let n = self.u32()? as usize;
         let raw = self.take(n.checked_mul(4).context("i32 vec overflow")?)?;
-        Ok(raw
-            .chunks_exact(4)
-            .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
-            .collect())
+        let mut out = vec![0i32; n];
+        for (x, c) in out.iter_mut().zip(raw.chunks_exact(4)) {
+            *x = i32::from_le_bytes(c.try_into().unwrap());
+        }
+        Ok(out)
+    }
+
+    /// Decode a codec-compressed f32 vector ([`Enc::f32s_codec`]) back
+    /// to f32 — every receiver computes on decoded values, whatever
+    /// the wire carried.
+    pub fn f32s_codec(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        let codec = Codec::from_tag(self.u8()?)?;
+        // Same overflow guard as `f32s`: the logical size must fit
+        // before any codec payload arithmetic.
+        n.checked_mul(4).context("f32 vec overflow")?;
+        let raw = self.take(codec.payload_bytes(n))?;
+        codec.decode_f32s(n, raw)
     }
 
     pub fn tensor(&mut self) -> Result<Tensor> {
@@ -261,7 +317,10 @@ impl<'a> Dec<'a> {
         let elems: usize = shape.iter().product();
         let tag = self.u8()?;
         let t = match tag {
-            0 => Tensor::from_f32(&shape, self.f32s()?),
+            // f32 payloads are self-describing (codec tag in-stream)
+            // and always decode to f32: receivers compute on decoded
+            // values, whatever the wire carried.
+            0 => Tensor::from_f32(&shape, self.f32s_codec()?),
             1 => Tensor::from_i32(&shape, self.i32s()?),
             other => bail!("unknown tensor dtype tag {other}"),
         };
@@ -326,6 +385,14 @@ pub struct AssignSpec {
     pub opt: OptimizerCfg,
     /// Worker -> driver heartbeat period, milliseconds.
     pub heartbeat_ms: u64,
+    /// Wire codec for outbound activations (this stage's output
+    /// boundary; the driver resolves it from the session's `CodecSpec`
+    /// and the plan's layer cuts).
+    pub codec_act: Codec,
+    /// Wire codec for outbound gradients (this stage's input boundary).
+    pub codec_grad: Codec,
+    /// Wire codec for SyncRequest/SyncResult flat buffers.
+    pub codec_sync: Codec,
     /// Reference-layer dimensions of this stage's layer range.
     pub layers: Vec<RefLayerSpec>,
     /// Data addresses of the next stage's slots (activation fan-out).
@@ -360,7 +427,18 @@ pub enum RpcMsg {
     /// Worker -> driver: periodic liveness beacon.
     Heartbeat { device: usize, seq: u64 },
     /// Worker -> driver: round finished on this worker.
-    RoundDone { device: usize, round: usize, loss_sum: f64, micros: usize, compute_s: f64 },
+    /// `logical_bytes`/`wire_bytes` meter the round's outbound
+    /// data-plane tensor payloads before/after the wire codec, so the
+    /// driver can report the measured compression ratio.
+    RoundDone {
+        device: usize,
+        round: usize,
+        loss_sum: f64,
+        micros: usize,
+        compute_s: f64,
+        logical_bytes: u64,
+        wire_bytes: u64,
+    },
     /// Worker -> driver: replicated-stage round sync contribution
     /// (kind 0 = summed gradients of a synchronous round, kind 1 =
     /// parameters for bounded-staleness averaging).
@@ -499,6 +577,15 @@ impl RpcMsg {
     }
 
     pub fn encode(&self) -> Vec<u8> {
+        self.encode_with(Codec::Fp32)
+    }
+
+    /// [`RpcMsg::encode`] with `codec` applied to the compressible
+    /// payloads: Act/Targets/Grad tensor data and Sync flats.  The wire
+    /// stays self-describing (the codec tag rides in the payload), so
+    /// `decode` needs no matching argument — receivers always get f32
+    /// back ("decode before compute").
+    pub fn encode_with(&self, codec: Codec) -> Vec<u8> {
         let mut e = Enc::default();
         match self {
             RpcMsg::Hello { role } => {
@@ -530,6 +617,9 @@ impl RpcMsg {
                 e.u64(a.seed);
                 enc_opt(&mut e, &a.opt);
                 e.u64(a.heartbeat_ms);
+                e.u8(a.codec_act.tag());
+                e.u8(a.codec_grad.tag());
+                e.u8(a.codec_sync.tag());
                 e.u32(a.layers.len() as u32);
                 for l in &a.layers {
                     e.u64(l.layer as u64);
@@ -562,42 +652,52 @@ impl RpcMsg {
                 e.u8(T_ACT);
                 e.u64(*gen);
                 e.u64(*micro as u64);
-                e.tensor(t);
+                e.tensor_codec(t, codec);
             }
             RpcMsg::Targets { gen, micro, t } => {
                 e.u8(T_TARGETS);
                 e.u64(*gen);
                 e.u64(*micro as u64);
-                e.tensor(t);
+                e.tensor_codec(t, codec);
             }
             RpcMsg::Grad { gen, micro, t } => {
                 e.u8(T_GRAD);
                 e.u64(*gen);
                 e.u64(*micro as u64);
-                e.tensor(t);
+                e.tensor_codec(t, codec);
             }
             RpcMsg::Heartbeat { device, seq } => {
                 e.u8(T_HEARTBEAT);
                 e.u64(*device as u64);
                 e.u64(*seq);
             }
-            RpcMsg::RoundDone { device, round, loss_sum, micros, compute_s } => {
+            RpcMsg::RoundDone {
+                device,
+                round,
+                loss_sum,
+                micros,
+                compute_s,
+                logical_bytes,
+                wire_bytes,
+            } => {
                 e.u8(T_ROUND_DONE);
                 e.u64(*device as u64);
                 e.u64(*round as u64);
                 e.f64(*loss_sum);
                 e.u64(*micros as u64);
                 e.f64(*compute_s);
+                e.u64(*logical_bytes);
+                e.u64(*wire_bytes);
             }
             RpcMsg::SyncRequest { device, kind, flat } => {
                 e.u8(T_SYNC_REQUEST);
                 e.u64(*device as u64);
                 e.u8(*kind);
-                e.f32s(flat);
+                e.f32s_codec(flat, codec);
             }
             RpcMsg::SyncResult { flat } => {
                 e.u8(T_SYNC_RESULT);
-                e.f32s(flat);
+                e.f32s_codec(flat, codec);
             }
             RpcMsg::AbortRound => e.u8(T_ABORT_ROUND),
             RpcMsg::RoundFailed { device, error } => {
@@ -658,6 +758,9 @@ impl RpcMsg {
                 let seed = d.u64()?;
                 let opt = dec_opt(&mut d)?;
                 let heartbeat_ms = d.u64()?;
+                let codec_act = Codec::from_tag(d.u8()?)?;
+                let codec_grad = Codec::from_tag(d.u8()?)?;
+                let codec_sync = Codec::from_tag(d.u8()?)?;
                 let n_layers = d.count(17)?; // u64 + 2 x u32 + u8
                 let mut layers = Vec::with_capacity(n_layers);
                 for _ in 0..n_layers {
@@ -697,6 +800,9 @@ impl RpcMsg {
                     seed,
                     opt,
                     heartbeat_ms,
+                    codec_act,
+                    codec_grad,
+                    codec_sync,
                     layers,
                     next,
                     prev,
@@ -717,13 +823,15 @@ impl RpcMsg {
                 loss_sum: d.f64()?,
                 micros: d.u64()? as usize,
                 compute_s: d.f64()?,
+                logical_bytes: d.u64()?,
+                wire_bytes: d.u64()?,
             },
             T_SYNC_REQUEST => RpcMsg::SyncRequest {
                 device: d.u64()? as usize,
                 kind: d.u8()?,
-                flat: d.f32s()?,
+                flat: d.f32s_codec()?,
             },
-            T_SYNC_RESULT => RpcMsg::SyncResult { flat: d.f32s()? },
+            T_SYNC_RESULT => RpcMsg::SyncResult { flat: d.f32s_codec()? },
             T_ABORT_ROUND => RpcMsg::AbortRound,
             T_ROUND_FAILED => RpcMsg::RoundFailed {
                 device: d.u64()? as usize,
@@ -777,6 +885,9 @@ mod tests {
             seed: 42,
             opt: OptimizerCfg::Sgd { lr: 0.05, momentum: 0.9 },
             heartbeat_ms: 100,
+            codec_act: Codec::Int8,
+            codec_grad: Codec::Fp16,
+            codec_sync: Codec::Fp32,
             layers: vec![RefLayerSpec { layer: 3, in_elems: 8, out_elems: 4, head: true }],
             next: vec!["127.0.0.1:7000".into()],
             prev: vec![],
@@ -795,6 +906,9 @@ mod tests {
                 assert!(a.layers[0].head);
                 assert_eq!(a.next, spec.next);
                 assert_eq!(a.warm_start, spec.warm_start);
+                assert_eq!(a.codec_act, Codec::Int8);
+                assert_eq!(a.codec_grad, Codec::Fp16);
+                assert_eq!(a.codec_sync, Codec::Fp32);
                 match a.opt {
                     OptimizerCfg::Sgd { lr, momentum } => {
                         assert_eq!(lr, 0.05);
@@ -811,11 +925,22 @@ mod tests {
             loss_sum: 2.5,
             micros: 4,
             compute_s: 0.25,
+            logical_bytes: 4096,
+            wire_bytes: 1032,
         }) {
-            RpcMsg::RoundDone { device, round, loss_sum, micros, compute_s } => {
+            RpcMsg::RoundDone {
+                device,
+                round,
+                loss_sum,
+                micros,
+                compute_s,
+                logical_bytes,
+                wire_bytes,
+            } => {
                 assert_eq!((device, round, micros), (1, 7, 4));
                 assert_eq!(loss_sum, 2.5);
                 assert_eq!(compute_s, 0.25);
+                assert_eq!((logical_bytes, wire_bytes), (4096, 1032));
             }
             other => panic!("decoded {}", other.kind()),
         }
@@ -844,6 +969,73 @@ mod tests {
             RpcMsg::Targets { t, .. } => assert_eq!(t, i),
             other => panic!("decoded {}", other.kind()),
         }
+    }
+
+    #[test]
+    fn compressed_frames_shrink_and_decode_to_f32() {
+        // Every lossy codec shrinks the encoded Act frame and still
+        // decodes to an f32 tensor of the right shape — with no decode
+        // side channel (the codec tag rides in the payload).
+        let t = Tensor::from_f32(&[64], (0..64).map(|i| i as f32 / 7.0).collect());
+        let msg = RpcMsg::Act { gen: 2, micro: 1, t: t.clone() };
+        let plain = msg.encode();
+        for codec in [Codec::Fp16, Codec::Bf16, Codec::Int8] {
+            let wire = msg.encode_with(codec);
+            assert!(wire.len() < plain.len(), "{} did not shrink", codec.name());
+            match RpcMsg::decode(&wire).unwrap() {
+                RpcMsg::Act { gen, micro, t: got } => {
+                    assert_eq!((gen, micro), (2, 1));
+                    assert_eq!(got.shape, t.shape);
+                    assert_eq!(got.dtype(), crate::model::from_manifest::DType::F32);
+                }
+                other => panic!("decoded {}", other.kind()),
+            }
+        }
+        // fp32 via encode_with is bit-identical to plain encode.
+        assert_eq!(msg.encode_with(Codec::Fp32), plain);
+        // i32 payloads pass through lossy codecs untouched.
+        let i = RpcMsg::Targets { gen: 0, micro: 0, t: Tensor::from_i32(&[3], vec![7, -8, 9]) };
+        assert_eq!(i.encode_with(Codec::Int8), i.encode());
+        // Sync flats compress too (the driver-mediated param path).
+        let sync = RpcMsg::SyncResult { flat: vec![0.5f32; 256] };
+        assert!(sync.encode_with(Codec::Int8).len() < sync.encode().len());
+        match RpcMsg::decode(&sync.encode_with(Codec::Fp16)).unwrap() {
+            RpcMsg::SyncResult { flat } => assert_eq!(flat.len(), 256),
+            other => panic!("decoded {}", other.kind()),
+        }
+    }
+
+    #[test]
+    fn corrupt_codec_payloads_rejected() {
+        // n = 4 elements: the int8 payload (8-byte header + 4) and the
+        // fp16 payload (2 x 4) have different lengths, so a swapped
+        // codec tag must be caught by the length accounting.
+        let msg = RpcMsg::Act {
+            gen: 1,
+            micro: 0,
+            t: Tensor::from_f32(&[4], vec![1.0; 4]),
+        };
+        let wire = msg.encode_with(Codec::Int8);
+
+        // Truncated codec payload: the frame ends mid-tensor.
+        assert!(RpcMsg::decode(&wire[..wire.len() - 3]).is_err());
+
+        // Mismatched codec tag: the int8 payload length no longer
+        // matches what the claimed codec needs, so the decoder cannot
+        // silently misread the bytes.  The codec tag is the byte right
+        // after the tensor's dtype tag and element count:
+        //   msg tag 1 | gen 8 | micro 8 | ndim 1 | dim 4 | dtype 1 | n 4 | codec 1
+        let tag_off = 1 + 8 + 8 + 1 + 4 + 1 + 4;
+        assert_eq!(wire[tag_off], Codec::Int8.tag());
+        let mut swapped = wire.clone();
+        swapped[tag_off] = Codec::Fp16.tag();
+        assert!(RpcMsg::decode(&swapped).is_err());
+
+        // Unknown codec tag.
+        let mut unknown = wire;
+        unknown[tag_off] = 0x7F;
+        let err = RpcMsg::decode(&unknown).unwrap_err().to_string();
+        assert!(err.contains("codec"), "{err}");
     }
 
     #[test]

@@ -18,6 +18,7 @@
 
 use anyhow::Result;
 
+use crate::codec::CodecSpec;
 use crate::config::{ClusterSpec, TrainConfig};
 use crate::fault::heartbeat::HeartbeatCfg;
 use crate::fault::replan::{lightweight_replan, migration_time};
@@ -71,7 +72,10 @@ impl RecoveryReport {
 /// Lightweight pipeline replay after `failed_dev` exits.  `policy` is
 /// the session's round schedule policy: the recovery diff and the
 /// re-priced post-failure round must describe the timeline the session
-/// actually executes, not a hardcoded default.
+/// actually executes, not a hardcoded default.  `codec` is the
+/// session's wire codec for the same reason — the re-priced round's
+/// throughput must reflect the compressed bytes the recovered pipeline
+/// actually moves.
 #[allow(clippy::too_many_arguments)]
 pub fn lightweight_replay(
     table: &ProfileTable,
@@ -82,6 +86,7 @@ pub fn lightweight_replay(
     failed_dev: usize,
     hb: &HeartbeatCfg,
     policy: &'static dyn SchedulePolicy,
+    codec: &CodecSpec,
 ) -> Result<RecoveryReport> {
     let repl = replication_plan(model, plan);
     let failed_stage = plan
@@ -96,7 +101,7 @@ pub fn lightweight_replay(
     let r = lightweight_replan(table, cluster, model, cfg, plan, failed_dev)?;
     let migration_s = migration_time(cluster, &r, plan, bw);
     let sdiff = recovery_diff(plan, &r.plan, policy);
-    let sim = price_round(table, cluster, model, &r.plan, policy);
+    let sim = price_round(table, cluster, model, &r.plan, policy, codec);
 
     Ok(RecoveryReport {
         mechanism: "lightweight",
@@ -144,8 +149,9 @@ fn price_round(
     model: &ModelDesc,
     plan: &Plan,
     policy: &dyn SchedulePolicy,
+    codec: &CodecSpec,
 ) -> crate::sim::SimResult {
-    crate::sim::price_policy(table, cluster, model, plan, policy)
+    crate::sim::price_policy_codec(table, cluster, model, plan, policy, codec)
 }
 
 /// Heavy rescheduling baseline after `failed_dev` exits.
@@ -159,6 +165,7 @@ pub fn heavy_reschedule(
     failed_dev: usize,
     hb: &HeartbeatCfg,
     policy: &'static dyn SchedulePolicy,
+    codec: &CodecSpec,
 ) -> Result<RecoveryReport> {
     // Surviving sub-cluster (device ids preserved by masking memory of
     // the failed device to zero is messy — rebuild a cluster without it
@@ -180,7 +187,7 @@ pub fn heavy_reschedule(
         &sub,
         model,
         cfg,
-        &PlannerConfig { policy, ..PlannerConfig::default() },
+        &PlannerConfig { policy, codec: *codec, ..PlannerConfig::default() },
     )?;
 
     // Weight traffic: every stage model flows to the coordinator, then
@@ -199,7 +206,7 @@ pub fn heavy_reschedule(
         }
     }
     let sdiff = recovery_diff(plan, &new_plan, policy);
-    let sim = price_round(table, cluster, model, &new_plan, policy);
+    let sim = price_round(table, cluster, model, &new_plan, policy, codec);
 
     Ok(RecoveryReport {
         mechanism: "heavy",
@@ -240,10 +247,11 @@ pub fn heavy_reschedule_incremental(
     failed_dev: usize,
     hb: &HeartbeatCfg,
     policy: &'static dyn SchedulePolicy,
+    codec: &CodecSpec,
     prev: Option<&DpState>,
 ) -> Result<(RecoveryReport, DpState)> {
     let keep: Vec<usize> = (0..cluster.n()).filter(|&d| d != failed_dev).collect();
-    let pc = PlannerConfig { policy, ..PlannerConfig::default() };
+    let pc = PlannerConfig { policy, codec: *codec, ..PlannerConfig::default() };
     let (outcome, state) = match prev {
         Some(p) if p.order().contains(&failed_dev) => {
             plan_hpp_incremental(p, table, cluster, model, cfg, &pc, failed_dev)?
@@ -258,7 +266,7 @@ pub fn heavy_reschedule_incremental(
 
     let new_plan = outcome.plan;
     let sdiff = recovery_diff(plan, &new_plan, policy);
-    let sim = price_round(table, cluster, model, &new_plan, policy);
+    let sim = price_round(table, cluster, model, &new_plan, policy, codec);
 
     Ok((
         RecoveryReport {
@@ -330,11 +338,11 @@ mod tests {
         let mut best_ratio: f64 = 0.0;
         for &failed in &plan.devices() {
             let lite = lightweight_replay(
-                &table, &cluster, &model, &cfg, &plan, failed, &hb, DEFAULT_POLICY,
+                &table, &cluster, &model, &cfg, &plan, failed, &hb, DEFAULT_POLICY, &CodecSpec::default(),
             )
             .unwrap();
             let heavy = heavy_reschedule(
-                &table, &cluster, &model, &cfg, &plan, failed, &hb, DEFAULT_POLICY,
+                &table, &cluster, &model, &cfg, &plan, failed, &hb, DEFAULT_POLICY, &CodecSpec::default(),
             )
             .unwrap();
             let ratio = heavy.total_s() / lite.total_s();
@@ -359,11 +367,11 @@ mod tests {
         let hb = HeartbeatCfg::default();
         let failed = *plan.devices().last().unwrap();
         let lite = lightweight_replay(
-            &table, &cluster, &model, &cfg, &plan, failed, &hb, DEFAULT_POLICY,
+            &table, &cluster, &model, &cfg, &plan, failed, &hb, DEFAULT_POLICY, &CodecSpec::default(),
         )
         .unwrap();
         let heavy = heavy_reschedule(
-            &table, &cluster, &model, &cfg, &plan, failed, &hb, DEFAULT_POLICY,
+            &table, &cluster, &model, &cfg, &plan, failed, &hb, DEFAULT_POLICY, &CodecSpec::default(),
         )
         .unwrap();
         assert!(
@@ -380,7 +388,7 @@ mod tests {
         let hb = HeartbeatCfg::default();
         let failed = *plan.devices().last().unwrap();
         let lite = lightweight_replay(
-            &table, &cluster, &model, &cfg, &plan, failed, &hb, DEFAULT_POLICY,
+            &table, &cluster, &model, &cfg, &plan, failed, &hb, DEFAULT_POLICY, &CodecSpec::default(),
         )
         .unwrap();
         let tl = throughput_timeline(100.0, &lite, 10.0, 40.0, 1.0);
@@ -401,7 +409,7 @@ mod tests {
         let hb = HeartbeatCfg::default();
         let failed = plan.devices()[0];
         let lite = lightweight_replay(
-            &table, &cluster, &model, &cfg, &plan, failed, &hb, DEFAULT_POLICY,
+            &table, &cluster, &model, &cfg, &plan, failed, &hb, DEFAULT_POLICY, &CodecSpec::default(),
         )
         .unwrap();
         // The failed device's warm-up window is re-injected: micros
@@ -419,7 +427,7 @@ mod tests {
         assert!(!lite.retasked_devices.contains(&failed));
         // Heavy rescheduling reports the same diff-derived fields.
         let heavy = heavy_reschedule(
-            &table, &cluster, &model, &cfg, &plan, failed, &hb, DEFAULT_POLICY,
+            &table, &cluster, &model, &cfg, &plan, failed, &hb, DEFAULT_POLICY, &CodecSpec::default(),
         )
         .unwrap();
         assert!(!heavy.replay_micros.is_empty());
@@ -437,11 +445,11 @@ mod tests {
         let hb = HeartbeatCfg::default();
         let failed = plan.devices()[0];
         let one = lightweight_replay(
-            &table, &cluster, &model, &cfg, &plan, failed, &hb, DEFAULT_POLICY,
+            &table, &cluster, &model, &cfg, &plan, failed, &hb, DEFAULT_POLICY, &CodecSpec::default(),
         )
         .unwrap();
         let gp = lightweight_replay(
-            &table, &cluster, &model, &cfg, &plan, failed, &hb, &GpipeFillDrain,
+            &table, &cluster, &model, &cfg, &plan, failed, &hb, &GpipeFillDrain, &CodecSpec::default(),
         )
         .unwrap();
         let stage = plan
@@ -473,12 +481,12 @@ mod tests {
         let hb = HeartbeatCfg::default();
         let failed = plan.devices()[0];
         let one = lightweight_replay(
-            &table, &cluster, &model, &cfg, &plan, failed, &hb, DEFAULT_POLICY,
+            &table, &cluster, &model, &cfg, &plan, failed, &hb, DEFAULT_POLICY, &CodecSpec::default(),
         )
         .unwrap();
         static ASYNC2: AsyncPipe = AsyncPipe { max_staleness: 2 };
         let asy = lightweight_replay(
-            &table, &cluster, &model, &cfg, &plan, failed, &hb, &ASYNC2,
+            &table, &cluster, &model, &cfg, &plan, failed, &hb, &ASYNC2, &CodecSpec::default(),
         )
         .unwrap();
         let stage = plan
@@ -523,7 +531,7 @@ mod tests {
         .unwrap();
         for &failed in &plan.devices() {
             let heavy = heavy_reschedule(
-                &table, &cluster, &model, &cfg, &plan, failed, &hb, DEFAULT_POLICY,
+                &table, &cluster, &model, &cfg, &plan, failed, &hb, DEFAULT_POLICY, &CodecSpec::default(),
             )
             .unwrap();
             let (inc, next_state) = heavy_reschedule_incremental(
@@ -535,6 +543,7 @@ mod tests {
                 failed,
                 &hb,
                 DEFAULT_POLICY,
+                &CodecSpec::default(),
                 Some(&state),
             )
             .unwrap();
@@ -556,7 +565,8 @@ mod tests {
         let devs = plan.devices();
         let (first, second) = (devs[0], devs[1]);
         let (r1, s1) = heavy_reschedule_incremental(
-            &table, &cluster, &model, &cfg, &plan, first, &hb, DEFAULT_POLICY, None,
+            &table, &cluster, &model, &cfg, &plan, first, &hb, DEFAULT_POLICY,
+            &CodecSpec::default(), None,
         )
         .unwrap();
         let (r2, s2) = heavy_reschedule_incremental(
@@ -568,6 +578,7 @@ mod tests {
             second,
             &hb,
             DEFAULT_POLICY,
+            &CodecSpec::default(),
             Some(&s1),
         )
         .unwrap();
@@ -580,6 +591,7 @@ mod tests {
             second,
             &hb,
             DEFAULT_POLICY,
+            &CodecSpec::default(),
             None,
         )
         .unwrap();
@@ -595,12 +607,12 @@ mod tests {
         let hb = HeartbeatCfg::default();
         let failed = plan.devices()[0];
         let lite = lightweight_replay(
-            &table, &cluster, &model, &cfg, &plan, failed, &hb, DEFAULT_POLICY,
+            &table, &cluster, &model, &cfg, &plan, failed, &hb, DEFAULT_POLICY, &CodecSpec::default(),
         )
         .unwrap();
         lite.new_plan.validate(&model, &cluster).unwrap();
         let heavy = heavy_reschedule(
-            &table, &cluster, &model, &cfg, &plan, failed, &hb, DEFAULT_POLICY,
+            &table, &cluster, &model, &cfg, &plan, failed, &hb, DEFAULT_POLICY, &CodecSpec::default(),
         )
         .unwrap();
         heavy.new_plan.validate(&model, &cluster).unwrap();

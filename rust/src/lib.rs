@@ -23,6 +23,7 @@
 //! over TCP, reference-kernel numerics); in-process PJRT execution of
 //! AOT artifacts needs the `pjrt` cargo feature (see rust/xla/).
 
+pub mod codec;
 pub mod comm;
 pub mod config;
 pub mod data;

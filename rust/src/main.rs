@@ -25,6 +25,7 @@ use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
+use asteroid::codec::{Codec, CodecSpec};
 use asteroid::config::{ClusterSpec, TrainConfig};
 use asteroid::fault::HeartbeatCfg;
 use asteroid::model::zoo;
@@ -130,6 +131,12 @@ fn session_from(args: &Args, default_model: &str) -> Result<Session> {
         .seed(args.u64_or("seed", 42)?)
         .emulate(args.has_flag("emulate"))
         .log_every(args.usize_or("log-every", 5)?);
+    // `--codec fp32|fp16|bf16|int8[,<boundary>=<codec>...]` — the wire
+    // codec reaches the planner's cost model *and* the data plane, so a
+    // lossy codec can change the plan, not just the transfer time.
+    if let Some(spec) = args.get("codec") {
+        b = b.codec(CodecSpec::parse(spec)?);
+    }
     if let Some(fault) = fault_from(args)? {
         b = b.fault(fault);
     }
@@ -162,6 +169,7 @@ fn print_plan(s: &Session) {
     println!("cluster   : {}", s.cluster().describe());
     println!("planner   : {}", s.planner().describe());
     println!("schedule  : {}", s.schedule().policy);
+    println!("codec     : {}", s.codec().describe());
     println!(
         "mini-batch: {} (micro {}, M {})",
         cfg.minibatch,
@@ -315,7 +323,8 @@ fn report_json(r: &RunReport) -> String {
                     format!(
                         "{{\"device\": {}, \"addr\": \"{}\", \"heartbeats\": {}, \
                          \"rounds_reported\": {}, \"mean_round_compute_s\": {:.6}, \
-                         \"bytes_tx\": {}, \"bytes_rx\": {}}}",
+                         \"bytes_tx\": {}, \"bytes_rx\": {}, \
+                         \"dp_logical_bytes\": {}, \"dp_wire_bytes\": {}}}",
                         d.device,
                         d.addr,
                         d.heartbeats,
@@ -323,6 +332,8 @@ fn report_json(r: &RunReport) -> String {
                         d.mean_round_compute_s,
                         d.bytes_tx,
                         d.bytes_rx,
+                        d.dp_logical_bytes,
+                        d.dp_wire_bytes,
                     )
                 })
                 .collect();
@@ -330,19 +341,27 @@ fn report_json(r: &RunReport) -> String {
                 Some(s) => format!("{s:.6}"),
                 None => "null".to_string(),
             };
+            // Fleet-wide data-plane totals: the measured compression
+            // ratio is dp_wire_bytes / dp_logical_bytes (1.0 for fp32).
+            let logical: u64 = stats.per_device.iter().map(|d| d.dp_logical_bytes).sum();
+            let wire: u64 = stats.per_device.iter().map(|d| d.dp_wire_bytes).sum();
             format!(
-                "{{\"detection_wall_s\": {detect}, \"per_device\": [{}]}}",
+                "{{\"detection_wall_s\": {detect}, \
+                 \"dp_logical_bytes\": {logical}, \"dp_wire_bytes\": {wire}, \
+                 \"per_device\": [{}]}}",
                 rows.join(", ")
             )
         }
     };
     format!(
-        "{{\n  \"backend\": \"{}\",\n  \"policy\": \"{}\",\n  \"max_staleness\": {},\n  \
+        "{{\n  \"backend\": \"{}\",\n  \"policy\": \"{}\",\n  \"codec\": \"{}\",\n  \
+         \"max_staleness\": {},\n  \
          \"rounds\": {},\n  \"throughput\": {:.6},\n  \"predicted_throughput\": {:.6},\n  \
          \"losses\": [{}],\n  \"round_secs\": [{}],\n  \"recoveries\": [{}],\n  \
          \"rpc\": {}\n}}\n",
         r.backend,
         r.schedule.policy,
+        r.codec,
         r.max_staleness,
         r.rounds,
         r.throughput,
@@ -412,6 +431,14 @@ fn cmd_envs() -> Result<()> {
         builtin_policies()
             .iter()
             .map(|p| p.name())
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
+    println!(
+        "codecs    : {}  (--codec, optional per-boundary: int8,12=fp16)",
+        Codec::ALL
+            .iter()
+            .map(|c| c.name())
             .collect::<Vec<_>>()
             .join(", ")
     );

@@ -29,7 +29,8 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::comm::rpc::{recv_msg, send_msg, AssignSpec, ConnRole, LayerState, RpcMsg};
+use crate::codec::Codec;
+use crate::comm::rpc::{recv_msg, send_msg, send_msg_codec, AssignSpec, ConnRole, LayerState, RpcMsg};
 use crate::pipeline::step::{run_script_round, DataMsg, DataPlane, ReferenceStage};
 
 /// How long a worker keeps re-dialling a peer data address before
@@ -383,7 +384,7 @@ impl WorkerState {
         let compute_s = t0.elapsed().as_secs_f64();
         let device = a.spec.device;
         match outcome {
-            Ok(loss_sum) => {
+            Ok((loss_sum, logical_bytes, wire_bytes)) => {
                 let micros = a.spec.script.iter().filter(|op| op.is_fwd()).count();
                 self.assigned = Some(a);
                 self.send_ctrl(&RpcMsg::RoundDone {
@@ -392,6 +393,8 @@ impl WorkerState {
                     loss_sum,
                     micros,
                     compute_s,
+                    logical_bytes,
+                    wire_bytes,
                 })?;
             }
             Err(e) if e.is::<DieMidRound>() => {
@@ -419,23 +422,30 @@ impl WorkerState {
 }
 
 /// One round: script execution plus the replicated-stage round sync.
+/// Returns (loss_sum, logical_bytes, wire_bytes): the data-plane
+/// tensor payloads this worker sent, before/after the wire codec.
 fn round_body(
     a: &mut Assigned,
-    carryover: &mut VecDeque<DataMsg>,
+    carryover: &mut VecDeque<(u64, DataMsg)>,
     rx: &Receiver<Inbox>,
     control_writer: &Arc<Mutex<Option<TcpStream>>>,
-) -> Result<f64> {
+) -> Result<(f64, u64, u64)> {
     let is_first = a.spec.stage == 0;
     let is_last = a.spec.stage + 1 == a.spec.num_stages;
-    let loss_sum = {
+    let (loss_sum, logical_bytes, wire_bytes) = {
         let mut dp = RpcDataPlane {
             gen: a.spec.generation,
             carryover,
             rx,
             next: &mut a.next,
             prev: &mut a.prev,
+            codec_act: a.spec.codec_act,
+            codec_grad: a.spec.codec_grad,
+            logical_bytes: 0,
+            wire_bytes: 0,
         };
-        run_script_round(&a.spec.script, is_first, is_last, &mut a.stage, &mut dp)?
+        let loss = run_script_round(&a.spec.script, is_first, is_last, &mut a.stage, &mut dp)?;
+        (loss, dp.logical_bytes, dp.wire_bytes)
     };
 
     if a.spec.group_size > 1 {
@@ -453,7 +463,11 @@ fn round_body(
         {
             let mut guard = control_writer.lock().unwrap();
             let w = guard.as_mut().context("no control connection for round sync")?;
-            send_msg(w, &RpcMsg::SyncRequest { device: a.spec.device, kind, flat })?;
+            send_msg_codec(
+                w,
+                &RpcMsg::SyncRequest { device: a.spec.device, kind, flat },
+                a.spec.codec_sync,
+            )?;
         }
         let reduced = wait_sync_result(carryover, rx)?;
         if asynchronous {
@@ -464,7 +478,7 @@ fn round_body(
     } else {
         a.stage.end_round_local()?;
     }
-    Ok(loss_sum)
+    Ok((loss_sum, logical_bytes, wire_bytes))
 }
 
 /// Block until the driver's `SyncResult` arrives, buffering any early
@@ -498,6 +512,14 @@ struct RpcDataPlane<'a> {
     rx: &'a Receiver<Inbox>,
     next: &'a mut [TcpStream],
     prev: &'a mut [TcpStream],
+    /// Wire codec for outbound activations (stage output boundary).
+    codec_act: Codec,
+    /// Wire codec for outbound gradients (stage input boundary).
+    codec_grad: Codec,
+    /// Outbound tensor payload bytes before compression.
+    logical_bytes: u64,
+    /// The same payloads as the codec put them on the wire.
+    wire_bytes: u64,
 }
 
 impl DataPlane for RpcDataPlane<'_> {
@@ -537,14 +559,20 @@ impl DataPlane for RpcDataPlane<'_> {
     fn send_act(&mut self, micro: usize, t: crate::runtime::Tensor) -> Result<()> {
         anyhow::ensure!(!self.next.is_empty(), "no next-stage links to send to");
         let i = micro % self.next.len();
-        send_msg(&mut self.next[i], &RpcMsg::Act { gen: self.gen, micro, t })
+        let logical = t.byte_len() as u64;
+        self.logical_bytes += logical;
+        self.wire_bytes += self.codec_act.wire_bytes(logical, t.dtype());
+        send_msg_codec(&mut self.next[i], &RpcMsg::Act { gen: self.gen, micro, t }, self.codec_act)
             .with_context(|| format!("sending activation of micro {micro}"))
     }
 
     fn send_grad(&mut self, micro: usize, t: crate::runtime::Tensor) -> Result<()> {
         anyhow::ensure!(!self.prev.is_empty(), "no prev-stage links to send to");
         let i = micro % self.prev.len();
-        send_msg(&mut self.prev[i], &RpcMsg::Grad { gen: self.gen, micro, t })
+        let logical = t.byte_len() as u64;
+        self.logical_bytes += logical;
+        self.wire_bytes += self.codec_grad.wire_bytes(logical, t.dtype());
+        send_msg_codec(&mut self.prev[i], &RpcMsg::Grad { gen: self.gen, micro, t }, self.codec_grad)
             .with_context(|| format!("sending gradient of micro {micro}"))
     }
 }

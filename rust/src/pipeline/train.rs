@@ -14,6 +14,7 @@ use std::path::Path;
 #[cfg(not(feature = "pjrt"))]
 use anyhow::Result;
 
+use crate::codec::CodecSpec;
 use crate::config::ClusterSpec;
 #[cfg(not(feature = "pjrt"))]
 use crate::data::DataSource;
@@ -40,6 +41,11 @@ pub struct TrainOpts {
     /// its `.schedule(..)` choice here; the default is only for direct
     /// `train` callers).
     pub policy: &'static dyn SchedulePolicy,
+    /// Wire codec for inter-stage traffic: each worker transcodes its
+    /// outbound activations/gradients (encode-then-decode) so the next
+    /// stage computes on exactly the wire's numerics, and the link
+    /// shaper charges the compressed byte count.
+    pub codec: CodecSpec,
 }
 
 impl Default for TrainOpts {
@@ -52,6 +58,7 @@ impl Default for TrainOpts {
             log_every: 5,
             initial_params: None,
             policy: DEFAULT_POLICY,
+            codec: CodecSpec::default(),
         }
     }
 }
@@ -226,8 +233,14 @@ mod live {
                 let model_c = model.clone();
                 let report_c = report_tx.clone();
                 let group_c = groups[p].clone();
+                // Outbound wire codecs: activations cross the stage's
+                // output boundary, gradients its input boundary.
+                let codecs = (
+                    opts.codec.at_boundary(stage.layers.1),
+                    opts.codec.at_boundary(stage.layers.0),
+                );
                 handles.push(std::thread::spawn(move || {
-                    run_worker(spec, model_c, rx, next, prev, report_c, group_c)
+                    run_worker(spec, model_c, rx, next, prev, codecs, report_c, group_c)
                 }));
             }
         }

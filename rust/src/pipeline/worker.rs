@@ -28,6 +28,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
+use crate::codec::Codec;
 use crate::model::from_manifest::{ManifestLayer, ManifestModel};
 use crate::pipeline::channel::{Rx, Tx};
 use crate::pipeline::collective::GroupComm;
@@ -72,16 +73,20 @@ pub enum Report {
 
 /// Run the worker loop (call from a dedicated thread).  `next`/`prev`
 /// are per-destination (possibly bandwidth-shaped) send handles.
+/// `codecs` = (activation, gradient) wire codec for this stage's
+/// outbound boundaries: sends transcode through the codec so the
+/// receiving stage computes on exactly the wire's numerics.
 pub fn run_worker(
     spec: WorkerSpec,
     model: ManifestModel,
     rx: Rx<Msg>,
     next: Vec<Tx<Msg>>,
     prev: Vec<Tx<Msg>>,
+    codecs: (Codec, Codec),
     report: std::sync::mpsc::Sender<Report>,
     group: Arc<GroupComm>,
 ) {
-    let outcome = worker_loop(&spec, &model, &rx, &next, &prev, &report, &group);
+    let outcome = worker_loop(&spec, &model, &rx, &next, &prev, codecs, &report, &group);
     if let Err(e) = outcome {
         let _ = report.send(Report::Fatal {
             stage: spec.stage,
@@ -98,6 +103,10 @@ struct ChannelPlane<'a> {
     rx: &'a Rx<Msg>,
     next: &'a [Tx<Msg>],
     prev: &'a [Tx<Msg>],
+    /// Wire codec at this stage's output boundary (activations out).
+    codec_act: Codec,
+    /// Wire codec at this stage's input boundary (gradients out).
+    codec_grad: Codec,
 }
 
 impl DataPlane for ChannelPlane<'_> {
@@ -112,12 +121,16 @@ impl DataPlane for ChannelPlane<'_> {
     }
 
     fn send_act(&mut self, micro: usize, t: Tensor) -> Result<()> {
-        let bytes = t.byte_len();
+        // Encode-then-decode at the send so the receiver computes on
+        // the wire's numerics; the shaper charges the compressed size.
+        let t = self.codec_act.transcode(&t);
+        let bytes = self.codec_act.wire_bytes(t.byte_len() as u64, t.dtype()) as usize;
         self.next[micro % self.next.len()].send(bytes, Msg::Act { micro, t })
     }
 
     fn send_grad(&mut self, micro: usize, t: Tensor) -> Result<()> {
-        let bytes = t.byte_len();
+        let t = self.codec_grad.transcode(&t);
+        let bytes = self.codec_grad.wire_bytes(t.byte_len() as u64, t.dtype()) as usize;
         self.prev[micro % self.prev.len()].send(bytes, Msg::Grad { micro, t })
     }
 }
@@ -128,6 +141,7 @@ fn worker_loop(
     rx: &Rx<Msg>,
     next: &[Tx<Msg>],
     prev: &[Tx<Msg>],
+    codecs: (Codec, Codec),
     report: &std::sync::mpsc::Sender<Report>,
     group: &Arc<GroupComm>,
 ) -> Result<()> {
@@ -193,7 +207,8 @@ fn worker_loop(
 
     loop {
         let loss_sum = {
-            let mut plane = ChannelPlane { rx, next, prev };
+            let mut plane =
+                ChannelPlane { rx, next, prev, codec_act: codecs.0, codec_grad: codecs.1 };
             run_script_round(&spec.script, spec.is_first, spec.is_last, &mut stage, &mut plane)?
         };
 

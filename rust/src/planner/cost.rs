@@ -8,6 +8,7 @@
 //! with the fewest bubbles — from which every other step's Execution
 //! Phase is inferred by shifting (Eq. 6).
 
+use crate::codec::CodecSpec;
 use crate::config::{ClusterSpec, TrainConfig};
 use crate::model::ModelDesc;
 use crate::planner::plan::{Plan, Stage};
@@ -37,9 +38,21 @@ pub fn exec_step_cost(
     model: &ModelDesc,
     stage: &Stage,
 ) -> StepCost {
+    exec_step_cost_codec(table, cluster, model, stage, &CodecSpec::default())
+}
+
+/// [`exec_step_cost`] with the Eq. 5 AllReduce term priced on the
+/// codec's *wire* bytes (compute times are codec-independent).
+pub fn exec_step_cost_codec(
+    table: &ProfileTable,
+    cluster: &ClusterSpec,
+    model: &ModelDesc,
+    stage: &Stage,
+    codec: &CodecSpec,
+) -> StepCost {
     let (i, j) = stage.layers;
     let (ef, eb) = exec_times_parts(table, i, j, &stage.devices, &stage.alloc);
-    StepCost { ef, eb, ta: allreduce_time(cluster, model, stage), exec: true }
+    StepCost { ef, eb, ta: allreduce_time_codec(cluster, model, stage, codec), exec: true }
 }
 
 /// Slowest-device E_f/E_b over a device slice and its allocation
@@ -64,7 +77,19 @@ pub fn exec_times_parts(
 /// T_a^s (Eq. 5): ring AllReduce of the stage's weights over the
 /// group's slowest link.
 pub fn allreduce_time(cluster: &ClusterSpec, model: &ModelDesc, stage: &Stage) -> f64 {
-    let w: u64 = model.weight_bytes_range(stage.layers.0, stage.layers.1);
+    allreduce_time_codec(cluster, model, stage, &CodecSpec::default())
+}
+
+/// [`allreduce_time`] over the sync codec's wire bytes (fp32 is the
+/// identity, so default-codec pricing is bit-identical to the
+/// uncompressed model).
+pub fn allreduce_time_codec(
+    cluster: &ClusterSpec,
+    model: &ModelDesc,
+    stage: &Stage,
+    codec: &CodecSpec,
+) -> f64 {
+    let w = codec.wire_sync_bytes(model.weight_bytes_range(stage.layers.0, stage.layers.1));
     let bw = if stage.devices.len() <= 1 {
         f64::INFINITY // unused: the g <= 1 early-out below fires first
     } else {
@@ -94,7 +119,22 @@ pub fn comm_step_cost(
     to: &Stage,
     microbatch: usize,
 ) -> StepCost {
-    let bytes = model.boundary_bytes(from.layers.1) * microbatch as u64;
+    comm_step_cost_codec(cluster, model, from, to, microbatch, &CodecSpec::default())
+}
+
+/// [`comm_step_cost`] priced on the *wire* bytes of the codec assigned
+/// to the boundary the transfer crosses — the term that lets the DP
+/// pick different cut points when a link is cheap to compress.
+pub fn comm_step_cost_codec(
+    cluster: &ClusterSpec,
+    model: &ModelDesc,
+    from: &Stage,
+    to: &Stage,
+    microbatch: usize,
+    codec: &CodecSpec,
+) -> StepCost {
+    let logical = model.boundary_bytes(from.layers.1) * microbatch as u64;
+    let bytes = codec.wire_activation_bytes(from.layers.1, logical);
     let bw = cluster.group_bandwidth(&from.devices, &to.devices);
     comm_step_cost_parts(bytes, bw, cluster.latency_s)
 }
@@ -113,18 +153,31 @@ pub fn plan_steps(
     model: &ModelDesc,
     plan: &Plan,
 ) -> Vec<StepCost> {
+    plan_steps_codec(table, cluster, model, plan, &CodecSpec::default())
+}
+
+/// [`plan_steps`] with every byte-carrying term (comm steps, Eq. 5
+/// AllReduce) priced on the codec's wire bytes.
+pub fn plan_steps_codec(
+    table: &ProfileTable,
+    cluster: &ClusterSpec,
+    model: &ModelDesc,
+    plan: &Plan,
+    codec: &CodecSpec,
+) -> Vec<StepCost> {
     let mut steps = Vec::with_capacity(plan.stages.len() * 2 - 1);
     for (p, stage) in plan.stages.iter().enumerate() {
         if p > 0 {
-            steps.push(comm_step_cost(
+            steps.push(comm_step_cost_codec(
                 cluster,
                 model,
                 &plan.stages[p - 1],
                 stage,
                 plan.microbatch,
+                codec,
             ));
         }
-        steps.push(exec_step_cost(table, cluster, model, stage));
+        steps.push(exec_step_cost_codec(table, cluster, model, stage, codec));
     }
     steps
 }
@@ -176,7 +229,18 @@ pub fn predicted_throughput(
     model: &ModelDesc,
     plan: &Plan,
 ) -> f64 {
-    let steps = plan_steps(table, cluster, model, plan);
+    predicted_throughput_codec(table, cluster, model, plan, &CodecSpec::default())
+}
+
+/// [`predicted_throughput`] under a codec spec (wire-byte pricing).
+pub fn predicted_throughput_codec(
+    table: &ProfileTable,
+    cluster: &ClusterSpec,
+    model: &ModelDesc,
+    plan: &Plan,
+    codec: &CodecSpec,
+) -> f64 {
+    let steps = plan_steps_codec(table, cluster, model, plan, codec);
     let latency = round_latency(&steps, plan.num_micro);
     plan.samples_per_round() as f64 / latency
 }
@@ -307,6 +371,24 @@ mod tests {
         assert!(l16 > l8);
         // Per-sample cost shrinks with M (pipeline fills up).
         assert!(l16 / 16.0 < l8 / 8.0 + 1e-12);
+    }
+
+    #[test]
+    fn codec_pricing_shrinks_byte_terms_only() {
+        let (cluster, model, table) = fixture();
+        let plan = mk_plan(&model);
+        let fp = plan_steps(&table, &cluster, &model, &plan);
+        let int8 = CodecSpec::uniform(crate::codec::Codec::Int8);
+        let cp = plan_steps_codec(&table, &cluster, &model, &plan, &int8);
+        // The comm step and the AllReduce term compress; compute times
+        // are codec-independent.
+        assert!(cp[1].ef < fp[1].ef, "comm step must price wire bytes");
+        assert!(cp[0].ta < fp[0].ta, "2-device stage AllReduce must compress");
+        assert_eq!(cp[0].ef, fp[0].ef);
+        assert_eq!(cp[2].eb, fp[2].eb);
+        // The identity spec is bit-identical to the uncompressed model.
+        let id = plan_steps_codec(&table, &cluster, &model, &plan, &CodecSpec::default());
+        assert_eq!(fp, id);
     }
 
     #[test]

@@ -32,6 +32,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Result};
 
+use crate::codec::CodecSpec;
 use crate::config::{ClusterSpec, TrainConfig};
 use crate::model::ModelDesc;
 use crate::planner::alloc::{allocate_microbatch, AllocOpts};
@@ -73,6 +74,14 @@ pub struct PlannerConfig {
     /// then geometric — trading exhaustive group sizing for planning
     /// time that stays near-linear in fleet size.
     pub exact_device_split_below: usize,
+    /// The wire codec the data plane will run under.  Every byte term
+    /// in the DP objective — Eq. 5 AllReduce flats, the Eq. 6 boundary
+    /// transfer — is priced at its *wire* size under this spec, so the
+    /// DP legitimately picks different cut points when a cheaper wire
+    /// format shifts the comm/compute balance.  The codec fingerprint
+    /// is part of both the stage-price memo key and the DP state
+    /// fingerprint, so memoized prices never alias across codecs.
+    pub codec: CodecSpec,
 }
 
 impl Default for PlannerConfig {
@@ -85,6 +94,7 @@ impl Default for PlannerConfig {
             sim_select: true,
             policy: DEFAULT_POLICY,
             exact_device_split_below: 32,
+            codec: CodecSpec::default(),
         }
     }
 }
@@ -185,6 +195,9 @@ struct StageKey {
     kp: u32,
     b: u32,
     m: u32,
+    /// Wire-codec fingerprint: the memoized T_a term prices compressed
+    /// flats, so entries for different codecs must never alias.
+    codec_fp: u64,
     devs: Box<[u32]>,
 }
 
@@ -254,7 +267,7 @@ impl StagePricer {
             0.0
         } else {
             allreduce_time_parts(
-                model.weight_bytes_range(i, j),
+                pc.codec.wire_sync_bytes(model.weight_bytes_range(i, j)),
                 devices.len(),
                 cluster.min_bandwidth(devices),
             )
@@ -287,6 +300,7 @@ impl StagePricer {
             kp: kp as u32,
             b: cfg.microbatch as u32,
             m: cfg.num_microbatches() as u32,
+            codec_fp: pc.codec.fingerprint(),
             devs: devices.iter().map(|&d| d as u32).collect(),
         };
         if let Some(hit) = self.memo.get(&key) {
@@ -388,6 +402,7 @@ struct StateFp {
     straggler_offload: bool,
     exact_below: usize,
     opt_mem_bits: u64,
+    codec_fp: u64,
     b: usize,
     m: usize,
 }
@@ -454,6 +469,7 @@ fn state_fp(
         straggler_offload: pc.alloc.straggler_offload,
         exact_below: pc.exact_device_split_below,
         opt_mem_bits: cfg.optimizer_mem_factor.to_bits(),
+        codec_fp: pc.codec.fingerprint(),
         b: cfg.microbatch,
         m: cfg.num_microbatches(),
     }
@@ -806,7 +822,11 @@ fn plan_hpp_core(
         for l in 1..=l_total {
             let i = l_total - l;
             let ta_raw = if n > 1 {
-                allreduce_time_parts(wts[l_total] - wts[i], n, bw.run_min(ds, n_total))
+                allreduce_time_parts(
+                    pc.codec.wire_sync_bytes(wts[l_total] - wts[i]),
+                    n,
+                    bw.run_min(ds, n_total),
+                )
             } else {
                 0.0
             };
@@ -862,8 +882,9 @@ fn plan_hpp_core(
                     let j = l_total - lp;
                     let ff = table.flops_fwd_range(i, j);
                     let fbk = table.flops_bwd_range(i, j);
-                    let w = wts[j] - wts[i];
-                    let boundary = model.boundary_bytes(j) * b as u64;
+                    let w = pc.codec.wire_sync_bytes(wts[j] - wts[i]);
+                    let boundary =
+                        pc.codec.wire_activation_bytes(j, model.boundary_bytes(j) * b as u64);
                     let lc = (j - i) as f64;
                     for (rpi, &np) in rungs.iter().enumerate() {
                         if np >= n {
@@ -992,7 +1013,10 @@ fn plan_hpp_core(
         let mut bi = 0usize;
         let mut bl = f64::INFINITY;
         for (idx, (_, plan)) in scored.iter().enumerate() {
-            let lat = pricer.sim.price(table, cluster, model, plan, pc.policy).round_latency;
+            let lat = pricer
+                .sim
+                .price_codec(table, cluster, model, plan, pc.policy, &pc.codec)
+                .round_latency;
             if lat <= bl {
                 bl = lat;
                 bi = idx;
@@ -1288,6 +1312,47 @@ mod tests {
                 cluster.devices[d].mem_bytes
             );
         }
+    }
+
+    #[test]
+    fn int8_codec_repartitions_bandwidth_constrained_cluster() {
+        // The acceptance test for compressed-byte planning: on a
+        // bandwidth-starved env-C mix the comm terms dominate, so
+        // pricing the wire at int8 (~4x smaller) must either move the
+        // DP's cut points or — same structure — strictly lower the
+        // analytic round latency.  sim_select is off so
+        // `predicted_latency` is exactly the DP objective being
+        // compared.
+        use crate::codec::{Codec, CodecSpec};
+        let model = zoo::mobilenet_v2();
+        let cluster = ClusterSpec::env("C", 20.0).unwrap();
+        let table = ProfileTable::new(&cluster, &model);
+        let cfg = TrainConfig::new(256, 16);
+        let pc_fp = PlannerConfig { sim_select: false, ..PlannerConfig::default() };
+        let pc_q8 = PlannerConfig {
+            sim_select: false,
+            codec: CodecSpec::uniform(Codec::Int8),
+            ..PlannerConfig::default()
+        };
+        let fp = plan_hpp(&table, &cluster, &model, &cfg, &pc_fp).unwrap();
+        let q8 = plan_hpp(&table, &cluster, &model, &cfg, &pc_q8).unwrap();
+        // The fixture must actually exercise the network (otherwise the
+        // codec cannot matter): the fp32 winner pays comm or AllReduce.
+        assert!(
+            fp.plan.num_stages() > 1 || fp.plan.stages[0].devices.len() > 1,
+            "fixture degenerated to a single device"
+        );
+        let cuts = |p: &Plan| p.stages.iter().map(|s| s.layers).collect::<Vec<_>>();
+        assert!(
+            cuts(&q8.plan) != cuts(&fp.plan) || q8.predicted_latency < fp.predicted_latency,
+            "int8 planning changed nothing: cuts {:?} latency {} vs fp32 {}",
+            cuts(&q8.plan),
+            q8.predicted_latency,
+            fp.predicted_latency
+        );
+        // The optimum under a strictly cheaper wire can never price
+        // above the fp32 optimum.
+        assert!(q8.predicted_latency <= fp.predicted_latency);
     }
 
     #[test]

@@ -29,6 +29,7 @@ pub use plan::{KpPolicy, Plan, Stage};
 
 use anyhow::{Context, Result};
 
+use crate::codec::CodecSpec;
 use crate::config::{ClusterSpec, TrainConfig};
 use crate::model::ModelDesc;
 use crate::profiler::ProfileTable;
@@ -82,16 +83,35 @@ impl Planner {
         cfg: &TrainConfig,
         policy: &'static dyn SchedulePolicy,
     ) -> Result<PlanOutcome> {
+        self.plan_codec(table, cluster, model, cfg, policy, &CodecSpec::default())
+    }
+
+    /// [`Planner::plan`] pricing the wire under `codec`.  Like the
+    /// threaded policy, the threaded codec overrides a `Custom`
+    /// config's own `codec` field — the session's `.codec(..)` knob is
+    /// authoritative.  Only Algorithm 2 (`Asteroid`/`Custom`) consumes
+    /// compressed-byte pricing; the comparison baselines keep their
+    /// published fp32 cost models (the codec still compresses their
+    /// traffic at execution, it just doesn't move their plan).
+    pub fn plan_codec(
+        &self,
+        table: &ProfileTable,
+        cluster: &ClusterSpec,
+        model: &ModelDesc,
+        cfg: &TrainConfig,
+        policy: &'static dyn SchedulePolicy,
+        codec: &CodecSpec,
+    ) -> Result<PlanOutcome> {
         match *self {
             Planner::Asteroid | Planner::Baseline(Method::Asteroid) => plan_hpp(
                 table,
                 cluster,
                 model,
                 cfg,
-                &PlannerConfig { policy, ..PlannerConfig::default() },
+                &PlannerConfig { policy, codec: *codec, ..PlannerConfig::default() },
             ),
             Planner::Custom(pc) => {
-                plan_hpp(table, cluster, model, cfg, &PlannerConfig { policy, ..pc })
+                plan_hpp(table, cluster, model, cfg, &PlannerConfig { policy, codec: *codec, ..pc })
             }
             Planner::Baseline(Method::DataParallel) | Planner::Baseline(Method::Eddl) => {
                 baselines::plan_dp(table, cluster, model, cfg, AllocOpts::default(), policy)
@@ -126,20 +146,38 @@ impl Planner {
         cfg: &TrainConfig,
         policy: &'static dyn SchedulePolicy,
     ) -> Result<(PlanOutcome, Option<DpState>)> {
+        self.plan_with_state_codec(table, cluster, model, cfg, policy, &CodecSpec::default())
+    }
+
+    /// [`Planner::plan_with_state`] pricing the wire under `codec`
+    /// (see [`Planner::plan_codec`] for the override semantics).
+    pub fn plan_with_state_codec(
+        &self,
+        table: &ProfileTable,
+        cluster: &ClusterSpec,
+        model: &ModelDesc,
+        cfg: &TrainConfig,
+        policy: &'static dyn SchedulePolicy,
+        codec: &CodecSpec,
+    ) -> Result<(PlanOutcome, Option<DpState>)> {
         match *self {
             Planner::Asteroid | Planner::Baseline(Method::Asteroid) => plan_hpp_with_state(
                 table,
                 cluster,
                 model,
                 cfg,
-                &PlannerConfig { policy, ..PlannerConfig::default() },
+                &PlannerConfig { policy, codec: *codec, ..PlannerConfig::default() },
             )
             .map(|(o, s)| (o, Some(s))),
-            Planner::Custom(pc) => {
-                plan_hpp_with_state(table, cluster, model, cfg, &PlannerConfig { policy, ..pc })
-                    .map(|(o, s)| (o, Some(s)))
-            }
-            _ => self.plan(table, cluster, model, cfg, policy).map(|o| (o, None)),
+            Planner::Custom(pc) => plan_hpp_with_state(
+                table,
+                cluster,
+                model,
+                cfg,
+                &PlannerConfig { policy, codec: *codec, ..pc },
+            )
+            .map(|(o, s)| (o, Some(s))),
+            _ => self.plan_codec(table, cluster, model, cfg, policy, codec).map(|o| (o, None)),
         }
     }
 }

@@ -26,7 +26,7 @@ use anyhow::{Context, Result};
 use crate::data::{DataSource, LmTask, VisionTask};
 use crate::model::from_manifest::ManifestModel;
 use crate::pipeline::{train, TrainOpts, TrainStats};
-use crate::sim::price_policy;
+use crate::sim::price_policy_codec;
 
 use super::{RecoveryEvent, RunReport, Session};
 
@@ -53,7 +53,15 @@ impl ExecutionBackend for SimBackend {
         // Policy-aware pricing: synchronous policies price the
         // session's one-round schedule; bounded-staleness policies
         // price their steady state (barrier-free multi-round chain).
-        let sim = price_policy(s.table(), s.cluster(), s.model(), s.plan(), s.policy());
+        // Byte terms (sends, AllReduce) price the session's wire codec.
+        let sim = price_policy_codec(
+            s.table(),
+            s.cluster(),
+            s.model(),
+            s.plan(),
+            s.policy(),
+            s.codec(),
+        );
         let rounds = s.run_config().steps;
         let mut round_secs = vec![sim.round_latency; rounds];
         let mut recoveries = Vec::new();
@@ -82,6 +90,7 @@ impl ExecutionBackend for SimBackend {
             max_staleness: s.policy().max_staleness(),
             weight_stash_slots: s.weight_stash_slots(),
             bytes_on_network: sim.bytes_on_network,
+            codec: s.codec().describe(),
             sim: Some(sim),
             recoveries,
             final_params: None,
@@ -153,6 +162,7 @@ impl ExecutionBackend for PjrtBackend {
             log_every: rc.log_every,
             initial_params: None,
             policy: s.policy(),
+            codec: *s.codec(),
         };
         let mut owned;
         let data: &mut dyn DataSource = match self.data.as_mut() {
@@ -214,6 +224,7 @@ fn live_report(s: &Session, stats: TrainStats, recoveries: Vec<RecoveryEvent>) -
         max_staleness: s.policy().max_staleness(),
         weight_stash_slots: s.weight_stash_slots(),
         bytes_on_network: 0,
+        codec: s.codec().describe(),
         sim: None,
         recoveries,
         final_params: Some(stats.final_params),
@@ -247,6 +258,7 @@ fn merge_live_phases(
         max_staleness: s.policy().max_staleness(),
         weight_stash_slots: s.weight_stash_slots(),
         bytes_on_network: 0,
+        codec: s.codec().describe(),
         sim: None,
         recoveries: vec![event],
         final_params: Some(after.final_params),

@@ -52,6 +52,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
+use crate::codec::CodecSpec;
 use crate::config::{ClusterSpec, TrainConfig};
 use crate::fault::{
     heavy_reschedule, heavy_reschedule_incremental, lightweight_replay, HeartbeatCfg,
@@ -260,6 +261,10 @@ pub struct RunReport {
     /// Bytes moved across links in one round (sim backend; the live
     /// engine does not meter its channels).
     pub bytes_on_network: u64,
+    /// The session's wire codec spec in canonical `describe()` form
+    /// (`"fp32"`, `"int8"`, `"fp32,12=int8"`, ...) — what the data
+    /// plane encoded with and the planner priced against.
+    pub codec: String,
     /// Event-accurate pricing detail (sim backend only).
     pub sim: Option<SimResult>,
     /// Device exits injected via the session's [`FaultSpec`].
@@ -299,6 +304,7 @@ pub struct SessionBuilder {
     minibatch: Option<usize>,
     planner: Planner,
     policy: &'static dyn SchedulePolicy,
+    codec: CodecSpec,
     fault: Option<FaultSpec>,
     run: RunConfig,
 }
@@ -312,6 +318,7 @@ impl Default for SessionBuilder {
             minibatch: None,
             planner: Planner::Asteroid,
             policy: DEFAULT_POLICY,
+            codec: CodecSpec::default(),
             fault: None,
             run: RunConfig::default(),
         }
@@ -362,6 +369,16 @@ impl SessionBuilder {
     /// Round schedule policy (default: the paper's 1F1B/K_p).
     pub fn schedule(mut self, policy: &'static dyn SchedulePolicy) -> Self {
         self.policy = policy;
+        self
+    }
+
+    /// Wire codec for the data plane (default: fp32 passthrough).
+    /// Like the schedule policy, the codec governs *planning too*:
+    /// Algorithm-2 comm and AllReduce terms price the compressed wire
+    /// bytes, so the chosen cut points are optimal for the format the
+    /// pipeline actually transmits.
+    pub fn codec(mut self, codec: CodecSpec) -> Self {
+        self.codec = codec;
         self
     }
 
@@ -460,7 +477,7 @@ impl SessionBuilder {
         // incremental replan fast path.
         let (outcome, dp_state) = self
             .planner
-            .plan_with_state(&table, &cluster, &model, &cfg, self.policy)
+            .plan_with_state_codec(&table, &cluster, &model, &cfg, self.policy, &self.codec)
             .with_context(|| format!("planning ({})", self.planner.describe()))?;
         let schedule = outcome.schedule.clone();
 
@@ -472,6 +489,7 @@ impl SessionBuilder {
             cfg,
             planner: self.planner,
             policy: self.policy,
+            codec: self.codec,
             fault: self.fault,
             run_cfg: self.run,
             artifacts,
@@ -495,6 +513,7 @@ pub struct Session {
     cfg: TrainConfig,
     planner: Planner,
     policy: &'static dyn SchedulePolicy,
+    codec: CodecSpec,
     fault: Option<FaultSpec>,
     run_cfg: RunConfig,
     artifacts: Option<(PathBuf, String)>,
@@ -534,6 +553,12 @@ impl Session {
 
     pub fn policy(&self) -> &'static dyn SchedulePolicy {
         self.policy
+    }
+
+    /// The session's wire codec spec — what the data plane encodes
+    /// with and what the planner priced against.
+    pub fn codec(&self) -> &CodecSpec {
+        &self.codec
     }
 
     pub fn source(&self) -> &ModelSource {
@@ -644,6 +669,7 @@ impl Session {
                 failed,
                 &spec.heartbeat,
                 self.policy,
+                &self.codec,
             ),
             RecoveryKind::Heavy => heavy_reschedule(
                 &self.table,
@@ -654,6 +680,7 @@ impl Session {
                 failed,
                 &spec.heartbeat,
                 self.policy,
+                &self.codec,
             ),
             RecoveryKind::HeavyIncremental => heavy_reschedule_incremental(
                 &self.table,
@@ -664,6 +691,7 @@ impl Session {
                 failed,
                 &spec.heartbeat,
                 self.policy,
+                &self.codec,
                 self.dp_state.as_deref(),
             )
             .map(|(report, _)| report),

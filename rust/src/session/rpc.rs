@@ -32,6 +32,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
+use crate::codec::Codec;
 use crate::comm::rpc::{
     read_frame, send_msg, write_frame, AssignSpec, ConnRole, LayerState, RpcMsg, HEADER_LEN,
 };
@@ -70,6 +71,12 @@ pub struct RpcDeviceStats {
     pub bytes_tx: u64,
     /// Control-plane bytes worker -> driver.
     pub bytes_rx: u64,
+    /// Data-plane tensor payload bytes this worker sent, before the
+    /// wire codec (worker-reported via `RoundDone`).
+    pub dp_logical_bytes: u64,
+    /// The same payloads as the codec put them on the wire — the
+    /// measured compression ratio is `dp_wire / dp_logical`.
+    pub dp_wire_bytes: u64,
 }
 
 /// RPC run telemetry: one row per worker the driver drove, plus the
@@ -136,11 +143,20 @@ struct Remote {
     compute_s_sum: f64,
     bytes_tx: u64,
     bytes_rx: Arc<AtomicU64>,
+    dp_logical: u64,
+    dp_wire: u64,
 }
 
 impl Remote {
     fn send(&mut self, msg: &RpcMsg) -> Result<()> {
-        let payload = msg.encode();
+        self.send_codec(msg, Codec::Fp32)
+    }
+
+    /// Send with the wire codec applied to compressible payloads (the
+    /// driver uses this for its `SyncResult` replies, mirroring the
+    /// workers' compressed `SyncRequest` flats).
+    fn send_codec(&mut self, msg: &RpcMsg, codec: Codec) -> Result<()> {
+        let payload = msg.encode_with(codec);
         self.bytes_tx += payload.len() as u64 + HEADER_LEN as u64;
         write_frame(&mut self.writer, &payload)
             .with_context(|| format!("sending {} to device {}", msg.kind(), self.device))
@@ -310,12 +326,13 @@ impl<'s> Driver<'s> {
                 *v /= g;
             }
         }
+        let codec_sync = self.session.codec().sync();
         for (d, _, _) in &contributions {
             let msg = RpcMsg::SyncResult { flat: reduced.clone() };
             self.remotes
                 .get_mut(d)
                 .with_context(|| format!("no remote for device {d}"))?
-                .send(&msg)?;
+                .send_codec(&msg, codec_sync)?;
         }
         Ok(())
     }
@@ -384,6 +401,14 @@ impl<'s> Driver<'s> {
                         seed: rc.seed,
                         opt: rc.opt,
                         heartbeat_ms,
+                        // Wire codecs for this worker's outbound links,
+                        // resolved from the session spec against the
+                        // plan's layer cuts (activations cross the
+                        // stage's output boundary, gradients its input
+                        // boundary).
+                        codec_act: s.codec().at_boundary(stage.layers.1),
+                        codec_grad: s.codec().at_boundary(stage.layers.0),
+                        codec_sync: s.codec().sync(),
                         layers: layers.clone(),
                         next: next.clone(),
                         prev: prev.clone(),
@@ -468,7 +493,15 @@ impl<'s> Driver<'s> {
             match self.poll(deadline)? {
                 Polled::Msg(
                     _,
-                    RpcMsg::RoundDone { device, round: r, loss_sum: l, micros, compute_s },
+                    RpcMsg::RoundDone {
+                        device,
+                        round: r,
+                        loss_sum: l,
+                        micros,
+                        compute_s,
+                        logical_bytes,
+                        wire_bytes,
+                    },
                 ) => {
                     if r != round {
                         continue; // settled leftover of an aborted round
@@ -477,6 +510,8 @@ impl<'s> Driver<'s> {
                     if let Some(rem) = self.remotes.get_mut(&device) {
                         rem.rounds_reported += 1;
                         rem.compute_s_sum += compute_s;
+                        rem.dp_logical += logical_bytes;
+                        rem.dp_wire += wire_bytes;
                     }
                     if last_stage.contains(&device) {
                         loss_sum += l;
@@ -724,6 +759,8 @@ impl<'s> Driver<'s> {
                 },
                 bytes_tx: r.bytes_tx,
                 bytes_rx: r.bytes_rx.load(Ordering::Relaxed),
+                dp_logical_bytes: r.dp_logical,
+                dp_wire_bytes: r.dp_wire,
             })
             .collect();
 
@@ -739,6 +776,7 @@ impl<'s> Driver<'s> {
             max_staleness: s.policy().max_staleness(),
             weight_stash_slots: s.weight_stash_slots(),
             bytes_on_network: 0,
+            codec: s.codec().describe(),
             sim: None,
             recoveries,
             final_params: Some(final_params),
@@ -795,5 +833,7 @@ fn connect_remote(
         compute_s_sum: 0.0,
         bytes_tx: 0,
         bytes_rx,
+        dp_logical: 0,
+        dp_wire: 0,
     })
 }

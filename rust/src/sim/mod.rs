@@ -25,6 +25,7 @@ pub mod engine;
 
 use std::collections::{BTreeMap, HashSet};
 
+use crate::codec::CodecSpec;
 use crate::config::ClusterSpec;
 use crate::model::ModelDesc;
 use crate::planner::plan::Plan;
@@ -137,13 +138,28 @@ pub fn price_policy(
     plan: &Plan,
     policy: &dyn SchedulePolicy,
 ) -> SimResult {
+    price_policy_codec(table, cluster, model, plan, policy, &CodecSpec::default())
+}
+
+/// [`price_policy`] under a wire [`CodecSpec`]: every boundary transfer
+/// and AllReduce is priced at its *wire* bytes (`bytes_on_network`
+/// included), so the simulator agrees byte-for-byte with what the
+/// framed-TCP data plane would actually put on the network.
+pub fn price_policy_codec(
+    table: &ProfileTable,
+    cluster: &ClusterSpec,
+    model: &ModelDesc,
+    plan: &Plan,
+    policy: &dyn SchedulePolicy,
+    codec: &CodecSpec,
+) -> SimResult {
     if policy.max_staleness() == 0 {
         let sched = Schedule::for_sim(plan, model, policy);
-        return price_schedule(&sched, table, cluster, model, plan);
+        return price_schedule_codec(&sched, table, cluster, model, plan, codec);
     }
     let rounds = ASYNC_STEADY_ROUNDS;
     let sched = Schedule::for_sim_rounds(plan, model, policy, rounds);
-    let mut sim = price_schedule(&sched, table, cluster, model, plan);
+    let mut sim = price_schedule_codec(&sched, table, cluster, model, plan, codec);
     // Normalise the chained run to per-round figures.  Ratios
     // (bubbles, throughput) are already steady-state: numerator and
     // denominator scale together.
@@ -168,7 +184,7 @@ pub fn price_policy(
 /// one and `plan_hpp` threads it through replans).
 #[derive(Debug, Clone, Default)]
 pub struct PriceCache {
-    entries: std::collections::HashMap<u64, Vec<(Plan, &'static str, SimResult)>>,
+    entries: std::collections::HashMap<u64, Vec<(Plan, &'static str, u64, SimResult)>>,
     hits: u64,
 }
 
@@ -182,7 +198,7 @@ impl PriceCache {
         self.hits
     }
 
-    fn fingerprint(plan: &Plan, policy: &str) -> u64 {
+    fn fingerprint(plan: &Plan, policy: &str, codec_fp: u64) -> u64 {
         let mut h = 0xcbf2_9ce4_8422_2325_u64;
         let mut put = |h: &mut u64, x: u64| {
             *h ^= x;
@@ -204,10 +220,11 @@ impl PriceCache {
         for c in policy.bytes() {
             put(&mut h, c as u64);
         }
+        put(&mut h, codec_fp);
         h
     }
 
-    /// [`price_policy`] through the cache.
+    /// [`price_policy`] through the cache (fp32 wire format).
     pub fn price(
         &mut self,
         table: &ProfileTable,
@@ -216,16 +233,35 @@ impl PriceCache {
         plan: &Plan,
         policy: &dyn SchedulePolicy,
     ) -> SimResult {
+        self.price_codec(table, cluster, model, plan, policy, &CodecSpec::default())
+    }
+
+    /// [`price_policy_codec`] through the cache.  The codec fingerprint
+    /// is part of the memo key (and re-verified on hit), so prices for
+    /// different wire formats never alias — fault-time incremental
+    /// replans may reuse a cache across codec changes safely.
+    pub fn price_codec(
+        &mut self,
+        table: &ProfileTable,
+        cluster: &ClusterSpec,
+        model: &ModelDesc,
+        plan: &Plan,
+        policy: &dyn SchedulePolicy,
+        codec: &CodecSpec,
+    ) -> SimResult {
         let name = policy.name();
-        let key = Self::fingerprint(plan, name);
+        let cfp = codec.fingerprint();
+        let key = Self::fingerprint(plan, name, cfp);
         if let Some(list) = self.entries.get(&key) {
-            if let Some((_, _, r)) = list.iter().find(|(p, n, _)| *n == name && p == plan) {
+            if let Some((_, _, _, r)) =
+                list.iter().find(|(p, n, c, _)| *n == name && *c == cfp && p == plan)
+            {
                 self.hits += 1;
                 return r.clone();
             }
         }
-        let r = price_policy(table, cluster, model, plan, policy);
-        self.entries.entry(key).or_default().push((plan.clone(), name, r.clone()));
+        let r = price_policy_codec(table, cluster, model, plan, policy, codec);
+        self.entries.entry(key).or_default().push((plan.clone(), name, cfp, r.clone()));
         r
     }
 }
@@ -253,6 +289,24 @@ pub fn price_schedule(
     cluster: &ClusterSpec,
     model: &ModelDesc,
     plan: &Plan,
+) -> SimResult {
+    price_schedule_codec(sched, table, cluster, model, plan, &CodecSpec::default())
+}
+
+/// [`price_schedule`] under a wire [`CodecSpec`]: each `Send` is priced
+/// at the wire size of its payload — looked up per producing boundary
+/// (an `Activation` leaving stage p crosses boundary `layers.1`, a
+/// `Gradient` crosses `layers.0`) — and the Eq. 5 AllReduce term uses
+/// compressed flat-parameter bytes.  Compute durations are untouched:
+/// encode/decode cost is treated as negligible next to link time, the
+/// same assumption the planner's cost model makes.
+pub fn price_schedule_codec(
+    sched: &Schedule,
+    table: &ProfileTable,
+    cluster: &ClusterSpec,
+    model: &ModelDesc,
+    plan: &Plan,
+    codec: &CodecSpec,
 ) -> SimResult {
     assert_eq!(
         sched.sharding,
@@ -308,12 +362,21 @@ pub fn price_schedule(
         mailbox: &mut HashSet<(usize, usize, usize, Payload)>,
         bytes_on_network: &mut u64,
         ar_ready: &mut [f64],
+        codec: &CodecSpec,
     ) {
         while !st.running && st.pos < st.tl.tasks.len() {
             match st.tl.tasks[st.pos] {
                 Task::Send { micro, to, payload, bytes } => {
-                    *bytes_on_network += bytes;
-                    let arrive = links.send(d, to, bytes, now);
+                    // The schedule IR carries logical (fp32) byte
+                    // counts; the producing stage's boundary decides
+                    // which codec this link runs.
+                    let boundary = match payload {
+                        Payload::Activation => plan.stages[st.tl.stage].layers.1,
+                        Payload::Gradient => plan.stages[st.tl.stage].layers.0,
+                    };
+                    let wire = codec.wire_activation_bytes(boundary, bytes);
+                    *bytes_on_network += wire;
+                    let arrive = links.send(d, to, wire, now);
                     q.push(arrive, Ev::Msg { to, from: d, micro, payload });
                     st.pos += 1;
                 }
@@ -362,7 +425,7 @@ pub fn price_schedule(
         let st = states.get_mut(&d).unwrap();
         advance(
             d, st, plan, table, 0.0, &mut q, &mut links, &mut mailbox,
-            &mut bytes_on_network, &mut ar_ready,
+            &mut bytes_on_network, &mut ar_ready, codec,
         );
     }
 
@@ -390,7 +453,7 @@ pub fn price_schedule(
                 st.pos += 1;
                 advance(
                     dev, st, plan, table, now, &mut q, &mut links, &mut mailbox,
-                    &mut bytes_on_network, &mut ar_ready,
+                    &mut bytes_on_network, &mut ar_ready, codec,
                 );
             }
             Ev::Msg { to, from, micro, payload } => {
@@ -398,7 +461,7 @@ pub fn price_schedule(
                 let st = states.get_mut(&to).unwrap();
                 advance(
                     to, st, plan, table, now, &mut q, &mut links, &mut mailbox,
-                    &mut bytes_on_network, &mut ar_ready,
+                    &mut bytes_on_network, &mut ar_ready, codec,
                 );
             }
         }
@@ -422,8 +485,9 @@ pub fn price_schedule(
     let mut round_end = now;
     for (p, stage) in plan.stages.iter().enumerate() {
         if stage.devices.len() > 1 {
-            let ta = crate::planner::cost::allreduce_time(cluster, model, stage);
-            let w = model.weight_bytes_range(stage.layers.0, stage.layers.1);
+            let ta = crate::planner::cost::allreduce_time_codec(cluster, model, stage, codec);
+            let w =
+                codec.wire_sync_bytes(model.weight_bytes_range(stage.layers.0, stage.layers.1));
             bytes_on_network += rounds as u64 * 2 * (stage.devices.len() as u64 - 1) * w;
             round_end = round_end.max(ar_ready[p] + ta);
         }
@@ -567,6 +631,70 @@ mod tests {
             sim.bytes_on_network,
             2 * 4 * model.total_weight_bytes()
         );
+    }
+
+    #[test]
+    fn codec_pricing_compresses_network_volume_not_compute() {
+        use crate::codec::{Codec, CodecSpec};
+        // env-C chain with a 2-device first stage: both the boundary
+        // activations/gradients and the AllReduce flat params ride the
+        // wire, so int8 must cut bytes_on_network while leaving
+        // per-device compute untouched.
+        let cluster = ClusterSpec::env("C", 100.0).unwrap();
+        let model = zoo::mobilenet_v2();
+        let table = ProfileTable::new(&cluster, &model);
+        let nl = model.num_layers();
+        let plan = Plan {
+            stages: vec![
+                Stage { layers: (0, nl / 3), devices: vec![0, 1], alloc: vec![4, 4], kp: 3 },
+                Stage { layers: (nl / 3, nl), devices: vec![3], alloc: vec![8], kp: 1 },
+            ],
+            microbatch: 8,
+            num_micro: 8,
+        };
+        let fp = price_policy(&table, &cluster, &model, &plan, DEFAULT_POLICY);
+        let int8 = CodecSpec::uniform(Codec::Int8);
+        let cp = price_policy_codec(&table, &cluster, &model, &plan, DEFAULT_POLICY, &int8);
+        assert!(
+            cp.bytes_on_network < fp.bytes_on_network / 3,
+            "int8 wire {} !<< fp32 wire {}",
+            cp.bytes_on_network,
+            fp.bytes_on_network
+        );
+        assert!(cp.round_latency <= fp.round_latency);
+        for d in [0usize, 1, 3] {
+            assert_eq!(cp.busy[d], fp.busy[d], "compute is codec-independent");
+        }
+        // The identity spec prices bit-identically to the fp32 path.
+        let id = price_policy_codec(
+            &table, &cluster, &model, &plan, DEFAULT_POLICY, &CodecSpec::default(),
+        );
+        assert_eq!(id.bytes_on_network, fp.bytes_on_network);
+        assert_eq!(id.round_latency, fp.round_latency);
+    }
+
+    #[test]
+    fn price_cache_keys_on_codec_fingerprint() {
+        use crate::codec::{Codec, CodecSpec};
+        let (cluster, model, table) = fixture("B");
+        let cfg = TrainConfig::new(256, 16);
+        let out = plan_hpp(&table, &cluster, &model, &cfg, &PlannerConfig::default()).unwrap();
+        let mut cache = PriceCache::new();
+        let fp = cache.price(&table, &cluster, &model, &out.plan, DEFAULT_POLICY);
+        let int8 = CodecSpec::uniform(Codec::Int8);
+        let cp =
+            cache.price_codec(&table, &cluster, &model, &out.plan, DEFAULT_POLICY, &int8);
+        // Different codecs on the same (plan, policy) are distinct
+        // entries: no false hit, and the prices genuinely differ.
+        assert_eq!(cache.hits(), 0);
+        assert!(cp.bytes_on_network < fp.bytes_on_network);
+        // Re-pricing each spec hits its own memo exactly.
+        let fp2 = cache.price(&table, &cluster, &model, &out.plan, DEFAULT_POLICY);
+        let cp2 =
+            cache.price_codec(&table, &cluster, &model, &out.plan, DEFAULT_POLICY, &int8);
+        assert_eq!(cache.hits(), 2);
+        assert_eq!(fp2.bytes_on_network, fp.bytes_on_network);
+        assert_eq!(cp2.bytes_on_network, cp.bytes_on_network);
     }
 
     #[test]

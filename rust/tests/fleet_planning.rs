@@ -10,6 +10,7 @@
 //!    `allocate_microbatch` + `exec_times_parts` + `allreduce_time_parts`
 //!    path produces, and repeat queries must come from the memo.
 
+use asteroid::codec::{Codec, CodecSpec};
 use asteroid::config::{ClusterSpec, TrainConfig};
 use asteroid::model::zoo;
 use asteroid::planner::cost::{allreduce_time_parts, exec_times_parts};
@@ -29,6 +30,7 @@ use asteroid::util::proptest::check;
 fn incremental_replan_equals_full_rebuild() {
     const POLICIES: [&str; 4] = ["1f1b-kp", "gpipe-fill-drain", "zb-h1", "async:1"];
     const ENVS: [&str; 4] = ["A", "B", "C", "D"];
+    const CODECS: [Codec; 3] = [Codec::Fp32, Codec::Int8, Codec::Fp16];
     let model = zoo::mobilenet_v2();
     check(
         24,
@@ -43,10 +45,11 @@ fn incremental_replan_equals_full_rebuild() {
             };
             let policy = POLICIES[rng.below(POLICIES.len())];
             let removal_seed = rng.below(64);
-            (env, policy, removal_seed)
+            let codec = CODECS[rng.below(CODECS.len())];
+            (env, policy, removal_seed, codec)
         },
         |case| {
-            let (env, policy_name, removal_seed) = (&case.0, case.1, case.2);
+            let (env, policy_name, removal_seed, codec) = (&case.0, case.1, case.2, case.3);
             let cluster = match env.strip_prefix("fleet:") {
                 Some(n) => synthetic_fleet(n.parse().unwrap(), 100.0),
                 None => ClusterSpec::env(env, 100.0).unwrap(),
@@ -54,7 +57,11 @@ fn incremental_replan_equals_full_rebuild() {
             let table = ProfileTable::new(&cluster, &model);
             let cfg = TrainConfig::new(128, 16);
             let policy = policy_by_name(policy_name).unwrap();
-            let pc = PlannerConfig { policy, ..PlannerConfig::default() };
+            let pc = PlannerConfig {
+                policy,
+                codec: CodecSpec::uniform(codec),
+                ..PlannerConfig::default()
+            };
 
             let (_, state) = plan_hpp_with_state(&table, &cluster, &model, &cfg, &pc)
                 .map_err(|e| format!("initial plan failed: {e}"))?;
@@ -175,4 +182,57 @@ fn memoized_pricer_matches_unmemoized_path_env_c() {
     }
     assert_eq!(pricer.misses(), misses_before, "second sweep must not recompute");
     assert_eq!(pricer.hits(), candidates as u64);
+}
+
+/// The codec fingerprint is part of the stage-price memo key: pricing
+/// the same candidate under fp32 and int8 must occupy two memo slots
+/// (never alias), agree bit-for-bit on the compute terms, and charge
+/// strictly less AllReduce time for the compressed wire.
+#[test]
+fn pricer_memo_keys_codecs_separately() {
+    let cluster = ClusterSpec::env("C", 50.0).unwrap();
+    let model = zoo::mobilenet_v2();
+    let table = ProfileTable::new(&cluster, &model);
+    let cfg = TrainConfig::new(128, 16);
+    let ids: Vec<usize> = (0..cluster.n()).collect();
+    let order = sorted_device_order(&cluster, &ids);
+    assert!(order.len() > 1, "need a replicated group for a T_a term");
+    let kp = (cfg.num_microbatches() / 2).max(1);
+    // A modest layer slice across the whole group: always feasible,
+    // carries weights (so the AllReduce flats are non-empty).
+    let (i, j) = (0, 7.min(model.num_layers()));
+    let pc_fp = PlannerConfig::default();
+    let pc_q8 = PlannerConfig {
+        codec: CodecSpec::uniform(Codec::Int8),
+        ..PlannerConfig::default()
+    };
+
+    let mut pricer = StagePricer::new();
+    let a = pricer
+        .stage_cost(&table, &cluster, &model, &cfg, &pc_fp, i, j, &order, kp)
+        .expect("fp32 candidate feasible");
+    let b = pricer
+        .stage_cost(&table, &cluster, &model, &cfg, &pc_q8, i, j, &order, kp)
+        .expect("int8 candidate feasible");
+    assert_eq!(pricer.misses(), 2, "distinct codecs must fill distinct memo slots");
+    assert_eq!(a.ef.to_bits(), b.ef.to_bits(), "codec must not change compute");
+    assert_eq!(a.eb.to_bits(), b.eb.to_bits(), "codec must not change compute");
+    assert!(
+        b.ta < a.ta,
+        "int8 AllReduce must price below fp32: {} vs {}",
+        b.ta,
+        a.ta
+    );
+
+    // Re-queries are pure hits and bit-identical per codec.
+    let a2 = pricer
+        .stage_cost(&table, &cluster, &model, &cfg, &pc_fp, i, j, &order, kp)
+        .unwrap();
+    let b2 = pricer
+        .stage_cost(&table, &cluster, &model, &cfg, &pc_q8, i, j, &order, kp)
+        .unwrap();
+    assert_eq!(pricer.misses(), 2);
+    assert_eq!(pricer.hits(), 2);
+    assert_eq!(a2.ta.to_bits(), a.ta.to_bits());
+    assert_eq!(b2.ta.to_bits(), b.ta.to_bits());
 }
