@@ -273,6 +273,13 @@ impl CodecSpec {
         self.default
     }
 
+    /// The active per-boundary overrides, as `(boundary, codec)`
+    /// pairs in insertion order (what `verify` validates against the
+    /// planned stage cuts).
+    pub fn overrides(&self) -> impl Iterator<Item = (u32, Codec)> + '_ {
+        self.overrides.iter().take(self.n_overrides as usize).copied()
+    }
+
     /// Codec of the driver-mediated group sync / Eq. 5 AllReduce.
     pub fn sync(&self) -> Codec {
         self.default

@@ -859,6 +859,470 @@ impl RpcMsg {
     }
 }
 
+// ----------------------------------- control-plane state machine
+//
+// The driver <-> worker control protocol as ONE declarative
+// transition table per side.  `pipeline::rpc_worker`'s serve loop
+// dispatches every control frame through [`worker_action`] — there is
+// no second copy of the worker machine — and `verify::protocol`
+// enumerates the product automaton statically: every (phase, message
+// kind) pair must have exactly one entry, and every message one side
+// can emit must have a defined transition in every peer phase it may
+// arrive in.  An unlisted pair is a protocol hole (lint `ASTR013`),
+// caught before any worker is spawned.
+
+/// Every wire message kind, in tag order (append-only, like the tags
+/// themselves; keep in sync with [`RpcMsg::kind`]).
+pub const MSG_KINDS: [&str; 19] = [
+    "Hello",
+    "Assign",
+    "Ready",
+    "StartRound",
+    "Act",
+    "Targets",
+    "Grad",
+    "Heartbeat",
+    "RoundDone",
+    "SyncRequest",
+    "SyncResult",
+    "AbortRound",
+    "RoundFailed",
+    "FetchParams",
+    "Params",
+    "Exit",
+    "Die",
+    "Bye",
+    "Fatal",
+];
+
+/// Control-plane phase of the worker serve loop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum WorkerPhase {
+    /// Between rounds: waiting for Assign/StartRound/Exit.
+    Idle,
+    /// Executing a round's compute script (the data plane's recv loop).
+    InRound,
+    /// Round compute done, waiting for the driver's `SyncResult`.
+    Syncing,
+}
+
+impl WorkerPhase {
+    /// Every worker phase, in lifecycle order.
+    pub const ALL: [WorkerPhase; 3] =
+        [WorkerPhase::Idle, WorkerPhase::InRound, WorkerPhase::Syncing];
+
+    /// Stable display name.
+    pub fn name(self) -> &'static str {
+        match self {
+            WorkerPhase::Idle => "Idle",
+            WorkerPhase::InRound => "InRound",
+            WorkerPhase::Syncing => "Syncing",
+        }
+    }
+}
+
+/// What the worker serve loop does with a message in a given phase.
+/// The serve loop destructures the message payload itself; the action
+/// only names the transition, so the table stays data.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkerAction {
+    /// Idle: apply the `AssignSpec` (build stage, dial peers, `Ready`).
+    ApplyAssign,
+    /// Idle: run the round to completion (`RoundDone`/`RoundFailed`).
+    BeginRound,
+    /// Idle: answer `FetchParams` with a `Params` checkpoint.
+    SendParams,
+    /// Idle: discard stale round state and acknowledge the abort with
+    /// one `RoundFailed("aborted while idle")`.
+    AckAbort,
+    /// Idle: answer `Bye` and end the serve loop cleanly.
+    ExitClean,
+    /// Terminate now (thread-mode death injection; the process-mode
+    /// `Die` is intercepted on the reader thread before dispatch).
+    DieNow,
+    /// Harmless in this phase: drop (logged when verbose).
+    IgnoreIdle,
+    /// Tensor frame (`Act`/`Targets`/`Grad`): routed to the data-plane
+    /// inbox, buffered while idle/syncing, generation-filtered in
+    /// round — never dispatched as a control message.
+    DataPlane,
+    /// Fail the current round: the driver aborted it.
+    FailAbort,
+    /// Fail the current round: shutdown was requested mid-round.
+    FailExit,
+    /// Syncing: the awaited group-reduced buffer arrived.
+    DeliverSync,
+    /// Protocol violation in this phase: fail the round with an
+    /// "unexpected message" error (the driver owns the verdict).
+    FailUnexpected,
+}
+
+/// The worker half of the control-plane machine: one entry per
+/// (phase, message kind).  Total by construction — `verify::protocol`
+/// rejects holes and duplicates.
+pub const WORKER_TRANSITIONS: &[(WorkerPhase, &str, WorkerAction)] = &[
+    // ----- Idle: between rounds, the driver may re-task us freely.
+    (WorkerPhase::Idle, "Hello", WorkerAction::IgnoreIdle),
+    (WorkerPhase::Idle, "Assign", WorkerAction::ApplyAssign),
+    (WorkerPhase::Idle, "Ready", WorkerAction::IgnoreIdle),
+    (WorkerPhase::Idle, "StartRound", WorkerAction::BeginRound),
+    (WorkerPhase::Idle, "Act", WorkerAction::DataPlane),
+    (WorkerPhase::Idle, "Targets", WorkerAction::DataPlane),
+    (WorkerPhase::Idle, "Grad", WorkerAction::DataPlane),
+    (WorkerPhase::Idle, "Heartbeat", WorkerAction::IgnoreIdle),
+    (WorkerPhase::Idle, "RoundDone", WorkerAction::IgnoreIdle),
+    (WorkerPhase::Idle, "SyncRequest", WorkerAction::IgnoreIdle),
+    // A sync result for a round the driver already aborted: stale.
+    (WorkerPhase::Idle, "SyncResult", WorkerAction::IgnoreIdle),
+    (WorkerPhase::Idle, "AbortRound", WorkerAction::AckAbort),
+    (WorkerPhase::Idle, "RoundFailed", WorkerAction::IgnoreIdle),
+    (WorkerPhase::Idle, "FetchParams", WorkerAction::SendParams),
+    (WorkerPhase::Idle, "Params", WorkerAction::IgnoreIdle),
+    (WorkerPhase::Idle, "Exit", WorkerAction::ExitClean),
+    (WorkerPhase::Idle, "Die", WorkerAction::DieNow),
+    (WorkerPhase::Idle, "Bye", WorkerAction::IgnoreIdle),
+    (WorkerPhase::Idle, "Fatal", WorkerAction::IgnoreIdle),
+    // ----- InRound: only data, abort, and death may interrupt.
+    (WorkerPhase::InRound, "Hello", WorkerAction::FailUnexpected),
+    (WorkerPhase::InRound, "Assign", WorkerAction::FailUnexpected),
+    (WorkerPhase::InRound, "Ready", WorkerAction::FailUnexpected),
+    (WorkerPhase::InRound, "StartRound", WorkerAction::FailUnexpected),
+    (WorkerPhase::InRound, "Act", WorkerAction::DataPlane),
+    (WorkerPhase::InRound, "Targets", WorkerAction::DataPlane),
+    (WorkerPhase::InRound, "Grad", WorkerAction::DataPlane),
+    (WorkerPhase::InRound, "Heartbeat", WorkerAction::FailUnexpected),
+    (WorkerPhase::InRound, "RoundDone", WorkerAction::FailUnexpected),
+    (WorkerPhase::InRound, "SyncRequest", WorkerAction::FailUnexpected),
+    (WorkerPhase::InRound, "SyncResult", WorkerAction::FailUnexpected),
+    (WorkerPhase::InRound, "AbortRound", WorkerAction::FailAbort),
+    (WorkerPhase::InRound, "RoundFailed", WorkerAction::FailUnexpected),
+    (WorkerPhase::InRound, "FetchParams", WorkerAction::FailUnexpected),
+    (WorkerPhase::InRound, "Params", WorkerAction::FailUnexpected),
+    (WorkerPhase::InRound, "Exit", WorkerAction::FailExit),
+    (WorkerPhase::InRound, "Die", WorkerAction::DieNow),
+    (WorkerPhase::InRound, "Bye", WorkerAction::FailUnexpected),
+    (WorkerPhase::InRound, "Fatal", WorkerAction::FailUnexpected),
+    // ----- Syncing: waiting on the driver's reduced buffer.
+    (WorkerPhase::Syncing, "Hello", WorkerAction::FailUnexpected),
+    (WorkerPhase::Syncing, "Assign", WorkerAction::FailUnexpected),
+    (WorkerPhase::Syncing, "Ready", WorkerAction::FailUnexpected),
+    (WorkerPhase::Syncing, "StartRound", WorkerAction::FailUnexpected),
+    (WorkerPhase::Syncing, "Act", WorkerAction::DataPlane),
+    (WorkerPhase::Syncing, "Targets", WorkerAction::DataPlane),
+    (WorkerPhase::Syncing, "Grad", WorkerAction::DataPlane),
+    (WorkerPhase::Syncing, "Heartbeat", WorkerAction::FailUnexpected),
+    (WorkerPhase::Syncing, "RoundDone", WorkerAction::FailUnexpected),
+    (WorkerPhase::Syncing, "SyncRequest", WorkerAction::FailUnexpected),
+    (WorkerPhase::Syncing, "SyncResult", WorkerAction::DeliverSync),
+    (WorkerPhase::Syncing, "AbortRound", WorkerAction::FailAbort),
+    (WorkerPhase::Syncing, "RoundFailed", WorkerAction::FailUnexpected),
+    (WorkerPhase::Syncing, "FetchParams", WorkerAction::FailUnexpected),
+    (WorkerPhase::Syncing, "Params", WorkerAction::FailUnexpected),
+    (WorkerPhase::Syncing, "Exit", WorkerAction::FailUnexpected),
+    // Thread-mode death during sync surfaces as a round failure (the
+    // process-mode Die never reaches here: the reader thread exits).
+    (WorkerPhase::Syncing, "Die", WorkerAction::FailUnexpected),
+    (WorkerPhase::Syncing, "Bye", WorkerAction::FailUnexpected),
+    (WorkerPhase::Syncing, "Fatal", WorkerAction::FailUnexpected),
+];
+
+/// Transition of the worker machine for `kind` in `phase` (`None` is
+/// a protocol hole — `verify::protocol` reports it as `ASTR013`).
+pub fn worker_action(phase: WorkerPhase, kind: &str) -> Option<WorkerAction> {
+    WORKER_TRANSITIONS
+        .iter()
+        .find(|&&(p, k, _)| p == phase && k == kind)
+        .map(|&(_, _, a)| a)
+}
+
+/// Wait context of the driver's control loop (`session::rpc`).  Two
+/// message kinds are absorbed in *every* phase before dispatch:
+/// `Heartbeat` feeds the liveness monitor and `SyncRequest` the group
+/// reducer — the table records them as [`DriverAction::Background`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DriverPhase {
+    /// `Assign` sent to every worker; waiting for each `Ready`.
+    Assigning,
+    /// `StartRound` + feeds sent; waiting for each `RoundDone`.
+    Rounding,
+    /// `FetchParams` sent; waiting for each `Params`.
+    Checkpointing,
+    /// `Die` injected; waiting for the victim's EOF.
+    Detecting,
+    /// `AbortRound` sent to survivors; waiting for each `RoundFailed`.
+    Aborting,
+    /// `Exit` sent; draining `Bye`s best-effort.
+    Closing,
+}
+
+impl DriverPhase {
+    /// Every driver phase, in lifecycle order.
+    pub const ALL: [DriverPhase; 6] = [
+        DriverPhase::Assigning,
+        DriverPhase::Rounding,
+        DriverPhase::Checkpointing,
+        DriverPhase::Detecting,
+        DriverPhase::Aborting,
+        DriverPhase::Closing,
+    ];
+
+    /// Stable display name.
+    pub fn name(self) -> &'static str {
+        match self {
+            DriverPhase::Assigning => "Assigning",
+            DriverPhase::Rounding => "Rounding",
+            DriverPhase::Checkpointing => "Checkpointing",
+            DriverPhase::Detecting => "Detecting",
+            DriverPhase::Aborting => "Aborting",
+            DriverPhase::Closing => "Closing",
+        }
+    }
+}
+
+/// What the driver does with a worker message in a given phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DriverAction {
+    /// The message this phase is waiting for.
+    Accept,
+    /// Known-harmless leftover (e.g. a settled `RoundDone` of an
+    /// aborted round): dropped.
+    Ignore,
+    /// Absorbed in every phase before dispatch (heartbeats, sync).
+    Background,
+    /// The designed failure path: abandon the phase and recover
+    /// (a worker reported failure or died).
+    FailPeer,
+    /// Protocol violation: abort the run with an "unexpected message"
+    /// error.
+    FailUnexpected,
+}
+
+/// The driver half of the control-plane machine: one entry per
+/// (phase, message kind).  Total by construction — `verify::protocol`
+/// rejects holes and duplicates.
+pub const DRIVER_TRANSITIONS: &[(DriverPhase, &str, DriverAction)] = &[
+    // ----- Assigning: each worker answers Assign with Ready.
+    (DriverPhase::Assigning, "Hello", DriverAction::FailUnexpected),
+    (DriverPhase::Assigning, "Assign", DriverAction::FailUnexpected),
+    (DriverPhase::Assigning, "Ready", DriverAction::Accept),
+    (DriverPhase::Assigning, "StartRound", DriverAction::FailUnexpected),
+    (DriverPhase::Assigning, "Act", DriverAction::FailUnexpected),
+    (DriverPhase::Assigning, "Targets", DriverAction::FailUnexpected),
+    (DriverPhase::Assigning, "Grad", DriverAction::FailUnexpected),
+    (DriverPhase::Assigning, "Heartbeat", DriverAction::Background),
+    (DriverPhase::Assigning, "RoundDone", DriverAction::FailUnexpected),
+    (DriverPhase::Assigning, "SyncRequest", DriverAction::Background),
+    (DriverPhase::Assigning, "SyncResult", DriverAction::FailUnexpected),
+    (DriverPhase::Assigning, "AbortRound", DriverAction::FailUnexpected),
+    // A late RoundFailed from the round we just aborted: settled.
+    (DriverPhase::Assigning, "RoundFailed", DriverAction::Ignore),
+    (DriverPhase::Assigning, "FetchParams", DriverAction::FailUnexpected),
+    (DriverPhase::Assigning, "Params", DriverAction::FailUnexpected),
+    (DriverPhase::Assigning, "Exit", DriverAction::FailUnexpected),
+    (DriverPhase::Assigning, "Die", DriverAction::FailUnexpected),
+    (DriverPhase::Assigning, "Bye", DriverAction::FailUnexpected),
+    (DriverPhase::Assigning, "Fatal", DriverAction::FailPeer),
+    // ----- Rounding: waiting for every stage's RoundDone.
+    (DriverPhase::Rounding, "Hello", DriverAction::FailUnexpected),
+    (DriverPhase::Rounding, "Assign", DriverAction::FailUnexpected),
+    (DriverPhase::Rounding, "Ready", DriverAction::FailUnexpected),
+    (DriverPhase::Rounding, "StartRound", DriverAction::FailUnexpected),
+    (DriverPhase::Rounding, "Act", DriverAction::FailUnexpected),
+    (DriverPhase::Rounding, "Targets", DriverAction::FailUnexpected),
+    (DriverPhase::Rounding, "Grad", DriverAction::FailUnexpected),
+    (DriverPhase::Rounding, "Heartbeat", DriverAction::Background),
+    (DriverPhase::Rounding, "RoundDone", DriverAction::Accept),
+    (DriverPhase::Rounding, "SyncRequest", DriverAction::Background),
+    (DriverPhase::Rounding, "SyncResult", DriverAction::FailUnexpected),
+    (DriverPhase::Rounding, "AbortRound", DriverAction::FailUnexpected),
+    // A worker failed mid-round: the designed recovery entry point.
+    (DriverPhase::Rounding, "RoundFailed", DriverAction::FailPeer),
+    (DriverPhase::Rounding, "FetchParams", DriverAction::FailUnexpected),
+    (DriverPhase::Rounding, "Params", DriverAction::FailUnexpected),
+    (DriverPhase::Rounding, "Exit", DriverAction::FailUnexpected),
+    (DriverPhase::Rounding, "Die", DriverAction::FailUnexpected),
+    (DriverPhase::Rounding, "Bye", DriverAction::FailUnexpected),
+    (DriverPhase::Rounding, "Fatal", DriverAction::FailPeer),
+    // ----- Checkpointing: each survivor answers FetchParams.
+    (DriverPhase::Checkpointing, "Hello", DriverAction::FailUnexpected),
+    (DriverPhase::Checkpointing, "Assign", DriverAction::FailUnexpected),
+    (DriverPhase::Checkpointing, "Ready", DriverAction::FailUnexpected),
+    (DriverPhase::Checkpointing, "StartRound", DriverAction::FailUnexpected),
+    (DriverPhase::Checkpointing, "Act", DriverAction::FailUnexpected),
+    (DriverPhase::Checkpointing, "Targets", DriverAction::FailUnexpected),
+    (DriverPhase::Checkpointing, "Grad", DriverAction::FailUnexpected),
+    (DriverPhase::Checkpointing, "Heartbeat", DriverAction::Background),
+    (DriverPhase::Checkpointing, "RoundDone", DriverAction::FailUnexpected),
+    (DriverPhase::Checkpointing, "SyncRequest", DriverAction::Background),
+    (DriverPhase::Checkpointing, "SyncResult", DriverAction::FailUnexpected),
+    (DriverPhase::Checkpointing, "AbortRound", DriverAction::FailUnexpected),
+    (DriverPhase::Checkpointing, "RoundFailed", DriverAction::FailUnexpected),
+    (DriverPhase::Checkpointing, "FetchParams", DriverAction::FailUnexpected),
+    (DriverPhase::Checkpointing, "Params", DriverAction::Accept),
+    (DriverPhase::Checkpointing, "Exit", DriverAction::FailUnexpected),
+    (DriverPhase::Checkpointing, "Die", DriverAction::FailUnexpected),
+    (DriverPhase::Checkpointing, "Bye", DriverAction::FailUnexpected),
+    (DriverPhase::Checkpointing, "Fatal", DriverAction::FailPeer),
+    // ----- Detecting: fault injection sent, waiting for the victim's
+    // silence; stragglers from the doomed round are settled noise.
+    (DriverPhase::Detecting, "Hello", DriverAction::FailUnexpected),
+    (DriverPhase::Detecting, "Assign", DriverAction::FailUnexpected),
+    (DriverPhase::Detecting, "Ready", DriverAction::FailUnexpected),
+    (DriverPhase::Detecting, "StartRound", DriverAction::FailUnexpected),
+    (DriverPhase::Detecting, "Act", DriverAction::FailUnexpected),
+    (DriverPhase::Detecting, "Targets", DriverAction::FailUnexpected),
+    (DriverPhase::Detecting, "Grad", DriverAction::FailUnexpected),
+    (DriverPhase::Detecting, "Heartbeat", DriverAction::Background),
+    (DriverPhase::Detecting, "RoundDone", DriverAction::Ignore),
+    (DriverPhase::Detecting, "SyncRequest", DriverAction::Background),
+    (DriverPhase::Detecting, "SyncResult", DriverAction::FailUnexpected),
+    (DriverPhase::Detecting, "AbortRound", DriverAction::FailUnexpected),
+    (DriverPhase::Detecting, "RoundFailed", DriverAction::Ignore),
+    (DriverPhase::Detecting, "FetchParams", DriverAction::FailUnexpected),
+    (DriverPhase::Detecting, "Params", DriverAction::FailUnexpected),
+    (DriverPhase::Detecting, "Exit", DriverAction::FailUnexpected),
+    (DriverPhase::Detecting, "Die", DriverAction::FailUnexpected),
+    (DriverPhase::Detecting, "Bye", DriverAction::FailUnexpected),
+    (DriverPhase::Detecting, "Fatal", DriverAction::FailPeer),
+    // ----- Aborting: survivors acknowledge with RoundFailed.
+    (DriverPhase::Aborting, "Hello", DriverAction::FailUnexpected),
+    (DriverPhase::Aborting, "Assign", DriverAction::FailUnexpected),
+    (DriverPhase::Aborting, "Ready", DriverAction::FailUnexpected),
+    (DriverPhase::Aborting, "StartRound", DriverAction::FailUnexpected),
+    (DriverPhase::Aborting, "Act", DriverAction::FailUnexpected),
+    (DriverPhase::Aborting, "Targets", DriverAction::FailUnexpected),
+    (DriverPhase::Aborting, "Grad", DriverAction::FailUnexpected),
+    (DriverPhase::Aborting, "Heartbeat", DriverAction::Background),
+    // The round raced the abort to completion: settled.
+    (DriverPhase::Aborting, "RoundDone", DriverAction::Ignore),
+    (DriverPhase::Aborting, "SyncRequest", DriverAction::Background),
+    (DriverPhase::Aborting, "SyncResult", DriverAction::FailUnexpected),
+    (DriverPhase::Aborting, "AbortRound", DriverAction::FailUnexpected),
+    (DriverPhase::Aborting, "RoundFailed", DriverAction::Accept),
+    (DriverPhase::Aborting, "FetchParams", DriverAction::FailUnexpected),
+    (DriverPhase::Aborting, "Params", DriverAction::FailUnexpected),
+    (DriverPhase::Aborting, "Exit", DriverAction::FailUnexpected),
+    (DriverPhase::Aborting, "Die", DriverAction::FailUnexpected),
+    (DriverPhase::Aborting, "Bye", DriverAction::FailUnexpected),
+    (DriverPhase::Aborting, "Fatal", DriverAction::FailPeer),
+    // ----- Closing: best-effort drain; nothing can fail the run now.
+    (DriverPhase::Closing, "Hello", DriverAction::Ignore),
+    (DriverPhase::Closing, "Assign", DriverAction::Ignore),
+    (DriverPhase::Closing, "Ready", DriverAction::Ignore),
+    (DriverPhase::Closing, "StartRound", DriverAction::Ignore),
+    (DriverPhase::Closing, "Act", DriverAction::Ignore),
+    (DriverPhase::Closing, "Targets", DriverAction::Ignore),
+    (DriverPhase::Closing, "Grad", DriverAction::Ignore),
+    (DriverPhase::Closing, "Heartbeat", DriverAction::Background),
+    (DriverPhase::Closing, "RoundDone", DriverAction::Ignore),
+    (DriverPhase::Closing, "SyncRequest", DriverAction::Background),
+    (DriverPhase::Closing, "SyncResult", DriverAction::Ignore),
+    (DriverPhase::Closing, "AbortRound", DriverAction::Ignore),
+    (DriverPhase::Closing, "RoundFailed", DriverAction::Ignore),
+    (DriverPhase::Closing, "FetchParams", DriverAction::Ignore),
+    (DriverPhase::Closing, "Params", DriverAction::Ignore),
+    (DriverPhase::Closing, "Exit", DriverAction::Ignore),
+    (DriverPhase::Closing, "Die", DriverAction::Ignore),
+    (DriverPhase::Closing, "Bye", DriverAction::Accept),
+    (DriverPhase::Closing, "Fatal", DriverAction::Ignore),
+];
+
+/// Transition of the driver machine for `kind` in `phase` (`None` is
+/// a protocol hole — `verify::protocol` reports it as `ASTR013`).
+pub fn driver_action(phase: DriverPhase, kind: &str) -> Option<DriverAction> {
+    DRIVER_TRANSITIONS
+        .iter()
+        .find(|&&(p, k, _)| p == phase && k == kind)
+        .map(|&(_, _, a)| a)
+}
+
+/// Messages the driver can emit, with the worker phases each may
+/// arrive in (connection FIFO, so emission context bounds arrival
+/// context).  `verify::protocol` checks the product automaton: every
+/// (emittable kind × possible receiver phase) must have a transition.
+pub const DRIVER_EMITS: &[(&str, &[WorkerPhase])] = &[
+    // Assign / FetchParams / StartRound are only sent between rounds,
+    // but an abort can leave the worker mid-round when they land.
+    ("Assign", &[WorkerPhase::Idle]),
+    ("StartRound", &[WorkerPhase::Idle]),
+    ("FetchParams", &[WorkerPhase::Idle]),
+    (
+        "AbortRound",
+        &[WorkerPhase::Idle, WorkerPhase::InRound, WorkerPhase::Syncing],
+    ),
+    (
+        "SyncResult",
+        &[WorkerPhase::Idle, WorkerPhase::InRound, WorkerPhase::Syncing],
+    ),
+    ("Exit", &[WorkerPhase::Idle, WorkerPhase::InRound]),
+    (
+        "Die",
+        &[WorkerPhase::Idle, WorkerPhase::InRound, WorkerPhase::Syncing],
+    ),
+    ("Act", &[WorkerPhase::Idle, WorkerPhase::InRound, WorkerPhase::Syncing]),
+    ("Targets", &[WorkerPhase::Idle, WorkerPhase::InRound, WorkerPhase::Syncing]),
+];
+
+/// Messages the worker can emit, with the driver phases each may
+/// arrive in.
+pub const WORKER_EMITS: &[(&str, &[DriverPhase])] = &[
+    ("Ready", &[DriverPhase::Assigning, DriverPhase::Closing]),
+    (
+        "RoundDone",
+        &[
+            DriverPhase::Rounding,
+            DriverPhase::Detecting,
+            DriverPhase::Aborting,
+            DriverPhase::Closing,
+        ],
+    ),
+    (
+        "RoundFailed",
+        &[
+            DriverPhase::Rounding,
+            DriverPhase::Detecting,
+            DriverPhase::Aborting,
+            DriverPhase::Assigning,
+            DriverPhase::Closing,
+        ],
+    ),
+    ("Params", &[DriverPhase::Checkpointing, DriverPhase::Closing]),
+    ("Bye", &[DriverPhase::Closing]),
+    (
+        "Heartbeat",
+        &[
+            DriverPhase::Assigning,
+            DriverPhase::Rounding,
+            DriverPhase::Checkpointing,
+            DriverPhase::Detecting,
+            DriverPhase::Aborting,
+            DriverPhase::Closing,
+        ],
+    ),
+    (
+        "SyncRequest",
+        &[
+            DriverPhase::Assigning,
+            DriverPhase::Rounding,
+            DriverPhase::Checkpointing,
+            DriverPhase::Detecting,
+            DriverPhase::Aborting,
+            DriverPhase::Closing,
+        ],
+    ),
+    (
+        "Fatal",
+        &[
+            DriverPhase::Assigning,
+            DriverPhase::Rounding,
+            DriverPhase::Checkpointing,
+            DriverPhase::Detecting,
+            DriverPhase::Aborting,
+            DriverPhase::Closing,
+        ],
+    ),
+];
+
 #[cfg(test)]
 mod tests {
     use super::*;

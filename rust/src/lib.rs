@@ -23,6 +23,12 @@
 //! over TCP, reference-kernel numerics); in-process PJRT execution of
 //! AOT artifacts needs the `pjrt` cargo feature (see rust/xla/).
 
+// The whole crate is safe Rust.  The one historical exception — a
+// zero-copy f32 -> byte reinterpretation at the XLA literal boundary
+// (`runtime::tensor`) — was replaced with a safe staging copy so the
+// guarantee holds under every feature combination.
+#![forbid(unsafe_code)]
+
 pub mod codec;
 pub mod comm;
 pub mod config;
@@ -39,3 +45,4 @@ pub mod schedule;
 pub mod session;
 pub mod sim;
 pub mod util;
+pub mod verify;

@@ -7,6 +7,7 @@
 //! asteroid train    --backend rpc --connect h:p,h:p,h:p --env nanos:3 --method pp \
 //!                   [--fail-after N --resume N --heartbeat-ms M] [--report out.json]
 //! asteroid replay   --model effnet --env D --fail <device-id>
+//! asteroid lint     [--format json] [--model M --env E --schedule P --codec C]
 //! asteroid envs
 //! ```
 //!
@@ -37,8 +38,10 @@ use asteroid::session::{
     ExecutionBackend, FaultSpec, PjrtBackend, RecoveryKind, RpcBackend, RunReport, Session,
     SimBackend,
 };
+use asteroid::util::bench::synthetic_fleet;
 use asteroid::util::cli::Args;
 use asteroid::util::stats::{human_bytes, human_secs};
+use asteroid::verify;
 
 fn cluster_from(args: &Args) -> Result<ClusterSpec> {
     let mbps = args.f64_or("mbps", 100.0)?;
@@ -373,6 +376,145 @@ fn report_json(r: &RunReport) -> String {
     )
 }
 
+/// `asteroid lint [--format json] [<session flags>]` — run the static
+/// verifier (`verify::all`: deadlock-freedom, memory abstract
+/// interpretation, version/staleness dataflow, codec-override
+/// validity, RPC protocol tables).
+///
+/// With any session flag (`--model/--env/--schedule/--codec/...`) the
+/// single described session is linted.  With no flags it sweeps the
+/// curated grid — every builtin policy x {fp32, int8, int8 plus a
+/// per-boundary override on a real cut} x {env C, a 128-device
+/// synthetic fleet} — the same grid CI's `lint-ir` job gates on.
+/// Exits nonzero on any diagnostic.
+fn cmd_lint(args: &Args) -> Result<()> {
+    let as_json = args.str_or("format", "text") == "json";
+    // (target label, finding) pairs, in discovery order.
+    let mut findings: Vec<(String, verify::Diagnostic)> = Vec::new();
+    let mut planner_errors: Vec<String> = Vec::new();
+    let mut checked = 0usize;
+
+    let lint_one = |label: String, s: &Session, findings: &mut Vec<(String, verify::Diagnostic)>| {
+        for d in verify::all(&verify::Target::of_session(s)) {
+            findings.push((label.clone(), d));
+        }
+    };
+
+    let single = ["model", "env", "cluster", "schedule", "codec", "method", "minibatch", "micro"]
+        .iter()
+        .any(|k| args.get(k).is_some());
+    if single {
+        let s = session_from(args, "mobilenetv2")?;
+        checked += 1;
+        let label = format!(
+            "{} {} {}",
+            s.model().name,
+            s.schedule().policy,
+            s.codec().describe()
+        );
+        lint_one(label, &s, &mut findings);
+    } else {
+        let clusters: Vec<(&str, ClusterSpec)> = vec![
+            ("env-C", ClusterSpec::env("C", 100.0)?),
+            ("fleet128", synthetic_fleet(128, 100.0)),
+        ];
+        for (cname, cluster) in &clusters {
+            for policy in builtin_policies() {
+                let build = |codec: CodecSpec| -> Result<Session> {
+                    Session::builder()
+                        .model("mobilenetv2")
+                        .cluster(cluster.clone())
+                        .train(TrainConfig::new(256, 16))
+                        .schedule(policy)
+                        .codec(codec)
+                        .build()
+                };
+                // fp32 and int8 uniform, then int8 with an explicit
+                // override pinned to a cut the int8 plan actually has
+                // (identical pricing, so the plan is stable and the
+                // override provably applies).
+                let mut points: Vec<(String, CodecSpec)> = vec![
+                    ("fp32".into(), CodecSpec::uniform(Codec::Fp32)),
+                    ("int8".into(), CodecSpec::uniform(Codec::Int8)),
+                ];
+                match build(CodecSpec::uniform(Codec::Int8)) {
+                    Ok(s) if s.plan().num_stages() > 1 => {
+                        let cut = s.plan().stages[0].layers.1;
+                        points.push((
+                            format!("int8,{cut}=int8"),
+                            CodecSpec::uniform(Codec::Int8).with_override(cut, Codec::Int8)?,
+                        ));
+                    }
+                    _ => {} // single-stage or infeasible: covered below
+                }
+                for (cdesc, codec) in points {
+                    match build(codec) {
+                        Ok(s) => {
+                            checked += 1;
+                            lint_one(
+                                format!("{cname} {} {cdesc}", policy.name()),
+                                &s,
+                                &mut findings,
+                            );
+                        }
+                        // An infeasible grid point is a planner
+                        // limitation, not a schedule defect — record
+                        // it (no silent shrink) without failing lint.
+                        Err(e) => planner_errors
+                            .push(format!("{cname} {} {cdesc}: {e:#}", policy.name())),
+                    }
+                }
+            }
+        }
+    }
+
+    if as_json {
+        let esc = |s: &str| s.replace('\\', "\\\\").replace('"', "\\\"");
+        let rows: Vec<String> = findings
+            .iter()
+            .map(|(label, d)| {
+                let device = match d.device {
+                    Some(dev) => dev.to_string(),
+                    None => "null".to_string(),
+                };
+                format!(
+                    "{{\"target\": \"{}\", \"code\": \"{}\", \"title\": \"{}\", \
+                     \"device\": {}, \"message\": \"{}\"}}",
+                    esc(label),
+                    d.code.id(),
+                    esc(d.code.title()),
+                    device,
+                    esc(&d.message),
+                )
+            })
+            .collect();
+        let errs: Vec<String> =
+            planner_errors.iter().map(|e| format!("\"{}\"", esc(e))).collect();
+        println!(
+            "{{\n  \"checked\": {checked},\n  \"planner_errors\": [{}],\n  \
+             \"diagnostics\": [{}]\n}}",
+            errs.join(", "),
+            rows.join(", ")
+        );
+    } else {
+        for (label, d) in &findings {
+            println!("{} [{label}] {}", d.code.id(), d.message);
+        }
+        for e in &planner_errors {
+            eprintln!("note: grid point not planned: {e}");
+        }
+        println!(
+            "lint: {} session(s) checked, {} diagnostic(s)",
+            checked,
+            findings.len()
+        );
+    }
+    if !findings.is_empty() {
+        bail!("{} lint diagnostic(s)", findings.len());
+    }
+    Ok(())
+}
+
 fn cmd_replay(args: &Args) -> Result<()> {
     let base = session_from(args, "efficientnet-b1")?;
     let devices = base.plan().devices();
@@ -460,11 +602,12 @@ fn main() -> Result<()> {
         Some("simulate") => cmd_simulate(&args),
         Some("train") => cmd_train(&args),
         Some("replay") => cmd_replay(&args),
+        Some("lint") => cmd_lint(&args),
         Some("envs") => cmd_envs(),
         other => {
             eprintln!(
                 "asteroid: unknown command {other:?}\n\
-                 usage: asteroid <plan|simulate|train|replay|envs> \
+                 usage: asteroid <plan|simulate|train|replay|lint|envs> \
                  [--model M --env E --mbps N --method P ...]"
             );
             if other.is_none() {

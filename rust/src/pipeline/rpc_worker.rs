@@ -30,7 +30,10 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::codec::Codec;
-use crate::comm::rpc::{recv_msg, send_msg, send_msg_codec, AssignSpec, ConnRole, LayerState, RpcMsg};
+use crate::comm::rpc::{
+    recv_msg, send_msg, send_msg_codec, worker_action, AssignSpec, ConnRole, LayerState, RpcMsg,
+    WorkerAction, WorkerPhase,
+};
 use crate::pipeline::step::{run_script_round, DataMsg, DataPlane, ReferenceStage};
 
 /// How long a worker keeps re-dialling a peer data address before
@@ -240,14 +243,19 @@ impl WorkerState {
                     bail!("driver control connection lost");
                 }
                 Inbox::Closed(ConnRole::Data { .. }) => {} // peer churn: fine while idle
-                Inbox::Ctrl(msg) => match msg {
-                    RpcMsg::Assign(spec) => self.apply_assign(*spec)?,
-                    RpcMsg::StartRound { round } => {
+                // Dispatch through the declarative machine in
+                // `comm::rpc` — the table picks the transition, the
+                // arms below only bind payloads and run it.
+                Inbox::Ctrl(msg) => match (worker_action(WorkerPhase::Idle, msg.kind()), msg) {
+                    (Some(WorkerAction::ApplyAssign), RpcMsg::Assign(spec)) => {
+                        self.apply_assign(*spec)?
+                    }
+                    (Some(WorkerAction::BeginRound), RpcMsg::StartRound { round }) => {
                         if self.run_round(round)? {
                             return Ok(ServeOutcome::Died);
                         }
                     }
-                    RpcMsg::FetchParams => {
+                    (Some(WorkerAction::SendParams), RpcMsg::FetchParams) => {
                         let layers = match &self.assigned {
                             Some(a) => a
                                 .stage
@@ -259,7 +267,7 @@ impl WorkerState {
                         };
                         self.send_ctrl(&RpcMsg::Params { layers })?;
                     }
-                    RpcMsg::AbortRound => {
+                    (Some(WorkerAction::AckAbort), RpcMsg::AbortRound) => {
                         // Idle abort: the driver is tearing a round down
                         // that we already finished (or never started) —
                         // drop stale in-flight data and acknowledge by
@@ -272,17 +280,20 @@ impl WorkerState {
                             });
                         }
                     }
-                    RpcMsg::Exit => {
+                    (Some(WorkerAction::ExitClean), RpcMsg::Exit) => {
                         let _ = self.send_ctrl(&RpcMsg::Bye);
                         return Ok(ServeOutcome::Clean);
                     }
-                    RpcMsg::Die => {
+                    (Some(WorkerAction::DieNow), RpcMsg::Die) => {
                         // Only reachable with die_for_real off (thread
                         // mode): emulate process death by dropping
                         // every connection.
                         return Ok(ServeOutcome::Died);
                     }
-                    other => {
+                    // IgnoreIdle — plus the unreachable leftovers: the
+                    // reader thread routes tensor frames to Inbox::Data
+                    // before they can surface as control messages.
+                    (_, other) => {
                         if self.opts.verbose {
                             eprintln!("asteroid-worker: ignoring {} while idle", other.kind());
                         }
@@ -489,9 +500,11 @@ fn wait_sync_result(
 ) -> Result<Vec<f32>> {
     loop {
         match rx.recv().map_err(|_| anyhow!("worker inbox closed"))? {
-            Inbox::Ctrl(RpcMsg::SyncResult { flat }) => return Ok(flat),
-            Inbox::Ctrl(RpcMsg::AbortRound) => bail!("round aborted during sync"),
-            Inbox::Ctrl(other) => bail!("unexpected {} during round sync", other.kind()),
+            Inbox::Ctrl(msg) => match (worker_action(WorkerPhase::Syncing, msg.kind()), msg) {
+                (Some(WorkerAction::DeliverSync), RpcMsg::SyncResult { flat }) => return Ok(flat),
+                (Some(WorkerAction::FailAbort), _) => bail!("round aborted during sync"),
+                (_, other) => bail!("unexpected {} during round sync", other.kind()),
+            },
             Inbox::Data(g, d) => carryover.push_back((g, d)),
             Inbox::Closed(ConnRole::Control) => bail!("driver lost during round sync"),
             Inbox::Closed(ConnRole::Data { .. }) => {} // peer churn: driver decides
@@ -538,12 +551,12 @@ impl DataPlane for RpcDataPlane<'_> {
                     // Stale generation: a frame the aborted round left
                     // in flight — drop it.
                 }
-                Inbox::Ctrl(RpcMsg::AbortRound) => bail!("round aborted by driver"),
-                Inbox::Ctrl(RpcMsg::Die) => return Err(anyhow::Error::new(DieMidRound)),
-                Inbox::Ctrl(RpcMsg::Exit) => bail!("shutdown requested mid-round"),
-                Inbox::Ctrl(other) => {
-                    bail!("unexpected control message {} mid-round", other.kind())
-                }
+                Inbox::Ctrl(msg) => match worker_action(WorkerPhase::InRound, msg.kind()) {
+                    Some(WorkerAction::FailAbort) => bail!("round aborted by driver"),
+                    Some(WorkerAction::DieNow) => return Err(anyhow::Error::new(DieMidRound)),
+                    Some(WorkerAction::FailExit) => bail!("shutdown requested mid-round"),
+                    _ => bail!("unexpected control message {} mid-round", msg.kind()),
+                },
                 Inbox::Closed(ConnRole::Control) => bail!("driver lost mid-round"),
                 // A data connection ended.  This is either churn from a
                 // superseded assignment (stale peers closing after a

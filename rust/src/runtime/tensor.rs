@@ -108,34 +108,26 @@ impl Tensor {
 #[cfg(feature = "pjrt")]
 impl Tensor {
     pub fn to_literal(&self) -> Result<xla::Literal> {
-        // Single memcpy via the untyped constructor (vec1().reshape()
-        // copies twice — 10x slower on the 256 KB stage tensors; see
-        // EXPERIMENTS.md §Perf).
+        // One bulk byte-staging pass feeding the untyped constructor
+        // (vec1().reshape() builds the literal element-by-element —
+        // 10x slower on the 256 KB stage tensors; see EXPERIMENTS.md
+        // §Perf).  The staging copy keeps the crate free of unsafe
+        // pointer reinterpretation under `#![forbid(unsafe_code)]`.
         let lit = match &self.data {
             TensorData::F32(v) => {
-                let bytes = unsafe {
-                    std::slice::from_raw_parts(
-                        v.as_ptr() as *const u8,
-                        std::mem::size_of_val(v.as_slice()),
-                    )
-                };
+                let bytes = ne_bytes(v, |x: &f32| x.to_ne_bytes());
                 xla::Literal::create_from_shape_and_untyped_data(
                     xla::ElementType::F32,
                     &self.shape,
-                    bytes,
+                    &bytes,
                 )?
             }
             TensorData::I32(v) => {
-                let bytes = unsafe {
-                    std::slice::from_raw_parts(
-                        v.as_ptr() as *const u8,
-                        std::mem::size_of_val(v.as_slice()),
-                    )
-                };
+                let bytes = ne_bytes(v, |x: &i32| x.to_ne_bytes());
                 xla::Literal::create_from_shape_and_untyped_data(
                     xla::ElementType::S32,
                     &self.shape,
-                    bytes,
+                    &bytes,
                 )?
             }
         };
@@ -152,6 +144,17 @@ impl Tensor {
         };
         Ok(Tensor { shape: dims, data })
     }
+}
+
+/// Stage a 4-byte-element slice into one contiguous native-endian byte
+/// buffer (bit-identical to the raw reinterpretation it replaces).
+#[cfg(feature = "pjrt")]
+fn ne_bytes<T>(v: &[T], f: impl Fn(&T) -> [u8; 4]) -> Vec<u8> {
+    let mut out = vec![0u8; 4 * v.len()];
+    for (dst, x) in out.chunks_exact_mut(4).zip(v) {
+        dst.copy_from_slice(&f(x));
+    }
+    out
 }
 
 #[cfg(test)]

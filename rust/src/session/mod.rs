@@ -481,6 +481,29 @@ impl SessionBuilder {
             .with_context(|| format!("planning ({})", self.planner.describe()))?;
         let schedule = outcome.schedule.clone();
 
+        // A `--codec` per-boundary override only ever applies where a
+        // planned stage cut crosses that layer index.  An override on
+        // any other boundary is silently inert — reject it here (and
+        // `asteroid lint` reports the same defect as ASTR014).
+        let cuts: Vec<usize> = outcome
+            .plan
+            .stages
+            .iter()
+            .take(outcome.plan.stages.len().saturating_sub(1))
+            .map(|s| s.layers.1)
+            .collect();
+        for (b, c) in self.codec.overrides() {
+            if !cuts.contains(&(b as usize)) {
+                anyhow::bail!(
+                    "codec override {}={} names no planned stage boundary \
+                     (the plan cuts at {:?}); the override would be silently inert",
+                    b,
+                    c.name(),
+                    cuts
+                );
+            }
+        }
+
         Ok(Session {
             source,
             cluster,

@@ -1,0 +1,210 @@
+//! Deadlock-freedom: the cross-device task dependency graph must be
+//! acyclic under *finite* channel capacity.
+//!
+//! Nodes are (timeline, task position).  Three edge families:
+//!
+//! * **chain** — each timeline executes its tasks in order;
+//! * **comm** — a `Recv` cannot complete before its matching `Send`
+//!   (matched on `(from, to, micro, payload)`);
+//! * **capacity** — a channel buffers at most `C` undelivered
+//!   transfers, so the k-th `Send` on a channel cannot start before
+//!   the (k-C)-th `Recv` drained its slot.  `C` is derived from the
+//!   two endpoints' effective K_p windows (each end can hold at most
+//!   its in-flight window of boundary tensors).
+//!
+//! Any cycle means the live pipeline would block forever — reported
+//! as `ASTR001` with the cycle spelled out.  Unmatched or duplicated
+//! transfers (which would also hang, but for a different reason) are
+//! `ASTR005`.
+
+use std::collections::HashMap;
+
+use crate::schedule::{Payload, Task};
+
+use super::{task_name, Code, Diagnostic, Target};
+
+/// Check one target's schedule for deadlock (`ASTR001`) and transfer
+/// mismatches (`ASTR005`).
+pub fn check(t: &Target) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let s = t.schedule;
+
+    // Flat node ids: offsets[ti] + task position.
+    let mut offsets = Vec::with_capacity(s.timelines.len());
+    let mut n_nodes = 0usize;
+    for tl in &s.timelines {
+        offsets.push(n_nodes);
+        n_nodes += tl.tasks.len();
+    }
+    let mut succs: Vec<Vec<usize>> = vec![Vec::new(); n_nodes];
+    let mut preds: Vec<Vec<usize>> = vec![Vec::new(); n_nodes];
+    fn add_edge(succs: &mut [Vec<usize>], preds: &mut [Vec<usize>], a: usize, b: usize) {
+        succs[a].push(b);
+        preds[b].push(a);
+    }
+
+    // Chain edges.
+    for (ti, tl) in s.timelines.iter().enumerate() {
+        for k in 1..tl.tasks.len() {
+            add_edge(&mut succs, &mut preds, offsets[ti] + k - 1, offsets[ti] + k);
+        }
+    }
+
+    // Transfer endpoints, keyed by (from, to, micro, payload).
+    type Key = (usize, usize, usize, Payload);
+    let mut sends: HashMap<Key, (usize, u64)> = HashMap::new();
+    let mut recvs: HashMap<Key, (usize, u64)> = HashMap::new();
+    // Per-channel ordered endpoint lists for capacity back-edges.
+    let mut chan_sends: HashMap<(usize, usize, Payload), Vec<usize>> = HashMap::new();
+    let mut chan_recvs: HashMap<(usize, usize, Payload), Vec<usize>> = HashMap::new();
+    let mut kp_of: HashMap<usize, usize> = HashMap::new();
+
+    for (ti, tl) in s.timelines.iter().enumerate() {
+        kp_of.insert(tl.device, tl.kp.max(1));
+        for (k, task) in tl.tasks.iter().enumerate() {
+            let node = offsets[ti] + k;
+            match *task {
+                Task::Send { micro, to, payload, bytes } => {
+                    let key = (tl.device, to, micro, payload);
+                    if sends.insert(key, (node, bytes)).is_some() {
+                        let msg = format!(
+                            "duplicate Send d{} -> d{} micro {} {:?}",
+                            tl.device, to, micro, payload
+                        );
+                        out.push(Diagnostic::new(Code::CommMismatch, Some(tl.device), msg));
+                    }
+                    chan_sends.entry((tl.device, to, payload)).or_default().push(node);
+                }
+                Task::Recv { micro, from, payload, bytes } => {
+                    let key = (from, tl.device, micro, payload);
+                    if recvs.insert(key, (node, bytes)).is_some() {
+                        let msg = format!(
+                            "duplicate Recv d{} <- d{} micro {} {:?}",
+                            tl.device, from, micro, payload
+                        );
+                        out.push(Diagnostic::new(Code::CommMismatch, Some(tl.device), msg));
+                    }
+                    chan_recvs.entry((from, tl.device, payload)).or_default().push(node);
+                }
+                _ => {}
+            }
+        }
+    }
+
+    // Comm edges + mismatch findings.
+    for (key, &(snode, sbytes)) in &sends {
+        match recvs.get(key) {
+            Some(&(rnode, rbytes)) => {
+                add_edge(&mut succs, &mut preds, snode, rnode);
+                if sbytes != rbytes {
+                    out.push(Diagnostic::new(
+                        Code::CommMismatch,
+                        Some(key.0),
+                        format!(
+                            "transfer d{} -> d{} micro {} {:?}: sender says {} bytes, receiver {}",
+                            key.0, key.1, key.2, key.3, sbytes, rbytes
+                        ),
+                    ));
+                }
+            }
+            None => {
+                let msg = format!(
+                    "Send d{} -> d{} micro {} {:?} has no matching Recv",
+                    key.0, key.1, key.2, key.3
+                );
+                out.push(Diagnostic::new(Code::CommMismatch, Some(key.0), msg));
+            }
+        }
+    }
+    for key in recvs.keys().filter(|k| !sends.contains_key(*k)) {
+        let msg = format!(
+            "Recv d{} <- d{} micro {} {:?} has no matching Send",
+            key.1, key.0, key.2, key.3
+        );
+        out.push(Diagnostic::new(Code::CommMismatch, Some(key.1), msg));
+    }
+
+    // Capacity back-edges: on channel (src, dst, payload) the k-th
+    // send (in sender program order) waits for the (k - C)-th recv (in
+    // receiver program order).  C = both endpoints' windows combined —
+    // a deliberately generous bound so no validate-clean schedule is
+    // ever flagged, while unbounded-buffer assumptions still are.
+    for (chan, snodes) in &chan_sends {
+        let Some(rnodes) = chan_recvs.get(chan) else { continue };
+        if snodes.len() != rnodes.len() {
+            continue; // already reported as ASTR005
+        }
+        let cap =
+            kp_of.get(&chan.0).copied().unwrap_or(1) + kp_of.get(&chan.1).copied().unwrap_or(1);
+        for k in cap..snodes.len() {
+            add_edge(&mut succs, &mut preds, rnodes[k - cap], snodes[k]);
+        }
+    }
+
+    // Kahn peel; anything left sits on a cycle.
+    let mut indeg: Vec<usize> = preds.iter().map(Vec::len).collect();
+    let mut queue: Vec<usize> = (0..n_nodes).filter(|&n| indeg[n] == 0).collect();
+    let mut seen = 0usize;
+    while let Some(n) = queue.pop() {
+        seen += 1;
+        for &m in &succs[n] {
+            indeg[m] -= 1;
+            if indeg[m] == 0 {
+                queue.push(m);
+            }
+        }
+    }
+    if seen < n_nodes {
+        let remaining: Vec<usize> = (0..n_nodes).filter(|&n| indeg[n] > 0).collect();
+        out.push(cycle_diagnostic(t, &offsets, &preds, &remaining));
+    }
+    out
+}
+
+/// Walk predecessors inside the stuck set (every stuck node has one)
+/// until a node repeats, then report that loop.
+fn cycle_diagnostic(
+    t: &Target,
+    offsets: &[usize],
+    preds: &[Vec<usize>],
+    remaining: &[usize],
+) -> Diagnostic {
+    let in_set: std::collections::HashSet<usize> = remaining.iter().copied().collect();
+    let mut path = Vec::new();
+    let mut at = remaining[0];
+    let mut pos: HashMap<usize, usize> = HashMap::new();
+    let cycle: Vec<usize> = loop {
+        if let Some(&i) = pos.get(&at) {
+            break path[i..].to_vec();
+        }
+        pos.insert(at, path.len());
+        path.push(at);
+        at = *preds[at]
+            .iter()
+            .find(|p| in_set.contains(p))
+            .expect("stuck node without stuck predecessor");
+    };
+    let locate = |node: usize| -> (usize, usize) {
+        let ti = match offsets.binary_search(&node) {
+            Ok(i) => i,
+            Err(i) => i - 1,
+        };
+        (ti, node - offsets[ti])
+    };
+    let mut parts = Vec::new();
+    for &node in cycle.iter().rev().take(8) {
+        let (ti, k) = locate(node);
+        let tl = &t.schedule.timelines[ti];
+        parts.push(format!("d{}#{}:{}", tl.device, k, task_name(&tl.tasks[k])));
+    }
+    let suffix = if cycle.len() > 8 {
+        format!(" ... ({} tasks total)", cycle.len())
+    } else {
+        String::new()
+    };
+    Diagnostic::new(
+        Code::DeadlockCycle,
+        None,
+        format!("dependency cycle: {}{}", parts.join(" -> "), suffix),
+    )
+}

@@ -1,0 +1,136 @@
+//! Memory abstract interpretation: replay each timeline symbolically
+//! and derive the peak resident bytes per device *independently* of
+//! the planner's Eq. 3 accounting.
+//!
+//! The abstract state per timeline is the count of in-flight
+//! micro-batches (a `Fwd` pins its activations, the matching `Bwd`
+//! releases them — `BwdW` is free, its micro's residency was already
+//! released).  On top of that sit the fixed charges (weights +
+//! accumulated gradients, optimizer state, weight-stash copies) and a
+//! transient transcode buffer when a boundary crosses a non-identity
+//! wire codec.  Three findings:
+//!
+//! * `ASTR002` — the replayed in-flight peak exceeds the timeline's
+//!   own encoded K_p window;
+//! * `ASTR011` — the derived peak exceeds the device's `mem_bytes`;
+//! * `ASTR012` — the derived peak (excluding transcode scratch, which
+//!   Eq. 3 deliberately does not price) exceeds what the planner
+//!   budgeted via `StageMemory` — an N-version disagreement between
+//!   two independent implementations of the same accounting.
+
+use crate::model::from_manifest::DType;
+use crate::planner::memory::stage_memory_for_policy;
+use crate::schedule::{Payload, Task};
+
+use super::{Code, Diagnostic, Target};
+
+/// Check one target's schedule against device budgets and the
+/// planner's own memory model.
+pub fn check(t: &Target) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for tl in &t.schedule.timelines {
+        if tl.share == 0 {
+            continue; // idle slot: no residency
+        }
+        let Some(stage) = t.plan.stages.get(tl.stage) else {
+            continue; // stage index outside the plan: staleness pass reports shape issues
+        };
+        let (i, j) = stage.layers;
+        let w = t.model.weight_bytes_range(i, j);
+        let fixed = 2 * w
+            + (t.cfg.optimizer_mem_factor * w as f64) as u64
+            + tl.stash_copies as u64 * w;
+        let input = if i == 0 { t.model.input_bytes } else { t.model.boundary_bytes(i) };
+        let act_per_mb = (t.model.act_bytes_range(i, j) + input) * tl.share as u64;
+
+        // Replay: in-flight micro count and peak.
+        let mut inflight = 0usize;
+        let mut peak = 0usize;
+        // Transcode scratch: transient, one transfer at a time, so the
+        // charge is the max over the timeline's boundary transfers.
+        let mut transcode = 0u64;
+        for task in &tl.tasks {
+            match *task {
+                Task::Fwd { .. } => {
+                    inflight += 1;
+                    peak = peak.max(inflight);
+                }
+                Task::Bwd { .. } => inflight = inflight.saturating_sub(1),
+                Task::Send { payload, bytes, .. } | Task::Recv { payload, bytes, .. } => {
+                    // The boundary a transfer crosses: activations exit
+                    // over the stage's output cut j and enter over its
+                    // input cut i; gradients mirror that.
+                    let boundary = match (payload, matches!(*task, Task::Send { .. })) {
+                        (Payload::Activation, true) | (Payload::Gradient, false) => j,
+                        (Payload::Activation, false) | (Payload::Gradient, true) => i,
+                    };
+                    let codec = t.codec.at_boundary(boundary);
+                    if !matches!(codec, crate::codec::Codec::Fp32) {
+                        transcode = transcode.max(codec.wire_bytes(bytes, DType::F32));
+                    }
+                }
+                Task::BwdW { .. } | Task::AllReduce { .. } => {}
+            }
+        }
+
+        if peak > tl.kp.max(1) {
+            out.push(Diagnostic::new(
+                Code::InflightWindow,
+                Some(tl.device),
+                format!(
+                    "replay holds {} in-flight micros but the timeline's window is {} ({})",
+                    peak,
+                    tl.kp.max(1),
+                    t.schedule.policy
+                ),
+            ));
+        }
+
+        let replayed = fixed + peak as u64 * act_per_mb;
+        if let Some(dev) = t.cluster.devices.get(tl.device) {
+            if replayed + transcode > dev.mem_bytes {
+                out.push(Diagnostic::new(
+                    Code::MemoryBudget,
+                    Some(tl.device),
+                    format!(
+                        "derived peak {}B (fixed {}B + {} x {}B act + {}B transcode) \
+                         exceeds {} budget {}B",
+                        replayed + transcode,
+                        fixed,
+                        peak,
+                        act_per_mb,
+                        transcode,
+                        dev.name,
+                        dev.mem_bytes
+                    ),
+                ));
+            }
+        }
+
+        // N-version check: the planner must have budgeted at least what
+        // the replay observes.  One-sided — the planner may legitimately
+        // over-budget (it charges the full window even when the replay's
+        // steady state never fills it).
+        let planned = stage_memory_for_policy(
+            t.model,
+            t.cfg,
+            i,
+            j,
+            tl.share,
+            stage.kp,
+            t.plan.num_micro,
+            t.policy,
+        )
+        .total();
+        if replayed > planned {
+            out.push(Diagnostic::new(
+                Code::MemoryDisagreement,
+                Some(tl.device),
+                format!(
+                    "replay derives {replayed}B peak but the planner budgeted {planned}B (Eq. 3)"
+                ),
+            ));
+        }
+    }
+    out
+}

@@ -1,0 +1,263 @@
+//! Static verification of the three machine-generated artifact
+//! classes: `Schedule` IR, `Plan` memory accounting, and the RPC
+//! control-plane protocol.  Surfaced as `asteroid lint`.
+//!
+//! Everything the planner and policies emit is checked *before* a
+//! worker is spawned, so a bad (policy, plan, K_p, codec) combination
+//! shows up as a coded diagnostic instead of a hang, an OOM, or a
+//! silently applied stale gradient mid-run.  Four analyses:
+//!
+//! 1. [`deadlock`] — cross-device task dependency graph (intra-stage
+//!    order, Send/Recv comm edges, finite-channel back-edges derived
+//!    from the effective K_p window); any cycle is `ASTR001`.
+//! 2. [`memory`] — symbolic replay of each timeline tracking
+//!    activation residency, weight-stash copies, and codec transcode
+//!    buffers, deriving peak bytes per device *independently* of the
+//!    planner's Eq. 3 accounting; budget violations are `ASTR011`,
+//!    planner/verifier disagreement is `ASTR012` (an N-version check
+//!    on `StageMemory`).
+//! 3. [`staleness`] — version/staleness dataflow: every Bwd/BwdW
+//!    reads a version actually stashed, no gradient older than the
+//!    window is applied, sync policies tag all-zero.  Subsumes and
+//!    strengthens `Schedule::validate` with coded per-task findings.
+//! 4. [`protocol`] — exhaustive enumeration of the driver x worker
+//!    control-plane product automaton over the declarative transition
+//!    tables in `comm::rpc` (the same tables the live serve loop
+//!    dispatches through — there is no second copy of the machine).
+//!
+//! See `rust/docs/VERIFY.md` for the diagnostic-code table and a
+//! worked deadlock example.
+
+use std::fmt;
+
+use crate::codec::CodecSpec;
+use crate::config::{ClusterSpec, TrainConfig};
+use crate::model::ModelDesc;
+use crate::planner::Plan;
+use crate::schedule::{Schedule, SchedulePolicy, Task};
+use crate::session::Session;
+
+pub mod deadlock;
+pub mod memory;
+pub mod protocol;
+pub mod staleness;
+
+/// Stable diagnostic codes, one per distinct defect class.  Codes are
+/// append-only: a released code never changes meaning.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Code {
+    /// ASTR001: the cross-device dependency graph has a cycle — the
+    /// live pipeline would deadlock.
+    DeadlockCycle,
+    /// ASTR002: a timeline holds more in-flight micro-batches than
+    /// its encoded K_p window.
+    InflightWindow,
+    /// ASTR003: intra-timeline order violation (Bwd before Fwd, BwdW
+    /// before Bwd, Send before its producer, Recv after its consumer).
+    OrderViolation,
+    /// ASTR004: duplicate compute task for the same micro-batch.
+    DuplicateTask,
+    /// ASTR005: unmatched or duplicated Send/Recv, or a byte-size
+    /// disagreement between the two ends of a transfer.
+    CommMismatch,
+    /// ASTR006: forward/backward count mismatch at end of round.
+    CountMismatch,
+    /// ASTR007: a split-backward timeline with BwdW for only some
+    /// micro-batches.
+    PartialSplit,
+    /// ASTR008: nonzero weight-version tag under a synchronous policy.
+    SyncNonzeroVersion,
+    /// ASTR009: a task reads a weight version that was never stashed
+    /// (or disagrees with its forward's version).
+    VersionMismatch,
+    /// ASTR010: a gradient older than the staleness window would be
+    /// applied.
+    StalenessWindow,
+    /// ASTR011: verifier-derived peak bytes exceed the device budget.
+    MemoryBudget,
+    /// ASTR012: the verifier's independently derived peak exceeds the
+    /// planner's Eq. 3 accounting (N-version disagreement).
+    MemoryDisagreement,
+    /// ASTR013: unhandled or ambiguous (state, message) pair in the
+    /// RPC control-plane product automaton.
+    ProtocolHole,
+    /// ASTR014: a `--codec` per-boundary override names a boundary
+    /// that no planned stage cut produces (silently inert).
+    CodecOverride,
+}
+
+impl Code {
+    /// Every code, in numeric order.
+    pub const ALL: [Code; 14] = [
+        Code::DeadlockCycle,
+        Code::InflightWindow,
+        Code::OrderViolation,
+        Code::DuplicateTask,
+        Code::CommMismatch,
+        Code::CountMismatch,
+        Code::PartialSplit,
+        Code::SyncNonzeroVersion,
+        Code::VersionMismatch,
+        Code::StalenessWindow,
+        Code::MemoryBudget,
+        Code::MemoryDisagreement,
+        Code::ProtocolHole,
+        Code::CodecOverride,
+    ];
+
+    /// The stable wire identifier (`ASTR001`..).
+    pub fn id(self) -> &'static str {
+        match self {
+            Code::DeadlockCycle => "ASTR001",
+            Code::InflightWindow => "ASTR002",
+            Code::OrderViolation => "ASTR003",
+            Code::DuplicateTask => "ASTR004",
+            Code::CommMismatch => "ASTR005",
+            Code::CountMismatch => "ASTR006",
+            Code::PartialSplit => "ASTR007",
+            Code::SyncNonzeroVersion => "ASTR008",
+            Code::VersionMismatch => "ASTR009",
+            Code::StalenessWindow => "ASTR010",
+            Code::MemoryBudget => "ASTR011",
+            Code::MemoryDisagreement => "ASTR012",
+            Code::ProtocolHole => "ASTR013",
+            Code::CodecOverride => "ASTR014",
+        }
+    }
+
+    /// One-line human title.
+    pub fn title(self) -> &'static str {
+        match self {
+            Code::DeadlockCycle => "dependency cycle (pipeline would deadlock)",
+            Code::InflightWindow => "in-flight micros exceed the K_p window",
+            Code::OrderViolation => "task order violation",
+            Code::DuplicateTask => "duplicate compute task",
+            Code::CommMismatch => "Send/Recv mismatch",
+            Code::CountMismatch => "forward/backward count mismatch",
+            Code::PartialSplit => "partial split backward",
+            Code::SyncNonzeroVersion => "nonzero version tag under sync policy",
+            Code::VersionMismatch => "weight version never stashed",
+            Code::StalenessWindow => "staleness window exceeded",
+            Code::MemoryBudget => "peak memory exceeds device budget",
+            Code::MemoryDisagreement => "planner/verifier memory disagreement",
+            Code::ProtocolHole => "unhandled RPC (state, message) pair",
+            Code::CodecOverride => "codec override names no planned boundary",
+        }
+    }
+}
+
+/// One finding: a code, the device it concerns (when device-scoped),
+/// and a human message with the concrete evidence.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    /// The defect class.
+    pub code: Code,
+    /// Global device id the finding is anchored to, if any.
+    pub device: Option<usize>,
+    /// Concrete evidence (task positions, byte counts, versions).
+    pub message: String,
+}
+
+impl Diagnostic {
+    pub(crate) fn new(code: Code, device: Option<usize>, message: String) -> Diagnostic {
+        Diagnostic { code, device, message }
+    }
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.device {
+            Some(d) => write!(f, "{} device {}: {}", self.code.id(), d, self.message),
+            None => write!(f, "{}: {}", self.code.id(), self.message),
+        }
+    }
+}
+
+/// Everything the analyses need about one planned workload.  Borrowed
+/// so a grid runner can lint many (policy, codec, cluster) points
+/// without cloning models.
+pub struct Target<'a> {
+    /// The model the plan partitions.
+    pub model: &'a ModelDesc,
+    /// Training shape (micro-batch size, optimizer factor).
+    pub cfg: &'a TrainConfig,
+    /// Device budgets (`mem_bytes`) the memory analysis checks.
+    pub cluster: &'a ClusterSpec,
+    /// The planner's stage partition and allocation.
+    pub plan: &'a Plan,
+    /// The schedule IR under analysis.
+    pub schedule: &'a Schedule,
+    /// The policy that generated the schedule (for Eq. 3 replication).
+    pub policy: &'a dyn SchedulePolicy,
+    /// Wire codec spec (transcode buffers, override validation).
+    pub codec: &'a CodecSpec,
+}
+
+impl<'a> Target<'a> {
+    /// Borrow every artifact of a built [`Session`].
+    pub fn of_session(s: &'a Session) -> Target<'a> {
+        Target {
+            model: s.model(),
+            cfg: s.train_config(),
+            cluster: s.cluster(),
+            plan: s.plan(),
+            schedule: s.schedule(),
+            policy: s.policy(),
+            codec: s.codec(),
+        }
+    }
+}
+
+/// Run every analysis over one target (including the target-independent
+/// protocol check) and return the findings sorted by code, device.
+pub fn all(t: &Target) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    out.extend(deadlock::check(t));
+    out.extend(memory::check(t));
+    out.extend(staleness::check(t));
+    out.extend(codec_overrides(t));
+    out.extend(protocol::check());
+    out.sort_by(|a, b| (a.code, a.device).cmp(&(b.code, b.device)));
+    out
+}
+
+/// ASTR014: every `--codec` per-boundary override must name a
+/// boundary some planned stage cut actually produces — an override on
+/// any other layer index is silently inert (no wire ever crosses it).
+pub fn codec_overrides(t: &Target) -> Vec<Diagnostic> {
+    let cuts: Vec<usize> = t
+        .plan
+        .stages
+        .iter()
+        .take(t.plan.stages.len().saturating_sub(1))
+        .map(|s| s.layers.1)
+        .collect();
+    t.codec
+        .overrides()
+        .filter(|(b, _)| !cuts.contains(&(*b as usize)))
+        .map(|(b, c)| {
+            Diagnostic::new(
+                Code::CodecOverride,
+                None,
+                format!(
+                    "override {}={} names no planned stage boundary (cuts: {:?})",
+                    b,
+                    c.name(),
+                    cuts
+                ),
+            )
+        })
+        .collect()
+}
+
+/// Short display form of a task for diagnostics.
+pub(crate) fn task_name(t: &Task) -> String {
+    match t {
+        Task::Fwd { micro, version } => format!("Fwd(m{micro} v{version})"),
+        Task::Bwd { micro, version } => format!("Bwd(m{micro} v{version})"),
+        Task::BwdW { micro, version } => format!("BwdW(m{micro} v{version})"),
+        Task::Send { micro, to, payload, .. } => format!("Send(m{micro} {payload:?} -> d{to})"),
+        Task::Recv { micro, from, payload, .. } => format!("Recv(m{micro} {payload:?} <- d{from})"),
+        Task::AllReduce { bytes } => format!("AllReduce({bytes}B)"),
+    }
+}

@@ -1,0 +1,106 @@
+//! Protocol state-machine check: exhaustively enumerate the driver x
+//! worker control-plane product automaton over the declarative
+//! transition tables in [`crate::comm::rpc`].
+//!
+//! The worker serve loop dispatches through the *same*
+//! `WORKER_TRANSITIONS` table this pass checks (there is no second
+//! copy of the machine), so a hole found here is a hole the live
+//! system would hit.  Three findings, all `ASTR013`:
+//!
+//! * a (phase, message kind) pair with no table entry — the receiver
+//!   would have no defined response;
+//! * a pair with more than one entry — the dispatch is ambiguous;
+//! * a product-automaton hole — a message one side can emit toward a
+//!   peer phase whose table does not define the pair (connections are
+//!   FIFO, so the emission tables bound the arrival contexts that
+//!   must be covered).
+
+use crate::comm::rpc::{
+    DriverAction, DriverPhase, WorkerAction, WorkerPhase, DRIVER_EMITS, DRIVER_TRANSITIONS,
+    MSG_KINDS, WORKER_EMITS, WORKER_TRANSITIONS,
+};
+
+use super::{Code, Diagnostic};
+
+/// Check the crate's live transition tables.
+pub fn check() -> Vec<Diagnostic> {
+    check_tables(WORKER_TRANSITIONS, DRIVER_TRANSITIONS)
+}
+
+/// Check arbitrary tables (public so mutation tests can knock an
+/// entry out and watch the diagnostic appear).
+pub fn check_tables(
+    worker: &[(WorkerPhase, &str, WorkerAction)],
+    driver: &[(DriverPhase, &str, DriverAction)],
+) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+
+    // Totality + unambiguity of each side's table.
+    for phase in WorkerPhase::ALL {
+        for kind in MSG_KINDS {
+            let n = worker.iter().filter(|&&(p, k, _)| p == phase && k == kind).count();
+            if n == 0 {
+                out.push(hole(format!("worker {} has no transition for {kind}", phase.name())));
+            } else if n > 1 {
+                out.push(hole(format!(
+                    "worker {} has {n} transitions for {kind} (ambiguous)",
+                    phase.name()
+                )));
+            }
+        }
+    }
+    for phase in DriverPhase::ALL {
+        for kind in MSG_KINDS {
+            let n = driver.iter().filter(|&&(p, k, _)| p == phase && k == kind).count();
+            if n == 0 {
+                out.push(hole(format!("driver {} has no transition for {kind}", phase.name())));
+            } else if n > 1 {
+                out.push(hole(format!(
+                    "driver {} has {n} transitions for {kind} (ambiguous)",
+                    phase.name()
+                )));
+            }
+        }
+    }
+
+    // Entries for kinds that do not exist on the wire.
+    for &(p, k, _) in worker {
+        if !MSG_KINDS.contains(&k) {
+            out.push(hole(format!("worker {} handles unknown message kind {k}", p.name())));
+        }
+    }
+    for &(p, k, _) in driver {
+        if !MSG_KINDS.contains(&k) {
+            out.push(hole(format!("driver {} handles unknown message kind {k}", p.name())));
+        }
+    }
+
+    // Product automaton: everything one side can emit must have a
+    // defined transition in every peer phase it can arrive in.
+    for &(kind, phases) in DRIVER_EMITS {
+        for &phase in phases {
+            if !worker.iter().any(|&(p, k, _)| p == phase && k == kind) {
+                out.push(hole(format!(
+                    "driver may send {kind} while the worker is {} — unhandled",
+                    phase.name()
+                )));
+            }
+        }
+    }
+    for &(kind, phases) in WORKER_EMITS {
+        for &phase in phases {
+            if !driver.iter().any(|&(p, k, _)| p == phase && k == kind) {
+                out.push(hole(format!(
+                    "worker may send {kind} while the driver is {} — unhandled",
+                    phase.name()
+                )));
+            }
+        }
+    }
+
+    out
+}
+
+fn hole(message: String) -> Diagnostic {
+    Diagnostic::new(Code::ProtocolHole, None, message)
+}

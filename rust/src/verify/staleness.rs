@@ -1,0 +1,164 @@
+//! Version/staleness dataflow, plus the structural timeline checks it
+//! rides on.  A single in-order replay of each timeline establishes:
+//!
+//! * ordering — no `Bwd` before its `Fwd`, no `BwdW` before its
+//!   `Bwd`, no `Send` before its producer, no `Recv` after its
+//!   consumer (`ASTR003`);
+//! * uniqueness — one compute task per (kind, micro) (`ASTR004`);
+//! * completeness — forward and backward counts agree (`ASTR006`),
+//!   and a split-backward timeline defers *every* weight gradient or
+//!   none (`ASTR007`);
+//! * versions — synchronous policies tag all-zero (`ASTR008`); under
+//!   bounded staleness every task reads a version actually stashed
+//!   (`ASTR009`) and no gradient older than the window is applied
+//!   (`ASTR010`).
+//!
+//! This subsumes `Schedule::validate`'s per-timeline pass and
+//! strengthens it: findings are per-task, coded, and non-fatal, so a
+//! single lint run reports every defect instead of the first.
+
+use std::collections::HashMap;
+
+use crate::schedule::{Payload, Task};
+
+use super::{Code, Diagnostic, Target};
+
+/// Check one target's schedule for order, shape and version defects.
+pub fn check(t: &Target) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let versioned = t.schedule.max_staleness > 0;
+    for tl in &t.schedule.timelines {
+        let d = tl.device;
+        let window = tl.kp.max(1);
+        // micro -> version of its Fwd / Bwd (presence = executed).
+        let mut fwd: HashMap<usize, usize> = HashMap::new();
+        let mut bwd: HashMap<usize, usize> = HashMap::new();
+        let mut bww: HashMap<usize, usize> = HashMap::new();
+        let mut updates = 0usize;
+        for (k, task) in tl.tasks.iter().enumerate() {
+            match *task {
+                Task::Fwd { micro, version } => {
+                    if fwd.contains_key(&micro) {
+                        let msg = format!("second Fwd of micro {micro} at #{k}");
+                        out.push(diag(Code::DuplicateTask, d, msg));
+                        continue;
+                    }
+                    if !versioned && version != 0 {
+                        let msg = format!(
+                            "Fwd of micro {micro} tagged v{version} under sync policy {}",
+                            t.schedule.policy
+                        );
+                        out.push(diag(Code::SyncNonzeroVersion, d, msg));
+                    }
+                    if versioned && version != updates {
+                        let msg = format!(
+                            "Fwd of micro {micro} reads v{version} but the live weights \
+                             are v{updates}"
+                        );
+                        out.push(diag(Code::VersionMismatch, d, msg));
+                    }
+                    fwd.insert(micro, version);
+                }
+                Task::Bwd { micro, version } => {
+                    let Some(&fv) = fwd.get(&micro) else {
+                        let msg = format!("Bwd of micro {micro} at #{k} before its Fwd");
+                        out.push(diag(Code::OrderViolation, d, msg));
+                        continue;
+                    };
+                    if bwd.contains_key(&micro) {
+                        let msg = format!("second Bwd of micro {micro} at #{k}");
+                        out.push(diag(Code::DuplicateTask, d, msg));
+                        continue;
+                    }
+                    if !versioned && version != 0 {
+                        let msg = format!(
+                            "Bwd of micro {micro} tagged v{version} under sync policy {}",
+                            t.schedule.policy
+                        );
+                        out.push(diag(Code::SyncNonzeroVersion, d, msg));
+                    }
+                    if version != fv {
+                        let msg = format!(
+                            "Bwd of micro {micro} reads v{version} but its Fwd stashed v{fv}"
+                        );
+                        out.push(diag(Code::VersionMismatch, d, msg));
+                    }
+                    if versioned {
+                        let lag = updates.saturating_sub(version);
+                        if lag + 1 > window {
+                            let msg = format!(
+                                "Bwd of micro {micro} applies a gradient {lag} updates stale \
+                                 (window {window})"
+                            );
+                            out.push(diag(Code::StalenessWindow, d, msg));
+                        }
+                        updates += 1;
+                    }
+                    bwd.insert(micro, version);
+                }
+                Task::BwdW { micro, version } => {
+                    let Some(&bv) = bwd.get(&micro) else {
+                        let msg = format!("BwdW of micro {micro} at #{k} before its Bwd");
+                        out.push(diag(Code::OrderViolation, d, msg));
+                        continue;
+                    };
+                    if bww.contains_key(&micro) {
+                        let msg = format!("second BwdW of micro {micro} at #{k}");
+                        out.push(diag(Code::DuplicateTask, d, msg));
+                        continue;
+                    }
+                    if version != bv {
+                        let msg = format!(
+                            "BwdW of micro {micro} reads v{version} but its Bwd used v{bv}"
+                        );
+                        out.push(diag(Code::VersionMismatch, d, msg));
+                    }
+                    bww.insert(micro, version);
+                }
+                Task::Send { micro, payload, .. } => {
+                    let produced = match payload {
+                        Payload::Activation => fwd.contains_key(&micro),
+                        Payload::Gradient => bwd.contains_key(&micro),
+                    };
+                    if !produced {
+                        let msg = format!(
+                            "Send of micro {micro} {payload:?} at #{k} before its producer"
+                        );
+                        out.push(diag(Code::OrderViolation, d, msg));
+                    }
+                }
+                Task::Recv { micro, payload, .. } => {
+                    let consumed = match payload {
+                        Payload::Activation => fwd.contains_key(&micro),
+                        Payload::Gradient => bwd.contains_key(&micro),
+                    };
+                    if consumed {
+                        let msg =
+                            format!("Recv of micro {micro} {payload:?} at #{k} after its consumer");
+                        out.push(diag(Code::OrderViolation, d, msg));
+                    }
+                }
+                Task::AllReduce { .. } => {}
+            }
+        }
+        if !bww.is_empty() && bww.len() != bwd.len() {
+            out.push(diag(
+                Code::PartialSplit,
+                d,
+                format!("split backward covers {} of {} micros", bww.len(), bwd.len()),
+            ));
+        }
+        if fwd.len() != bwd.len() {
+            out.push(diag(
+                Code::CountMismatch,
+                d,
+                format!("{} forwards but {} backwards", fwd.len(), bwd.len()),
+            ));
+        }
+    }
+    out
+}
+
+fn diag(code: Code, device: usize, message: String) -> Diagnostic {
+    Diagnostic::new(code, Some(device), message)
+}

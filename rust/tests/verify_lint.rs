@@ -1,0 +1,370 @@
+//! The static verifier, attacked from both sides.
+//!
+//! Positive: every planner-produced (policy x cluster x codec x K_p)
+//! schedule in the grid passes `verify::all` clean — the same grid the
+//! CI `lint-ir` job runs through `asteroid lint` — plus a randomized
+//! K_p-shrink property.
+//!
+//! Negative: seeded mutations of a known-clean schedule (drop a comm
+//! edge, over-tag a version, shrink a budget, knock a transition out
+//! of the protocol table...) must each trip the diagnostic code that
+//! names the defect — every `Code` is provably reachable.
+
+use asteroid::codec::CodecSpec;
+use asteroid::comm::rpc::{DRIVER_TRANSITIONS, WORKER_TRANSITIONS};
+use asteroid::config::{ClusterSpec, TrainConfig};
+use asteroid::schedule::{builtin_policies, policy_by_name, Payload, Schedule, Task};
+use asteroid::session::Session;
+use asteroid::util::bench::synthetic_fleet;
+use asteroid::util::proptest::check;
+use asteroid::verify::{self, protocol, Code, Diagnostic, Target};
+
+fn session(env: &str, policy: &str, codec: &str) -> Session {
+    session_on(ClusterSpec::env(env, 100.0).unwrap(), policy, codec)
+}
+
+fn session_on(cluster: ClusterSpec, policy: &str, codec: &str) -> Session {
+    Session::builder()
+        .model("mobilenetv2")
+        .cluster(cluster)
+        .train(TrainConfig::new(256, 16))
+        .schedule(policy_by_name(policy).unwrap())
+        .codec(CodecSpec::parse(codec).unwrap())
+        .build()
+        .unwrap()
+}
+
+fn show(diags: &[Diagnostic]) -> Vec<String> {
+    diags.iter().map(|d| d.to_string()).collect()
+}
+
+/// Diagnostic codes for a session with a substituted schedule (how the
+/// mutation tests inject a doctored IR).
+fn codes(s: &Session, schedule: &Schedule) -> Vec<Code> {
+    let t = Target {
+        model: s.model(),
+        cfg: s.train_config(),
+        cluster: s.cluster(),
+        plan: s.plan(),
+        schedule,
+        policy: s.policy(),
+        codec: s.codec(),
+    };
+    verify::all(&t).into_iter().map(|d| d.code).collect()
+}
+
+fn assert_trips(s: &Session, schedule: &Schedule, code: Code) {
+    let found = codes(s, schedule);
+    assert!(found.contains(&code), "expected {} {:?}, got {found:?}", code.id(), code);
+}
+
+/// Index of the first timeline that actually computes (nonzero share
+/// and at least one forward) — mutation targets must not land on an
+/// idle replica slot.
+fn busy(sched: &Schedule) -> usize {
+    sched
+        .timelines
+        .iter()
+        .position(|tl| tl.share > 0 && tl.tasks.iter().any(|t| matches!(t, Task::Fwd { .. })))
+        .expect("a computing timeline")
+}
+
+// ------------------------------------------------------ positive grid
+
+#[test]
+fn grid_is_clean() {
+    for env in ["B", "C"] {
+        for policy in builtin_policies() {
+            for codec in ["fp32", "int8"] {
+                let s = session(env, policy.name(), codec);
+                let diags = verify::all(&Target::of_session(&s));
+                assert!(
+                    diags.is_empty(),
+                    "env {env} policy {} codec {codec}: {:?}",
+                    policy.name(),
+                    show(&diags)
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fleet_point_is_clean() {
+    let s = session_on(synthetic_fleet(128, 100.0), "1f1b-kp", "int8");
+    let diags = verify::all(&Target::of_session(&s));
+    assert!(diags.is_empty(), "{:?}", show(&diags));
+}
+
+#[test]
+fn override_on_real_cut_is_clean_and_applies() {
+    let probe = session("C", "1f1b-kp", "int8");
+    assert!(probe.plan().num_stages() > 1, "need a pipeline to cut");
+    let cut = probe.plan().stages[0].layers.1;
+    let s = session("C", "1f1b-kp", &format!("int8,{cut}=int8"));
+    assert_eq!(s.codec().overrides().count(), 1);
+    let diags = verify::all(&Target::of_session(&s));
+    assert!(diags.is_empty(), "{:?}", show(&diags));
+}
+
+/// Random (env, policy, codec, K_p-shrink) points stay clean: K_p may
+/// be shrunk below the planner's choice (never grown — growing can
+/// legitimately exceed Eq. 3) and the rebuilt schedule must verify.
+#[test]
+fn shrunk_kp_schedules_verify_clean() {
+    let envs = ["A", "B", "C", "D"];
+    let policies = builtin_policies();
+    let codecs = ["fp32", "fp16", "int8"];
+    check(
+        10,
+        |rng| {
+            let e = rng.below(envs.len());
+            let p = rng.below(policies.len());
+            let c = rng.below(codecs.len());
+            (e, p, c, rng.next_u64())
+        },
+        |&(e, p, c, kp_seed)| {
+            let s = session(envs[e], policies[p].name(), codecs[c]);
+            let mut plan = s.plan().clone();
+            for (i, st) in plan.stages.iter_mut().enumerate() {
+                st.kp = 1 + (kp_seed as usize >> i) % st.kp.max(1);
+            }
+            let schedule = Schedule::for_sim(&plan, s.model(), s.policy());
+            let t = Target {
+                model: s.model(),
+                cfg: s.train_config(),
+                cluster: s.cluster(),
+                plan: &plan,
+                schedule: &schedule,
+                policy: s.policy(),
+                codec: s.codec(),
+            };
+            let diags = verify::all(&t);
+            if diags.is_empty() {
+                Ok(())
+            } else {
+                Err(format!("{:?}", show(&diags)))
+            }
+        },
+    );
+}
+
+// ------------------------------------------- mutations, one per code
+
+#[test]
+fn astr001_held_back_activation_deadlocks() {
+    let s = session("B", "1f1b-kp", "fp32");
+    let mut sched = s.schedule().clone();
+    let tl = sched
+        .timelines
+        .iter_mut()
+        .find(|tl| {
+            let sends_act = tl
+                .tasks
+                .iter()
+                .any(|t| matches!(t, Task::Send { payload: Payload::Activation, .. }));
+            let recvs_grad = tl
+                .tasks
+                .iter()
+                .any(|t| matches!(t, Task::Recv { payload: Payload::Gradient, .. }));
+            sends_act && recvs_grad
+        })
+        .expect("a pipelined timeline");
+    let si = tl
+        .tasks
+        .iter()
+        .position(|t| matches!(t, Task::Send { payload: Payload::Activation, .. }))
+        .unwrap();
+    let ri = tl
+        .tasks
+        .iter()
+        .position(|t| matches!(t, Task::Recv { payload: Payload::Gradient, .. }))
+        .unwrap();
+    assert!(si < ri, "the activation leaves before the gradient returns");
+    // Move the first activation Send to just after the first gradient
+    // Recv: this device now waits for a gradient its peer can only
+    // produce after receiving the activation being held back.
+    let send = tl.tasks.remove(si);
+    tl.tasks.insert(ri, send);
+    assert_trips(&s, &sched, Code::DeadlockCycle);
+}
+
+#[test]
+fn astr002_shrunk_window_overflows_inflight() {
+    let s = session("B", "gpipe-fill-drain", "fp32");
+    let mut sched = s.schedule().clone();
+    let i = busy(&sched);
+    let tl = &mut sched.timelines[i];
+    assert!(tl.kp > 1, "fill-drain holds the whole round in flight");
+    tl.kp = 1;
+    assert_trips(&s, &sched, Code::InflightWindow);
+}
+
+#[test]
+fn astr003_bwd_before_fwd() {
+    let s = session("B", "1f1b-kp", "fp32");
+    let mut sched = s.schedule().clone();
+    let i = busy(&sched);
+    let tl = &mut sched.timelines[i];
+    let fi = tl.tasks.iter().position(|t| matches!(t, Task::Fwd { .. })).unwrap();
+    let bi = tl.tasks.iter().position(|t| matches!(t, Task::Bwd { .. })).unwrap();
+    tl.tasks.swap(fi, bi);
+    assert_trips(&s, &sched, Code::OrderViolation);
+}
+
+#[test]
+fn astr004_duplicate_forward() {
+    let s = session("B", "1f1b-kp", "fp32");
+    let mut sched = s.schedule().clone();
+    let i = busy(&sched);
+    let tl = &mut sched.timelines[i];
+    let fwd = *tl.tasks.iter().find(|t| matches!(t, Task::Fwd { .. })).unwrap();
+    tl.tasks.push(fwd);
+    assert_trips(&s, &sched, Code::DuplicateTask);
+}
+
+#[test]
+fn astr005_dropped_send_leaves_orphan_recv() {
+    let s = session("B", "1f1b-kp", "fp32");
+    let mut sched = s.schedule().clone();
+    let tl = sched
+        .timelines
+        .iter_mut()
+        .find(|tl| tl.tasks.iter().any(|t| matches!(t, Task::Send { .. })))
+        .expect("a sending timeline");
+    let si = tl.tasks.iter().position(|t| matches!(t, Task::Send { .. })).unwrap();
+    tl.tasks.remove(si);
+    assert_trips(&s, &sched, Code::CommMismatch);
+}
+
+#[test]
+fn astr006_missing_backward() {
+    let s = session("B", "1f1b-kp", "fp32");
+    let mut sched = s.schedule().clone();
+    let i = busy(&sched);
+    let tl = &mut sched.timelines[i];
+    let bi = tl.tasks.iter().rposition(|t| matches!(t, Task::Bwd { .. })).unwrap();
+    tl.tasks.remove(bi);
+    assert_trips(&s, &sched, Code::CountMismatch);
+}
+
+#[test]
+fn astr007_partial_split_backward() {
+    let s = session("B", "zb-h1", "fp32");
+    let mut sched = s.schedule().clone();
+    let tl = sched
+        .timelines
+        .iter_mut()
+        .find(|tl| tl.tasks.iter().filter(|t| matches!(t, Task::BwdW { .. })).count() >= 2)
+        .expect("zero-bubble splits backwards");
+    let wi = tl.tasks.iter().position(|t| matches!(t, Task::BwdW { .. })).unwrap();
+    tl.tasks.remove(wi);
+    assert_trips(&s, &sched, Code::PartialSplit);
+}
+
+#[test]
+fn astr008_version_tag_under_sync_policy() {
+    let s = session("B", "1f1b-kp", "fp32");
+    let mut sched = s.schedule().clone();
+    let i = busy(&sched);
+    let tl = &mut sched.timelines[i];
+    let fi = tl.tasks.iter().position(|t| matches!(t, Task::Fwd { .. })).unwrap();
+    if let Task::Fwd { version, .. } = &mut tl.tasks[fi] {
+        *version = 1;
+    }
+    assert_trips(&s, &sched, Code::SyncNonzeroVersion);
+}
+
+#[test]
+fn astr009_backward_reads_unstashed_version() {
+    let s = session("B", "async:1", "fp32");
+    let mut sched = s.schedule().clone();
+    let i = busy(&sched);
+    let tl = &mut sched.timelines[i];
+    let bi = tl.tasks.iter().position(|t| matches!(t, Task::Bwd { .. })).unwrap();
+    if let Task::Bwd { version, .. } = &mut tl.tasks[bi] {
+        *version += 1;
+    }
+    assert_trips(&s, &sched, Code::VersionMismatch);
+}
+
+#[test]
+fn astr010_staleness_window_shrunk_below_lag() {
+    let s = session("B", "async:1", "fp32");
+    let mut sched = s.schedule().clone();
+    for tl in &mut sched.timelines {
+        tl.kp = 1;
+    }
+    assert_trips(&s, &sched, Code::StalenessWindow);
+}
+
+#[test]
+fn astr011_tiny_budget_overflows() {
+    let s = session("B", "1f1b-kp", "fp32");
+    let mut cluster = s.cluster().clone();
+    for d in &mut cluster.devices {
+        d.mem_bytes = 1;
+    }
+    let t = Target {
+        model: s.model(),
+        cfg: s.train_config(),
+        cluster: &cluster,
+        plan: s.plan(),
+        schedule: s.schedule(),
+        policy: s.policy(),
+        codec: s.codec(),
+    };
+    let found: Vec<Code> = verify::all(&t).into_iter().map(|d| d.code).collect();
+    assert!(found.contains(&Code::MemoryBudget), "{found:?}");
+}
+
+#[test]
+fn astr012_extra_stash_disagrees_with_planner() {
+    let s = session("B", "1f1b-kp", "fp32");
+    let mut sched = s.schedule().clone();
+    let i = busy(&sched);
+    sched.timelines[i].stash_copies += 2;
+    assert_trips(&s, &sched, Code::MemoryDisagreement);
+}
+
+#[test]
+fn astr013_knocked_out_transition_is_a_hole() {
+    assert!(protocol::check().is_empty(), "live tables must be total");
+    let found: Vec<Code> = protocol::check_tables(&WORKER_TRANSITIONS[1..], DRIVER_TRANSITIONS)
+        .into_iter()
+        .map(|d| d.code)
+        .collect();
+    assert!(found.contains(&Code::ProtocolHole), "{found:?}");
+}
+
+#[test]
+fn astr014_inert_codec_override() {
+    let s = session("B", "1f1b-kp", "fp32");
+    let inert = CodecSpec::parse("fp32,999=int8").unwrap();
+    let t = Target {
+        model: s.model(),
+        cfg: s.train_config(),
+        cluster: s.cluster(),
+        plan: s.plan(),
+        schedule: s.schedule(),
+        policy: s.policy(),
+        codec: &inert,
+    };
+    let found: Vec<Code> = verify::all(&t).into_iter().map(|d| d.code).collect();
+    assert!(found.contains(&Code::CodecOverride), "{found:?}");
+}
+
+// ----------------------------------------------- builder hard error
+
+#[test]
+fn builder_rejects_inert_codec_override() {
+    let err = Session::builder()
+        .model("mobilenetv2")
+        .cluster(ClusterSpec::env("B", 100.0).unwrap())
+        .train(TrainConfig::new(256, 16))
+        .codec(CodecSpec::parse("fp32,999=int8").unwrap())
+        .build()
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("999") && err.contains("inert"), "{err}");
+}
