@@ -17,7 +17,8 @@ use asteroid::config::{ClusterSpec, TrainConfig};
 use asteroid::model::{zoo, ModelDesc};
 use asteroid::planner::plan::{Plan, Stage};
 use asteroid::planner::{
-    plan_hpp, plan_hpp_incremental, plan_hpp_subset, plan_hpp_with_state, PlannerConfig,
+    plan_hpp, plan_hpp_incremental, plan_hpp_incremental_join, plan_hpp_subset,
+    plan_hpp_with_state, PlannerConfig,
 };
 use asteroid::profiler::ProfileTable;
 use asteroid::schedule::{builtin_policies, policy_by_name, Schedule};
@@ -218,6 +219,18 @@ fn main() {
         });
         fb.bench(&format!("replan_incremental_worst/fleet{n}"), || {
             plan_hpp_incremental(&state, &ftable, &fleet, &model, &fleet_cfg, &pc, tail).unwrap()
+        });
+        // A device rejoins the shrunk fleet (churn rejoin): full subset
+        // rebuild over the restored membership vs the join fast path
+        // re-expanding the shrunk DP state.
+        let kept = plan_hpp_subset(&ftable, &fleet, &model, &fleet_cfg, &pc, &keep).unwrap().1;
+        let all: Vec<usize> = state.order().to_vec();
+        fb.bench(&format!("replan_join_full/fleet{n}"), || {
+            plan_hpp_subset(&ftable, &fleet, &model, &fleet_cfg, &pc, &all).unwrap()
+        });
+        fb.bench(&format!("replan_join_incremental/fleet{n}"), || {
+            plan_hpp_incremental_join(&kept, &ftable, &fleet, &model, &fleet_cfg, &pc, head)
+                .unwrap()
         });
     }
     let measured_s = fb.mean_of("plan_hpp/fleet512").unwrap()

@@ -31,7 +31,10 @@ fn main() -> Result<()> {
         return Ok(());
     }
     let listen = args.str_or("listen", "127.0.0.1:0");
-    let listener = TcpListener::bind(&listen)
+    // Retry the bind: a restarted worker (churn rejoin) reuses its
+    // predecessor's port, which can sit in TIME_WAIT for a few seconds
+    // after the old process died mid-connection.
+    let listener = bind_with_retry(&listen)
         .with_context(|| format!("binding worker listener on {listen}"))?;
     // Parsed by launchers: the actual bound address (port 0 resolved).
     // Explicit flush — stdout is block-buffered when piped, and the
@@ -47,4 +50,19 @@ fn main() -> Result<()> {
         // but keep the mapping total.
         ServeOutcome::Died => std::process::exit(86),
     }
+}
+
+/// Bind, retrying `EADDRINUSE`-style failures for ~10 s (40 x 250 ms).
+fn bind_with_retry(listen: &str) -> Result<TcpListener> {
+    let mut last_err = None;
+    for _ in 0..40 {
+        match TcpListener::bind(listen) {
+            Ok(l) => return Ok(l),
+            Err(e) => {
+                last_err = Some(e);
+                std::thread::sleep(std::time::Duration::from_millis(250));
+            }
+        }
+    }
+    Err(last_err.expect("bind never attempted").into())
 }

@@ -465,6 +465,12 @@ pub enum RpcMsg {
     Bye,
     /// Worker -> driver: unrecoverable worker error.
     Fatal { device: usize, error: String },
+    /// Driver -> worker: degrade this worker's compute by `factor`
+    /// (>= 1.0; 1.0 restores full speed).  The straggler injection the
+    /// churn tests use: the worker stays alive and heartbeating but
+    /// stretches every round's compute, so only the driver's
+    /// timing-drift detector can catch it.  Sent between rounds only.
+    Throttle { factor: f64 },
 }
 
 const T_HELLO: u8 = 1;
@@ -486,6 +492,7 @@ const T_EXIT: u8 = 16;
 const T_DIE: u8 = 17;
 const T_BYE: u8 = 18;
 const T_FATAL: u8 = 19;
+const T_THROTTLE: u8 = 20;
 
 fn enc_op(e: &mut Enc, op: &ComputeOp) {
     match *op {
@@ -573,6 +580,7 @@ impl RpcMsg {
             RpcMsg::Die => "Die",
             RpcMsg::Bye => "Bye",
             RpcMsg::Fatal { .. } => "Fatal",
+            RpcMsg::Throttle { .. } => "Throttle",
         }
     }
 
@@ -721,6 +729,10 @@ impl RpcMsg {
                 e.u64(*device as u64);
                 e.str(error);
             }
+            RpcMsg::Throttle { factor } => {
+                e.u8(T_THROTTLE);
+                e.f64(*factor);
+            }
         }
         e.into_bytes()
     }
@@ -850,6 +862,7 @@ impl RpcMsg {
             T_DIE => RpcMsg::Die,
             T_BYE => RpcMsg::Bye,
             T_FATAL => RpcMsg::Fatal { device: d.u64()? as usize, error: d.str()? },
+            T_THROTTLE => RpcMsg::Throttle { factor: d.f64()? },
             other => bail!("unknown message tag {other}"),
         };
         if !d.done() {
@@ -873,7 +886,7 @@ impl RpcMsg {
 
 /// Every wire message kind, in tag order (append-only, like the tags
 /// themselves; keep in sync with [`RpcMsg::kind`]).
-pub const MSG_KINDS: [&str; 19] = [
+pub const MSG_KINDS: [&str; 20] = [
     "Hello",
     "Assign",
     "Ready",
@@ -893,6 +906,7 @@ pub const MSG_KINDS: [&str; 19] = [
     "Die",
     "Bye",
     "Fatal",
+    "Throttle",
 ];
 
 /// Control-plane phase of the worker serve loop.
@@ -952,6 +966,9 @@ pub enum WorkerAction {
     FailExit,
     /// Syncing: the awaited group-reduced buffer arrived.
     DeliverSync,
+    /// Idle: record the compute throttle factor (straggler injection);
+    /// takes effect from the next round's script.
+    ApplyThrottle,
     /// Protocol violation in this phase: fail the round with an
     /// "unexpected message" error (the driver owns the verdict).
     FailUnexpected,
@@ -982,6 +999,7 @@ pub const WORKER_TRANSITIONS: &[(WorkerPhase, &str, WorkerAction)] = &[
     (WorkerPhase::Idle, "Die", WorkerAction::DieNow),
     (WorkerPhase::Idle, "Bye", WorkerAction::IgnoreIdle),
     (WorkerPhase::Idle, "Fatal", WorkerAction::IgnoreIdle),
+    (WorkerPhase::Idle, "Throttle", WorkerAction::ApplyThrottle),
     // ----- InRound: only data, abort, and death may interrupt.
     (WorkerPhase::InRound, "Hello", WorkerAction::FailUnexpected),
     (WorkerPhase::InRound, "Assign", WorkerAction::FailUnexpected),
@@ -1002,6 +1020,8 @@ pub const WORKER_TRANSITIONS: &[(WorkerPhase, &str, WorkerAction)] = &[
     (WorkerPhase::InRound, "Die", WorkerAction::DieNow),
     (WorkerPhase::InRound, "Bye", WorkerAction::FailUnexpected),
     (WorkerPhase::InRound, "Fatal", WorkerAction::FailUnexpected),
+    // Throttles land between rounds only; mid-round is a violation.
+    (WorkerPhase::InRound, "Throttle", WorkerAction::FailUnexpected),
     // ----- Syncing: waiting on the driver's reduced buffer.
     (WorkerPhase::Syncing, "Hello", WorkerAction::FailUnexpected),
     (WorkerPhase::Syncing, "Assign", WorkerAction::FailUnexpected),
@@ -1024,6 +1044,7 @@ pub const WORKER_TRANSITIONS: &[(WorkerPhase, &str, WorkerAction)] = &[
     (WorkerPhase::Syncing, "Die", WorkerAction::FailUnexpected),
     (WorkerPhase::Syncing, "Bye", WorkerAction::FailUnexpected),
     (WorkerPhase::Syncing, "Fatal", WorkerAction::FailUnexpected),
+    (WorkerPhase::Syncing, "Throttle", WorkerAction::FailUnexpected),
 ];
 
 /// Transition of the worker machine for `kind` in `phase` (`None` is
@@ -1122,6 +1143,7 @@ pub const DRIVER_TRANSITIONS: &[(DriverPhase, &str, DriverAction)] = &[
     (DriverPhase::Assigning, "Die", DriverAction::FailUnexpected),
     (DriverPhase::Assigning, "Bye", DriverAction::FailUnexpected),
     (DriverPhase::Assigning, "Fatal", DriverAction::FailPeer),
+    (DriverPhase::Assigning, "Throttle", DriverAction::FailUnexpected),
     // ----- Rounding: waiting for every stage's RoundDone.
     (DriverPhase::Rounding, "Hello", DriverAction::FailUnexpected),
     (DriverPhase::Rounding, "Assign", DriverAction::FailUnexpected),
@@ -1143,6 +1165,7 @@ pub const DRIVER_TRANSITIONS: &[(DriverPhase, &str, DriverAction)] = &[
     (DriverPhase::Rounding, "Die", DriverAction::FailUnexpected),
     (DriverPhase::Rounding, "Bye", DriverAction::FailUnexpected),
     (DriverPhase::Rounding, "Fatal", DriverAction::FailPeer),
+    (DriverPhase::Rounding, "Throttle", DriverAction::FailUnexpected),
     // ----- Checkpointing: each survivor answers FetchParams.
     (DriverPhase::Checkpointing, "Hello", DriverAction::FailUnexpected),
     (DriverPhase::Checkpointing, "Assign", DriverAction::FailUnexpected),
@@ -1163,6 +1186,7 @@ pub const DRIVER_TRANSITIONS: &[(DriverPhase, &str, DriverAction)] = &[
     (DriverPhase::Checkpointing, "Die", DriverAction::FailUnexpected),
     (DriverPhase::Checkpointing, "Bye", DriverAction::FailUnexpected),
     (DriverPhase::Checkpointing, "Fatal", DriverAction::FailPeer),
+    (DriverPhase::Checkpointing, "Throttle", DriverAction::FailUnexpected),
     // ----- Detecting: fault injection sent, waiting for the victim's
     // silence; stragglers from the doomed round are settled noise.
     (DriverPhase::Detecting, "Hello", DriverAction::FailUnexpected),
@@ -1184,6 +1208,7 @@ pub const DRIVER_TRANSITIONS: &[(DriverPhase, &str, DriverAction)] = &[
     (DriverPhase::Detecting, "Die", DriverAction::FailUnexpected),
     (DriverPhase::Detecting, "Bye", DriverAction::FailUnexpected),
     (DriverPhase::Detecting, "Fatal", DriverAction::FailPeer),
+    (DriverPhase::Detecting, "Throttle", DriverAction::FailUnexpected),
     // ----- Aborting: survivors acknowledge with RoundFailed.
     (DriverPhase::Aborting, "Hello", DriverAction::FailUnexpected),
     (DriverPhase::Aborting, "Assign", DriverAction::FailUnexpected),
@@ -1205,6 +1230,7 @@ pub const DRIVER_TRANSITIONS: &[(DriverPhase, &str, DriverAction)] = &[
     (DriverPhase::Aborting, "Die", DriverAction::FailUnexpected),
     (DriverPhase::Aborting, "Bye", DriverAction::FailUnexpected),
     (DriverPhase::Aborting, "Fatal", DriverAction::FailPeer),
+    (DriverPhase::Aborting, "Throttle", DriverAction::FailUnexpected),
     // ----- Closing: best-effort drain; nothing can fail the run now.
     (DriverPhase::Closing, "Hello", DriverAction::Ignore),
     (DriverPhase::Closing, "Assign", DriverAction::Ignore),
@@ -1225,6 +1251,7 @@ pub const DRIVER_TRANSITIONS: &[(DriverPhase, &str, DriverAction)] = &[
     (DriverPhase::Closing, "Die", DriverAction::Ignore),
     (DriverPhase::Closing, "Bye", DriverAction::Accept),
     (DriverPhase::Closing, "Fatal", DriverAction::Ignore),
+    (DriverPhase::Closing, "Throttle", DriverAction::Ignore),
 ];
 
 /// Transition of the driver machine for `kind` in `phase` (`None` is
@@ -1246,6 +1273,8 @@ pub const DRIVER_EMITS: &[(&str, &[WorkerPhase])] = &[
     ("Assign", &[WorkerPhase::Idle]),
     ("StartRound", &[WorkerPhase::Idle]),
     ("FetchParams", &[WorkerPhase::Idle]),
+    // Throttle (straggler injection) is sent strictly between rounds.
+    ("Throttle", &[WorkerPhase::Idle]),
     (
         "AbortRound",
         &[WorkerPhase::Idle, WorkerPhase::InRound, WorkerPhase::Syncing],
@@ -1414,6 +1443,10 @@ mod tests {
         }
         match roundtrip(&RpcMsg::Hello { role: ConnRole::Data { stage: 2, slot: 1 } }) {
             RpcMsg::Hello { role } => assert_eq!(role, ConnRole::Data { stage: 2, slot: 1 }),
+            other => panic!("decoded {}", other.kind()),
+        }
+        match roundtrip(&RpcMsg::Throttle { factor: 3.5 }) {
+            RpcMsg::Throttle { factor } => assert_eq!(factor, 3.5),
             other => panic!("decoded {}", other.kind()),
         }
     }

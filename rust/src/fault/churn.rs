@@ -1,0 +1,321 @@
+//! Churn traces: elastic membership as data.
+//!
+//! A [`ChurnTrace`] generalises the single-exit `FaultSpec` into an
+//! ordered list of timed membership events — device exits, rejoins of
+//! restarted workers, compute slowdowns (the straggler injection the
+//! drift detector catches) and link degradations.  The trace itself is
+//! pure data: both execution backends interpret it — `SimBackend` on a
+//! deterministic event clock, `RpcBackend` against real worker
+//! processes — and the CLI parses one from `--churn`.
+//!
+//! Grammar (comma-separated, each event suffixed with `@<round>`):
+//!
+//! ```text
+//! exit:<dev>@<round>            device <dev> exits before <round>
+//! join:<dev>@<round>            device <dev> rejoins before <round>
+//! slow:<dev>:<factor>@<round>   device <dev> slows by <factor>x
+//! link:<a>-<b>:<mbps>@<round>   link a<->b degrades to <mbps> Mbps
+//! ```
+//!
+//! e.g. `--churn exit:2@1,join:2@3` or `--churn slow:1:3.0@2`.
+
+use std::str::FromStr;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ClusterSpec;
+
+/// One membership event.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ChurnEvent {
+    /// The device's process dies (detected by heartbeat silence).
+    Exit { device: usize },
+    /// A previously-exited cluster device reconnects (its restarted
+    /// `asteroid-worker` listens on the same address) and is
+    /// re-Assigned; the plan re-expands through the join fast path.
+    Join { device: usize },
+    /// The device's compute degrades by `factor` (> 1.0) — it keeps
+    /// heartbeating; only the timing-drift straggler detector sees it.
+    Slowdown { device: usize, factor: f64 },
+    /// The link between `a` and `b` degrades to `mbps` Mbps.
+    LinkDegrade { a: usize, b: usize, mbps: f64 },
+}
+
+impl ChurnEvent {
+    /// Stable event-kind name (what reports serialise).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ChurnEvent::Exit { .. } => "exit",
+            ChurnEvent::Join { .. } => "join",
+            ChurnEvent::Slowdown { .. } => "slowdown",
+            ChurnEvent::LinkDegrade { .. } => "link-degrade",
+        }
+    }
+
+    /// The device the event targets (for `LinkDegrade`: endpoint `a`).
+    pub fn device(&self) -> usize {
+        match *self {
+            ChurnEvent::Exit { device }
+            | ChurnEvent::Join { device }
+            | ChurnEvent::Slowdown { device, .. } => device,
+            ChurnEvent::LinkDegrade { a, .. } => a,
+        }
+    }
+}
+
+/// One trace entry: the event fires *before* round `round` executes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TimedEvent {
+    pub round: usize,
+    pub event: ChurnEvent,
+}
+
+/// An ordered, timed membership-event trace.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ChurnTrace {
+    pub events: Vec<TimedEvent>,
+}
+
+impl ChurnTrace {
+    pub fn new() -> ChurnTrace {
+        ChurnTrace::default()
+    }
+
+    pub fn exit(mut self, round: usize, device: usize) -> ChurnTrace {
+        self.events.push(TimedEvent { round, event: ChurnEvent::Exit { device } });
+        self
+    }
+
+    pub fn join(mut self, round: usize, device: usize) -> ChurnTrace {
+        self.events.push(TimedEvent { round, event: ChurnEvent::Join { device } });
+        self
+    }
+
+    pub fn slowdown(mut self, round: usize, device: usize, factor: f64) -> ChurnTrace {
+        self.events.push(TimedEvent { round, event: ChurnEvent::Slowdown { device, factor } });
+        self
+    }
+
+    pub fn link_degrade(mut self, round: usize, a: usize, b: usize, mbps: f64) -> ChurnTrace {
+        self.events.push(TimedEvent { round, event: ChurnEvent::LinkDegrade { a, b, mbps } });
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Canonical `--churn` form of the trace.
+    pub fn describe(&self) -> String {
+        self.events
+            .iter()
+            .map(|te| match te.event {
+                ChurnEvent::Exit { device } => format!("exit:{device}@{}", te.round),
+                ChurnEvent::Join { device } => format!("join:{device}@{}", te.round),
+                ChurnEvent::Slowdown { device, factor } => {
+                    format!("slow:{device}:{factor}@{}", te.round)
+                }
+                ChurnEvent::LinkDegrade { a, b, mbps } => {
+                    format!("link:{a}-{b}:{mbps}@{}", te.round)
+                }
+            })
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    /// Validate the trace against a cluster, the initially planned
+    /// device set, and the run length: rounds must be non-decreasing
+    /// and inside the run, every device a cluster device, slowdown
+    /// factors > 1, bandwidths > 0 — and membership must stay
+    /// consistent step by step (exits target active devices, joins
+    /// target exited ones, at least one device always remains).
+    pub fn validate(&self, cluster: &ClusterSpec, planned: &[usize], rounds: usize) -> Result<()> {
+        if self.events.is_empty() {
+            bail!("empty churn trace (drop .churn() instead)");
+        }
+        let mut active: Vec<usize> = planned.to_vec();
+        let mut last_round = 0usize;
+        for (idx, te) in self.events.iter().enumerate() {
+            let at = format!("churn event {idx} ({})", te.event.kind());
+            if te.round < last_round {
+                bail!("{at}: rounds must be non-decreasing ({} < {last_round})", te.round);
+            }
+            if te.round >= rounds {
+                bail!("{at}: round {} is outside the {rounds}-round run", te.round);
+            }
+            last_round = te.round;
+            match te.event {
+                ChurnEvent::Exit { device } => {
+                    let pos = active
+                        .iter()
+                        .position(|&d| d == device)
+                        .with_context(|| format!("{at}: device {device} is not active"))?;
+                    active.remove(pos);
+                    if active.is_empty() {
+                        bail!("{at}: trace leaves no active devices");
+                    }
+                }
+                ChurnEvent::Join { device } => {
+                    if device >= cluster.n() {
+                        bail!("{at}: device {device} is not a cluster device");
+                    }
+                    if active.contains(&device) {
+                        bail!("{at}: device {device} is already active");
+                    }
+                    active.push(device);
+                }
+                ChurnEvent::Slowdown { device, factor } => {
+                    if !active.contains(&device) {
+                        bail!("{at}: device {device} is not active");
+                    }
+                    if !(factor > 1.0) || !factor.is_finite() {
+                        bail!("{at}: slowdown factor must be a finite value > 1 (got {factor})");
+                    }
+                }
+                ChurnEvent::LinkDegrade { a, b, mbps } => {
+                    if a >= cluster.n() || b >= cluster.n() {
+                        bail!("{at}: link {a}-{b} names a non-cluster device");
+                    }
+                    if a == b {
+                        bail!("{at}: link {a}-{b} is not a link");
+                    }
+                    if !(mbps > 0.0) || !mbps.is_finite() {
+                        bail!("{at}: link bandwidth must be a finite value > 0 (got {mbps} Mbps)");
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl FromStr for ChurnTrace {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<ChurnTrace> {
+        let mut trace = ChurnTrace::new();
+        for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (body, round) = part
+                .rsplit_once('@')
+                .with_context(|| format!("churn event {part:?}: missing @<round>"))?;
+            let round: usize = round
+                .parse()
+                .with_context(|| format!("churn event {part:?}: bad round {round:?}"))?;
+            let mut fields = body.split(':');
+            let kind = fields.next().unwrap_or_default();
+            let rest: Vec<&str> = fields.collect();
+            let event = match (kind, rest.as_slice()) {
+                ("exit", [dev]) => ChurnEvent::Exit { device: parse_dev(part, dev)? },
+                ("join", [dev]) => ChurnEvent::Join { device: parse_dev(part, dev)? },
+                ("slow", [dev, factor]) => ChurnEvent::Slowdown {
+                    device: parse_dev(part, dev)?,
+                    factor: factor
+                        .parse()
+                        .with_context(|| format!("churn event {part:?}: bad factor"))?,
+                },
+                ("link", [ab, mbps]) => {
+                    let (a, b) = ab
+                        .split_once('-')
+                        .with_context(|| format!("churn event {part:?}: want link:<a>-<b>"))?;
+                    ChurnEvent::LinkDegrade {
+                        a: parse_dev(part, a)?,
+                        b: parse_dev(part, b)?,
+                        mbps: mbps
+                            .parse()
+                            .with_context(|| format!("churn event {part:?}: bad Mbps"))?,
+                    }
+                }
+                _ => bail!(
+                    "churn event {part:?}: want exit:<dev>@r, join:<dev>@r, \
+                     slow:<dev>:<factor>@r or link:<a>-<b>:<mbps>@r"
+                ),
+            };
+            trace.events.push(TimedEvent { round, event });
+        }
+        if trace.is_empty() {
+            bail!("empty churn trace {s:?}");
+        }
+        Ok(trace)
+    }
+}
+
+fn parse_dev(part: &str, s: &str) -> Result<usize> {
+    s.parse().with_context(|| format!("churn event {part:?}: bad device id {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_full_grammar() {
+        let t: ChurnTrace = "exit:2@1,join:2@3,slow:1:3.5@4,link:0-1:20@5".parse().unwrap();
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.events[0], TimedEvent { round: 1, event: ChurnEvent::Exit { device: 2 } });
+        assert_eq!(t.events[1], TimedEvent { round: 3, event: ChurnEvent::Join { device: 2 } });
+        assert_eq!(
+            t.events[2],
+            TimedEvent { round: 4, event: ChurnEvent::Slowdown { device: 1, factor: 3.5 } }
+        );
+        assert_eq!(
+            t.events[3],
+            TimedEvent { round: 5, event: ChurnEvent::LinkDegrade { a: 0, b: 1, mbps: 20.0 } }
+        );
+        // describe() round-trips through the parser.
+        let again: ChurnTrace = t.describe().parse().unwrap();
+        assert_eq!(again, t);
+    }
+
+    #[test]
+    fn parser_rejects_malformed_events() {
+        for bad in [
+            "",
+            "exit:2",          // missing round
+            "exit@1",          // missing device
+            "slow:1@2",        // missing factor
+            "link:0:20@1",     // missing endpoint pair
+            "flood:1@2",       // unknown kind
+            "exit:x@1",        // non-numeric device
+        ] {
+            assert!(bad.parse::<ChurnTrace>().is_err(), "{bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn validate_tracks_membership() {
+        let cluster = ClusterSpec::env("A", 100.0).unwrap();
+        let planned: Vec<usize> = (0..cluster.n()).collect();
+        // Exit then rejoin of the same device is fine.
+        ChurnTrace::new().exit(1, 2).join(2, 2).validate(&cluster, &planned, 4).unwrap();
+        // Joining an active device is not.
+        assert!(ChurnTrace::new().join(1, 2).validate(&cluster, &planned, 4).is_err());
+        // Exiting an inactive device is not.
+        assert!(ChurnTrace::new()
+            .exit(1, 2)
+            .exit(2, 2)
+            .validate(&cluster, &planned, 4)
+            .is_err());
+        // Rounds must not run backwards or past the run.
+        assert!(ChurnTrace::new().exit(2, 1).join(1, 1).validate(&cluster, &planned, 4).is_err());
+        assert!(ChurnTrace::new().exit(9, 1).validate(&cluster, &planned, 4).is_err());
+        // Slowdown factors <= 1 and zero-bandwidth links are rejected.
+        assert!(ChurnTrace::new()
+            .slowdown(1, 0, 1.0)
+            .validate(&cluster, &planned, 4)
+            .is_err());
+        assert!(ChurnTrace::new()
+            .link_degrade(1, 0, 1, 0.0)
+            .validate(&cluster, &planned, 4)
+            .is_err());
+        // The trace may not exit everyone.
+        let mut t = ChurnTrace::new();
+        for d in 0..cluster.n() {
+            t = t.exit(1, d);
+        }
+        assert!(t.validate(&cluster, &planned, 4).is_err());
+    }
+}

@@ -7,7 +7,7 @@
 //! usable by the live engine); `detection_time` is the closed form the
 //! Fig. 16 recovery model charges.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
@@ -171,6 +171,131 @@ impl HeartbeatMonitor {
             .filter(|&d| self.liveness(d) == Liveness::Suspected)
             .collect()
     }
+
+    /// Re-baseline liveness for a (re-)assignment: every listed device
+    /// gets a fresh deadline anchored at *now* and a cleared suspicion
+    /// flag; devices not listed are forgotten.  Without this, a worker
+    /// re-Assigned after a mid-round recovery — or a rejoined worker —
+    /// inherits the deadline of its previous incarnation (last beat
+    /// long before the re-assign) and can be re-declared dead before
+    /// its first new heartbeat lands.
+    pub fn rearm(&mut self, devices: &[usize]) {
+        let now = Instant::now();
+        self.last_beat = devices.iter().map(|&d| (d, now)).collect();
+        self.confirmed = devices.iter().map(|&d| (d, false)).collect();
+    }
+}
+
+/// Timing-drift straggler detection: the failure mode that never trips
+/// a heartbeat.  A straggler keeps beating — what changes is its
+/// per-round compute wall-clock.  The detector keeps a per-device
+/// baseline from the first `warmup_rounds` observations and flags a
+/// device only after `consecutive` rounds in a row beyond
+/// `drift_factor` × its baseline, so ordinary noise (CI jitter, a
+/// transient GC pause) never fires it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StragglerCfg {
+    /// Rounds used to establish each device's baseline (no detection
+    /// can fire during warm-up).
+    pub warmup_rounds: usize,
+    /// Flag when a round's compute time exceeds this multiple of the
+    /// device's baseline mean.
+    pub drift_factor: f64,
+    /// Consecutive drifted rounds required before the detector fires —
+    /// the noise gate.
+    pub consecutive: usize,
+}
+
+impl Default for StragglerCfg {
+    fn default() -> Self {
+        StragglerCfg { warmup_rounds: 3, drift_factor: 2.0, consecutive: 2 }
+    }
+}
+
+impl StragglerCfg {
+    pub fn validate(&self) -> Result<()> {
+        if self.warmup_rounds == 0 {
+            bail!("straggler warmup_rounds must be >= 1 (no baseline, no drift)");
+        }
+        if self.drift_factor <= 1.0 {
+            bail!(
+                "straggler drift_factor must be > 1.0 (got {}): at or below 1 every \
+                 healthy round drifts",
+                self.drift_factor
+            );
+        }
+        if self.consecutive == 0 {
+            bail!("straggler consecutive must be >= 1");
+        }
+        Ok(())
+    }
+}
+
+/// Per-round compute-time drift detector (driver side).  Feed it every
+/// device's round compute wall-clock; [`DriftDetector::observe`]
+/// returns the drift ratio the first time a device crosses into the
+/// flagged state.
+#[derive(Debug, Clone, Default)]
+pub struct DriftDetector {
+    cfg: StragglerCfg,
+    /// Per-device (sum, count) of warm-up observations.
+    base: BTreeMap<usize, (f64, usize)>,
+    /// Per-device run of consecutive drifted rounds.
+    streak: BTreeMap<usize, usize>,
+    flagged: BTreeSet<usize>,
+}
+
+impl DriftDetector {
+    pub fn new(cfg: StragglerCfg) -> DriftDetector {
+        DriftDetector { cfg, ..DriftDetector::default() }
+    }
+
+    /// The device's warm-up baseline mean, once established.
+    pub fn baseline(&self, device: usize) -> Option<f64> {
+        match self.base.get(&device) {
+            Some(&(sum, n)) if n >= self.cfg.warmup_rounds => Some(sum / n as f64),
+            _ => None,
+        }
+    }
+
+    pub fn is_flagged(&self, device: usize) -> bool {
+        self.flagged.contains(&device)
+    }
+
+    /// Record one round's compute time for `device`.  Returns
+    /// `Some(ratio)` exactly when this observation completes
+    /// `consecutive` drifted rounds and newly flags the device.
+    pub fn observe(&mut self, device: usize, compute_s: f64) -> Option<f64> {
+        let Some(baseline) = self.baseline(device) else {
+            let e = self.base.entry(device).or_insert((0.0, 0));
+            e.0 += compute_s;
+            e.1 += 1;
+            return None;
+        };
+        if baseline <= 0.0 || self.flagged.contains(&device) {
+            return None;
+        }
+        let ratio = compute_s / baseline;
+        if ratio >= self.cfg.drift_factor {
+            let streak = self.streak.entry(device).or_insert(0);
+            *streak += 1;
+            if *streak >= self.cfg.consecutive {
+                self.flagged.insert(device);
+                return Some(ratio);
+            }
+        } else {
+            self.streak.remove(&device);
+        }
+        None
+    }
+
+    /// Forget everything about `device` — called after a reschedule
+    /// re-assigns it (a new stage means a new, legitimate baseline).
+    pub fn reset(&mut self, device: usize) {
+        self.base.remove(&device);
+        self.streak.remove(&device);
+        self.flagged.remove(&device);
+    }
 }
 
 #[cfg(test)]
@@ -233,6 +358,102 @@ mod tests {
         };
         assert!((cfg.detection_time() - 1.1).abs() < 1e-9);
         assert_eq!(cfg.deadline(), Duration::from_secs(1));
+    }
+
+    #[test]
+    fn rearm_resets_deadlines_for_reassigned_workers() {
+        // The mid-round-recovery bug: a re-Assigned (or rejoined)
+        // worker must not inherit its previous incarnation's deadline.
+        let mut m = HeartbeatMonitor::new(fast_cfg(), &[0, 1]);
+        std::thread::sleep(Duration::from_millis(50));
+        assert_eq!(m.liveness(0), Liveness::Suspected);
+        m.confirm_failure(1);
+        assert_eq!(m.liveness(1), Liveness::Confirmed);
+        // Re-assign devices 0 and 1 plus a rejoined device 2: all three
+        // start Alive with a fresh deadline and no suspicion carryover.
+        m.rearm(&[0, 1, 2]);
+        for d in [0, 1, 2] {
+            assert_eq!(m.liveness(d), Liveness::Alive, "device {d} after rearm");
+        }
+        assert!(m.suspects().is_empty());
+        // The fresh deadline still expires normally afterwards.
+        std::thread::sleep(Duration::from_millis(50));
+        assert_eq!(m.liveness(2), Liveness::Suspected);
+    }
+
+    /// Deterministic LCG in [-1, 1] for seeded timing noise.
+    fn noise(seed: &mut u64) -> f64 {
+        *seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        ((*seed >> 33) as f64 / (1u64 << 31) as f64) - 1.0
+    }
+
+    #[test]
+    fn drift_detector_ignores_noisy_but_healthy_traces() {
+        // ±25% seeded jitter around a 1 s round never reaches the 2x
+        // drift factor: no false positives over a long healthy trace.
+        let mut det = DriftDetector::new(StragglerCfg::default());
+        let mut seed = 42u64;
+        for _ in 0..200 {
+            for dev in 0..3usize {
+                let t = 1.0 + 0.25 * noise(&mut seed);
+                assert_eq!(det.observe(dev, t), None, "false positive on device {dev}");
+            }
+        }
+        for dev in 0..3usize {
+            assert!(!det.is_flagged(dev));
+            let b = det.baseline(dev).unwrap();
+            assert!((b - 1.0).abs() < 0.3, "baseline {b} drifted from the trace mean");
+        }
+    }
+
+    #[test]
+    fn drift_detector_fires_after_consecutive_drifted_rounds() {
+        let cfg = StragglerCfg { warmup_rounds: 3, drift_factor: 2.0, consecutive: 2 };
+        let mut det = DriftDetector::new(cfg);
+        for _ in 0..3 {
+            assert_eq!(det.observe(7, 1.0), None); // warm-up
+        }
+        // First drifted round: streak 1 of 2 — not yet.
+        assert_eq!(det.observe(7, 3.0), None);
+        // A healthy round in between resets the streak (noise gate).
+        assert_eq!(det.observe(7, 1.1), None);
+        assert_eq!(det.observe(7, 3.0), None);
+        let ratio = det.observe(7, 3.0).expect("second consecutive drifted round fires");
+        assert!(ratio >= 2.0);
+        assert!(det.is_flagged(7));
+        // Once flagged, stays flagged silently until reset.
+        assert_eq!(det.observe(7, 5.0), None);
+        det.reset(7);
+        assert!(!det.is_flagged(7));
+        assert_eq!(det.baseline(7), None, "reset starts a fresh baseline");
+    }
+
+    #[test]
+    fn drift_detector_threshold_is_sharp() {
+        // Just under the factor never fires; just over does (after the
+        // consecutive gate) — detection is threshold-driven, not
+        // magnitude-driven.
+        let cfg = StragglerCfg { warmup_rounds: 2, drift_factor: 2.0, consecutive: 2 };
+        let mut under = DriftDetector::new(cfg);
+        let mut over = DriftDetector::new(cfg);
+        for det in [&mut under, &mut over] {
+            det.observe(0, 1.0);
+            det.observe(0, 1.0);
+        }
+        for _ in 0..50 {
+            assert_eq!(under.observe(0, 1.99), None);
+        }
+        assert!(!under.is_flagged(0));
+        assert_eq!(over.observe(0, 2.01), None);
+        assert!(over.observe(0, 2.01).is_some());
+    }
+
+    #[test]
+    fn straggler_cfg_validation() {
+        StragglerCfg::default().validate().unwrap();
+        assert!(StragglerCfg { warmup_rounds: 0, ..Default::default() }.validate().is_err());
+        assert!(StragglerCfg { drift_factor: 1.0, ..Default::default() }.validate().is_err());
+        assert!(StragglerCfg { consecutive: 0, ..Default::default() }.validate().is_err());
     }
 
     #[test]

@@ -3,15 +3,17 @@
 //! layer-wise lightweight re-planning, and the heavy-rescheduling
 //! baseline it is compared against (Figs. 16-17).
 
+pub mod churn;
 pub mod heartbeat;
 pub mod replan;
 pub mod replay;
 pub mod replication;
 
-pub use heartbeat::{HeartbeatCfg, HeartbeatMonitor, Liveness};
+pub use churn::{ChurnEvent, ChurnTrace, TimedEvent};
+pub use heartbeat::{DriftDetector, HeartbeatCfg, HeartbeatMonitor, Liveness, StragglerCfg};
 pub use replan::{lightweight_replan, migration_time, Replan};
 pub use replay::{
-    heavy_reschedule, heavy_reschedule_incremental, lightweight_replay, throughput_timeline,
-    RecoveryReport,
+    degraded_reschedule, heavy_reschedule, heavy_reschedule_incremental, lightweight_replay,
+    rejoin_replan, throughput_timeline, RecoveryReport,
 };
 pub use replication::{replication_plan, BackupStore, RecoverySource, ReplicationPlan};

@@ -24,7 +24,10 @@ use crate::fault::heartbeat::HeartbeatCfg;
 use crate::fault::replan::{lightweight_replan, migration_time};
 use crate::fault::replication::{replication_plan, restore_time};
 use crate::model::ModelDesc;
-use crate::planner::dp::{plan_hpp, plan_hpp_incremental, plan_hpp_subset, DpState, PlannerConfig};
+use crate::planner::dp::{
+    plan_hpp, plan_hpp_incremental, plan_hpp_incremental_join, plan_hpp_subset, DpState,
+    PlannerConfig,
+};
 use crate::planner::plan::Plan;
 use crate::profiler::ProfileTable;
 use crate::schedule::{diff, Schedule, SchedulePolicy, ScheduleDiff};
@@ -275,6 +278,171 @@ pub fn heavy_reschedule_incremental(
             restore_s: gather_s,
             replan_s: outcome.planning_time_s * EDGE_PLANNER_SLOWDOWN,
             migration_s: redistribute_s,
+            new_throughput: sim.throughput,
+            new_plan,
+            replay_micros: sdiff.replay_micros,
+            retasked_devices: sdiff.retasked,
+            refill_s: sim.fill_latency,
+        },
+        state,
+    ))
+}
+
+/// Per-layer weight traffic a plan change implies, split into bytes
+/// that flow *to* `joined` (warm-start restore from the driver
+/// checkpoint) and bytes that move between surviving devices (boundary
+/// migration).  Ownership is compared stage-wise: a layer whose device
+/// group is unchanged costs nothing.
+fn weight_move_split(model: &ModelDesc, old: &Plan, new: &Plan, joined: Option<usize>) -> (u64, u64) {
+    let owner = |p: &Plan, l: usize| {
+        p.stages
+            .iter()
+            .find(|s| l >= s.layers.0 && l < s.layers.1)
+            .map(|s| s.devices.clone())
+    };
+    let mut to_joined = 0u64;
+    let mut moved = 0u64;
+    for l in 0..model.num_layers() {
+        let old_owner = owner(old, l);
+        let new_owner = owner(new, l);
+        if old_owner == new_owner {
+            continue;
+        }
+        let b = model.weight_bytes_range(l, l + 1);
+        let lands_on_joined =
+            matches!((joined, &new_owner), (Some(j), Some(devs)) if devs.contains(&j));
+        if lands_on_joined {
+            to_joined += b;
+        } else {
+            moved += b;
+        }
+    }
+    (to_joined, moved)
+}
+
+/// Replan after a previously-exited device *rejoins* (its restarted
+/// `asteroid-worker` reconnected).  The symmetric twin of
+/// [`heavy_reschedule_incremental`]: with the session's surviving
+/// [`DpState`] the planner re-expands through
+/// [`plan_hpp_incremental_join`] — reusing every DP cell whose
+/// device-order suffix the insertion left intact — and the result is
+/// bit-for-bit what a full rebuild over the grown set would emit.
+/// Without a usable state it degrades to a full subset rebuild.
+///
+/// Cost model: `detection_s` is zero (a join is announced by the
+/// reconnect handshake, not detected by heartbeat silence — the RPC
+/// driver overwrites it with the measured reconnect wall-clock);
+/// `restore_s` is the warm-start weights flowing from the driver
+/// checkpoint to the joined device; `migration_s` is the boundary
+/// weights that shift between survivors as stages re-balance.  Unlike
+/// the heavy baseline, `replan_s` is the *measured* planner time with
+/// no `EDGE_PLANNER_SLOWDOWN` scaling — rejoin is our mechanism and
+/// runs in-process on the driver, not on the strongest edge device.
+#[allow(clippy::too_many_arguments)]
+pub fn rejoin_replan(
+    table: &ProfileTable,
+    cluster: &ClusterSpec,
+    model: &ModelDesc,
+    cfg: &TrainConfig,
+    plan: &Plan,
+    joined: usize,
+    policy: &'static dyn SchedulePolicy,
+    codec: &CodecSpec,
+    prev: Option<&DpState>,
+) -> Result<(RecoveryReport, DpState)> {
+    let active = plan.devices();
+    if active.contains(&joined) {
+        anyhow::bail!("device {joined} is already in the plan");
+    }
+    if joined >= cluster.n() {
+        anyhow::bail!("device {joined} is not a cluster device");
+    }
+    let mut union = active.clone();
+    union.push(joined);
+    union.sort_unstable();
+
+    let pc = PlannerConfig { policy, codec: *codec, ..PlannerConfig::default() };
+    // The previous state must cover exactly the surviving set for the
+    // join fast path to re-expand it; anything else (stale state from
+    // before an unrelated exit, no state at all) falls back to a full
+    // subset rebuild — same plan, no cell reuse.
+    let sorted = |mut v: Vec<usize>| {
+        v.sort_unstable();
+        v
+    };
+    let (outcome, state) = match prev {
+        Some(p) if sorted(p.order().to_vec()) == active => {
+            plan_hpp_incremental_join(p, table, cluster, model, cfg, &pc, joined)?
+        }
+        _ => plan_hpp_subset(table, cluster, model, cfg, &pc, &union)?,
+    };
+
+    let bw = cluster.min_bandwidth(&union);
+    let new_plan = outcome.plan;
+    let (restore_bytes, moved_bytes) = weight_move_split(model, plan, &new_plan, Some(joined));
+    let sdiff = recovery_diff(plan, &new_plan, policy);
+    let sim = price_round(table, cluster, model, &new_plan, policy, codec);
+
+    Ok((
+        RecoveryReport {
+            mechanism: "rejoin",
+            detection_s: 0.0,
+            restore_s: restore_bytes as f64 / bw,
+            replan_s: outcome.planning_time_s,
+            migration_s: moved_bytes as f64 / bw,
+            new_throughput: sim.throughput,
+            new_plan,
+            replay_micros: sdiff.replay_micros,
+            retasked_devices: sdiff.retasked,
+            refill_s: sim.fill_latency,
+        },
+        state,
+    ))
+}
+
+/// Full replan over the *current* membership after the cluster itself
+/// degraded — a straggler derated a device's compute (`mechanism:
+/// "straggler"`) or a link's bandwidth dropped (`"link-degrade"`).
+/// `table`/`cluster` describe the degraded fleet; the previous
+/// `DpState` cannot help because every stage price moved with the
+/// hardware, so this is always a fresh subset DP (the returned state
+/// seeds future incremental replans *on the degraded cluster*).
+///
+/// Nobody died: weights are resident, so there is no gather/restore —
+/// only the boundary layers that shift between devices migrate.
+/// `detection_s` is supplied by the caller (the drift detector's
+/// observation window for stragglers, zero for driver-observed link
+/// telemetry), and `replan_s` is the measured in-process planner time,
+/// as in [`rejoin_replan`].
+#[allow(clippy::too_many_arguments)]
+pub fn degraded_reschedule(
+    table: &ProfileTable,
+    cluster: &ClusterSpec,
+    model: &ModelDesc,
+    cfg: &TrainConfig,
+    plan: &Plan,
+    mechanism: &'static str,
+    detection_s: f64,
+    policy: &'static dyn SchedulePolicy,
+    codec: &CodecSpec,
+) -> Result<(RecoveryReport, DpState)> {
+    let active = plan.devices();
+    let pc = PlannerConfig { policy, codec: *codec, ..PlannerConfig::default() };
+    let (outcome, state) = plan_hpp_subset(table, cluster, model, cfg, &pc, &active)?;
+
+    let bw = cluster.min_bandwidth(&active);
+    let new_plan = outcome.plan;
+    let (_, moved_bytes) = weight_move_split(model, plan, &new_plan, None);
+    let sdiff = recovery_diff(plan, &new_plan, policy);
+    let sim = price_round(table, cluster, model, &new_plan, policy, codec);
+
+    Ok((
+        RecoveryReport {
+            mechanism,
+            detection_s,
+            restore_s: 0.0,
+            replan_s: outcome.planning_time_s,
+            migration_s: moved_bytes as f64 / bw,
             new_throughput: sim.throughput,
             new_plan,
             replay_micros: sdiff.replay_micros,
@@ -599,6 +767,116 @@ mod tests {
         assert!(!r2.new_plan.devices().contains(&first));
         assert!(!r2.new_plan.devices().contains(&second));
         assert_eq!(s2.order().len(), cluster.n() - 2);
+    }
+
+    #[test]
+    fn rejoin_re_expands_to_the_original_plan() {
+        // Exit a device through the incremental heavy path, then bring
+        // it back through rejoin_replan: on an otherwise-unchanged
+        // cluster the re-expanded plan must be bit-for-bit the original
+        // full-fleet plan, and the chained state must cover the whole
+        // cluster again.
+        let (cluster, model, table, cfg, plan) = setup();
+        let hb = HeartbeatCfg::default();
+        let (_, state) = crate::planner::dp::plan_hpp_with_state(
+            &table,
+            &cluster,
+            &model,
+            &cfg,
+            &PlannerConfig::default(),
+        )
+        .unwrap();
+        let dev = plan.devices()[0];
+        let (exit_rep, s1) = heavy_reschedule_incremental(
+            &table,
+            &cluster,
+            &model,
+            &cfg,
+            &plan,
+            dev,
+            &hb,
+            DEFAULT_POLICY,
+            &CodecSpec::default(),
+            Some(&state),
+        )
+        .unwrap();
+        let (rej, s2) = rejoin_replan(
+            &table,
+            &cluster,
+            &model,
+            &cfg,
+            &exit_rep.new_plan,
+            dev,
+            DEFAULT_POLICY,
+            &CodecSpec::default(),
+            Some(&s1),
+        )
+        .unwrap();
+        assert_eq!(rej.mechanism, "rejoin");
+        assert_eq!(rej.new_plan, plan);
+        assert_eq!(s2.order().len(), cluster.n());
+        assert_eq!(rej.detection_s, 0.0);
+        assert!(rej.replan_s > 0.0);
+        rej.new_plan.validate(&model, &cluster).unwrap();
+        // Cold path (no surviving state) emits the identical plan.
+        let (cold, _) = rejoin_replan(
+            &table,
+            &cluster,
+            &model,
+            &cfg,
+            &exit_rep.new_plan,
+            dev,
+            DEFAULT_POLICY,
+            &CodecSpec::default(),
+            None,
+        )
+        .unwrap();
+        assert_eq!(cold.new_plan, rej.new_plan);
+        // Rejoining an already-active device is refused.
+        assert!(rejoin_replan(
+            &table,
+            &cluster,
+            &model,
+            &cfg,
+            &plan,
+            dev,
+            DEFAULT_POLICY,
+            &CodecSpec::default(),
+            None,
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn degraded_reschedule_replans_on_the_derated_cluster() {
+        let (cluster, model, _table, cfg, plan) = setup();
+        // Derate one planned device's compute 8x and replan.
+        let slow = plan.devices()[0];
+        let mut derated = cluster.clone();
+        derated.devices[slow].peak_flops /= 8.0;
+        derated.devices[slow].overhead_s *= 8.0;
+        let dtable = ProfileTable::new(&derated, &model);
+        let (rep, state) = degraded_reschedule(
+            &dtable,
+            &derated,
+            &model,
+            &cfg,
+            &plan,
+            "straggler",
+            1.25,
+            DEFAULT_POLICY,
+            &CodecSpec::default(),
+        )
+        .unwrap();
+        assert_eq!(rep.mechanism, "straggler");
+        assert_eq!(rep.detection_s, 1.25);
+        assert_eq!(rep.restore_s, 0.0);
+        assert!(rep.new_throughput > 0.0);
+        rep.new_plan.validate(&model, &derated).unwrap();
+        // Membership is preserved — a straggler is rebalanced around,
+        // not evicted.
+        assert_eq!(rep.new_plan.devices(), plan.devices());
+        assert_eq!(state.order().len(), plan.devices().len());
     }
 
     #[test]

@@ -5,7 +5,8 @@
 //! asteroid simulate --model <zoo|lm|cnn> --env B --mbps 100 [--method M --schedule gpipe|zb-h1|async:<s>]
 //! asteroid train    --model lm|cnn --env B [--steps N --lr X --emulate]
 //! asteroid train    --backend rpc --connect h:p,h:p,h:p --env nanos:3 --method pp \
-//!                   [--fail-after N --resume N --heartbeat-ms M] [--report out.json]
+//!                   [--fail-after N --resume N --heartbeat-ms M] \
+//!                   [--churn "exit:2@1,join:2@3,slow:0:3@5"] [--report out.json]
 //! asteroid replay   --model effnet --env D --fail <device-id>
 //! asteroid lint     [--format json] [--model M --env E --schedule P --codec C]
 //! asteroid envs
@@ -28,15 +29,15 @@ use anyhow::{bail, Context, Result};
 
 use asteroid::codec::{Codec, CodecSpec};
 use asteroid::config::{ClusterSpec, TrainConfig};
-use asteroid::fault::HeartbeatCfg;
+use asteroid::fault::{ChurnTrace, HeartbeatCfg};
 use asteroid::model::zoo;
 use asteroid::pipeline::OptimizerCfg;
 use asteroid::planner::baselines::Method;
 use asteroid::planner::Planner;
 use asteroid::schedule::{builtin_policies, policy_by_name, SchedulePolicy};
 use asteroid::session::{
-    ExecutionBackend, FaultSpec, PjrtBackend, RecoveryKind, RpcBackend, RunReport, Session,
-    SimBackend,
+    ChurnSpec, ExecutionBackend, FaultSpec, PjrtBackend, RecoveryKind, RpcBackend, RunReport,
+    Session, SimBackend,
 };
 use asteroid::util::bench::synthetic_fleet;
 use asteroid::util::cli::Args;
@@ -116,6 +117,39 @@ fn fault_from(args: &Args) -> Result<Option<FaultSpec>> {
     Ok(Some(spec))
 }
 
+/// Elastic-membership churn from `--churn <trace>`: an ordered timed
+/// event list in the [`ChurnTrace`] grammar, e.g.
+/// `exit:2@1,join:2@3,slow:0:3@5,link:0-1:40@7` (device 2 exits before
+/// round 1 and rejoins before round 3; device 0 slows 3x before round
+/// 5; the 0-1 link degrades to 40 Mbps before round 7).
+/// `--heartbeat-ms M` tightens exit detection exactly as for
+/// `--fail-after`; `--exit-recovery lightweight|heavy-incremental`
+/// picks the exit mechanism (default heavy-incremental, which keeps
+/// the planner state chained for later joins).
+fn churn_from(args: &Args) -> Result<Option<ChurnSpec>> {
+    let Some(trace) = args.get("churn") else {
+        return Ok(None);
+    };
+    let trace: ChurnTrace = trace.parse()?;
+    let mut spec = ChurnSpec::from(trace);
+    match args.str_or("exit-recovery", "heavy-incremental").as_str() {
+        "heavy-incremental" | "heavy-inc" => {}
+        "lightweight" | "lite" => spec = spec.with_exit_recovery(RecoveryKind::Lightweight),
+        other => bail!("--exit-recovery expects lightweight|heavy-incremental, got {other:?}"),
+    }
+    if let Some(ms) = args.get("heartbeat-ms") {
+        let ms: u64 = ms
+            .parse()
+            .with_context(|| format!("--heartbeat-ms expects an integer, got {ms:?}"))?;
+        spec = spec.with_heartbeat(HeartbeatCfg::new(
+            Duration::from_millis(ms),
+            3,
+            Duration::from_millis(ms / 2),
+        )?);
+    }
+    Ok(Some(spec))
+}
+
 /// Assemble the session every command starts from: model (zoo or AOT
 /// manifest), cluster, training config, planner, schedule policy and
 /// run options — one builder, no per-command phase wiring.
@@ -142,6 +176,9 @@ fn session_from(args: &Args, default_model: &str) -> Result<Session> {
     }
     if let Some(fault) = fault_from(args)? {
         b = b.fault(fault);
+    }
+    if let Some(churn) = churn_from(args)? {
+        b = b.churn(churn);
     }
     if zoo::by_name(&model).is_some() {
         b = b.model(&model).train(TrainConfig::new(
@@ -275,8 +312,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     for ev in &report.recoveries {
         println!(
-            "recovered from device {} exit at round {} via {} in {:.2}s \
+            "recovery [{}] device {} at round {} via {} in {:.2}s \
              (replayed {} micros, retasked {} devices)",
+            ev.kind.name(),
             ev.failed_device,
             ev.round,
             ev.report.mechanism,
@@ -306,11 +344,17 @@ fn report_json(r: &RunReport) -> String {
         .map(|e| {
             format!(
                 "{{\"round\": {}, \"failed_device\": {}, \"mechanism\": \"{}\", \
-                 \"total_s\": {:.6}, \"replay_micros\": {}, \"retasked_devices\": {}}}",
+                 \"kind\": \"{}\", \"total_s\": {:.6}, \"detection_s\": {:.6}, \
+                 \"replan_s\": {:.6}, \"replan_wall_s\": {:.6}, \
+                 \"replay_micros\": {}, \"retasked_devices\": {}}}",
                 e.round,
                 e.failed_device,
                 e.report.mechanism,
+                e.kind.name(),
                 e.report.total_s(),
+                e.report.detection_s,
+                e.report.replan_s,
+                e.replan_wall_s,
                 e.report.replay_micros.len(),
                 e.report.retasked_devices.len(),
             )

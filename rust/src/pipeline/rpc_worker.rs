@@ -132,6 +132,7 @@ pub fn serve(listener: TcpListener, opts: ServeOpts) -> Result<ServeOutcome> {
         assigned: None,
         carryover: VecDeque::new(),
         pending_ctrl: VecDeque::new(),
+        throttle: 1.0,
         opts,
     };
     state.main_loop()
@@ -218,6 +219,11 @@ struct WorkerState {
     carryover: VecDeque<(u64, DataMsg)>,
     /// Control frames observed while draining stale data.
     pending_ctrl: VecDeque<RpcMsg>,
+    /// Injected compute slowdown (`RpcMsg::Throttle`): rounds are
+    /// stretched to `factor x` their natural duration.  1.0 = full
+    /// speed.  Survives re-assignment — the throttle models degraded
+    /// hardware, not a property of one stage task.
+    throttle: f64,
     opts: ServeOpts,
 }
 
@@ -278,6 +284,12 @@ impl WorkerState {
                                 device: a.spec.device,
                                 error: "aborted while idle".into(),
                             });
+                        }
+                    }
+                    (Some(WorkerAction::ApplyThrottle), RpcMsg::Throttle { factor }) => {
+                        self.throttle = if factor.is_finite() { factor.max(1.0) } else { 1.0 };
+                        if self.opts.verbose {
+                            eprintln!("asteroid-worker: throttled to {}x", self.throttle);
                         }
                     }
                     (Some(WorkerAction::ExitClean), RpcMsg::Exit) => {
@@ -392,6 +404,13 @@ impl WorkerState {
         };
         let t0 = Instant::now();
         let outcome = round_body(&mut a, &mut self.carryover, &self.rx, &self.control_writer);
+        if self.throttle > 1.0 {
+            // Straggler injection: stretch the round to `factor x` its
+            // natural duration, so the driver's timing-drift detector
+            // sees exactly what a derated device would produce.
+            let stretch = (self.throttle - 1.0) * t0.elapsed().as_secs_f64();
+            std::thread::sleep(Duration::from_secs_f64(stretch.min(10.0)));
+        }
         let compute_s = t0.elapsed().as_secs_f64();
         let device = a.spec.device;
         match outcome {

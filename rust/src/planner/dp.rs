@@ -605,6 +605,17 @@ fn removal_position(old: &[usize], new: &[usize]) -> Option<usize> {
     (old[..k] == new[..k] && old[k + 1..] == new[k..]).then_some(k)
 }
 
+/// If `new` equals `old` with exactly one element inserted, return the
+/// inserted position in `new` — the mirror of [`removal_position`] for
+/// the join fast path.
+fn insertion_position(old: &[usize], new: &[usize]) -> Option<usize> {
+    if new.len() != old.len() + 1 {
+        return None;
+    }
+    let k = old.iter().zip(new.iter()).position(|(a, b)| a != b).unwrap_or(old.len());
+    (old[..k] == new[..k] && old[k..] == new[k + 1..]).then_some(k)
+}
+
 /// Append a chain's steps `[exec, comm, exec, comm, ...]` to `out`,
 /// head to tail — the same step list the recurrence used to assemble
 /// as a fresh `Vec` per candidate.
@@ -620,12 +631,14 @@ fn push_chain(arena: &[Node], mut node: u32, out: &mut Vec<StepCost>) {
 }
 
 /// Copy a chain from a previous state's arena into `arena`, shifting
-/// every position down by one (the removed device sorts strictly
-/// before every position a reused chain touches).  `map` dedups shared
-/// sub-chains across cells.
+/// every position by `shift`: −1 for a removal (the removed device
+/// sorts strictly before every position a reused chain touches), +1
+/// for an insertion (the joined device sorts strictly before them).
+/// `map` dedups shared sub-chains across cells.
 fn copy_chain(
     prev: &DpState,
     root: u32,
+    shift: i32,
     arena: &mut Vec<Node>,
     map: &mut HashMap<u32, u32>,
 ) -> u32 {
@@ -638,7 +651,9 @@ fn copy_chain(
     while let Some(old) = stack.pop() {
         let nd = prev.arena[old as usize];
         let parent = if nd.parent == NO_NODE { NO_NODE } else { map[&nd.parent] };
-        arena.push(Node { ds: nd.ds - 1, de: nd.de - 1, parent, ..nd });
+        let ds = (nd.ds as i32 + shift) as u32;
+        let de = (nd.de as i32 + shift) as u32;
+        arena.push(Node { ds, de, parent, ..nd });
         map.insert(old, (arena.len() - 1) as u32);
     }
     map[&root]
@@ -721,11 +736,15 @@ fn plan_hpp_core(
     let fp = state_fp(cluster, model, cfg, pc);
     // Memo reuse needs everything but (b, m) to match — those are in
     // the memo keys.  Cell reuse needs exact config equality AND the
-    // new order to be the previous order minus exactly one device.
+    // new order to differ from the previous order by exactly one
+    // device: a removal shifts surviving suffix positions down by one,
+    // an insertion shifts them up by one.
     let prev_memo = prev.filter(|p| p.fp.memo_compatible(&fp)).map(|p| &p.pricer);
-    let removal = prev
-        .filter(|p| p.fp == fp)
-        .and_then(|p| removal_position(&p.order, &order).map(|k| (p, k)));
+    let delta = prev.filter(|p| p.fp == fp).and_then(|p| {
+        removal_position(&p.order, &order)
+            .map(|k| (p, k, -1i32))
+            .or_else(|| insertion_position(&p.order, &order).map(|k| (p, k, 1i32)))
+    });
 
     let mut pricer = StagePricer::new();
     let mut arena: Vec<Node> = Vec::new();
@@ -736,15 +755,23 @@ fn plan_hpp_core(
 
     // ---- incremental fast path: copy unaffected cells -----------------
     // A rung n' is reusable iff its device suffix (the last n' of the
-    // previous order) survives intact — all its positions sort strictly
-    // after the removed one — and the ladder below n' is unchanged, so
-    // the fresh run would evaluate exactly the same candidate set in
-    // exactly the same sequence.  Copied cells are then bit-identical
-    // to recomputation (`tests/fleet_planning.rs` proves it per plan).
-    if let Some((pstate, k)) = removal {
+    // new order) predates the delta — for a removal at old-order
+    // position k that means every suffix position sorted strictly
+    // after the removed one (`n' <= n_total - k`); for an insertion at
+    // new-order position k the suffix must exclude position k
+    // (`n' <= n_total - k - 1`) — and the rung ladder below n' is
+    // unchanged, so the fresh run would evaluate exactly the same
+    // candidate set in exactly the same sequence.  Copied cells are
+    // then bit-identical to recomputation (`tests/fleet_planning.rs`
+    // proves it per plan, in both directions).  An insertion can grow
+    // `max_p` past the previous state's; the cells that go uncopied
+    // there need `p > old n_total >= n'`, i.e. more stages than the
+    // rung has devices — infeasible for the fresh run too, so no hole.
+    if let Some((pstate, k, shift)) = delta {
+        let limit = if shift < 0 { n_total - k } else { (n_total - k).saturating_sub(1) };
         let mut node_map: HashMap<u32, u32> = HashMap::new();
         for (ri, &n) in rungs.iter().enumerate() {
-            if n > n_total - k {
+            if n > limit {
                 continue;
             }
             let Ok(pri) = pstate.rungs.binary_search(&n) else { continue };
@@ -757,7 +784,7 @@ fn plan_hpp_core(
                     if c.node == NO_NODE {
                         continue;
                     }
-                    let node = copy_chain(pstate, c.node, &mut arena, &mut node_map);
+                    let node = copy_chain(pstate, c.node, shift, &mut arena, &mut node_map);
                     cells[cell_idx(l, ri, p)] = Cell { latency: c.latency, node };
                 }
             }
@@ -1107,6 +1134,38 @@ pub fn plan_hpp_incremental(
 ) -> Result<(PlanOutcome, DpState)> {
     let keep: Vec<usize> = prev.order.iter().copied().filter(|&d| d != removed).collect();
     plan_hpp_core(table, cluster, model, cfg, pc, Some(&keep), Some(prev))
+}
+
+/// Replan after *adding* one device to a previous run's device set —
+/// the join-side mirror of [`plan_hpp_incremental`].  The plan
+/// re-expands by extending the sorted device order and reusing every
+/// `DpState` cell whose device suffix the insertion left untouched
+/// (suffixes that exclude the joined device's sorted position);
+/// everything else is recomputed.  The result is **bit-for-bit
+/// identical** to a full [`plan_hpp_subset`] rebuild over the union
+/// (the join property test in `tests/fleet_planning.rs` asserts it).
+/// With an incompatible `prev` — different model, cluster, config, or
+/// `added` already present — the fast path silently degrades to a
+/// full rebuild, still reusing memoized stage prices where valid.
+pub fn plan_hpp_incremental_join(
+    prev: &DpState,
+    table: &ProfileTable,
+    cluster: &ClusterSpec,
+    model: &ModelDesc,
+    cfg: &TrainConfig,
+    pc: &PlannerConfig,
+    added: usize,
+) -> Result<(PlanOutcome, DpState)> {
+    anyhow::ensure!(
+        added < cluster.n(),
+        "joined device {added} is not a cluster device (cluster has {})",
+        cluster.n()
+    );
+    let mut union: Vec<usize> = prev.order.clone();
+    if !union.contains(&added) {
+        union.push(added);
+    }
+    plan_hpp_core(table, cluster, model, cfg, pc, Some(&union), Some(prev))
 }
 
 /// Sweep candidate micro-batch sizes and return the best plan overall.
@@ -1540,5 +1599,90 @@ mod tests {
                 ),
             }
         }
+    }
+
+    #[test]
+    fn join_incremental_matches_full_rebuild_env_c() {
+        // The join-side mirror of the removal contract, exhaustively
+        // over env C: plan every (n-1)-device subset, re-add the
+        // missing device through the join fast path, and demand the
+        // identical plan and bit-identical latency a from-scratch
+        // rebuild over all n devices emits.
+        let model = zoo::mobilenet_v2();
+        let cluster = ClusterSpec::env("C", 100.0).unwrap();
+        let table = ProfileTable::new(&cluster, &model);
+        let cfg = TrainConfig::new(256, 16);
+        let pc = PlannerConfig::default();
+        let all: Vec<usize> = (0..cluster.n()).collect();
+        for joined in 0..cluster.n() {
+            let without: Vec<usize> = all.iter().copied().filter(|&d| d != joined).collect();
+            let Ok((_, small)) = plan_hpp_subset(&table, &cluster, &model, &cfg, &pc, &without)
+            else {
+                continue; // subset infeasible: nothing to re-expand
+            };
+            let full = plan_hpp_subset(&table, &cluster, &model, &cfg, &pc, &all);
+            let fast =
+                plan_hpp_incremental_join(&small, &table, &cluster, &model, &cfg, &pc, joined);
+            match (full, fast) {
+                (Ok((f, _)), Ok((i, state))) => {
+                    assert_eq!(f.plan, i.plan, "join of {joined}: plans diverge");
+                    assert_eq!(
+                        f.predicted_latency.to_bits(),
+                        i.predicted_latency.to_bits(),
+                        "join of {joined}: latency diverges"
+                    );
+                    assert_eq!(state.order().len(), cluster.n());
+                }
+                (Err(_), Err(_)) => {}
+                (full, fast) => panic!(
+                    "join of {joined}: feasibility diverges (full ok={}, join ok={})",
+                    full.is_ok(),
+                    fast.is_ok()
+                ),
+            }
+        }
+    }
+
+    #[test]
+    fn remove_then_rejoin_round_trips_env_c() {
+        // Exit → rejoin of the same device must re-expand the plan to
+        // exactly the original, chaining the two incremental paths:
+        // the removal's state seeds the join, and the re-expanded
+        // outcome is bit-identical to the initial full plan.
+        let model = zoo::mobilenet_v2();
+        let cluster = ClusterSpec::env("C", 100.0).unwrap();
+        let table = ProfileTable::new(&cluster, &model);
+        let cfg = TrainConfig::new(256, 16);
+        let pc = PlannerConfig::default();
+        let (orig, state) = plan_hpp_with_state(&table, &cluster, &model, &cfg, &pc).unwrap();
+        for dev in 0..cluster.n() {
+            let Ok((_, shrunk)) =
+                plan_hpp_incremental(&state, &table, &cluster, &model, &cfg, &pc, dev)
+            else {
+                continue; // removal infeasible: no round trip to check
+            };
+            let (back, grown) =
+                plan_hpp_incremental_join(&shrunk, &table, &cluster, &model, &cfg, &pc, dev)
+                    .unwrap();
+            assert_eq!(back.plan, orig.plan, "rejoin of {dev}: plan did not round-trip");
+            assert_eq!(
+                back.predicted_latency.to_bits(),
+                orig.predicted_latency.to_bits(),
+                "rejoin of {dev}: latency did not round-trip"
+            );
+            assert_eq!(grown.order(), state.order(), "rejoin of {dev}: order diverged");
+        }
+    }
+
+    #[test]
+    fn insertion_position_mirrors_removal() {
+        assert_eq!(insertion_position(&[1, 3], &[1, 2, 3]), Some(1));
+        assert_eq!(insertion_position(&[2, 3], &[1, 2, 3]), Some(0));
+        assert_eq!(insertion_position(&[1, 2], &[1, 2, 3]), Some(2));
+        assert_eq!(insertion_position(&[1, 2, 3], &[1, 2, 3]), None);
+        assert_eq!(insertion_position(&[1, 4], &[1, 2, 3]), None);
+        // The two are inverses over the same pair of orders.
+        assert_eq!(removal_position(&[1, 2, 3], &[1, 3]), Some(1));
+        assert_eq!(insertion_position(&[1, 3], &[1, 2, 3]), Some(1));
     }
 }

@@ -22,8 +22,9 @@ pub mod plan;
 pub use alloc::{allocate_microbatch, AllocOpts};
 pub use cost::{plan_steps, predicted_throughput, round_latency, StepCost};
 pub use dp::{
-    device_rungs, plan_hpp, plan_hpp_incremental, plan_hpp_subset, plan_hpp_sweep_microbatch,
-    plan_hpp_with_state, sorted_device_order, DpState, PlanOutcome, PlannerConfig, StagePricer,
+    device_rungs, plan_hpp, plan_hpp_incremental, plan_hpp_incremental_join, plan_hpp_subset,
+    plan_hpp_sweep_microbatch, plan_hpp_with_state, sorted_device_order, DpState, PlanOutcome,
+    PlannerConfig, StagePricer,
 };
 pub use plan::{KpPolicy, Plan, Stage};
 

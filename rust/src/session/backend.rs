@@ -18,17 +18,27 @@
 //! to the exit round, recovers, warm-starts the new pipeline from the
 //! streamed checkpoint and keeps training — the loss curve must
 //! continue, which the integration tests assert.
+//!
+//! Elastic membership ([`ChurnSpec`](super::ChurnSpec)) generalises
+//! this: the sim backend executes the whole timed trace on a
+//! deterministic event clock (exits, rejoins, injected slowdowns
+//! caught by the real drift detector, link degradations), and the RPC
+//! backend executes it against live worker processes.
 
+use std::collections::BTreeMap;
 use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::{Context, Result};
 
 use crate::data::{DataSource, LmTask, VisionTask};
+use crate::fault::{ChurnEvent, DriftDetector};
 use crate::model::from_manifest::ManifestModel;
 use crate::pipeline::{train, TrainOpts, TrainStats};
 use crate::sim::price_policy_codec;
 
-use super::{RecoveryEvent, RunReport, Session};
+use super::churn::ChurnState;
+use super::{RecoveryEvent, RecoveryKind, RunReport, Session};
 
 /// Turns a planned [`Session`] into a [`RunReport`].  Implementations
 /// are free to carry their own state (a data source, a device handle);
@@ -68,14 +78,129 @@ impl ExecutionBackend for SimBackend {
 
         if let Some(spec) = s.fault() {
             let failed = s.resolve_fault_device(spec)?;
+            let t0 = Instant::now();
             let report = s.recover(spec, failed)?;
+            let replan_wall_s = t0.elapsed().as_secs_f64();
             let at = spec.fail_after.min(rounds);
             let new_latency =
                 report.new_plan.samples_per_round() as f64 / report.new_throughput;
             for r in round_secs.iter_mut().skip(at) {
                 *r = new_latency;
             }
-            recoveries.push(RecoveryEvent { round: at, failed_device: failed, report });
+            recoveries.push(RecoveryEvent {
+                round: at,
+                failed_device: failed,
+                kind: spec.recovery,
+                replan_wall_s,
+                report,
+            });
+        } else if let Some(spec) = s.churn() {
+            // Deterministic event clock: fire each trace event before
+            // its round, replan through the evolving ChurnState, and
+            // price every round at the latency of whatever plan and
+            // (possibly degraded) fleet is current.  `round_secs` stays
+            // a pure per-round latency series — recovery stalls live in
+            // each event's report, as on the FaultSpec path.
+            let mut state = ChurnState::new(s);
+            let mut detector = DriftDetector::new(spec.straggler);
+            let mut latency = sim.round_latency;
+            // Injected-but-undetected slowdowns: device -> (factor,
+            // injection round).
+            let mut pending: BTreeMap<usize, (f64, usize)> = BTreeMap::new();
+            let mut events = spec.trace.events.iter().peekable();
+            for round in 0..rounds {
+                while events.peek().map_or(false, |te| te.round <= round) {
+                    let te = *events.next().unwrap();
+                    let t0 = Instant::now();
+                    match te.event {
+                        ChurnEvent::Exit { device } => {
+                            let report = state.exit(s, spec, device)?;
+                            latency = state.round_latency(s);
+                            // New plan, new scripts: drift baselines
+                            // from the old timeline are meaningless.
+                            detector = DriftDetector::new(spec.straggler);
+                            recoveries.push(RecoveryEvent {
+                                round,
+                                failed_device: device,
+                                kind: spec.exit_recovery,
+                                replan_wall_s: t0.elapsed().as_secs_f64(),
+                                report,
+                            });
+                        }
+                        ChurnEvent::Join { device } => {
+                            let report = state.join(s, device)?;
+                            latency = state.round_latency(s);
+                            detector = DriftDetector::new(spec.straggler);
+                            recoveries.push(RecoveryEvent {
+                                round,
+                                failed_device: device,
+                                kind: RecoveryKind::Rejoin,
+                                replan_wall_s: t0.elapsed().as_secs_f64(),
+                                report,
+                            });
+                        }
+                        ChurnEvent::Slowdown { device, factor } => {
+                            // Nothing replans yet: the device keeps
+                            // heartbeating and only the drift detector
+                            // below can catch it.
+                            state.inject_slowdown(device, factor);
+                            pending.insert(device, (factor, round));
+                        }
+                        ChurnEvent::LinkDegrade { a, b, mbps } => {
+                            let report = state.link_degrade(s, a, b, mbps)?;
+                            latency = state.round_latency(s);
+                            detector = DriftDetector::new(spec.straggler);
+                            recoveries.push(RecoveryEvent {
+                                round,
+                                failed_device: a.min(b),
+                                kind: RecoveryKind::Heavy,
+                                replan_wall_s: t0.elapsed().as_secs_f64(),
+                                report,
+                            });
+                        }
+                    }
+                }
+
+                // Worst-case straggler model: the slowed device gates
+                // its stage, so the whole round stretches by the
+                // largest undetected factor.
+                let degrade =
+                    pending.values().map(|&(f, _)| f).fold(1.0f64, f64::max);
+                round_secs[round] = latency * degrade;
+
+                // Feed the drift detector the round's synthetic
+                // per-device timings: everyone at the base latency, a
+                // slowed device at factor x.
+                let fired: Vec<usize> = state
+                    .active
+                    .clone()
+                    .into_iter()
+                    .filter(|d| {
+                        let f = pending.get(d).map_or(1.0, |&(f, _)| f);
+                        detector.observe(*d, latency * f).is_some()
+                    })
+                    .collect();
+                for device in fired {
+                    let (factor, since) = match pending.remove(&device) {
+                        Some(p) => p,
+                        None => continue, // flagged but never injected
+                    };
+                    // The observation window the report charges: the
+                    // degraded rounds from injection through this one.
+                    let detection_s = (round - since + 1) as f64 * latency * factor;
+                    let t0 = Instant::now();
+                    let report = state.straggler(s, device, factor, detection_s)?;
+                    latency = state.round_latency(s);
+                    detector = DriftDetector::new(spec.straggler);
+                    recoveries.push(RecoveryEvent {
+                        round,
+                        failed_device: device,
+                        kind: RecoveryKind::Straggler,
+                        replan_wall_s: t0.elapsed().as_secs_f64(),
+                        report,
+                    });
+                }
+            }
         }
 
         Ok(RunReport {
@@ -192,7 +317,9 @@ impl ExecutionBackend for PjrtBackend {
 
                 // Phase 2: the spec'd recovery mechanism (timing model
                 // for the report; weights come from the checkpoint).
+                let t0 = Instant::now();
                 let report = s.recover(spec, failed)?;
+                let replan_wall_s = t0.elapsed().as_secs_f64();
 
                 // Phase 3: resume on the recovery plan, warm-started.
                 let mut after_opts = opts.clone();
@@ -203,6 +330,8 @@ impl ExecutionBackend for PjrtBackend {
                 let event = RecoveryEvent {
                     round: spec.fail_after,
                     failed_device: failed,
+                    kind: spec.recovery,
+                    replan_wall_s,
                     report,
                 };
                 Ok(merge_live_phases(s, before, after, event))

@@ -1,0 +1,306 @@
+//! Session-side churn execution: the evolving-membership state machine
+//! behind `.churn(trace)`.
+//!
+//! [`ChurnSpec`] is what a session carries (the trace plus detection
+//! knobs); [`ChurnState`] is the executor both backends drive — it owns
+//! the *evolving* copies of the cluster, profile table, plan and
+//! planner [`DpState`] so that a sequence of exits, rejoins, slowdowns
+//! and link degradations each replans against the fleet as it actually
+//! is at that point, not the fleet the session was built on.
+//!
+//! The chained `DpState` is the whole point of the join fast path: an
+//! incremental-exit recovery returns the shrunk state, a rejoin
+//! re-expands it through `plan_hpp_incremental_join`, and a hardware
+//! mutation (slowdown / link degrade) invalidates it — the next replan
+//! rebuilds a fresh state *on the degraded cluster*, which future
+//! events chain from again.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::config::ClusterSpec;
+use crate::fault::churn::{ChurnEvent, ChurnTrace};
+use crate::fault::{
+    degraded_reschedule, heavy_reschedule_incremental, lightweight_replay, rejoin_replan,
+    HeartbeatCfg, RecoveryReport, StragglerCfg,
+};
+use crate::planner::dp::{plan_hpp_subset, DpState, PlannerConfig};
+use crate::planner::Plan;
+use crate::profiler::ProfileTable;
+use crate::session::{RecoveryKind, Session};
+
+/// Declarative churn injection: the timed event trace plus the
+/// detection knobs the backends run it with.
+#[derive(Debug, Clone)]
+pub struct ChurnSpec {
+    pub trace: ChurnTrace,
+    /// Recovery mechanism for `Exit` events.  Only
+    /// [`RecoveryKind::Lightweight`] and
+    /// [`RecoveryKind::HeavyIncremental`] are churn-capable: both
+    /// replan over the *current* active set, which is what lets later
+    /// joins re-expand the chained planner state.  (The `Heavy`
+    /// baseline replans over every non-failed cluster device — wrong
+    /// once membership has drifted.)
+    pub exit_recovery: RecoveryKind,
+    /// Heartbeat timing for exit detection (sim detection model and
+    /// live monitor alike, as in [`crate::session::FaultSpec`]).
+    pub heartbeat: HeartbeatCfg,
+    /// Timing-drift straggler detection thresholds.
+    pub straggler: StragglerCfg,
+}
+
+impl From<ChurnTrace> for ChurnSpec {
+    fn from(trace: ChurnTrace) -> ChurnSpec {
+        ChurnSpec {
+            trace,
+            exit_recovery: RecoveryKind::HeavyIncremental,
+            heartbeat: HeartbeatCfg::default(),
+            straggler: StragglerCfg::default(),
+        }
+    }
+}
+
+impl ChurnSpec {
+    pub fn with_exit_recovery(mut self, kind: RecoveryKind) -> ChurnSpec {
+        self.exit_recovery = kind;
+        self
+    }
+
+    pub fn with_heartbeat(mut self, hb: HeartbeatCfg) -> ChurnSpec {
+        self.heartbeat = hb;
+        self
+    }
+
+    pub fn with_straggler(mut self, cfg: StragglerCfg) -> ChurnSpec {
+        self.straggler = cfg;
+        self
+    }
+
+    /// The [`RecoveryKind`] a trace event reports as.
+    pub fn kind_for(&self, event: &ChurnEvent) -> RecoveryKind {
+        match event {
+            ChurnEvent::Exit { .. } => self.exit_recovery,
+            ChurnEvent::Join { .. } => RecoveryKind::Rejoin,
+            ChurnEvent::Slowdown { .. } => RecoveryKind::Straggler,
+            // A link degradation is a full replan over unchanged
+            // membership — reported as the heavy mechanism it runs.
+            ChurnEvent::LinkDegrade { .. } => RecoveryKind::Heavy,
+        }
+    }
+}
+
+/// The evolving fleet a churn trace executes against.
+pub(crate) struct ChurnState {
+    /// Cluster as degraded so far (slowdowns derate devices, link
+    /// events rewrite the bandwidth matrix).
+    pub cluster: ClusterSpec,
+    /// Profile table of `cluster` — rebuilt on every hardware mutation.
+    pub table: ProfileTable,
+    /// The plan currently executing.
+    pub plan: Plan,
+    /// Chained planner state covering exactly `active`, when one
+    /// exists (`None` after a lightweight exit, which replans outside
+    /// the DP).
+    pub dp: Option<Arc<DpState>>,
+    /// Sorted active device ids.
+    pub active: Vec<usize>,
+    /// Injected-but-not-yet-detected slowdown factors by device.
+    pub slowdown: BTreeMap<usize, f64>,
+}
+
+impl ChurnState {
+    pub fn new(s: &Session) -> ChurnState {
+        ChurnState {
+            cluster: s.cluster().clone(),
+            table: s.table().clone(),
+            plan: s.plan().clone(),
+            dp: s.dp_state_arc(),
+            active: s.plan().devices(),
+            slowdown: BTreeMap::new(),
+        }
+    }
+
+    fn planner_config(s: &Session) -> PlannerConfig {
+        PlannerConfig { policy: s.policy(), codec: *s.codec(), ..PlannerConfig::default() }
+    }
+
+    /// Does the chained state cover exactly the current active set?
+    fn dp_covers_active(&self) -> bool {
+        self.dp.as_ref().map_or(false, |p| {
+            let mut o = p.order().to_vec();
+            o.sort_unstable();
+            o == self.active
+        })
+    }
+
+    /// Re-seed the planner state over the current active set when the
+    /// chain was broken (e.g. by a lightweight exit) — so an
+    /// exit-recovery replan never silently re-admits devices that
+    /// already left.
+    fn ensure_state(&mut self, s: &Session) -> Result<()> {
+        if !self.dp_covers_active() {
+            let pc = Self::planner_config(s);
+            let (_, st) = plan_hpp_subset(
+                &self.table,
+                &self.cluster,
+                s.model(),
+                s.train_config(),
+                &pc,
+                &self.active,
+            )?;
+            self.dp = Some(Arc::new(st));
+        }
+        Ok(())
+    }
+
+    /// Device exit: run the spec'd mechanism over the current fleet.
+    pub fn exit(&mut self, s: &Session, spec: &ChurnSpec, device: usize) -> Result<RecoveryReport> {
+        anyhow::ensure!(self.active.contains(&device), "churn exit: device {device} not active");
+        let report = match spec.exit_recovery {
+            RecoveryKind::Lightweight => {
+                let r = lightweight_replay(
+                    &self.table,
+                    &self.cluster,
+                    s.model(),
+                    s.train_config(),
+                    &self.plan,
+                    device,
+                    &spec.heartbeat,
+                    s.policy(),
+                    s.codec(),
+                )?;
+                // Lightweight replans outside the DP — the chained
+                // state no longer matches the executing plan's set.
+                self.dp = None;
+                r
+            }
+            _ => {
+                self.ensure_state(s)?;
+                let (r, st) = heavy_reschedule_incremental(
+                    &self.table,
+                    &self.cluster,
+                    s.model(),
+                    s.train_config(),
+                    &self.plan,
+                    device,
+                    &spec.heartbeat,
+                    s.policy(),
+                    s.codec(),
+                    self.dp.as_deref(),
+                )?;
+                self.dp = Some(Arc::new(st));
+                r
+            }
+        };
+        self.active.retain(|&d| d != device);
+        self.slowdown.remove(&device);
+        self.plan = report.new_plan.clone();
+        Ok(report)
+    }
+
+    /// Device rejoin: re-expand through the join fast path when the
+    /// chained state survived, full subset rebuild otherwise.
+    pub fn join(&mut self, s: &Session, device: usize) -> Result<RecoveryReport> {
+        let (report, st) = rejoin_replan(
+            &self.table,
+            &self.cluster,
+            s.model(),
+            s.train_config(),
+            &self.plan,
+            device,
+            s.policy(),
+            s.codec(),
+            self.dp.as_deref(),
+        )?;
+        self.dp = Some(Arc::new(st));
+        self.active.push(device);
+        self.active.sort_unstable();
+        self.plan = report.new_plan.clone();
+        Ok(report)
+    }
+
+    /// Record an injected slowdown (nothing replans until the drift
+    /// detector fires).
+    pub fn inject_slowdown(&mut self, device: usize, factor: f64) {
+        self.slowdown.insert(device, factor);
+    }
+
+    /// The drift detector flagged `device`: derate it in the evolving
+    /// cluster by `factor`, rebuild profiles, and replan the current
+    /// membership.  `detection_s` is the observation window the report
+    /// charges (computed by the caller — rounds-to-detect in the sim,
+    /// wall-clock since injection in the RPC driver).
+    pub fn straggler(
+        &mut self,
+        s: &Session,
+        device: usize,
+        factor: f64,
+        detection_s: f64,
+    ) -> Result<RecoveryReport> {
+        anyhow::ensure!(
+            self.active.contains(&device),
+            "churn straggler: device {device} not active"
+        );
+        self.cluster.devices[device].peak_flops /= factor;
+        self.cluster.devices[device].overhead_s *= factor;
+        self.table = ProfileTable::new(&self.cluster, s.model());
+        self.slowdown.remove(&device);
+        self.reschedule_degraded(s, "straggler", detection_s)
+    }
+
+    /// A link degraded to `mbps`: rewrite the bandwidth matrix, rebuild
+    /// profiles, replan the current membership.
+    pub fn link_degrade(
+        &mut self,
+        s: &Session,
+        a: usize,
+        b: usize,
+        mbps: f64,
+    ) -> Result<RecoveryReport> {
+        let bytes_per_s = mbps * 1e6 / 8.0;
+        self.cluster.bandwidth[a][b] = bytes_per_s;
+        self.cluster.bandwidth[b][a] = bytes_per_s;
+        self.table = ProfileTable::new(&self.cluster, s.model());
+        self.reschedule_degraded(s, "link-degrade", 0.0)
+    }
+
+    fn reschedule_degraded(
+        &mut self,
+        s: &Session,
+        mechanism: &'static str,
+        detection_s: f64,
+    ) -> Result<RecoveryReport> {
+        let (report, st) = degraded_reschedule(
+            &self.table,
+            &self.cluster,
+            s.model(),
+            s.train_config(),
+            &self.plan,
+            mechanism,
+            detection_s,
+            s.policy(),
+            s.codec(),
+        )?;
+        // The fresh state was computed on the degraded cluster — the
+        // valid chain seed for everything that follows.
+        self.dp = Some(Arc::new(st));
+        self.plan = report.new_plan.clone();
+        Ok(report)
+    }
+
+    /// Seconds one round of the current plan takes on the current
+    /// (possibly degraded) fleet.
+    pub fn round_latency(&self, s: &Session) -> f64 {
+        let sim = crate::sim::price_policy_codec(
+            &self.table,
+            &self.cluster,
+            s.model(),
+            &self.plan,
+            s.policy(),
+            s.codec(),
+        );
+        self.plan.samples_per_round() as f64 / sim.throughput
+    }
+}

@@ -42,9 +42,11 @@
 //! ```
 
 pub mod backend;
+pub mod churn;
 pub mod rpc;
 
 pub use backend::{ExecutionBackend, PjrtBackend, SimBackend};
+pub use churn::ChurnSpec;
 pub use rpc::{RpcBackend, RpcDeviceStats, RpcStats};
 
 use std::collections::BTreeMap;
@@ -55,7 +57,7 @@ use anyhow::{Context, Result};
 use crate::codec::CodecSpec;
 use crate::config::{ClusterSpec, TrainConfig};
 use crate::fault::{
-    heavy_reschedule, heavy_reschedule_incremental, lightweight_replay, HeartbeatCfg,
+    heavy_reschedule, heavy_reschedule_incremental, lightweight_replay, ChurnTrace, HeartbeatCfg,
     RecoveryReport,
 };
 use crate::model::from_manifest::{Manifest, ManifestModel};
@@ -104,6 +106,28 @@ pub enum RecoveryKind {
     /// full rebuild when the session has no state — e.g. a baseline
     /// planner built it.
     HeavyIncremental,
+    /// A previously-exited device reconnected and the plan re-expanded
+    /// through the planner's join fast path
+    /// (`fault::rejoin_replan` / `plan_hpp_incremental_join`).  Driven
+    /// by churn traces ([`ChurnSpec`]), not by a `FaultSpec`.
+    Rejoin,
+    /// The timing-drift straggler detector flagged a device and the
+    /// current membership was replanned around the derated hardware
+    /// (`fault::degraded_reschedule`).  Driven by churn traces.
+    Straggler,
+}
+
+impl RecoveryKind {
+    /// Stable name, matching the mechanism strings reports serialise.
+    pub fn name(&self) -> &'static str {
+        match self {
+            RecoveryKind::Lightweight => "lightweight",
+            RecoveryKind::Heavy => "heavy",
+            RecoveryKind::HeavyIncremental => "heavy-incremental",
+            RecoveryKind::Rejoin => "rejoin",
+            RecoveryKind::Straggler => "straggler",
+        }
+    }
 }
 
 /// Declarative device-exit injection: *what* fails, *when*, and *how*
@@ -216,12 +240,25 @@ impl Default for RunConfig {
     }
 }
 
-/// One device-exit + recovery observed during a run.
+/// One membership event + recovery observed during a run: a device
+/// exit ([`FaultSpec`] or a churn trace), a rejoin, a detected
+/// straggler, or a link degradation.
 #[derive(Debug, Clone)]
 pub struct RecoveryEvent {
-    /// Round index the exit was injected at.
+    /// Round index the recovery landed at (for stragglers: the round
+    /// the drift detector fired, not the round the slowdown was
+    /// injected).
     pub round: usize,
+    /// The device the event concerns: the exited/rejoined/derated
+    /// device (for link degradations: the link's lower endpoint).
     pub failed_device: usize,
+    /// Which recovery path ran.
+    pub kind: RecoveryKind,
+    /// Wall-clock seconds the replan itself took in *this* process
+    /// (detection + modelled costs live in `report`; live backends
+    /// measure this around the actual replan call, the sim reports its
+    /// in-process planning time).
+    pub replan_wall_s: f64,
     /// Full §3.4 breakdown: detect/restore/replan/migrate, the
     /// recovery plan, its throughput, and the schedule-diff-derived
     /// replay set.
@@ -306,6 +343,7 @@ pub struct SessionBuilder {
     policy: &'static dyn SchedulePolicy,
     codec: CodecSpec,
     fault: Option<FaultSpec>,
+    churn: Option<ChurnSpec>,
     run: RunConfig,
 }
 
@@ -320,6 +358,7 @@ impl Default for SessionBuilder {
             policy: DEFAULT_POLICY,
             codec: CodecSpec::default(),
             fault: None,
+            churn: None,
             run: RunConfig::default(),
         }
     }
@@ -388,6 +427,16 @@ impl SessionBuilder {
         self
     }
 
+    /// Declarative elastic-membership injection: a timed
+    /// [`ChurnTrace`] of exits, rejoins, slowdowns and link
+    /// degradations (or a full [`ChurnSpec`] with detection knobs).
+    /// Mutually exclusive with [`Self::fault`] — a churn trace *is*
+    /// the generalised fault spec.
+    pub fn churn(mut self, spec: impl Into<ChurnSpec>) -> Self {
+        self.churn = Some(spec.into());
+        self
+    }
+
     pub fn steps(mut self, steps: usize) -> Self {
         self.run.steps = steps;
         self
@@ -429,6 +478,28 @@ impl SessionBuilder {
             f.heartbeat
                 .validate()
                 .context("Session::builder(): invalid FaultSpec heartbeat timing")?;
+        }
+        if let Some(c) = &self.churn {
+            anyhow::ensure!(
+                self.fault.is_none(),
+                ".fault(..) and .churn(..) are mutually exclusive — a churn trace is \
+                 the generalised fault spec (use ChurnTrace::new().exit(r, d))"
+            );
+            c.heartbeat
+                .validate()
+                .context("Session::builder(): invalid ChurnSpec heartbeat timing")?;
+            c.straggler
+                .validate()
+                .context("Session::builder(): invalid ChurnSpec straggler thresholds")?;
+            anyhow::ensure!(
+                matches!(
+                    c.exit_recovery,
+                    RecoveryKind::Lightweight | RecoveryKind::HeavyIncremental
+                ),
+                "churn exit_recovery must be Lightweight or HeavyIncremental — only \
+                 those replan over the current active set (got {:?})",
+                c.exit_recovery
+            );
         }
 
         let (model, artifacts, manifest_model, cfg) = match &source {
@@ -504,6 +575,15 @@ impl SessionBuilder {
             }
         }
 
+        // The trace is checked against the *planned* membership and the
+        // run length — exits of unplanned devices, joins of active
+        // ones, or events past the last round all fail here.
+        if let Some(c) = &self.churn {
+            c.trace
+                .validate(&cluster, &outcome.plan.devices(), self.run.steps)
+                .context("Session::builder(): invalid churn trace")?;
+        }
+
         Ok(Session {
             source,
             cluster,
@@ -514,6 +594,7 @@ impl SessionBuilder {
             policy: self.policy,
             codec: self.codec,
             fault: self.fault,
+            churn: self.churn,
             run_cfg: self.run,
             artifacts,
             manifest_model,
@@ -538,6 +619,7 @@ pub struct Session {
     policy: &'static dyn SchedulePolicy,
     codec: CodecSpec,
     fault: Option<FaultSpec>,
+    churn: Option<ChurnSpec>,
     run_cfg: RunConfig,
     artifacts: Option<(PathBuf, String)>,
     /// Resolved at build so backends never re-parse the manifest.
@@ -592,6 +674,10 @@ impl Session {
         self.fault.as_ref()
     }
 
+    pub fn churn(&self) -> Option<&ChurnSpec> {
+        self.churn.as_ref()
+    }
+
     pub fn run_config(&self) -> &RunConfig {
         &self.run_cfg
     }
@@ -629,6 +715,12 @@ impl Session {
         self.dp_state.as_deref()
     }
 
+    /// The same state as a cheap shared handle — what churn execution
+    /// seeds its evolving state chain from.
+    pub(crate) fn dp_state_arc(&self) -> Option<std::sync::Arc<DpState>> {
+        self.dp_state.clone()
+    }
+
     /// The weight-version stash ring depth the session's policy
     /// implies: the largest per-stage admission window of the plan
     /// (1 = live weights only; see [`RunReport::weight_stash_slots`]).
@@ -646,14 +738,29 @@ impl Session {
 
     /// Re-attach a different fault spec without re-planning (the plan
     /// and profiles are unchanged by *how* we intend to break it).
+    /// Clears any churn spec — the two are mutually exclusive.
     pub fn with_fault(mut self, spec: FaultSpec) -> Session {
         self.fault = Some(spec);
+        self.churn = None;
         self
     }
 
     pub fn without_fault(mut self) -> Session {
         self.fault = None;
         self
+    }
+
+    /// Re-attach a different churn spec without re-planning.  The
+    /// trace is re-validated against the planned membership and run
+    /// length; clears any fault spec.
+    pub fn with_churn(mut self, spec: impl Into<ChurnSpec>) -> Result<Session> {
+        let spec = spec.into();
+        spec.trace.validate(&self.cluster, &self.plan().devices(), self.run_cfg.steps)?;
+        spec.heartbeat.validate()?;
+        spec.straggler.validate()?;
+        self.churn = Some(spec);
+        self.fault = None;
+        Ok(self)
     }
 
     /// Execute this session on a backend.  This is the single public
@@ -718,6 +825,11 @@ impl Session {
                 self.dp_state.as_deref(),
             )
             .map(|(report, _)| report),
+            RecoveryKind::Rejoin | RecoveryKind::Straggler => anyhow::bail!(
+                "{:?} recoveries are driven by churn traces (.churn(..)), not by a \
+                 FaultSpec device exit",
+                spec.recovery
+            ),
         }
     }
 
@@ -881,5 +993,49 @@ mod tests {
         let s = zoo_session("B");
         let spec = FaultSpec::device(999);
         assert!(s.resolve_fault_device(&spec).is_err());
+    }
+
+    #[test]
+    fn churn_spec_validated_at_build() {
+        let base = || {
+            Session::builder()
+                .model("efficientnet-b1")
+                .cluster(ClusterSpec::env("D", 100.0).unwrap())
+                .train(TrainConfig::new(256, 16))
+                .steps(8)
+        };
+        let dev = base().build().unwrap().plan().devices()[0];
+        // A well-formed exit→rejoin trace builds.
+        let s = base().churn(ChurnTrace::new().exit(2, dev).join(4, dev)).build().unwrap();
+        assert!(s.churn().is_some());
+        assert!(s.fault().is_none());
+        // Joining an already-active device is caught at build.
+        let err = base()
+            .churn(ChurnTrace::new().join(2, dev))
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("already active"), "{err}");
+        // Events past the run length are caught at build.
+        assert!(base().churn(ChurnTrace::new().exit(99, dev)).build().is_err());
+        // .fault() and .churn() are mutually exclusive.
+        assert!(base()
+            .fault(FaultSpec::last_planned())
+            .churn(ChurnTrace::new().exit(2, dev))
+            .build()
+            .is_err());
+        // Exit recovery is restricted to the churn-capable mechanisms.
+        assert!(base()
+            .churn(
+                ChurnSpec::from(ChurnTrace::new().exit(2, dev))
+                    .with_exit_recovery(RecoveryKind::Heavy)
+            )
+            .build()
+            .is_err());
+        // with_churn re-validates against the existing plan.
+        let planned = base().build().unwrap();
+        let planned = planned.with_churn(ChurnTrace::new().exit(2, dev)).unwrap();
+        assert_eq!(planned.churn().unwrap().trace.len(), 1);
+        assert!(planned.with_churn(ChurnTrace::new().join(2, dev)).is_err());
     }
 }

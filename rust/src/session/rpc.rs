@@ -36,14 +36,15 @@ use crate::codec::Codec;
 use crate::comm::rpc::{
     read_frame, send_msg, write_frame, AssignSpec, ConnRole, LayerState, RpcMsg, HEADER_LEN,
 };
-use crate::fault::{HeartbeatCfg, HeartbeatMonitor, Liveness};
+use crate::fault::{ChurnEvent, DriftDetector, HeartbeatCfg, HeartbeatMonitor, Liveness};
 use crate::pipeline::rpc_worker::dial_with_retry;
 use crate::pipeline::step::{reference_layers, RefTask};
 use crate::planner::plan::Plan;
 use crate::runtime::Tensor;
 use crate::schedule::Schedule;
 
-use super::{ExecutionBackend, RecoveryEvent, RunReport, Session};
+use super::churn::{ChurnSpec, ChurnState};
+use super::{ExecutionBackend, RecoveryEvent, RecoveryKind, RunReport, Session};
 
 /// How long the driver keeps dialling a worker address.
 const CONNECT_TIMEOUT: Duration = Duration::from_secs(30);
@@ -166,10 +167,20 @@ impl Remote {
 struct Driver<'s> {
     session: &'s Session,
     hb_cfg: HeartbeatCfg,
-    /// Device id -> worker address (fixed for the run; recovery plans
-    /// reuse the surviving devices' workers).
+    /// Device id -> worker address (recovery plans reuse the surviving
+    /// devices' workers; churn joins reconnect a restarted worker on
+    /// the device's previous address, or draw from `spare_addrs`).
     remotes: BTreeMap<usize, Remote>,
     inbox: Receiver<(usize, Event)>,
+    /// Sender half of the inbox — kept so churn joins can spawn reader
+    /// threads for reconnected workers.
+    tx: Sender<(usize, Event)>,
+    /// Worker addresses beyond the initial plan's slots: the join pool
+    /// for churn devices that never had a worker this run.
+    spare_addrs: Vec<String>,
+    /// Per-device compute wall-clock of the round in flight — the
+    /// drift detector's feed in churn mode.
+    last_round_compute: BTreeMap<usize, f64>,
     /// The plan currently executing (switches after a recovery).
     plan: Plan,
     sched: Schedule,
@@ -187,6 +198,28 @@ struct Driver<'s> {
     detection_wall_s: Option<f64>,
 }
 
+/// Churn-mode runtime the driver threads through a run: the trace
+/// cursor, the evolving fleet state, the drift detector and the
+/// injected-but-undetected slowdowns.
+struct ChurnRt {
+    spec: ChurnSpec,
+    state: ChurnState,
+    detector: DriftDetector,
+    /// device -> (factor, injected_at) awaiting drift detection.
+    pending: BTreeMap<usize, (f64, Instant)>,
+    /// Index of the next unfired trace event.
+    next: usize,
+}
+
+impl ChurnRt {
+    /// Restart the drift detector after a replan: the new scripts give
+    /// every device a new, legitimate compute baseline — judging them
+    /// against pre-replan baselines would fake drift.
+    fn reset_detector(&mut self) {
+        self.detector = DriftDetector::new(self.spec.straggler);
+    }
+}
+
 impl<'s> Driver<'s> {
     fn new(addrs: &[String], s: &'s Session) -> Result<Driver<'s>> {
         let plan = s.plan().clone();
@@ -200,7 +233,11 @@ impl<'s> Driver<'s> {
         let sched = Schedule::for_runtime(&plan, s.policy());
         sched.validate().context("invalid round schedule")?;
 
-        let hb_cfg = s.fault().map(|f| f.heartbeat).unwrap_or_default();
+        let hb_cfg = s
+            .fault()
+            .map(|f| f.heartbeat)
+            .or_else(|| s.churn().map(|c| c.heartbeat))
+            .unwrap_or_default();
         hb_cfg.validate()?;
 
         // Connect a control link per plan slot, stage-major.
@@ -217,12 +254,16 @@ impl<'s> Driver<'s> {
             }
         }
 
+        let spare_addrs: Vec<String> = addrs[next_addr..].to_vec();
         let devices = plan.devices();
         Ok(Driver {
             session: s,
             hb_cfg,
             remotes,
             inbox: rx,
+            tx,
+            spare_addrs,
+            last_round_compute: BTreeMap::new(),
             plan,
             sched,
             monitor: HeartbeatMonitor::new(hb_cfg, &devices),
@@ -343,6 +384,13 @@ impl<'s> Driver<'s> {
     /// its layer slice, compute script, stash depth, peer addresses and
     /// (after a fault) the checkpointed warm-start weights.
     fn assign_all(&mut self, warm: bool) -> Result<()> {
+        // Deadline-reset bugfix: re-arm liveness for the devices being
+        // (re-)assigned *before* the stage rebuild.  Tearing down and
+        // redialling peers can exceed the heartbeat deadline, and a
+        // deadline inherited from before the recovery would flag a
+        // healthy survivor (or a rejoined worker whose previous
+        // incarnation went silent long ago) as dead mid-assignment.
+        self.monitor.rearm(&self.plan.devices());
         self.generation += 1;
         let s = self.session;
         let model = s.model();
@@ -424,8 +472,8 @@ impl<'s> Driver<'s> {
                 .send(&RpcMsg::Assign(Box::new(spec)))?;
         }
         self.wait_ready()?;
-        // Fresh liveness baseline for the (possibly new) device set.
-        self.monitor = HeartbeatMonitor::new(self.hb_cfg, &self.plan.devices());
+        // Fresh liveness baseline now that every worker acknowledged.
+        self.monitor.rearm(&self.plan.devices());
         Ok(())
     }
 
@@ -477,6 +525,7 @@ impl<'s> Driver<'s> {
     /// One full HPP-Round: start, feed, await every worker's report.
     /// Returns the mean loss over the round's micro-batches.
     fn run_round(&mut self, task: &RefTask, round: usize) -> Result<f64> {
+        self.last_round_compute.clear();
         let devices = self.plan.devices();
         for &d in &devices {
             self.remotes.get_mut(&d).unwrap().send(&RpcMsg::StartRound { round })?;
@@ -513,6 +562,7 @@ impl<'s> Driver<'s> {
                         rem.dp_logical += logical_bytes;
                         rem.dp_wire += wire_bytes;
                     }
+                    self.last_round_compute.insert(device, compute_s);
                     if last_stage.contains(&device) {
                         loss_sum += l;
                         micro_seen += micros;
@@ -634,12 +684,204 @@ impl<'s> Driver<'s> {
         // §3.4 modules 2-4: restore / re-plan / migrate — the session's
         // declarative recovery mechanism (same path the sim and pjrt
         // backends price), then re-task the survivors for real.
+        let t_replan = Instant::now();
         let report = self.session.recover(&spec, failed)?;
+        let replan_wall_s = t_replan.elapsed().as_secs_f64();
         self.plan = report.new_plan.clone();
         self.sched = Schedule::for_runtime(&self.plan, self.session.policy());
         self.sched.validate().context("invalid recovery schedule")?;
         self.assign_all(true)?;
-        Ok(RecoveryEvent { round, failed_device: failed, report })
+        Ok(RecoveryEvent {
+            round,
+            failed_device: failed,
+            kind: spec.recovery,
+            replan_wall_s,
+            report,
+        })
+    }
+
+    // ---------------------------------------------------------- churn
+
+    /// Fire every churn-trace event due at `round` (between rounds —
+    /// the trace's event clock is round-granular on this backend too).
+    fn fire_churn_events(
+        &mut self,
+        rt: &mut ChurnRt,
+        round: usize,
+        recoveries: &mut Vec<RecoveryEvent>,
+    ) -> Result<()> {
+        while rt.next < rt.spec.trace.events.len() && rt.spec.trace.events[rt.next].round <= round
+        {
+            let ev = rt.spec.trace.events[rt.next].event;
+            rt.next += 1;
+            match ev {
+                ChurnEvent::Exit { device } => {
+                    let wall = self.kill_and_settle(device)?;
+                    self.detection_wall_s = Some(wall);
+                    let t0 = Instant::now();
+                    let report = rt.state.exit(self.session, &rt.spec, device)?;
+                    let replan_wall_s = t0.elapsed().as_secs_f64();
+                    self.retask(&rt.state)?;
+                    rt.reset_detector();
+                    recoveries.push(RecoveryEvent {
+                        round,
+                        failed_device: device,
+                        kind: rt.spec.exit_recovery,
+                        replan_wall_s,
+                        report,
+                    });
+                }
+                ChurnEvent::Join { device } => {
+                    // The restarted worker reconnects on the device's
+                    // previous address (same port), or on a spare for a
+                    // first-time join; then the join fast path
+                    // re-expands the plan and everyone is re-Assigned
+                    // warm from the driver checkpoint.
+                    self.reconnect_worker(device)?;
+                    let t0 = Instant::now();
+                    let report = rt.state.join(self.session, device)?;
+                    let replan_wall_s = t0.elapsed().as_secs_f64();
+                    self.retask(&rt.state)?;
+                    rt.reset_detector();
+                    recoveries.push(RecoveryEvent {
+                        round,
+                        failed_device: device,
+                        kind: RecoveryKind::Rejoin,
+                        replan_wall_s,
+                        report,
+                    });
+                }
+                ChurnEvent::Slowdown { device, factor } => {
+                    // Inject only: nothing replans until the drift
+                    // detector actually catches the straggler.
+                    self.remotes
+                        .get_mut(&device)
+                        .with_context(|| format!("churn slowdown: no remote for device {device}"))?
+                        .send(&RpcMsg::Throttle { factor })?;
+                    rt.state.inject_slowdown(device, factor);
+                    rt.pending.insert(device, (factor, Instant::now()));
+                }
+                ChurnEvent::LinkDegrade { a, b, mbps } => {
+                    let t0 = Instant::now();
+                    let report = rt.state.link_degrade(self.session, a, b, mbps)?;
+                    let replan_wall_s = t0.elapsed().as_secs_f64();
+                    self.retask(&rt.state)?;
+                    rt.reset_detector();
+                    recoveries.push(RecoveryEvent {
+                        round,
+                        failed_device: a.min(b),
+                        kind: RecoveryKind::Heavy,
+                        replan_wall_s,
+                        report,
+                    });
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Feed the finished round's per-device compute timings to the
+    /// drift detector; a flagged device with a pending injection gets
+    /// derated and the fleet replans around it.
+    fn observe_drift(
+        &mut self,
+        rt: &mut ChurnRt,
+        round: usize,
+        recoveries: &mut Vec<RecoveryEvent>,
+    ) -> Result<()> {
+        let timings: Vec<(usize, f64)> =
+            self.last_round_compute.iter().map(|(&d, &c)| (d, c)).collect();
+        for (device, compute_s) in timings {
+            if rt.detector.observe(device, compute_s).is_none() {
+                continue;
+            }
+            // A flag with no pending injection is detector noise: the
+            // device stays flagged (and therefore silent) but nothing
+            // replans — the noise gate the churn tests assert on.
+            let (factor, injected_at) = match rt.pending.remove(&device) {
+                Some(p) => p,
+                None => continue,
+            };
+            let detection_s = injected_at.elapsed().as_secs_f64();
+            // The device really is slow now (its throttle stays); the
+            // plan reschedules around the derated profile.
+            let t0 = Instant::now();
+            let report = rt.state.straggler(self.session, device, factor, detection_s)?;
+            let replan_wall_s = t0.elapsed().as_secs_f64();
+            self.retask(&rt.state)?;
+            rt.reset_detector();
+            recoveries.push(RecoveryEvent {
+                round,
+                failed_device: device,
+                kind: RecoveryKind::Straggler,
+                replan_wall_s,
+                report,
+            });
+        }
+        Ok(())
+    }
+
+    /// Adopt the churn state's plan and re-task the live workers,
+    /// warm-started from the latest driver checkpoint.
+    fn retask(&mut self, state: &ChurnState) -> Result<()> {
+        self.plan = state.plan.clone();
+        self.sched = Schedule::for_runtime(&self.plan, self.session.policy());
+        self.sched.validate().context("invalid churn reschedule")?;
+        self.assign_all(true)
+    }
+
+    /// Kill `device`'s worker (a real process death) and wait for the
+    /// heartbeat monitor to see the silence plus the control-link EOF.
+    /// Returns the measured detection wall-clock.
+    fn kill_and_settle(&mut self, device: usize) -> Result<f64> {
+        let t0 = Instant::now();
+        let _ = self
+            .remotes
+            .get_mut(&device)
+            .with_context(|| format!("churn exit: no remote for device {device}"))?
+            .send(&RpcMsg::Die);
+        let mut eof_seen = false;
+        let deadline =
+            Instant::now() + Duration::from_secs_f64(self.hb_cfg.detection_time() * 10.0 + 5.0);
+        while !(eof_seen && self.monitor.liveness(device) != Liveness::Alive) {
+            if Instant::now() >= deadline {
+                bail!("churn exit detection timed out for device {device}");
+            }
+            match self.poll_once(Duration::from_millis(20))? {
+                None => {} // idle tick: recheck liveness
+                Some(Polled::Eof(d)) if d == device => eof_seen = true,
+                Some(Polled::Eof(d)) => bail!("unrelated worker {d} died during churn exit"),
+                // Settled leftovers from the previous round are noise.
+                Some(Polled::Msg(_, RpcMsg::RoundDone { .. })) => {}
+                Some(Polled::Msg(_, RpcMsg::RoundFailed { .. })) => {}
+                Some(Polled::Msg(d, other)) => {
+                    bail!("device {d}: unexpected {} during churn exit", other.kind())
+                }
+            }
+        }
+        self.monitor.confirm_failure(device);
+        if let Some(r) = self.remotes.get_mut(&device) {
+            r.alive = false;
+        }
+        self.sync_pending.clear();
+        Ok(t0.elapsed().as_secs_f64())
+    }
+
+    /// Connect the worker a joining device runs on: the restarted
+    /// process on the device's previous address, or one drawn from the
+    /// spare address pool for a first-time join.  The dial retries, so
+    /// a worker still rebinding its port is waited out.
+    fn reconnect_worker(&mut self, device: usize) -> Result<()> {
+        let addr = match self.remotes.get(&device) {
+            Some(r) => r.addr.clone(),
+            None => self.spare_addrs.pop().with_context(|| {
+                format!("churn join: no spare worker address for device {device}")
+            })?,
+        };
+        let remote = connect_remote(device, &addr, &self.tx)
+            .with_context(|| format!("rejoining worker for device {device} at {addr}"))?;
+        self.remotes.insert(device, remote);
+        Ok(())
     }
 
     // ------------------------------------------------------------ run
@@ -664,6 +906,16 @@ impl<'s> Driver<'s> {
         let mut round_secs: Vec<f64> = Vec::with_capacity(total_rounds);
         let mut recoveries: Vec<RecoveryEvent> = Vec::new();
 
+        // Elastic membership: churn traces drive real kills, restarts
+        // and throttles against the worker fleet.
+        let mut churn_rt: Option<ChurnRt> = s.churn().map(|spec| ChurnRt {
+            spec: spec.clone(),
+            state: ChurnState::new(s),
+            detector: DriftDetector::new(spec.straggler),
+            pending: BTreeMap::new(),
+            next: 0,
+        });
+
         let mut round = 0usize;
         while round < total_rounds {
             if let (Some(spec), Some(failed)) = (&fault, failed_device) {
@@ -672,6 +924,9 @@ impl<'s> Driver<'s> {
                     recoveries.push(event);
                     // The failed round restarts on the recovery plan.
                 }
+            }
+            if let Some(rt) = churn_rt.as_mut() {
+                self.fire_churn_events(rt, round, &mut recoveries)?;
             }
             let t0 = Instant::now();
             let loss = self.run_round(&task, round)?;
@@ -683,7 +938,10 @@ impl<'s> Driver<'s> {
                     round_secs.last().unwrap()
                 );
             }
-            if fault.is_some() {
+            if let Some(rt) = churn_rt.as_mut() {
+                self.observe_drift(rt, round, &mut recoveries)?;
+            }
+            if fault.is_some() || churn_rt.is_some() {
                 self.checkpoint = self.pull_checkpoint()?;
             }
             round += 1;
@@ -723,9 +981,16 @@ impl<'s> Driver<'s> {
         // pipeline's rate): pair the pre-fault round timings with the
         // *original* plan's round size — after a recovery `self.plan`
         // is the recovery plan, whose samples_per_round may differ.
-        let (samples, window): (f64, &[f64]) = match &fault {
-            Some(spec) if spec.fail_after > 0 && round_secs.len() >= spec.fail_after => {
+        let first_churn_round =
+            s.churn().and_then(|c| c.trace.events.first().map(|te| te.round));
+        let (samples, window): (f64, &[f64]) = match (&fault, first_churn_round) {
+            (Some(spec), _) if spec.fail_after > 0 && round_secs.len() >= spec.fail_after => {
                 (s.plan().samples_per_round() as f64, &round_secs[..spec.fail_after])
+            }
+            (None, Some(first)) if first > 0 && round_secs.len() >= first => {
+                // Pre-churn throughput: pair the undisturbed rounds
+                // with the original plan's round size.
+                (s.plan().samples_per_round() as f64, &round_secs[..first])
             }
             _ => (self.plan.samples_per_round() as f64, &round_secs[..]),
         };

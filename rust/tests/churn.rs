@@ -1,0 +1,270 @@
+//! Elastic-membership churn harness (sim backend): timed traces of
+//! exits, rejoins, slowdowns and link degradations executed on the
+//! deterministic event clock, with the *production* drift detector in
+//! the loop — these tests prove the trace grammar, the event ordering,
+//! the straggler noise gate and the join-side plan re-expansion
+//! end-to-end through `Session::run`.
+
+use asteroid::config::{ClusterSpec, TrainConfig};
+use asteroid::fault::{ChurnTrace, StragglerCfg};
+use asteroid::session::{ChurnSpec, RecoveryKind, Session, SimBackend};
+
+/// One session shape shared by every trace here: the paper's env D
+/// chain under the default 1F1B policy (the same shape the replay
+/// tests prove recovery math on).
+fn session(steps: usize, spec: impl Into<ChurnSpec>) -> Session {
+    Session::builder()
+        .model("efficientnet-b1")
+        .cluster(ClusterSpec::env("D", 100.0).unwrap())
+        .train(TrainConfig::new(256, 16))
+        .steps(steps)
+        .churn(spec)
+        .build()
+        .expect("churn session builds")
+}
+
+/// The full lifecycle on one trace: a device exits (incremental heavy
+/// reschedule), rejoins (join fast path re-expands to the original
+/// plan), then a different device is slowed 3x and the drift detector
+/// catches it after exactly `consecutive` degraded rounds.
+#[test]
+fn exit_join_slowdown_trace_recovers_in_order() {
+    // Resolve the device ids against the planned session first.
+    let probe = Session::builder()
+        .model("efficientnet-b1")
+        .cluster(ClusterSpec::env("D", 100.0).unwrap())
+        .train(TrainConfig::new(256, 16))
+        .build()
+        .unwrap();
+    let devices = probe.plan().devices();
+    assert!(devices.len() >= 2, "env D must plan a multi-device pipeline");
+    let churner = *devices.last().unwrap();
+    let slowed = devices[0];
+
+    let steps = 12;
+    let trace = ChurnTrace::default()
+        .exit(2, churner)
+        .join(5, churner)
+        .slowdown(8, slowed, 3.0);
+    let report = session(steps, trace).run(&mut SimBackend::default()).unwrap();
+
+    assert_eq!(report.rounds, steps);
+    assert_eq!(report.round_secs.len(), steps);
+    assert_eq!(
+        report.recoveries.len(),
+        3,
+        "exit + rejoin + straggler, in trace order"
+    );
+
+    let exit = &report.recoveries[0];
+    assert_eq!(exit.round, 2);
+    assert_eq!(exit.failed_device, churner);
+    assert_eq!(exit.kind, RecoveryKind::HeavyIncremental);
+    assert_eq!(exit.report.mechanism, "heavy-incremental");
+    assert!(!exit.report.new_plan.devices().contains(&churner));
+
+    let rejoin = &report.recoveries[1];
+    assert_eq!(rejoin.round, 5);
+    assert_eq!(rejoin.failed_device, churner);
+    assert_eq!(rejoin.kind, RecoveryKind::Rejoin);
+    assert_eq!(rejoin.report.mechanism, "rejoin");
+    assert!(rejoin.report.detection_s == 0.0, "a voluntary join has no detection lag");
+    assert!(rejoin.report.replan_s > 0.0, "rejoin charges measured planning time");
+    // The join fast path re-expands to exactly the pre-churn plan.
+    assert_eq!(
+        &rejoin.report.new_plan,
+        probe.plan(),
+        "rejoin must round-trip to the original plan"
+    );
+
+    // Slowdown injected before round 8; with the default detector
+    // (warmup 3 — satisfied by rounds 5-7 after the rejoin replan reset
+    // — drift 2.0, consecutive 2) it fires on the second degraded
+    // round: round 9.
+    let strag = &report.recoveries[2];
+    assert_eq!(strag.round, 9, "detector fires after `consecutive` degraded rounds");
+    assert_eq!(strag.failed_device, slowed);
+    assert_eq!(strag.kind, RecoveryKind::Straggler);
+    assert_eq!(strag.report.mechanism, "straggler");
+    assert!(strag.report.detection_s > 0.0, "straggler detection charges the window");
+
+    // The round clock: degraded rounds stretch by the injected factor,
+    // and the post-replan rounds recover (the plan reschedules around
+    // the derated device, so they price below the degraded rounds).
+    let base = report.round_secs[7];
+    assert!(
+        report.round_secs[8] > 2.5 * base,
+        "undetected straggler must stretch the round ~3x: {} vs {base}",
+        report.round_secs[8]
+    );
+    assert!(
+        report.round_secs[10] < report.round_secs[9],
+        "post-reschedule rounds must beat the degraded rounds: {} vs {}",
+        report.round_secs[10],
+        report.round_secs[9]
+    );
+    for ev in &report.recoveries {
+        assert!(ev.replan_wall_s >= 0.0);
+        assert!(ev.report.new_throughput > 0.0);
+    }
+}
+
+/// The noise gate: a slowdown below the drift factor never fires the
+/// detector — the rounds stretch, but nothing replans and no recovery
+/// event is reported (no false positives).
+#[test]
+fn sub_threshold_slowdown_never_fires_the_detector() {
+    let probe = Session::builder()
+        .model("efficientnet-b1")
+        .cluster(ClusterSpec::env("D", 100.0).unwrap())
+        .train(TrainConfig::new(256, 16))
+        .build()
+        .unwrap();
+    let slowed = probe.plan().devices()[0];
+
+    let steps = 10;
+    // 1.5x drift against the default 2.0 threshold: visible in the
+    // round clock, invisible to the detector.
+    let trace = ChurnTrace::default().slowdown(3, slowed, 1.5);
+    let report = session(steps, trace).run(&mut SimBackend::default()).unwrap();
+
+    assert!(
+        report.recoveries.is_empty(),
+        "sub-threshold drift must not trigger a reschedule: {:?}",
+        report.recoveries.iter().map(|e| e.kind).collect::<Vec<_>>()
+    );
+    let base = report.round_secs[2];
+    for r in 3..steps {
+        let ratio = report.round_secs[r] / base;
+        assert!(
+            (ratio - 1.5).abs() < 1e-9,
+            "round {r} should run at exactly 1.5x the base latency, got {ratio}"
+        );
+    }
+}
+
+/// A tighter detector catches the same slowdown: threshold behaviour
+/// is configuration, not hard-coding.
+#[test]
+fn tighter_drift_factor_catches_the_same_slowdown() {
+    let probe = Session::builder()
+        .model("efficientnet-b1")
+        .cluster(ClusterSpec::env("D", 100.0).unwrap())
+        .train(TrainConfig::new(256, 16))
+        .build()
+        .unwrap();
+    let slowed = probe.plan().devices()[0];
+
+    let trace = ChurnTrace::default().slowdown(3, slowed, 1.5);
+    let spec = ChurnSpec::from(trace).with_straggler(StragglerCfg {
+        warmup_rounds: 2,
+        drift_factor: 1.3,
+        consecutive: 2,
+    });
+    let report = session(10, spec).run(&mut SimBackend::default()).unwrap();
+
+    assert_eq!(report.recoveries.len(), 1);
+    let ev = &report.recoveries[0];
+    assert_eq!(ev.kind, RecoveryKind::Straggler);
+    assert_eq!(ev.failed_device, slowed);
+    assert_eq!(ev.round, 4, "warmup 2 (rounds 0-1), drift at 3 and 4, fires at 4");
+}
+
+/// Lightweight exits break the chained planner state (they replan
+/// outside the DP); a later join must still work by rebuilding a
+/// subset state — the chain-break path of the executor.
+#[test]
+fn join_after_lightweight_exit_rebuilds_the_chain() {
+    let probe = Session::builder()
+        .model("efficientnet-b1")
+        .cluster(ClusterSpec::env("D", 100.0).unwrap())
+        .train(TrainConfig::new(256, 16))
+        .build()
+        .unwrap();
+    let churner = *probe.plan().devices().last().unwrap();
+
+    let trace = ChurnTrace::default().exit(1, churner).join(4, churner);
+    let spec = ChurnSpec::from(trace).with_exit_recovery(RecoveryKind::Lightweight);
+    let report = session(8, spec).run(&mut SimBackend::default()).unwrap();
+
+    assert_eq!(report.recoveries.len(), 2);
+    assert_eq!(report.recoveries[0].kind, RecoveryKind::Lightweight);
+    assert_eq!(report.recoveries[0].report.mechanism, "lightweight");
+    let rejoin = &report.recoveries[1];
+    assert_eq!(rejoin.kind, RecoveryKind::Rejoin);
+    assert!(
+        rejoin.report.new_plan.devices().contains(&churner),
+        "the rejoined device must be back in the plan"
+    );
+    assert_eq!(
+        rejoin.report.new_plan.devices().len(),
+        probe.plan().devices().len(),
+        "membership must be fully restored"
+    );
+}
+
+/// A link degradation replans over unchanged membership and the
+/// degraded rounds price above the originals.
+#[test]
+fn link_degrade_replans_on_the_derated_network() {
+    let probe = Session::builder()
+        .model("efficientnet-b1")
+        .cluster(ClusterSpec::env("D", 100.0).unwrap())
+        .train(TrainConfig::new(256, 16))
+        .build()
+        .unwrap();
+    let devices = probe.plan().devices();
+    let (a, b) = (devices[0], devices[1]);
+
+    let trace = ChurnTrace::default().link_degrade(3, a, b, 5.0);
+    let report = session(8, trace).run(&mut SimBackend::default()).unwrap();
+
+    assert_eq!(report.recoveries.len(), 1);
+    let ev = &report.recoveries[0];
+    assert_eq!(ev.kind, RecoveryKind::Heavy);
+    assert_eq!(ev.report.mechanism, "link-degrade");
+    assert_eq!(ev.failed_device, a.min(b));
+    assert_eq!(
+        ev.report.new_plan.devices(),
+        devices,
+        "link events keep the membership"
+    );
+    assert!(
+        report.round_secs[3] >= report.round_secs[2],
+        "a 5 Mbps bottleneck cannot price below the 100 Mbps original: {} vs {}",
+        report.round_secs[3],
+        report.round_secs[2]
+    );
+}
+
+/// The `--churn` grammar round-trips through `describe()` and the
+/// session builder rejects traces that break membership.
+#[test]
+fn trace_grammar_and_session_validation() {
+    let text = "exit:3@1,join:3@4,slow:0:2.5@6,link:0-1:40@7";
+    let trace: ChurnTrace = text.parse().unwrap();
+    assert_eq!(trace.describe(), text);
+    assert_eq!(trace.len(), 4);
+
+    // Joining a device that is still active must fail at build.
+    let probe = Session::builder()
+        .model("efficientnet-b1")
+        .cluster(ClusterSpec::env("D", 100.0).unwrap())
+        .train(TrainConfig::new(256, 16))
+        .build()
+        .unwrap();
+    let active = probe.plan().devices()[0];
+    let bad = ChurnTrace::default().join(1, active);
+    let err = Session::builder()
+        .model("efficientnet-b1")
+        .cluster(ClusterSpec::env("D", 100.0).unwrap())
+        .train(TrainConfig::new(256, 16))
+        .steps(8)
+        .churn(bad)
+        .build()
+        .unwrap_err();
+    assert!(
+        format!("{err:#}").contains("already active"),
+        "unexpected error: {err:#}"
+    );
+}

@@ -15,8 +15,8 @@ use asteroid::config::{ClusterSpec, TrainConfig};
 use asteroid::model::zoo;
 use asteroid::planner::cost::{allreduce_time_parts, exec_times_parts};
 use asteroid::planner::{
-    allocate_microbatch, plan_hpp_incremental, plan_hpp_subset, plan_hpp_with_state,
-    sorted_device_order, AllocOpts, PlannerConfig, StagePricer,
+    allocate_microbatch, plan_hpp_incremental, plan_hpp_incremental_join, plan_hpp_subset,
+    plan_hpp_with_state, sorted_device_order, AllocOpts, PlannerConfig, StagePricer,
 };
 use asteroid::profiler::ProfileTable;
 use asteroid::prop_assert;
@@ -94,6 +94,169 @@ fn incremental_replan_equals_full_rebuild() {
                     full.is_ok()
                 )),
             }
+        },
+    );
+}
+
+/// Join-side mirror of the removal sweep: re-admitting a device
+/// through `plan_hpp_incremental_join` (which reuses every DP chain
+/// the insertion provably cannot disturb) must be *bit-for-bit*
+/// identical to a cold full rebuild over the union — across schedule
+/// policies, cluster shapes, wire codecs and insertion positions.
+#[test]
+fn join_incremental_equals_full_rebuild() {
+    const POLICIES: [&str; 4] = ["1f1b-kp", "gpipe-fill-drain", "zb-h1", "async:1"];
+    const ENVS: [&str; 4] = ["A", "B", "C", "D"];
+    const CODECS: [Codec; 3] = [Codec::Fp32, Codec::Int8, Codec::Fp16];
+    let model = zoo::mobilenet_v2();
+    check(
+        24,
+        |rng| {
+            let env = if rng.below(2) == 0 {
+                ENVS[rng.below(ENVS.len())].to_string()
+            } else {
+                format!("fleet:{}", 8 + rng.below(5))
+            };
+            let policy = POLICIES[rng.below(POLICIES.len())];
+            let held_seed = rng.below(64);
+            let codec = CODECS[rng.below(CODECS.len())];
+            (env, policy, held_seed, codec)
+        },
+        |case| {
+            let (env, policy_name, held_seed, codec) = (&case.0, case.1, case.2, case.3);
+            let cluster = match env.strip_prefix("fleet:") {
+                Some(n) => synthetic_fleet(n.parse().unwrap(), 100.0),
+                None => ClusterSpec::env(env, 100.0).unwrap(),
+            };
+            if cluster.n() < 2 {
+                return Ok(()); // joining needs a proper subset to start from
+            }
+            let table = ProfileTable::new(&cluster, &model);
+            let cfg = TrainConfig::new(128, 16);
+            let policy = policy_by_name(policy_name).unwrap();
+            let pc = PlannerConfig {
+                policy,
+                codec: CodecSpec::uniform(codec),
+                ..PlannerConfig::default()
+            };
+
+            // Hold one device out, plan the rest, then join it back.
+            let all: Vec<usize> = (0..cluster.n()).collect();
+            let added = all[held_seed % all.len()];
+            let base: Vec<usize> =
+                all.iter().copied().filter(|&d| d != added).collect();
+            let prev = match plan_hpp_subset(&table, &cluster, &model, &cfg, &pc, &base) {
+                Ok((_, st)) => st,
+                Err(_) => return Ok(()), // base subset infeasible: nothing to join onto
+            };
+
+            let inc =
+                plan_hpp_incremental_join(&prev, &table, &cluster, &model, &cfg, &pc, added);
+            let full = plan_hpp_subset(&table, &cluster, &model, &cfg, &pc, &all);
+            match (inc, full) {
+                (Ok((i, _)), Ok((f, _))) => {
+                    prop_assert!(
+                        i.plan == f.plan,
+                        "plans diverge after joining {added}:\n inc {:?}\n full {:?}",
+                        i.plan,
+                        f.plan
+                    );
+                    prop_assert!(
+                        i.predicted_latency.to_bits() == f.predicted_latency.to_bits(),
+                        "latency diverges: inc {} vs full {}",
+                        i.predicted_latency,
+                        f.predicted_latency
+                    );
+                    Ok(())
+                }
+                (Err(_), Err(_)) => Ok(()), // both infeasible: consistent
+                (inc, full) => Err(format!(
+                    "feasibility diverges after joining {added}: inc ok={}, full ok={}",
+                    inc.is_ok(),
+                    full.is_ok()
+                )),
+            }
+        },
+    );
+}
+
+/// Remove-then-rejoin round trip through both incremental paths: the
+/// re-expanded plan must be bit-for-bit the original full plan (the
+/// chained planner state loses nothing across the dip), across the
+/// same policy × cluster × codec sweep.
+#[test]
+fn remove_then_rejoin_round_trips() {
+    const POLICIES: [&str; 4] = ["1f1b-kp", "gpipe-fill-drain", "zb-h1", "async:1"];
+    const ENVS: [&str; 4] = ["A", "B", "C", "D"];
+    const CODECS: [Codec; 3] = [Codec::Fp32, Codec::Int8, Codec::Fp16];
+    let model = zoo::mobilenet_v2();
+    check(
+        16,
+        |rng| {
+            let env = if rng.below(2) == 0 {
+                ENVS[rng.below(ENVS.len())].to_string()
+            } else {
+                format!("fleet:{}", 8 + rng.below(5))
+            };
+            let policy = POLICIES[rng.below(POLICIES.len())];
+            let dev_seed = rng.below(64);
+            let codec = CODECS[rng.below(CODECS.len())];
+            (env, policy, dev_seed, codec)
+        },
+        |case| {
+            let (env, policy_name, dev_seed, codec) = (&case.0, case.1, case.2, case.3);
+            let cluster = match env.strip_prefix("fleet:") {
+                Some(n) => synthetic_fleet(n.parse().unwrap(), 100.0),
+                None => ClusterSpec::env(env, 100.0).unwrap(),
+            };
+            let table = ProfileTable::new(&cluster, &model);
+            let cfg = TrainConfig::new(128, 16);
+            let policy = policy_by_name(policy_name).unwrap();
+            let pc = PlannerConfig {
+                policy,
+                codec: CodecSpec::uniform(codec),
+                ..PlannerConfig::default()
+            };
+
+            let (orig, state) = match plan_hpp_with_state(&table, &cluster, &model, &cfg, &pc) {
+                Ok(r) => r,
+                Err(_) => return Ok(()), // whole cluster infeasible under this policy
+            };
+            if state.order().len() < 2 {
+                return Ok(());
+            }
+            let dev = state.order()[dev_seed % state.order().len()];
+
+            // Dip: remove `dev` through the shrink fast path...
+            let shrunk =
+                match plan_hpp_incremental(&state, &table, &cluster, &model, &cfg, &pc, dev) {
+                    Ok((_, st)) => st,
+                    Err(_) => return Ok(()), // survivors infeasible: no dip to recover from
+                };
+            // ...and rejoin it through the join fast path.
+            let (back, expanded) =
+                plan_hpp_incremental_join(&shrunk, &table, &cluster, &model, &cfg, &pc, dev)
+                    .map_err(|e| format!("rejoin of {dev} failed: {e}"))?;
+
+            prop_assert!(
+                back.plan == orig.plan,
+                "round trip changed the plan for device {dev}:\n orig {:?}\n back {:?}",
+                orig.plan,
+                back.plan
+            );
+            prop_assert!(
+                back.predicted_latency.to_bits() == orig.predicted_latency.to_bits(),
+                "round trip changed the latency: {} vs {}",
+                orig.predicted_latency,
+                back.predicted_latency
+            );
+            prop_assert!(
+                expanded.order().len() == state.order().len(),
+                "re-expanded state covers {} devices, expected {}",
+                expanded.order().len(),
+                state.order().len()
+            );
+            Ok(())
         },
     );
 }

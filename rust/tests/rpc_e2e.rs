@@ -11,10 +11,10 @@ use std::process::{Child, Command, Stdio};
 use std::time::Duration;
 
 use asteroid::config::{ClusterSpec, TrainConfig};
-use asteroid::fault::HeartbeatCfg;
+use asteroid::fault::{ChurnTrace, HeartbeatCfg};
 use asteroid::planner::baselines::Method;
 use asteroid::planner::Planner;
-use asteroid::session::{FaultSpec, RpcBackend, Session};
+use asteroid::session::{ChurnSpec, FaultSpec, RecoveryKind, RpcBackend, Session};
 
 /// A spawned worker process, killed on drop so a failing test never
 /// leaks listeners.
@@ -31,8 +31,12 @@ impl Drop for Worker {
 }
 
 fn spawn_worker() -> Worker {
+    spawn_worker_at("127.0.0.1:0")
+}
+
+fn spawn_worker_at(listen: &str) -> Worker {
     let mut child = Command::new(env!("CARGO_BIN_EXE_asteroid-worker"))
-        .args(["--listen", "127.0.0.1:0", "--quiet"])
+        .args(["--listen", listen, "--quiet"])
         .stdout(Stdio::piped())
         .stderr(Stdio::null())
         .spawn()
@@ -139,5 +143,75 @@ fn worker_process_kill_is_detected_and_replayed() {
         .expect("killed worker should have exited");
     assert_eq!(status.code(), Some(86), "Die exits with the fault code");
     // Survivors got a clean Exit from the driver; Drop reaps them.
+    drop(workers);
+}
+
+/// Elastic membership over real processes: a worker is killed by a
+/// churn `exit` event, a fresh OS process rebinds the *same* port, and
+/// the `join` event reconnects it — the driver re-Assigns everyone
+/// against the re-expanded plan and training continues with warm-start
+/// parameters from the driver checkpoint.
+#[test]
+fn killed_worker_restarts_and_rejoins_on_the_same_port() {
+    let mut workers: Vec<Worker> = (0..3).map(|_| spawn_worker()).collect();
+    let addrs: Vec<String> = workers.iter().map(|w| w.addr.clone()).collect();
+
+    let trace = ChurnTrace::default().exit(1, 2).join(3, 2);
+    let session = three_stage_session()
+        .steps(4)
+        .churn(ChurnSpec::from(trace).with_heartbeat(HeartbeatCfg::tight()))
+        .build()
+        .unwrap();
+    assert_eq!(*session.plan().devices().last().unwrap(), 2);
+
+    // Device 2 is the third worker in stage-major address order.  A
+    // sidecar thread plays the "restarted edge device": it waits for
+    // the churn exit to really kill the process, then launches a new
+    // worker on the predecessor's port (the worker retries the bind
+    // through TIME_WAIT; the driver retries the dial through the
+    // restart window).
+    let dead = workers.pop().unwrap();
+    let respawn_addr = dead.addr.clone();
+    let respawner = std::thread::spawn(move || {
+        let mut dead = dead;
+        let status = dead.child.wait().expect("waiting for churned worker");
+        assert_eq!(status.code(), Some(86), "churn exit kills for real");
+        spawn_worker_at(&respawn_addr)
+    });
+
+    let report = session.run(&mut RpcBackend::connect(addrs)).unwrap();
+    let revived = respawner.join().expect("respawner thread");
+
+    assert_eq!(report.rounds, 4, "churn events fire between rounds; none is lost");
+    assert_eq!(report.losses.len(), 4);
+    assert!(report.losses.iter().all(|l| l.is_finite()), "{:?}", report.losses);
+    assert_eq!(report.recoveries.len(), 2, "one exit + one rejoin");
+
+    let exit = &report.recoveries[0];
+    assert_eq!(exit.round, 1);
+    assert_eq!(exit.failed_device, 2);
+    assert_eq!(exit.kind, RecoveryKind::HeavyIncremental);
+    assert_eq!(exit.report.mechanism, "heavy-incremental");
+    assert!(!exit.report.new_plan.devices().contains(&2));
+
+    let rejoin = &report.recoveries[1];
+    assert_eq!(rejoin.round, 3);
+    assert_eq!(rejoin.failed_device, 2);
+    assert_eq!(rejoin.kind, RecoveryKind::Rejoin);
+    assert_eq!(rejoin.report.mechanism, "rejoin");
+    assert!(
+        rejoin.report.new_plan.devices().contains(&2),
+        "the re-expanded plan must re-admit the rejoined device"
+    );
+    assert_eq!(rejoin.report.new_plan.devices().len(), 3, "full membership restored");
+    assert!(rejoin.replan_wall_s >= 0.0);
+
+    // Warm start: the driver checkpointed before the exit, so the run
+    // still hands back a full final parameter set.
+    let fp = report.final_params.as_ref().expect("rpc returns final params");
+    assert_eq!(fp.len(), session.model().num_layers());
+
+    // The survivors and the revived worker all got a clean Exit.
+    drop(revived);
     drop(workers);
 }
