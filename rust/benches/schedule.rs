@@ -22,7 +22,7 @@ use asteroid::planner::{
 };
 use asteroid::profiler::ProfileTable;
 use asteroid::schedule::{builtin_policies, policy_by_name, Schedule};
-use asteroid::sim::{price_policy, price_policy_codec, price_schedule, simulate_round};
+use asteroid::sim::{price, simulate_round, PriceRequest};
 use asteroid::util::bench::{synthetic_fleet, Bencher};
 
 /// The 512-device wall-clock budget asserted by CI: mean
@@ -89,7 +89,7 @@ fn main() {
         });
         let sched = Schedule::for_sim(&plan, &model, policy);
         b.bench(&format!("price_schedule/{}/8dev_8stage_m64", policy.name()), || {
-            price_schedule(&sched, &table, &cluster, &model, &plan)
+            price(&PriceRequest::new(&table, &cluster, &model, &plan).schedule(&sched))
         });
     }
 
@@ -103,12 +103,12 @@ fn main() {
     // Deterministic per-policy quality rows: priced round latency and
     // mean bubble fraction over the plan's devices — the numbers whose
     // trajectory (async below zb-h1 below 1f1b-kp, gpipe above) later
-    // PRs watch.  Priced through `price_policy` so bounded-staleness
+    // PRs watch.  Priced through `sim::price` so bounded-staleness
     // policies report their steady-state figures.
     let policy_rows: Vec<String> = builtin_policies()
         .iter()
         .map(|policy| {
-            let sim = price_policy(&table, &cluster, &model, &plan, *policy);
+            let sim = price(&PriceRequest::new(&table, &cluster, &model, &plan).policy(*policy));
             let devs = plan.devices();
             let mean_bubble: f64 =
                 devs.iter().map(|&d| sim.bubble_fraction[d]).sum::<f64>() / devs.len() as f64;
@@ -129,7 +129,7 @@ fn main() {
         .iter()
         .map(|&s| {
             let policy = policy_by_name(&format!("async:{s}")).unwrap();
-            let sim = price_policy(&table, &cluster, &model, &plan, policy);
+            let sim = price(&PriceRequest::new(&table, &cluster, &model, &plan).policy(policy));
             format!(
                 "    {{\"policy\": \"{}\", \"max_staleness\": {s}, \
                  \"round_latency_s\": {:e}, \"round_bubble_ratio\": {:.6}, \
@@ -159,16 +159,10 @@ fn main() {
                 let spec = CodecSpec::uniform(c);
                 let cpc = PlannerConfig { codec: spec, ..PlannerConfig::default() };
                 let out = plan_hpp(&ctable, &ccluster, &model, &ccfg, &cpc).unwrap();
-                let wire =
-                    price_policy_codec(&ctable, &ccluster, &model, &out.plan, policy, &spec);
-                let logical = price_policy_codec(
-                    &ctable,
-                    &ccluster,
-                    &model,
-                    &out.plan,
-                    policy,
-                    &CodecSpec::default(),
-                );
+                let base = PriceRequest::new(&ctable, &ccluster, &model, &out.plan)
+                    .policy(policy);
+                let wire = price(&base.codec(spec));
+                let logical = price(&base.codec(CodecSpec::default()));
                 format!(
                     "    {{\"codec\": \"{}\", \"round_latency_s\": {:e}, \
                      \"wire_bytes_per_round\": {}, \"logical_bytes_per_round\": {}}}",

@@ -15,7 +15,7 @@
 //!   `PlannerConfig` and `Planner` unchanged;
 //! * exact wire accounting: [`Codec::wire_bytes`] maps logical tensor
 //!   bytes (via `DType::size_bytes`) to on-the-wire bytes, and the
-//!   planner cost model, `sim::price_policy` and the RPC byte meters
+//!   planner cost model, `sim::price` and the RPC byte meters
 //!   all consume it — so the DP optimizes cut points for the bytes
 //!   that actually cross the link.
 //!

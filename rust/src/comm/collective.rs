@@ -1,0 +1,364 @@
+//! Pluggable round-sync collectives: *how* a replicated stage's group
+//! reconciles parameters each HPP-Round.
+//!
+//! Two topologies exist, selected per session by [`SyncMode`]
+//! (`SessionBuilder::sync`, `--sync ring|driver`):
+//!
+//! * [`SyncMode::Ring`] (default) — worker-to-worker ring AllReduce on
+//!   the data plane.  Each member sends only to its ring successor;
+//!   reduce-scatter then all-gather moves `2(g-1)/g * W` wire bytes
+//!   per member in `2(g-1)` steps, and the driver's per-round
+//!   involvement stays O(1) control messages per member (StartRound /
+//!   RoundDone) regardless of group width.  This is Eq. 5's volume —
+//!   the paper's AllReduce term *is* the ring formula.
+//! * [`SyncMode::DriverStar`] — the degraded fallback: every member
+//!   ships its full flat to the driver, which reduces and fans the
+//!   result back out.  `2 g W` bytes serialise through the driver's
+//!   link, so the star only wins when `g` is tiny (2 members cost the
+//!   same wire volume as a ring but half the round trips) or when the
+//!   mesh between workers is broken.
+//!
+//! The same seam prices both sides: the planner's Eq. 6 AllReduce term
+//! and `sim::price` consume [`Collective`] (via
+//! [`SyncMode::collective`]), and the RPC worker executes the ring
+//! schedule through [`ring_all_reduce`] — one formula, one executor,
+//! no second copy of the topology.
+
+use anyhow::{bail, Result};
+
+/// Round-sync topology of every replicated stage in a session.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum SyncMode {
+    /// Worker-to-worker ring AllReduce on the data plane (default).
+    #[default]
+    Ring,
+    /// Driver-mediated star: members upload flats, the driver reduces
+    /// and fans back out.  Kept as the degraded / 2-member fallback.
+    DriverStar,
+}
+
+impl SyncMode {
+    pub const ALL: [SyncMode; 2] = [SyncMode::Ring, SyncMode::DriverStar];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SyncMode::Ring => "ring",
+            SyncMode::DriverStar => "driver",
+        }
+    }
+
+    /// Wire tag (carried in `AssignSpec`).
+    pub fn tag(self) -> u8 {
+        match self {
+            SyncMode::Ring => 0,
+            SyncMode::DriverStar => 1,
+        }
+    }
+
+    pub fn from_tag(tag: u8) -> Result<SyncMode> {
+        Ok(match tag {
+            0 => SyncMode::Ring,
+            1 => SyncMode::DriverStar,
+            other => bail!("unknown sync-mode tag {other}"),
+        })
+    }
+
+    /// `--sync ring|driver`.
+    pub fn parse(s: &str) -> Result<SyncMode> {
+        Ok(match s {
+            "ring" => SyncMode::Ring,
+            "driver" | "star" | "driver-star" => SyncMode::DriverStar,
+            other => bail!("unknown sync mode {other:?} (expected ring|driver)"),
+        })
+    }
+
+    /// The pricing half of the seam.
+    pub fn collective(self) -> &'static dyn Collective {
+        match self {
+            SyncMode::Ring => &RingCollective,
+            SyncMode::DriverStar => &DriverStarCollective,
+        }
+    }
+
+    /// Eq. 5/6 AllReduce wall-clock for `wire_bytes` of already-encoded
+    /// parameters over a `group`-member stage whose bottleneck link
+    /// runs at `min_bw` bytes/s.  Convenience over
+    /// [`Collective::allreduce_time`].
+    pub fn allreduce_time(self, wire_bytes: u64, group: usize, min_bw: f64) -> f64 {
+        self.collective().allreduce_time(wire_bytes, group, min_bw)
+    }
+
+    /// Total wire bytes the topology moves per round for one stage.
+    pub fn total_wire_bytes(self, wire_bytes: u64, group: usize) -> u64 {
+        self.collective().total_wire_bytes(wire_bytes, group)
+    }
+}
+
+impl std::fmt::Display for SyncMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// What the planner's Eq. 6 term and `sim::price` need from a sync
+/// topology: predicted wall-clock and wire volume.  The RPC worker
+/// consumes the execution half ([`ring_all_reduce`] / the driver-star
+/// frames); both halves live in this module so they cannot drift.
+pub trait Collective: Sync {
+    fn mode(&self) -> SyncMode;
+
+    /// Wall-clock seconds to AllReduce `wire_bytes` over `group`
+    /// members whose slowest involved link moves `min_bw` bytes/s.
+    /// `group <= 1` is a no-op (0.0).
+    fn allreduce_time(&self, wire_bytes: u64, group: usize, min_bw: f64) -> f64;
+
+    /// Total bytes the topology puts on the network per round for one
+    /// replicated stage (`group <= 1` -> 0).
+    fn total_wire_bytes(&self, wire_bytes: u64, group: usize) -> u64;
+}
+
+/// Ring AllReduce: `2(g-1)` steps, each member moving `W/g` per step
+/// over its successor link — `2(g-1)/g * W` per member, bandwidth-
+/// optimal (paper Eq. 5).
+pub struct RingCollective;
+
+impl Collective for RingCollective {
+    fn mode(&self) -> SyncMode {
+        SyncMode::Ring
+    }
+
+    fn allreduce_time(&self, wire_bytes: u64, group: usize, min_bw: f64) -> f64 {
+        if group <= 1 {
+            return 0.0;
+        }
+        (2 * (group - 1)) as f64 * wire_bytes as f64 / (group as f64 * min_bw)
+    }
+
+    fn total_wire_bytes(&self, wire_bytes: u64, group: usize) -> u64 {
+        if group <= 1 {
+            return 0;
+        }
+        2 * (group as u64 - 1) * wire_bytes
+    }
+}
+
+/// Driver-mediated star: every member uploads its full flat and
+/// downloads the reduced one, and all `2 g W` bytes serialise through
+/// the driver's link (the driver is one endpoint of every transfer).
+pub struct DriverStarCollective;
+
+impl Collective for DriverStarCollective {
+    fn mode(&self) -> SyncMode {
+        SyncMode::DriverStar
+    }
+
+    fn allreduce_time(&self, wire_bytes: u64, group: usize, min_bw: f64) -> f64 {
+        if group <= 1 {
+            return 0.0;
+        }
+        (2 * group) as f64 * wire_bytes as f64 / min_bw
+    }
+
+    fn total_wire_bytes(&self, wire_bytes: u64, group: usize) -> u64 {
+        if group <= 1 {
+            return 0;
+        }
+        2 * group as u64 * wire_bytes
+    }
+}
+
+/// Segment bounds of a flat of `len` elements split across `group`
+/// ring members: segment `s` is `[seg_range.0, seg_range.1)`.  The
+/// first `len % group` segments absorb the remainder, so segments
+/// differ by at most one element and cover `0..len` exactly.
+pub fn seg_range(len: usize, group: usize, s: usize) -> (usize, usize) {
+    debug_assert!(s < group);
+    let base = len / group;
+    let rem = len % group;
+    let start = s * base + s.min(rem);
+    let end = start + base + usize::from(s < rem);
+    (start, end)
+}
+
+/// The ring AllReduce schedule, abstracted over the transport: the RPC
+/// worker wires `send`/`recv` to framed TCP toward its ring successor
+/// / from its predecessor; the loopback tests wire them to in-process
+/// channels.  On return `flat` holds the element-wise **sum** over all
+/// `group` members (callers divide for an average).
+///
+/// Step `t` of the reduce-scatter (t in `0..group-1`): member `index`
+/// sends segment `(index - t) mod g` and receives-and-adds segment
+/// `(index - t - 1) mod g`.  Step `t` of the all-gather (t in
+/// `group-1..2(group-1)`): the same rotation, but the received segment
+/// *replaces* local data (it is already fully reduced).  Connections
+/// are FIFO, so `recv` must yield the peer's step-`t` segment in step
+/// order; the executor verifies the segment length.
+pub fn ring_all_reduce<S, R>(
+    flat: &mut [f32],
+    index: usize,
+    group: usize,
+    mut send: S,
+    mut recv: R,
+) -> Result<()>
+where
+    S: FnMut(usize, usize, &[f32]) -> Result<()>,
+    R: FnMut(usize, usize) -> Result<Vec<f32>>,
+{
+    if group <= 1 {
+        return Ok(());
+    }
+    assert!(index < group, "ring index {index} out of group {group}");
+    let len = flat.len();
+    // Reduce-scatter: after step t every member holds the partial sum
+    // of t+2 contributions in the segment it just received.
+    for t in 0..group - 1 {
+        let send_seg = (index + group - t % group) % group;
+        let recv_seg = (index + group - t % group - 1) % group;
+        let (ss, se) = seg_range(len, group, send_seg);
+        send(t, send_seg, &flat[ss..se])?;
+        let chunk = recv(t, recv_seg)?;
+        let (rs, re) = seg_range(len, group, recv_seg);
+        if chunk.len() != re - rs {
+            bail!(
+                "ring step {t}: segment {recv_seg} carries {} elems, expected {}",
+                chunk.len(),
+                re - rs
+            );
+        }
+        for (dst, src) in flat[rs..re].iter_mut().zip(&chunk) {
+            *dst += *src;
+        }
+    }
+    // All-gather: rotate the fully-reduced segments around the ring.
+    for t in group - 1..2 * (group - 1) {
+        let rot = t - (group - 1);
+        let send_seg = (index + 1 + group - rot % group) % group;
+        let recv_seg = (index + group - rot % group) % group;
+        let (ss, se) = seg_range(len, group, send_seg);
+        send(t, send_seg, &flat[ss..se])?;
+        let chunk = recv(t, recv_seg)?;
+        let (rs, re) = seg_range(len, group, recv_seg);
+        if chunk.len() != re - rs {
+            bail!(
+                "ring step {t}: segment {recv_seg} carries {} elems, expected {}",
+                chunk.len(),
+                re - rs
+            );
+        }
+        flat[rs..re].copy_from_slice(&chunk);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    /// Run a `group`-wide ring over in-process channels and return
+    /// every member's final flat.
+    fn run_ring(inputs: Vec<Vec<f32>>) -> Vec<Vec<f32>> {
+        let group = inputs.len();
+        // tx[i] feeds member i's inbox; member i sends to (i+1) % g.
+        let (txs, rxs): (Vec<_>, Vec<_>) =
+            (0..group).map(|_| mpsc::channel::<Vec<f32>>()).unzip();
+        let mut handles = Vec::new();
+        let mut rxs = rxs.into_iter();
+        for (i, mut flat) in inputs.into_iter().enumerate() {
+            let tx_next = txs[(i + 1) % group].clone();
+            let rx = rxs.next().unwrap();
+            handles.push(std::thread::spawn(move || {
+                ring_all_reduce(
+                    &mut flat,
+                    i,
+                    group,
+                    |_t, _seg, chunk| {
+                        tx_next.send(chunk.to_vec()).map_err(|e| anyhow::anyhow!("{e}"))
+                    },
+                    |_t, _seg| rx.recv().map_err(|e| anyhow::anyhow!("{e}")),
+                )
+                .unwrap();
+                flat
+            }));
+        }
+        drop(txs);
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    /// Widths 2/4/8: the ring result equals the star reference (a
+    /// plain elementwise sum) to fp tolerance, on every member, with a
+    /// length that does not divide evenly.
+    #[test]
+    fn ring_matches_star_reference_at_widths_2_4_8() {
+        for group in [2usize, 4, 8] {
+            let len = 1031; // prime: exercises uneven segments
+            let inputs: Vec<Vec<f32>> = (0..group)
+                .map(|i| {
+                    (0..len)
+                        .map(|k| ((i * len + k) % 97) as f32 * 0.25 - 3.0)
+                        .collect()
+                })
+                .collect();
+            let mut reference = vec![0.0f32; len];
+            for input in &inputs {
+                for (r, v) in reference.iter_mut().zip(input) {
+                    *r += *v;
+                }
+            }
+            let outs = run_ring(inputs);
+            for (i, out) in outs.iter().enumerate() {
+                for (k, (got, want)) in out.iter().zip(&reference).enumerate() {
+                    assert!(
+                        (got - want).abs() <= 1e-4 * want.abs().max(1.0),
+                        "group {group} member {i} elem {k}: {got} vs {want}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn segments_partition_exactly() {
+        for (len, group) in [(10usize, 3usize), (7, 7), (5, 8), (1031, 4), (0, 2)] {
+            let mut cursor = 0;
+            for s in 0..group {
+                let (a, b) = seg_range(len, group, s);
+                assert_eq!(a, cursor, "len {len} group {group} seg {s}");
+                assert!(b >= a);
+                cursor = b;
+            }
+            assert_eq!(cursor, len);
+        }
+    }
+
+    #[test]
+    fn pricing_formulas_match_topology_volume() {
+        let w = 1_000_000u64;
+        let bw = 10e6;
+        // Ring is Eq. 5: 2(g-1)/g * W / bw.
+        let ring = SyncMode::Ring.allreduce_time(w, 4, bw);
+        assert!((ring - 2.0 * 3.0 * 1_000_000.0 / (4.0 * 10e6)).abs() < 1e-12);
+        // Star serialises 2gW through the driver link.
+        let star = SyncMode::DriverStar.allreduce_time(w, 4, bw);
+        assert!((star - 8.0 * 1_000_000.0 / 10e6).abs() < 1e-12);
+        assert!(star > ring, "the star must price worse at width 4");
+        // Degenerate group: free in both modes.
+        for m in SyncMode::ALL {
+            assert_eq!(m.allreduce_time(w, 1, bw), 0.0);
+            assert_eq!(m.total_wire_bytes(w, 1), 0);
+        }
+        assert_eq!(SyncMode::Ring.total_wire_bytes(w, 4), 6 * w);
+        assert_eq!(SyncMode::DriverStar.total_wire_bytes(w, 4), 8 * w);
+    }
+
+    #[test]
+    fn sync_mode_round_trips_tags_and_names() {
+        for m in SyncMode::ALL {
+            assert_eq!(SyncMode::from_tag(m.tag()).unwrap(), m);
+            assert_eq!(SyncMode::parse(m.name()).unwrap(), m);
+        }
+        assert!(SyncMode::from_tag(9).is_err());
+        assert!(SyncMode::parse("mesh").is_err());
+        assert_eq!(SyncMode::default(), SyncMode::Ring);
+    }
+}

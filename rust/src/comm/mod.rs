@@ -6,7 +6,10 @@
 //! edge networks: HPP confines AllReduce to the parameter-light layers
 //! it replicates and avoids cutting through huge feature maps.
 
+pub mod collective;
 pub mod rpc;
+
+pub use collective::{ring_all_reduce, Collective, SyncMode};
 
 use crate::model::ModelDesc;
 use crate::planner::plan::Plan;

@@ -7,9 +7,12 @@
 //! * **control plane** (driver <-> worker): worker assignment
 //!   ([`AssignSpec`]: plan slice + compute script + peer addresses),
 //!   round control, heartbeats, round reports, parameter
-//!   fetch/restore, group round-sync mediation, and fault injection;
+//!   fetch/restore, group round-sync fallback mediation, and fault
+//!   injection;
 //! * **data plane** (worker <-> worker): boundary activation and
-//!   gradient tensors between adjacent pipeline stages.
+//!   gradient tensors between adjacent pipeline stages, plus the ring
+//!   AllReduce segments ([`RpcMsg::RingChunk`]) replicated-stage
+//!   groups exchange under [`SyncMode::Ring`].
 //!
 //! The codec is a hand-rolled binary format (the build is offline:
 //! no serde/bincode), little-endian for payload scalars, with a
@@ -28,6 +31,7 @@ use std::io::{Read, Write};
 
 use anyhow::{bail, Context, Result};
 
+use super::collective::SyncMode;
 use crate::codec::Codec;
 use crate::pipeline::optimizer::OptimizerCfg;
 use crate::pipeline::step::RefLayerSpec;
@@ -41,7 +45,10 @@ pub const MAGIC: [u8; 4] = *b"ASTR";
 /// (fp32/fp16/bf16/int8 compressed data plane); `AssignSpec` carries
 /// the worker's per-boundary codecs; `RoundDone` carries data-plane
 /// byte meters.
-pub const VERSION: u8 = 2;
+/// v3: `AssignSpec` carries the sync topology (mode tag, ring index,
+/// ring member addresses); `RingChunk` frames and the `Ring`
+/// connection role exist; `RoundDone` carries round-sync meters.
+pub const VERSION: u8 = 3;
 /// Hard ceiling on one frame's payload (activations of deep stages
 /// stay far below this; anything larger is a framing error).
 pub const MAX_FRAME: usize = 256 << 20;
@@ -100,6 +107,138 @@ pub fn send_msg_codec(w: &mut impl Write, msg: &RpcMsg, codec: Codec) -> Result<
 /// Receive + decode one message.
 pub fn recv_msg(r: &mut impl Read) -> Result<RpcMsg> {
     RpcMsg::decode(&read_frame(r)?)
+}
+
+/// Zero-copy tensor framing: send a data-plane message without first
+/// materialising the whole frame as one contiguous payload `Vec`.
+///
+/// [`send_msg_codec`] copies every f32 element into a payload buffer
+/// before `write_frame` hands it to the socket; on the Act/Grad and
+/// ring-chunk hot paths the payload *is* the tensor, so that doubles
+/// the memory traffic of every transfer.  Here only the frame header
+/// and the small message prefix (tag, generation, shape metadata,
+/// element count, codec tag) are encoded up front — their lengths fix
+/// the frame length exactly — and the f32 payload is then streamed
+/// straight from the borrowed slice through a fixed stack chunk.  The
+/// bytes on the wire are identical to `send_msg_codec` (asserted by
+/// `streamed_framing_matches_encode_with`); only the copies differ.
+///
+/// Lossy codecs must transform every element anyway, so their payload
+/// is staged through one exactly-sized scratch `Vec` (still never a
+/// whole-frame buffer).  Messages without a large f32 payload fall
+/// back to the buffered path.
+///
+/// Returns total bytes written (header + payload) for the wire meters.
+pub fn send_msg_streamed(w: &mut impl Write, msg: &RpcMsg, codec: Codec) -> Result<u64> {
+    let streamable = matches!(msg, RpcMsg::RingChunk { .. })
+        || matches!(
+            msg,
+            RpcMsg::Act { t, .. } | RpcMsg::Targets { t, .. } | RpcMsg::Grad { t, .. }
+                if matches!(t.data, TensorData::F32(_))
+        );
+    if !streamable {
+        let payload = msg.encode_with(codec);
+        write_frame(w, &payload)?;
+        return Ok((HEADER_LEN + payload.len()) as u64);
+    }
+
+    let mut e = Enc::default();
+    let flat: &[f32] = match msg {
+        RpcMsg::Act { gen, micro, t }
+        | RpcMsg::Targets { gen, micro, t }
+        | RpcMsg::Grad { gen, micro, t } => {
+            let TensorData::F32(v) = &t.data else { unreachable!("checked streamable") };
+            e.u8(match msg {
+                RpcMsg::Act { .. } => T_ACT,
+                RpcMsg::Targets { .. } => T_TARGETS,
+                _ => T_GRAD,
+            });
+            e.u64(*gen);
+            e.u64(*micro as u64);
+            e.u8(t.shape.len() as u8);
+            for &d in &t.shape {
+                e.u32(d as u32);
+            }
+            e.u8(0); // dtype tag: f32
+            e.u32(v.len() as u32);
+            e.u8(codec.tag());
+            v
+        }
+        RpcMsg::RingChunk { gen, step, seg, flat } => {
+            e.u8(T_RING_CHUNK);
+            e.u64(*gen);
+            e.u32(*step as u32);
+            e.u32(*seg as u32);
+            e.u32(flat.len() as u32);
+            e.u8(codec.tag());
+            flat
+        }
+        _ => unreachable!("checked streamable"),
+    };
+    stream_frame_f32(w, &e.into_bytes(), flat, codec)
+}
+
+/// Frame-and-send one ring AllReduce segment straight from a borrowed
+/// slice — the ring executor's send path.  Equivalent on the wire to
+/// `send_msg_streamed(&RpcMsg::RingChunk {..})`, without constructing
+/// the message (which would copy the segment into an owned `Vec`).
+pub fn send_ring_chunk(
+    w: &mut impl Write,
+    gen: u64,
+    step: usize,
+    seg: usize,
+    flat: &[f32],
+    codec: Codec,
+) -> Result<u64> {
+    let mut e = Enc::default();
+    e.u8(T_RING_CHUNK);
+    e.u64(gen);
+    e.u32(step as u32);
+    e.u32(seg as u32);
+    e.u32(flat.len() as u32);
+    e.u8(codec.tag());
+    stream_frame_f32(w, &e.into_bytes(), flat, codec)
+}
+
+/// The streaming core: header + `prefix`, then the f32 payload encoded
+/// by `codec` without a whole-frame buffer.
+fn stream_frame_f32(
+    w: &mut impl Write,
+    prefix: &[u8],
+    flat: &[f32],
+    codec: Codec,
+) -> Result<u64> {
+    let payload_len = prefix.len() + codec.payload_bytes(flat.len());
+    if payload_len > MAX_FRAME {
+        bail!("frame payload {payload_len} exceeds MAX_FRAME {MAX_FRAME}");
+    }
+    let mut header = [0u8; HEADER_LEN];
+    header[..4].copy_from_slice(&MAGIC);
+    header[4] = VERSION;
+    header[5..9].copy_from_slice(&(payload_len as u32).to_be_bytes());
+    w.write_all(&header)?;
+    w.write_all(prefix)?;
+    match codec {
+        Codec::Fp32 => {
+            // Stream the slice itself: LE conversion happens in a fixed
+            // stack chunk, so peak extra memory is 4 KiB however large
+            // the tensor.
+            let mut tmp = [0u8; 4 * LE_CHUNK];
+            for chunk in flat.chunks(LE_CHUNK) {
+                for (i, x) in chunk.iter().enumerate() {
+                    tmp[4 * i..4 * i + 4].copy_from_slice(&x.to_le_bytes());
+                }
+                w.write_all(&tmp[..4 * chunk.len()])?;
+            }
+        }
+        _ => {
+            let mut scratch = Vec::with_capacity(codec.payload_bytes(flat.len()));
+            codec.encode_f32s(flat, &mut scratch);
+            w.write_all(&scratch)?;
+        }
+    }
+    w.flush()?;
+    Ok((HEADER_LEN + payload_len) as u64)
 }
 
 // ------------------------------------------------------------- codec
@@ -341,6 +480,10 @@ pub enum ConnRole {
     Control,
     /// A peer worker's data connection (identified by its position).
     Data { stage: usize, slot: usize },
+    /// A ring-AllReduce predecessor's connection: the sender is ring
+    /// member `index` of the replicated stage `stage`, and this
+    /// connection carries its `RingChunk` segments every round.
+    Ring { stage: usize, index: usize },
 }
 
 /// Saved parameter state of one reference layer (checkpoint /
@@ -371,9 +514,19 @@ pub struct AssignSpec {
     pub stage: usize,
     pub slot: usize,
     pub num_stages: usize,
-    /// Replicas in this stage's group (driver-mediated round sync is
-    /// only engaged when > 1).
+    /// Replicas in this stage's group (round sync is only engaged
+    /// when > 1, over the topology `sync` selects).
     pub group_size: usize,
+    /// Round-sync topology of this stage's group.
+    pub sync: SyncMode,
+    /// This worker's position on the stage's ring (`0..group_size`;
+    /// slot order).  Meaningful only under [`SyncMode::Ring`].
+    pub ring_index: usize,
+    /// Data addresses of every group member in ring order — member
+    /// `ring_index` dials `ring[(ring_index + 1) % group_size]` as its
+    /// ring successor.  Empty under [`SyncMode::DriverStar`] or for
+    /// unreplicated stages.
+    pub ring: Vec<String>,
     /// This device's ordered compute script for one HPP-Round
     /// (`Schedule::compute_script`).
     pub script: Vec<ComputeOp>,
@@ -430,6 +583,9 @@ pub enum RpcMsg {
     /// `logical_bytes`/`wire_bytes` meter the round's outbound
     /// data-plane tensor payloads before/after the wire codec, so the
     /// driver can report the measured compression ratio.
+    /// `sync_bytes`/`sync_wall_s` meter the round's AllReduce: wire
+    /// bytes this worker sent for group sync and the wall-clock it
+    /// spent inside the collective (0 for unreplicated stages).
     RoundDone {
         device: usize,
         round: usize,
@@ -438,12 +594,15 @@ pub enum RpcMsg {
         compute_s: f64,
         logical_bytes: u64,
         wire_bytes: u64,
+        sync_bytes: u64,
+        sync_wall_s: f64,
     },
     /// Worker -> driver: replicated-stage round sync contribution
     /// (kind 0 = summed gradients of a synchronous round, kind 1 =
-    /// parameters for bounded-staleness averaging).
+    /// parameters for bounded-staleness averaging).  The
+    /// [`SyncMode::DriverStar`] fallback path only.
     SyncRequest { device: usize, kind: u8, flat: Vec<f32> },
-    /// Driver -> worker: the group-reduced buffer.
+    /// Driver -> worker: the group-reduced buffer (star fallback).
     SyncResult { flat: Vec<f32> },
     /// Driver -> worker: abandon the current round (fault recovery);
     /// the worker discards in-flight state and awaits re-assignment.
@@ -471,6 +630,11 @@ pub enum RpcMsg {
     /// stretches every round's compute, so only the driver's
     /// timing-drift detector can catch it.  Sent between rounds only.
     Throttle { factor: f64 },
+    /// Worker -> worker (ring data plane): one ring-AllReduce segment.
+    /// `step` is the position in the `2(g-1)`-step schedule, `seg` the
+    /// flat segment index being rotated; receivers drop chunks from
+    /// other assignment generations, exactly like `Act`/`Grad`.
+    RingChunk { gen: u64, step: usize, seg: usize, flat: Vec<f32> },
 }
 
 const T_HELLO: u8 = 1;
@@ -493,6 +657,7 @@ const T_DIE: u8 = 17;
 const T_BYE: u8 = 18;
 const T_FATAL: u8 = 19;
 const T_THROTTLE: u8 = 20;
+const T_RING_CHUNK: u8 = 21;
 
 fn enc_op(e: &mut Enc, op: &ComputeOp) {
     match *op {
@@ -581,6 +746,7 @@ impl RpcMsg {
             RpcMsg::Bye => "Bye",
             RpcMsg::Fatal { .. } => "Fatal",
             RpcMsg::Throttle { .. } => "Throttle",
+            RpcMsg::RingChunk { .. } => "RingChunk",
         }
     }
 
@@ -604,6 +770,11 @@ impl RpcMsg {
                         e.u8(1);
                         e.u32(*stage as u32);
                         e.u32(*slot as u32);
+                    }
+                    ConnRole::Ring { stage, index } => {
+                        e.u8(2);
+                        e.u32(*stage as u32);
+                        e.u32(*index as u32);
                     }
                 }
             }
@@ -647,6 +818,12 @@ impl RpcMsg {
                 for s in &a.warm_start {
                     enc_layer_state(&mut e, s);
                 }
+                e.u8(a.sync.tag());
+                e.u32(a.ring_index as u32);
+                e.u32(a.ring.len() as u32);
+                for s in &a.ring {
+                    e.str(s);
+                }
             }
             RpcMsg::Ready { device } => {
                 e.u8(T_READY);
@@ -687,6 +864,8 @@ impl RpcMsg {
                 compute_s,
                 logical_bytes,
                 wire_bytes,
+                sync_bytes,
+                sync_wall_s,
             } => {
                 e.u8(T_ROUND_DONE);
                 e.u64(*device as u64);
@@ -696,6 +875,8 @@ impl RpcMsg {
                 e.f64(*compute_s);
                 e.u64(*logical_bytes);
                 e.u64(*wire_bytes);
+                e.u64(*sync_bytes);
+                e.f64(*sync_wall_s);
             }
             RpcMsg::SyncRequest { device, kind, flat } => {
                 e.u8(T_SYNC_REQUEST);
@@ -733,6 +914,13 @@ impl RpcMsg {
                 e.u8(T_THROTTLE);
                 e.f64(*factor);
             }
+            RpcMsg::RingChunk { gen, step, seg, flat } => {
+                e.u8(T_RING_CHUNK);
+                e.u64(*gen);
+                e.u32(*step as u32);
+                e.u32(*seg as u32);
+                e.f32s_codec(flat, codec);
+            }
         }
         e.into_bytes()
     }
@@ -747,6 +935,10 @@ impl RpcMsg {
                     1 => ConnRole::Data {
                         stage: d.u32()? as usize,
                         slot: d.u32()? as usize,
+                    },
+                    2 => ConnRole::Ring {
+                        stage: d.u32()? as usize,
+                        index: d.u32()? as usize,
                     },
                     other => bail!("unknown connection role {other}"),
                 };
@@ -798,6 +990,13 @@ impl RpcMsg {
                 for _ in 0..n_warm {
                     warm_start.push(dec_layer_state(&mut d)?);
                 }
+                let sync = SyncMode::from_tag(d.u8()?)?;
+                let ring_index = d.u32()? as usize;
+                let n_ring = d.count(4)?;
+                let mut ring = Vec::with_capacity(n_ring);
+                for _ in 0..n_ring {
+                    ring.push(d.str()?);
+                }
                 RpcMsg::Assign(Box::new(AssignSpec {
                     generation,
                     device,
@@ -819,6 +1018,9 @@ impl RpcMsg {
                     next,
                     prev,
                     warm_start,
+                    sync,
+                    ring_index,
+                    ring,
                 }))
             }
             T_READY => RpcMsg::Ready { device: d.u64()? as usize },
@@ -837,6 +1039,8 @@ impl RpcMsg {
                 compute_s: d.f64()?,
                 logical_bytes: d.u64()?,
                 wire_bytes: d.u64()?,
+                sync_bytes: d.u64()?,
+                sync_wall_s: d.f64()?,
             },
             T_SYNC_REQUEST => RpcMsg::SyncRequest {
                 device: d.u64()? as usize,
@@ -863,6 +1067,12 @@ impl RpcMsg {
             T_BYE => RpcMsg::Bye,
             T_FATAL => RpcMsg::Fatal { device: d.u64()? as usize, error: d.str()? },
             T_THROTTLE => RpcMsg::Throttle { factor: d.f64()? },
+            T_RING_CHUNK => RpcMsg::RingChunk {
+                gen: d.u64()?,
+                step: d.u32()? as usize,
+                seg: d.u32()? as usize,
+                flat: d.f32s_codec()?,
+            },
             other => bail!("unknown message tag {other}"),
         };
         if !d.done() {
@@ -886,7 +1096,7 @@ impl RpcMsg {
 
 /// Every wire message kind, in tag order (append-only, like the tags
 /// themselves; keep in sync with [`RpcMsg::kind`]).
-pub const MSG_KINDS: [&str; 20] = [
+pub const MSG_KINDS: [&str; 21] = [
     "Hello",
     "Assign",
     "Ready",
@@ -907,6 +1117,7 @@ pub const MSG_KINDS: [&str; 20] = [
     "Bye",
     "Fatal",
     "Throttle",
+    "RingChunk",
 ];
 
 /// Control-plane phase of the worker serve loop.
@@ -1000,6 +1211,8 @@ pub const WORKER_TRANSITIONS: &[(WorkerPhase, &str, WorkerAction)] = &[
     (WorkerPhase::Idle, "Bye", WorkerAction::IgnoreIdle),
     (WorkerPhase::Idle, "Fatal", WorkerAction::IgnoreIdle),
     (WorkerPhase::Idle, "Throttle", WorkerAction::ApplyThrottle),
+    // An early ring segment from a faster peer: buffered like Act.
+    (WorkerPhase::Idle, "RingChunk", WorkerAction::DataPlane),
     // ----- InRound: only data, abort, and death may interrupt.
     (WorkerPhase::InRound, "Hello", WorkerAction::FailUnexpected),
     (WorkerPhase::InRound, "Assign", WorkerAction::FailUnexpected),
@@ -1022,6 +1235,9 @@ pub const WORKER_TRANSITIONS: &[(WorkerPhase, &str, WorkerAction)] = &[
     (WorkerPhase::InRound, "Fatal", WorkerAction::FailUnexpected),
     // Throttles land between rounds only; mid-round is a violation.
     (WorkerPhase::InRound, "Throttle", WorkerAction::FailUnexpected),
+    // A faster ring peer can reach the collective while we still
+    // compute: buffered until this worker enters its own sync phase.
+    (WorkerPhase::InRound, "RingChunk", WorkerAction::DataPlane),
     // ----- Syncing: waiting on the driver's reduced buffer.
     (WorkerPhase::Syncing, "Hello", WorkerAction::FailUnexpected),
     (WorkerPhase::Syncing, "Assign", WorkerAction::FailUnexpected),
@@ -1045,6 +1261,8 @@ pub const WORKER_TRANSITIONS: &[(WorkerPhase, &str, WorkerAction)] = &[
     (WorkerPhase::Syncing, "Bye", WorkerAction::FailUnexpected),
     (WorkerPhase::Syncing, "Fatal", WorkerAction::FailUnexpected),
     (WorkerPhase::Syncing, "Throttle", WorkerAction::FailUnexpected),
+    // The ring executor's hot path: consumed by the collective.
+    (WorkerPhase::Syncing, "RingChunk", WorkerAction::DataPlane),
 ];
 
 /// Transition of the worker machine for `kind` in `phase` (`None` is
@@ -1144,6 +1362,9 @@ pub const DRIVER_TRANSITIONS: &[(DriverPhase, &str, DriverAction)] = &[
     (DriverPhase::Assigning, "Bye", DriverAction::FailUnexpected),
     (DriverPhase::Assigning, "Fatal", DriverAction::FailPeer),
     (DriverPhase::Assigning, "Throttle", DriverAction::FailUnexpected),
+    // Ring segments are worker-to-worker only; one at the driver is a
+    // mis-dialed peer.
+    (DriverPhase::Assigning, "RingChunk", DriverAction::FailUnexpected),
     // ----- Rounding: waiting for every stage's RoundDone.
     (DriverPhase::Rounding, "Hello", DriverAction::FailUnexpected),
     (DriverPhase::Rounding, "Assign", DriverAction::FailUnexpected),
@@ -1166,6 +1387,7 @@ pub const DRIVER_TRANSITIONS: &[(DriverPhase, &str, DriverAction)] = &[
     (DriverPhase::Rounding, "Bye", DriverAction::FailUnexpected),
     (DriverPhase::Rounding, "Fatal", DriverAction::FailPeer),
     (DriverPhase::Rounding, "Throttle", DriverAction::FailUnexpected),
+    (DriverPhase::Rounding, "RingChunk", DriverAction::FailUnexpected),
     // ----- Checkpointing: each survivor answers FetchParams.
     (DriverPhase::Checkpointing, "Hello", DriverAction::FailUnexpected),
     (DriverPhase::Checkpointing, "Assign", DriverAction::FailUnexpected),
@@ -1187,6 +1409,7 @@ pub const DRIVER_TRANSITIONS: &[(DriverPhase, &str, DriverAction)] = &[
     (DriverPhase::Checkpointing, "Bye", DriverAction::FailUnexpected),
     (DriverPhase::Checkpointing, "Fatal", DriverAction::FailPeer),
     (DriverPhase::Checkpointing, "Throttle", DriverAction::FailUnexpected),
+    (DriverPhase::Checkpointing, "RingChunk", DriverAction::FailUnexpected),
     // ----- Detecting: fault injection sent, waiting for the victim's
     // silence; stragglers from the doomed round are settled noise.
     (DriverPhase::Detecting, "Hello", DriverAction::FailUnexpected),
@@ -1209,6 +1432,7 @@ pub const DRIVER_TRANSITIONS: &[(DriverPhase, &str, DriverAction)] = &[
     (DriverPhase::Detecting, "Bye", DriverAction::FailUnexpected),
     (DriverPhase::Detecting, "Fatal", DriverAction::FailPeer),
     (DriverPhase::Detecting, "Throttle", DriverAction::FailUnexpected),
+    (DriverPhase::Detecting, "RingChunk", DriverAction::FailUnexpected),
     // ----- Aborting: survivors acknowledge with RoundFailed.
     (DriverPhase::Aborting, "Hello", DriverAction::FailUnexpected),
     (DriverPhase::Aborting, "Assign", DriverAction::FailUnexpected),
@@ -1231,6 +1455,7 @@ pub const DRIVER_TRANSITIONS: &[(DriverPhase, &str, DriverAction)] = &[
     (DriverPhase::Aborting, "Bye", DriverAction::FailUnexpected),
     (DriverPhase::Aborting, "Fatal", DriverAction::FailPeer),
     (DriverPhase::Aborting, "Throttle", DriverAction::FailUnexpected),
+    (DriverPhase::Aborting, "RingChunk", DriverAction::FailUnexpected),
     // ----- Closing: best-effort drain; nothing can fail the run now.
     (DriverPhase::Closing, "Hello", DriverAction::Ignore),
     (DriverPhase::Closing, "Assign", DriverAction::Ignore),
@@ -1252,6 +1477,7 @@ pub const DRIVER_TRANSITIONS: &[(DriverPhase, &str, DriverAction)] = &[
     (DriverPhase::Closing, "Bye", DriverAction::Accept),
     (DriverPhase::Closing, "Fatal", DriverAction::Ignore),
     (DriverPhase::Closing, "Throttle", DriverAction::Ignore),
+    (DriverPhase::Closing, "RingChunk", DriverAction::Ignore),
 ];
 
 /// Transition of the driver machine for `kind` in `phase` (`None` is
@@ -1267,6 +1493,11 @@ pub fn driver_action(phase: DriverPhase, kind: &str) -> Option<DriverAction> {
 /// arrive in (connection FIFO, so emission context bounds arrival
 /// context).  `verify::protocol` checks the product automaton: every
 /// (emittable kind × possible receiver phase) must have a transition.
+///
+/// `RingChunk` travels worker→worker only, so it appears in neither
+/// emits table: the driver never sends one, and a worker never sends
+/// one to the driver (the transition tables still carry RingChunk rows
+/// for totality — a mis-dialed peer is `FailUnexpected`, not a panic).
 pub const DRIVER_EMITS: &[(&str, &[WorkerPhase])] = &[
     // Assign / FetchParams / StartRound are only sent between rounds,
     // but an abort can leave the worker mid-round when they land.
@@ -1389,6 +1620,9 @@ mod tests {
                 scale: vec![1.0, 2.0],
                 bias: vec![0.5],
             }],
+            sync: SyncMode::Ring,
+            ring_index: 2,
+            ring: vec!["127.0.0.1:7100".into(), "127.0.0.1:7101".into(), "127.0.0.1:7102".into()],
         };
         match roundtrip(&RpcMsg::Assign(Box::new(spec.clone()))) {
             RpcMsg::Assign(a) => {
@@ -1402,6 +1636,9 @@ mod tests {
                 assert_eq!(a.codec_act, Codec::Int8);
                 assert_eq!(a.codec_grad, Codec::Fp16);
                 assert_eq!(a.codec_sync, Codec::Fp32);
+                assert_eq!(a.sync, SyncMode::Ring);
+                assert_eq!(a.ring_index, 2);
+                assert_eq!(a.ring, spec.ring);
                 match a.opt {
                     OptimizerCfg::Sgd { lr, momentum } => {
                         assert_eq!(lr, 0.05);
@@ -1420,6 +1657,8 @@ mod tests {
             compute_s: 0.25,
             logical_bytes: 4096,
             wire_bytes: 1032,
+            sync_bytes: 2048,
+            sync_wall_s: 0.125,
         }) {
             RpcMsg::RoundDone {
                 device,
@@ -1429,11 +1668,15 @@ mod tests {
                 compute_s,
                 logical_bytes,
                 wire_bytes,
+                sync_bytes,
+                sync_wall_s,
             } => {
                 assert_eq!((device, round, micros), (1, 7, 4));
                 assert_eq!(loss_sum, 2.5);
                 assert_eq!(compute_s, 0.25);
                 assert_eq!((logical_bytes, wire_bytes), (4096, 1032));
+                assert_eq!(sync_bytes, 2048);
+                assert_eq!(sync_wall_s, 0.125);
             }
             other => panic!("decoded {}", other.kind()),
         }
@@ -1445,10 +1688,84 @@ mod tests {
             RpcMsg::Hello { role } => assert_eq!(role, ConnRole::Data { stage: 2, slot: 1 }),
             other => panic!("decoded {}", other.kind()),
         }
+        match roundtrip(&RpcMsg::Hello { role: ConnRole::Ring { stage: 0, index: 3 } }) {
+            RpcMsg::Hello { role } => assert_eq!(role, ConnRole::Ring { stage: 0, index: 3 }),
+            other => panic!("decoded {}", other.kind()),
+        }
         match roundtrip(&RpcMsg::Throttle { factor: 3.5 }) {
             RpcMsg::Throttle { factor } => assert_eq!(factor, 3.5),
             other => panic!("decoded {}", other.kind()),
         }
+    }
+
+    #[test]
+    fn ring_chunk_roundtrips_plain_and_compressed() {
+        let msg = RpcMsg::RingChunk {
+            gen: 9,
+            step: 3,
+            seg: 1,
+            flat: (0..37).map(|i| i as f32 * 0.5 - 4.0).collect(),
+        };
+        match roundtrip(&msg) {
+            RpcMsg::RingChunk { gen, step, seg, flat } => {
+                assert_eq!((gen, step, seg), (9, 3, 1));
+                assert_eq!(flat.len(), 37);
+                assert_eq!(flat[8], 0.0);
+            }
+            other => panic!("decoded {}", other.kind()),
+        }
+        // Ring segments ride the sync codec like SyncRequest flats do.
+        let wire = msg.encode_with(Codec::Fp16);
+        assert!(wire.len() < msg.encode().len());
+        match RpcMsg::decode(&wire).unwrap() {
+            RpcMsg::RingChunk { flat, .. } => assert_eq!(flat.len(), 37),
+            other => panic!("decoded {}", other.kind()),
+        }
+    }
+
+    #[test]
+    fn streamed_framing_matches_encode_with() {
+        // The zero-copy path must put the exact same bytes on the wire
+        // as encode_with + write_frame, for every streamable message
+        // shape x codec, plus the buffered fallback.
+        let msgs = [
+            RpcMsg::Act {
+                gen: 5,
+                micro: 2,
+                t: Tensor::from_f32(&[3, 700], (0..2100).map(|i| (i as f32).sin()).collect()),
+            },
+            RpcMsg::Grad {
+                gen: 5,
+                micro: 2,
+                t: Tensor::from_f32(&[1031], vec![0.25; 1031]), // non-chunk-aligned
+            },
+            RpcMsg::RingChunk { gen: 1, step: 0, seg: 2, flat: vec![1.5; 513] },
+            RpcMsg::Targets { gen: 0, micro: 0, t: Tensor::from_i32(&[4], vec![1, 2, 3, 4]) },
+            RpcMsg::StartRound { round: 4 },
+        ];
+        for msg in &msgs {
+            for codec in [Codec::Fp32, Codec::Fp16, Codec::Int8] {
+                let mut reference = Vec::new();
+                send_msg_codec(&mut reference, msg, codec).unwrap();
+                let mut streamed = Vec::new();
+                let n = send_msg_streamed(&mut streamed, msg, codec).unwrap();
+                assert_eq!(streamed, reference, "{} under {}", msg.kind(), codec.name());
+                assert_eq!(n, streamed.len() as u64);
+                assert_eq!(recv_msg(&mut streamed.as_slice()).unwrap().kind(), msg.kind());
+            }
+        }
+        // The ring executor's slice-borrowing send is the same wire.
+        let seg = vec![0.75f32; 300];
+        let mut direct = Vec::new();
+        send_ring_chunk(&mut direct, 1, 0, 2, &seg, Codec::Fp16).unwrap();
+        let mut via_msg = Vec::new();
+        send_msg_streamed(
+            &mut via_msg,
+            &RpcMsg::RingChunk { gen: 1, step: 0, seg: 2, flat: seg },
+            Codec::Fp16,
+        )
+        .unwrap();
+        assert_eq!(direct, via_msg);
     }
 
     #[test]

@@ -19,6 +19,7 @@
 use anyhow::Result;
 
 use crate::codec::CodecSpec;
+use crate::comm::SyncMode;
 use crate::config::{ClusterSpec, TrainConfig};
 use crate::fault::heartbeat::HeartbeatCfg;
 use crate::fault::replan::{lightweight_replan, migration_time};
@@ -75,9 +76,10 @@ impl RecoveryReport {
 /// Lightweight pipeline replay after `failed_dev` exits.  `policy` is
 /// the session's round schedule policy: the recovery diff and the
 /// re-priced post-failure round must describe the timeline the session
-/// actually executes, not a hardcoded default.  `codec` is the
-/// session's wire codec for the same reason — the re-priced round's
-/// throughput must reflect the compressed bytes the recovered pipeline
+/// actually executes, not a hardcoded default.  `codec` and `sync` are
+/// the session's wire codec and collective topology for the same
+/// reason — the re-priced round's throughput must reflect the
+/// compressed bytes and the AllReduce shape the recovered pipeline
 /// actually moves.
 #[allow(clippy::too_many_arguments)]
 pub fn lightweight_replay(
@@ -90,6 +92,7 @@ pub fn lightweight_replay(
     hb: &HeartbeatCfg,
     policy: &'static dyn SchedulePolicy,
     codec: &CodecSpec,
+    sync: SyncMode,
 ) -> Result<RecoveryReport> {
     let repl = replication_plan(model, plan);
     let failed_stage = plan
@@ -104,7 +107,7 @@ pub fn lightweight_replay(
     let r = lightweight_replan(table, cluster, model, cfg, plan, failed_dev)?;
     let migration_s = migration_time(cluster, &r, plan, bw);
     let sdiff = recovery_diff(plan, &r.plan, policy);
-    let sim = price_round(table, cluster, model, &r.plan, policy, codec);
+    let sim = price_round(table, cluster, model, &r.plan, policy, codec, sync);
 
     Ok(RecoveryReport {
         mechanism: "lightweight",
@@ -143,9 +146,10 @@ fn recovery_diff(
 
 /// Price one round of `plan` under the session's policy (what
 /// `new_throughput`/`refill_s` report — the schedule the recovered
-/// pipeline actually runs).  Routed through `sim::price_policy`, so a
+/// pipeline actually runs).  Routed through `sim::price`, so a
 /// bounded-staleness session's recovered throughput is its steady-state
-/// rate, same as everywhere else in the stack.
+/// rate and the AllReduce term matches the session's collective
+/// topology, same as everywhere else in the stack.
 fn price_round(
     table: &ProfileTable,
     cluster: &ClusterSpec,
@@ -153,8 +157,14 @@ fn price_round(
     plan: &Plan,
     policy: &dyn SchedulePolicy,
     codec: &CodecSpec,
+    sync: SyncMode,
 ) -> crate::sim::SimResult {
-    crate::sim::price_policy_codec(table, cluster, model, plan, policy, codec)
+    crate::sim::price(
+        &crate::sim::PriceRequest::new(table, cluster, model, plan)
+            .policy(policy)
+            .codec(*codec)
+            .sync(sync),
+    )
 }
 
 /// Heavy rescheduling baseline after `failed_dev` exits.
@@ -169,6 +179,7 @@ pub fn heavy_reschedule(
     hb: &HeartbeatCfg,
     policy: &'static dyn SchedulePolicy,
     codec: &CodecSpec,
+    sync: SyncMode,
 ) -> Result<RecoveryReport> {
     // Surviving sub-cluster (device ids preserved by masking memory of
     // the failed device to zero is messy — rebuild a cluster without it
@@ -190,7 +201,7 @@ pub fn heavy_reschedule(
         &sub,
         model,
         cfg,
-        &PlannerConfig { policy, codec: *codec, ..PlannerConfig::default() },
+        &PlannerConfig { policy, codec: *codec, sync, ..PlannerConfig::default() },
     )?;
 
     // Weight traffic: every stage model flows to the coordinator, then
@@ -209,7 +220,7 @@ pub fn heavy_reschedule(
         }
     }
     let sdiff = recovery_diff(plan, &new_plan, policy);
-    let sim = price_round(table, cluster, model, &new_plan, policy, codec);
+    let sim = price_round(table, cluster, model, &new_plan, policy, codec, sync);
 
     Ok(RecoveryReport {
         mechanism: "heavy",
@@ -251,10 +262,11 @@ pub fn heavy_reschedule_incremental(
     hb: &HeartbeatCfg,
     policy: &'static dyn SchedulePolicy,
     codec: &CodecSpec,
+    sync: SyncMode,
     prev: Option<&DpState>,
 ) -> Result<(RecoveryReport, DpState)> {
     let keep: Vec<usize> = (0..cluster.n()).filter(|&d| d != failed_dev).collect();
-    let pc = PlannerConfig { policy, codec: *codec, ..PlannerConfig::default() };
+    let pc = PlannerConfig { policy, codec: *codec, sync, ..PlannerConfig::default() };
     let (outcome, state) = match prev {
         Some(p) if p.order().contains(&failed_dev) => {
             plan_hpp_incremental(p, table, cluster, model, cfg, &pc, failed_dev)?
@@ -269,7 +281,7 @@ pub fn heavy_reschedule_incremental(
 
     let new_plan = outcome.plan;
     let sdiff = recovery_diff(plan, &new_plan, policy);
-    let sim = price_round(table, cluster, model, &new_plan, policy, codec);
+    let sim = price_round(table, cluster, model, &new_plan, policy, codec, sync);
 
     Ok((
         RecoveryReport {
@@ -348,6 +360,7 @@ pub fn rejoin_replan(
     joined: usize,
     policy: &'static dyn SchedulePolicy,
     codec: &CodecSpec,
+    sync: SyncMode,
     prev: Option<&DpState>,
 ) -> Result<(RecoveryReport, DpState)> {
     let active = plan.devices();
@@ -361,7 +374,7 @@ pub fn rejoin_replan(
     union.push(joined);
     union.sort_unstable();
 
-    let pc = PlannerConfig { policy, codec: *codec, ..PlannerConfig::default() };
+    let pc = PlannerConfig { policy, codec: *codec, sync, ..PlannerConfig::default() };
     // The previous state must cover exactly the surviving set for the
     // join fast path to re-expand it; anything else (stale state from
     // before an unrelated exit, no state at all) falls back to a full
@@ -381,7 +394,7 @@ pub fn rejoin_replan(
     let new_plan = outcome.plan;
     let (restore_bytes, moved_bytes) = weight_move_split(model, plan, &new_plan, Some(joined));
     let sdiff = recovery_diff(plan, &new_plan, policy);
-    let sim = price_round(table, cluster, model, &new_plan, policy, codec);
+    let sim = price_round(table, cluster, model, &new_plan, policy, codec, sync);
 
     Ok((
         RecoveryReport {
@@ -425,16 +438,17 @@ pub fn degraded_reschedule(
     detection_s: f64,
     policy: &'static dyn SchedulePolicy,
     codec: &CodecSpec,
+    sync: SyncMode,
 ) -> Result<(RecoveryReport, DpState)> {
     let active = plan.devices();
-    let pc = PlannerConfig { policy, codec: *codec, ..PlannerConfig::default() };
+    let pc = PlannerConfig { policy, codec: *codec, sync, ..PlannerConfig::default() };
     let (outcome, state) = plan_hpp_subset(table, cluster, model, cfg, &pc, &active)?;
 
     let bw = cluster.min_bandwidth(&active);
     let new_plan = outcome.plan;
     let (_, moved_bytes) = weight_move_split(model, plan, &new_plan, None);
     let sdiff = recovery_diff(plan, &new_plan, policy);
-    let sim = price_round(table, cluster, model, &new_plan, policy, codec);
+    let sim = price_round(table, cluster, model, &new_plan, policy, codec, sync);
 
     Ok((
         RecoveryReport {
@@ -506,11 +520,13 @@ mod tests {
         let mut best_ratio: f64 = 0.0;
         for &failed in &plan.devices() {
             let lite = lightweight_replay(
-                &table, &cluster, &model, &cfg, &plan, failed, &hb, DEFAULT_POLICY, &CodecSpec::default(),
+                &table, &cluster, &model, &cfg, &plan, failed, &hb, DEFAULT_POLICY,
+                    &CodecSpec::default(), SyncMode::default(),
             )
             .unwrap();
             let heavy = heavy_reschedule(
-                &table, &cluster, &model, &cfg, &plan, failed, &hb, DEFAULT_POLICY, &CodecSpec::default(),
+                &table, &cluster, &model, &cfg, &plan, failed, &hb, DEFAULT_POLICY,
+                    &CodecSpec::default(), SyncMode::default(),
             )
             .unwrap();
             let ratio = heavy.total_s() / lite.total_s();
@@ -535,11 +551,13 @@ mod tests {
         let hb = HeartbeatCfg::default();
         let failed = *plan.devices().last().unwrap();
         let lite = lightweight_replay(
-            &table, &cluster, &model, &cfg, &plan, failed, &hb, DEFAULT_POLICY, &CodecSpec::default(),
+            &table, &cluster, &model, &cfg, &plan, failed, &hb, DEFAULT_POLICY,
+                &CodecSpec::default(), SyncMode::default(),
         )
         .unwrap();
         let heavy = heavy_reschedule(
-            &table, &cluster, &model, &cfg, &plan, failed, &hb, DEFAULT_POLICY, &CodecSpec::default(),
+            &table, &cluster, &model, &cfg, &plan, failed, &hb, DEFAULT_POLICY,
+                &CodecSpec::default(), SyncMode::default(),
         )
         .unwrap();
         assert!(
@@ -556,7 +574,8 @@ mod tests {
         let hb = HeartbeatCfg::default();
         let failed = *plan.devices().last().unwrap();
         let lite = lightweight_replay(
-            &table, &cluster, &model, &cfg, &plan, failed, &hb, DEFAULT_POLICY, &CodecSpec::default(),
+            &table, &cluster, &model, &cfg, &plan, failed, &hb, DEFAULT_POLICY,
+                &CodecSpec::default(), SyncMode::default(),
         )
         .unwrap();
         let tl = throughput_timeline(100.0, &lite, 10.0, 40.0, 1.0);
@@ -577,7 +596,8 @@ mod tests {
         let hb = HeartbeatCfg::default();
         let failed = plan.devices()[0];
         let lite = lightweight_replay(
-            &table, &cluster, &model, &cfg, &plan, failed, &hb, DEFAULT_POLICY, &CodecSpec::default(),
+            &table, &cluster, &model, &cfg, &plan, failed, &hb, DEFAULT_POLICY,
+                &CodecSpec::default(), SyncMode::default(),
         )
         .unwrap();
         // The failed device's warm-up window is re-injected: micros
@@ -595,7 +615,8 @@ mod tests {
         assert!(!lite.retasked_devices.contains(&failed));
         // Heavy rescheduling reports the same diff-derived fields.
         let heavy = heavy_reschedule(
-            &table, &cluster, &model, &cfg, &plan, failed, &hb, DEFAULT_POLICY, &CodecSpec::default(),
+            &table, &cluster, &model, &cfg, &plan, failed, &hb, DEFAULT_POLICY,
+                &CodecSpec::default(), SyncMode::default(),
         )
         .unwrap();
         assert!(!heavy.replay_micros.is_empty());
@@ -613,11 +634,13 @@ mod tests {
         let hb = HeartbeatCfg::default();
         let failed = plan.devices()[0];
         let one = lightweight_replay(
-            &table, &cluster, &model, &cfg, &plan, failed, &hb, DEFAULT_POLICY, &CodecSpec::default(),
+            &table, &cluster, &model, &cfg, &plan, failed, &hb, DEFAULT_POLICY,
+                &CodecSpec::default(), SyncMode::default(),
         )
         .unwrap();
         let gp = lightweight_replay(
-            &table, &cluster, &model, &cfg, &plan, failed, &hb, &GpipeFillDrain, &CodecSpec::default(),
+            &table, &cluster, &model, &cfg, &plan, failed, &hb, &GpipeFillDrain,
+                &CodecSpec::default(), SyncMode::default(),
         )
         .unwrap();
         let stage = plan
@@ -649,12 +672,14 @@ mod tests {
         let hb = HeartbeatCfg::default();
         let failed = plan.devices()[0];
         let one = lightweight_replay(
-            &table, &cluster, &model, &cfg, &plan, failed, &hb, DEFAULT_POLICY, &CodecSpec::default(),
+            &table, &cluster, &model, &cfg, &plan, failed, &hb, DEFAULT_POLICY,
+                &CodecSpec::default(), SyncMode::default(),
         )
         .unwrap();
         static ASYNC2: AsyncPipe = AsyncPipe { max_staleness: 2 };
         let asy = lightweight_replay(
-            &table, &cluster, &model, &cfg, &plan, failed, &hb, &ASYNC2, &CodecSpec::default(),
+            &table, &cluster, &model, &cfg, &plan, failed, &hb, &ASYNC2,
+                &CodecSpec::default(), SyncMode::default(),
         )
         .unwrap();
         let stage = plan
@@ -699,7 +724,8 @@ mod tests {
         .unwrap();
         for &failed in &plan.devices() {
             let heavy = heavy_reschedule(
-                &table, &cluster, &model, &cfg, &plan, failed, &hb, DEFAULT_POLICY, &CodecSpec::default(),
+                &table, &cluster, &model, &cfg, &plan, failed, &hb, DEFAULT_POLICY,
+                    &CodecSpec::default(), SyncMode::default(),
             )
             .unwrap();
             let (inc, next_state) = heavy_reschedule_incremental(
@@ -711,7 +737,7 @@ mod tests {
                 failed,
                 &hb,
                 DEFAULT_POLICY,
-                &CodecSpec::default(),
+                &CodecSpec::default(), SyncMode::default(),
                 Some(&state),
             )
             .unwrap();
@@ -734,7 +760,7 @@ mod tests {
         let (first, second) = (devs[0], devs[1]);
         let (r1, s1) = heavy_reschedule_incremental(
             &table, &cluster, &model, &cfg, &plan, first, &hb, DEFAULT_POLICY,
-            &CodecSpec::default(), None,
+            &CodecSpec::default(), SyncMode::default(), None,
         )
         .unwrap();
         let (r2, s2) = heavy_reschedule_incremental(
@@ -746,7 +772,7 @@ mod tests {
             second,
             &hb,
             DEFAULT_POLICY,
-            &CodecSpec::default(),
+            &CodecSpec::default(), SyncMode::default(),
             Some(&s1),
         )
         .unwrap();
@@ -759,7 +785,7 @@ mod tests {
             second,
             &hb,
             DEFAULT_POLICY,
-            &CodecSpec::default(),
+            &CodecSpec::default(), SyncMode::default(),
             None,
         )
         .unwrap();
@@ -796,7 +822,7 @@ mod tests {
             dev,
             &hb,
             DEFAULT_POLICY,
-            &CodecSpec::default(),
+            &CodecSpec::default(), SyncMode::default(),
             Some(&state),
         )
         .unwrap();
@@ -808,7 +834,7 @@ mod tests {
             &exit_rep.new_plan,
             dev,
             DEFAULT_POLICY,
-            &CodecSpec::default(),
+            &CodecSpec::default(), SyncMode::default(),
             Some(&s1),
         )
         .unwrap();
@@ -827,7 +853,7 @@ mod tests {
             &exit_rep.new_plan,
             dev,
             DEFAULT_POLICY,
-            &CodecSpec::default(),
+            &CodecSpec::default(), SyncMode::default(),
             None,
         )
         .unwrap();
@@ -841,7 +867,7 @@ mod tests {
             &plan,
             dev,
             DEFAULT_POLICY,
-            &CodecSpec::default(),
+            &CodecSpec::default(), SyncMode::default(),
             None,
         )
         .is_err());
@@ -865,7 +891,7 @@ mod tests {
             "straggler",
             1.25,
             DEFAULT_POLICY,
-            &CodecSpec::default(),
+            &CodecSpec::default(), SyncMode::default(),
         )
         .unwrap();
         assert_eq!(rep.mechanism, "straggler");
@@ -885,12 +911,14 @@ mod tests {
         let hb = HeartbeatCfg::default();
         let failed = plan.devices()[0];
         let lite = lightweight_replay(
-            &table, &cluster, &model, &cfg, &plan, failed, &hb, DEFAULT_POLICY, &CodecSpec::default(),
+            &table, &cluster, &model, &cfg, &plan, failed, &hb, DEFAULT_POLICY,
+                &CodecSpec::default(), SyncMode::default(),
         )
         .unwrap();
         lite.new_plan.validate(&model, &cluster).unwrap();
         let heavy = heavy_reschedule(
-            &table, &cluster, &model, &cfg, &plan, failed, &hb, DEFAULT_POLICY, &CodecSpec::default(),
+            &table, &cluster, &model, &cfg, &plan, failed, &hb, DEFAULT_POLICY,
+                &CodecSpec::default(), SyncMode::default(),
         )
         .unwrap();
         heavy.new_plan.validate(&model, &cluster).unwrap();

@@ -28,6 +28,7 @@ use std::time::Duration;
 use anyhow::{bail, Context, Result};
 
 use asteroid::codec::{Codec, CodecSpec};
+use asteroid::comm::SyncMode;
 use asteroid::config::{ClusterSpec, TrainConfig};
 use asteroid::fault::{ChurnTrace, HeartbeatCfg};
 use asteroid::model::zoo;
@@ -174,6 +175,14 @@ fn session_from(args: &Args, default_model: &str) -> Result<Session> {
     if let Some(spec) = args.get("codec") {
         b = b.codec(CodecSpec::parse(spec)?);
     }
+    // `--sync ring|driver` — the data-plane collective topology.  Ring
+    // (the default) runs gradient sync worker-to-worker and prices
+    // Eq. 5 as 2(g-1)/g * W over the slowest intra-group link; driver
+    // mediation is the star fallback.  Reaches the planner *and* the
+    // RPC data plane, same as `--codec`.
+    if let Some(mode) = args.get("sync") {
+        b = b.sync(SyncMode::parse(mode)?);
+    }
     if let Some(fault) = fault_from(args)? {
         b = b.fault(fault);
     }
@@ -210,6 +219,7 @@ fn print_plan(s: &Session) {
     println!("planner   : {}", s.planner().describe());
     println!("schedule  : {}", s.schedule().policy);
     println!("codec     : {}", s.codec().describe());
+    println!("sync      : {}", s.sync_mode().name());
     println!(
         "mini-batch: {} (micro {}, M {})",
         cfg.minibatch,
@@ -331,6 +341,16 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Schema version stamped into every `--report` JSON.  Contract (see
+/// docs/API.md "Report schema"): within one major version, existing
+/// fields keep their name, type and meaning — consumers may pin exact
+/// jq paths; new fields may be *added* without a bump; any rename,
+/// removal or semantic change bumps this number.  v2 added
+/// `schema_version` itself, the top-level `sync` mode, the per-device
+/// `sync_bytes`/`sync_wall_s`/`ctrl_msgs_tx`/`ctrl_msgs_rx` meters and
+/// the fleet `sync_msgs` counter.
+const REPORT_SCHEMA_VERSION: u32 = 2;
+
 /// Machine-readable `RunReport` summary — what the CI integration job
 /// parses and asserts on.  Hand-rolled (all values numeric or fixed
 /// strings), matching the repo's offline no-serde substrate.
@@ -371,7 +391,9 @@ fn report_json(r: &RunReport) -> String {
                         "{{\"device\": {}, \"addr\": \"{}\", \"heartbeats\": {}, \
                          \"rounds_reported\": {}, \"mean_round_compute_s\": {:.6}, \
                          \"bytes_tx\": {}, \"bytes_rx\": {}, \
-                         \"dp_logical_bytes\": {}, \"dp_wire_bytes\": {}}}",
+                         \"dp_logical_bytes\": {}, \"dp_wire_bytes\": {}, \
+                         \"sync_bytes\": {}, \"sync_wall_s\": {:.6}, \
+                         \"ctrl_msgs_tx\": {}, \"ctrl_msgs_rx\": {}}}",
                         d.device,
                         d.addr,
                         d.heartbeats,
@@ -381,6 +403,10 @@ fn report_json(r: &RunReport) -> String {
                         d.bytes_rx,
                         d.dp_logical_bytes,
                         d.dp_wire_bytes,
+                        d.sync_bytes,
+                        d.sync_wall_s,
+                        d.ctrl_msgs_tx,
+                        d.ctrl_msgs_rx,
                     )
                 })
                 .collect();
@@ -395,20 +421,24 @@ fn report_json(r: &RunReport) -> String {
             format!(
                 "{{\"detection_wall_s\": {detect}, \
                  \"dp_logical_bytes\": {logical}, \"dp_wire_bytes\": {wire}, \
+                 \"sync_msgs\": {}, \
                  \"per_device\": [{}]}}",
+                stats.sync_msgs,
                 rows.join(", ")
             )
         }
     };
     format!(
-        "{{\n  \"backend\": \"{}\",\n  \"policy\": \"{}\",\n  \"codec\": \"{}\",\n  \
-         \"max_staleness\": {},\n  \
+        "{{\n  \"schema_version\": {REPORT_SCHEMA_VERSION},\n  \
+         \"backend\": \"{}\",\n  \"policy\": \"{}\",\n  \"codec\": \"{}\",\n  \
+         \"sync\": \"{}\",\n  \"max_staleness\": {},\n  \
          \"rounds\": {},\n  \"throughput\": {:.6},\n  \"predicted_throughput\": {:.6},\n  \
          \"losses\": [{}],\n  \"round_secs\": [{}],\n  \"recoveries\": [{}],\n  \
          \"rpc\": {}\n}}\n",
         r.backend,
         r.schedule.policy,
         r.codec,
+        r.sync.name(),
         r.max_staleness,
         r.rounds,
         r.throughput,
@@ -628,6 +658,7 @@ fn cmd_envs() -> Result<()> {
             .collect::<Vec<_>>()
             .join(", ")
     );
+    println!("sync      : ring (default, worker-to-worker), driver  (--sync)");
     println!(
         "methods   : {}",
         Method::ALL

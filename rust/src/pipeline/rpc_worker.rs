@@ -30,15 +30,22 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::codec::Codec;
+use crate::comm::collective::{ring_all_reduce, SyncMode};
 use crate::comm::rpc::{
-    recv_msg, send_msg, send_msg_codec, worker_action, AssignSpec, ConnRole, LayerState, RpcMsg,
-    WorkerAction, WorkerPhase,
+    recv_msg, send_msg, send_msg_streamed, send_ring_chunk, worker_action, AssignSpec, ConnRole,
+    LayerState, RpcMsg, WorkerAction, WorkerPhase,
 };
 use crate::pipeline::step::{run_script_round, DataMsg, DataPlane, ReferenceStage};
 
 /// How long a worker keeps re-dialling a peer data address before
 /// giving up (covers slow peer start in CI).
 const PEER_DIAL_TIMEOUT: Duration = Duration::from_secs(20);
+
+/// How long a send-failure reconnect may re-dial before the round is
+/// declared failed (shorter than the first dial: the peer was already
+/// up once, so either it is rebinding its port — PR 9's warm restart —
+/// or it is dead and the driver's abort will resolve the round).
+const RECONNECT_TIMEOUT: Duration = Duration::from_secs(5);
 
 /// Options for one serve run.
 #[derive(Debug, Clone)]
@@ -78,6 +85,9 @@ pub enum ServeOutcome {
 enum Inbox {
     Ctrl(RpcMsg),
     Data(u64, DataMsg),
+    /// One ring AllReduce segment from the ring predecessor, tagged
+    /// with its assignment generation like data frames.
+    Ring { gen: u64, step: usize, seg: usize, flat: Vec<f32> },
     /// A connection's reader ended (EOF or error).
     Closed(ConnRole),
 }
@@ -131,6 +141,7 @@ pub fn serve(listener: TcpListener, opts: ServeOpts) -> Result<ServeOutcome> {
         control_writer,
         assigned: None,
         carryover: VecDeque::new(),
+        ring_buf: VecDeque::new(),
         pending_ctrl: VecDeque::new(),
         throttle: 1.0,
         opts,
@@ -172,6 +183,11 @@ fn read_connection(
                     return;
                 }
             }
+            Ok(RpcMsg::RingChunk { gen, step, seg, flat }) => {
+                if tx.send(Inbox::Ring { gen, step, seg, flat }).is_err() {
+                    return;
+                }
+            }
             Ok(RpcMsg::Die) if opts.die_for_real => {
                 // The injected device exit: disappear *now*, unclean,
                 // exactly as a powered-off edge device would.  Peers
@@ -197,9 +213,74 @@ fn read_connection(
 struct Assigned {
     spec: AssignSpec,
     stage: ReferenceStage,
-    next: Vec<TcpStream>,
-    prev: Vec<TcpStream>,
+    next: Vec<PeerLink>,
+    prev: Vec<PeerLink>,
+    /// Outbound link to the ring successor (`ring[(ring_index+1) % g]`)
+    /// when this assignment syncs over the worker-to-worker ring.
+    ring: Option<PeerLink>,
     hb_stop: Arc<AtomicBool>,
+}
+
+/// A persistent outbound peer link: the dialled address, the Hello
+/// role to replay, and the live stream.  A send failure triggers one
+/// reconnect-and-resend cycle — under churn a peer may warm-restart on
+/// the same port (PR 9), killing the old socket while the address
+/// stays valid.  The resent frame is a whole message, and receivers
+/// filter by assignment generation, so a duplicate delivered across
+/// the ambiguity window of a failed write is dropped, not double-
+/// applied.
+struct PeerLink {
+    addr: String,
+    role: ConnRole,
+    conn: TcpStream,
+}
+
+impl PeerLink {
+    fn dial(addr: &str, role: ConnRole, timeout: Duration) -> Result<PeerLink> {
+        let mut conn =
+            dial_with_retry(addr, timeout).with_context(|| format!("dialling peer {addr}"))?;
+        conn.set_nodelay(true).ok();
+        send_msg(&mut conn, &RpcMsg::Hello { role })?;
+        Ok(PeerLink { addr: addr.to_string(), role, conn })
+    }
+
+    /// Run one framed send, reconnecting once on failure.  Returns the
+    /// wire bytes written.
+    fn send_with(
+        &mut self,
+        f: impl Fn(&mut TcpStream) -> Result<u64>,
+        what: &str,
+    ) -> Result<u64> {
+        match f(&mut self.conn) {
+            Ok(n) => Ok(n),
+            Err(_) => {
+                let mut conn = dial_with_retry(&self.addr, RECONNECT_TIMEOUT)
+                    .with_context(|| format!("reconnecting to peer {}", self.addr))?;
+                conn.set_nodelay(true).ok();
+                send_msg(&mut conn, &RpcMsg::Hello { role: self.role })?;
+                self.conn = conn;
+                f(&mut self.conn).with_context(|| format!("{what} after reconnect"))
+            }
+        }
+    }
+
+    /// Streamed (zero-copy framed) message send with reconnect.
+    fn send(&mut self, msg: &RpcMsg, codec: Codec) -> Result<u64> {
+        let kind = msg.kind();
+        self.send_with(|w| send_msg_streamed(w, msg, codec), kind)
+    }
+
+    /// Ring-segment send straight from the borrowed slice.
+    fn send_ring(
+        &mut self,
+        gen: u64,
+        step: usize,
+        seg: usize,
+        flat: &[f32],
+        codec: Codec,
+    ) -> Result<u64> {
+        self.send_with(|w| send_ring_chunk(w, gen, step, seg, flat, codec), "RingChunk")
+    }
 }
 
 impl Drop for Assigned {
@@ -217,6 +298,12 @@ struct WorkerState {
     /// sender's assignment generation — consumed first by the next
     /// round's data plane, which drops other generations.
     carryover: VecDeque<(u64, DataMsg)>,
+    /// Early ring segments, buffered like data carryover: a faster
+    /// group member may enter its round sync (and send its first
+    /// reduce-scatter chunk) while we are still computing or idle.
+    /// Per-connection FIFO + one sender per ring edge means chunks of
+    /// one generation arrive in exchange order.
+    ring_buf: VecDeque<(u64, usize, usize, Vec<f32>)>,
     /// Control frames observed while draining stale data.
     pending_ctrl: VecDeque<RpcMsg>,
     /// Injected compute slowdown (`RpcMsg::Throttle`): rounds are
@@ -245,10 +332,14 @@ impl WorkerState {
         loop {
             match self.next_event()? {
                 Inbox::Data(g, d) => self.carryover.push_back((g, d)),
+                Inbox::Ring { gen, step, seg, flat } => {
+                    self.ring_buf.push_back((gen, step, seg, flat))
+                }
                 Inbox::Closed(ConnRole::Control) => {
                     bail!("driver control connection lost");
                 }
-                Inbox::Closed(ConnRole::Data { .. }) => {} // peer churn: fine while idle
+                // Peer churn is fine while idle, for data and ring alike.
+                Inbox::Closed(ConnRole::Data { .. } | ConnRole::Ring { .. }) => {}
                 // Dispatch through the declarative machine in
                 // `comm::rpc` — the table picks the transition, the
                 // arms below only bind payloads and run it.
@@ -317,6 +408,7 @@ impl WorkerState {
 
     fn discard_round_state(&mut self) {
         self.carryover.clear();
+        self.ring_buf.clear();
         if let Some(a) = &mut self.assigned {
             a.stage.abort_round();
         }
@@ -325,7 +417,9 @@ impl WorkerState {
         while let Ok(item) = self.rx.try_recv() {
             match item {
                 Inbox::Ctrl(m) => self.pending_ctrl.push_back(m),
-                Inbox::Data(..) | Inbox::Closed(ConnRole::Data { .. }) => {}
+                Inbox::Data(..)
+                | Inbox::Ring { .. }
+                | Inbox::Closed(ConnRole::Data { .. } | ConnRole::Ring { .. }) => {}
                 Inbox::Closed(ConnRole::Control) => {
                     self.pending_ctrl.push_back(RpcMsg::Exit);
                 }
@@ -359,6 +453,23 @@ impl WorkerState {
         let me = ConnRole::Data { stage: spec.stage, slot: spec.slot };
         let next = dial_peers(&spec.next, me)?;
         let prev = dial_peers(&spec.prev, me)?;
+        // Ring sync: dial the successor once per assignment.  Every
+        // member dials its successor and is dialled by its predecessor;
+        // the predecessor's chunks arrive through the ordinary inbound
+        // accept loop as `Inbox::Ring` items.
+        let ring = if spec.sync == SyncMode::Ring && spec.ring.len() > 1 {
+            let succ = &spec.ring[(spec.ring_index + 1) % spec.ring.len()];
+            Some(
+                PeerLink::dial(
+                    succ,
+                    ConnRole::Ring { stage: spec.stage, index: spec.ring_index },
+                    PEER_DIAL_TIMEOUT,
+                )
+                .with_context(|| format!("dialling ring successor {succ}"))?,
+            )
+        } else {
+            None
+        };
 
         // (Re)start the heartbeat: one thread per assignment, writing
         // through the shared control writer at the driver-configured
@@ -387,7 +498,7 @@ impl WorkerState {
         }
 
         let device = spec.device;
-        self.assigned = Some(Assigned { spec, stage, next, prev, hb_stop });
+        self.assigned = Some(Assigned { spec, stage, next, prev, ring, hb_stop });
         self.send_ctrl(&RpcMsg::Ready { device })?;
         if self.opts.verbose {
             eprintln!("asteroid-worker: device {device} assigned and ready");
@@ -403,7 +514,13 @@ impl WorkerState {
             bail!("StartRound before Assign");
         };
         let t0 = Instant::now();
-        let outcome = round_body(&mut a, &mut self.carryover, &self.rx, &self.control_writer);
+        let outcome = round_body(
+            &mut a,
+            &mut self.carryover,
+            &mut self.ring_buf,
+            &self.rx,
+            &self.control_writer,
+        );
         if self.throttle > 1.0 {
             // Straggler injection: stretch the round to `factor x` its
             // natural duration, so the driver's timing-drift detector
@@ -414,17 +531,19 @@ impl WorkerState {
         let compute_s = t0.elapsed().as_secs_f64();
         let device = a.spec.device;
         match outcome {
-            Ok((loss_sum, logical_bytes, wire_bytes)) => {
+            Ok(done) => {
                 let micros = a.spec.script.iter().filter(|op| op.is_fwd()).count();
                 self.assigned = Some(a);
                 self.send_ctrl(&RpcMsg::RoundDone {
                     device,
                     round,
-                    loss_sum,
+                    loss_sum: done.loss_sum,
                     micros,
                     compute_s,
-                    logical_bytes,
-                    wire_bytes,
+                    logical_bytes: done.logical_bytes,
+                    wire_bytes: done.wire_bytes,
+                    sync_bytes: done.sync_bytes,
+                    sync_wall_s: done.sync_wall_s,
                 })?;
             }
             Err(e) if e.is::<DieMidRound>() => {
@@ -451,21 +570,38 @@ impl WorkerState {
     }
 }
 
-/// One round: script execution plus the replicated-stage round sync.
-/// Returns (loss_sum, logical_bytes, wire_bytes): the data-plane
-/// tensor payloads this worker sent, before/after the wire codec.
+/// What one completed round reports back to the driver.
+struct RoundOutcome {
+    loss_sum: f64,
+    /// Data-plane tensor payload bytes sent, before the wire codec.
+    logical_bytes: u64,
+    /// The same payloads as the codec put them on the wire.
+    wire_bytes: u64,
+    /// Round-sync wire bytes this worker transmitted (ring chunks, or
+    /// the star-mode `SyncRequest` upload) — each sync byte is counted
+    /// once, at its sender, matching the Eq. 5 per-device volume
+    /// convention (`2(g-1)/g x W` on the ring, `W` up the star).
+    sync_bytes: u64,
+    /// Wall-clock of the round-sync exchange.
+    sync_wall_s: f64,
+}
+
+/// One round: script execution plus the replicated-stage round sync
+/// (the collective selected by `AssignSpec::sync`).
 fn round_body(
     a: &mut Assigned,
     carryover: &mut VecDeque<(u64, DataMsg)>,
+    ring_buf: &mut VecDeque<(u64, usize, usize, Vec<f32>)>,
     rx: &Receiver<Inbox>,
     control_writer: &Arc<Mutex<Option<TcpStream>>>,
-) -> Result<(f64, u64, u64)> {
+) -> Result<RoundOutcome> {
     let is_first = a.spec.stage == 0;
     let is_last = a.spec.stage + 1 == a.spec.num_stages;
     let (loss_sum, logical_bytes, wire_bytes) = {
         let mut dp = RpcDataPlane {
             gen: a.spec.generation,
             carryover,
+            ring_buf,
             rx,
             next: &mut a.next,
             prev: &mut a.prev,
@@ -478,43 +614,134 @@ fn round_body(
         (loss, dp.logical_bytes, dp.wire_bytes)
     };
 
+    let mut sync_bytes = 0u64;
+    let mut sync_wall_s = 0.0f64;
     if a.spec.group_size > 1 {
-        // Driver-mediated round sync for the replicated stage: summed
-        // gradients under a synchronous policy, parameter averaging
-        // under bounded staleness (replicas drifted per micro).  The
-        // sync rides the control link; data connections stay dedicated
-        // to tensors.
+        // Replicated-stage round sync: summed gradients under a
+        // synchronous policy, parameter averaging under bounded
+        // staleness (replicas drifted per micro).
+        let t_sync = Instant::now();
         let asynchronous = a.spec.stash_slots > 0;
-        let (kind, flat) = if asynchronous {
+        let (kind, mut flat) = if asynchronous {
             (1u8, a.stage.flat_params())
         } else {
             (0u8, a.stage.flat_grads())
         };
-        {
-            let mut guard = control_writer.lock().unwrap();
-            let w = guard.as_mut().context("no control connection for round sync")?;
-            send_msg_codec(
-                w,
-                &RpcMsg::SyncRequest { device: a.spec.device, kind, flat },
-                a.spec.codec_sync,
-            )?;
-        }
-        let reduced = wait_sync_result(carryover, rx)?;
+        let reduced = match a.spec.sync {
+            SyncMode::Ring => {
+                // Worker-to-worker ring AllReduce on the data plane:
+                // 2(g-1) chunk exchanges with the ring neighbours, the
+                // driver not involved at all.  Chunks ride the sync
+                // codec like star flats do.
+                let gen = a.spec.generation;
+                let codec = a.spec.codec_sync;
+                let group = a.spec.group_size;
+                let index = a.spec.ring_index;
+                let link = a.ring.as_mut().context("ring sync without a ring link")?;
+                ring_all_reduce(
+                    &mut flat,
+                    index,
+                    group,
+                    |step, seg, chunk| {
+                        sync_bytes += link.send_ring(gen, step, seg, chunk, codec)?;
+                        Ok(())
+                    },
+                    |step, seg| recv_ring_chunk(gen, step, seg, ring_buf, carryover, rx),
+                )?;
+                // The ring leaves the element-wise SUM on every member;
+                // parameter averaging divides locally (the star's
+                // driver did this at the hub).
+                if asynchronous {
+                    let g = group as f32;
+                    for v in &mut flat {
+                        *v /= g;
+                    }
+                }
+                flat
+            }
+            SyncMode::DriverStar => {
+                // Degraded fallback: the driver mediates, summing (and
+                // for parameters averaging) the whole group's flats.
+                // The sync rides the control link; O(group) driver
+                // messages per round.
+                {
+                    let mut guard = control_writer.lock().unwrap();
+                    let w =
+                        guard.as_mut().context("no control connection for round sync")?;
+                    sync_bytes += send_msg_streamed(
+                        w,
+                        &RpcMsg::SyncRequest { device: a.spec.device, kind, flat },
+                        a.spec.codec_sync,
+                    )?;
+                }
+                wait_sync_result(carryover, ring_buf, rx)?
+            }
+        };
         if asynchronous {
             a.stage.set_flat_params(&reduced)?;
         } else {
             a.stage.apply_round_gradients(&reduced)?;
         }
+        sync_wall_s = t_sync.elapsed().as_secs_f64();
     } else {
         a.stage.end_round_local()?;
     }
-    Ok((loss_sum, logical_bytes, wire_bytes))
+    Ok(RoundOutcome { loss_sum, logical_bytes, wire_bytes, sync_bytes, sync_wall_s })
+}
+
+/// Block until the ring predecessor's chunk for exchange (`step`,
+/// `seg`) of generation `gen` arrives.  Early chunks were buffered in
+/// `ring_buf`; stale-generation chunks (in flight across an aborted
+/// round's re-task) are dropped; data frames are buffered for the next
+/// round.  Chunks of one generation arrive in exchange order (single
+/// sender, FIFO connection), so an in-generation mismatch is a
+/// protocol error, not a reordering.
+fn recv_ring_chunk(
+    gen: u64,
+    step: usize,
+    seg: usize,
+    ring_buf: &mut VecDeque<(u64, usize, usize, Vec<f32>)>,
+    carryover: &mut VecDeque<(u64, DataMsg)>,
+    rx: &Receiver<Inbox>,
+) -> Result<Vec<f32>> {
+    loop {
+        while let Some((g, st, sg, flat)) = ring_buf.pop_front() {
+            if g != gen {
+                continue; // stale generation
+            }
+            anyhow::ensure!(
+                (st, sg) == (step, seg),
+                "ring chunk out of order: got step {st} seg {sg}, expected {step}/{seg}"
+            );
+            return Ok(flat);
+        }
+        match rx.recv().map_err(|_| anyhow!("worker inbox closed"))? {
+            Inbox::Ring { gen: g, step: st, seg: sg, flat } => {
+                ring_buf.push_back((g, st, sg, flat));
+            }
+            Inbox::Data(g, d) => carryover.push_back((g, d)),
+            Inbox::Ctrl(msg) => match worker_action(WorkerPhase::Syncing, msg.kind()) {
+                Some(WorkerAction::FailAbort) => bail!("round aborted during ring sync"),
+                _ => bail!("unexpected {} during ring sync", msg.kind()),
+            },
+            Inbox::Closed(ConnRole::Control) => bail!("driver lost during ring sync"),
+            Inbox::Closed(ConnRole::Ring { stage, index }) => {
+                // The predecessor died mid-ring: the chunks it owed us
+                // never arrive.  Fail the round — the driver's
+                // heartbeat detection + AbortRound + churn replay path
+                // resolves it.
+                bail!("ring peer (stage {stage} member {index}) lost mid-sync");
+            }
+            Inbox::Closed(ConnRole::Data { .. }) => {} // peer churn: driver decides
+        }
+    }
 }
 
 /// Block until the driver's `SyncResult` arrives, buffering any early
 /// next-round data frames.
 fn wait_sync_result(
     carryover: &mut VecDeque<(u64, DataMsg)>,
+    ring_buf: &mut VecDeque<(u64, usize, usize, Vec<f32>)>,
     rx: &Receiver<Inbox>,
 ) -> Result<Vec<f32>> {
     loop {
@@ -525,8 +752,12 @@ fn wait_sync_result(
                 (_, other) => bail!("unexpected {} during round sync", other.kind()),
             },
             Inbox::Data(g, d) => carryover.push_back((g, d)),
+            Inbox::Ring { gen, step, seg, flat } => {
+                ring_buf.push_back((gen, step, seg, flat))
+            }
             Inbox::Closed(ConnRole::Control) => bail!("driver lost during round sync"),
-            Inbox::Closed(ConnRole::Data { .. }) => {} // peer churn: driver decides
+            // Peer churn: the driver decides.
+            Inbox::Closed(ConnRole::Data { .. } | ConnRole::Ring { .. }) => {}
         }
     }
 }
@@ -541,9 +772,13 @@ fn wait_sync_result(
 struct RpcDataPlane<'a> {
     gen: u64,
     carryover: &'a mut VecDeque<(u64, DataMsg)>,
+    /// Ring chunks arriving mid-round: a faster group member already
+    /// finished its script and entered the round sync — buffer its
+    /// chunks for our own sync phase.
+    ring_buf: &'a mut VecDeque<(u64, usize, usize, Vec<f32>)>,
     rx: &'a Receiver<Inbox>,
-    next: &'a mut [TcpStream],
-    prev: &'a mut [TcpStream],
+    next: &'a mut [PeerLink],
+    prev: &'a mut [PeerLink],
     /// Wire codec for outbound activations (stage output boundary).
     codec_act: Codec,
     /// Wire codec for outbound gradients (stage input boundary).
@@ -570,6 +805,9 @@ impl DataPlane for RpcDataPlane<'_> {
                     // Stale generation: a frame the aborted round left
                     // in flight — drop it.
                 }
+                Inbox::Ring { gen, step, seg, flat } => {
+                    self.ring_buf.push_back((gen, step, seg, flat))
+                }
                 Inbox::Ctrl(msg) => match worker_action(WorkerPhase::InRound, msg.kind()) {
                     Some(WorkerAction::FailAbort) => bail!("round aborted by driver"),
                     Some(WorkerAction::DieNow) => return Err(anyhow::Error::new(DieMidRound)),
@@ -577,13 +815,14 @@ impl DataPlane for RpcDataPlane<'_> {
                     _ => bail!("unexpected control message {} mid-round", msg.kind()),
                 },
                 Inbox::Closed(ConnRole::Control) => bail!("driver lost mid-round"),
-                // A data connection ended.  This is either churn from a
-                // superseded assignment (stale peers closing after a
-                // recovery re-task — harmless) or a genuinely dead peer
-                // — in which case the tensors it owed us never arrive
-                // and the driver's abort/timeout resolves the round.
-                // Either way the driver owns the verdict; keep waiting.
-                Inbox::Closed(ConnRole::Data { .. }) => continue,
+                // A data or ring connection ended.  This is either
+                // churn from a superseded assignment (stale peers
+                // closing after a recovery re-task — harmless) or a
+                // genuinely dead peer — in which case the tensors it
+                // owed us never arrive and the driver's abort/timeout
+                // resolves the round.  Either way the driver owns the
+                // verdict; keep waiting.
+                Inbox::Closed(ConnRole::Data { .. } | ConnRole::Ring { .. }) => continue,
             }
         }
     }
@@ -594,8 +833,10 @@ impl DataPlane for RpcDataPlane<'_> {
         let logical = t.byte_len() as u64;
         self.logical_bytes += logical;
         self.wire_bytes += self.codec_act.wire_bytes(logical, t.dtype());
-        send_msg_codec(&mut self.next[i], &RpcMsg::Act { gen: self.gen, micro, t }, self.codec_act)
-            .with_context(|| format!("sending activation of micro {micro}"))
+        self.next[i]
+            .send(&RpcMsg::Act { gen: self.gen, micro, t }, self.codec_act)
+            .with_context(|| format!("sending activation of micro {micro}"))?;
+        Ok(())
     }
 
     fn send_grad(&mut self, micro: usize, t: crate::runtime::Tensor) -> Result<()> {
@@ -604,23 +845,16 @@ impl DataPlane for RpcDataPlane<'_> {
         let logical = t.byte_len() as u64;
         self.logical_bytes += logical;
         self.wire_bytes += self.codec_grad.wire_bytes(logical, t.dtype());
-        send_msg_codec(&mut self.prev[i], &RpcMsg::Grad { gen: self.gen, micro, t }, self.codec_grad)
-            .with_context(|| format!("sending gradient of micro {micro}"))
+        self.prev[i]
+            .send(&RpcMsg::Grad { gen: self.gen, micro, t }, self.codec_grad)
+            .with_context(|| format!("sending gradient of micro {micro}"))?;
+        Ok(())
     }
 }
 
 /// Dial every peer address with retry (peers may still be starting).
-fn dial_peers(addrs: &[String], me: ConnRole) -> Result<Vec<TcpStream>> {
-    addrs
-        .iter()
-        .map(|addr| {
-            let mut conn = dial_with_retry(addr, PEER_DIAL_TIMEOUT)
-                .with_context(|| format!("dialling peer {addr}"))?;
-            conn.set_nodelay(true).ok();
-            send_msg(&mut conn, &RpcMsg::Hello { role: me })?;
-            Ok(conn)
-        })
-        .collect()
+fn dial_peers(addrs: &[String], me: ConnRole) -> Result<Vec<PeerLink>> {
+    addrs.iter().map(|addr| PeerLink::dial(addr, me, PEER_DIAL_TIMEOUT)).collect()
 }
 
 /// Connect with retry until `timeout`.

@@ -33,12 +33,11 @@ use std::time::Instant;
 use anyhow::{bail, Result};
 
 use crate::codec::CodecSpec;
+use crate::comm::SyncMode;
 use crate::config::{ClusterSpec, TrainConfig};
 use crate::model::ModelDesc;
 use crate::planner::alloc::{allocate_microbatch, AllocOpts};
-use crate::planner::cost::{
-    allreduce_time_parts, comm_step_cost_parts, exec_times_parts, round_latency, StepCost,
-};
+use crate::planner::cost::{comm_step_cost_parts, exec_times_parts, round_latency, StepCost};
 use crate::planner::memory::stage_memory_for_policy;
 use crate::planner::plan::{KpPolicy, Plan, Stage};
 use crate::profiler::ProfileTable;
@@ -82,6 +81,13 @@ pub struct PlannerConfig {
     /// is part of both the stage-price memo key and the DP state
     /// fingerprint, so memoized prices never alias across codecs.
     pub codec: CodecSpec,
+    /// The collective topology the data plane will synchronise over.
+    /// The Eq. 5 AllReduce term prices it: `Ring` transfers
+    /// `2(g-1)/g * W` over the group's slowest link (the paper's
+    /// formula), `DriverStar` pays the full `2W` per worker through
+    /// the driver.  Like the codec, the mode is part of the stage-price
+    /// memo key and the DP state fingerprint.
+    pub sync: SyncMode,
 }
 
 impl Default for PlannerConfig {
@@ -95,6 +101,7 @@ impl Default for PlannerConfig {
             policy: DEFAULT_POLICY,
             exact_device_split_below: 32,
             codec: CodecSpec::default(),
+            sync: SyncMode::default(),
         }
     }
 }
@@ -115,7 +122,7 @@ pub struct PlanOutcome {
     /// paper's cost model assumes 1F1B-style overlap, and this field
     /// is kept as the analytic cross-check it always was.  The
     /// authoritative per-policy number is the event-accurate sim price
-    /// (`schedule` through `sim::price_schedule`, what `sim_select`
+    /// (`schedule` through `sim::price`, what `sim_select`
     /// ranks and `RunReport::throughput` reports).
     pub predicted_latency: f64,
     /// Predicted throughput (samples/s) from the same analytic model
@@ -198,6 +205,9 @@ struct StageKey {
     /// Wire-codec fingerprint: the memoized T_a term prices compressed
     /// flats, so entries for different codecs must never alias.
     codec_fp: u64,
+    /// Collective-topology tag: the memoized T_a term prices the sync
+    /// mode's formula, so ring and driver-star entries must not alias.
+    sync_tag: u8,
     devs: Box<[u32]>,
 }
 
@@ -221,7 +231,7 @@ pub struct PricedStage {
 #[derive(Debug, Clone, Default)]
 pub struct StagePricer {
     memo: HashMap<StageKey, Option<PricedStage>>,
-    /// sim_select pricing cache, threaded to `sim::price_policy`.
+    /// sim_select pricing cache, threaded to `sim::price`.
     pub(crate) sim: crate::sim::PriceCache,
     hits: u64,
     misses: u64,
@@ -266,7 +276,7 @@ impl StagePricer {
         let ta_raw = if devices.len() <= 1 {
             0.0
         } else {
-            allreduce_time_parts(
+            pc.sync.allreduce_time(
                 pc.codec.wire_sync_bytes(model.weight_bytes_range(i, j)),
                 devices.len(),
                 cluster.min_bandwidth(devices),
@@ -301,6 +311,7 @@ impl StagePricer {
             b: cfg.microbatch as u32,
             m: cfg.num_microbatches() as u32,
             codec_fp: pc.codec.fingerprint(),
+            sync_tag: pc.sync.tag(),
             devs: devices.iter().map(|&d| d as u32).collect(),
         };
         if let Some(hit) = self.memo.get(&key) {
@@ -403,6 +414,7 @@ struct StateFp {
     exact_below: usize,
     opt_mem_bits: u64,
     codec_fp: u64,
+    sync: SyncMode,
     b: usize,
     m: usize,
 }
@@ -470,6 +482,7 @@ fn state_fp(
         exact_below: pc.exact_device_split_below,
         opt_mem_bits: cfg.optimizer_mem_factor.to_bits(),
         codec_fp: pc.codec.fingerprint(),
+        sync: pc.sync,
         b: cfg.microbatch,
         m: cfg.num_microbatches(),
     }
@@ -849,7 +862,7 @@ fn plan_hpp_core(
         for l in 1..=l_total {
             let i = l_total - l;
             let ta_raw = if n > 1 {
-                allreduce_time_parts(
+                pc.sync.allreduce_time(
                     pc.codec.wire_sync_bytes(wts[l_total] - wts[i]),
                     n,
                     bw.run_min(ds, n_total),
@@ -927,7 +940,7 @@ fn plan_hpp_core(
                         let de = n_total - np;
                         let g = n - np;
                         let ta_raw = if g > 1 {
-                            allreduce_time_parts(w, g, bw.run_min(ds, de))
+                            pc.sync.allreduce_time(w, g, bw.run_min(ds, de))
                         } else {
                             0.0
                         };
@@ -1040,10 +1053,11 @@ fn plan_hpp_core(
         let mut bi = 0usize;
         let mut bl = f64::INFINITY;
         for (idx, (_, plan)) in scored.iter().enumerate() {
-            let lat = pricer
-                .sim
-                .price_codec(table, cluster, model, plan, pc.policy, &pc.codec)
-                .round_latency;
+            let req = crate::sim::PriceRequest::new(table, cluster, model, plan)
+                .policy(pc.policy)
+                .codec(pc.codec)
+                .sync(pc.sync);
+            let lat = pricer.sim.price(&req).round_latency;
             if lat <= bl {
                 bl = lat;
                 bi = idx;
@@ -1412,6 +1426,57 @@ mod tests {
         // The optimum under a strictly cheaper wire can never price
         // above the fp32 optimum.
         assert!(q8.predicted_latency <= fp.predicted_latency);
+    }
+
+    #[test]
+    fn sync_mode_threads_into_allreduce_pricing() {
+        // Every candidate's Eq. 5 term satisfies ring <= star
+        // (2(g-1)/g*W vs 2g*W over the same bottleneck link) and the
+        // round latency is monotone in T_a, so with sim_select off the
+        // star-priced analytic optimum can never beat the ring-priced
+        // one over the same candidate set.
+        let model = zoo::mobilenet_v2();
+        let cluster = ClusterSpec::env("C", 20.0).unwrap();
+        let table = ProfileTable::new(&cluster, &model);
+        let cfg = TrainConfig::new(256, 16);
+        let ring_pc = PlannerConfig { sim_select: false, ..PlannerConfig::default() };
+        assert_eq!(ring_pc.sync, SyncMode::Ring, "ring is the planning default");
+        let star_pc = PlannerConfig { sync: SyncMode::DriverStar, ..ring_pc };
+        let ring = plan_hpp(&table, &cluster, &model, &cfg, &ring_pc).unwrap();
+        let star = plan_hpp(&table, &cluster, &model, &cfg, &star_pc).unwrap();
+        assert!(
+            star.predicted_latency >= ring.predicted_latency,
+            "star {} < ring {}",
+            star.predicted_latency,
+            ring.predicted_latency
+        );
+    }
+
+    #[test]
+    fn stage_pricer_sync_modes_do_not_alias() {
+        // The sync tag is part of the stage-price memo key: pricing the
+        // same stage under ring then star must yield each mode's own
+        // Eq. 5 term, not a stale memo hit.
+        let model = zoo::mobilenet_v2();
+        let cluster = ClusterSpec::env("A", 100.0).unwrap();
+        let table = ProfileTable::new(&cluster, &model);
+        let cfg = TrainConfig::new(128, 16);
+        let mut pricer = StagePricer::new();
+        let ring_pc = PlannerConfig::default();
+        let star_pc = PlannerConfig { sync: SyncMode::DriverStar, ..PlannerConfig::default() };
+        let devs = [0usize, 1, 2];
+        let ring = pricer
+            .stage_cost(&table, &cluster, &model, &cfg, &ring_pc, 0, 10, &devs, 1)
+            .unwrap();
+        let star = pricer
+            .stage_cost(&table, &cluster, &model, &cfg, &star_pc, 0, 10, &devs, 1)
+            .unwrap();
+        let w = ring_pc.codec.wire_sync_bytes(model.weight_bytes_range(0, 10));
+        let bw = cluster.min_bandwidth(&devs);
+        assert!((ring.ta - SyncMode::Ring.allreduce_time(w, 3, bw)).abs() < 1e-12);
+        assert!((star.ta - SyncMode::DriverStar.allreduce_time(w, 3, bw)).abs() < 1e-12);
+        assert!(star.ta > ring.ta, "star {} !> ring {}", star.ta, ring.ta);
+        assert_eq!(ring.ef, star.ef, "compute is topology-independent");
     }
 
     #[test]

@@ -31,6 +31,7 @@ pub use plan::{KpPolicy, Plan, Stage};
 use anyhow::{Context, Result};
 
 use crate::codec::CodecSpec;
+use crate::comm::SyncMode;
 use crate::config::{ClusterSpec, TrainConfig};
 use crate::model::ModelDesc;
 use crate::profiler::ProfileTable;
@@ -84,16 +85,19 @@ impl Planner {
         cfg: &TrainConfig,
         policy: &'static dyn SchedulePolicy,
     ) -> Result<PlanOutcome> {
-        self.plan_codec(table, cluster, model, cfg, policy, &CodecSpec::default())
+        self.plan_codec(table, cluster, model, cfg, policy, &CodecSpec::default(), SyncMode::default())
     }
 
-    /// [`Planner::plan`] pricing the wire under `codec`.  Like the
-    /// threaded policy, the threaded codec overrides a `Custom`
-    /// config's own `codec` field — the session's `.codec(..)` knob is
-    /// authoritative.  Only Algorithm 2 (`Asteroid`/`Custom`) consumes
-    /// compressed-byte pricing; the comparison baselines keep their
-    /// published fp32 cost models (the codec still compresses their
-    /// traffic at execution, it just doesn't move their plan).
+    /// [`Planner::plan`] pricing the wire under `codec` and the Eq. 5
+    /// AllReduce term under `sync`.  Like the threaded policy, the
+    /// threaded codec and sync mode override a `Custom` config's own
+    /// `codec`/`sync` fields — the session's `.codec(..)`/`.sync(..)`
+    /// knobs are authoritative.  Only Algorithm 2 (`Asteroid`/`Custom`)
+    /// consumes compressed-byte and topology pricing; the comparison
+    /// baselines keep their published fp32 cost models (the codec still
+    /// compresses their traffic at execution, it just doesn't move
+    /// their plan).
+    #[allow(clippy::too_many_arguments)]
     pub fn plan_codec(
         &self,
         table: &ProfileTable,
@@ -102,6 +106,7 @@ impl Planner {
         cfg: &TrainConfig,
         policy: &'static dyn SchedulePolicy,
         codec: &CodecSpec,
+        sync: SyncMode,
     ) -> Result<PlanOutcome> {
         match *self {
             Planner::Asteroid | Planner::Baseline(Method::Asteroid) => plan_hpp(
@@ -109,11 +114,15 @@ impl Planner {
                 cluster,
                 model,
                 cfg,
-                &PlannerConfig { policy, codec: *codec, ..PlannerConfig::default() },
+                &PlannerConfig { policy, codec: *codec, sync, ..PlannerConfig::default() },
             ),
-            Planner::Custom(pc) => {
-                plan_hpp(table, cluster, model, cfg, &PlannerConfig { policy, codec: *codec, ..pc })
-            }
+            Planner::Custom(pc) => plan_hpp(
+                table,
+                cluster,
+                model,
+                cfg,
+                &PlannerConfig { policy, codec: *codec, sync, ..pc },
+            ),
             Planner::Baseline(Method::DataParallel) | Planner::Baseline(Method::Eddl) => {
                 baselines::plan_dp(table, cluster, model, cfg, AllocOpts::default(), policy)
             }
@@ -147,11 +156,15 @@ impl Planner {
         cfg: &TrainConfig,
         policy: &'static dyn SchedulePolicy,
     ) -> Result<(PlanOutcome, Option<DpState>)> {
-        self.plan_with_state_codec(table, cluster, model, cfg, policy, &CodecSpec::default())
+        self.plan_with_state_codec(
+            table, cluster, model, cfg, policy, &CodecSpec::default(), SyncMode::default(),
+        )
     }
 
-    /// [`Planner::plan_with_state`] pricing the wire under `codec`
-    /// (see [`Planner::plan_codec`] for the override semantics).
+    /// [`Planner::plan_with_state`] pricing the wire under `codec` and
+    /// the AllReduce topology under `sync` (see [`Planner::plan_codec`]
+    /// for the override semantics).
+    #[allow(clippy::too_many_arguments)]
     pub fn plan_with_state_codec(
         &self,
         table: &ProfileTable,
@@ -160,6 +173,7 @@ impl Planner {
         cfg: &TrainConfig,
         policy: &'static dyn SchedulePolicy,
         codec: &CodecSpec,
+        sync: SyncMode,
     ) -> Result<(PlanOutcome, Option<DpState>)> {
         match *self {
             Planner::Asteroid | Planner::Baseline(Method::Asteroid) => plan_hpp_with_state(
@@ -167,7 +181,7 @@ impl Planner {
                 cluster,
                 model,
                 cfg,
-                &PlannerConfig { policy, codec: *codec, ..PlannerConfig::default() },
+                &PlannerConfig { policy, codec: *codec, sync, ..PlannerConfig::default() },
             )
             .map(|(o, s)| (o, Some(s))),
             Planner::Custom(pc) => plan_hpp_with_state(
@@ -175,10 +189,12 @@ impl Planner {
                 cluster,
                 model,
                 cfg,
-                &PlannerConfig { policy, codec: *codec, ..pc },
+                &PlannerConfig { policy, codec: *codec, sync, ..pc },
             )
             .map(|(o, s)| (o, Some(s))),
-            _ => self.plan_codec(table, cluster, model, cfg, policy, codec).map(|o| (o, None)),
+            _ => self
+                .plan_codec(table, cluster, model, cfg, policy, codec, sync)
+                .map(|o| (o, None)),
         }
     }
 }

@@ -7,9 +7,10 @@
 //! once from a [`Plan`] by a pluggable [`SchedulePolicy`].
 //!
 //! Consumers (see `docs/SCHEDULE.md` for the worked example):
-//!   * `sim::price_schedule` — prices a `Schedule` against the
-//!     `ProfileTable` and `LinkSet`; `sim::simulate_round` is now a
-//!     thin wrapper that builds the default schedule and prices it.
+//!   * `sim::price` — prices a `Schedule` (explicit or policy-built)
+//!     against the `ProfileTable` and `LinkSet`; `sim::simulate_round`
+//!     is now a thin wrapper that builds the default-policy
+//!     `PriceRequest` and prices it.
 //!   * `pipeline::worker` — each live worker executes its device's
 //!     [`ComputeOp`] script instead of re-deriving 1F1B order from
 //!     message-arrival heuristics.
@@ -349,7 +350,7 @@ impl Schedule {
     /// offset by `r * num_micro`).  For a bounded-staleness policy this
     /// is the steady-state form: there is no inter-round barrier, so
     /// the policy's admission window lets round r+1's forwards fill
-    /// round r's drain — what `sim::price_policy` prices to measure
+    /// round r's drain — what `sim::price` prices to measure
     /// async throughput honestly.  The round-closing AllReduce is
     /// charged once with `rounds`× the volume (the σ-bounded group
     /// syncs overlap compute in steady state).

@@ -311,7 +311,7 @@ impl SchedulePolicy for Interleaved {
 /// The payoff is priced in steady state: without a round barrier the
 /// drain of round r overlaps the fill of round r+1, so the per-round
 /// bubble strictly shrinks on heterogeneous chains (see
-/// `sim::price_policy` and the env-C test).
+/// `sim::price` and the env-C test).
 #[derive(Debug, Clone, Copy)]
 pub struct AsyncPipe {
     /// Staleness budget σ: extra forwards admitted beyond the K_p

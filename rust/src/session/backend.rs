@@ -2,7 +2,7 @@
 //! [`RunReport`].
 //!
 //! * [`SimBackend`] — event-accurate schedule pricing
-//!   (`sim::price_schedule`): every throughput/latency number the
+//!   (`sim::price`): every throughput/latency number the
 //!   paper tables report, with no numerics;
 //! * [`PjrtBackend`] — the live in-process worker pipeline over
 //!   AOT-compiled artifacts, with optional edge-link emulation.
@@ -35,7 +35,7 @@ use crate::data::{DataSource, LmTask, VisionTask};
 use crate::fault::{ChurnEvent, DriftDetector};
 use crate::model::from_manifest::ManifestModel;
 use crate::pipeline::{train, TrainOpts, TrainStats};
-use crate::sim::price_policy_codec;
+use crate::sim::{price, PriceRequest};
 
 use super::churn::ChurnState;
 use super::{RecoveryEvent, RecoveryKind, RunReport, Session};
@@ -63,14 +63,13 @@ impl ExecutionBackend for SimBackend {
         // Policy-aware pricing: synchronous policies price the
         // session's one-round schedule; bounded-staleness policies
         // price their steady state (barrier-free multi-round chain).
-        // Byte terms (sends, AllReduce) price the session's wire codec.
-        let sim = price_policy_codec(
-            s.table(),
-            s.cluster(),
-            s.model(),
-            s.plan(),
-            s.policy(),
-            s.codec(),
+        // Byte terms (sends, AllReduce) price the session's wire codec
+        // and collective topology.
+        let sim = price(
+            &PriceRequest::new(s.table(), s.cluster(), s.model(), s.plan())
+                .policy(s.policy())
+                .codec(*s.codec())
+                .sync(s.sync_mode()),
         );
         let rounds = s.run_config().steps;
         let mut round_secs = vec![sim.round_latency; rounds];
@@ -216,6 +215,7 @@ impl ExecutionBackend for SimBackend {
             weight_stash_slots: s.weight_stash_slots(),
             bytes_on_network: sim.bytes_on_network,
             codec: s.codec().describe(),
+            sync: s.sync_mode(),
             sim: Some(sim),
             recoveries,
             final_params: None,
@@ -354,6 +354,7 @@ fn live_report(s: &Session, stats: TrainStats, recoveries: Vec<RecoveryEvent>) -
         weight_stash_slots: s.weight_stash_slots(),
         bytes_on_network: 0,
         codec: s.codec().describe(),
+        sync: s.sync_mode(),
         sim: None,
         recoveries,
         final_params: Some(stats.final_params),
@@ -388,6 +389,7 @@ fn merge_live_phases(
         weight_stash_slots: s.weight_stash_slots(),
         bytes_on_network: 0,
         codec: s.codec().describe(),
+        sync: s.sync_mode(),
         sim: None,
         recoveries: vec![event],
         final_params: Some(after.final_params),

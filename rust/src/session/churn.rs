@@ -123,7 +123,12 @@ impl ChurnState {
     }
 
     fn planner_config(s: &Session) -> PlannerConfig {
-        PlannerConfig { policy: s.policy(), codec: *s.codec(), ..PlannerConfig::default() }
+        PlannerConfig {
+            policy: s.policy(),
+            codec: *s.codec(),
+            sync: s.sync_mode(),
+            ..PlannerConfig::default()
+        }
     }
 
     /// Does the chained state cover exactly the current active set?
@@ -170,6 +175,7 @@ impl ChurnState {
                     &spec.heartbeat,
                     s.policy(),
                     s.codec(),
+                    s.sync_mode(),
                 )?;
                 // Lightweight replans outside the DP — the chained
                 // state no longer matches the executing plan's set.
@@ -188,6 +194,7 @@ impl ChurnState {
                     &spec.heartbeat,
                     s.policy(),
                     s.codec(),
+                    s.sync_mode(),
                     self.dp.as_deref(),
                 )?;
                 self.dp = Some(Arc::new(st));
@@ -212,6 +219,7 @@ impl ChurnState {
             device,
             s.policy(),
             s.codec(),
+            s.sync_mode(),
             self.dp.as_deref(),
         )?;
         self.dp = Some(Arc::new(st));
@@ -282,6 +290,7 @@ impl ChurnState {
             detection_s,
             s.policy(),
             s.codec(),
+            s.sync_mode(),
         )?;
         // The fresh state was computed on the degraded cluster — the
         // valid chain seed for everything that follows.
@@ -293,13 +302,11 @@ impl ChurnState {
     /// Seconds one round of the current plan takes on the current
     /// (possibly degraded) fleet.
     pub fn round_latency(&self, s: &Session) -> f64 {
-        let sim = crate::sim::price_policy_codec(
-            &self.table,
-            &self.cluster,
-            s.model(),
-            &self.plan,
-            s.policy(),
-            s.codec(),
+        let sim = crate::sim::price(
+            &crate::sim::PriceRequest::new(&self.table, &self.cluster, s.model(), &self.plan)
+                .policy(s.policy())
+                .codec(*s.codec())
+                .sync(s.sync_mode()),
         );
         self.plan.samples_per_round() as f64 / sim.throughput
     }

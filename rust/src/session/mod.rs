@@ -55,6 +55,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{Context, Result};
 
 use crate::codec::CodecSpec;
+use crate::comm::SyncMode;
 use crate::config::{ClusterSpec, TrainConfig};
 use crate::fault::{
     heavy_reschedule, heavy_reschedule_incremental, lightweight_replay, ChurnTrace, HeartbeatCfg,
@@ -302,6 +303,10 @@ pub struct RunReport {
     /// (`"fp32"`, `"int8"`, `"fp32,12=int8"`, ...) — what the data
     /// plane encoded with and the planner priced against.
     pub codec: String,
+    /// The data-plane collective topology gradient/parameter sync ran
+    /// over (`Ring` worker-to-worker by default, `DriverStar`
+    /// mediation as fallback) — also what Eq. 5 pricing assumed.
+    pub sync: SyncMode,
     /// Event-accurate pricing detail (sim backend only).
     pub sim: Option<SimResult>,
     /// Device exits injected via the session's [`FaultSpec`].
@@ -342,6 +347,7 @@ pub struct SessionBuilder {
     planner: Planner,
     policy: &'static dyn SchedulePolicy,
     codec: CodecSpec,
+    sync: SyncMode,
     fault: Option<FaultSpec>,
     churn: Option<ChurnSpec>,
     run: RunConfig,
@@ -357,6 +363,7 @@ impl Default for SessionBuilder {
             planner: Planner::Asteroid,
             policy: DEFAULT_POLICY,
             codec: CodecSpec::default(),
+            sync: SyncMode::default(),
             fault: None,
             churn: None,
             run: RunConfig::default(),
@@ -418,6 +425,18 @@ impl SessionBuilder {
     /// pipeline actually transmits.
     pub fn codec(mut self, codec: CodecSpec) -> Self {
         self.codec = codec;
+        self
+    }
+
+    /// Collective topology for gradient/parameter synchronisation
+    /// (default: [`SyncMode::Ring`] — workers exchange chunks directly
+    /// over the data plane and the driver stays O(1) messages per
+    /// round).  [`SyncMode::DriverStar`] restores driver-mediated
+    /// sync.  Like the codec, the choice governs *planning too*: the
+    /// Eq. 5 AllReduce term prices the selected topology, so stage
+    /// groupings are optimal for the collective that actually runs.
+    pub fn sync(mut self, mode: SyncMode) -> Self {
+        self.sync = mode;
         self
     }
 
@@ -548,7 +567,9 @@ impl SessionBuilder {
         // incremental replan fast path.
         let (outcome, dp_state) = self
             .planner
-            .plan_with_state_codec(&table, &cluster, &model, &cfg, self.policy, &self.codec)
+            .plan_with_state_codec(
+                &table, &cluster, &model, &cfg, self.policy, &self.codec, self.sync,
+            )
             .with_context(|| format!("planning ({})", self.planner.describe()))?;
         let schedule = outcome.schedule.clone();
 
@@ -593,6 +614,7 @@ impl SessionBuilder {
             planner: self.planner,
             policy: self.policy,
             codec: self.codec,
+            sync: self.sync,
             fault: self.fault,
             churn: self.churn,
             run_cfg: self.run,
@@ -618,6 +640,7 @@ pub struct Session {
     planner: Planner,
     policy: &'static dyn SchedulePolicy,
     codec: CodecSpec,
+    sync: SyncMode,
     fault: Option<FaultSpec>,
     churn: Option<ChurnSpec>,
     run_cfg: RunConfig,
@@ -664,6 +687,12 @@ impl Session {
     /// with and what the planner priced against.
     pub fn codec(&self) -> &CodecSpec {
         &self.codec
+    }
+
+    /// The session's collective topology for gradient/parameter sync —
+    /// what the data plane runs and what the Eq. 5 term priced.
+    pub fn sync_mode(&self) -> SyncMode {
+        self.sync
     }
 
     pub fn source(&self) -> &ModelSource {
@@ -800,6 +829,7 @@ impl Session {
                 &spec.heartbeat,
                 self.policy,
                 &self.codec,
+                self.sync,
             ),
             RecoveryKind::Heavy => heavy_reschedule(
                 &self.table,
@@ -811,6 +841,7 @@ impl Session {
                 &spec.heartbeat,
                 self.policy,
                 &self.codec,
+                self.sync,
             ),
             RecoveryKind::HeavyIncremental => heavy_reschedule_incremental(
                 &self.table,
@@ -822,6 +853,7 @@ impl Session {
                 &spec.heartbeat,
                 self.policy,
                 &self.codec,
+                self.sync,
                 self.dp_state.as_deref(),
             )
             .map(|(report, _)| report),

@@ -36,6 +36,7 @@ use crate::codec::Codec;
 use crate::comm::rpc::{
     read_frame, send_msg, write_frame, AssignSpec, ConnRole, LayerState, RpcMsg, HEADER_LEN,
 };
+use crate::comm::SyncMode;
 use crate::fault::{ChurnEvent, DriftDetector, HeartbeatCfg, HeartbeatMonitor, Liveness};
 use crate::pipeline::rpc_worker::dial_with_retry;
 use crate::pipeline::step::{reference_layers, RefTask};
@@ -78,6 +79,17 @@ pub struct RpcDeviceStats {
     /// The same payloads as the codec put them on the wire — the
     /// measured compression ratio is `dp_wire / dp_logical`.
     pub dp_wire_bytes: u64,
+    /// Round-sync wire bytes this worker transmitted (ring chunks
+    /// under `SyncMode::Ring`, the `SyncRequest` upload under
+    /// `DriverStar`) — worker-reported via `RoundDone`.
+    pub sync_bytes: u64,
+    /// Total wall-clock this worker spent in round-sync exchanges.
+    pub sync_wall_s: f64,
+    /// Control-plane messages the driver sent this worker.
+    pub ctrl_msgs_tx: u64,
+    /// Control-plane messages received from this worker (heartbeats
+    /// included).
+    pub ctrl_msgs_rx: u64,
 }
 
 /// RPC run telemetry: one row per worker the driver drove, plus the
@@ -90,6 +102,12 @@ pub struct RpcStats {
     /// `HeartbeatCfg::detection_time`, the closed form the sim and the
     /// recovery report charge.
     pub detection_wall_s: Option<f64>,
+    /// Round-sync frames the driver mediated (`SyncRequest` received +
+    /// `SyncResult` sent).  Under `SyncMode::Ring` this is 0: the
+    /// driver's per-round involvement is O(1) control messages per
+    /// worker (StartRound out, RoundDone back) independent of replica
+    /// width — the CI integration run asserts exactly that.
+    pub sync_msgs: u64,
 }
 
 /// The multi-process execution backend: drives `asteroid-worker`
@@ -144,8 +162,12 @@ struct Remote {
     compute_s_sum: f64,
     bytes_tx: u64,
     bytes_rx: Arc<AtomicU64>,
+    msgs_tx: u64,
+    msgs_rx: Arc<AtomicU64>,
     dp_logical: u64,
     dp_wire: u64,
+    sync_bytes: u64,
+    sync_wall_s: f64,
 }
 
 impl Remote {
@@ -159,6 +181,7 @@ impl Remote {
     fn send_codec(&mut self, msg: &RpcMsg, codec: Codec) -> Result<()> {
         let payload = msg.encode_with(codec);
         self.bytes_tx += payload.len() as u64 + HEADER_LEN as u64;
+        self.msgs_tx += 1;
         write_frame(&mut self.writer, &payload)
             .with_context(|| format!("sending {} to device {}", msg.kind(), self.device))
     }
@@ -196,6 +219,8 @@ struct Driver<'s> {
     /// of an aborted round can never leak into the replayed one.
     generation: u64,
     detection_wall_s: Option<f64>,
+    /// Driver-mediated sync frames (rx + tx); stays 0 under ring sync.
+    sync_msgs: u64,
 }
 
 /// Churn-mode runtime the driver threads through a run: the trace
@@ -271,6 +296,7 @@ impl<'s> Driver<'s> {
             sync_pending: BTreeMap::new(),
             generation: 0,
             detection_wall_s: None,
+            sync_msgs: 0,
         })
     }
 
@@ -291,6 +317,7 @@ impl<'s> Driver<'s> {
                     Ok(None)
                 }
                 RpcMsg::SyncRequest { device: d, kind, flat } => {
+                    self.sync_msgs += 1;
                     self.handle_sync(d, kind, flat)?;
                     Ok(None)
                 }
@@ -370,6 +397,7 @@ impl<'s> Driver<'s> {
         let codec_sync = self.session.codec().sync();
         for (d, _, _) in &contributions {
             let msg = RpcMsg::SyncResult { flat: reduced.clone() };
+            self.sync_msgs += 1;
             self.remotes
                 .get_mut(d)
                 .with_context(|| format!("no remote for device {d}"))?
@@ -405,6 +433,7 @@ impl<'s> Driver<'s> {
                 .clone())
         };
         let versioned = s.policy().max_staleness() > 0;
+        let sync_cfg = s.sync_mode();
         let mut specs: Vec<(usize, AssignSpec)> = Vec::new();
         for (p, stage) in self.plan.stages.iter().enumerate() {
             let mut next = Vec::new();
@@ -419,6 +448,20 @@ impl<'s> Driver<'s> {
                     prev.push(addr_of(d, &self.remotes)?);
                 }
             }
+            // Ring sync topology: every replicated-stage member gets
+            // the whole group's worker addresses in slot order plus its
+            // own position; each dials only its successor.  Unreplicated
+            // stages (and DriverStar mode) carry an empty ring.
+            let use_ring = sync_cfg == SyncMode::Ring && stage.devices.len() > 1;
+            let ring: Vec<String> = if use_ring {
+                stage
+                    .devices
+                    .iter()
+                    .map(|&d| addr_of(d, &self.remotes))
+                    .collect::<Result<_>>()?
+            } else {
+                Vec::new()
+            };
             let layers = reference_layers(model, stage.layers.0, stage.layers.1);
             let warm_start: Vec<LayerState> = if warm {
                 (stage.layers.0..stage.layers.1)
@@ -461,6 +504,9 @@ impl<'s> Driver<'s> {
                         next: next.clone(),
                         prev: prev.clone(),
                         warm_start: warm_start.clone(),
+                        sync: if use_ring { SyncMode::Ring } else { SyncMode::DriverStar },
+                        ring_index: slot,
+                        ring: ring.clone(),
                     },
                 ));
             }
@@ -550,6 +596,8 @@ impl<'s> Driver<'s> {
                         compute_s,
                         logical_bytes,
                         wire_bytes,
+                        sync_bytes,
+                        sync_wall_s,
                     },
                 ) => {
                     if r != round {
@@ -561,6 +609,8 @@ impl<'s> Driver<'s> {
                         rem.compute_s_sum += compute_s;
                         rem.dp_logical += logical_bytes;
                         rem.dp_wire += wire_bytes;
+                        rem.sync_bytes += sync_bytes;
+                        rem.sync_wall_s += sync_wall_s;
                     }
                     self.last_round_compute.insert(device, compute_s);
                     if last_stage.contains(&device) {
@@ -1026,6 +1076,10 @@ impl<'s> Driver<'s> {
                 bytes_rx: r.bytes_rx.load(Ordering::Relaxed),
                 dp_logical_bytes: r.dp_logical,
                 dp_wire_bytes: r.dp_wire,
+                sync_bytes: r.sync_bytes,
+                sync_wall_s: r.sync_wall_s,
+                ctrl_msgs_tx: r.msgs_tx,
+                ctrl_msgs_rx: r.msgs_rx.load(Ordering::Relaxed),
             })
             .collect();
 
@@ -1042,10 +1096,15 @@ impl<'s> Driver<'s> {
             weight_stash_slots: s.weight_stash_slots(),
             bytes_on_network: 0,
             codec: s.codec().describe(),
+            sync: s.sync_mode(),
             sim: None,
             recoveries,
             final_params: Some(final_params),
-            rpc: Some(RpcStats { per_device, detection_wall_s: self.detection_wall_s }),
+            rpc: Some(RpcStats {
+                per_device,
+                detection_wall_s: self.detection_wall_s,
+                sync_msgs: self.sync_msgs,
+            }),
         })
     }
 }
@@ -1061,9 +1120,11 @@ fn connect_remote(
     send_msg(&mut conn, &RpcMsg::Hello { role: ConnRole::Control })?;
     let writer = conn.try_clone().context("cloning control stream")?;
     let bytes_rx = Arc::new(AtomicU64::new(0));
+    let msgs_rx = Arc::new(AtomicU64::new(0));
     {
         let tx = tx.clone();
         let bytes_rx = bytes_rx.clone();
+        let msgs_rx = msgs_rx.clone();
         std::thread::spawn(move || {
             loop {
                 let payload = match read_frame(&mut conn) {
@@ -1074,6 +1135,7 @@ fn connect_remote(
                     }
                 };
                 bytes_rx.fetch_add(payload.len() as u64 + HEADER_LEN as u64, Ordering::Relaxed);
+                msgs_rx.fetch_add(1, Ordering::Relaxed);
                 match RpcMsg::decode(&payload) {
                     Ok(msg) => {
                         if tx.send((device, Event::Msg(msg))).is_err() {
@@ -1098,7 +1160,11 @@ fn connect_remote(
         compute_s_sum: 0.0,
         bytes_tx: 0,
         bytes_rx,
+        msgs_tx: 0,
+        msgs_rx,
         dp_logical: 0,
         dp_wire: 0,
+        sync_bytes: 0,
+        sync_wall_s: 0.0,
     })
 }

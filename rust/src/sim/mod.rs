@@ -2,7 +2,7 @@
 //!
 //! The planner's cost model (Eqs. 4-6) is an *approximation* built on
 //! the dominant-step idea; this module prices the *explicit* schedule:
-//! [`price_schedule`] walks each device's `schedule::Schedule` timeline
+//! [`price`] walks each device's `schedule::Schedule` timeline
 //! task by task against the `ProfileTable` (compute durations) and the
 //! `LinkSet` (serialised inter-device transfers), and reports observed
 //! round latency, per-device busy time, bubble fractions and in-flight
@@ -14,11 +14,13 @@
 //! is entirely encoded in the `Schedule` IR by its `SchedulePolicy`.
 //! [`simulate_round`] is a thin wrapper that builds the default
 //! (1F1B-K_p, sample-sharded) schedule for a plan and prices it.
-//! [`price_policy`] is the policy-aware entry: synchronous policies
-//! price as one barriered round, bounded-staleness policies as a
-//! barrier-free [`ASYNC_STEADY_ROUNDS`]-round chain normalised to
-//! per-round figures (their fill/drain amortises away — the async
-//! payoff).
+//! [`price`] is the single full entry point, fed by a [`PriceRequest`]
+//! naming the plan plus every pricing knob — schedule policy (or an
+//! explicit schedule), wire codec, collective sync topology.
+//! Synchronous policies price as one barriered round,
+//! bounded-staleness policies as a barrier-free
+//! [`ASYNC_STEADY_ROUNDS`]-round chain normalised to per-round figures
+//! (their fill/drain amortises away — the async payoff).
 
 pub mod convergence;
 pub mod engine;
@@ -26,6 +28,7 @@ pub mod engine;
 use std::collections::{BTreeMap, HashSet};
 
 use crate::codec::CodecSpec;
+use crate::comm::SyncMode;
 use crate::config::ClusterSpec;
 use crate::model::ModelDesc;
 use crate::planner::plan::Plan;
@@ -36,7 +39,7 @@ use crate::schedule::{
 
 use engine::{EventQueue, LinkSet};
 
-/// How many HPP-Rounds [`price_policy`] chains back-to-back when
+/// How many HPP-Rounds [`price`] chains back-to-back when
 /// pricing a bounded-staleness policy: without an inter-round barrier
 /// the fill/drain of consecutive rounds overlap, and the per-round
 /// steady-state latency is the chained makespan divided by the round
@@ -117,49 +120,103 @@ pub fn simulate_round(
     model: &ModelDesc,
     plan: &Plan,
 ) -> SimResult {
-    let sched = Schedule::for_sim(plan, model, DEFAULT_POLICY);
-    price_schedule(&sched, table, cluster, model, plan)
+    price(&PriceRequest::new(table, cluster, model, plan))
 }
 
-/// Price `plan` under `policy`, choosing the pricing form the policy's
-/// semantics call for: a synchronous policy is priced as one barriered
-/// HPP-Round ([`Schedule::for_sim`] + [`price_schedule`]); a
-/// bounded-staleness policy ([`SchedulePolicy::max_staleness`] > 0) is
-/// priced in **steady state** — [`ASYNC_STEADY_ROUNDS`] rounds chained
-/// without a barrier, per-round figures normalised by the round count —
-/// because its whole point is that round r+1's warm-up fills round r's
-/// drain.  This is the single entry the planner's `sim_select`, the
-/// session's `SimBackend` and the fault re-pricing all use, so every
-/// reported throughput compares policies on their honest semantics.
-pub fn price_policy(
-    table: &ProfileTable,
-    cluster: &ClusterSpec,
-    model: &ModelDesc,
-    plan: &Plan,
-    policy: &dyn SchedulePolicy,
-) -> SimResult {
-    price_policy_codec(table, cluster, model, plan, policy, &CodecSpec::default())
+/// One fully-specified pricing question for [`price`]: the plan plus
+/// every knob that changes its price.  Replaces the old
+/// `price_policy`/`price_schedule`/`*_codec` wrapper family — the
+/// defaults mirror theirs (default 1F1B-K_p policy, identity fp32
+/// codec, ring sync, policy-derived schedule), so
+/// `price(&PriceRequest::new(..))` is the old `simulate_round`, and
+/// each knob is a builder call instead of another function signature.
+#[derive(Clone, Copy)]
+pub struct PriceRequest<'a> {
+    pub table: &'a ProfileTable,
+    pub cluster: &'a ClusterSpec,
+    pub model: &'a ModelDesc,
+    pub plan: &'a Plan,
+    /// Price this explicit sample-sharded schedule instead of deriving
+    /// one from `policy`.  The schedule already encodes its policy's
+    /// ordering and round count, so `policy` staleness handling is
+    /// bypassed (no steady-state normalisation is applied).
+    pub schedule: Option<&'a Schedule>,
+    pub policy: &'a dyn SchedulePolicy,
+    /// Wire codec: every boundary transfer and AllReduce is priced at
+    /// its *wire* bytes (`bytes_on_network` included), so the simulator
+    /// agrees byte-for-byte with the framed-TCP data plane.
+    pub codec: CodecSpec,
+    /// Collective topology the Eq. 5 sync term assumes: worker-to-worker
+    /// `Ring` (default, `2(g-1)/g * W` over the slowest intra-group
+    /// link) or `DriverStar` mediation (`2W` per worker).
+    pub sync: SyncMode,
 }
 
-/// [`price_policy`] under a wire [`CodecSpec`]: every boundary transfer
-/// and AllReduce is priced at its *wire* bytes (`bytes_on_network`
-/// included), so the simulator agrees byte-for-byte with what the
-/// framed-TCP data plane would actually put on the network.
-pub fn price_policy_codec(
-    table: &ProfileTable,
-    cluster: &ClusterSpec,
-    model: &ModelDesc,
-    plan: &Plan,
-    policy: &dyn SchedulePolicy,
-    codec: &CodecSpec,
-) -> SimResult {
-    if policy.max_staleness() == 0 {
-        let sched = Schedule::for_sim(plan, model, policy);
-        return price_schedule_codec(&sched, table, cluster, model, plan, codec);
+impl<'a> PriceRequest<'a> {
+    /// A request with every knob at its default — prices exactly like
+    /// the pre-refactor `simulate_round`.
+    pub fn new(
+        table: &'a ProfileTable,
+        cluster: &'a ClusterSpec,
+        model: &'a ModelDesc,
+        plan: &'a Plan,
+    ) -> Self {
+        Self {
+            table,
+            cluster,
+            model,
+            plan,
+            schedule: None,
+            policy: DEFAULT_POLICY,
+            codec: CodecSpec::default(),
+            sync: SyncMode::default(),
+        }
+    }
+
+    pub fn policy(mut self, policy: &'a dyn SchedulePolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    pub fn schedule(mut self, sched: &'a Schedule) -> Self {
+        self.schedule = Some(sched);
+        self
+    }
+
+    pub fn codec(mut self, codec: CodecSpec) -> Self {
+        self.codec = codec;
+        self
+    }
+
+    pub fn sync(mut self, sync: SyncMode) -> Self {
+        self.sync = sync;
+        self
+    }
+}
+
+/// Price a [`PriceRequest`], choosing the pricing form its semantics
+/// call for.  An explicit schedule is priced as-is.  Otherwise a
+/// synchronous policy is priced as one barriered HPP-Round
+/// ([`Schedule::for_sim`]); a bounded-staleness policy
+/// ([`SchedulePolicy::max_staleness`] > 0) is priced in **steady
+/// state** — [`ASYNC_STEADY_ROUNDS`] rounds chained without a barrier,
+/// per-round figures normalised by the round count — because its whole
+/// point is that round r+1's warm-up fills round r's drain.  This is
+/// the single entry the planner's `sim_select`, the session's
+/// `SimBackend`, the fault re-pricing and the benches all use, so every
+/// reported throughput compares configurations on their honest
+/// semantics.
+pub fn price(req: &PriceRequest) -> SimResult {
+    if let Some(sched) = req.schedule {
+        return price_one(sched, req);
+    }
+    if req.policy.max_staleness() == 0 {
+        let sched = Schedule::for_sim(req.plan, req.model, req.policy);
+        return price_one(&sched, req);
     }
     let rounds = ASYNC_STEADY_ROUNDS;
-    let sched = Schedule::for_sim_rounds(plan, model, policy, rounds);
-    let mut sim = price_schedule_codec(&sched, table, cluster, model, plan, codec);
+    let sched = Schedule::for_sim_rounds(req.plan, req.model, req.policy, rounds);
+    let mut sim = price_one(&sched, req);
     // Normalise the chained run to per-round figures.  Ratios
     // (bubbles, throughput) are already steady-state: numerator and
     // denominator scale together.
@@ -172,19 +229,20 @@ pub fn price_policy_codec(
     sim
 }
 
-/// Memo for repeated [`price_policy`] calls over identical
-/// (plan, policy) pairs.  `sim_select` prices up to `max_stages`
-/// finalists per planning run, and replans — micro-batch sweeps,
-/// fault-time incremental replans — re-price mostly-identical
-/// finalists.  The cache keys on an FNV fingerprint of the plan and
-/// policy name, with full `Plan` equality verified on hit, so a hit is
-/// exact, never heuristic.  Prices are only valid for the
-/// (table, cluster, model) the cache was populated under — callers
-/// thread one cache per planning context (`planner::StagePricer` owns
-/// one and `plan_hpp` threads it through replans).
+/// Memo for repeated [`price`] calls over identical
+/// (plan, policy, codec, sync) tuples.  `sim_select` prices up to
+/// `max_stages` finalists per planning run, and replans — micro-batch
+/// sweeps, fault-time incremental replans — re-price mostly-identical
+/// finalists.  The cache keys on an FNV fingerprint of the plan,
+/// policy name, codec fingerprint and sync tag, with full `Plan`
+/// equality verified on hit, so a hit is exact, never heuristic.
+/// Prices are only valid for the (table, cluster, model) the cache was
+/// populated under — callers thread one cache per planning context
+/// (`planner::StagePricer` owns one and `plan_hpp` threads it through
+/// replans).
 #[derive(Debug, Clone, Default)]
 pub struct PriceCache {
-    entries: std::collections::HashMap<u64, Vec<(Plan, &'static str, u64, SimResult)>>,
+    entries: std::collections::HashMap<u64, Vec<(Plan, &'static str, u64, u8, SimResult)>>,
     hits: u64,
 }
 
@@ -198,7 +256,7 @@ impl PriceCache {
         self.hits
     }
 
-    fn fingerprint(plan: &Plan, policy: &str, codec_fp: u64) -> u64 {
+    fn fingerprint(plan: &Plan, policy: &str, codec_fp: u64, sync_tag: u8) -> u64 {
         let mut h = 0xcbf2_9ce4_8422_2325_u64;
         let mut put = |h: &mut u64, x: u64| {
             *h ^= x;
@@ -221,97 +279,63 @@ impl PriceCache {
             put(&mut h, c as u64);
         }
         put(&mut h, codec_fp);
+        put(&mut h, sync_tag as u64);
         h
     }
 
-    /// [`price_policy`] through the cache (fp32 wire format).
-    pub fn price(
-        &mut self,
-        table: &ProfileTable,
-        cluster: &ClusterSpec,
-        model: &ModelDesc,
-        plan: &Plan,
-        policy: &dyn SchedulePolicy,
-    ) -> SimResult {
-        self.price_codec(table, cluster, model, plan, policy, &CodecSpec::default())
-    }
-
-    /// [`price_policy_codec`] through the cache.  The codec fingerprint
-    /// is part of the memo key (and re-verified on hit), so prices for
-    /// different wire formats never alias — fault-time incremental
-    /// replans may reuse a cache across codec changes safely.
-    pub fn price_codec(
-        &mut self,
-        table: &ProfileTable,
-        cluster: &ClusterSpec,
-        model: &ModelDesc,
-        plan: &Plan,
-        policy: &dyn SchedulePolicy,
-        codec: &CodecSpec,
-    ) -> SimResult {
-        let name = policy.name();
-        let cfp = codec.fingerprint();
-        let key = Self::fingerprint(plan, name, cfp);
+    /// [`price`] through the cache.  The codec fingerprint and sync tag
+    /// are part of the memo key (and re-verified on hit), so prices for
+    /// different wire formats or collective topologies never alias —
+    /// fault-time incremental replans may reuse a cache across codec or
+    /// sync changes safely.  Memoizes policy-derived pricing only:
+    /// `req.schedule` must be `None` (explicit schedules are one-shot
+    /// and have no stable identity to key on).
+    pub fn price(&mut self, req: &PriceRequest) -> SimResult {
+        debug_assert!(
+            req.schedule.is_none(),
+            "PriceCache memoizes policy-derived pricing; explicit schedules are uncacheable"
+        );
+        let name = req.policy.name();
+        let cfp = req.codec.fingerprint();
+        let tag = req.sync.tag();
+        let key = Self::fingerprint(req.plan, name, cfp, tag);
         if let Some(list) = self.entries.get(&key) {
-            if let Some((_, _, _, r)) =
-                list.iter().find(|(p, n, c, _)| *n == name && *c == cfp && p == plan)
+            if let Some((_, _, _, _, r)) = list
+                .iter()
+                .find(|(p, n, c, t, _)| *n == name && *c == cfp && *t == tag && p == req.plan)
             {
                 self.hits += 1;
                 return r.clone();
             }
         }
-        let r = price_policy_codec(table, cluster, model, plan, policy, codec);
-        self.entries.entry(key).or_default().push((plan.clone(), name, cfp, r.clone()));
+        let r = price(req);
+        self.entries
+            .entry(key)
+            .or_default()
+            .push((req.plan.clone(), name, cfp, tag, r.clone()));
         r
     }
 }
 
-/// [`price_policy`] through a [`PriceCache`] — the memoized entry the
-/// planner's `sim_select` uses across finalists and replans.
-pub fn price_policy_cached(
-    cache: &mut PriceCache,
-    table: &ProfileTable,
-    cluster: &ClusterSpec,
-    model: &ModelDesc,
-    plan: &Plan,
-    policy: &dyn SchedulePolicy,
-) -> SimResult {
-    cache.price(table, cluster, model, plan, policy)
-}
-
-/// Price an explicit sample-sharded `Schedule` against the profile and
-/// link models.  Panics if the schedule deadlocks (i.e. it would fail
-/// `Schedule::validate`) — callers price planner/policy output, which
-/// is valid by construction.
-pub fn price_schedule(
-    sched: &Schedule,
-    table: &ProfileTable,
-    cluster: &ClusterSpec,
-    model: &ModelDesc,
-    plan: &Plan,
-) -> SimResult {
-    price_schedule_codec(sched, table, cluster, model, plan, &CodecSpec::default())
-}
-
-/// [`price_schedule`] under a wire [`CodecSpec`]: each `Send` is priced
-/// at the wire size of its payload — looked up per producing boundary
-/// (an `Activation` leaving stage p crosses boundary `layers.1`, a
-/// `Gradient` crosses `layers.0`) — and the Eq. 5 AllReduce term uses
-/// compressed flat-parameter bytes.  Compute durations are untouched:
-/// encode/decode cost is treated as negligible next to link time, the
-/// same assumption the planner's cost model makes.
-pub fn price_schedule_codec(
-    sched: &Schedule,
-    table: &ProfileTable,
-    cluster: &ClusterSpec,
-    model: &ModelDesc,
-    plan: &Plan,
-    codec: &CodecSpec,
-) -> SimResult {
+/// Event-accurate pricing of one explicit sample-sharded `Schedule`
+/// under the request's codec and sync topology — the core every
+/// [`price`] branch lands on.  Each `Send` is priced at the wire size
+/// of its payload — looked up per producing boundary (an `Activation`
+/// leaving stage p crosses boundary `layers.1`, a `Gradient` crosses
+/// `layers.0`) — and the Eq. 5 AllReduce term uses compressed
+/// flat-parameter bytes over the request's collective topology.
+/// Compute durations are untouched: encode/decode cost is treated as
+/// negligible next to link time, the same assumption the planner's
+/// cost model makes.  Panics if the schedule deadlocks (i.e. it would
+/// fail `Schedule::validate`) — callers price planner/policy output,
+/// which is valid by construction.
+fn price_one(sched: &Schedule, req: &PriceRequest) -> SimResult {
+    let (table, cluster, model, plan) = (req.table, req.cluster, req.model, req.plan);
+    let codec = &req.codec;
     assert_eq!(
         sched.sharding,
         Sharding::SampleShard,
-        "price_schedule prices sample-sharded schedules (got {:?})",
+        "sim::price prices sample-sharded schedules (got {:?})",
         sched.sharding
     );
     assert_eq!(sched.num_micro, plan.num_micro, "schedule/plan micro mismatch");
@@ -482,13 +506,19 @@ pub fn price_schedule_codec(
     }
 
     // --- AllReduce + result assembly --------------------------------------
+    // Eq. 5 over the request's collective topology: ring puts
+    // 2(g-1)/g * W through the slowest intra-group link and 2(g-1)W on
+    // the network total; driver-star mediation moves the full flat 2W
+    // per worker (2gW total) through the driver.
     let mut round_end = now;
     for (p, stage) in plan.stages.iter().enumerate() {
-        if stage.devices.len() > 1 {
-            let ta = crate::planner::cost::allreduce_time_codec(cluster, model, stage, codec);
+        let g = stage.devices.len();
+        if g > 1 {
             let w =
                 codec.wire_sync_bytes(model.weight_bytes_range(stage.layers.0, stage.layers.1));
-            bytes_on_network += rounds as u64 * 2 * (stage.devices.len() as u64 - 1) * w;
+            let bw = cluster.min_bandwidth(&stage.devices);
+            let ta = req.sync.allreduce_time(w, g, bw);
+            bytes_on_network += rounds as u64 * req.sync.total_wire_bytes(w, g);
             round_end = round_end.max(ar_ready[p] + ta);
         }
     }
@@ -581,16 +611,22 @@ mod tests {
 
     #[test]
     fn wrapper_equals_explicit_default_schedule_pricing() {
-        // simulate_round is definitionally for_sim + price_schedule.
+        // simulate_round is definitionally a default PriceRequest, and
+        // an explicit-schedule request for the default policy's own
+        // schedule prices bit-identically — the parity the old
+        // price_schedule/price_policy wrapper pair guaranteed.
         let (cluster, model, table) = fixture("B");
         let cfg = TrainConfig::new(256, 16);
         let out = plan_hpp(&table, &cluster, &model, &cfg, &PlannerConfig::default()).unwrap();
         let sched = Schedule::for_sim(&out.plan, &model, DEFAULT_POLICY);
         sched.validate().unwrap();
         let a = simulate_round(&table, &cluster, &model, &out.plan);
-        let b = price_schedule(&sched, &table, &cluster, &model, &out.plan);
+        let b = price(&PriceRequest::new(&table, &cluster, &model, &out.plan).schedule(&sched));
+        let c = price(&PriceRequest::new(&table, &cluster, &model, &out.plan));
         assert_eq!(a.round_latency, b.round_latency);
         assert_eq!(a.bytes_on_network, b.bytes_on_network);
+        assert_eq!(a.round_latency, c.round_latency);
+        assert_eq!(a.bytes_on_network, c.bytes_on_network);
     }
 
     #[test]
@@ -634,6 +670,40 @@ mod tests {
     }
 
     #[test]
+    fn driver_star_sync_prices_more_volume_and_never_faster() {
+        // Same single-stage 5-device DP plan under both collective
+        // topologies: ring puts 2(g-1)W on the network, driver-star
+        // mediation 2gW, and the star round is strictly longer because
+        // its Eq. 5 term 2W/bw exceeds ring's 2(g-1)W/(g*bw).
+        let (cluster, model, table) = fixture("A");
+        let nl = model.num_layers();
+        let plan = Plan {
+            stages: vec![Stage {
+                layers: (0, nl),
+                devices: vec![0, 1, 2, 3, 4],
+                alloc: vec![4, 3, 3, 3, 3],
+                kp: 1,
+            }],
+            microbatch: 16,
+            num_micro: 4,
+        };
+        let base = PriceRequest::new(&table, &cluster, &model, &plan);
+        let ring = price(&base);
+        let star = price(&base.sync(SyncMode::DriverStar));
+        let w = model.total_weight_bytes();
+        assert_eq!(ring.bytes_on_network, 2 * 4 * w);
+        assert_eq!(star.bytes_on_network, 2 * 5 * w);
+        assert!(
+            star.round_latency > ring.round_latency,
+            "star {} !> ring {}",
+            star.round_latency,
+            ring.round_latency
+        );
+        // Compute is topology-independent.
+        assert_eq!(star.busy, ring.busy);
+    }
+
+    #[test]
     fn codec_pricing_compresses_network_volume_not_compute() {
         use crate::codec::{Codec, CodecSpec};
         // env-C chain with a 2-device first stage: both the boundary
@@ -652,9 +722,9 @@ mod tests {
             microbatch: 8,
             num_micro: 8,
         };
-        let fp = price_policy(&table, &cluster, &model, &plan, DEFAULT_POLICY);
+        let fp = price(&PriceRequest::new(&table, &cluster, &model, &plan));
         let int8 = CodecSpec::uniform(Codec::Int8);
-        let cp = price_policy_codec(&table, &cluster, &model, &plan, DEFAULT_POLICY, &int8);
+        let cp = price(&PriceRequest::new(&table, &cluster, &model, &plan).codec(int8));
         assert!(
             cp.bytes_on_network < fp.bytes_on_network / 3,
             "int8 wire {} !<< fp32 wire {}",
@@ -666,8 +736,8 @@ mod tests {
             assert_eq!(cp.busy[d], fp.busy[d], "compute is codec-independent");
         }
         // The identity spec prices bit-identically to the fp32 path.
-        let id = price_policy_codec(
-            &table, &cluster, &model, &plan, DEFAULT_POLICY, &CodecSpec::default(),
+        let id = price(
+            &PriceRequest::new(&table, &cluster, &model, &plan).codec(CodecSpec::default()),
         );
         assert_eq!(id.bytes_on_network, fp.bytes_on_network);
         assert_eq!(id.round_latency, fp.round_latency);
@@ -680,21 +750,49 @@ mod tests {
         let cfg = TrainConfig::new(256, 16);
         let out = plan_hpp(&table, &cluster, &model, &cfg, &PlannerConfig::default()).unwrap();
         let mut cache = PriceCache::new();
-        let fp = cache.price(&table, &cluster, &model, &out.plan, DEFAULT_POLICY);
+        let base = PriceRequest::new(&table, &cluster, &model, &out.plan);
+        let fp = cache.price(&base);
         let int8 = CodecSpec::uniform(Codec::Int8);
-        let cp =
-            cache.price_codec(&table, &cluster, &model, &out.plan, DEFAULT_POLICY, &int8);
+        let cp = cache.price(&base.codec(int8));
         // Different codecs on the same (plan, policy) are distinct
         // entries: no false hit, and the prices genuinely differ.
         assert_eq!(cache.hits(), 0);
         assert!(cp.bytes_on_network < fp.bytes_on_network);
         // Re-pricing each spec hits its own memo exactly.
-        let fp2 = cache.price(&table, &cluster, &model, &out.plan, DEFAULT_POLICY);
-        let cp2 =
-            cache.price_codec(&table, &cluster, &model, &out.plan, DEFAULT_POLICY, &int8);
+        let fp2 = cache.price(&base);
+        let cp2 = cache.price(&base.codec(int8));
         assert_eq!(cache.hits(), 2);
         assert_eq!(fp2.bytes_on_network, fp.bytes_on_network);
         assert_eq!(cp2.bytes_on_network, cp.bytes_on_network);
+    }
+
+    #[test]
+    fn price_cache_keys_on_sync_mode() {
+        // Ring and driver-star prices for the same (plan, policy,
+        // codec) must never alias — the sync tag is part of the key.
+        let (cluster, model, table) = fixture("A");
+        let nl = model.num_layers();
+        let plan = Plan {
+            stages: vec![Stage {
+                layers: (0, nl),
+                devices: vec![0, 1, 2],
+                alloc: vec![6, 5, 5],
+                kp: 1,
+            }],
+            microbatch: 16,
+            num_micro: 4,
+        };
+        let mut cache = PriceCache::new();
+        let base = PriceRequest::new(&table, &cluster, &model, &plan);
+        let ring = cache.price(&base);
+        let star = cache.price(&base.sync(SyncMode::DriverStar));
+        assert_eq!(cache.hits(), 0, "ring/star must be distinct entries");
+        assert!(star.bytes_on_network > ring.bytes_on_network);
+        let ring2 = cache.price(&base);
+        let star2 = cache.price(&base.sync(SyncMode::DriverStar));
+        assert_eq!(cache.hits(), 2);
+        assert_eq!(ring2.round_latency, ring.round_latency);
+        assert_eq!(star2.round_latency, star.round_latency);
     }
 
     #[test]
@@ -733,9 +831,11 @@ mod tests {
         };
         let saturated = mk(8, 8);
         let via_kp = simulate_round(&table, &cluster, &model, &saturated);
-        let gp_sched = Schedule::for_sim(&mk(1, 1), &model, &GpipeFillDrain);
+        let gp_plan = mk(1, 1);
+        let gp_sched = Schedule::for_sim(&gp_plan, &model, &GpipeFillDrain);
         gp_sched.validate().unwrap();
-        let via_policy = price_schedule(&gp_sched, &table, &cluster, &model, &mk(1, 1));
+        let via_policy =
+            price(&PriceRequest::new(&table, &cluster, &model, &gp_plan).schedule(&gp_sched));
         assert_eq!(via_kp.round_latency, via_policy.round_latency);
         assert_eq!(via_kp.peak_inflight, via_policy.peak_inflight);
     }
@@ -787,8 +887,9 @@ mod tests {
         let one_sched = Schedule::for_sim(&plan, &model, &OneFOneBKp);
         let zb_sched = Schedule::for_sim(&plan, &model, &ZeroBubbleH1);
         zb_sched.validate().unwrap();
-        let one = price_schedule(&one_sched, &table, &cluster, &model, &plan);
-        let zb = price_schedule(&zb_sched, &table, &cluster, &model, &plan);
+        let base = PriceRequest::new(&table, &cluster, &model, &plan);
+        let one = price(&base.schedule(&one_sched));
+        let zb = price(&base.schedule(&zb_sched));
         assert!(
             zb.round_latency < one.round_latency,
             "zb-h1 {} !< 1f1b {}",
@@ -831,9 +932,10 @@ mod tests {
             microbatch: 8,
             num_micro: 8,
         };
-        let asy = price_policy(&table, &cluster, &model, &plan, &AsyncPipe { max_staleness: 2 });
-        let zb = price_policy(&table, &cluster, &model, &plan, &ZeroBubbleH1);
-        let one = price_policy(&table, &cluster, &model, &plan, &OneFOneBKp);
+        let base = PriceRequest::new(&table, &cluster, &model, &plan);
+        let asy = price(&base.policy(&AsyncPipe { max_staleness: 2 }));
+        let zb = price(&base.policy(&ZeroBubbleH1));
+        let one = price(&base.policy(&OneFOneBKp));
         assert_eq!(asy.rounds_priced, ASYNC_STEADY_ROUNDS);
         assert_eq!(zb.rounds_priced, 1);
         assert!(
@@ -888,14 +990,10 @@ mod tests {
         plan.apply_default_kp();
         let il_sched = Schedule::for_sim(&plan, &model, &Interleaved { virtual_per_device: 2 });
         il_sched.validate().unwrap();
-        let il = price_schedule(&il_sched, &table, &cluster, &model, &plan);
-        let one = price_schedule(
-            &Schedule::for_sim(&plan, &model, &OneFOneBKp),
-            &table,
-            &cluster,
-            &model,
-            &plan,
-        );
+        let base = PriceRequest::new(&table, &cluster, &model, &plan);
+        let il = price(&base.schedule(&il_sched));
+        let one_sched = Schedule::for_sim(&plan, &model, &OneFOneBKp);
+        let one = price(&base.schedule(&one_sched));
         assert!((il.round_latency - one.round_latency).abs() < 1e-9 * one.round_latency);
         assert_eq!(il.peak_inflight, one.peak_inflight);
     }

@@ -10,6 +10,7 @@ use std::io::BufRead;
 use std::process::{Child, Command, Stdio};
 use std::time::Duration;
 
+use asteroid::comm::SyncMode;
 use asteroid::config::{ClusterSpec, TrainConfig};
 use asteroid::fault::{ChurnTrace, HeartbeatCfg};
 use asteroid::planner::baselines::Method;
@@ -64,6 +65,19 @@ fn three_stage_session() -> asteroid::session::SessionBuilder {
         .cluster(ClusterSpec::env("nanos:3", 100.0).unwrap())
         .train(TrainConfig::new(8, 2))
         .planner(Planner::Baseline(Method::GpipePP))
+        .steps(2)
+        .log_every(0)
+}
+
+/// `n` homogeneous devices planned data-parallel: one stage replicated
+/// `n` wide — every worker is a ring member, so the round sync is the
+/// whole story.
+fn replicated_session(n: usize) -> asteroid::session::SessionBuilder {
+    Session::builder()
+        .model("mobilenetv2")
+        .cluster(ClusterSpec::env(&format!("nanos:{n}"), 100.0).unwrap())
+        .train(TrainConfig::new(8, 2))
+        .planner(Planner::Baseline(Method::DataParallel))
         .steps(2)
         .log_every(0)
 }
@@ -213,5 +227,99 @@ fn killed_worker_restarts_and_rejoins_on_the_same_port() {
 
     // The survivors and the revived worker all got a clean Exit.
     drop(revived);
+    drop(workers);
+}
+
+/// The tentpole invariant, live: a 4-wide replicated stage syncs
+/// worker-to-worker under the default ring mode (the driver mediates
+/// zero sync frames) and converges to the same losses as the
+/// driver-star fallback within fp reduction-order tolerance.
+#[test]
+fn ring_sync_matches_driver_star_and_bypasses_the_driver() {
+    let run = |mode: SyncMode| {
+        let workers: Vec<Worker> = (0..4).map(|_| spawn_worker()).collect();
+        let addrs: Vec<String> = workers.iter().map(|w| w.addr.clone()).collect();
+        let session = replicated_session(4).sync(mode).build().unwrap();
+        assert_eq!(session.plan().stages.len(), 1, "data-parallel = one stage");
+        assert_eq!(session.plan().stages[0].devices.len(), 4, "replicated 4 wide");
+        session.run(&mut RpcBackend::connect(addrs)).unwrap()
+    };
+
+    let ring = run(SyncMode::Ring);
+    let star = run(SyncMode::DriverStar);
+
+    // Same model, seed and data: the two collectives reduce the same
+    // flats, differing only in fp summation order.
+    assert_eq!(ring.losses.len(), 2);
+    assert_eq!(star.losses.len(), 2);
+    for (l_ring, l_star) in ring.losses.iter().zip(&star.losses) {
+        assert!(l_ring.is_finite() && *l_ring > 0.0);
+        let rel = (l_ring - l_star).abs() / l_star.abs().max(1e-12);
+        assert!(rel < 1e-3, "ring {l_ring} vs star {l_star} (rel {rel})");
+    }
+
+    // Ring: the driver mediated nothing — O(1) control messages per
+    // worker per round, zero sync frames; every member still moved
+    // sync bytes (its 2(g-1)/g share, worker-metered).
+    let rpc = ring.rpc.as_ref().expect("rpc stats");
+    assert_eq!(rpc.sync_msgs, 0, "ring sync must bypass the driver");
+    for d in &rpc.per_device {
+        assert!(d.sync_bytes > 0, "device {} sent no ring chunks", d.device);
+        assert!(d.sync_wall_s >= 0.0);
+    }
+
+    // Star: every member uploaded through the driver hub.
+    let rpc = star.rpc.as_ref().expect("rpc stats");
+    assert!(rpc.sync_msgs > 0, "driver-star sync is driver-mediated");
+    for d in &rpc.per_device {
+        assert!(d.sync_bytes > 0, "device {} uploaded no flat", d.device);
+    }
+    assert_eq!(ring.sync, SyncMode::Ring);
+    assert_eq!(star.sync, SyncMode::DriverStar);
+}
+
+/// §3.4 fault path through the ring: a member dies mid-round, its
+/// successor starves (or the heartbeat monitor fires first), the
+/// driver aborts the round, and the ordinary recovery path replans and
+/// resumes on the survivors — still syncing worker-to-worker.
+#[test]
+fn mid_ring_member_death_aborts_and_recovers() {
+    let mut workers: Vec<Worker> = (0..3).map(|_| spawn_worker()).collect();
+    let addrs: Vec<String> = workers.iter().map(|w| w.addr.clone()).collect();
+
+    let session = replicated_session(3)
+        .fault(
+            FaultSpec::last_planned()
+                .after(1)
+                .resume_for(1)
+                .with_heartbeat(HeartbeatCfg::tight()),
+        )
+        .build()
+        .unwrap();
+    // Last stage slot = last address = workers[2] (stage-major order).
+    let failed_device = *session.plan().devices().last().unwrap();
+    assert_eq!(failed_device, 2);
+
+    let report = session.run(&mut RpcBackend::connect(addrs)).unwrap();
+    assert_eq!(report.rounds, 2, "1 pre-fault + 1 resumed");
+    assert!(report.losses.iter().all(|l| l.is_finite()), "{:?}", report.losses);
+    assert_eq!(report.recoveries.len(), 1);
+    let ev = &report.recoveries[0];
+    assert_eq!(ev.failed_device, failed_device);
+    assert!(!ev.report.new_plan.devices().contains(&failed_device));
+    // The survivors re-formed a smaller ring and still synced without
+    // the driver.
+    let rpc = report.rpc.as_ref().expect("rpc stats");
+    assert_eq!(rpc.sync_msgs, 0, "recovery must not fall back to driver sync");
+    assert!(rpc.detection_wall_s.expect("measured detection") < 10.0);
+
+    // The killed ring member really is a dead OS process.
+    std::thread::sleep(Duration::from_millis(100));
+    let status = workers[failed_device]
+        .child
+        .try_wait()
+        .expect("try_wait")
+        .expect("killed worker should have exited");
+    assert_eq!(status.code(), Some(86), "Die exits with the fault code");
     drop(workers);
 }
